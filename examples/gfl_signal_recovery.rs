@@ -1,0 +1,74 @@
+//! Group Fused Lasso signal recovery (paper Fig 5): generate a
+//! piecewise-constant multivariate signal, denoise it by solving the GFL
+//! dual with AP-BCFW, and report change-point detection quality.
+//!
+//! ```bash
+//! cargo run --release --example gfl_signal_recovery
+//! ```
+
+use apbcfw::data::signal;
+use apbcfw::problems::gfl::Gfl;
+use apbcfw::solver::{minibatch, SolveOptions, StopCond};
+use apbcfw::util::la;
+
+fn main() {
+    let (d, n) = (10, 120);
+    let sig = signal::piecewise_constant(d, n, 6, 3.0, 0.8, 7);
+
+    // Sweep lambda: small = under-smoothed, large = over-smoothed.
+    println!("lambda    dual f     primal P   rec.MSE   change-points");
+    for &lam in &[0.5, 1.0, 2.0, 4.0, 8.0, 12.0] {
+        let p = Gfl::new(d, n, lam, sig.noisy.clone());
+        let r = minibatch::solve(
+            &p,
+            &SolveOptions {
+                tau: 8,
+                line_search: true,
+                sample_every: 64,
+                exact_gap: false,
+                stop: StopCond {
+                    max_epochs: 1500.0,
+                    max_secs: 30.0,
+                    ..Default::default()
+                },
+                seed: 3,
+                ..Default::default()
+            },
+        );
+        let x = p.primal_signal(&r.raw_param);
+        let mse = x
+            .iter()
+            .zip(&sig.clean)
+            .map(|(v, c)| ((v - c) as f64).powi(2))
+            .sum::<f64>()
+            / (d * n) as f64;
+        // detected change points: ||x_{t+1} - x_t|| above a small threshold
+        let mut detected = vec![];
+        for t in 0..n - 1 {
+            let jump: Vec<f32> = (0..d)
+                .map(|r| x[(t + 1) * d + r] - x[t * d + r])
+                .collect();
+            if la::norm2(&jump) > 0.3 {
+                detected.push(t + 1);
+            }
+        }
+        println!(
+            "{lam:<8} {:>9.4} {:>10.4} {:>9.4}   {} detected / {} true",
+            r.trace.last().unwrap().objective,
+            p.primal_objective(&r.raw_param),
+            mse,
+            detected.len(),
+            sig.change_points.len(),
+        );
+    }
+    println!(
+        "\ntrue change points: {:?}\n(noisy MSE = {:.4})",
+        sig.change_points,
+        sig.noisy
+            .iter()
+            .zip(&sig.clean)
+            .map(|(v, c)| ((v - c) as f64).powi(2))
+            .sum::<f64>()
+            / (d * n) as f64
+    );
+}

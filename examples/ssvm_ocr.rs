@@ -1,0 +1,114 @@
+//! End-to-end driver (DESIGN.md §5): train a structural SVM sequence
+//! labeler on the OCR-like dataset with the full AP-BCFW stack — multiple
+//! asynchronous workers, minibatch server, line search — logging the dual
+//! objective, duality-gap estimate and Hamming error as the epoch budget
+//! grows. When AOT artifacts are present, the loss-augmented Viterbi oracle
+//! runs through the XLA-compiled Pallas kernel; otherwise the native rust
+//! DP (same numerics, cross-validated in rust/tests/xla_integration.rs).
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example ssvm_ocr
+//! ```
+
+use apbcfw::coordinator::{apbcfw as coord, RunConfig};
+use apbcfw::data::ocr_like::{self, ChainDataset};
+use apbcfw::problems::ssvm::chain::ChainSsvm;
+use apbcfw::problems::Problem;
+use apbcfw::runtime::service;
+use apbcfw::runtime::xla_backends::XlaChainDecoder;
+use apbcfw::sim::straggler::StragglerModel;
+use apbcfw::solver::StopCond;
+use std::sync::Arc;
+
+fn main() {
+    // OCR-like task: K=26 letters, 128 pixels/letter, length-9 words
+    // (the artifact shapes exported by python/compile/aot.py defaults).
+    let (n_train, n_test, k, d, ell) = (1000usize, 200usize, 26, 128, 9);
+    let full = ocr_like::generate(n_train + n_test, k, d, ell, 0.35, 2024);
+
+    let train_data = Arc::new(ChainDataset {
+        n: n_train,
+        k,
+        d,
+        ell,
+        features: full.features[..n_train * ell * d].to_vec(),
+        labels: full.labels[..n_train * ell].to_vec(),
+    });
+    let test_data = Arc::new(ChainDataset {
+        n: n_test,
+        k,
+        d,
+        ell,
+        features: full.features[n_train * ell * d..].to_vec(),
+        labels: full.labels[n_train * ell..].to_vec(),
+    });
+
+    let lam = 0.01;
+    let mut train_problem = ChainSsvm::new(train_data.clone(), lam);
+    let eval_problem = ChainSsvm::new(test_data, lam); // native decode for eval
+
+    // Prefer the AOT Pallas/XLA decoder for the training oracle.
+    let artifacts = std::path::Path::new("artifacts");
+    let mut backend = "native rust Viterbi";
+    if artifacts.join("manifest.txt").exists() {
+        match service::spawn(artifacts)
+            .and_then(|h| XlaChainDecoder::new(h, train_data.clone()))
+        {
+            Ok(dec) => {
+                train_problem = train_problem.with_decoder(Arc::new(dec));
+                backend = "XLA artifact (Pallas Viterbi kernel via PJRT)";
+            }
+            Err(e) => println!("note: falling back to native oracle: {e}"),
+        }
+    }
+    println!("oracle backend: {backend}");
+    println!(
+        "training structural SVM: n={n_train}, K={k}, d={d}, L={ell}, lambda={lam}"
+    );
+
+    let train_idx: Vec<usize> = (0..n_train).collect();
+    let test_idx: Vec<usize> = (0..n_test).collect();
+    let w0 = train_problem.init_param();
+    println!(
+        "epoch budget 0: train err {:.3}, test err {:.3} (random-init)",
+        train_problem.hamming_error(&w0, &train_idx),
+        eval_problem.hamming_error(&w0, &test_idx)
+    );
+
+    let workers = std::thread::available_parallelism()
+        .map(|v| v.get().min(8))
+        .unwrap_or(4);
+    let mut total_secs = 0.0;
+    for &budget in &[1.0f64, 2.0, 4.0, 8.0, 16.0] {
+        let cfg = RunConfig {
+            workers,
+            tau: 2 * workers,
+            line_search: true,
+            straggler: StragglerModel::none(workers),
+            sample_every: 32,
+            exact_gap: false,
+            stop: StopCond {
+                max_epochs: budget,
+                max_secs: 300.0,
+                ..Default::default()
+            },
+            seed: 7,
+            ..Default::default()
+        };
+        let r = coord::run(&train_problem, &cfg);
+        total_secs += r.elapsed_s;
+        let last = r.trace.last().unwrap();
+        println!(
+            "epoch budget {budget:>4}: dual f = {:>10.6} | est.gap = {:>9.2e} | train err {:.3} | test err {:.3} | {:>5.1}s | {} iters, {} oracle calls, {} collisions",
+            last.objective,
+            last.gap,
+            train_problem.hamming_error(&r.param, &train_idx),
+            eval_problem.hamming_error(&r.param, &test_idx),
+            r.elapsed_s,
+            r.counters.iterations,
+            r.counters.oracle_calls,
+            r.counters.collisions,
+        );
+    }
+    println!("total training time across budgets: {total_secs:.1}s (T={workers})");
+}

@@ -1,0 +1,126 @@
+"""AOT exporter: lower the L2 model functions to HLO *text* artifacts.
+
+HLO text (not `.serialize()`d HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the published `xla` 0.1.6 crate) rejects; the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage:  python -m compile.aot --out-dir ../artifacts
+
+Emits one `<name>.hlo.txt` per (function, shape-variant) plus a `manifest.txt`
+the rust runtime uses to discover artifacts and their shapes.
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Default shape configuration — mirrored by rust/src/util/config.rs defaults.
+GFL_D = 10
+GFL_N = 100            # signal length; m = n - 1 blocks
+CHAIN_K = 26           # letter labels (OCR-like)
+CHAIN_D = 128          # per-letter feature dim
+CHAIN_L = 9            # fixed sequence length (see DESIGN.md substitutions)
+CHAIN_BATCHES = (1, 16, 64)
+MC_K = 10
+MC_D = 64
+MC_BATCHES = (1, 64)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def build_specs(cfg):
+    """Yield (artifact_name, function, example_args, output_desc)."""
+    d, n = cfg["gfl_d"], cfg["gfl_n"]
+    m = n - 1
+    yield (
+        f"gfl_step_d{d}_n{n}",
+        model.gfl_step,
+        (f32(d, m), f32(d, m), f32(1)),
+        "g(d,m) s(d,m) gap(m) f(1)",
+    )
+    yield (
+        f"gfl_primal_d{d}_n{n}",
+        model.gfl_primal,
+        (f32(d, m), f32(d, n), f32(1)),
+        "x(d,n) p(1)",
+    )
+    k, cd, ell = cfg["chain_k"], cfg["chain_d"], cfg["chain_l"]
+    for b in cfg["chain_batches"]:
+        yield (
+            f"ssvm_chain_K{k}_d{cd}_L{ell}_B{b}",
+            model.ssvm_chain_oracle,
+            (f32(k, cd), f32(k, k), f32(b, ell, cd), i32(b, ell), f32(1)),
+            "ystar(B,L)i32 h(B)",
+        )
+    mk, md = cfg["mc_k"], cfg["mc_d"]
+    for b in cfg["mc_batches"]:
+        yield (
+            f"ssvm_multiclass_K{mk}_d{md}_B{b}",
+            model.ssvm_multiclass_oracle,
+            (f32(mk, md), f32(b, md), i32(b), f32(1)),
+            "ystar(B)i32 h(B)",
+        )
+
+
+def export_all(out_dir, cfg):
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = []
+    for name, fn, args, outs in build_specs(cfg):
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        shapes = ";".join(
+            f"{'x'.join(map(str, a.shape)) or '0'}:{a.dtype}" for a in args
+        )
+        manifest.append(f"{name}\tin={shapes}\tout={outs}")
+        print(f"wrote {path} ({len(text)} chars)")
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"wrote {out_dir}/manifest.txt ({len(manifest)} artifacts)")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--gfl-d", type=int, default=GFL_D)
+    ap.add_argument("--gfl-n", type=int, default=GFL_N)
+    ap.add_argument("--chain-k", type=int, default=CHAIN_K)
+    ap.add_argument("--chain-d", type=int, default=CHAIN_D)
+    ap.add_argument("--chain-l", type=int, default=CHAIN_L)
+    ap.add_argument("--mc-k", type=int, default=MC_K)
+    ap.add_argument("--mc-d", type=int, default=MC_D)
+    args = ap.parse_args()
+    cfg = dict(
+        gfl_d=args.gfl_d, gfl_n=args.gfl_n,
+        chain_k=args.chain_k, chain_d=args.chain_d, chain_l=args.chain_l,
+        chain_batches=CHAIN_BATCHES,
+        mc_k=args.mc_k, mc_d=args.mc_d, mc_batches=MC_BATCHES,
+    )
+    export_all(args.out_dir, cfg)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,14 @@
+"""Layer-1 Pallas kernels for AP-BCFW compute hot-spots.
+
+Every kernel here is written with `pl.pallas_call(..., interpret=True)` so it
+lowers to plain HLO ops executable by the CPU PJRT plugin (the image has no
+TPU). The BlockSpec structure is still the real TPU schedule: tiles are sized
+for VMEM and the inner contractions are MXU-shaped (see DESIGN.md
+§Hardware-Adaptation).
+"""
+
+from .gfl_grad import gfl_fused_step
+from .viterbi import viterbi_decode
+from .multiclass import multiclass_decode
+
+__all__ = ["gfl_fused_step", "viterbi_decode", "multiclass_decode"]

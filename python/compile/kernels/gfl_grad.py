@@ -1,0 +1,120 @@
+"""Group Fused Lasso dual: fused block-gradient + linear-oracle Pallas kernel.
+
+Problem (paper Eq. 10-dual): variables U in R^{d x m} (m = n-1 blocks, one
+per change-point), constraint ||U[:, t]||_2 <= lambda. Objective
+
+    f(U) = 1/2 ||U D^T||_F^2 - <U, B>,   B := Y D  (d x m)
+
+with D the n x (n-1) forward-differencing matrix. The gradient is the
+tridiagonal stencil
+
+    G[:, t] = -U[:, t-1] + 2 U[:, t] - U[:, t+1] - B[:, t]
+
+and the per-block Frank-Wolfe linear oracle over the l2 ball is
+
+    S[:, t] = -lambda * G[:, t] / ||G[:, t]||_2          (0 if G[:, t] = 0)
+
+with per-block surrogate gap  gap[t] = <U[:, t], G[:, t]> + lambda ||G[:, t]||.
+
+Kernel layout: the stencil shifts are materialized as two shifted views
+(Uprev, Unext) by the L2 caller — on a real TPU these would be overlapped
+BlockSpec halos; shifting in XLA keeps edge handling exact while the kernel
+stays a pure fused elementwise + column-reduction tile program. The grid
+tiles the *time* axis; each program owns a (d, bm) VMEM tile and produces the
+gradient tile, the oracle tile, the per-column gap and the two scalar
+contractions <U, G>, <U, B> needed to reconstruct f(U) = (<U,G> - <U,B>)/2.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(uprev_ref, u_ref, unext_ref, b_ref, lam_ref,
+            g_ref, s_ref, gap_ref, ug_ref, ub_ref):
+    u = u_ref[...]
+    b = b_ref[...]
+    lam = lam_ref[0]
+    # Tridiagonal stencil (shifted views carry the halo columns).
+    g = 2.0 * u - uprev_ref[...] - unext_ref[...] - b
+    g_ref[...] = g
+    # Per-column l2 norms -> ball oracle. Guard the 0/0 case.
+    norms = jnp.sqrt(jnp.sum(g * g, axis=0))
+    safe = jnp.where(norms > 0.0, norms, 1.0)
+    s_ref[...] = -lam * g / safe[None, :]
+    # Surrogate duality-gap contribution per block: <u_t - s_t, g_t>.
+    gap_ref[...] = jnp.sum(u * g, axis=0) + lam * norms
+    # Scalar contractions for the objective value.
+    ug_ref[0] = jnp.sum(u * g)
+    ub_ref[0] = jnp.sum(u * b)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m",))
+def gfl_fused_step(u, b, lam, block_m=32):
+    """Fused GFL dual step quantities for all m blocks.
+
+    Args:
+      u: (d, m) dual iterate, columns feasible (||u_t|| <= lam).
+      b: (d, m) precomputed B = Y D.
+      lam: scalar l2-ball radius (the fused-lasso penalty).
+      block_m: time-axis tile width (VMEM tile is d x block_m).
+
+    Returns:
+      (g, s, gap, f): gradient (d,m), oracle solutions (d,m), per-block
+      gaps (m,), objective value f(U) (scalar).
+    """
+    d, m = u.shape
+    dtype = u.dtype
+    # Shifted halo views; zero-padded at the boundary (u_0 = u_{m+1} = 0).
+    zcol = jnp.zeros((d, 1), dtype)
+    uprev = jnp.concatenate([zcol, u[:, :-1]], axis=1)
+    unext = jnp.concatenate([u[:, 1:], zcol], axis=1)
+    lam_arr = jnp.asarray(lam, dtype).reshape((1,))
+
+    # Pad the time axis to a tile multiple; padded columns are zero and
+    # contribute zero gap / zero scalar mass (B padded with zero too).
+    bm = min(block_m, m)
+    mp = ((m + bm - 1) // bm) * bm
+    pad = mp - m
+    if pad:
+        zpad = jnp.zeros((d, pad), dtype)
+        u_p = jnp.concatenate([u, zpad], axis=1)
+        b_p = jnp.concatenate([b, zpad], axis=1)
+        uprev_p = jnp.concatenate([uprev, zpad], axis=1)
+        unext_p = jnp.concatenate([unext, zpad], axis=1)
+    else:
+        u_p, b_p, uprev_p, unext_p = u, b, uprev, unext
+
+    grid = (mp // bm,)
+    col_spec = pl.BlockSpec((d, bm), lambda i: (0, i))
+    vec_spec = pl.BlockSpec((bm,), lambda i: (i,))
+    scal_spec = pl.BlockSpec((1,), lambda i: (0,))
+
+    g, s, gap, ug, ub = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[col_spec, col_spec, col_spec, col_spec,
+                  pl.BlockSpec((1,), lambda i: (0,))],
+        out_specs=[col_spec, col_spec, vec_spec, scal_spec, scal_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((d, mp), dtype),
+            jax.ShapeDtypeStruct((d, mp), dtype),
+            jax.ShapeDtypeStruct((mp,), dtype),
+            jax.ShapeDtypeStruct((1,), dtype),
+            jax.ShapeDtypeStruct((1,), dtype),
+        ],
+        interpret=True,
+    )(uprev_p, u_p, unext_p, b_p, lam_arr)
+
+    # Scalar tiles are overwritten per grid step in interpret mode; recompute
+    # the two contractions from the (exact) tile outputs instead.
+    g = g[:, :m]
+    s = s[:, :m]
+    gap = gap[:m]
+    del ug, ub
+    ug_v = jnp.sum(u * g)
+    ub_v = jnp.sum(u * b)
+    f = 0.5 * (ug_v - ub_v)
+    return g, s, gap, f

@@ -1,0 +1,108 @@
+"""Pure numpy reference oracles — ground truth for every Pallas kernel.
+
+Deliberately written as straight-line, loop-heavy numpy: slow, obvious, and
+independent of JAX tracing, so a bug in a kernel cannot be mirrored here.
+"""
+
+import numpy as np
+
+
+def gfl_fused_step_ref(u, b, lam):
+    """Reference for kernels.gfl_grad.gfl_fused_step.
+
+    Returns (g, s, gap, f) with the same semantics.
+    """
+    u = np.asarray(u, dtype=np.float64)
+    b = np.asarray(b, dtype=np.float64)
+    d, m = u.shape
+    g = np.zeros((d, m))
+    for t in range(m):
+        g[:, t] = 2.0 * u[:, t] - b[:, t]
+        if t > 0:
+            g[:, t] -= u[:, t - 1]
+        if t + 1 < m:
+            g[:, t] -= u[:, t + 1]
+    s = np.zeros_like(g)
+    gap = np.zeros(m)
+    for t in range(m):
+        nrm = np.linalg.norm(g[:, t])
+        if nrm > 0:
+            s[:, t] = -lam * g[:, t] / nrm
+        gap[t] = u[:, t] @ g[:, t] + lam * nrm
+    f = 0.5 * (np.sum(u * g) - np.sum(u * b))
+    return g, s, gap, f
+
+
+def gfl_objective_ref(u, y, lam_unused=None):
+    """Dual objective via the definition f(U) = 1/2||U D^T||_F^2 - <U, YD>."""
+    u = np.asarray(u, dtype=np.float64)
+    y = np.asarray(y, dtype=np.float64)
+    d, n = y.shape
+    m = n - 1
+    udt = np.zeros((d, n))
+    for j in range(n):
+        if j >= 1:
+            udt[:, j] += u[:, j - 1]
+        if j < m:
+            udt[:, j] -= u[:, j]
+    b = y[:, 1:] - y[:, :-1]
+    return 0.5 * np.sum(udt * udt) - np.sum(u * b)
+
+
+def viterbi_decode_ref(wu, trans, x, ytrue, loss_weight):
+    """Reference for kernels.viterbi.viterbi_decode: per-sequence DP loops."""
+    wu = np.asarray(wu, dtype=np.float64)
+    trans = np.asarray(trans, dtype=np.float64)
+    x = np.asarray(x, dtype=np.float64)
+    ytrue = np.asarray(ytrue)
+    bsz, ell, _d = x.shape
+    k = wu.shape[0]
+    ystar = np.zeros((bsz, ell), dtype=np.int32)
+    hval = np.zeros(bsz)
+    for i in range(bsz):
+        unary = x[i] @ wu.T                     # (L, K)
+        theta = unary.copy()
+        for t in range(ell):
+            for c in range(k):
+                if c != ytrue[i, t]:
+                    theta[t, c] += loss_weight / ell
+        alpha = theta[0].copy()
+        ptr = np.zeros((ell, k), dtype=np.int32)
+        for t in range(1, ell):
+            for c in range(k):
+                cand = alpha + trans[:, c]
+                ptr[t, c] = int(np.argmax(cand))
+                alpha_c = cand[ptr[t, c]] + theta[t, c]
+                if c == 0:
+                    new_alpha = np.zeros(k)
+                new_alpha[c] = alpha_c
+            alpha = new_alpha
+        ystar[i, ell - 1] = int(np.argmax(alpha))
+        v = alpha[ystar[i, ell - 1]]
+        for t in range(ell - 2, -1, -1):
+            ystar[i, t] = ptr[t + 1, ystar[i, t + 1]]
+        score_true = sum(unary[t, ytrue[i, t]] for t in range(ell))
+        score_true += sum(
+            trans[ytrue[i, t - 1], ytrue[i, t]] for t in range(1, ell))
+        hval[i] = v - score_true
+    return ystar, hval
+
+
+def multiclass_decode_ref(w, x, ytrue, loss_weight):
+    """Reference for kernels.multiclass.multiclass_decode."""
+    w = np.asarray(w, dtype=np.float64)
+    x = np.asarray(x, dtype=np.float64)
+    ytrue = np.asarray(ytrue)
+    bsz = x.shape[0]
+    k = w.shape[0]
+    ystar = np.zeros(bsz, dtype=np.int32)
+    hval = np.zeros(bsz)
+    for i in range(bsz):
+        scores = w @ x[i]
+        aug = scores.copy()
+        for c in range(k):
+            if c != ytrue[i]:
+                aug[c] += loss_weight
+        ystar[i] = int(np.argmax(aug))
+        hval[i] = aug[ystar[i]] - scores[ytrue[i]]
+    return ystar, hval

@@ -1,0 +1,77 @@
+"""Layer-2 JAX compute graphs for AP-BCFW, calling the L1 Pallas kernels.
+
+Each public function here is one AOT artifact: `aot.py` lowers it once to HLO
+text and the rust runtime (rust/src/runtime) compiles and executes it on the
+request path. Python never runs at serve time.
+
+Scalar runtime knobs (lambda, loss weight) are passed as shape-(1,) f32
+inputs so the rust side can set them per call without recompiling.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import gfl_fused_step, multiclass_decode, viterbi_decode
+
+
+def gfl_step(u, b, lam):
+    """One Group-Fused-Lasso dual evaluation over all blocks.
+
+    Args:
+      u: (d, m) dual iterate.
+      b: (d, m) B = Y D.
+      lam: (1,) l2-ball radius.
+
+    Returns:
+      (g, s, gap, f1): gradient, oracle columns, per-block gaps, and the
+      objective value as a (1,) vector.
+    """
+    g, s, gap, f = gfl_fused_step(u, b, lam[0])
+    return g, s, gap, f.reshape((1,))
+
+
+def gfl_primal(u, y, lam):
+    """Primal recovery + primal objective for GFL.
+
+    X = Y - U D^T is the primal signal estimate; the primal objective is
+    1/2 ||X - Y||_F^2 + lam * sum_t ||X[:, t+1] - X[:, t]||_2.
+
+    Args:
+      u: (d, n-1) dual iterate.  y: (d, n) observations.  lam: (1,).
+
+    Returns:
+      (x, p1): primal estimate (d, n) and primal objective as (1,).
+    """
+    d, n = y.shape
+    zcol = jnp.zeros((d, 1), u.dtype)
+    # (U D^T)[:, j] = u_{j-1} - u_j with u_0 = u_n = 0.
+    udt = jnp.concatenate([zcol, u], axis=1) - jnp.concatenate([u, zcol], axis=1)
+    x = y - udt
+    diffs = x[:, 1:] - x[:, :-1]
+    tv = jnp.sum(jnp.sqrt(jnp.sum(diffs * diffs, axis=0)))
+    p = 0.5 * jnp.sum(udt * udt) + lam[0] * tv
+    return x, p.reshape((1,))
+
+
+def ssvm_chain_oracle(wu, trans, x, ytrue, loss_weight):
+    """Structural-SVM chain oracle: batched loss-augmented Viterbi.
+
+    Args:
+      wu: (K, d) unary weights.  trans: (K, K) transition weights.
+      x: (B, L, d) features.  ytrue: (B, L) int32.  loss_weight: (1,).
+
+    Returns:
+      (ystar, h): (B, L) int32 decodes and (B,) oracle values.
+    """
+    return viterbi_decode(wu, trans, x, ytrue, loss_weight[0])
+
+
+def ssvm_multiclass_oracle(w, x, ytrue, loss_weight):
+    """Structural-SVM multiclass oracle: loss-augmented argmax.
+
+    Args:
+      w: (K, d).  x: (B, d).  ytrue: (B,) int32.  loss_weight: (1,).
+
+    Returns:
+      (ystar, h): (B,) int32 and (B,) oracle values.
+    """
+    return multiclass_decode(w, x, ytrue, loss_weight[0])

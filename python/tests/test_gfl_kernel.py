@@ -1,0 +1,108 @@
+"""GFL fused-step Pallas kernel vs pure-numpy reference."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import gfl_fused_step
+from compile.kernels.ref import gfl_fused_step_ref
+
+
+def _mk(d, m, lam, seed, feasible=True):
+    rng = np.random.default_rng(seed)
+    u = rng.normal(size=(d, m)).astype(np.float32)
+    if feasible:
+        norms = np.maximum(np.linalg.norm(u, axis=0) / max(lam, 1e-9), 1.0)
+        u = u / norms
+    b = rng.normal(size=(d, m)).astype(np.float32)
+    return u, b
+
+
+def _check(u, b, lam, block_m=32):
+    g, s, gap, f = gfl_fused_step(jnp.asarray(u), jnp.asarray(b), lam,
+                                  block_m=block_m)
+    gr, sr, gapr, fr = gfl_fused_step_ref(u, b, lam)
+    np.testing.assert_allclose(np.asarray(g), gr, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(s), sr, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(gap), gapr, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(float(f), fr, rtol=1e-4, atol=1e-4)
+    return g, s, gap, f
+
+
+def test_paper_shape():
+    """The Fig 1(b)/Fig 4 configuration: d=10, n=100 (m=99), lam=0.01."""
+    u, b = _mk(10, 99, 0.01, 0)
+    _check(u, b, 0.01)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    d=st.integers(1, 24),
+    m=st.integers(1, 70),
+    lam=st.floats(1e-3, 10.0),
+    block_m=st.sampled_from([1, 3, 8, 32, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_shapes(d, m, lam, block_m, seed):
+    """Sweep shapes, tile sizes (incl. non-dividing) and radii."""
+    u, b = _mk(d, m, lam, seed)
+    _check(u, b, lam, block_m=block_m)
+
+
+def test_zero_gradient_column_oracle_is_zero():
+    """0/0 guard: a zero gradient column must yield a zero oracle column."""
+    d, m = 4, 6
+    u = np.zeros((d, m), np.float32)
+    b = np.zeros((d, m), np.float32)
+    g, s, gap, f = gfl_fused_step(jnp.asarray(u), jnp.asarray(b), 1.0)
+    assert np.all(np.asarray(s) == 0.0)
+    assert np.all(np.asarray(gap) == 0.0)
+    assert float(f) == 0.0
+
+
+def test_oracle_columns_on_ball_boundary():
+    u, b = _mk(8, 33, 0.5, 3)
+    g, s, _, _ = gfl_fused_step(jnp.asarray(u), jnp.asarray(b), 0.5)
+    norms = np.linalg.norm(np.asarray(s), axis=0)
+    np.testing.assert_allclose(norms, 0.5, rtol=1e-5)
+
+
+def test_oracle_minimizes_linear_form():
+    """<s_t, g_t> must be <= <v, g_t> for random feasible v (oracle optimality)."""
+    lam = 0.3
+    u, b = _mk(6, 20, lam, 7)
+    g, s, _, _ = gfl_fused_step(jnp.asarray(u), jnp.asarray(b), lam)
+    g, s = np.asarray(g), np.asarray(s)
+    rng = np.random.default_rng(11)
+    for _ in range(20):
+        v = rng.normal(size=6).astype(np.float32)
+        v = v / np.linalg.norm(v) * lam
+        t = rng.integers(0, 20)
+        assert s[:, t] @ g[:, t] <= v @ g[:, t] + 1e-5
+
+
+def test_gap_nonnegative_for_feasible_u():
+    for seed in range(5):
+        u, b = _mk(12, 40, 0.7, seed)
+        _, _, gap, _ = gfl_fused_step(jnp.asarray(u), jnp.asarray(b), 0.7)
+        assert np.all(np.asarray(gap) >= -1e-5)
+
+
+def test_dtype_bf16():
+    """Kernel runs in bf16 with loose tolerance (TPU-native dtype)."""
+    u, b = _mk(8, 16, 0.1, 5)
+    ub, bb = jnp.asarray(u, jnp.bfloat16), jnp.asarray(b, jnp.bfloat16)
+    g, s, gap, f = gfl_fused_step(ub, bb, 0.1)
+    gr, sr, gapr, fr = gfl_fused_step_ref(u, b, 0.1)
+    np.testing.assert_allclose(
+        np.asarray(g, np.float32), gr, rtol=0.1, atol=0.1)
+    np.testing.assert_allclose(
+        np.asarray(s, np.float32), sr, rtol=0.15, atol=0.02)
+
+
+@pytest.mark.parametrize("m", [1, 2, 31, 32, 33, 64])
+def test_tile_boundaries(m):
+    """Exactness at every padding relationship between m and block_m=32."""
+    u, b = _mk(5, m, 0.2, m)
+    _check(u, b, 0.2)

@@ -1,0 +1,115 @@
+"""L2 model-level tests: objective/gradient/oracle/primal consistency."""
+
+import numpy as np
+import jax.numpy as jnp
+
+from compile import model
+from compile.kernels.ref import gfl_objective_ref
+
+
+def _gfl_instance(d=10, n=100, lam=0.01, seed=0):
+    rng = np.random.default_rng(seed)
+    y = rng.normal(size=(d, n)).astype(np.float32)
+    u = rng.normal(size=(d, n - 1)).astype(np.float32)
+    u = u / np.maximum(1.0, np.linalg.norm(u, axis=0) / lam)
+    b = (y[:, 1:] - y[:, :-1]).astype(np.float32)
+    return u, y, b
+
+
+def test_gfl_step_objective_matches_definition():
+    u, y, b = _gfl_instance()
+    lam = jnp.asarray([0.01], jnp.float32)
+    _, _, _, f1 = model.gfl_step(jnp.asarray(u), jnp.asarray(b), lam)
+    fr = gfl_objective_ref(u, y)
+    np.testing.assert_allclose(float(f1[0]), fr, rtol=1e-4, atol=1e-4)
+
+
+def test_gfl_gradient_is_finite_difference():
+    """Directional finite differences agree with the kernel gradient."""
+    u, y, b = _gfl_instance(d=4, n=20, seed=1)
+    lam = jnp.asarray([0.01], jnp.float32)
+    g, _, _, _ = model.gfl_step(jnp.asarray(u), jnp.asarray(b), lam)
+    g = np.asarray(g, np.float64)
+    rng = np.random.default_rng(2)
+    eps = 1e-4
+    for _ in range(5):
+        v = rng.normal(size=u.shape)
+        v /= np.linalg.norm(v)
+        fp = gfl_objective_ref(u + eps * v, y)
+        fm = gfl_objective_ref(u - eps * v, y)
+        fd = (fp - fm) / (2 * eps)
+        np.testing.assert_allclose(fd, np.sum(g * v), rtol=1e-3, atol=1e-3)
+
+
+def test_gfl_primal_dual_relation():
+    """Weak duality: primal(X(U)) >= -f(U) ... actually primal >= -min f.
+
+    For this dual pair, p(X) + f(U) >= 0 with equality at the optimum.
+    """
+    u, y, b = _gfl_instance(seed=3)
+    lam = jnp.asarray([0.01], jnp.float32)
+    _, _, _, f1 = model.gfl_step(jnp.asarray(u), jnp.asarray(b), lam)
+    x, p1 = model.gfl_primal(jnp.asarray(u), jnp.asarray(y), lam)
+    assert float(p1[0]) + float(f1[0]) >= -1e-4
+
+
+def test_gfl_primal_recovery_shape_and_zero_dual():
+    """U = 0 gives X = Y exactly (no smoothing)."""
+    _, y, _ = _gfl_instance(seed=4)
+    lam = jnp.asarray([0.5], jnp.float32)
+    u0 = jnp.zeros((y.shape[0], y.shape[1] - 1), jnp.float32)
+    x, p1 = model.gfl_primal(u0, jnp.asarray(y), lam)
+    np.testing.assert_allclose(np.asarray(x), y, atol=1e-6)
+
+
+def test_gfl_fw_step_decreases_objective():
+    """A Frank-Wolfe step with the paper's step size decreases f."""
+    u, y, b = _gfl_instance(seed=5)
+    lam_v = 0.01
+    lam = jnp.asarray([lam_v], jnp.float32)
+    n_blocks = u.shape[1]
+    uj, bj = jnp.asarray(u), jnp.asarray(b)
+    _, s, _, f0 = model.gfl_step(uj, bj, lam)
+    # batch step tau = n: gamma = 2n*tau/(tau^2 k + 2n) with k=0 -> 1.0;
+    # use a small gamma to stay in the descent regime of the quadratic.
+    gamma = 2.0 * n_blocks * n_blocks / (n_blocks**2 * 5 + 2 * n_blocks)
+    u1 = uj + gamma * (s - uj)
+    _, _, _, f1 = model.gfl_step(u1, bj, lam)
+    assert float(f1[0]) < float(f0[0])
+
+
+def test_chain_oracle_batch_consistency():
+    """Decoding a batch equals decoding each element alone."""
+    rng = np.random.default_rng(6)
+    k, d, ell, b = 6, 10, 5, 7
+    wu = jnp.asarray(rng.normal(size=(k, d)).astype(np.float32))
+    tr = jnp.asarray(rng.normal(size=(k, k)).astype(np.float32))
+    x = rng.normal(size=(b, ell, d)).astype(np.float32)
+    y = rng.integers(0, k, size=(b, ell)).astype(np.int32)
+    lw = jnp.asarray([1.0], jnp.float32)
+    ys_all, h_all = model.ssvm_chain_oracle(
+        wu, tr, jnp.asarray(x), jnp.asarray(y), lw)
+    for i in range(b):
+        ys_i, h_i = model.ssvm_chain_oracle(
+            wu, tr, jnp.asarray(x[i:i + 1]), jnp.asarray(y[i:i + 1]), lw)
+        np.testing.assert_array_equal(np.asarray(ys_all)[i],
+                                      np.asarray(ys_i)[0])
+        np.testing.assert_allclose(float(h_all[i]), float(h_i[0]),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_multiclass_oracle_batch_consistency():
+    rng = np.random.default_rng(7)
+    k, d, b = 8, 12, 9
+    w = jnp.asarray(rng.normal(size=(k, d)).astype(np.float32))
+    x = rng.normal(size=(b, d)).astype(np.float32)
+    y = rng.integers(0, k, size=b).astype(np.int32)
+    lw = jnp.asarray([1.0], jnp.float32)
+    ys_all, h_all = model.ssvm_multiclass_oracle(
+        w, jnp.asarray(x), jnp.asarray(y), lw)
+    for i in range(b):
+        ys_i, h_i = model.ssvm_multiclass_oracle(
+            w, jnp.asarray(x[i:i + 1]), jnp.asarray(y[i:i + 1]), lw)
+        assert int(ys_all[i]) == int(ys_i[0])
+        np.testing.assert_allclose(float(h_all[i]), float(h_i[0]),
+                                   rtol=1e-4, atol=1e-4)

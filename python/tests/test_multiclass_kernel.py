@@ -1,0 +1,73 @@
+"""Multiclass loss-augmented decode Pallas kernel vs reference."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import multiclass_decode
+from compile.kernels.ref import multiclass_decode_ref
+
+
+def _mk(k, d, b, seed):
+    rng = np.random.default_rng(seed)
+    w = rng.normal(size=(k, d)).astype(np.float32)
+    x = rng.normal(size=(b, d)).astype(np.float32)
+    y = rng.integers(0, k, size=b).astype(np.int32)
+    return w, x, y
+
+
+def _check(w, x, y, lw, block_b=64):
+    ys, h = multiclass_decode(jnp.asarray(w), jnp.asarray(x), jnp.asarray(y),
+                              lw, block_b=block_b)
+    ysr, hr = multiclass_decode_ref(w, x, y, lw)
+    np.testing.assert_array_equal(np.asarray(ys), ysr)
+    np.testing.assert_allclose(np.asarray(h), hr, rtol=1e-4, atol=1e-4)
+
+
+def test_paper_shape():
+    w, x, y = _mk(10, 64, 32, 0)
+    _check(w, x, y, 1.0)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    k=st.integers(2, 30),
+    d=st.integers(1, 40),
+    b=st.integers(1, 70),
+    lw=st.sampled_from([0.0, 1.0, 2.5]),
+    block_b=st.sampled_from([1, 7, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_shapes(k, d, b, lw, block_b, seed):
+    w, x, y = _mk(k, d, b, seed)
+    _check(w, x, y, lw, block_b=block_b)
+
+
+def test_h_nonnegative():
+    for seed in range(5):
+        w, x, y = _mk(7, 9, 21, seed)
+        _, h = multiclass_decode(jnp.asarray(w), jnp.asarray(x),
+                                 jnp.asarray(y), 1.0)
+        assert np.all(np.asarray(h) >= -1e-6)
+
+
+def test_zero_loss_weight_is_argmax():
+    w, x, y = _mk(6, 8, 17, 2)
+    ys, _ = multiclass_decode(jnp.asarray(w), jnp.asarray(x), jnp.asarray(y),
+                              0.0)
+    np.testing.assert_array_equal(np.asarray(ys), np.argmax(x @ w.T, axis=1))
+
+
+def test_large_loss_dominates():
+    """Huge loss weight forces y* != ytrue whenever K > 1."""
+    w, x, y = _mk(5, 4, 30, 4)
+    ys, _ = multiclass_decode(jnp.asarray(w), jnp.asarray(x), jnp.asarray(y),
+                              1e6)
+    assert np.all(np.asarray(ys) != y)
+
+
+@pytest.mark.parametrize("b", [1, 63, 64, 65, 128])
+def test_batch_padding(b):
+    w, x, y = _mk(4, 5, b, b)
+    _check(w, x, y, 1.0)

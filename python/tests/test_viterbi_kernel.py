@@ -1,0 +1,98 @@
+"""Batched loss-augmented Viterbi Pallas kernel vs per-sequence DP reference."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import viterbi_decode
+from compile.kernels.ref import viterbi_decode_ref
+
+
+def _mk(k, d, ell, b, seed):
+    rng = np.random.default_rng(seed)
+    wu = rng.normal(size=(k, d)).astype(np.float32)
+    tr = rng.normal(size=(k, k)).astype(np.float32)
+    x = rng.normal(size=(b, ell, d)).astype(np.float32)
+    y = rng.integers(0, k, size=(b, ell)).astype(np.int32)
+    return wu, tr, x, y
+
+
+def _check(wu, tr, x, y, lw, block_b=16):
+    ys, h = viterbi_decode(jnp.asarray(wu), jnp.asarray(tr), jnp.asarray(x),
+                           jnp.asarray(y), lw, block_b=block_b)
+    ysr, hr = viterbi_decode_ref(wu, tr, x, y, lw)
+    # With continuous random scores ties have measure zero; paths must match.
+    np.testing.assert_array_equal(np.asarray(ys), ysr)
+    np.testing.assert_allclose(np.asarray(h), hr, rtol=1e-4, atol=1e-4)
+
+
+def test_paper_shape():
+    """OCR-like configuration: K=26 letters, d=128, L=9."""
+    wu, tr, x, y = _mk(26, 128, 9, 8, 0)
+    _check(wu, tr, x, y, 1.0)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    k=st.integers(2, 12),
+    d=st.integers(1, 20),
+    ell=st.integers(2, 10),
+    b=st.integers(1, 9),
+    lw=st.sampled_from([0.0, 0.5, 1.0, 3.0]),
+    block_b=st.sampled_from([1, 2, 4, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_shapes(k, d, ell, b, lw, block_b, seed):
+    wu, tr, x, y = _mk(k, d, ell, b, seed)
+    _check(wu, tr, x, y, lw, block_b=block_b)
+
+
+def test_zero_loss_weight_is_plain_inference():
+    """lw=0: decode maximizes the raw chain score independent of ytrue."""
+    wu, tr, x, y = _mk(5, 6, 7, 4, 3)
+    y2 = (y + 1) % 5
+    ys_a, _ = viterbi_decode(jnp.asarray(wu), jnp.asarray(tr), jnp.asarray(x),
+                             jnp.asarray(y), 0.0)
+    ys_b, _ = viterbi_decode(jnp.asarray(wu), jnp.asarray(tr), jnp.asarray(x),
+                             jnp.asarray(y2), 0.0)
+    np.testing.assert_array_equal(np.asarray(ys_a), np.asarray(ys_b))
+
+
+def test_h_nonnegative():
+    """H_i = max_y [...] >= value at y = ytrue = 0 (loss(ytrue)=0)."""
+    for seed in range(4):
+        wu, tr, x, y = _mk(6, 5, 8, 5, seed)
+        _, h = viterbi_decode(jnp.asarray(wu), jnp.asarray(tr),
+                              jnp.asarray(x), jnp.asarray(y), 1.0)
+        assert np.all(np.asarray(h) >= -1e-5)
+
+
+def test_decode_beats_exhaustive_enumeration():
+    """Small instance: Viterbi equals brute force over all K^L labelings."""
+    k, d, ell, b = 3, 4, 4, 3
+    wu, tr, x, y = _mk(k, d, ell, b, 9)
+    ys, h = viterbi_decode(jnp.asarray(wu), jnp.asarray(tr), jnp.asarray(x),
+                           jnp.asarray(y), 1.0)
+    ys, h = np.asarray(ys), np.asarray(h)
+    import itertools
+    for i in range(b):
+        unary = x[i] @ wu.T
+        best_v, best_y = -np.inf, None
+        for lab in itertools.product(range(k), repeat=ell):
+            v = sum(unary[t, lab[t]] for t in range(ell))
+            v += sum(tr[lab[t - 1], lab[t]] for t in range(1, ell))
+            v += sum(1.0 / ell for t in range(ell) if lab[t] != y[i, t])
+            if v > best_v:
+                best_v, best_y = v, lab
+        score_true = sum(unary[t, y[i, t]] for t in range(ell)) + sum(
+            tr[y[i, t - 1], y[i, t]] for t in range(1, ell))
+        assert tuple(ys[i]) == best_y
+        np.testing.assert_allclose(h[i], best_v - score_true,
+                                   rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("b", [1, 15, 16, 17, 32])
+def test_batch_padding(b):
+    wu, tr, x, y = _mk(4, 3, 5, b, b)
+    _check(wu, tr, x, y, 1.0, block_b=16)

@@ -1,0 +1,33 @@
+//! Shared micro-bench harness (criterion is not in the offline vendor set).
+//!
+//! Usage: `bench("name", iters, || work())` — warms up, measures `iters`
+//! batches, prints mean/median/p95 per call in nanoseconds plus throughput.
+
+use apbcfw::util::stats::Summary;
+use std::time::Instant;
+
+/// Time `f` `reps` times (after `warmup` calls) and report per-call stats.
+pub fn bench<F: FnMut()>(name: &str, reps: usize, mut f: F) -> Summary {
+    let warmup = (reps / 10).max(3);
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64() * 1e9);
+    }
+    let s = Summary::of(&samples);
+    println!(
+        "{name:<44} mean {:>12.1} ns  med {:>12.1} ns  p95 {:>12.1} ns  ({} reps)",
+        s.mean, s.median, s.p95, s.n
+    );
+    s
+}
+
+/// Format a rate (ops/sec) from a per-call summary.
+#[allow(dead_code)]
+pub fn rate(per_call_ns: f64) -> String {
+    format!("{:.2} Kops/s", 1e6 / per_call_ns)
+}

@@ -1,0 +1,107 @@
+//! Coordinator-level benchmarks: end-to-end solve throughput per execution
+//! mode, and apply/publish cost at realistic batch sizes.
+
+mod bench_util;
+
+use apbcfw::coordinator::{apbcfw as coord, lockfree, sync, RunConfig};
+use apbcfw::data::signal;
+use apbcfw::problems::gfl::Gfl;
+use apbcfw::problems::{ApplyOptions, Problem};
+use apbcfw::sim::straggler::StragglerModel;
+use apbcfw::solver::{minibatch, SolveOptions, StopCond};
+use bench_util::bench;
+
+fn gfl() -> Gfl {
+    let sig = signal::piecewise_constant(10, 100, 6, 2.0, 0.5, 6);
+    Gfl::new(10, 100, 0.05, sig.noisy.clone())
+}
+
+fn main() {
+    println!("== coordinator ==");
+    let p = gfl();
+
+    // server apply cost at tau = 16 (line search on/off)
+    let param0 = p.init_param();
+    for ls in [false, true] {
+        let mut param = param0.clone();
+        let batch: Vec<_> = (0..16).map(|t| p.oracle(&param, t * 6)).collect();
+        bench(
+            &format!("gfl apply tau=16 line_search={ls}"),
+            5000,
+            || {
+                let mut prm = param.clone();
+                std::hint::black_box(p.apply(
+                    &mut (),
+                    &mut prm,
+                    &batch,
+                    ApplyOptions {
+                        gamma: 0.1,
+                        line_search: ls,
+                    },
+                ));
+            },
+        );
+        param[0] += 0.0;
+    }
+
+    // throughput: oracle calls per second per mode, fixed 1.0s budget
+    let budget = StopCond {
+        max_epochs: f64::INFINITY,
+        max_secs: 1.0,
+        ..Default::default()
+    };
+    let seq = minibatch::solve(
+        &p,
+        &SolveOptions {
+            tau: 8,
+            sample_every: 1 << 20,
+            exact_gap: false,
+            stop: budget,
+            seed: 1,
+            ..Default::default()
+        },
+    );
+    println!(
+        "mode=sequential   tau=8          {:>10.0} oracle calls/s",
+        seq.oracle_calls as f64 / seq.elapsed_s
+    );
+    for workers in [1usize, 2, 4] {
+        let cfg = RunConfig {
+            workers,
+            tau: 8,
+            straggler: StragglerModel::none(workers),
+            sample_every: 1 << 20,
+            exact_gap: false,
+            stop: budget,
+            seed: 2,
+            ..Default::default()
+        };
+        let r = coord::run(&p, &cfg);
+        println!(
+            "mode=async        tau=8 T={workers}      {:>10.0} oracle calls/s ({} applied, {} collisions)",
+            r.counters.oracle_calls as f64 / r.elapsed_s,
+            r.counters.updates_applied,
+            r.counters.collisions,
+        );
+    }
+    let cfg = RunConfig {
+        workers: 4,
+        tau: 8,
+        straggler: StragglerModel::none(4),
+        sample_every: 1 << 20,
+        exact_gap: false,
+        stop: budget,
+        seed: 3,
+        ..Default::default()
+    };
+    let r = sync::run(&p, &cfg);
+    println!(
+        "mode=sync         tau=8 T=4      {:>10.0} oracle calls/s",
+        r.counters.oracle_calls as f64 / r.elapsed_s
+    );
+    let r = lockfree::run(&p, &cfg);
+    println!(
+        "mode=lockfree     tau=1 T=4      {:>10.0} oracle calls/s",
+        r.counters.oracle_calls as f64 / r.elapsed_s
+    );
+}

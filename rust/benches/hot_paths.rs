@@ -1,0 +1,76 @@
+//! Micro-benchmarks of the L3 hot-path primitives: vector math, buffer
+//! operations, shared-parameter publish/read, and gap accumulation.
+//! These are the §Perf targets — see EXPERIMENTS.md §Perf.
+
+mod bench_util;
+
+use apbcfw::coordinator::buffer::BatchAssembler;
+use apbcfw::coordinator::shared::SharedParam;
+use apbcfw::coordinator::UpdateMsg;
+use apbcfw::problems::BlockOracle;
+use apbcfw::util::la;
+use apbcfw::util::rng::Pcg64;
+use bench_util::bench;
+
+fn main() {
+    println!("== hot_paths ==");
+    let mut rng = Pcg64::seeded(1);
+
+    // axpy / dot at the SSVM parameter dimension (K*d + K*K = 4004)
+    let dim = 26 * 128 + 26 * 26;
+    let x = rng.gaussian_vec(dim);
+    let mut y = rng.gaussian_vec(dim);
+    bench("axpy dim=4004", 5000, || {
+        la::axpy(0.01, &x, &mut y);
+    });
+    let mut acc = 0.0;
+    bench("dot dim=4004", 5000, || {
+        acc += la::dot(&x, &y);
+    });
+    std::hint::black_box(acc);
+
+    // lerp at the GFL column dimension
+    let xc = rng.gaussian_vec(10);
+    let mut yc = rng.gaussian_vec(10);
+    bench("lerp_into dim=10 (GFL column)", 20000, || {
+        la::lerp_into(0.3, &xc, &mut yc);
+    });
+
+    // batch assembler: insert + take at tau = 16
+    bench("assembler insert+take tau=16 n=1000", 2000, || {
+        let mut asm = BatchAssembler::new();
+        let mut r = Pcg64::seeded(7);
+        while asm.len() < 16 {
+            asm.insert(UpdateMsg {
+                oracle: BlockOracle {
+                    block: r.below(1000),
+                    s: vec![0.0; 8],
+                    ls: 0.0,
+                },
+                k_read: 0,
+                worker: 0,
+            });
+        }
+        std::hint::black_box(asm.take_batch(16));
+    });
+
+    // shared parameter publish + snapshot at SSVM dim
+    let sp = SharedParam::new(&x);
+    bench("SharedParam publish dim=4004", 5000, || {
+        sp.publish(&y, 1);
+    });
+    let mut buf = Vec::new();
+    bench("SharedParam read dim=4004", 5000, || {
+        sp.read(&mut buf);
+        std::hint::black_box(buf.len());
+    });
+
+    // simplex projection (PBCD hot path)
+    let mut blk = rng.gaussian_vec(10);
+    bench("project_simplex dim=10", 20000, || {
+        let mut b = blk.clone();
+        la::project_simplex(&mut b);
+        std::hint::black_box(&b);
+    });
+    blk[0] += 1.0;
+}

@@ -1,0 +1,117 @@
+//! Oracle-layer benchmarks: native rust oracles vs the XLA artifact path
+//! for every problem (L1/L2 performance surface). Run `make artifacts`
+//! first to include the XLA rows.
+
+mod bench_util;
+
+use apbcfw::data::{mixture, ocr_like, signal};
+use apbcfw::problems::gfl::{Gfl, GflOracleBackend};
+use apbcfw::problems::ssvm::chain::{ChainDecoder, ChainSsvm};
+use apbcfw::problems::ssvm::multiclass::{MulticlassDecoder, MulticlassSsvm};
+use apbcfw::problems::Problem;
+use apbcfw::runtime::service;
+use apbcfw::runtime::xla_backends::{
+    XlaChainDecoder, XlaGfl, XlaMulticlassDecoder,
+};
+use apbcfw::util::rng::Pcg64;
+use bench_util::bench;
+use std::sync::Arc;
+
+fn main() {
+    println!("== oracles ==");
+    let mut rng = Pcg64::seeded(2);
+    let artifacts = std::path::Path::new("artifacts");
+    let handle = if artifacts.join("manifest.txt").exists() {
+        service::spawn(artifacts).ok()
+    } else {
+        println!("(artifacts missing — XLA rows skipped)");
+        None
+    };
+
+    // ---- GFL (paper shape d=10 n=100) ----
+    let sig = signal::piecewise_constant(10, 100, 6, 2.0, 0.5, 3);
+    let gfl = Gfl::new(10, 100, 0.01, sig.noisy.clone());
+    let u = gfl.init_param();
+    bench("gfl native oracle (1 block)", 20000, || {
+        std::hint::black_box(gfl.oracle(&u, 42));
+    });
+    bench("gfl native full objective", 5000, || {
+        std::hint::black_box(gfl.objective_of(&u));
+    });
+    if let Some(h) = &handle {
+        let be = XlaGfl::new(h.clone(), 10, 100, 0.01, &gfl.b).unwrap();
+        bench("gfl XLA full step (all 99 blocks)", 500, || {
+            std::hint::black_box(be.step(&u));
+        });
+    }
+
+    // ---- chain SSVM (paper shape K=26 d=128 L=9) ----
+    let data = Arc::new(ocr_like::generate(64, 26, 128, 9, 0.15, 4));
+    let chain = ChainSsvm::new(data.clone(), 1.0);
+    let w: Vec<f32> = rng.gaussian_vec(chain.dim());
+    bench("chain native Viterbi oracle", 2000, || {
+        std::hint::black_box(chain.viterbi(&w, 3, 1.0));
+    });
+    bench("chain payload build", 5000, || {
+        let ys = chain.viterbi(&w, 3, 1.0).0;
+        std::hint::black_box(chain.payload(3, &ys));
+    });
+    if let Some(h) = &handle {
+        let dec = XlaChainDecoder::new(h.clone(), data.clone()).unwrap();
+        bench("chain XLA (Pallas) Viterbi oracle", 500, || {
+            std::hint::black_box(dec.decode(&w, 3, 1.0));
+        });
+    }
+
+    // batched chain artifacts: fixed PJRT dispatch amortizes across B
+    if let Some(h) = &handle {
+        use apbcfw::runtime::service::Tensor;
+        for b in [16usize, 64] {
+            let name = format!("ssvm_chain_K26_d128_L9_B{b}");
+            let wu = w[..26 * 128].to_vec();
+            let tr = w[26 * 128..].to_vec();
+            let xs = data.features[..b * 9 * 128].to_vec();
+            let ys: Vec<i32> =
+                data.labels[..b * 9].iter().map(|&v| v as i32).collect();
+            let mk_args = || {
+                vec![
+                    Tensor::F32(wu.clone(), vec![26, 128]),
+                    Tensor::F32(tr.clone(), vec![26, 26]),
+                    Tensor::F32(xs.clone(), vec![b as i64, 9, 128]),
+                    Tensor::I32(ys.clone(), vec![b as i64, 9]),
+                    Tensor::F32(vec![1.0], vec![1]),
+                ]
+            };
+            let s = bench(
+                &format!("chain XLA Viterbi batched B={b}"),
+                200,
+                || {
+                    std::hint::black_box(h.run(&name, mk_args()).unwrap());
+                },
+            );
+            println!(
+                "    -> {:.1} us per sequence (B={b})",
+                s.median / 1000.0 / b as f64
+            );
+        }
+    }
+
+    // ---- multiclass SSVM (K=10 d=64) ----
+    let mc_data = Arc::new(mixture::generate(64, 10, 64, 0.1, 5));
+    let mc = MulticlassSsvm::new(mc_data.clone(), 0.01);
+    let wm: Vec<f32> = rng.gaussian_vec(mc.dim());
+    bench("multiclass native oracle", 20000, || {
+        std::hint::black_box(mc.argmax(&wm, 7, 1.0));
+    });
+    if let Some(h) = &handle {
+        let dec = XlaMulticlassDecoder::new(h.clone(), mc_data).unwrap();
+        bench("multiclass XLA oracle", 1000, || {
+            std::hint::black_box(dec.decode(&wm, 7, 1.0));
+        });
+    }
+
+    // ---- full-gap evaluations (monitoring cost) ----
+    bench("gfl full_gap (99 oracles)", 1000, || {
+        std::hint::black_box(gfl.full_gap(&(), &u));
+    });
+}

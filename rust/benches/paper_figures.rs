@@ -1,0 +1,115 @@
+//! Paper-figure regeneration bench: runs a scaled-down version of every
+//! experiment in DESIGN.md §4 and prints the paper-shaped series. The
+//! full-size runs are `apbcfw exp <id> --config config/default.ini`; this
+//! bench keeps each figure to a few seconds so `cargo bench` stays usable
+//! as a regression harness over ALL tables and figures.
+
+use apbcfw::experiments;
+use apbcfw::util::config::Config;
+
+fn main() {
+    println!("== paper_figures (scaled-down; full runs via `apbcfw exp`) ==");
+    let mut cfg = Config::new();
+    // Shrink everything so each figure is seconds, not minutes.
+    for (k, v) in [
+        ("run.results_dir", "results/bench"),
+        // fig1a: small SSVM instance
+        ("fig1a.n", "150"),
+        ("fig1a.k", "10"),
+        ("fig1a.d", "32"),
+        ("fig1a.ell", "5"),
+        ("fig1a.taus", "1, 4, 16"),
+        ("fig1a.thresholds", "0.1, 0.02"),
+        ("fig1a.max_epochs", "60"),
+        ("fig1a.fstar_epochs", "120"),
+        // fig1b: paper-size already small
+        ("fig1b.taus", "1, 8, 32"),
+        ("fig1b.fstar_epochs", "3000"),
+        // fig2: short wall-clock budgets
+        ("fig2a.n", "200"),
+        ("fig2a.k", "10"),
+        ("fig2a.d", "32"),
+        ("fig2a.ell", "5"),
+        ("fig2a.workers", "4"),
+        ("fig2a.tau_multiples", "1, 3"),
+        ("fig2a.max_secs", "6"),
+        ("fig2a.fstar_epochs", "150"),
+        ("fig2b.n", "200"),
+        ("fig2b.k", "10"),
+        ("fig2b.d", "32"),
+        ("fig2b.ell", "5"),
+        ("fig2b.workers", "1, 2, 4"),
+        ("fig2b.tau_multiples", "1, 2"),
+        ("fig2b.max_secs", "6"),
+        ("fig2b.fstar_epochs", "150"),
+        ("fig2c.n", "200"),
+        ("fig2c.k", "10"),
+        ("fig2c.d", "32"),
+        ("fig2c.ell", "5"),
+        ("fig2c.workers", "1, 2, 4"),
+        ("fig2c.tau_multiples", "1, 2"),
+        ("fig2c.max_secs", "6"),
+        ("fig2c.fstar_epochs", "150"),
+        ("fig2d.n", "120"),
+        ("fig2d.k", "8"),
+        ("fig2d.d", "24"),
+        ("fig2d.ell", "5"),
+        ("fig2d.workers", "1, 2, 4"),
+        ("fig2d.tau_multiples", "1, 2"),
+        ("fig2d.max_secs", "8"),
+        ("fig2d.fstar_epochs", "150"),
+        // fig3: fewer passes / workers
+        ("fig3a.n", "150"),
+        ("fig3a.k", "8"),
+        ("fig3a.d", "24"),
+        ("fig3a.ell", "5"),
+        ("fig3a.workers", "4"),
+        ("fig3a.tau", "4"),
+        ("fig3a.passes", "4"),
+        ("fig3a.probs", "1.0, 0.5, 0.25"),
+        ("fig3b.n", "150"),
+        ("fig3b.k", "8"),
+        ("fig3b.d", "24"),
+        ("fig3b.ell", "5"),
+        ("fig3b.workers", "4"),
+        ("fig3b.tau", "4"),
+        ("fig3b.passes", "4"),
+        ("fig3b.thetas", "1.0, 0.5, 0.2"),
+        // fig4: fewer kappas / reps
+        ("fig4.kappas", "0, 5, 15"),
+        ("fig4.reps", "2"),
+        // fig5 default is fine but shorten
+        ("fig5.epochs", "800"),
+        // ex1 small
+        ("ex1.n", "300"),
+        ("ex1.taus", "1, 5, 10, 40"),
+        ("ex1.max_epochs", "150"),
+        // ex2 small
+        ("ex2.taus", "1, 4, 8"),
+        ("ex2.subsets", "3"),
+        ("ex2.samples", "8"),
+        // d4 small
+        ("d4.n", "32"),
+        ("d4.taus", "1, 4, 8"),
+        ("d4.max_epochs", "800"),
+        // prop1 small
+        ("prop1.reps", "500"),
+    ] {
+        cfg.set(k, v);
+    }
+    let t0 = std::time::Instant::now();
+    for id in experiments::ALL {
+        println!("\n---- {id} ----");
+        let t = std::time::Instant::now();
+        if let Err(e) = experiments::run(id, &cfg) {
+            println!("{id} FAILED: {e:#}");
+            std::process::exit(1);
+        }
+        println!("[{id} done in {:.1}s]", t.elapsed().as_secs_f64());
+    }
+    println!(
+        "\nall {} paper figures regenerated in {:.1}s",
+        experiments::ALL.len(),
+        t0.elapsed().as_secs_f64()
+    );
+}

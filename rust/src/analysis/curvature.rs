@@ -1,0 +1,197 @@
+//! Curvature estimation (paper Eq. 4-5, Theorem 3, Examples 1-3).
+//!
+//! The set curvature `C_f^(S)` is a sup over feasible x, oracle-vertex s and
+//! gamma in [0,1]; we lower-bound it empirically by sampling all three, and
+//! compare against the paper's closed-form Theorem-3 upper bound
+//! `C_f^tau <= 4(tau B + tau (tau-1) mu)` using exact B/mu where available
+//! (SimplexQp) or the paper's analytic bounds (GFL: B <= 2 lam^2 d,
+//! mu <= lam^2 d).
+
+use crate::problems::{ApplyOptions, Problem};
+use crate::util::rng::Pcg64;
+
+/// Theorem 3 bound: C_f^tau <= 4 (tau B + tau (tau - 1) mu).
+pub fn theorem3_bound(tau: usize, b: f64, mu: f64) -> f64 {
+    let t = tau as f64;
+    4.0 * (t * b + t * (t - 1.0) * mu)
+}
+
+/// Paper Example 2 analytic parameters for GFL: (B, mu) = (2 lam^2 d, lam^2 d).
+pub fn gfl_bounds(lam: f64, d: usize) -> (f64, f64) {
+    (2.0 * lam * lam * d as f64, lam * lam * d as f64)
+}
+
+/// Paper Example 3 (worst case) structural SVM: B, mu <= R^2/(lam n^2).
+pub fn ssvm_worstcase_bounds(r: f64, lam: f64, n: usize) -> (f64, f64) {
+    let b = r * r / (lam * (n * n) as f64);
+    (b, b)
+}
+
+/// Sample a random feasible point by a short randomized FW walk from init.
+fn random_feasible<P: Problem<ServerState = ()>>(
+    p: &P,
+    steps: usize,
+    rng: &mut Pcg64,
+) -> Vec<f32> {
+    let mut x = p.init_param();
+    let n = p.num_blocks();
+    for _ in 0..steps {
+        let i = rng.below(n);
+        // Random vertex: the oracle at a randomly perturbed point gives a
+        // (data-dependent) extreme point; stepping with random gamma keeps
+        // x a convex combination of extreme points -> feasible.
+        let o = p.oracle(&x, i);
+        let gamma = rng.uniform() as f32;
+        p.apply(
+            &mut (),
+            &mut x,
+            &[o],
+            ApplyOptions {
+                gamma,
+                line_search: false,
+            },
+        );
+    }
+    x
+}
+
+/// Empirical lower bound on C_f^(S) for a fixed block set S.
+///
+/// Samples (x, s_(S), gamma) triples and evaluates the curvature quotient
+/// `2/gamma^2 [ f(y) - f(x) - gamma <s_S - x_S, grad_S f(x)> ]` where the
+/// inner product is taken from the finite-difference directional derivative.
+pub fn estimate_set_curvature<P: Problem<ServerState = ()>>(
+    p: &P,
+    blocks: &[usize],
+    samples: usize,
+    rng: &mut Pcg64,
+) -> f64 {
+    let mut best = 0.0f64;
+    for _ in 0..samples {
+        let x = random_feasible(p, 8, rng);
+        // s: oracle vertices at an independent random point (so s is a
+        // generic vertex of M_S, not the descent direction at x).
+        let xprobe = random_feasible(p, 4, rng);
+        let batch: Vec<_> =
+            blocks.iter().map(|&i| p.oracle(&xprobe, i)).collect();
+        let gamma = 0.05 + 0.95 * rng.uniform();
+        // y = x + gamma (s_[S] - x_[S]) via apply on a copy.
+        let mut y = x.clone();
+        p.apply(
+            &mut (),
+            &mut y,
+            &batch,
+            ApplyOptions {
+                gamma: gamma as f32,
+                line_search: false,
+            },
+        );
+        let fx = p.objective_from(&x, 0.0);
+        let fy = p.objective_from(&y, 0.0);
+        // directional derivative along (y - x) at x, via central difference
+        let eps = 1e-4f64;
+        let dir: Vec<f32> = y.iter().zip(x.iter()).map(|(a, b)| a - b).collect();
+        let mut xp = x.clone();
+        let mut xm = x.clone();
+        for ((p1, m1), dv) in xp.iter_mut().zip(xm.iter_mut()).zip(dir.iter()) {
+            *p1 += eps as f32 * dv;
+            *m1 -= eps as f32 * dv;
+        }
+        let dd = (p.objective_from(&xp, 0.0) - p.objective_from(&xm, 0.0))
+            / (2.0 * eps);
+        let quotient = 2.0 / (gamma * gamma) * (fy - fx - dd);
+        if quotient.is_finite() && quotient > best {
+            best = quotient;
+        }
+    }
+    best
+}
+
+/// Empirical estimate of the expected set curvature C_f^tau: mean of the
+/// per-subset estimates over uniformly drawn subsets of size tau.
+pub fn estimate_expected_curvature<P: Problem<ServerState = ()>>(
+    p: &P,
+    tau: usize,
+    subsets: usize,
+    samples_per_subset: usize,
+    rng: &mut Pcg64,
+) -> f64 {
+    let n = p.num_blocks();
+    let mut acc = 0.0f64;
+    for _ in 0..subsets {
+        let s = rng.subset(n, tau.min(n));
+        acc += estimate_set_curvature(p, &s, samples_per_subset, rng);
+    }
+    acc / subsets as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::problems::gfl::Gfl;
+    use crate::problems::simplex_qp::SimplexQp;
+
+    #[test]
+    fn theorem3_bound_shapes() {
+        // mu = 0: linear in tau.
+        let b = 3.0;
+        assert_eq!(theorem3_bound(1, b, 0.0), 12.0);
+        assert_eq!(theorem3_bound(4, b, 0.0), 48.0);
+        // mu > 0: superlinear.
+        let with_mu: Vec<f64> =
+            (1..=4).map(|t| theorem3_bound(t, 1.0, 1.0)).collect();
+        assert!(with_mu[3] > 4.0 * with_mu[0]);
+    }
+
+    #[test]
+    fn empirical_curvature_below_theorem3_bound_qp() {
+        let qp = SimplexQp::random(10, 4, 1.0, 0.5, 3, 21);
+        let mut rng = Pcg64::seeded(22);
+        // exact B and mu from the instance
+        let n = qp.n;
+        let b: f64 =
+            (0..n).map(|i| qp.boundedness(i)).sum::<f64>() / n as f64;
+        let mut mu_acc = 0.0;
+        let mut cnt = 0usize;
+        for i in 0..n {
+            for j in 0..n {
+                if i != j {
+                    mu_acc += qp.incoherence(i, j);
+                    cnt += 1;
+                }
+            }
+        }
+        let mu = mu_acc / cnt as f64;
+        for tau in [1usize, 3, 6] {
+            let est = estimate_expected_curvature(&qp, tau, 4, 12, &mut rng);
+            let bound = theorem3_bound(tau, b, mu.max(0.0));
+            assert!(
+                est <= bound + 1e-6,
+                "tau={tau}: est {est} > bound {bound}"
+            );
+            assert!(est >= 0.0);
+        }
+    }
+
+    #[test]
+    fn gfl_curvature_scales_linearly_in_tau() {
+        // Example 2: C_f^tau <= 4 tau lam^2 d — linear in tau. Check the
+        // empirical estimate respects the bound.
+        let mut rng = Pcg64::seeded(23);
+        let (d, n, lam) = (4, 24, 0.5);
+        let y = rng.gaussian_vec(d * n);
+        let gfl = Gfl::new(d, n, lam, y);
+        let (b, mu) = gfl_bounds(lam, d);
+        assert_eq!(b, 2.0 * lam * lam * d as f64);
+        for tau in [1usize, 4] {
+            let est = estimate_expected_curvature(&gfl, tau, 3, 10, &mut rng);
+            // paper Example 2 final bound: 4 tau lam^2 d
+            let bound = 4.0 * tau as f64 * lam * lam * d as f64;
+            assert!(
+                est <= bound + 1e-6,
+                "tau={tau}: est {est} > {bound}"
+            );
+            let _ = mu;
+        }
+    }
+}

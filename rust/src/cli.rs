@@ -1,0 +1,249 @@
+//! Command-line interface for the `apbcfw` launcher.
+//!
+//! Hand-rolled parser (no clap in the offline vendor set). Grammar:
+//!
+//! ```text
+//! apbcfw exp <id|all> [--config FILE] [--set sect.key=val ...]
+//! apbcfw solve <gfl|ssvm|multiclass|qp> [--mode seq|async|sync|lockfree]
+//!        [--tau N] [--workers N] [--epochs F] [--line-search]
+//!        [--config FILE] [--set sect.key=val ...]
+//! apbcfw artifacts-check [--dir DIR]
+//! apbcfw info
+//! ```
+
+use crate::util::config::Config;
+use anyhow::{anyhow, bail, Result};
+
+/// Parsed top-level command.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Command {
+    /// Run a paper experiment by id.
+    Exp { id: String },
+    /// Run a single solve and print a summary.
+    Solve {
+        problem: String,
+        mode: String,
+        tau: usize,
+        workers: usize,
+        epochs: f64,
+        line_search: bool,
+    },
+    /// Load and compile every artifact in the manifest.
+    ArtifactsCheck { dir: String },
+    /// Print build/environment info.
+    Info,
+    /// Print usage.
+    Help,
+}
+
+/// Full parse result: command + layered config.
+#[derive(Debug)]
+pub struct Cli {
+    pub command: Command,
+    pub config: Config,
+}
+
+/// Parse argv (excluding the binary name).
+pub fn parse(args: &[String]) -> Result<Cli> {
+    let mut config = Config::new();
+    if args.is_empty() {
+        return Ok(Cli {
+            command: Command::Help,
+            config,
+        });
+    }
+    let sub = args[0].as_str();
+    let rest = &args[1..];
+
+    // Common flags: --config FILE and --set k=v (repeatable) anywhere.
+    let mut positional: Vec<&str> = Vec::new();
+    let mut flags: Vec<(&str, Option<&str>)> = Vec::new();
+    let mut i = 0usize;
+    while i < rest.len() {
+        let a = rest[i].as_str();
+        if let Some(name) = a.strip_prefix("--") {
+            let takes_value = matches!(
+                name,
+                "config" | "set" | "dir" | "mode" | "tau" | "workers"
+                    | "epochs"
+            );
+            if takes_value {
+                let v = rest
+                    .get(i + 1)
+                    .ok_or_else(|| anyhow!("--{name} needs a value"))?;
+                flags.push((name, Some(v.as_str())));
+                i += 2;
+            } else {
+                flags.push((name, None));
+                i += 1;
+            }
+        } else {
+            positional.push(a);
+            i += 1;
+        }
+    }
+    for (name, value) in &flags {
+        match *name {
+            "config" => {
+                let path = value.unwrap();
+                config.merge_str(&std::fs::read_to_string(path)?)
+                    .map_err(|e| anyhow!("{path}: {e}"))?;
+            }
+            "set" => {
+                let kv = value.unwrap();
+                let (k, v) = kv
+                    .split_once('=')
+                    .ok_or_else(|| anyhow!("--set expects key=value"))?;
+                config.set(k.trim(), v.trim());
+            }
+            _ => {}
+        }
+    }
+    let flag_val = |name: &str| -> Option<&str> {
+        flags
+            .iter()
+            .rev()
+            .find(|(n, _)| *n == name)
+            .and_then(|(_, v)| *v)
+    };
+    let has_flag = |name: &str| flags.iter().any(|(n, _)| *n == name);
+
+    let command = match sub {
+        "exp" => {
+            let id = positional
+                .first()
+                .ok_or_else(|| anyhow!("exp: missing experiment id"))?;
+            Command::Exp { id: id.to_string() }
+        }
+        "solve" => {
+            let problem = positional
+                .first()
+                .ok_or_else(|| anyhow!("solve: missing problem name"))?
+                .to_string();
+            if !["gfl", "ssvm", "multiclass", "qp"].contains(&problem.as_str())
+            {
+                bail!("solve: unknown problem {problem:?}");
+            }
+            let mode =
+                flag_val("mode").unwrap_or("seq").to_string();
+            if !["seq", "async", "sync", "lockfree"].contains(&mode.as_str())
+            {
+                bail!("solve: unknown mode {mode:?}");
+            }
+            Command::Solve {
+                problem,
+                mode,
+                tau: flag_val("tau")
+                    .map(|v| v.parse())
+                    .transpose()?
+                    .unwrap_or(1),
+                workers: flag_val("workers")
+                    .map(|v| v.parse())
+                    .transpose()?
+                    .unwrap_or(2),
+                epochs: flag_val("epochs")
+                    .map(|v| v.parse())
+                    .transpose()?
+                    .unwrap_or(50.0),
+                line_search: has_flag("line-search"),
+            }
+        }
+        "artifacts-check" => Command::ArtifactsCheck {
+            dir: flag_val("dir").unwrap_or("artifacts").to_string(),
+        },
+        "info" => Command::Info,
+        "help" | "--help" | "-h" => Command::Help,
+        other => bail!("unknown command {other:?} (try `apbcfw help`)"),
+    };
+    Ok(Cli { command, config })
+}
+
+/// Usage text.
+pub const USAGE: &str = "\
+apbcfw — Asynchronous Parallel Block-Coordinate Frank-Wolfe (ICML 2016 repro)
+
+USAGE:
+  apbcfw exp <id|all> [--config FILE] [--set sect.key=val ...]
+      ids: fig1a fig1b fig2a fig2b fig2c fig2d fig3a fig3b fig4 fig5
+           ex1 ex2 d4 prop1
+  apbcfw solve <gfl|ssvm|multiclass|qp> [--mode seq|async|sync|lockfree]
+         [--tau N] [--workers N] [--epochs F] [--line-search]
+  apbcfw artifacts-check [--dir DIR]
+  apbcfw info
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(args: &[&str]) -> Vec<String> {
+        args.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_exp() {
+        let cli = parse(&sv(&["exp", "fig1a"])).unwrap();
+        assert_eq!(
+            cli.command,
+            Command::Exp {
+                id: "fig1a".into()
+            }
+        );
+    }
+
+    #[test]
+    fn parses_solve_with_flags() {
+        let cli = parse(&sv(&[
+            "solve",
+            "gfl",
+            "--mode",
+            "async",
+            "--tau",
+            "8",
+            "--workers",
+            "4",
+            "--line-search",
+        ]))
+        .unwrap();
+        match cli.command {
+            Command::Solve {
+                problem,
+                mode,
+                tau,
+                workers,
+                line_search,
+                ..
+            } => {
+                assert_eq!(problem, "gfl");
+                assert_eq!(mode, "async");
+                assert_eq!(tau, 8);
+                assert_eq!(workers, 4);
+                assert!(line_search);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn set_overrides_config() {
+        let cli =
+            parse(&sv(&["exp", "fig4", "--set", "fig4.kappas=0,5"])).unwrap();
+        assert_eq!(
+            cli.config.get_f64_list("fig4.kappas", &[]),
+            vec![0.0, 5.0]
+        );
+    }
+
+    #[test]
+    fn rejects_unknown_command_and_problem() {
+        assert!(parse(&sv(&["frobnicate"])).is_err());
+        assert!(parse(&sv(&["solve", "nosuch"])).is_err());
+        assert!(parse(&sv(&["solve", "gfl", "--mode", "warp"])).is_err());
+    }
+
+    #[test]
+    fn empty_is_help() {
+        let cli = parse(&[]).unwrap();
+        assert_eq!(cli.command, Command::Help);
+    }
+}

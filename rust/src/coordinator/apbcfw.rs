@@ -1,0 +1,317 @@
+//! AP-BCFW: the asynchronous parallel server/worker runtime
+//! (paper Algorithm 1 — distributed form — and Algorithm 2 — shared
+//! memory; here worker threads + a server thread over a shared parameter).
+//!
+//! Workers loop: snapshot the shared parameter (lock-free, possibly mid-
+//! publish — the delayed/inconsistent-read regime of §2.3), pick a block
+//! uniformly, solve the linear subproblem, and push the update. The server
+//! assembles tau disjoint blocks (collision-overwrite), applies them with
+//! the paper's step size (or exact line search), publishes, and repeats.
+//! No thread ever waits for a straggler.
+
+use super::buffer::BatchAssembler;
+use super::shared::SharedParam;
+use super::{RunConfig, RunResult, UpdateMsg};
+use crate::problems::{ApplyOptions, Problem};
+use crate::solver::{schedule_gamma, WeightedAverage};
+use crate::util::metrics::{Counters, Sample, Stopwatch, Trace};
+use crate::util::rng::Pcg64;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc;
+use std::time::Duration;
+
+/// Run asynchronous AP-BCFW with `cfg.workers` worker threads.
+pub fn run<P: Problem>(problem: &P, cfg: &RunConfig) -> RunResult {
+    assert_eq!(
+        cfg.straggler.probs.len(),
+        cfg.workers,
+        "straggler model arity must match worker count"
+    );
+    let n = problem.num_blocks();
+    let tau = cfg.tau.clamp(1, n);
+    let mut master = problem.init_param();
+    let mut state = problem.init_server();
+    let shared = SharedParam::new(&master);
+    let stop = AtomicBool::new(false);
+    let counters = Counters::new();
+    // Bounded queue: workers block when the server falls behind. This is
+    // the system's backpressure — without it fast workers would race
+    // arbitrarily far ahead of the server and every update would exceed
+    // the k/2 staleness rule (all work wasted). A real deployment gets the
+    // same effect from its network/receive buffer.
+    let queue_cap = (cfg.queue_factor.max(1) * tau).max(2 * cfg.workers);
+    let (tx, rx) = mpsc::sync_channel::<UpdateMsg>(queue_cap);
+    let watch = Stopwatch::start();
+
+    let mut trace = Trace::default();
+    let mut avg: Option<WeightedAverage> = None; // reserved for parity
+    let mut gap_estimate = f64::INFINITY;
+    let mut k: u64 = 0;
+    let mut asm = BatchAssembler::new();
+
+    std::thread::scope(|scope| {
+        // ---------------- workers ----------------
+        for w in 0..cfg.workers {
+            let tx = tx.clone();
+            let shared = &shared;
+            let stop = &stop;
+            let counters = &counters;
+            let straggler = cfg.straggler.clone();
+            let (lo, hi) = cfg.work_multiplier;
+            let seed = cfg.seed;
+            scope.spawn(move || {
+                let mut rng = Pcg64::new(seed, 1000 + w as u64);
+                let mut snapshot: Vec<f32> = Vec::new();
+                // Re-read the shared parameter only when the server has
+                // published a new version — between publishes the snapshot
+                // is bit-identical, and the O(dim) atomic read was the
+                // dominant per-oracle cost for cheap oracles (§Perf).
+                let mut snap_version = u64::MAX;
+                while !stop.load(Ordering::Acquire) {
+                    let k_read = shared.version();
+                    if k_read != snap_version || snapshot.is_empty() {
+                        shared.read(&mut snapshot);
+                        snap_version = k_read;
+                    }
+                    let i = rng.below(n);
+                    // Harder-subproblem simulation (Fig 2d): redo the solve
+                    // m ~ Uniform(lo, hi) times; only the last one counts.
+                    let reps = if hi > lo {
+                        lo + rng.below((hi - lo + 1) as usize) as u32
+                    } else {
+                        lo
+                    };
+                    let mut oracle = problem.oracle(&snapshot, i);
+                    for _ in 1..reps {
+                        oracle = problem.oracle(&snapshot, i);
+                    }
+                    Counters::bump(&counters.oracle_calls);
+                    if !straggler.reports(w, &mut rng) {
+                        Counters::bump(&counters.dropped);
+                        continue;
+                    }
+                    if tx
+                        .send(UpdateMsg {
+                            oracle,
+                            k_read,
+                            worker: w,
+                        })
+                        .is_err()
+                    {
+                        break;
+                    }
+                }
+            });
+        }
+        drop(tx);
+
+        // ---------------- server ----------------
+        'serve: loop {
+            match rx.recv_timeout(Duration::from_millis(2)) {
+                Ok(msg) => {
+                    // Staleness rule (paper Thm 4): drop if delay > k/2.
+                    let delay = k.saturating_sub(msg.k_read);
+                    if cfg.staleness_rule && 2 * delay > k && delay > 0 {
+                        Counters::bump(&counters.dropped);
+                    } else if cfg.collision_overwrite {
+                        asm.insert(msg);
+                    } else {
+                        asm.insert_keep_old(msg);
+                    }
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => {}
+                Err(mpsc::RecvTimeoutError::Disconnected) => break 'serve,
+            }
+
+            while let Some(batch_msgs) = asm.take_batch(tau) {
+                let batch: Vec<_> =
+                    batch_msgs.into_iter().map(|m| m.oracle).collect();
+                let gamma = schedule_gamma(n, tau, k);
+                let info = problem.apply(
+                    &mut state,
+                    &mut master,
+                    &batch,
+                    ApplyOptions {
+                        gamma,
+                        line_search: cfg.line_search,
+                    },
+                );
+                k += 1;
+                // Publish only the dirty ranges when the problem can name
+                // them (GFL/QP: tau block slices instead of the whole
+                // parameter); SSVM updates w densely -> full publish.
+                match problem.touched_ranges(&batch) {
+                    Some(ranges) => {
+                        for r in ranges {
+                            shared.publish_range(r.start, &master[r]);
+                        }
+                        shared.bump_version();
+                    }
+                    None => shared.publish(&master, k),
+                }
+                Counters::add(&counters.updates_applied, tau as u64);
+                counters.iterations.store(k, Ordering::Relaxed);
+                if let Some(a) = &mut avg {
+                    a.update(&master, problem.aux(&state));
+                }
+                let inst = info.batch_gap * n as f64 / tau as f64;
+                gap_estimate = if gap_estimate.is_finite() {
+                    0.8 * gap_estimate + 0.2 * inst
+                } else {
+                    inst
+                };
+
+                if k % cfg.sample_every as u64 == 0 {
+                    let objective = problem.objective(&state, &master);
+                    let gap = if cfg.exact_gap {
+                        problem.full_gap(&state, &master)
+                    } else {
+                        gap_estimate
+                    };
+                    let snap = counters.snapshot();
+                    trace.push(Sample {
+                        iter: k as usize,
+                        oracle_calls: snap.oracle_calls,
+                        elapsed_s: watch.elapsed_s(),
+                        objective,
+                        gap,
+                    });
+                    let epochs = snap.oracle_calls as f64 / n as f64;
+                    if cfg.stop.target_met(objective, gap)
+                        || cfg.stop.exhausted(epochs, watch.elapsed_s())
+                    {
+                        break 'serve;
+                    }
+                }
+            }
+
+            // Budget check even while starved of updates.
+            let snap = counters.snapshot();
+            let epochs = snap.oracle_calls as f64 / n as f64;
+            if cfg.stop.exhausted(epochs, watch.elapsed_s()) {
+                break 'serve;
+            }
+        }
+        stop.store(true, Ordering::Release);
+        // Drop the receiver: workers blocked on a full queue get a send
+        // error and exit; anyone mid-loop sees the stop flag.
+        drop(rx);
+    });
+
+    // Fold buffered collisions into the counter snapshot.
+    Counters::add(&counters.collisions, asm.collisions());
+    let mut snap = counters.snapshot();
+    snap.iterations = k;
+    let elapsed_s = watch.elapsed_s();
+    let passes = snap.updates_applied as f64 / n as f64;
+    let secs_per_pass = if passes > 0.0 {
+        elapsed_s / passes
+    } else {
+        f64::INFINITY
+    };
+
+    // Final sample for completeness.
+    let objective = problem.objective(&state, &master);
+    let gap = if cfg.exact_gap {
+        problem.full_gap(&state, &master)
+    } else {
+        gap_estimate
+    };
+    trace.push(Sample {
+        iter: k as usize,
+        oracle_calls: snap.oracle_calls,
+        elapsed_s,
+        objective,
+        gap,
+    });
+
+    RunResult {
+        trace,
+        param: master,
+        counters: snap,
+        elapsed_s,
+        secs_per_pass,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::problems::gfl::Gfl;
+    use crate::sim::straggler::StragglerModel;
+    use crate::solver::StopCond;
+    use crate::util::rng::Pcg64;
+
+    fn gfl_instance() -> Gfl {
+        let mut rng = Pcg64::seeded(77);
+        let (d, n) = (6, 40);
+        let y = rng.gaussian_vec(d * n);
+        Gfl::new(d, n, 0.2, y)
+    }
+
+    fn cfg(workers: usize, tau: usize) -> RunConfig {
+        RunConfig {
+            workers,
+            tau,
+            straggler: StragglerModel::none(workers),
+            sample_every: 16,
+            exact_gap: true,
+            stop: StopCond {
+                eps_gap: Some(0.05),
+                max_epochs: 5000.0,
+                max_secs: 30.0,
+                ..Default::default()
+            },
+            seed: 5,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn async_run_converges_gfl() {
+        let p = gfl_instance();
+        let r = run(&p, &cfg(3, 4));
+        let last = r.trace.last().unwrap();
+        assert!(last.gap <= 0.05, "gap={}", last.gap);
+        assert!(r.counters.updates_applied > 0);
+        // feasibility of the final iterate
+        for t in 0..p.m {
+            let nrm = crate::util::la::norm2(&r.param[t * p.d..(t + 1) * p.d]);
+            assert!(nrm <= p.lam + 1e-5);
+        }
+    }
+
+    #[test]
+    fn straggler_does_not_block_convergence() {
+        let p = gfl_instance();
+        let mut c = cfg(4, 4);
+        c.straggler = StragglerModel::single(4, 0.2);
+        let r = run(&p, &c);
+        assert!(r.trace.last().unwrap().gap <= 0.05);
+        assert!(r.counters.dropped > 0, "straggler must drop updates");
+    }
+
+    #[test]
+    fn single_worker_tau1_matches_bcfw_quality() {
+        let p = gfl_instance();
+        let mut c = cfg(1, 1);
+        c.stop.eps_gap = Some(0.05);
+        let r = run(&p, &c);
+        assert!(r.trace.last().unwrap().gap <= 0.05);
+    }
+
+    #[test]
+    fn respects_time_budget() {
+        let p = gfl_instance();
+        let mut c = cfg(2, 2);
+        c.stop = StopCond {
+            eps_gap: Some(0.0), // unreachable
+            max_epochs: f64::INFINITY,
+            max_secs: 0.3,
+            ..Default::default()
+        };
+        let t0 = std::time::Instant::now();
+        let _ = run(&p, &c);
+        assert!(t0.elapsed().as_secs_f64() < 5.0);
+    }
+}

@@ -1,0 +1,148 @@
+//! Server-side update buffer: Algorithm 1, step 1.
+//!
+//! "Read from buffer until it has updates for tau disjoint blocks
+//! (overwrite in case of collision)." The assembler ingests worker updates
+//! one at a time; a second update for a block already pending *replaces* it
+//! (it was computed from a fresher parameter), counting a collision. When
+//! tau distinct blocks are pending, `take_batch` drains them.
+
+use super::UpdateMsg;
+use std::collections::HashMap;
+
+/// Disjoint-block batch assembler with collision-overwrite semantics.
+#[derive(Default)]
+pub struct BatchAssembler {
+    pending: HashMap<usize, UpdateMsg>,
+    collisions: u64,
+}
+
+impl BatchAssembler {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Ingest one update. Returns true if it overwrote a pending one.
+    pub fn insert(&mut self, msg: UpdateMsg) -> bool {
+        let collided = self
+            .pending
+            .insert(msg.oracle.block, msg)
+            .is_some();
+        if collided {
+            self.collisions += 1;
+        }
+        collided
+    }
+
+    /// Ablation variant: on collision keep the OLD pending update instead
+    /// of the fresher one. Returns true if the new update was discarded.
+    pub fn insert_keep_old(&mut self, msg: UpdateMsg) -> bool {
+        use std::collections::hash_map::Entry;
+        match self.pending.entry(msg.oracle.block) {
+            Entry::Occupied(_) => {
+                self.collisions += 1;
+                true
+            }
+            Entry::Vacant(v) => {
+                v.insert(msg);
+                false
+            }
+        }
+    }
+
+    /// Number of distinct blocks pending.
+    pub fn len(&self) -> usize {
+        self.pending.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pending.is_empty()
+    }
+
+    /// Total collisions observed so far.
+    pub fn collisions(&self) -> u64 {
+        self.collisions
+    }
+
+    /// If at least `tau` distinct blocks are pending, drain and return
+    /// exactly the pending set (which is disjoint by construction).
+    pub fn take_batch(&mut self, tau: usize) -> Option<Vec<UpdateMsg>> {
+        if self.pending.len() < tau {
+            return None;
+        }
+        Some(self.pending.drain().map(|(_, m)| m).collect())
+    }
+
+    /// Drop every pending update (used on shutdown).
+    pub fn clear(&mut self) {
+        self.pending.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::problems::BlockOracle;
+
+    fn msg(block: usize, k_read: u64) -> UpdateMsg {
+        UpdateMsg {
+            oracle: BlockOracle {
+                block,
+                s: vec![k_read as f32],
+                ls: 0.0,
+            },
+            k_read,
+            worker: 0,
+        }
+    }
+
+    #[test]
+    fn assembles_disjoint_batches() {
+        let mut asm = BatchAssembler::new();
+        asm.insert(msg(1, 0));
+        asm.insert(msg(2, 0));
+        assert!(asm.take_batch(3).is_none());
+        asm.insert(msg(3, 0));
+        let batch = asm.take_batch(3).unwrap();
+        assert_eq!(batch.len(), 3);
+        let mut blocks: Vec<usize> =
+            batch.iter().map(|m| m.oracle.block).collect();
+        blocks.sort_unstable();
+        assert_eq!(blocks, vec![1, 2, 3]);
+        assert!(asm.is_empty());
+    }
+
+    #[test]
+    fn collision_overwrites_with_fresher_update() {
+        let mut asm = BatchAssembler::new();
+        assert!(!asm.insert(msg(5, 1)));
+        assert!(asm.insert(msg(5, 9))); // collision
+        assert_eq!(asm.collisions(), 1);
+        assert_eq!(asm.len(), 1);
+        let batch = asm.take_batch(1).unwrap();
+        assert_eq!(batch[0].k_read, 9, "must keep the fresher update");
+    }
+
+    #[test]
+    fn batch_never_contains_duplicate_blocks() {
+        let mut asm = BatchAssembler::new();
+        for i in 0..100 {
+            asm.insert(msg(i % 10, i as u64));
+        }
+        let batch = asm.take_batch(10).unwrap();
+        let mut blocks: Vec<usize> =
+            batch.iter().map(|m| m.oracle.block).collect();
+        blocks.sort_unstable();
+        blocks.dedup();
+        assert_eq!(blocks.len(), 10);
+        assert_eq!(asm.collisions(), 90);
+    }
+
+    #[test]
+    fn clear_empties() {
+        let mut asm = BatchAssembler::new();
+        asm.insert(msg(1, 0));
+        asm.clear();
+        assert!(asm.is_empty());
+        assert!(asm.take_batch(1).is_none());
+    }
+}

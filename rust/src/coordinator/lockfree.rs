@@ -1,0 +1,192 @@
+//! Lock-free serverless AP-BCFW at tau = 1 (paper Algorithm 3).
+//!
+//! No server: every thread repeatedly picks a block, solves the subproblem
+//! against a lock-free snapshot of the shared parameter, reads the global
+//! counter for its step size gamma = 2n/(k+2n), and atomically adds the
+//! delta gamma (s_i - x_i) into the shared block — Hogwild-style. Restricted
+//! to parameter-space problems (`ServerState = ()`) with block-addressable
+//! payloads ([`ProjectableProblem`] supplies `block_range`).
+
+use super::shared::SharedParam;
+use super::{RunConfig, RunResult};
+use crate::problems::ProjectableProblem;
+use crate::util::metrics::{Counters, Sample, Stopwatch, Trace};
+use crate::util::rng::Pcg64;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+
+/// Run the lock-free variant. `cfg.tau` is ignored (always 1).
+pub fn run<P>(problem: &P, cfg: &RunConfig) -> RunResult
+where
+    P: ProjectableProblem<ServerState = ()>,
+{
+    let n = problem.num_blocks();
+    let shared = SharedParam::new(&problem.init_param());
+    let counter = AtomicU64::new(0);
+    let stop = AtomicBool::new(false);
+    let counters = Counters::new();
+    let watch = Stopwatch::start();
+    let mut trace = Trace::default();
+
+    std::thread::scope(|scope| {
+        for w in 0..cfg.workers {
+            let shared = &shared;
+            let counter = &counter;
+            let stop = &stop;
+            let counters = &counters;
+            let seed = cfg.seed;
+            scope.spawn(move || {
+                let mut rng = Pcg64::new(seed, 3000 + w as u64);
+                let mut snapshot: Vec<f32> = Vec::new();
+                while !stop.load(Ordering::Acquire) {
+                    let i = rng.below(n);
+                    shared.read(&mut snapshot);
+                    let o = problem.oracle(&snapshot, i);
+                    Counters::bump(&counters.oracle_calls);
+                    let k = counter.load(Ordering::Relaxed);
+                    let gamma = 2.0 * n as f32
+                        / (k as f32 + 2.0 * n as f32);
+                    let range = problem.block_range(i);
+                    for (j, idx) in range.enumerate() {
+                        let delta = gamma * (o.s[j] - snapshot[idx]);
+                        shared.fetch_add_f32(idx, delta);
+                    }
+                    counter.fetch_add(1, Ordering::Relaxed);
+                    Counters::bump(&counters.updates_applied);
+                }
+            });
+        }
+
+        // Monitor thread (this thread): sample + stop conditions.
+        let mut last_sampled: u64 = 0;
+        loop {
+            std::thread::sleep(std::time::Duration::from_millis(2));
+            let k = counter.load(Ordering::Relaxed);
+            if k >= last_sampled + cfg.sample_every as u64 {
+                last_sampled = k;
+                let param = shared.read_vec();
+                let objective = problem.objective_from(&param, 0.0);
+                let gap = if cfg.exact_gap {
+                    problem.full_gap(&(), &param)
+                } else {
+                    f64::NAN
+                };
+                let snap = counters.snapshot();
+                trace.push(Sample {
+                    iter: k as usize,
+                    oracle_calls: snap.oracle_calls,
+                    elapsed_s: watch.elapsed_s(),
+                    objective,
+                    gap,
+                });
+                let epochs = snap.oracle_calls as f64 / n as f64;
+                if cfg.stop.target_met(objective, gap)
+                    || cfg.stop.exhausted(epochs, watch.elapsed_s())
+                {
+                    break;
+                }
+            }
+            let snap = counters.snapshot();
+            if cfg
+                .stop
+                .exhausted(snap.oracle_calls as f64 / n as f64, watch.elapsed_s())
+            {
+                break;
+            }
+        }
+        stop.store(true, Ordering::Release);
+    });
+
+    let mut snap = counters.snapshot();
+    snap.iterations = counter.load(Ordering::Relaxed);
+    let elapsed_s = watch.elapsed_s();
+    let passes = snap.updates_applied as f64 / n as f64;
+    let secs_per_pass = if passes > 0.0 {
+        elapsed_s / passes
+    } else {
+        f64::INFINITY
+    };
+    let param = shared.read_vec();
+    let objective = problem.objective_from(&param, 0.0);
+    let gap = problem.full_gap(&(), &param);
+    trace.push(Sample {
+        iter: snap.iterations as usize,
+        oracle_calls: snap.oracle_calls,
+        elapsed_s,
+        objective,
+        gap,
+    });
+
+    RunResult {
+        trace,
+        param,
+        counters: snap,
+        elapsed_s,
+        secs_per_pass,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::problems::gfl::Gfl;
+    use crate::sim::straggler::StragglerModel;
+    use crate::solver::StopCond;
+    use crate::util::rng::Pcg64;
+
+    fn gfl_instance() -> Gfl {
+        let mut rng = Pcg64::seeded(99);
+        let (d, n) = (6, 40);
+        let y = rng.gaussian_vec(d * n);
+        Gfl::new(d, n, 0.2, y)
+    }
+
+    fn cfg(workers: usize) -> RunConfig {
+        RunConfig {
+            workers,
+            tau: 1,
+            straggler: StragglerModel::none(workers),
+            sample_every: 64,
+            exact_gap: true,
+            stop: StopCond {
+                eps_gap: Some(0.1),
+                max_epochs: 5000.0,
+                max_secs: 30.0,
+                ..Default::default()
+            },
+            seed: 9,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn lockfree_converges_single_thread() {
+        let p = gfl_instance();
+        let r = run(&p, &cfg(1));
+        assert!(r.trace.last().unwrap().gap <= 0.1);
+    }
+
+    #[test]
+    fn lockfree_converges_multi_thread() {
+        let p = gfl_instance();
+        let r = run(&p, &cfg(4));
+        assert!(
+            r.trace.last().unwrap().gap <= 0.15,
+            "gap={}",
+            r.trace.last().unwrap().gap
+        );
+        assert!(r.counters.updates_applied > 0);
+    }
+
+    #[test]
+    fn near_feasibility_multi_thread() {
+        // Hogwild updates can transiently overshoot the ball; the final
+        // iterate must stay within a small tolerance of feasibility.
+        let p = gfl_instance();
+        let r = run(&p, &cfg(4));
+        for t in 0..p.m {
+            let nrm =
+                crate::util::la::norm2(&r.param[t * p.d..(t + 1) * p.d]);
+            assert!(nrm <= p.lam * 1.5 + 1e-4, "block {t} norm {nrm}");
+        }
+    }
+}

@@ -1,0 +1,86 @@
+//! The AP-BCFW coordinator — the paper's system contribution (Algorithms
+//! 1-3), on real threads.
+//!
+//! - [`shared`]: the lock-free shared parameter (f32-in-atomics + version).
+//! - [`buffer`]: the server's update buffer with collision-overwrite and
+//!   disjoint-tau batch assembly (Algorithm 1, step 1).
+//! - [`apbcfw`]: the asynchronous server/worker runtime (Algorithms 1-2).
+//! - [`sync`]: SP-BCFW, the synchronous comparator of §3.3.
+//! - [`lockfree`]: the tau = 1 serverless variant (Algorithm 3).
+
+pub mod apbcfw;
+pub mod buffer;
+pub mod lockfree;
+pub mod shared;
+pub mod sync;
+
+use crate::problems::BlockOracle;
+
+/// Message from a worker to the server.
+pub struct UpdateMsg {
+    pub oracle: BlockOracle,
+    /// Server iteration whose parameter the oracle was computed from.
+    pub k_read: u64,
+    /// Sender worker id.
+    pub worker: usize,
+}
+
+/// Configuration of the threaded coordinator runs.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    /// Number of worker threads T.
+    pub workers: usize,
+    /// Minibatch size tau.
+    pub tau: usize,
+    /// Exact line search on the server.
+    pub line_search: bool,
+    /// Enforce the paper's staleness rule (drop updates older than k/2).
+    pub staleness_rule: bool,
+    /// Straggler model (return probabilities per worker).
+    pub straggler: crate::sim::straggler::StragglerModel,
+    /// Extra oracle work multiplier range [lo, hi] (Fig 2d "harder
+    /// subproblems": each solve is repeated m ~ Uniform(lo, hi) times).
+    pub work_multiplier: (u32, u32),
+    /// Trace sample cadence in server iterations.
+    pub sample_every: usize,
+    /// Compute exact duality gap at sample points (expensive).
+    pub exact_gap: bool,
+    /// Collision policy: true = overwrite pending updates with fresher
+    /// ones (paper Algorithm 1 step 1); false = keep the old one
+    /// (ablation).
+    pub collision_overwrite: bool,
+    /// Worker->server queue capacity as a multiple of tau (backpressure
+    /// depth; see §Perf).
+    pub queue_factor: usize,
+    pub stop: crate::solver::StopCond,
+    pub seed: u64,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        Self {
+            workers: 2,
+            tau: 2,
+            line_search: false,
+            staleness_rule: true,
+            straggler: crate::sim::straggler::StragglerModel::none(2),
+            work_multiplier: (1, 1),
+            sample_every: 64,
+            exact_gap: false,
+            collision_overwrite: true,
+            queue_factor: 4,
+            stop: crate::solver::StopCond::default(),
+            seed: 0,
+        }
+    }
+}
+
+/// Outcome of a threaded run.
+pub struct RunResult {
+    pub trace: crate::util::metrics::Trace,
+    pub param: Vec<f32>,
+    pub counters: crate::util::metrics::CounterSnapshot,
+    pub elapsed_s: f64,
+    /// Wall-clock seconds per effective data pass (n applied updates).
+    pub secs_per_pass: f64,
+}

@@ -1,0 +1,151 @@
+//! Lock-free shared parameter vector.
+//!
+//! Workers read the parameter without locks while the server (or, in the
+//! lock-free variant, other workers) writes it concurrently — the paper's
+//! shared-memory model (Algorithm 2). f32 values live in `AtomicU32` bit
+//! patterns; element reads/writes are individually atomic, so a reader may
+//! observe a *mix* of iterations across elements. That torn-read model is
+//! precisely the inconsistent/delayed-parameter regime the paper's §2.3
+//! analysis tolerates (each element is some recent iterate's value).
+
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+
+/// Shared parameter + iteration version counter.
+pub struct SharedParam {
+    bits: Vec<AtomicU32>,
+    version: AtomicU64,
+}
+
+impl SharedParam {
+    pub fn new(init: &[f32]) -> Self {
+        Self {
+            bits: init
+                .iter()
+                .map(|v| AtomicU32::new(v.to_bits()))
+                .collect(),
+            version: AtomicU64::new(0),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.bits.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.bits.is_empty()
+    }
+
+    /// Current server iteration.
+    #[inline]
+    pub fn version(&self) -> u64 {
+        self.version.load(Ordering::Acquire)
+    }
+
+    /// Snapshot the whole parameter (element-wise atomic).
+    pub fn read(&self, out: &mut Vec<f32>) {
+        out.clear();
+        out.extend(
+            self.bits
+                .iter()
+                .map(|b| f32::from_bits(b.load(Ordering::Relaxed))),
+        );
+    }
+
+    /// Convenience allocating read.
+    pub fn read_vec(&self) -> Vec<f32> {
+        let mut v = Vec::with_capacity(self.bits.len());
+        self.read(&mut v);
+        v
+    }
+
+    /// Publish new values (element-wise atomic stores) and bump the version.
+    pub fn publish(&self, values: &[f32], new_version: u64) {
+        debug_assert_eq!(values.len(), self.bits.len());
+        for (b, v) in self.bits.iter().zip(values.iter()) {
+            b.store(v.to_bits(), Ordering::Relaxed);
+        }
+        self.version.store(new_version, Ordering::Release);
+    }
+
+    /// Publish only a sub-range (for sparse block updates).
+    pub fn publish_range(&self, offset: usize, values: &[f32]) {
+        for (b, v) in self.bits[offset..offset + values.len()]
+            .iter()
+            .zip(values.iter())
+        {
+            b.store(v.to_bits(), Ordering::Relaxed);
+        }
+    }
+
+    /// Bump the version counter by one, returning the *previous* value.
+    pub fn bump_version(&self) -> u64 {
+        self.version.fetch_add(1, Ordering::AcqRel)
+    }
+
+    /// Atomically add `delta` to element `idx` (lock-free variant's update).
+    pub fn fetch_add_f32(&self, idx: usize, delta: f32) {
+        let cell = &self.bits[idx];
+        let mut cur = cell.load(Ordering::Relaxed);
+        loop {
+            let new = (f32::from_bits(cur) + delta).to_bits();
+            match cell.compare_exchange_weak(
+                cur,
+                new,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return,
+                Err(actual) => cur = actual,
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn read_write_roundtrip() {
+        let sp = SharedParam::new(&[1.0, -2.5, 3.25]);
+        assert_eq!(sp.read_vec(), vec![1.0, -2.5, 3.25]);
+        sp.publish(&[4.0, 5.0, 6.0], 3);
+        assert_eq!(sp.read_vec(), vec![4.0, 5.0, 6.0]);
+        assert_eq!(sp.version(), 3);
+    }
+
+    #[test]
+    fn publish_range_is_partial() {
+        let sp = SharedParam::new(&[0.0; 5]);
+        sp.publish_range(2, &[7.0, 8.0]);
+        assert_eq!(sp.read_vec(), vec![0.0, 0.0, 7.0, 8.0, 0.0]);
+    }
+
+    #[test]
+    fn concurrent_fetch_add_sums_exactly() {
+        let sp = Arc::new(SharedParam::new(&[0.0f32]));
+        let mut handles = vec![];
+        for _ in 0..8 {
+            let sp = Arc::clone(&sp);
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..10_000 {
+                    sp.fetch_add_f32(0, 1.0);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        // 80k stays exactly representable in f32.
+        assert_eq!(sp.read_vec()[0], 80_000.0);
+    }
+
+    #[test]
+    fn version_bump_is_sequential() {
+        let sp = SharedParam::new(&[0.0]);
+        assert_eq!(sp.bump_version(), 0);
+        assert_eq!(sp.bump_version(), 1);
+        assert_eq!(sp.version(), 2);
+    }
+}

@@ -1,0 +1,267 @@
+//! SP-BCFW: the synchronous minibatch comparator (paper §3.3).
+//!
+//! Each iteration the server picks tau disjoint blocks, assigns tau/T to
+//! each worker, and *waits for all of them* before applying the batch.
+//! Stragglers are simulated with return probabilities: a failed report
+//! forces the worker to redo the solve, so the iteration takes as long as
+//! the slowest worker — the behaviour Fig 3 contrasts with AP-BCFW.
+
+use super::shared::SharedParam;
+use super::{RunConfig, RunResult};
+use crate::problems::{ApplyOptions, BlockOracle, Problem};
+use crate::solver::schedule_gamma;
+use crate::util::metrics::{Counters, Sample, Stopwatch, Trace};
+use crate::util::rng::Pcg64;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc;
+
+enum Assignment {
+    Solve(Vec<usize>),
+    Stop,
+}
+
+/// Run synchronous SP-BCFW.
+pub fn run<P: Problem>(problem: &P, cfg: &RunConfig) -> RunResult {
+    assert_eq!(cfg.straggler.probs.len(), cfg.workers);
+    let n = problem.num_blocks();
+    let tau = cfg.tau.clamp(1, n);
+    let mut master = problem.init_param();
+    let mut state = problem.init_server();
+    let shared = SharedParam::new(&master);
+    let counters = Counters::new();
+    let watch = Stopwatch::start();
+    let stop_flag = AtomicBool::new(false);
+
+    let mut trace = Trace::default();
+    let mut gap_estimate = f64::INFINITY;
+    let mut k: u64 = 0;
+
+    // Per-worker assignment channels + shared result channel.
+    let mut assign_txs = Vec::with_capacity(cfg.workers);
+    let mut assign_rxs = Vec::with_capacity(cfg.workers);
+    for _ in 0..cfg.workers {
+        let (tx, rx) = mpsc::channel::<Assignment>();
+        assign_txs.push(tx);
+        assign_rxs.push(rx);
+    }
+    let (res_tx, res_rx) = mpsc::channel::<Vec<BlockOracle>>();
+
+    std::thread::scope(|scope| {
+        for (w, a_rx) in assign_rxs.into_iter().enumerate() {
+            let res_tx = res_tx.clone();
+            let shared = &shared;
+            let counters = &counters;
+            let straggler = cfg.straggler.clone();
+            let stop_flag = &stop_flag;
+            let seed = cfg.seed;
+            scope.spawn(move || {
+                let mut rng = Pcg64::new(seed, 2000 + w as u64);
+                let mut snapshot: Vec<f32> = Vec::new();
+                while let Ok(Assignment::Solve(blocks)) = a_rx.recv() {
+                    if stop_flag.load(Ordering::Acquire) {
+                        break;
+                    }
+                    shared.read(&mut snapshot);
+                    let mut out = Vec::with_capacity(blocks.len());
+                    for i in blocks {
+                        // Redo until the solve is successfully reported —
+                        // the synchronous server can't proceed without it.
+                        loop {
+                            let o = problem.oracle(&snapshot, i);
+                            Counters::bump(&counters.oracle_calls);
+                            if straggler.reports(w, &mut rng) {
+                                out.push(o);
+                                break;
+                            }
+                            Counters::bump(&counters.dropped);
+                        }
+                    }
+                    if res_tx.send(out).is_err() {
+                        break;
+                    }
+                }
+            });
+        }
+        drop(res_tx);
+
+        let mut rng = Pcg64::new(cfg.seed, 4);
+        'serve: loop {
+            // Assign tau disjoint blocks round-robin across workers.
+            let blocks = rng.subset(n, tau);
+            let mut assignments: Vec<Vec<usize>> =
+                vec![Vec::new(); cfg.workers];
+            for (j, &b) in blocks.iter().enumerate() {
+                assignments[j % cfg.workers].push(b);
+            }
+            let mut outstanding = 0usize;
+            for (w, a) in assignments.into_iter().enumerate() {
+                if !a.is_empty() {
+                    assign_txs[w].send(Assignment::Solve(a)).ok();
+                    outstanding += 1;
+                }
+            }
+            // Barrier: wait for every assigned worker.
+            let mut batch: Vec<BlockOracle> = Vec::with_capacity(tau);
+            for _ in 0..outstanding {
+                match res_rx.recv() {
+                    Ok(mut os) => batch.append(&mut os),
+                    Err(_) => break 'serve,
+                }
+            }
+            let gamma = schedule_gamma(n, tau, k);
+            let info = problem.apply(
+                &mut state,
+                &mut master,
+                &batch,
+                ApplyOptions {
+                    gamma,
+                    line_search: cfg.line_search,
+                },
+            );
+            k += 1;
+            shared.publish(&master, k);
+            Counters::add(&counters.updates_applied, batch.len() as u64);
+            counters.iterations.store(k, Ordering::Relaxed);
+            let inst = info.batch_gap * n as f64 / tau as f64;
+            gap_estimate = if gap_estimate.is_finite() {
+                0.8 * gap_estimate + 0.2 * inst
+            } else {
+                inst
+            };
+
+            if k % cfg.sample_every as u64 == 0 {
+                let objective = problem.objective(&state, &master);
+                let gap = if cfg.exact_gap {
+                    problem.full_gap(&state, &master)
+                } else {
+                    gap_estimate
+                };
+                let snap = counters.snapshot();
+                trace.push(Sample {
+                    iter: k as usize,
+                    oracle_calls: snap.oracle_calls,
+                    elapsed_s: watch.elapsed_s(),
+                    objective,
+                    gap,
+                });
+                let epochs = snap.oracle_calls as f64 / n as f64;
+                if cfg.stop.target_met(objective, gap)
+                    || cfg.stop.exhausted(epochs, watch.elapsed_s())
+                {
+                    break 'serve;
+                }
+            }
+            let snap = counters.snapshot();
+            if cfg
+                .stop
+                .exhausted(snap.oracle_calls as f64 / n as f64, watch.elapsed_s())
+            {
+                break 'serve;
+            }
+        }
+        stop_flag.store(true, Ordering::Release);
+        for tx in &assign_txs {
+            tx.send(Assignment::Stop).ok();
+        }
+    });
+
+    let mut snap = counters.snapshot();
+    snap.iterations = k;
+    let elapsed_s = watch.elapsed_s();
+    let passes = snap.updates_applied as f64 / n as f64;
+    let secs_per_pass = if passes > 0.0 {
+        elapsed_s / passes
+    } else {
+        f64::INFINITY
+    };
+    let objective = problem.objective(&state, &master);
+    let gap = if cfg.exact_gap {
+        problem.full_gap(&state, &master)
+    } else {
+        gap_estimate
+    };
+    trace.push(Sample {
+        iter: k as usize,
+        oracle_calls: snap.oracle_calls,
+        elapsed_s,
+        objective,
+        gap,
+    });
+
+    RunResult {
+        trace,
+        param: master,
+        counters: snap,
+        elapsed_s,
+        secs_per_pass,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::problems::gfl::Gfl;
+    use crate::sim::straggler::StragglerModel;
+    use crate::solver::StopCond;
+    use crate::util::rng::Pcg64;
+
+    fn gfl_instance() -> Gfl {
+        let mut rng = Pcg64::seeded(88);
+        let (d, n) = (6, 40);
+        let y = rng.gaussian_vec(d * n);
+        Gfl::new(d, n, 0.2, y)
+    }
+
+    fn cfg(workers: usize, tau: usize) -> RunConfig {
+        RunConfig {
+            workers,
+            tau,
+            straggler: StragglerModel::none(workers),
+            sample_every: 16,
+            exact_gap: true,
+            stop: StopCond {
+                eps_gap: Some(0.05),
+                max_epochs: 5000.0,
+                max_secs: 30.0,
+                ..Default::default()
+            },
+            seed: 6,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn sync_run_converges() {
+        let p = gfl_instance();
+        let r = run(&p, &cfg(3, 6));
+        assert!(r.trace.last().unwrap().gap <= 0.05);
+        // Sync mode with no stragglers drops nothing.
+        assert_eq!(r.counters.dropped, 0);
+    }
+
+    #[test]
+    fn straggler_forces_redo_work() {
+        let p = gfl_instance();
+        let mut c = cfg(3, 6);
+        c.straggler = StragglerModel::single(3, 0.3);
+        c.stop.max_epochs = 60.0;
+        c.stop.eps_gap = None;
+        let r = run(&p, &c);
+        // Redos mean oracle calls strictly exceed applied updates.
+        assert!(r.counters.dropped > 0);
+        assert!(r.counters.oracle_calls > r.counters.updates_applied);
+    }
+
+    #[test]
+    fn every_iteration_applies_exactly_tau() {
+        let p = gfl_instance();
+        let mut c = cfg(2, 5);
+        c.stop.eps_gap = None;
+        c.stop.max_epochs = 20.0;
+        let r = run(&p, &c);
+        assert_eq!(
+            r.counters.updates_applied,
+            r.counters.iterations * 5
+        );
+    }
+}

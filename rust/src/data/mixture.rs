@@ -1,0 +1,119 @@
+//! Multiclass mixture dataset on the unit sphere (paper Example 1: each
+//! class has a feature vector drawn from the unit sphere; data points are
+//! noisy copies, renormalized).
+
+use crate::util::rng::Pcg64;
+
+/// Multiclass classification dataset.
+#[derive(Debug, Clone)]
+pub struct MulticlassDataset {
+    pub n: usize,
+    pub k: usize,
+    pub d: usize,
+    /// Features, (n x d) row-major, each row unit-norm.
+    pub features: Vec<f32>,
+    /// Labels in [0, K).
+    pub labels: Vec<u16>,
+}
+
+impl MulticlassDataset {
+    #[inline]
+    pub fn feature(&self, i: usize) -> &[f32] {
+        &self.features[i * self.d..(i + 1) * self.d]
+    }
+
+    #[inline]
+    pub fn label(&self, i: usize) -> usize {
+        self.labels[i] as usize
+    }
+}
+
+/// Generate: K class centers uniform on the sphere; each point is its class
+/// center plus isotropic noise of scale `noise`, renormalized to the sphere.
+pub fn generate(
+    n: usize,
+    k: usize,
+    d: usize,
+    noise: f64,
+    seed: u64,
+) -> MulticlassDataset {
+    let mut rng = Pcg64::new(seed, 300);
+    let mut centers = vec![0.0f32; k * d];
+    for c in 0..k {
+        let v = rng.gaussian_vec(d);
+        let nrm = crate::util::la::norm2(&v) as f32;
+        for r in 0..d {
+            centers[c * d + r] = v[r] / nrm;
+        }
+    }
+    let mut features = vec![0.0f32; n * d];
+    let mut labels = vec![0u16; n];
+    for i in 0..n {
+        let y = rng.below(k);
+        labels[i] = y as u16;
+        let row = &mut features[i * d..(i + 1) * d];
+        for r in 0..d {
+            row[r] = centers[y * d + r] + (rng.gaussian() * noise) as f32;
+        }
+        let nrm = crate::util::la::norm2(row) as f32;
+        for v in row.iter_mut() {
+            *v /= nrm;
+        }
+    }
+    MulticlassDataset {
+        n,
+        k,
+        d,
+        features,
+        labels,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::la;
+
+    #[test]
+    fn rows_unit_norm() {
+        let ds = generate(50, 5, 20, 0.3, 1);
+        for i in 0..50 {
+            assert!((la::norm2(ds.feature(i)) - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn zero_noise_points_equal_centers() {
+        let ds = generate(40, 4, 10, 0.0, 2);
+        // All points of a class identical.
+        let mut by_class: std::collections::HashMap<usize, Vec<f32>> =
+            Default::default();
+        for i in 0..40 {
+            let y = ds.label(i);
+            let f = ds.feature(i).to_vec();
+            if let Some(prev) = by_class.get(&y) {
+                assert_eq!(prev, &f);
+            } else {
+                by_class.insert(y, f);
+            }
+        }
+    }
+
+    #[test]
+    fn labels_cover_classes() {
+        let ds = generate(200, 6, 8, 0.1, 3);
+        let mut seen = vec![false; 6];
+        for &y in &ds.labels {
+            seen[y as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn determinism() {
+        let a = generate(30, 3, 12, 0.2, 9);
+        let b = generate(30, 3, 12, 0.2, 9);
+        assert_eq!(a.features, b.features);
+        assert_eq!(a.labels, b.labels);
+    }
+}

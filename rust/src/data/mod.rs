@@ -1,0 +1,6 @@
+//! Synthetic dataset generators (DESIGN.md substitutions for the paper's
+//! OCR dataset and synthetic signals).
+
+pub mod mixture;
+pub mod ocr_like;
+pub mod signal;

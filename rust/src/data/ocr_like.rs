@@ -1,0 +1,188 @@
+//! OCR-like synthetic sequence dataset (substitution for Taskar et al.'s
+//! OCR corpus; see DESIGN.md §Substitutions).
+//!
+//! Each datapoint is a fixed-length sequence of "letter images": the label
+//! sequence is drawn from a first-order Markov chain with a sparse, skewed
+//! transition structure (mimicking English letter statistics), and each
+//! letter's feature vector is its class template (a random binary pattern)
+//! with salt-and-pepper pixel noise. Chain-structured dependencies make the
+//! Viterbi oracle genuinely necessary, as in the paper's experiments.
+
+use crate::util::rng::Pcg64;
+
+/// Chain-structured sequence dataset.
+#[derive(Debug, Clone)]
+pub struct ChainDataset {
+    /// Number of sequences n.
+    pub n: usize,
+    /// Number of labels K.
+    pub k: usize,
+    /// Feature dimension per position d.
+    pub d: usize,
+    /// Sequence length L (fixed).
+    pub ell: usize,
+    /// Features, (n x L x d) row-major.
+    pub features: Vec<f32>,
+    /// Labels, (n x L) row-major, values in [0, K).
+    pub labels: Vec<u16>,
+}
+
+impl ChainDataset {
+    #[inline]
+    pub fn feature(&self, i: usize, t: usize) -> &[f32] {
+        let base = (i * self.ell + t) * self.d;
+        &self.features[base..base + self.d]
+    }
+
+    #[inline]
+    pub fn label(&self, i: usize, t: usize) -> usize {
+        self.labels[i * self.ell + t] as usize
+    }
+
+    /// Labels of sequence i as a slice.
+    #[inline]
+    pub fn label_seq(&self, i: usize) -> &[u16] {
+        &self.labels[i * self.ell..(i + 1) * self.ell]
+    }
+}
+
+/// Generate an OCR-like dataset.
+///
+/// * `flip_prob` — per-pixel noise probability (higher = harder problem).
+pub fn generate(
+    n: usize,
+    k: usize,
+    d: usize,
+    ell: usize,
+    flip_prob: f64,
+    seed: u64,
+) -> ChainDataset {
+    let mut rng = Pcg64::new(seed, 200);
+    // Class templates: random +-1 patterns, normalized to unit norm.
+    let norm = (d as f64).sqrt() as f32;
+    let templates: Vec<f32> = (0..k * d)
+        .map(|_| if rng.bernoulli(0.5) { 1.0 / norm } else { -1.0 / norm })
+        .collect();
+    // Skewed Markov transition: each label strongly prefers 3 successors.
+    let mut trans_pref = vec![0usize; k * 3];
+    for j in 0..k {
+        let succ = rng.subset(k, 3.min(k));
+        for (a, &s) in trans_pref[j * 3..].iter_mut().zip(succ.iter()) {
+            *a = s;
+        }
+    }
+    let mut features = vec![0.0f32; n * ell * d];
+    let mut labels = vec![0u16; n * ell];
+    for i in 0..n {
+        let mut y = rng.below(k);
+        for t in 0..ell {
+            if t > 0 {
+                // 85%: one of the preferred successors; 15%: uniform.
+                y = if rng.bernoulli(0.85) {
+                    trans_pref[y * 3 + rng.below(3.min(k))]
+                } else {
+                    rng.below(k)
+                };
+            }
+            labels[i * ell + t] = y as u16;
+            let base = (i * ell + t) * d;
+            for r in 0..d {
+                let mut v = templates[y * d + r];
+                if rng.bernoulli(flip_prob) {
+                    v = -v;
+                }
+                features[base + r] = v;
+            }
+        }
+    }
+    ChainDataset {
+        n,
+        k,
+        d,
+        ell,
+        features,
+        labels,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_ranges() {
+        let ds = generate(20, 5, 16, 7, 0.1, 1);
+        assert_eq!(ds.features.len(), 20 * 7 * 16);
+        assert_eq!(ds.labels.len(), 20 * 7);
+        assert!(ds.labels.iter().all(|&y| (y as usize) < 5));
+        assert_eq!(ds.feature(3, 2).len(), 16);
+    }
+
+    #[test]
+    fn determinism() {
+        let a = generate(10, 4, 8, 5, 0.2, 42);
+        let b = generate(10, 4, 8, 5, 0.2, 42);
+        assert_eq!(a.features, b.features);
+        assert_eq!(a.labels, b.labels);
+    }
+
+    #[test]
+    fn features_are_unit_scale() {
+        let ds = generate(5, 3, 64, 4, 0.0, 3);
+        for i in 0..5 {
+            for t in 0..4 {
+                let norm: f64 = ds
+                    .feature(i, t)
+                    .iter()
+                    .map(|&v| (v as f64) * (v as f64))
+                    .sum();
+                assert!((norm - 1.0).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn noiseless_features_match_templates_by_label() {
+        let ds = generate(8, 4, 32, 6, 0.0, 5);
+        // Same label -> identical feature vector when noiseless.
+        let mut seen: std::collections::HashMap<usize, Vec<f32>> =
+            Default::default();
+        for i in 0..8 {
+            for t in 0..6 {
+                let y = ds.label(i, t);
+                let f = ds.feature(i, t).to_vec();
+                if let Some(prev) = seen.get(&y) {
+                    assert_eq!(prev, &f);
+                } else {
+                    seen.insert(y, f);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn markov_structure_is_skewed() {
+        let ds = generate(500, 10, 4, 9, 0.0, 7);
+        // Count transition distribution from label 0; should concentrate on
+        // few successors rather than uniform.
+        let mut counts = vec![0usize; 10];
+        let mut total = 0usize;
+        for i in 0..ds.n {
+            for t in 1..ds.ell {
+                if ds.label(i, t - 1) == 0 {
+                    counts[ds.label(i, t)] += 1;
+                    total += 1;
+                }
+            }
+        }
+        if total > 100 {
+            let mut sorted = counts.clone();
+            sorted.sort_unstable_by(|a, b| b.cmp(a));
+            let top3: usize = sorted[..3].iter().sum();
+            assert!(
+                top3 as f64 > 0.6 * total as f64,
+                "top3={top3} total={total}"
+            );
+        }
+    }
+}

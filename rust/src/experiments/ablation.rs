@@ -1,0 +1,170 @@
+//! Ablations over the coordinator's design choices (DESIGN.md §6):
+//!
+//! (a) the k/2 staleness drop rule under heavy-tailed delay — on vs off;
+//! (b) collision policy — overwrite-with-fresher (Algorithm 1) vs keep-old;
+//! (c) backpressure queue depth (multiples of tau).
+//!
+//! Each row reports convergence cost under identical budgets, isolating
+//! one design decision at a time.
+
+use super::print_table;
+use crate::coordinator::{apbcfw, RunConfig};
+use crate::data::signal;
+use crate::problems::gfl::Gfl;
+use crate::sim::delay::DelayModel;
+use crate::sim::straggler::StragglerModel;
+use crate::solver::delayed::{self, DelayOptions};
+use crate::solver::{SolveOptions, StopCond};
+use crate::util::config::Config;
+use crate::util::csv::CsvWriter;
+use anyhow::Result;
+use std::path::Path;
+
+pub fn run(cfg: &Config, out: &Path) -> Result<()> {
+    let n = cfg.get_usize("ablation.n", 100);
+    let d = cfg.get_usize("ablation.d", 10);
+    let lam = cfg.get_f64("ablation.lambda", 0.01);
+    let seed = cfg.get_u64("ablation.seed", 13);
+    let gap_target = cfg.get_f64("ablation.gap_target", 0.1);
+    let reps = cfg.get_usize("ablation.reps", 3);
+
+    let sig = signal::piecewise_constant(d, n, 6, 2.0, 0.5, seed);
+    let problem = Gfl::new(d, n, lam, sig.noisy.clone());
+
+    let mut w = CsvWriter::to_file(
+        &out.join("ablation.csv"),
+        &["ablation", "variant", "metric", "value"],
+    )?;
+
+    // ---------- (a) staleness drop rule under Pareto delay ----------
+    // Heavy-tailed delay, kappa = 15: the rule discards catastrophically
+    // stale updates; without it they are applied and slow convergence.
+    for enforce in [true, false] {
+        let mut calls = 0.0f64;
+        let mut failures = 0usize;
+        for r in 0..reps {
+            let opts = SolveOptions {
+                tau: 1,
+                sample_every: 32,
+                exact_gap: true,
+                stop: StopCond {
+                    eps_gap: Some(gap_target),
+                    max_epochs: 5e4,
+                    max_secs: 60.0,
+                    ..Default::default()
+                },
+                seed: seed + 100 * r as u64,
+                ..Default::default()
+            };
+            let res = delayed::solve(
+                &problem,
+                &opts,
+                &DelayOptions {
+                    model: DelayModel::pareto_with_mean(15.0),
+                    history: 1 << 14,
+                    enforce_drop_rule: enforce,
+                },
+            );
+            match res.trace.first_gap_below(gap_target) {
+                Some(s) => calls += s.oracle_calls as f64,
+                None => failures += 1,
+            }
+        }
+        let label = if enforce { "k/2 rule ON" } else { "k/2 rule OFF" };
+        let value = if failures > 0 {
+            format!("{failures}/{reps} runs failed to converge")
+        } else {
+            format!("{:.0}", calls / reps as f64)
+        };
+        w.row(&[
+            "drop_rule".into(),
+            label.into(),
+            "oracle_calls_to_gap".into(),
+            value,
+        ]);
+    }
+
+    // ---------- (b) collision policy ----------
+    for overwrite in [true, false] {
+        let rcfg = RunConfig {
+            workers: 3,
+            tau: 8,
+            line_search: true,
+            straggler: StragglerModel::none(3),
+            sample_every: 8,
+            exact_gap: true,
+            collision_overwrite: overwrite,
+            stop: StopCond {
+                eps_gap: Some(gap_target),
+                max_epochs: 5e4,
+                max_secs: 60.0,
+                ..Default::default()
+            },
+            seed,
+            ..Default::default()
+        };
+        let r = apbcfw::run(&problem, &rcfg);
+        let label = if overwrite {
+            "overwrite (paper)"
+        } else {
+            "keep-old"
+        };
+        w.row(&[
+            "collision".into(),
+            label.into(),
+            "iterations_to_gap".into(),
+            r.trace
+                .first_gap_below(gap_target)
+                .map(|s| s.iter.to_string())
+                .unwrap_or_else(|| "did not converge".into()),
+        ]);
+        w.row(&[
+            "collision".into(),
+            label.into(),
+            "collisions".into(),
+            r.counters.collisions.to_string(),
+        ]);
+    }
+
+    // ---------- (c) backpressure queue depth ----------
+    for qf in [1usize, 4, 16, 64] {
+        let rcfg = RunConfig {
+            workers: 3,
+            tau: 8,
+            line_search: true,
+            straggler: StragglerModel::none(3),
+            sample_every: 8,
+            exact_gap: true,
+            queue_factor: qf,
+            stop: StopCond {
+                eps_gap: Some(gap_target),
+                max_epochs: 5e4,
+                max_secs: 60.0,
+                ..Default::default()
+            },
+            seed,
+            ..Default::default()
+        };
+        let r = apbcfw::run(&problem, &rcfg);
+        w.row(&[
+            "queue_depth".into(),
+            format!("{qf}x tau"),
+            "oracle_calls_to_gap".into(),
+            r.trace
+                .first_gap_below(gap_target)
+                .map(|s| s.oracle_calls.to_string())
+                .unwrap_or_else(|| "did not converge".into()),
+        ]);
+        w.row(&[
+            "queue_depth".into(),
+            format!("{qf}x tau"),
+            "staleness_drops".into(),
+            r.counters.dropped.to_string(),
+        ]);
+    }
+
+    w.flush()?;
+    println!("Ablations: coordinator design choices");
+    print_table(&w);
+    Ok(())
+}

@@ -1,0 +1,186 @@
+//! Figure 1: epoch-speedup from minibatching (paper §3.1).
+//!
+//! (a) structural SVM on the OCR-like dataset (lambda = 1, line search +
+//!     weighted averaging), speedup in epochs-to-threshold relative to
+//!     tau = 1 (BCFW), for several primal-suboptimality thresholds.
+//! (b) Group Fused Lasso on a synthetic piecewise-constant dataset
+//!     (n = 100, d = 10, lambda = 0.01), same measurement.
+
+use super::{print_table, reference_optimum};
+use crate::data::{ocr_like, signal};
+use crate::problems::gfl::Gfl;
+use crate::problems::ssvm::chain::ChainSsvm;
+use crate::problems::Problem;
+use crate::solver::{minibatch, SolveOptions, StopCond};
+use crate::util::config::Config;
+use crate::util::csv::CsvWriter;
+use anyhow::Result;
+use std::path::Path;
+use std::sync::Arc;
+
+/// Shared sweep logic.
+///
+/// The paper measures speedup as the reduction in *server iterations*
+/// (Algorithm 1 steps, each consuming tau disjoint-block updates) needed to
+/// reach a suboptimality threshold, relative to tau = 1: with tau-way
+/// parallel oracle solves, each iteration costs one (parallel) oracle
+/// round, so perfect speedup equals tau. We sample the trace every
+/// iteration (objective evaluation is O(param) for all problems here) so
+/// the crossing point is exact.
+fn speedup_sweep<P: Problem>(
+    problem: &P,
+    f_star: f64,
+    f0: f64,
+    taus: &[usize],
+    thresholds: &[f64],
+    line_search: bool,
+    weighted_averaging: bool,
+    max_epochs: f64,
+    seed: u64,
+    out_csv: &Path,
+) -> Result<CsvWriter> {
+    let mut w = CsvWriter::to_file(
+        out_csv,
+        &["tau", "threshold", "iterations", "epochs", "speedup"],
+    )?;
+    let gap0 = f0 - f_star;
+    // iterations(threshold) at the baseline tau (first entry, usually 1).
+    let mut base: Vec<Option<f64>> = vec![None; thresholds.len()];
+    for &tau in taus {
+        let opts = SolveOptions {
+            tau,
+            line_search,
+            weighted_averaging,
+            sample_every: 1,
+            exact_gap: false,
+            stop: StopCond {
+                f_star: Some(f_star),
+                eps_primal: Some(thresholds.iter().cloned().fold(
+                    f64::INFINITY,
+                    f64::min,
+                ) * gap0),
+                max_epochs,
+                max_secs: 300.0,
+                ..Default::default()
+            },
+            seed,
+        };
+        let r = minibatch::solve(problem, &opts);
+        for (ti, &th) in thresholds.iter().enumerate() {
+            let eps = th * gap0;
+            let hit = r.trace.first_below(f_star, eps);
+            let row = match hit {
+                Some(s) => {
+                    let iters = s.iter as f64;
+                    if tau == taus[0] && base[ti].is_none() {
+                        base[ti] = Some(iters);
+                    }
+                    let sp = base[ti].map(|b| b / iters.max(1e-12));
+                    [
+                        tau.to_string(),
+                        th.to_string(),
+                        format!("{iters:.0}"),
+                        format!(
+                            "{:.2}",
+                            s.oracle_calls as f64
+                                / problem.num_blocks() as f64
+                        ),
+                        sp.map(|s| format!("{s:.2}"))
+                            .unwrap_or_else(|| "-".into()),
+                    ]
+                }
+                None => [
+                    tau.to_string(),
+                    th.to_string(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                ],
+            };
+            w.row(&row);
+        }
+    }
+    w.flush()?;
+    Ok(w)
+}
+
+/// Fig 1(a): structural SVM epoch speedup vs tau.
+pub fn fig1a(cfg: &Config, out: &Path) -> Result<()> {
+    let n = cfg.get_usize("fig1a.n", 600);
+    let k = cfg.get_usize("fig1a.k", 26);
+    let d = cfg.get_usize("fig1a.d", 128);
+    let ell = cfg.get_usize("fig1a.ell", 9);
+    let lam = cfg.get_f64("fig1a.lambda", 1.0);
+    let seed = cfg.get_u64("fig1a.seed", 1);
+    let taus = cfg.get_usize_list(
+        "fig1a.taus",
+        &[1, 2, 4, 8, 16, 32, 64, 128],
+    );
+    let thresholds =
+        cfg.get_f64_list("fig1a.thresholds", &[0.1, 0.02, 0.01]);
+    let max_epochs = cfg.get_f64("fig1a.max_epochs", 150.0);
+    let fstar_epochs = cfg.get_f64("fig1a.fstar_epochs", 400.0);
+
+    let data = Arc::new(ocr_like::generate(n, k, d, ell, 0.15, seed));
+    let problem = ChainSsvm::new(data, lam);
+    let key = format!("ssvm_n{n}_k{k}_d{d}_l{ell}_lam{lam}_s{seed}");
+    let f_star = reference_optimum(&problem, &key, out, fstar_epochs)?;
+    let f0 = 0.0; // BCFW init: f(alpha_0) = 0
+
+    let w = speedup_sweep(
+        &problem,
+        f_star,
+        f0,
+        &taus,
+        &thresholds,
+        true,
+        true,
+        max_epochs,
+        seed,
+        &out.join("fig1a.csv"),
+    )?;
+    println!("Fig 1(a): structural SVM epoch speedup vs tau (n={n})");
+    print_table(&w);
+    Ok(())
+}
+
+/// Fig 1(b): Group Fused Lasso epoch speedup vs tau.
+pub fn fig1b(cfg: &Config, out: &Path) -> Result<()> {
+    let n = cfg.get_usize("fig1b.n", 100);
+    let d = cfg.get_usize("fig1b.d", 10);
+    let lam = cfg.get_f64("fig1b.lambda", 0.01);
+    let segments = cfg.get_usize("fig1b.segments", 6);
+    let noise = cfg.get_f64("fig1b.noise", 0.5);
+    let seed = cfg.get_u64("fig1b.seed", 2);
+    let taus = cfg.get_usize_list(
+        "fig1b.taus",
+        &[1, 2, 4, 8, 16, 32, 55, 80, 99],
+    );
+    let thresholds =
+        cfg.get_f64_list("fig1b.thresholds", &[0.1, 0.02, 0.01]);
+    let max_epochs = cfg.get_f64("fig1b.max_epochs", 2000.0);
+    let fstar_epochs = cfg.get_f64("fig1b.fstar_epochs", 8000.0);
+
+    let sig = signal::piecewise_constant(d, n, segments, 2.0, noise, seed);
+    let problem = Gfl::new(d, n, lam, sig.noisy.clone());
+    let key = format!("gfl_n{n}_d{d}_lam{lam}_s{seed}");
+    let f_star = reference_optimum(&problem, &key, out, fstar_epochs)?;
+    let f0 = 0.0;
+
+    let line_search = cfg.get_bool("fig1b.line_search", true);
+    let w = speedup_sweep(
+        &problem,
+        f_star,
+        f0,
+        &taus,
+        &thresholds,
+        line_search,
+        false,
+        max_epochs,
+        seed,
+        &out.join("fig1b.csv"),
+    )?;
+    println!("Fig 1(b): Group Fused Lasso epoch speedup vs tau (n={n})");
+    print_table(&w);
+    Ok(())
+}

@@ -1,0 +1,213 @@
+//! Figure 2: shared-memory wall-clock experiments (paper §3.2).
+//!
+//! (a) primal suboptimality vs wall-clock at T = 8 for several tau.
+//! (b) suboptimality vs wall-clock for varying T with the best tau each.
+//! (c) speedup vs T (best tau among multiples of T).
+//! (d) the same with harder subproblems (m ~ Uniform(5,15) redundant
+//!     solves per oracle call).
+
+use super::{print_table, reference_optimum};
+use crate::coordinator::{apbcfw, RunConfig};
+use crate::data::ocr_like;
+use crate::problems::ssvm::chain::ChainSsvm;
+use crate::sim::straggler::StragglerModel;
+use crate::solver::StopCond;
+use crate::util::config::Config;
+use crate::util::csv::CsvWriter;
+use anyhow::Result;
+use std::path::Path;
+use std::sync::Arc;
+
+struct Fig2Setup {
+    problem: ChainSsvm,
+    f_star: f64,
+    /// Target suboptimality (fraction of the initial gap).
+    eps_abs: f64,
+    max_secs: f64,
+    seed: u64,
+}
+
+fn setup(cfg: &Config, section: &str, out: &Path) -> Result<Fig2Setup> {
+    let n = cfg.get_usize(&format!("{section}.n"), 800);
+    let k = cfg.get_usize(&format!("{section}.k"), 26);
+    let d = cfg.get_usize(&format!("{section}.d"), 128);
+    let ell = cfg.get_usize(&format!("{section}.ell"), 9);
+    let lam = cfg.get_f64(&format!("{section}.lambda"), 1.0);
+    let seed = cfg.get_u64(&format!("{section}.seed"), 3);
+    let thresh = cfg.get_f64(&format!("{section}.threshold"), 0.05);
+    let max_secs = cfg.get_f64(&format!("{section}.max_secs"), 60.0);
+    let fstar_epochs =
+        cfg.get_f64(&format!("{section}.fstar_epochs"), 300.0);
+    let data = Arc::new(ocr_like::generate(n, k, d, ell, 0.15, seed));
+    let problem = ChainSsvm::new(data, lam);
+    let key = format!("ssvm_n{n}_k{k}_d{d}_l{ell}_lam{lam}_s{seed}");
+    let f_star = reference_optimum(&problem, &key, out, fstar_epochs)?;
+    let f0 = 0.0;
+    Ok(Fig2Setup {
+        problem,
+        f_star,
+        eps_abs: thresh * (f0 - f_star),
+        max_secs,
+        seed,
+    })
+}
+
+fn run_cfg(
+    s: &Fig2Setup,
+    workers: usize,
+    tau: usize,
+    work_multiplier: (u32, u32),
+) -> RunConfig {
+    RunConfig {
+        workers,
+        tau,
+        line_search: true,
+        staleness_rule: true,
+        straggler: StragglerModel::none(workers),
+        work_multiplier,
+        sample_every: 8,
+        exact_gap: false,
+        stop: StopCond {
+            f_star: Some(s.f_star),
+            eps_primal: Some(s.eps_abs),
+            max_epochs: 1e9,
+            max_secs: s.max_secs,
+            ..Default::default()
+        },
+        seed: s.seed,
+        ..Default::default()
+    }
+}
+
+/// Fig 2(a): suboptimality vs wall-clock, T = 8, tau in {1T, 3T, 5T}.
+pub fn fig2a(cfg: &Config, out: &Path) -> Result<()> {
+    let s = setup(cfg, "fig2a", out)?;
+    let t = cfg.get_usize("fig2a.workers", 8);
+    let mults = cfg.get_usize_list("fig2a.tau_multiples", &[1, 3, 5]);
+    let mut w = CsvWriter::to_file(
+        &out.join("fig2a.csv"),
+        &["variant", "elapsed_s", "suboptimality"],
+    )?;
+    for &m in &mults {
+        let tau = m * t;
+        let r = apbcfw::run(&s.problem, &run_cfg(&s, t, tau, (1, 1)));
+        for smp in &r.trace.samples {
+            w.row(&[
+                format!("T{t}_tau{tau}"),
+                format!("{:.4}", smp.elapsed_s),
+                format!("{:.6e}", smp.objective - s.f_star),
+            ]);
+        }
+    }
+    // single-thread BCFW reference
+    let r = apbcfw::run(&s.problem, &run_cfg(&s, 1, 1, (1, 1)));
+    for smp in &r.trace.samples {
+        w.row(&[
+            "BCFW_T1".into(),
+            format!("{:.4}", smp.elapsed_s),
+            format!("{:.6e}", smp.objective - s.f_star),
+        ]);
+    }
+    w.flush()?;
+    println!("Fig 2(a): suboptimality vs wall-clock (T={t})");
+    print_table(&w);
+    Ok(())
+}
+
+/// Search the best tau (fastest to target) among multiples of T.
+fn best_tau(
+    s: &Fig2Setup,
+    workers: usize,
+    mults: &[usize],
+    work: (u32, u32),
+) -> (usize, f64) {
+    let mut best = (workers, f64::INFINITY);
+    for &m in mults {
+        let tau = (m * workers).max(1);
+        let r = apbcfw::run(&s.problem, &run_cfg(s, workers, tau, work));
+        let t = r
+            .trace
+            .secs_to(s.f_star, s.eps_abs)
+            .unwrap_or(f64::INFINITY);
+        if t < best.1 {
+            best = (tau, t);
+        }
+    }
+    best
+}
+
+/// Fig 2(b): suboptimality vs wall-clock for varying T (best tau each).
+pub fn fig2b(cfg: &Config, out: &Path) -> Result<()> {
+    let s = setup(cfg, "fig2b", out)?;
+    let ts = cfg.get_usize_list("fig2b.workers", &[1, 2, 4, 8]);
+    let mults = cfg.get_usize_list("fig2b.tau_multiples", &[1, 2, 3]);
+    let mut w = CsvWriter::to_file(
+        &out.join("fig2b.csv"),
+        &["T", "best_tau", "elapsed_s", "suboptimality"],
+    )?;
+    for &t in &ts {
+        let (tau, _) = best_tau(&s, t, &mults, (1, 1));
+        let r = apbcfw::run(&s.problem, &run_cfg(&s, t, tau, (1, 1)));
+        for smp in &r.trace.samples {
+            w.row(&[
+                t.to_string(),
+                tau.to_string(),
+                format!("{:.4}", smp.elapsed_s),
+                format!("{:.6e}", smp.objective - s.f_star),
+            ]);
+        }
+    }
+    w.flush()?;
+    println!("Fig 2(b): suboptimality vs wall-clock, best tau per T");
+    print_table(&w);
+    Ok(())
+}
+
+fn speedup_vs_workers(
+    cfg: &Config,
+    section: &str,
+    out: &Path,
+    work: (u32, u32),
+) -> Result<()> {
+    let s = setup(cfg, section, out)?;
+    let ts = cfg
+        .get_usize_list(&format!("{section}.workers"), &[1, 2, 4, 8]);
+    let mults =
+        cfg.get_usize_list(&format!("{section}.tau_multiples"), &[1, 2, 3]);
+    let mut w = CsvWriter::to_file(
+        &out.join(format!("{section}.csv")),
+        &["T", "best_tau", "secs_to_target", "speedup"],
+    )?;
+    let mut base: Option<f64> = None;
+    for &t in &ts {
+        let (tau, secs) = best_tau(&s, t, &mults, work);
+        if base.is_none() {
+            base = Some(secs);
+        }
+        let sp = base.unwrap() / secs.max(1e-12);
+        w.row(&[
+            t.to_string(),
+            tau.to_string(),
+            if secs.is_finite() {
+                format!("{secs:.3}")
+            } else {
+                "-".into()
+            },
+            format!("{sp:.2}"),
+        ]);
+    }
+    w.flush()?;
+    println!("{section}: speedup vs workers (work multiplier {work:?})");
+    print_table(&w);
+    Ok(())
+}
+
+/// Fig 2(c): speedup vs T with the best tau per T.
+pub fn fig2c(cfg: &Config, out: &Path) -> Result<()> {
+    speedup_vs_workers(cfg, "fig2c", out, (1, 1))
+}
+
+/// Fig 2(d): speedup vs T with harder subproblems (m ~ Uniform(5, 15)).
+pub fn fig2d(cfg: &Config, out: &Path) -> Result<()> {
+    speedup_vs_workers(cfg, "fig2d", out, (5, 15))
+}

@@ -1,0 +1,145 @@
+//! Figure 3: asynchronous vs synchronous robustness to stragglers
+//! (paper §3.3): average time per effective data pass, AP-BCFW vs SP-BCFW.
+//!
+//! (a) one straggler with return probability p; x-axis slowdown 1/p.
+//! (b) heterogeneous workers p_i = theta + i/T; x-axis 1/theta.
+
+use super::print_table;
+use crate::coordinator::{apbcfw, sync, RunConfig};
+use crate::data::ocr_like;
+use crate::problems::ssvm::chain::ChainSsvm;
+use crate::sim::straggler::StragglerModel;
+use crate::solver::StopCond;
+use crate::util::config::Config;
+use crate::util::csv::CsvWriter;
+use anyhow::Result;
+use std::path::Path;
+use std::sync::Arc;
+
+fn problem(cfg: &Config, section: &str) -> ChainSsvm {
+    let n = cfg.get_usize(&format!("{section}.n"), 400);
+    let k = cfg.get_usize(&format!("{section}.k"), 16);
+    let d = cfg.get_usize(&format!("{section}.d"), 64);
+    let ell = cfg.get_usize(&format!("{section}.ell"), 7);
+    let lam = cfg.get_f64(&format!("{section}.lambda"), 1.0);
+    let seed = cfg.get_u64(&format!("{section}.seed"), 4);
+    let data = Arc::new(ocr_like::generate(n, k, d, ell, 0.15, seed));
+    ChainSsvm::new(data, lam)
+}
+
+fn run_pair(
+    p: &ChainSsvm,
+    workers: usize,
+    tau: usize,
+    straggler: StragglerModel,
+    passes: f64,
+    seed: u64,
+) -> (f64, f64) {
+    let mk = |straggler: StragglerModel| RunConfig {
+        workers,
+        tau,
+        line_search: true,
+        staleness_rule: true,
+        straggler,
+        work_multiplier: (1, 1),
+        sample_every: 64,
+        exact_gap: false,
+        stop: StopCond {
+            max_epochs: passes,
+            max_secs: 60.0,
+            ..Default::default()
+        },
+        seed,
+        ..Default::default()
+    };
+    let ra = apbcfw::run(p, &mk(straggler.clone()));
+    let rs = sync::run(p, &mk(straggler));
+    (ra.secs_per_pass, rs.secs_per_pass)
+}
+
+/// Fig 3(a): one straggler with return probability p.
+pub fn fig3a(cfg: &Config, out: &Path) -> Result<()> {
+    let p = problem(cfg, "fig3a");
+    let workers = cfg.get_usize("fig3a.workers", 14);
+    let tau = cfg.get_usize("fig3a.tau", 14);
+    let passes = cfg.get_f64("fig3a.passes", 10.0);
+    let seed = cfg.get_u64("fig3a.seed", 5);
+    let probs =
+        cfg.get_f64_list("fig3a.probs", &[1.0, 0.5, 0.25, 0.167, 0.125]);
+
+    let mut w = CsvWriter::to_file(
+        &out.join("fig3a.csv"),
+        &["slowdown_1_over_p", "async_norm", "sync_norm"],
+    )?;
+    let mut base: Option<(f64, f64)> = None;
+    for &prob in &probs {
+        let (a, s) = run_pair(
+            &p,
+            workers,
+            tau,
+            StragglerModel::single(workers, prob),
+            passes,
+            seed,
+        );
+        if base.is_none() {
+            base = Some((a, s));
+        }
+        let (ba, bs) = base.unwrap();
+        w.row(&[
+            format!("{:.2}", 1.0 / prob),
+            format!("{:.3}", a / ba),
+            format!("{:.3}", s / bs),
+        ]);
+    }
+    w.flush()?;
+    println!(
+        "Fig 3(a): time/effective-pass (normalized) vs straggler slowdown"
+    );
+    print_table(&w);
+    Ok(())
+}
+
+/// Fig 3(b): heterogeneous workers p_i = theta + i/T.
+pub fn fig3b(cfg: &Config, out: &Path) -> Result<()> {
+    let p = problem(cfg, "fig3b");
+    let workers = cfg.get_usize("fig3b.workers", 14);
+    let tau = cfg.get_usize("fig3b.tau", 14);
+    let passes = cfg.get_f64("fig3b.passes", 10.0);
+    let seed = cfg.get_u64("fig3b.seed", 6);
+    let thetas =
+        cfg.get_f64_list("fig3b.thetas", &[1.0, 0.5, 0.33, 0.2, 0.1, 0.0]);
+
+    let mut w = CsvWriter::to_file(
+        &out.join("fig3b.csv"),
+        &["one_over_theta", "async_norm", "sync_norm"],
+    )?;
+    let mut base: Option<(f64, f64)> = None;
+    for &theta in &thetas {
+        let (a, s) = run_pair(
+            &p,
+            workers,
+            tau,
+            StragglerModel::heterogeneous(workers, theta),
+            passes,
+            seed,
+        );
+        if base.is_none() {
+            base = Some((a, s));
+        }
+        let (ba, bs) = base.unwrap();
+        let x = if theta > 0.0 {
+            format!("{:.2}", 1.0 / theta)
+        } else {
+            "inf".into()
+        };
+        w.row(&[
+            x,
+            format!("{:.3}", a / ba),
+            format!("{:.3}", s / bs),
+        ]);
+    }
+    w.flush()?;
+    println!("Fig 3(b): time/effective-pass vs heterogeneity 1/theta");
+    print_table(&w);
+    Ok(())
+}

@@ -1,0 +1,77 @@
+//! Figure 5 (appendix): Group Fused Lasso signal-recovery illustration —
+//! original, noisy and recovered signal series.
+
+use super::print_table;
+use crate::data::signal;
+use crate::problems::gfl::Gfl;
+use crate::solver::{minibatch, SolveOptions, StopCond};
+use crate::util::config::Config;
+use crate::util::csv::CsvWriter;
+use anyhow::Result;
+use std::path::Path;
+
+pub fn run(cfg: &Config, out: &Path) -> Result<()> {
+    let n = cfg.get_usize("fig5.n", 100);
+    let d = cfg.get_usize("fig5.d", 10);
+    let lam = cfg.get_f64("fig5.lambda", 1.0);
+    let segments = cfg.get_usize("fig5.segments", 5);
+    let noise = cfg.get_f64("fig5.noise", 0.8);
+    let seed = cfg.get_u64("fig5.seed", 8);
+    let epochs = cfg.get_f64("fig5.epochs", 3000.0);
+
+    let sig = signal::piecewise_constant(d, n, segments, 3.0, noise, seed);
+    let problem = Gfl::new(d, n, lam, sig.noisy.clone());
+    let opts = SolveOptions {
+        tau: 8,
+        line_search: true,
+        sample_every: 64,
+        exact_gap: false,
+        stop: StopCond {
+            max_epochs: epochs,
+            max_secs: 120.0,
+            ..Default::default()
+        },
+        seed,
+        ..Default::default()
+    };
+    let r = minibatch::solve(&problem, &opts);
+    let x = problem.primal_signal(&r.raw_param);
+
+    // Per-time-point CSV with the first dimension of each series.
+    let mut w = CsvWriter::to_file(
+        &out.join("fig5.csv"),
+        &["t", "original_dim0", "noisy_dim0", "recovered_dim0"],
+    )?;
+    for t in 0..n {
+        w.row(&[
+            t.to_string(),
+            format!("{:.4}", sig.clean[t * d]),
+            format!("{:.4}", sig.noisy[t * d]),
+            format!("{:.4}", x[t * d]),
+        ]);
+    }
+    w.flush()?;
+
+    // Quality summary: recovery MSE must beat the noisy MSE.
+    let mse = |a: &[f32]| -> f64 {
+        a.iter()
+            .zip(&sig.clean)
+            .map(|(v, c)| ((v - c) as f64).powi(2))
+            .sum::<f64>()
+            / (d * n) as f64
+    };
+    let mse_noisy = mse(&sig.noisy);
+    let mse_rec = mse(&x);
+    println!("Fig 5: GFL signal recovery (d={d}, n={n}, lambda={lam})");
+    println!("  noisy MSE     = {mse_noisy:.4}");
+    println!("  recovered MSE = {mse_rec:.4}");
+    println!(
+        "  (series in results/fig5.csv; denoising factor {:.2}x)",
+        mse_noisy / mse_rec.max(1e-12)
+    );
+    let mut summary = CsvWriter::in_memory(&["metric", "value"]);
+    summary.row(&["mse_noisy".into(), format!("{mse_noisy:.5}")]);
+    summary.row(&["mse_recovered".into(), format!("{mse_rec:.5}")]);
+    print_table(&summary);
+    Ok(())
+}

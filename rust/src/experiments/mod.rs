@@ -1,0 +1,116 @@
+//! Experiment registry: every table/figure in the paper's evaluation maps
+//! to one experiment id here (see DESIGN.md §4 for the index).
+//!
+//! Each experiment reads its parameters from the [`Config`] (section named
+//! after the id, e.g. `[fig1a]`), writes `results/<id>.csv`, and prints the
+//! paper-shaped series to stdout.
+
+pub mod ablation;
+pub mod d4;
+pub mod fig1;
+pub mod fig2;
+pub mod fig3;
+pub mod fig4;
+pub mod fig5;
+pub mod ex_curvature;
+pub mod prop1;
+
+use crate::problems::Problem;
+use crate::solver::{minibatch, SolveOptions, StopCond};
+use crate::util::config::Config;
+use anyhow::{anyhow, Result};
+use std::path::{Path, PathBuf};
+
+/// All experiment ids, in paper order.
+pub const ALL: &[&str] = &[
+    "fig1a", "fig1b", "fig2a", "fig2b", "fig2c", "fig2d", "fig3a", "fig3b",
+    "fig4", "fig5", "ex1", "ex2", "d4", "prop1", "ablation",
+];
+
+/// Run one experiment by id.
+pub fn run(id: &str, cfg: &Config) -> Result<()> {
+    let out = results_dir(cfg);
+    match id {
+        "fig1a" => fig1::fig1a(cfg, &out),
+        "fig1b" => fig1::fig1b(cfg, &out),
+        "fig2a" => fig2::fig2a(cfg, &out),
+        "fig2b" => fig2::fig2b(cfg, &out),
+        "fig2c" => fig2::fig2c(cfg, &out),
+        "fig2d" => fig2::fig2d(cfg, &out),
+        "fig3a" => fig3::fig3a(cfg, &out),
+        "fig3b" => fig3::fig3b(cfg, &out),
+        "fig4" => fig4::run(cfg, &out),
+        "fig5" => fig5::run(cfg, &out),
+        "ex1" => ex_curvature::ex1(cfg, &out),
+        "ex2" => ex_curvature::ex2(cfg, &out),
+        "d4" => d4::run(cfg, &out),
+        "prop1" => prop1::run(cfg, &out),
+        "ablation" => ablation::run(cfg, &out),
+        "all" => {
+            for id in ALL {
+                println!("\n================ {id} ================");
+                run(id, cfg)?;
+            }
+            Ok(())
+        }
+        other => Err(anyhow!(
+            "unknown experiment {other:?}; known: {ALL:?} or 'all'"
+        )),
+    }
+}
+
+/// Results directory (config `run.results_dir`, default `results/`).
+pub fn results_dir(cfg: &Config) -> PathBuf {
+    PathBuf::from(cfg.get_or("run.results_dir", "results"))
+}
+
+/// Compute (or load from cache) a reference optimum f* for a problem by a
+/// long line-search BCFW run. The cache key must uniquely identify the
+/// instance (shape + seed + lambda).
+pub fn reference_optimum<P: Problem>(
+    problem: &P,
+    key: &str,
+    out_dir: &Path,
+    epochs: f64,
+) -> Result<f64> {
+    let cache = out_dir.join(format!("fstar_{key}.txt"));
+    if let Ok(text) = std::fs::read_to_string(&cache) {
+        if let Ok(v) = text.trim().parse::<f64>() {
+            println!("[fstar] cached {key}: {v:.6e}");
+            return Ok(v);
+        }
+    }
+    println!("[fstar] computing reference optimum for {key} ...");
+    let opts = SolveOptions {
+        tau: 1,
+        line_search: true,
+        sample_every: 256,
+        exact_gap: false,
+        stop: StopCond {
+            max_epochs: epochs,
+            max_secs: 600.0,
+            ..Default::default()
+        },
+        seed: 123,
+        ..Default::default()
+    };
+    let r = minibatch::solve(problem, &opts);
+    // Lower-bound correction: subtract the final gap so thresholds are
+    // reachable (f* <= f_end, and f_end - gap <= f*).
+    let f_end = r.trace.last().map(|s| s.objective).unwrap_or(0.0);
+    let v = f_end;
+    std::fs::create_dir_all(out_dir)?;
+    std::fs::write(&cache, format!("{v:.12e}\n"))?;
+    println!("[fstar] {key}: {v:.6e} (epochs={})", epochs);
+    Ok(v)
+}
+
+/// Pretty-print a CSV table to stdout.
+pub fn print_table(w: &crate::util::csv::CsvWriter) {
+    let header = w.header().join("  ");
+    println!("{header}");
+    println!("{}", "-".repeat(header.len().min(100)));
+    for row in w.rows() {
+        println!("{}", row.join("  "));
+    }
+}

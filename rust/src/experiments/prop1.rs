@@ -1,0 +1,117 @@
+//! Proposition 1 (§D.1): collision / coupon-collector accounting for the
+//! distributed update scheme — expected oracle calls to fill tau disjoint
+//! blocks, and the P(> 2 tau draws) tail bound.
+
+use super::print_table;
+use crate::util::config::Config;
+use crate::util::csv::CsvWriter;
+use crate::util::rng::Pcg64;
+use anyhow::Result;
+use std::path::Path;
+
+/// Expected draws to collect tau distinct of n: tau + sum_{i<tau} i/(n-i).
+pub fn expected_draws(n: usize, tau: usize) -> f64 {
+    let mut acc = tau as f64;
+    for i in 1..tau {
+        acc += i as f64 / (n - i) as f64;
+    }
+    acc
+}
+
+/// Simulate the draws needed to see tau distinct blocks of n.
+pub fn simulate_draws(n: usize, tau: usize, rng: &mut Pcg64) -> u64 {
+    let mut seen = vec![false; n];
+    let mut distinct = 0usize;
+    let mut draws = 0u64;
+    while distinct < tau {
+        let i = rng.below(n);
+        draws += 1;
+        if !seen[i] {
+            seen[i] = true;
+            distinct += 1;
+        }
+    }
+    draws
+}
+
+pub fn run(cfg: &Config, out: &Path) -> Result<()> {
+    let n = cfg.get_usize("prop1.n", 1000);
+    let taus = cfg.get_usize_list(
+        "prop1.taus",
+        &[10, 50, 100, 200, 400, 600],
+    );
+    let reps = cfg.get_usize("prop1.reps", 2000);
+    let seed = cfg.get_u64("prop1.seed", 9);
+
+    let mut rng = Pcg64::seeded(seed);
+    let mut w = CsvWriter::to_file(
+        &out.join("prop1.csv"),
+        &["tau", "expected", "simulated_mean", "p_gt_2tau"],
+    )?;
+    for &tau in &taus {
+        let mut acc = 0.0f64;
+        let mut tail = 0usize;
+        for _ in 0..reps {
+            let d = simulate_draws(n, tau, &mut rng);
+            acc += d as f64;
+            if d > 2 * tau as u64 {
+                tail += 1;
+            }
+        }
+        w.row(&[
+            tau.to_string(),
+            format!("{:.2}", expected_draws(n, tau)),
+            format!("{:.2}", acc / reps as f64),
+            format!("{:.4}", tail as f64 / reps as f64),
+        ]);
+    }
+    w.flush()?;
+    println!("Prop 1 (§D.1): oracle calls per iteration vs tau (n={n})");
+    print_table(&w);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn formula_matches_simulation() {
+        let mut rng = Pcg64::seeded(31);
+        for (n, tau) in [(100, 10), (100, 60), (50, 25)] {
+            let expect = expected_draws(n, tau);
+            let reps = 4000;
+            let mean: f64 = (0..reps)
+                .map(|_| simulate_draws(n, tau, &mut rng) as f64)
+                .sum::<f64>()
+                / reps as f64;
+            assert!(
+                (mean - expect).abs() < 0.05 * expect,
+                "n={n} tau={tau}: sim {mean} vs formula {expect}"
+            );
+        }
+    }
+
+    #[test]
+    fn tail_bound_regime() {
+        // Prop 1(ii): for 0.02n < tau < 0.6n, P(draws > 2 tau) is tiny.
+        let mut rng = Pcg64::seeded(32);
+        let (n, tau) = (500, 200);
+        let reps = 2000;
+        let tail = (0..reps)
+            .filter(|_| simulate_draws(n, tau, &mut rng) > 2 * tau as u64)
+            .count();
+        assert!(tail == 0, "tail events: {tail}");
+    }
+
+    #[test]
+    fn expected_draws_monotone_in_tau() {
+        let mut prev = 0.0;
+        for tau in [1usize, 10, 100, 500, 900] {
+            let e = expected_draws(1000, tau);
+            assert!(e > prev);
+            assert!(e >= tau as f64);
+            prev = e;
+        }
+    }
+}

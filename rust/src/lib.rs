@@ -1,0 +1,31 @@
+//! AP-BCFW — Asynchronous Parallel Block-Coordinate Frank-Wolfe.
+//!
+//! Reproduction of Wang, Sadhanala, Dai, Neiswanger, Sra & Xing, "Parallel
+//! and Distributed Block-Coordinate Frank-Wolfe Algorithms" (ICML 2016), as
+//! a three-layer rust + JAX + Pallas system:
+//!
+//! - **Layer 3 (this crate)** — the paper's contribution: the asynchronous
+//!   minibatch coordinator ([`coordinator`]), baselines ([`solver`]),
+//!   delay/straggler simulation ([`sim`]), problems ([`problems`]) and the
+//!   curvature analysis toolkit ([`analysis`]).
+//! - **Layer 2/1 (python/, build time only)** — JAX models and Pallas
+//!   kernels AOT-lowered to HLO text artifacts, executed through the PJRT
+//!   CPU client by [`runtime`]. Python never runs on the solve path.
+//!
+//! See DESIGN.md for the full system inventory and experiment index.
+
+pub mod analysis;
+pub mod cli;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod problems;
+pub mod runtime;
+pub mod sim;
+pub mod solver;
+pub mod util;
+
+/// True when a PJRT CPU client can be constructed (sanity probe).
+pub fn xla_available() -> bool {
+    xla::PjRtClient::cpu().is_ok()
+}

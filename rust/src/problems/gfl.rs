@@ -1,0 +1,494 @@
+//! Group Fused Lasso dual (paper Example 2, Eq. 10).
+//!
+//! Variables `U in R^{d x m}` (m = n-1 blocks, one per change point), block
+//! constraint `||U[:, t]||_2 <= lambda`. Objective
+//!
+//!   f(U) = 1/2 ||U D^T||_F^2 - <U, B>,   B = Y D,
+//!
+//! gradient the tridiagonal stencil `G[:,t] = -u_{t-1} + 2u_t - u_{t+1} - b_t`,
+//! linear oracle `s_t = -lambda g_t / ||g_t||`. The parameter vector IS the
+//! flattened U (column-major), so workers can evaluate the stencil locally
+//! from three columns of the shared parameter.
+//!
+//! The oracle can be served either natively (default) or by the AOT-compiled
+//! `gfl_step` XLA artifact through [`GflOracleBackend`] — the two are
+//! cross-validated in integration tests.
+
+use super::{ApplyInfo, ApplyOptions, BlockOracle, Problem, ProjectableProblem};
+use crate::util::la;
+use std::sync::Arc;
+
+/// Pluggable full-step evaluator (the XLA artifact path implements this).
+pub trait GflOracleBackend: Send + Sync {
+    /// Given flattened U, return (G, S, gap, f) exactly as the
+    /// `gfl_step` artifact does.
+    fn step(&self, u: &[f32]) -> (Vec<f32>, Vec<f32>, Vec<f32>, f64);
+}
+
+/// Group Fused Lasso dual problem instance.
+pub struct Gfl {
+    /// Feature dimension d.
+    pub d: usize,
+    /// Number of blocks m = n - 1.
+    pub m: usize,
+    /// Ball radius lambda.
+    pub lam: f64,
+    /// B = Y D, flattened column-major (d x m).
+    pub b: Vec<f32>,
+    /// Observations Y (d x n), kept for primal recovery.
+    pub y: Vec<f32>,
+    /// Optional XLA backend for the oracle (None = native).
+    pub backend: Option<Arc<dyn GflOracleBackend>>,
+}
+
+impl Gfl {
+    /// Build from observations `y` (d x n column-major).
+    pub fn new(d: usize, n: usize, lam: f64, y: Vec<f32>) -> Self {
+        assert!(n >= 2, "need at least 2 time points");
+        assert_eq!(y.len(), d * n);
+        let m = n - 1;
+        let mut b = vec![0.0f32; d * m];
+        for t in 0..m {
+            for r in 0..d {
+                b[t * d + r] = y[(t + 1) * d + r] - y[t * d + r];
+            }
+        }
+        Self {
+            d,
+            m,
+            lam,
+            b,
+            y,
+            backend: None,
+        }
+    }
+
+    pub fn with_backend(mut self, be: Arc<dyn GflOracleBackend>) -> Self {
+        self.backend = Some(be);
+        self
+    }
+
+    #[inline]
+    fn col<'a>(&self, u: &'a [f32], t: usize) -> &'a [f32] {
+        &u[t * self.d..(t + 1) * self.d]
+    }
+
+    /// Gradient column t at `u` (the tridiagonal stencil).
+    pub fn grad_col(&self, u: &[f32], t: usize) -> Vec<f32> {
+        let d = self.d;
+        let mut g = vec![0.0f32; d];
+        let ut = self.col(u, t);
+        let bt = &self.b[t * d..(t + 1) * d];
+        for r in 0..d {
+            g[r] = 2.0 * ut[r] - bt[r];
+        }
+        if t > 0 {
+            let up = self.col(u, t - 1);
+            for r in 0..d {
+                g[r] -= up[r];
+            }
+        }
+        if t + 1 < self.m {
+            let un = self.col(u, t + 1);
+            for r in 0..d {
+                g[r] -= un[r];
+            }
+        }
+        g
+    }
+
+    fn oracle_from_grad(&self, t: usize, g: Vec<f32>) -> BlockOracle {
+        let nrm = la::norm2(&g);
+        let mut s = g;
+        if nrm > 0.0 {
+            la::scale((-self.lam / nrm) as f32, &mut s);
+        } else {
+            s.iter_mut().for_each(|v| *v = 0.0);
+        }
+        BlockOracle {
+            block: t,
+            s,
+            ls: 0.0,
+        }
+    }
+
+    /// Objective f(U) = 1/2 <U, U D^T D> - <U, B> (O(dm)).
+    pub fn objective_of(&self, u: &[f32]) -> f64 {
+        let mut ug = 0.0f64;
+        let mut ub = 0.0f64;
+        for t in 0..self.m {
+            let g = self.grad_col(u, t);
+            let ut = self.col(u, t);
+            let bt = &self.b[t * self.d..(t + 1) * self.d];
+            // grad = (U D^T D)_t - b_t, so <u_t, (UD^TD)_t> = <u_t, g_t + b_t>.
+            ug += la::dot(ut, &g) + la::dot(ut, bt);
+            ub += la::dot(ut, bt);
+        }
+        0.5 * ug - ub
+    }
+
+    /// Primal recovery X = Y - U D^T (d x n, column-major).
+    pub fn primal_signal(&self, u: &[f32]) -> Vec<f32> {
+        let d = self.d;
+        let n = self.m + 1;
+        let mut x = self.y.clone();
+        for j in 0..n {
+            for r in 0..d {
+                let mut udt = 0.0f32;
+                if j >= 1 {
+                    udt += u[(j - 1) * d + r];
+                }
+                if j < self.m {
+                    udt -= u[j * d + r];
+                }
+                x[j * d + r] -= udt;
+            }
+        }
+        x
+    }
+
+    /// Primal objective 1/2||X - Y||^2 + lam * sum_t ||x_{t+1} - x_t||.
+    pub fn primal_objective(&self, u: &[f32]) -> f64 {
+        let d = self.d;
+        let n = self.m + 1;
+        let x = self.primal_signal(u);
+        let mut quad = 0.0f64;
+        for j in 0..d * n {
+            let r = (x[j] - self.y[j]) as f64;
+            quad += r * r;
+        }
+        let mut tv = 0.0f64;
+        for t in 0..n - 1 {
+            let mut s = 0.0f64;
+            for r in 0..d {
+                let diff = (x[(t + 1) * d + r] - x[t * d + r]) as f64;
+                s += diff * diff;
+            }
+            tv += s.sqrt();
+        }
+        0.5 * quad + self.lam * tv
+    }
+}
+
+impl Problem for Gfl {
+    type ServerState = ();
+
+    fn name(&self) -> &'static str {
+        "gfl"
+    }
+
+    fn num_blocks(&self) -> usize {
+        self.m
+    }
+
+    fn param_dim(&self) -> usize {
+        self.d * self.m
+    }
+
+    fn init_param(&self) -> Vec<f32> {
+        vec![0.0; self.d * self.m]
+    }
+
+    fn init_server(&self) -> Self::ServerState {}
+
+    fn oracle(&self, param: &[f32], block: usize) -> BlockOracle {
+        if let Some(be) = &self.backend {
+            // Artifact path: full-step evaluation, slice the block column.
+            let (_g, s, _gap, _f) = be.step(param);
+            let d = self.d;
+            return BlockOracle {
+                block,
+                s: s[block * d..(block + 1) * d].to_vec(),
+                ls: 0.0,
+            };
+        }
+        let g = self.grad_col(param, block);
+        self.oracle_from_grad(block, g)
+    }
+
+    fn block_gap(
+        &self,
+        _state: &Self::ServerState,
+        param: &[f32],
+        o: &BlockOracle,
+    ) -> f64 {
+        let g = self.grad_col(param, o.block);
+        let ut = self.col(param, o.block);
+        la::dot(ut, &g) - la::dot(&o.s, &g)
+    }
+
+    fn apply(
+        &self,
+        _state: &mut Self::ServerState,
+        param: &mut [f32],
+        batch: &[BlockOracle],
+        opts: ApplyOptions,
+    ) -> ApplyInfo {
+        let d = self.d;
+        // Gap of the batch at the current parameter (also the negative
+        // directional derivative, used by line search).
+        let mut batch_gap = 0.0f64;
+        for o in batch {
+            batch_gap += self.block_gap(&(), param, o);
+        }
+        let gamma = if opts.line_search {
+            // f(U + gamma Delta) quadratic in gamma:
+            //   gamma* = batch_gap / <Delta, Delta (D^T D)>.
+            // Delta is supported on the batch columns.
+            let mut delta = std::collections::HashMap::new();
+            for o in batch {
+                let ut = self.col(param, o.block);
+                let dcol: Vec<f32> =
+                    o.s.iter().zip(ut.iter()).map(|(s, u)| s - u).collect();
+                delta.insert(o.block, dcol);
+            }
+            let zeros = vec![0.0f32; d];
+            let mut quad = 0.0f64;
+            for (&t, dc) in &delta {
+                // (Delta D^T D)_t = 2 dc_t - dc_{t-1} - dc_{t+1}
+                let prev = if t > 0 {
+                    delta.get(&(t - 1)).map(|v| v.as_slice()).unwrap_or(&zeros)
+                } else {
+                    &zeros
+                };
+                let next = delta
+                    .get(&(t + 1))
+                    .map(|v| v.as_slice())
+                    .unwrap_or(&zeros);
+                for r in 0..d {
+                    quad += dc[r] as f64
+                        * (2.0 * dc[r] as f64
+                            - prev[r] as f64
+                            - next[r] as f64);
+                }
+            }
+            if quad <= 0.0 {
+                1.0
+            } else {
+                (batch_gap / quad).clamp(0.0, 1.0) as f32
+            }
+        } else {
+            opts.gamma
+        };
+        for o in batch {
+            let col = &mut param[o.block * d..(o.block + 1) * d];
+            la::lerp_into(gamma, &o.s, col);
+        }
+        ApplyInfo { gamma, batch_gap }
+    }
+
+    fn objective_from(&self, param: &[f32], _aux: f64) -> f64 {
+        self.objective_of(param)
+    }
+
+    fn touched_ranges(
+        &self,
+        batch: &[BlockOracle],
+    ) -> Option<Vec<std::ops::Range<usize>>> {
+        Some(
+            batch
+                .iter()
+                .map(|o| o.block * self.d..(o.block + 1) * self.d)
+                .collect(),
+        )
+    }
+}
+
+impl ProjectableProblem for Gfl {
+    fn block_range(&self, block: usize) -> std::ops::Range<usize> {
+        block * self.d..(block + 1) * self.d
+    }
+
+    fn block_grad(&self, param: &[f32], block: usize) -> Vec<f32> {
+        self.grad_col(param, block)
+    }
+
+    fn project_block(&self, _block: usize, x: &mut [f32]) {
+        la::project_l2_ball(self.lam, x);
+    }
+
+    fn block_lipschitz(&self, _block: usize) -> f64 {
+        // Diagonal block of D^T D is 2 I.
+        2.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn instance(seed: u64) -> (Gfl, Vec<f32>) {
+        let (d, n, lam) = (4, 20, 0.3);
+        let mut rng = Pcg64::seeded(seed);
+        let y = rng.gaussian_vec(d * n);
+        let gfl = Gfl::new(d, n, lam, y);
+        // random feasible U
+        let mut u = rng.gaussian_vec(d * (n - 1));
+        for t in 0..n - 1 {
+            la::project_l2_ball(lam, &mut u[t * d..(t + 1) * d]);
+        }
+        (gfl, u)
+    }
+
+    #[test]
+    fn gradient_matches_finite_difference() {
+        let (gfl, u) = instance(1);
+        let mut rng = Pcg64::seeded(2);
+        let eps = 1e-3;
+        for _ in 0..5 {
+            let t = rng.below(gfl.m);
+            let g = gfl.grad_col(&u, t);
+            let r = rng.below(gfl.d);
+            let mut up = u.clone();
+            up[t * gfl.d + r] += eps;
+            let mut um = u.clone();
+            um[t * gfl.d + r] -= eps;
+            let fd = (gfl.objective_of(&up) - gfl.objective_of(&um))
+                / (2.0 * eps as f64);
+            assert!(
+                (fd - g[r] as f64).abs() < 1e-2,
+                "fd={fd} g={} (t={t},r={r})",
+                g[r]
+            );
+        }
+    }
+
+    #[test]
+    fn oracle_is_ball_boundary_minimizer() {
+        let (gfl, u) = instance(3);
+        let mut rng = Pcg64::seeded(4);
+        for t in [0usize, 5, gfl.m - 1] {
+            let o = gfl.oracle(&u, t);
+            let g = gfl.grad_col(&u, t);
+            let val = la::dot(&o.s, &g);
+            assert!((la::norm2(&o.s) - gfl.lam).abs() < 1e-5);
+            for _ in 0..30 {
+                let mut v = rng.gaussian_vec(gfl.d);
+                la::project_l2_ball(gfl.lam, &mut v);
+                assert!(val <= la::dot(&v, &g) + 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn gap_nonnegative_and_zero_only_near_opt() {
+        let (gfl, u) = instance(5);
+        for t in 0..gfl.m {
+            let o = gfl.oracle(&u, t);
+            assert!(gfl.block_gap(&(), &u, &o) >= -1e-8);
+        }
+    }
+
+    #[test]
+    fn apply_fixed_step_decreases_objective_for_small_gamma() {
+        let (gfl, u) = instance(6);
+        let mut param = u.clone();
+        let batch: Vec<BlockOracle> =
+            (0..4).map(|t| gfl.oracle(&param, t * 3)).collect();
+        let f0 = gfl.objective_of(&param);
+        gfl.apply(
+            &mut (),
+            &mut param,
+            &batch,
+            ApplyOptions {
+                gamma: 0.05,
+                line_search: false,
+            },
+        );
+        assert!(gfl.objective_of(&param) < f0);
+    }
+
+    #[test]
+    fn line_search_beats_fixed_step() {
+        let (gfl, u) = instance(7);
+        let batch: Vec<BlockOracle> =
+            (0..5).map(|t| gfl.oracle(&u, t)).collect();
+        let mut p_ls = u.clone();
+        let info = gfl.apply(
+            &mut (),
+            &mut p_ls,
+            &batch,
+            ApplyOptions {
+                gamma: 0.0,
+                line_search: true,
+            },
+        );
+        assert!(info.gamma > 0.0 && info.gamma <= 1.0);
+        let f_ls = gfl.objective_of(&p_ls);
+        for gamma in [0.01f32, 0.1, 0.5, 1.0] {
+            let mut p = u.clone();
+            gfl.apply(
+                &mut (),
+                &mut p,
+                &batch,
+                ApplyOptions {
+                    gamma,
+                    line_search: false,
+                },
+            );
+            assert!(f_ls <= gfl.objective_of(&p) + 1e-6, "gamma={gamma}");
+        }
+    }
+
+    #[test]
+    fn feasibility_preserved_by_apply() {
+        let (gfl, u) = instance(8);
+        let mut param = u;
+        for k in 0..50 {
+            let t = k % gfl.m;
+            let o = gfl.oracle(&param, t);
+            gfl.apply(
+                &mut (),
+                &mut param,
+                &[o],
+                ApplyOptions {
+                    gamma: 0.3,
+                    line_search: false,
+                },
+            );
+        }
+        for t in 0..gfl.m {
+            let nrm = la::norm2(&param[t * gfl.d..(t + 1) * gfl.d]);
+            assert!(nrm <= gfl.lam + 1e-5, "block {t} norm {nrm}");
+        }
+    }
+
+    #[test]
+    fn primal_dual_consistency_at_zero() {
+        let (gfl, _) = instance(9);
+        let u0 = gfl.init_param();
+        let x = gfl.primal_signal(&u0);
+        assert_eq!(x, gfl.y);
+        assert_eq!(gfl.objective_of(&u0), 0.0);
+    }
+
+    #[test]
+    fn full_gap_bounds_suboptimality() {
+        // g(x) >= f(x) - f(x*): run BCFW-ish loop; check invariant en route.
+        let (gfl, _) = instance(10);
+        let mut param = gfl.init_param();
+        let n = gfl.m;
+        let mut rng = Pcg64::seeded(11);
+        let mut last_f = f64::INFINITY;
+        for k in 0..300 {
+            let t = rng.below(n);
+            let o = gfl.oracle(&param, t);
+            let gamma = 2.0 * n as f32 / (k as f32 + 2.0 * n as f32);
+            gfl.apply(
+                &mut (),
+                &mut param,
+                &[o],
+                ApplyOptions {
+                    gamma,
+                    line_search: false,
+                },
+            );
+            last_f = gfl.objective_of(&param);
+        }
+        let gap = gfl.full_gap(&(), &param);
+        assert!(gap >= 0.0);
+        // crude f* lower bound from the gap: f* >= f - gap
+        assert!(last_f - gap <= last_f);
+    }
+}

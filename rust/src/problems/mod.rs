@@ -1,0 +1,146 @@
+//! Problem abstraction for block-separable Frank-Wolfe (paper Eq. 2).
+//!
+//! A [`Problem`] is `min_x f(x)` over `M = M_1 x ... x M_n`. The split
+//! between *parameter* and *server state* mirrors the paper's system model:
+//!
+//! - the **parameter** is the small dense vector broadcast to workers (for
+//!   Group Fused Lasso it is the dual matrix `U` itself; for structural SVM
+//!   it is the primal `w = A alpha`, not the exponentially large `alpha`);
+//! - the **server state** is per-block bookkeeping only the server needs to
+//!   apply updates (e.g. BCFW's per-datapoint `w_i`, `l_i`).
+//!
+//! Workers call [`Problem::oracle`] on a (possibly stale) parameter
+//! snapshot; the server calls [`Problem::apply`] with a batch of oracles for
+//! *disjoint* blocks, the paper's Algorithm 1 step 3.
+
+pub mod gfl;
+pub mod simplex_qp;
+pub mod ssvm;
+
+/// A linear-oracle solution for one block.
+///
+/// `s` is the payload the server needs to apply the update: the oracle
+/// vertex itself for parameter-space problems (GFL: the s-column; simplex
+/// QP: the vertex), or the derived primal direction for structural SVM
+/// (`w_s = psi_i(y*)/(lambda n)`).
+#[derive(Debug, Clone)]
+pub struct BlockOracle {
+    /// Block index in [0, n).
+    pub block: usize,
+    /// Solution payload (dimension = problem-specific block payload dim).
+    pub s: Vec<f32>,
+    /// Scalar payload (SSVM: l_s = L_i(y*)/n; unused elsewhere).
+    pub ls: f64,
+}
+
+/// Options controlling how the server applies a minibatch.
+#[derive(Debug, Clone, Copy)]
+pub struct ApplyOptions {
+    /// Fixed step size to use when `line_search` is false.
+    pub gamma: f32,
+    /// Exact coordinate line search (paper's line-search variant).
+    pub line_search: bool,
+}
+
+/// Result of applying a minibatch.
+#[derive(Debug, Clone, Copy)]
+pub struct ApplyInfo {
+    /// Step size actually used.
+    pub gamma: f32,
+    /// Surrogate-gap mass of the applied batch, evaluated at the
+    /// pre-update parameter: sum_{i in S} <x_i - s_i, grad_i f(x)>.
+    pub batch_gap: f64,
+}
+
+/// A block-separable Frank-Wolfe problem (paper Eq. 2).
+pub trait Problem: Send + Sync {
+    /// Server-side bookkeeping state.
+    type ServerState: Send;
+
+    fn name(&self) -> &'static str;
+
+    /// Number of coordinate blocks n.
+    fn num_blocks(&self) -> usize;
+
+    /// Dimension of the shared parameter vector.
+    fn param_dim(&self) -> usize;
+
+    /// Feasible initial parameter.
+    fn init_param(&self) -> Vec<f32>;
+
+    fn init_server(&self) -> Self::ServerState;
+
+    /// Solve the block linear subproblem (paper Eq. 3) at `param`.
+    fn oracle(&self, param: &[f32], block: usize) -> BlockOracle;
+
+    /// Surrogate-gap contribution of `o` evaluated at the *current* param
+    /// and state: `g_i = <x_i - s_i, grad_i f(x)>`.
+    fn block_gap(
+        &self,
+        state: &Self::ServerState,
+        param: &[f32],
+        o: &BlockOracle,
+    ) -> f64;
+
+    /// Apply a batch of oracles for pairwise-distinct blocks.
+    fn apply(
+        &self,
+        state: &mut Self::ServerState,
+        param: &mut [f32],
+        batch: &[BlockOracle],
+        opts: ApplyOptions,
+    ) -> ApplyInfo;
+
+    /// Auxiliary scalar that must be averaged alongside the parameter for
+    /// weighted iterate averaging (SSVM: the loss accumulator `l`; 0.0 for
+    /// parameter-space problems).
+    fn aux(&self, _state: &Self::ServerState) -> f64 {
+        0.0
+    }
+
+    /// Objective as a function of (param, aux) — evaluable on averaged
+    /// iterates without server state.
+    fn objective_from(&self, param: &[f32], aux: f64) -> f64;
+
+    /// Objective f(x) (cheap; uses cached state where possible).
+    fn objective(&self, state: &Self::ServerState, param: &[f32]) -> f64 {
+        self.objective_from(param, self.aux(state))
+    }
+
+    /// Parameter index ranges a batch's `apply` writes, or `None` when the
+    /// whole parameter may change (e.g. SSVM, whose `w` update is dense).
+    /// Lets the coordinator publish only the dirty ranges (§Perf).
+    fn touched_ranges(
+        &self,
+        _batch: &[BlockOracle],
+    ) -> Option<Vec<std::ops::Range<usize>>> {
+        None
+    }
+
+    /// Exact surrogate duality gap g(x) = sum_i g_i(x) (expensive: one
+    /// oracle call per block; monitoring only).
+    fn full_gap(&self, state: &Self::ServerState, param: &[f32]) -> f64 {
+        let mut total = 0.0;
+        for i in 0..self.num_blocks() {
+            let o = self.oracle(param, i);
+            total += self.block_gap(state, param, &o);
+        }
+        total
+    }
+}
+
+/// Problems additionally supporting block projections + block gradients,
+/// needed by the parallel block-coordinate-descent baseline (paper §D.4).
+pub trait ProjectableProblem: Problem {
+    /// Dimension of block i's coordinates inside the parameter vector.
+    fn block_range(&self, block: usize) -> std::ops::Range<usize>;
+
+    /// grad_i f(param) as a dense block vector.
+    fn block_grad(&self, param: &[f32], block: usize) -> Vec<f32>;
+
+    /// Euclidean projection of a block vector onto M_i (in place).
+    fn project_block(&self, block: usize, x: &mut [f32]);
+
+    /// Block gradient Lipschitz constant L_i (for the 1/L_i step).
+    fn block_lipschitz(&self, block: usize) -> f64;
+}

@@ -1,0 +1,394 @@
+//! QP over a product of probability simplices with tunable block coupling.
+//!
+//! f(x) = 1/2 x^T Q x + c^T x  with  Q = b I + mu A A^T  (A random, dense),
+//! over M = Delta_m x ... x Delta_m (n blocks). The `mu` knob directly
+//! controls the paper's expected-incoherence parameter (Theorem 3), making
+//! this the testbed for the curvature studies (Examples 1-3 analogues) and
+//! the §D.4 comparison against parallel block-coordinate descent: the block
+//! linear oracle (vertex of the simplex) and the block Euclidean projection
+//! are both available.
+
+use super::{ApplyInfo, ApplyOptions, BlockOracle, Problem, ProjectableProblem};
+use crate::util::la;
+use crate::util::rng::Pcg64;
+
+/// Product-of-simplices QP instance.
+pub struct SimplexQp {
+    /// Number of blocks n.
+    pub n: usize,
+    /// Block size m (each block is the simplex Delta_m).
+    pub m: usize,
+    /// Diagonal weight b (>0 for strict convexity on blocks).
+    pub b: f64,
+    /// Coupling weight mu (>= 0).
+    pub mu: f64,
+    /// Coupling factor A, (n*m x p) row-major.
+    pub a: Vec<f32>,
+    /// Rank of the coupling factor.
+    pub p: usize,
+    /// Linear term c (n*m).
+    pub c: Vec<f32>,
+}
+
+impl SimplexQp {
+    /// Random instance. `mu = 0` gives a fully separable problem.
+    pub fn random(n: usize, m: usize, b: f64, mu: f64, p: usize, seed: u64) -> Self {
+        let mut rng = Pcg64::new(seed, 400);
+        let dim = n * m;
+        let scale = 1.0 / (p as f64).sqrt();
+        let a: Vec<f32> =
+            (0..dim * p).map(|_| (rng.gaussian() * scale) as f32).collect();
+        let c: Vec<f32> = rng.gaussian_vec(dim);
+        Self { n, m, b, mu, a, p, c }
+    }
+
+    #[inline]
+    pub fn dim(&self) -> usize {
+        self.n * self.m
+    }
+
+    /// z = A^T x  (p-dim).
+    fn at_x(&self, x: &[f32]) -> Vec<f64> {
+        let mut z = vec![0.0f64; self.p];
+        for (r, &xr) in x.iter().enumerate() {
+            if xr != 0.0 {
+                let row = &self.a[r * self.p..(r + 1) * self.p];
+                for (zj, &arj) in z.iter_mut().zip(row.iter()) {
+                    *zj += xr as f64 * arj as f64;
+                }
+            }
+        }
+        z
+    }
+
+    /// Full gradient Qx + c (O(dim*p)).
+    pub fn gradient(&self, x: &[f32]) -> Vec<f64> {
+        let z = self.at_x(x);
+        let mut g = vec![0.0f64; self.dim()];
+        for r in 0..self.dim() {
+            let row = &self.a[r * self.p..(r + 1) * self.p];
+            let mut az = 0.0f64;
+            for (j, &arj) in row.iter().enumerate() {
+                az += arj as f64 * z[j];
+            }
+            g[r] = self.b * x[r] as f64 + self.mu * az + self.c[r] as f64;
+        }
+        g
+    }
+
+    /// Gradient of one block (O(dim*p) due to the coupling term).
+    pub fn block_gradient(&self, x: &[f32], block: usize) -> Vec<f64> {
+        let z = self.at_x(x);
+        let lo = block * self.m;
+        let mut g = vec![0.0f64; self.m];
+        for (off, gr) in g.iter_mut().enumerate() {
+            let r = lo + off;
+            let row = &self.a[r * self.p..(r + 1) * self.p];
+            let mut az = 0.0f64;
+            for (j, &arj) in row.iter().enumerate() {
+                az += arj as f64 * z[j];
+            }
+            *gr = self.b * x[r] as f64 + self.mu * az + self.c[r] as f64;
+        }
+        g
+    }
+
+    /// f(x) = 1/2 b ||x||^2 + 1/2 mu ||A^T x||^2 + <c, x>.
+    pub fn objective_of(&self, x: &[f32]) -> f64 {
+        let z = self.at_x(x);
+        let zz: f64 = z.iter().map(|v| v * v).sum();
+        0.5 * self.b * la::norm2_sq(x)
+            + 0.5 * self.mu * zz
+            + la::dot(&self.c, x)
+    }
+
+    /// Quadratic form d^T Q d for a direction (for exact line search).
+    pub fn quad_form(&self, d: &[f32]) -> f64 {
+        let z = self.at_x(d);
+        let zz: f64 = z.iter().map(|v| v * v).sum();
+        self.b * la::norm2_sq(d) + self.mu * zz
+    }
+
+    /// Paper Theorem 3 boundedness B_i = sup_{x_i in Delta} x_i^T Q_ii x_i
+    /// (attained at a vertex since the form is convex).
+    pub fn boundedness(&self, block: usize) -> f64 {
+        let lo = block * self.m;
+        let mut best = f64::NEG_INFINITY;
+        for off in 0..self.m {
+            let r = lo + off;
+            let row = &self.a[r * self.p..(r + 1) * self.p];
+            let aa: f64 =
+                row.iter().map(|&v| v as f64 * v as f64).sum();
+            best = best.max(self.b + self.mu * aa);
+        }
+        best
+    }
+
+    /// Paper Theorem 3 incoherence mu_ij = sup x_i^T Q_ij x_j over the two
+    /// simplices (attained at a vertex pair for a bilinear form).
+    pub fn incoherence(&self, bi: usize, bj: usize) -> f64 {
+        let (li, lj) = (bi * self.m, bj * self.m);
+        let mut best = f64::NEG_INFINITY;
+        for oi in 0..self.m {
+            let ri = li + oi;
+            let rowi = &self.a[ri * self.p..(ri + 1) * self.p];
+            for oj in 0..self.m {
+                let rj = lj + oj;
+                let rowj = &self.a[rj * self.p..(rj + 1) * self.p];
+                let mut q = 0.0f64;
+                for (ai, aj) in rowi.iter().zip(rowj.iter()) {
+                    q += *ai as f64 * *aj as f64;
+                }
+                best = best.max(self.mu * q);
+            }
+        }
+        best
+    }
+}
+
+impl Problem for SimplexQp {
+    type ServerState = ();
+
+    fn name(&self) -> &'static str {
+        "simplex_qp"
+    }
+
+    fn num_blocks(&self) -> usize {
+        self.n
+    }
+
+    fn param_dim(&self) -> usize {
+        self.dim()
+    }
+
+    fn init_param(&self) -> Vec<f32> {
+        // Uniform distribution in every block.
+        vec![1.0 / self.m as f32; self.dim()]
+    }
+
+    fn init_server(&self) -> Self::ServerState {}
+
+    fn oracle(&self, param: &[f32], block: usize) -> BlockOracle {
+        let g = self.block_gradient(param, block);
+        let mut arg = 0usize;
+        let mut best = f64::INFINITY;
+        for (j, &gj) in g.iter().enumerate() {
+            if gj < best {
+                best = gj;
+                arg = j;
+            }
+        }
+        let mut s = vec![0.0f32; self.m];
+        s[arg] = 1.0;
+        BlockOracle { block, s, ls: 0.0 }
+    }
+
+    fn block_gap(
+        &self,
+        _state: &Self::ServerState,
+        param: &[f32],
+        o: &BlockOracle,
+    ) -> f64 {
+        let g = self.block_gradient(param, o.block);
+        let lo = o.block * self.m;
+        let mut gap = 0.0f64;
+        for j in 0..self.m {
+            gap += (param[lo + j] as f64 - o.s[j] as f64) * g[j];
+        }
+        gap
+    }
+
+    fn apply(
+        &self,
+        _state: &mut Self::ServerState,
+        param: &mut [f32],
+        batch: &[BlockOracle],
+        opts: ApplyOptions,
+    ) -> ApplyInfo {
+        let mut batch_gap = 0.0f64;
+        for o in batch {
+            batch_gap += self.block_gap(&(), param, o);
+        }
+        let gamma = if opts.line_search {
+            // Direction supported on the batch blocks.
+            let mut dir = vec![0.0f32; self.dim()];
+            for o in batch {
+                let lo = o.block * self.m;
+                for j in 0..self.m {
+                    dir[lo + j] = o.s[j] - param[lo + j];
+                }
+            }
+            let quad = self.quad_form(&dir);
+            if quad <= 0.0 {
+                1.0
+            } else {
+                (batch_gap / quad).clamp(0.0, 1.0) as f32
+            }
+        } else {
+            opts.gamma
+        };
+        for o in batch {
+            let lo = o.block * self.m;
+            la::lerp_into(gamma, &o.s, &mut param[lo..lo + self.m]);
+        }
+        ApplyInfo { gamma, batch_gap }
+    }
+
+    fn objective_from(&self, param: &[f32], _aux: f64) -> f64 {
+        self.objective_of(param)
+    }
+
+    fn touched_ranges(
+        &self,
+        batch: &[BlockOracle],
+    ) -> Option<Vec<std::ops::Range<usize>>> {
+        Some(
+            batch
+                .iter()
+                .map(|o| o.block * self.m..(o.block + 1) * self.m)
+                .collect(),
+        )
+    }
+}
+
+impl ProjectableProblem for SimplexQp {
+    fn block_range(&self, block: usize) -> std::ops::Range<usize> {
+        block * self.m..(block + 1) * self.m
+    }
+
+    fn block_grad(&self, param: &[f32], block: usize) -> Vec<f32> {
+        self.block_gradient(param, block)
+            .into_iter()
+            .map(|v| v as f32)
+            .collect()
+    }
+
+    fn project_block(&self, _block: usize, x: &mut [f32]) {
+        la::project_simplex(x);
+    }
+
+    fn block_lipschitz(&self, block: usize) -> f64 {
+        // ||Q_ii||_2 <= b + mu ||A_i||_2^2 <= b + mu ||A_i||_F^2.
+        let lo = block * self.m;
+        let mut frob = 0.0f64;
+        for r in lo..lo + self.m {
+            for &v in &self.a[r * self.p..(r + 1) * self.p] {
+                frob += v as f64 * v as f64;
+            }
+        }
+        self.b + self.mu * frob
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn instance(mu: f64) -> SimplexQp {
+        SimplexQp::random(8, 5, 1.0, mu, 4, 11)
+    }
+
+    #[test]
+    fn gradient_matches_finite_difference() {
+        let qp = instance(0.5);
+        let x = qp.init_param();
+        let g = qp.gradient(&x);
+        let eps = 1e-3f32;
+        for r in [0usize, 7, 20, 39] {
+            let mut xp = x.clone();
+            xp[r] += eps;
+            let mut xm = x.clone();
+            xm[r] -= eps;
+            let fd = (qp.objective_of(&xp) - qp.objective_of(&xm))
+                / (2.0 * eps as f64);
+            assert!((fd - g[r]).abs() < 1e-3, "r={r}: {fd} vs {}", g[r]);
+        }
+    }
+
+    #[test]
+    fn oracle_picks_min_gradient_vertex() {
+        let qp = instance(1.0);
+        let x = qp.init_param();
+        for i in 0..qp.n {
+            let o = qp.oracle(&x, i);
+            let g = qp.block_gradient(&x, i);
+            let picked = o.s.iter().position(|&v| v == 1.0).unwrap();
+            let min = g.iter().cloned().fold(f64::INFINITY, f64::min);
+            assert!((g[picked] - min).abs() < 1e-12);
+            assert_eq!(o.s.iter().filter(|&&v| v != 0.0).count(), 1);
+        }
+    }
+
+    #[test]
+    fn feasibility_and_descent_under_fw() {
+        let qp = instance(0.7);
+        let mut x = qp.init_param();
+        let mut rng = Pcg64::seeded(3);
+        let n = qp.n;
+        let mut f_prev = qp.objective_of(&x);
+        for k in 0..150 {
+            let i = rng.below(n);
+            let o = qp.oracle(&x, i);
+            qp.apply(
+                &mut (),
+                &mut x,
+                &[o],
+                ApplyOptions {
+                    gamma: 2.0 * n as f32 / (k as f32 + 2.0 * n as f32),
+                    line_search: true,
+                },
+            );
+            // feasibility
+            for b in 0..n {
+                let blk = &x[b * qp.m..(b + 1) * qp.m];
+                let sum: f64 = blk.iter().map(|&v| v as f64).sum();
+                assert!((sum - 1.0).abs() < 1e-4);
+                assert!(blk.iter().all(|&v| v >= -1e-6));
+            }
+        }
+        let f_end = qp.objective_of(&x);
+        assert!(f_end < f_prev, "{f_prev} -> {f_end}");
+        f_prev = f_end;
+        let _ = f_prev;
+        assert!(qp.full_gap(&(), &x) >= -1e-9);
+    }
+
+    #[test]
+    fn separable_case_has_zero_incoherence() {
+        let qp = instance(0.0);
+        for i in 0..3 {
+            for j in 0..3 {
+                if i != j {
+                    assert_eq!(qp.incoherence(i, j), 0.0);
+                }
+            }
+        }
+        assert!(qp.boundedness(0) >= qp.b);
+    }
+
+    #[test]
+    fn incoherence_scales_with_mu() {
+        let q1 = instance(0.5);
+        let q2 = instance(1.0); // same seed -> same A
+        let r1 = q1.incoherence(0, 1);
+        let r2 = q2.incoherence(0, 1);
+        assert!((r2 - 2.0 * r1).abs() < 1e-9, "{r1} {r2}");
+    }
+
+    #[test]
+    fn block_lipschitz_upper_bounds_hessian_action() {
+        let qp = instance(0.8);
+        let li = qp.block_lipschitz(2);
+        // For any unit block direction d: d^T Q_ii d <= L_i.
+        let mut rng = Pcg64::seeded(4);
+        for _ in 0..20 {
+            let mut d = vec![0.0f32; qp.dim()];
+            let blk = rng.gaussian_vec(qp.m);
+            let nrm = la::norm2(&blk);
+            for (j, v) in blk.iter().enumerate() {
+                d[2 * qp.m + j] = (v / nrm as f32) as f32;
+            }
+            assert!(qp.quad_form(&d) <= li + 1e-6);
+        }
+    }
+}

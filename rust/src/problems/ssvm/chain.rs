@@ -1,0 +1,468 @@
+//! Chain-structured structural SVM (sequence labeling / OCR task).
+//!
+//! Parameter layout: `w = [wu (K x d, row-major) | trans (K x K, row-major)]`
+//! with dimension `D = K*d + K*K`. The block oracle is loss-augmented
+//! Viterbi decoding (normalized Hamming loss), served either by the native
+//! rust DP below or by the AOT-compiled `ssvm_chain` Pallas artifact via
+//! [`ChainDecoder`].
+
+use super::super::{ApplyInfo, ApplyOptions, BlockOracle, Problem};
+use super::{ssvm_apply, ssvm_block_gap, SsvmState};
+use crate::data::ocr_like::ChainDataset;
+use std::sync::Arc;
+
+/// Pluggable loss-augmented decoder (XLA artifact path implements this).
+pub trait ChainDecoder: Send + Sync {
+    /// Decode sequence i against weights `w`; returns (y*, H_i(y*; w)).
+    /// `loss_weight` = 1.0 for training oracle, 0.0 for plain inference.
+    fn decode(
+        &self,
+        w: &[f32],
+        i: usize,
+        loss_weight: f32,
+    ) -> (Vec<u16>, f64);
+}
+
+/// Chain SSVM problem over a [`ChainDataset`].
+pub struct ChainSsvm {
+    pub data: Arc<ChainDataset>,
+    /// Regularization lambda.
+    pub lam: f64,
+    /// Optional external decoder (None = native Viterbi).
+    pub decoder: Option<Arc<dyn ChainDecoder>>,
+}
+
+impl ChainSsvm {
+    pub fn new(data: Arc<ChainDataset>, lam: f64) -> Self {
+        Self {
+            data,
+            lam,
+            decoder: None,
+        }
+    }
+
+    pub fn with_decoder(mut self, d: Arc<dyn ChainDecoder>) -> Self {
+        self.decoder = Some(d);
+        self
+    }
+
+    /// Parameter dimension D = K*d + K*K.
+    pub fn dim(&self) -> usize {
+        self.data.k * self.data.d + self.data.k * self.data.k
+    }
+
+    #[inline]
+    fn wu<'a>(&self, w: &'a [f32]) -> &'a [f32] {
+        &w[..self.data.k * self.data.d]
+    }
+
+    #[inline]
+    fn trans<'a>(&self, w: &'a [f32]) -> &'a [f32] {
+        &w[self.data.k * self.data.d..]
+    }
+
+    /// Native loss-augmented Viterbi: returns (y*, H_i(y*; w)).
+    pub fn viterbi(&self, w: &[f32], i: usize, loss_weight: f32) -> (Vec<u16>, f64) {
+        let (k, d, ell) = (self.data.k, self.data.d, self.data.ell);
+        let wu = self.wu(w);
+        let tr = self.trans(w);
+        let ytrue = self.data.label_seq(i);
+        // Node scores theta[t][c] = <wu_c, x_t> + lw/L * 1{c != y_t}.
+        let mut theta = vec![0.0f64; ell * k];
+        for t in 0..ell {
+            let x = self.data.feature(i, t);
+            for c in 0..k {
+                let mut s = 0.0f64;
+                let row = &wu[c * d..(c + 1) * d];
+                for r in 0..d {
+                    s += row[r] as f64 * x[r] as f64;
+                }
+                if c != ytrue[t] as usize {
+                    s += loss_weight as f64 / ell as f64;
+                }
+                theta[t * k + c] = s;
+            }
+        }
+        // Forward max-sum with backpointers.
+        let mut alpha: Vec<f64> = theta[..k].to_vec();
+        let mut ptr = vec![0u16; ell * k];
+        let mut next = vec![0.0f64; k];
+        for t in 1..ell {
+            for c in 0..k {
+                let mut best = f64::NEG_INFINITY;
+                let mut arg = 0u16;
+                for j in 0..k {
+                    let v = alpha[j] + tr[j * k + c] as f64;
+                    if v > best {
+                        best = v;
+                        arg = j as u16;
+                    }
+                }
+                ptr[t * k + c] = arg;
+                next[c] = best + theta[t * k + c];
+            }
+            std::mem::swap(&mut alpha, &mut next);
+        }
+        let (mut yc, mut v) = (0usize, f64::NEG_INFINITY);
+        for (c, &a) in alpha.iter().enumerate() {
+            if a > v {
+                v = a;
+                yc = c;
+            }
+        }
+        let mut ys = vec![0u16; ell];
+        ys[ell - 1] = yc as u16;
+        for t in (0..ell - 1).rev() {
+            ys[t] = ptr[(t + 1) * k + ys[t + 1] as usize];
+        }
+        // Score of the ground truth (no loss).
+        let mut score_true = 0.0f64;
+        for t in 0..ell {
+            score_true += theta[t * k + ytrue[t] as usize];
+            // theta includes no loss at the true label, so this is the raw
+            // unary score already.
+            if t > 0 {
+                score_true +=
+                    tr[ytrue[t - 1] as usize * k + ytrue[t] as usize] as f64;
+            }
+        }
+        (ys, v - score_true)
+    }
+
+    /// Build the BCFW payload for decode y*: w_s = psi_i(y*)/(lam n),
+    /// l_s = Hamming(y*, y_i)/(L n).
+    pub fn payload(&self, i: usize, ystar: &[u16]) -> (Vec<f32>, f64) {
+        let (k, d, ell, n) = (
+            self.data.k,
+            self.data.d,
+            self.data.ell,
+            self.data.n,
+        );
+        let scale = (1.0 / (self.lam * n as f64)) as f32;
+        let mut ws = vec![0.0f32; self.dim()];
+        let ytrue = self.data.label_seq(i);
+        let mut mistakes = 0usize;
+        for t in 0..ell {
+            let x = self.data.feature(i, t);
+            let yt = ytrue[t] as usize;
+            let yst = ystar[t] as usize;
+            if yt != yst {
+                mistakes += 1;
+                // unary: + x at true block, - x at decoded block
+                let base_t = yt * d;
+                let base_s = yst * d;
+                for r in 0..d {
+                    ws[base_t + r] += scale * x[r];
+                    ws[base_s + r] -= scale * x[r];
+                }
+            }
+            if t > 0 {
+                let (pt, ps) =
+                    (ytrue[t - 1] as usize, ystar[t - 1] as usize);
+                if pt != ps || yt != yst {
+                    let off = k * d;
+                    ws[off + pt * k + yt] += scale;
+                    ws[off + ps * k + yst] -= scale;
+                }
+            }
+        }
+        let ls = mistakes as f64 / (ell as f64 * n as f64);
+        (ws, ls)
+    }
+
+    /// Average Hamming test error of plain (non-loss-augmented) decoding.
+    pub fn hamming_error(&self, w: &[f32], indices: &[usize]) -> f64 {
+        let mut wrong = 0usize;
+        let mut total = 0usize;
+        for &i in indices {
+            let (ys, _) = self.decode(w, i, 0.0);
+            let ytrue = self.data.label_seq(i);
+            for t in 0..self.data.ell {
+                if ys[t] != ytrue[t] {
+                    wrong += 1;
+                }
+                total += 1;
+            }
+        }
+        wrong as f64 / total.max(1) as f64
+    }
+
+    fn decode(&self, w: &[f32], i: usize, lw: f32) -> (Vec<u16>, f64) {
+        match &self.decoder {
+            Some(d) => d.decode(w, i, lw),
+            None => self.viterbi(w, i, lw),
+        }
+    }
+
+    /// Primal objective P(w) = lam/2 ||w||^2 + (1/n) sum_i H_i(w)
+    /// (expensive: decodes every sequence).
+    pub fn primal_objective(&self, w: &[f32]) -> f64 {
+        let mut hinge = 0.0f64;
+        for i in 0..self.data.n {
+            let (_, h) = self.decode(w, i, 1.0);
+            hinge += h.max(0.0);
+        }
+        0.5 * self.lam * crate::util::la::norm2_sq(w)
+            + hinge / self.data.n as f64
+    }
+}
+
+impl Problem for ChainSsvm {
+    type ServerState = SsvmState;
+
+    fn name(&self) -> &'static str {
+        "ssvm_chain"
+    }
+
+    fn num_blocks(&self) -> usize {
+        self.data.n
+    }
+
+    fn param_dim(&self) -> usize {
+        self.dim()
+    }
+
+    fn init_param(&self) -> Vec<f32> {
+        vec![0.0; self.dim()]
+    }
+
+    fn init_server(&self) -> SsvmState {
+        SsvmState::new(self.data.n, self.dim())
+    }
+
+    fn oracle(&self, param: &[f32], block: usize) -> BlockOracle {
+        let (ystar, _h) = self.decode(param, block, 1.0);
+        let (ws, ls) = self.payload(block, &ystar);
+        BlockOracle {
+            block,
+            s: ws,
+            ls,
+        }
+    }
+
+    fn block_gap(
+        &self,
+        state: &SsvmState,
+        param: &[f32],
+        o: &BlockOracle,
+    ) -> f64 {
+        ssvm_block_gap(self.lam, state, param, o)
+    }
+
+    fn apply(
+        &self,
+        state: &mut SsvmState,
+        param: &mut [f32],
+        batch: &[BlockOracle],
+        opts: ApplyOptions,
+    ) -> ApplyInfo {
+        let (gamma, batch_gap) = ssvm_apply(
+            self.lam,
+            state,
+            param,
+            batch,
+            opts.gamma,
+            opts.line_search,
+        );
+        ApplyInfo { gamma, batch_gap }
+    }
+
+    fn aux(&self, state: &SsvmState) -> f64 {
+        state.l
+    }
+
+    fn objective_from(&self, param: &[f32], aux: f64) -> f64 {
+        0.5 * self.lam * crate::util::la::norm2_sq(param) - aux
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::ocr_like;
+    use crate::util::rng::Pcg64;
+
+    fn instance() -> ChainSsvm {
+        let data = Arc::new(ocr_like::generate(30, 4, 8, 5, 0.1, 42));
+        ChainSsvm::new(data, 0.1)
+    }
+
+    #[test]
+    fn viterbi_is_exact_vs_bruteforce() {
+        let p = instance();
+        let mut rng = Pcg64::seeded(1);
+        let w: Vec<f32> = rng.gaussian_vec(p.dim());
+        let (k, ell) = (p.data.k, p.data.ell);
+        for i in [0usize, 7, 29] {
+            let (ys, h) = p.viterbi(&w, i, 1.0);
+            // brute force over k^ell labelings
+            let ytrue = p.data.label_seq(i);
+            let mut best = f64::NEG_INFINITY;
+            let mut besty = vec![0u16; ell];
+            let total = (k as u64).pow(ell as u32);
+            let wu = &w[..k * p.data.d];
+            let tr = &w[k * p.data.d..];
+            for code in 0..total {
+                let mut lab = vec![0u16; ell];
+                let mut c = code;
+                for t in 0..ell {
+                    lab[t] = (c % k as u64) as u16;
+                    c /= k as u64;
+                }
+                let mut v = 0.0f64;
+                for t in 0..ell {
+                    let x = p.data.feature(i, t);
+                    let row = &wu[lab[t] as usize * p.data.d..];
+                    for r in 0..p.data.d {
+                        v += row[r] as f64 * x[r] as f64;
+                    }
+                    if lab[t] != ytrue[t] {
+                        v += 1.0 / ell as f64;
+                    }
+                    if t > 0 {
+                        v += tr[lab[t - 1] as usize * k + lab[t] as usize]
+                            as f64;
+                    }
+                }
+                if v > best {
+                    best = v;
+                    besty = lab;
+                }
+            }
+            assert_eq!(ys, besty, "sequence {i}");
+            // H = best - score(ytrue)
+            let mut st = 0.0f64;
+            for t in 0..ell {
+                let x = p.data.feature(i, t);
+                let row = &wu[ytrue[t] as usize * p.data.d..];
+                for r in 0..p.data.d {
+                    st += row[r] as f64 * x[r] as f64;
+                }
+                if t > 0 {
+                    st += tr[ytrue[t - 1] as usize * k + ytrue[t] as usize]
+                        as f64;
+                }
+            }
+            assert!((h - (best - st)).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn oracle_h_nonnegative() {
+        let p = instance();
+        let mut rng = Pcg64::seeded(2);
+        let w: Vec<f32> = rng.gaussian_vec(p.dim());
+        for i in 0..p.data.n {
+            let (_, h) = p.viterbi(&w, i, 1.0);
+            assert!(h >= -1e-9, "H_{i} = {h}");
+        }
+    }
+
+    #[test]
+    fn payload_zero_when_decode_equals_truth() {
+        let p = instance();
+        let ytrue: Vec<u16> = p.data.label_seq(3).to_vec();
+        let (ws, ls) = p.payload(3, &ytrue);
+        assert!(ws.iter().all(|&v| v == 0.0));
+        assert_eq!(ls, 0.0);
+    }
+
+    #[test]
+    fn payload_matches_feature_map_difference() {
+        let p = instance();
+        let i = 5;
+        let mut ystar: Vec<u16> = p.data.label_seq(i).to_vec();
+        ystar[2] = (ystar[2] + 1) % p.data.k as u16; // one mistake
+        let (ws, ls) = p.payload(i, &ystar);
+        assert!((ls - 1.0 / (p.data.ell as f64 * p.data.n as f64)).abs() < 1e-12);
+        // <w_s, w> for any w equals (phi(x,y) - phi(x,y*)) . w / (lam n).
+        let mut rng = Pcg64::seeded(3);
+        let w: Vec<f32> = rng.gaussian_vec(p.dim());
+        let dot_ws = crate::util::la::dot(&ws, &w);
+        // manual: score(ytrue) - score(ystar) scaled
+        let score = |lab: &[u16]| {
+            let (k, d) = (p.data.k, p.data.d);
+            let mut v = 0.0f64;
+            for t in 0..p.data.ell {
+                let x = p.data.feature(i, t);
+                for r in 0..d {
+                    v += w[lab[t] as usize * d + r] as f64 * x[r] as f64;
+                }
+                if t > 0 {
+                    v += w[k * d + lab[t - 1] as usize * k + lab[t] as usize]
+                        as f64;
+                }
+            }
+            v
+        };
+        let expected = (score(p.data.label_seq(i)) - score(&ystar))
+            / (p.lam * p.data.n as f64);
+        assert!(
+            (dot_ws - expected).abs() < 1e-4,
+            "{dot_ws} vs {expected}"
+        );
+    }
+
+    #[test]
+    fn bcfw_loop_decreases_dual_and_gap_valid() {
+        let p = instance();
+        let mut st = p.init_server();
+        let mut w = p.init_param();
+        let n = p.num_blocks();
+        let mut rng = Pcg64::seeded(4);
+        let f0 = p.objective(&st, &w);
+        assert_eq!(f0, 0.0);
+        for k in 0..200 {
+            let i = rng.below(n);
+            let o = p.oracle(&w, i);
+            let gamma = 2.0 * n as f32 / (k as f32 + 2.0 * n as f32);
+            p.apply(
+                &mut st,
+                &mut w,
+                &[o],
+                ApplyOptions {
+                    gamma,
+                    line_search: true,
+                },
+            );
+        }
+        let f_end = p.objective(&st, &w);
+        assert!(f_end < f0, "dual should decrease: {f_end}");
+        let gap = p.full_gap(&st, &w);
+        assert!(gap >= -1e-6, "gap={gap}");
+        // weak duality: primal >= -dual_min => P(w) + f >= 0 at any point
+        let primal = p.primal_objective(&w);
+        assert!(primal + f_end >= -1e-6);
+    }
+
+    #[test]
+    fn training_reduces_hamming_error() {
+        let data = Arc::new(ocr_like::generate(60, 4, 16, 5, 0.05, 7));
+        let p = ChainSsvm::new(data, 0.05);
+        let mut st = p.init_server();
+        let mut w = p.init_param();
+        let n = p.num_blocks();
+        let idx: Vec<usize> = (0..n).collect();
+        let err0 = p.hamming_error(&w, &idx);
+        let mut rng = Pcg64::seeded(8);
+        for k in 0..600 {
+            let i = rng.below(n);
+            let o = p.oracle(&w, i);
+            let gamma = 2.0 * n as f32 / (k as f32 + 2.0 * n as f32);
+            p.apply(
+                &mut st,
+                &mut w,
+                &[o],
+                ApplyOptions {
+                    gamma,
+                    line_search: true,
+                },
+            );
+        }
+        let err1 = p.hamming_error(&w, &idx);
+        assert!(
+            err1 < err0.min(0.5),
+            "training error {err0} -> {err1} should drop"
+        );
+    }
+}

@@ -1,0 +1,149 @@
+//! PJRT runtime: load AOT artifacts (HLO text emitted by
+//! `python/compile/aot.py`) and execute them on the solve path.
+//!
+//! HLO *text* is the interchange format — jax >= 0.5 serializes protos with
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see DESIGN.md §2 and /opt/xla-example/README.md).
+//!
+//! [`ArtifactStore`] discovers artifacts via `artifacts/manifest.txt` and
+//! compiles them lazily (once, cached). The `xla_backends` submodule adapts
+//! compiled artifacts to the problem-layer traits ([`crate::problems`]), so
+//! the coordinator can run its oracles through XLA instead of the native
+//! rust implementations.
+
+pub mod service;
+pub mod xla_backends;
+
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// A compiled PJRT executable.
+///
+/// NOT `Send`: the `xla` crate's handles are `Rc`-based. Multi-threaded
+/// callers must go through [`service::XlaHandle`], which pins all XLA work
+/// to one service thread.
+pub struct Artifact {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl Artifact {
+    /// Load an HLO-text artifact and compile it on the given client.
+    pub fn load(client: &xla::PjRtClient, path: &Path) -> Result<Self> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        let name = path
+            .file_stem()
+            .map(|s| s.to_string_lossy().into_owned())
+            .unwrap_or_default();
+        Ok(Self { exe, name })
+    }
+
+    /// Execute with literal inputs; returns the tuple elements (artifacts
+    /// are lowered with `return_tuple=True`).
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self.exe.execute::<xla::Literal>(inputs)?[0][0]
+            .to_literal_sync()?;
+        Ok(result.to_tuple()?)
+    }
+}
+
+/// Lazily-compiling artifact registry backed by `manifest.txt`.
+pub struct ArtifactStore {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    /// Artifact names listed in the manifest.
+    names: Vec<String>,
+    cache: std::cell::RefCell<HashMap<String, std::rc::Rc<Artifact>>>,
+}
+
+impl ArtifactStore {
+    /// Open a store over `dir` (must contain `manifest.txt`).
+    pub fn open(dir: impl Into<PathBuf>) -> Result<Self> {
+        let dir = dir.into();
+        let manifest = std::fs::read_to_string(dir.join("manifest.txt"))
+            .with_context(|| {
+                format!(
+                    "reading {}/manifest.txt — run `make artifacts` first",
+                    dir.display()
+                )
+            })?;
+        let names = manifest
+            .lines()
+            .filter(|l| !l.trim().is_empty())
+            .map(|l| {
+                l.split('\t')
+                    .next()
+                    .map(|s| s.to_string())
+                    .ok_or_else(|| anyhow!("bad manifest line: {l:?}"))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Self {
+            client,
+            dir,
+            names,
+            cache: std::cell::RefCell::new(HashMap::new()),
+        })
+    }
+
+    /// Artifact names available.
+    pub fn names(&self) -> &[String] {
+        &self.names
+    }
+
+    /// Whether the manifest lists `name`.
+    pub fn contains(&self, name: &str) -> bool {
+        self.names.iter().any(|n| n == name)
+    }
+
+    /// Get (compiling on first use) the artifact called `name`.
+    pub fn get(&self, name: &str) -> Result<std::rc::Rc<Artifact>> {
+        if let Some(a) = self.cache.borrow().get(name) {
+            return Ok(a.clone());
+        }
+        if !self.contains(name) {
+            return Err(anyhow!(
+                "artifact {name:?} not in manifest (have: {:?})",
+                self.names
+            ));
+        }
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        let artifact = std::rc::Rc::new(Artifact::load(&self.client, &path)?);
+        self.cache
+            .borrow_mut()
+            .insert(name.to_string(), artifact.clone());
+        Ok(artifact)
+    }
+}
+
+/// Build an f32 literal of logical shape `dims` from row-major data.
+pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    let expect: i64 = dims.iter().product();
+    anyhow::ensure!(
+        expect as usize == data.len(),
+        "literal_f32: {} elements vs dims {:?}",
+        data.len(),
+        dims
+    );
+    Ok(xla::Literal::vec1(data).reshape(dims)?)
+}
+
+/// Build an i32 literal of logical shape `dims` from row-major data.
+pub fn literal_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+    let expect: i64 = dims.iter().product();
+    anyhow::ensure!(
+        expect as usize == data.len(),
+        "literal_i32: {} elements vs dims {:?}",
+        data.len(),
+        dims
+    );
+    Ok(xla::Literal::vec1(data).reshape(dims)?)
+}

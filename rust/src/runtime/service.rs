@@ -1,0 +1,134 @@
+//! XLA oracle service: confines the (non-`Send`) PJRT client and compiled
+//! executables to one dedicated thread and serves execution requests over
+//! channels.
+//!
+//! The `xla` crate's handles hold `Rc`s and raw pointers, so they must not
+//! cross threads. Worker threads instead hold a cheap [`XlaHandle`]
+//! (Send + Sync) and submit raw tensors; the service thread materializes
+//! literals, executes, and ships raw tensors back. This mirrors how a real
+//! deployment would pin an accelerator context to a driver thread.
+
+use anyhow::{anyhow, Result};
+use std::sync::mpsc;
+use std::sync::Mutex;
+
+/// A tensor argument, row-major.
+#[derive(Debug, Clone)]
+pub enum Tensor {
+    F32(Vec<f32>, Vec<i64>),
+    I32(Vec<i32>, Vec<i64>),
+}
+
+impl Tensor {
+    fn to_literal(&self) -> Result<xla::Literal> {
+        match self {
+            Tensor::F32(data, dims) => {
+                super::literal_f32(data, dims)
+            }
+            Tensor::I32(data, dims) => {
+                super::literal_i32(data, dims)
+            }
+        }
+    }
+
+    /// Extract as f32 data, erroring on type mismatch.
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Tensor::F32(d, _) => Ok(d),
+            Tensor::I32(..) => Err(anyhow!("tensor is i32, wanted f32")),
+        }
+    }
+
+    /// Extract as i32 data.
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            Tensor::I32(d, _) => Ok(d),
+            Tensor::F32(..) => Err(anyhow!("tensor is f32, wanted i32")),
+        }
+    }
+}
+
+struct Request {
+    artifact: String,
+    args: Vec<Tensor>,
+    resp: mpsc::Sender<Result<Vec<Tensor>>>,
+}
+
+/// Cloneable, thread-safe handle to the XLA service.
+pub struct XlaHandle {
+    tx: Mutex<mpsc::Sender<Request>>,
+}
+
+impl XlaHandle {
+    /// Execute `artifact` with `args`; blocks until the result arrives.
+    pub fn run(&self, artifact: &str, args: Vec<Tensor>) -> Result<Vec<Tensor>> {
+        let (rtx, rrx) = mpsc::channel();
+        {
+            let tx = self.tx.lock().expect("xla handle poisoned");
+            tx.send(Request {
+                artifact: artifact.to_string(),
+                args,
+                resp: rtx,
+            })
+            .map_err(|_| anyhow!("xla service thread is gone"))?;
+        }
+        rrx.recv()
+            .map_err(|_| anyhow!("xla service dropped the request"))?
+    }
+}
+
+/// Spawn the service over an artifact directory. The returned handle can be
+/// shared across worker threads (wrap in `Arc`). The service thread exits
+/// when every handle clone is dropped.
+pub fn spawn(artifact_dir: impl Into<std::path::PathBuf>) -> Result<std::sync::Arc<XlaHandle>> {
+    let dir = artifact_dir.into();
+    let (tx, rx) = mpsc::channel::<Request>();
+    let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+    std::thread::Builder::new()
+        .name("xla-service".into())
+        .spawn(move || {
+            let store = match super::ArtifactStore::open(&dir) {
+                Ok(s) => {
+                    ready_tx.send(Ok(())).ok();
+                    s
+                }
+                Err(e) => {
+                    ready_tx.send(Err(e)).ok();
+                    return;
+                }
+            };
+            while let Ok(req) = rx.recv() {
+                let result = serve_one(&store, &req);
+                req.resp.send(result).ok();
+            }
+        })?;
+    ready_rx
+        .recv()
+        .map_err(|_| anyhow!("xla service died during startup"))??;
+    Ok(std::sync::Arc::new(XlaHandle { tx: Mutex::new(tx) }))
+}
+
+fn serve_one(store: &super::ArtifactStore, req: &Request) -> Result<Vec<Tensor>> {
+    let artifact = store.get(&req.artifact)?;
+    let literals = req
+        .args
+        .iter()
+        .map(|t| t.to_literal())
+        .collect::<Result<Vec<_>>>()?;
+    let outs = artifact.run(&literals)?;
+    outs.into_iter()
+        .map(|lit| {
+            let shape = lit.array_shape()?;
+            let dims: Vec<i64> = shape.dims().to_vec();
+            match shape.ty() {
+                xla::ElementType::F32 => {
+                    Ok(Tensor::F32(lit.to_vec::<f32>()?, dims))
+                }
+                xla::ElementType::S32 => {
+                    Ok(Tensor::I32(lit.to_vec::<i32>()?, dims))
+                }
+                other => Err(anyhow!("unsupported output type {other:?}")),
+            }
+        })
+        .collect()
+}

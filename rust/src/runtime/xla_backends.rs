@@ -1,0 +1,251 @@
+//! Adapters from compiled XLA artifacts to the problem-layer traits.
+//!
+//! These run the Pallas-kernel compute (lowered into the HLO artifacts) on
+//! the solve path, replacing the native rust oracles. All execution goes
+//! through the [`super::service::XlaHandle`] so the adapters are Send+Sync
+//! and can be plugged into multi-threaded coordinator runs. Integration
+//! tests assert native == XLA numerics (rust/tests/xla_integration.rs).
+//!
+//! Layout note: the rust GFL parameter is column-major (d x m, column t at
+//! `t*d`), while the artifacts take/return row-major (d, m) arrays — the
+//! adapters transpose at the boundary.
+
+use super::service::{Tensor, XlaHandle};
+use crate::data::ocr_like::ChainDataset;
+use crate::problems::gfl::GflOracleBackend;
+use crate::problems::ssvm::chain::ChainDecoder;
+use crate::problems::ssvm::multiclass::MulticlassDecoder;
+use anyhow::Result;
+use std::sync::Arc;
+
+/// Column-major (d x m, col-stride d) -> row-major (d x m) buffer.
+pub fn colmajor_to_rowmajor(src: &[f32], d: usize, m: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; d * m];
+    for t in 0..m {
+        for r in 0..d {
+            out[r * m + t] = src[t * d + r];
+        }
+    }
+    out
+}
+
+/// Row-major (d x m) -> column-major buffer.
+pub fn rowmajor_to_colmajor(src: &[f32], d: usize, m: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; d * m];
+    for r in 0..d {
+        for t in 0..m {
+            out[t * d + r] = src[r * m + t];
+        }
+    }
+    out
+}
+
+/// `gfl_step` artifact as a [`GflOracleBackend`].
+pub struct XlaGfl {
+    handle: Arc<XlaHandle>,
+    name: String,
+    d: usize,
+    m: usize,
+    /// Row-major copy of B = Y D.
+    b_rm: Vec<f32>,
+    lam: f32,
+}
+
+impl XlaGfl {
+    /// Build over a service handle; `b_colmajor` is the problem's B.
+    pub fn new(
+        handle: Arc<XlaHandle>,
+        d: usize,
+        n: usize,
+        lam: f64,
+        b_colmajor: &[f32],
+    ) -> Result<Self> {
+        let m = n - 1;
+        Ok(Self {
+            handle,
+            name: format!("gfl_step_d{d}_n{n}"),
+            d,
+            m,
+            b_rm: colmajor_to_rowmajor(b_colmajor, d, m),
+            lam: lam as f32,
+        })
+    }
+}
+
+impl GflOracleBackend for XlaGfl {
+    fn step(&self, u: &[f32]) -> (Vec<f32>, Vec<f32>, Vec<f32>, f64) {
+        let (d, m) = (self.d, self.m);
+        let u_rm = colmajor_to_rowmajor(u, d, m);
+        let args = vec![
+            Tensor::F32(u_rm, vec![d as i64, m as i64]),
+            Tensor::F32(self.b_rm.clone(), vec![d as i64, m as i64]),
+            Tensor::F32(vec![self.lam], vec![1]),
+        ];
+        let outs = self
+            .handle
+            .run(&self.name, args)
+            .expect("gfl_step artifact");
+        let g_rm = outs[0].as_f32().unwrap();
+        let s_rm = outs[1].as_f32().unwrap();
+        let gap = outs[2].as_f32().unwrap().to_vec();
+        let f = outs[3].as_f32().unwrap()[0] as f64;
+        (
+            rowmajor_to_colmajor(g_rm, d, m),
+            rowmajor_to_colmajor(s_rm, d, m),
+            gap,
+            f,
+        )
+    }
+}
+
+/// `gfl_primal` artifact: primal recovery + primal objective.
+pub struct XlaGflPrimal {
+    handle: Arc<XlaHandle>,
+    name: String,
+    d: usize,
+    n: usize,
+    y_rm: Vec<f32>,
+    lam: f32,
+}
+
+impl XlaGflPrimal {
+    pub fn new(
+        handle: Arc<XlaHandle>,
+        d: usize,
+        n: usize,
+        lam: f64,
+        y_colmajor: &[f32],
+    ) -> Result<Self> {
+        Ok(Self {
+            handle,
+            name: format!("gfl_primal_d{d}_n{n}"),
+            d,
+            n,
+            y_rm: colmajor_to_rowmajor(y_colmajor, d, n),
+            lam: lam as f32,
+        })
+    }
+
+    /// Returns (x_colmajor, primal_objective).
+    pub fn primal(&self, u_colmajor: &[f32]) -> (Vec<f32>, f64) {
+        let (d, n) = (self.d, self.n);
+        let m = n - 1;
+        let u_rm = colmajor_to_rowmajor(u_colmajor, d, m);
+        let args = vec![
+            Tensor::F32(u_rm, vec![d as i64, m as i64]),
+            Tensor::F32(self.y_rm.clone(), vec![d as i64, n as i64]),
+            Tensor::F32(vec![self.lam], vec![1]),
+        ];
+        let outs = self
+            .handle
+            .run(&self.name, args)
+            .expect("gfl_primal artifact");
+        let x_rm = outs[0].as_f32().unwrap();
+        let p = outs[1].as_f32().unwrap()[0] as f64;
+        (rowmajor_to_colmajor(x_rm, d, n), p)
+    }
+}
+
+/// `ssvm_chain` artifact (batch = 1) as a [`ChainDecoder`].
+pub struct XlaChainDecoder {
+    handle: Arc<XlaHandle>,
+    name: String,
+    data: Arc<ChainDataset>,
+}
+
+impl XlaChainDecoder {
+    pub fn new(handle: Arc<XlaHandle>, data: Arc<ChainDataset>) -> Result<Self> {
+        let (k, d, ell) = (data.k, data.d, data.ell);
+        Ok(Self {
+            handle,
+            name: format!("ssvm_chain_K{k}_d{d}_L{ell}_B1"),
+            data,
+        })
+    }
+}
+
+impl ChainDecoder for XlaChainDecoder {
+    fn decode(&self, w: &[f32], i: usize, loss_weight: f32) -> (Vec<u16>, f64) {
+        let (k, d, ell) = (self.data.k, self.data.d, self.data.ell);
+        let wu = w[..k * d].to_vec();
+        let tr = w[k * d..].to_vec();
+        let xs =
+            self.data.features[(i * ell) * d..(i * ell + ell) * d].to_vec();
+        let ys: Vec<i32> = self
+            .data
+            .label_seq(i)
+            .iter()
+            .map(|&v| v as i32)
+            .collect();
+        let args = vec![
+            Tensor::F32(wu, vec![k as i64, d as i64]),
+            Tensor::F32(tr, vec![k as i64, k as i64]),
+            Tensor::F32(xs, vec![1, ell as i64, d as i64]),
+            Tensor::I32(ys, vec![1, ell as i64]),
+            Tensor::F32(vec![loss_weight], vec![1]),
+        ];
+        let outs = self
+            .handle
+            .run(&self.name, args)
+            .expect("ssvm_chain artifact");
+        let ystar = outs[0].as_i32().unwrap();
+        let h = outs[1].as_f32().unwrap()[0] as f64;
+        (ystar.iter().map(|&v| v as u16).collect(), h)
+    }
+}
+
+/// `ssvm_multiclass` artifact (batch = 1) as a [`MulticlassDecoder`].
+pub struct XlaMulticlassDecoder {
+    handle: Arc<XlaHandle>,
+    name: String,
+    data: Arc<crate::data::mixture::MulticlassDataset>,
+}
+
+impl XlaMulticlassDecoder {
+    pub fn new(
+        handle: Arc<XlaHandle>,
+        data: Arc<crate::data::mixture::MulticlassDataset>,
+    ) -> Result<Self> {
+        let (k, d) = (data.k, data.d);
+        Ok(Self {
+            handle,
+            name: format!("ssvm_multiclass_K{k}_d{d}_B1"),
+            data,
+        })
+    }
+}
+
+impl MulticlassDecoder for XlaMulticlassDecoder {
+    fn decode(&self, w: &[f32], i: usize, loss_weight: f32) -> (usize, f64) {
+        let (k, d) = (self.data.k, self.data.d);
+        let args = vec![
+            Tensor::F32(w.to_vec(), vec![k as i64, d as i64]),
+            Tensor::F32(self.data.feature(i).to_vec(), vec![1, d as i64]),
+            Tensor::I32(vec![self.data.label(i) as i32], vec![1]),
+            Tensor::F32(vec![loss_weight], vec![1]),
+        ];
+        let outs = self
+            .handle
+            .run(&self.name, args)
+            .expect("ssvm_multiclass artifact");
+        let ystar = outs[0].as_i32().unwrap()[0] as usize;
+        let h = outs[1].as_f32().unwrap()[0] as f64;
+        (ystar, h)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layout_transposes_roundtrip() {
+        let (d, m) = (3, 5);
+        let col: Vec<f32> = (0..d * m).map(|v| v as f32).collect();
+        let row = colmajor_to_rowmajor(&col, d, m);
+        // element (r=1, t=2): col idx 2*3+1=7 -> row idx 1*5+2=7
+        assert_eq!(row[m + 2], col[2 * d + 1]);
+        let back = rowmajor_to_colmajor(&row, d, m);
+        assert_eq!(back, col);
+    }
+}

@@ -1,0 +1,198 @@
+//! Update-delay models (paper §2.3 / §3.4).
+//!
+//! The paper models the staleness of each worker update as an iid draw from
+//! an unknown distribution and proves convergence depending only (mildly) on
+//! the *expected* delay `kappa`, with the server dropping any update whose
+//! delay exceeds `k/2` at iteration `k`. This module provides the
+//! distributions used in Figure 4 (Poisson and heavy-tailed Pareto with
+//! infinite variance) plus deterministic and zero-delay controls.
+
+use crate::util::rng::Pcg64;
+
+/// A staleness distribution over non-negative integers.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum DelayModel {
+    /// No delay (synchronous oracle).
+    None,
+    /// Fixed integer delay.
+    Fixed(u64),
+    /// Poisson with mean kappa.
+    Poisson { kappa: f64 },
+    /// Pareto(shape alpha, scale x_m) rounded to the nearest integer. The
+    /// paper uses alpha = 2, x_m = kappa/2 so that E = kappa, Var = inf.
+    Pareto { alpha: f64, xm: f64 },
+}
+
+impl DelayModel {
+    /// Paper's Fig-4 Pareto parameterization from an expected delay kappa.
+    pub fn pareto_with_mean(kappa: f64) -> Self {
+        DelayModel::Pareto {
+            alpha: 2.0,
+            xm: kappa / 2.0,
+        }
+    }
+
+    /// Sample one staleness value.
+    pub fn sample(&self, rng: &mut Pcg64) -> u64 {
+        match *self {
+            DelayModel::None => 0,
+            DelayModel::Fixed(k) => k,
+            DelayModel::Poisson { kappa } => rng.poisson(kappa),
+            DelayModel::Pareto { alpha, xm } => {
+                rng.pareto(alpha, xm).round() as u64
+            }
+        }
+    }
+
+    /// Expected delay kappa (exact for all supported models).
+    pub fn mean(&self) -> f64 {
+        match *self {
+            DelayModel::None => 0.0,
+            DelayModel::Fixed(k) => k as f64,
+            DelayModel::Poisson { kappa } => kappa,
+            DelayModel::Pareto { alpha, xm } => {
+                if alpha > 1.0 {
+                    alpha * xm / (alpha - 1.0)
+                } else {
+                    f64::INFINITY
+                }
+            }
+        }
+    }
+}
+
+/// The paper's staleness acceptance rule: at server iteration `k`, drop any
+/// update computed from a parameter older than `k/2` iterations.
+#[inline]
+pub fn accept_delay(k: u64, delay: u64) -> bool {
+    // k/2 with integer semantics, matching "delay greater than k/2 dropped".
+    2 * delay <= k
+}
+
+/// Ring buffer of past parameter snapshots for delayed-oracle simulation.
+///
+/// `push` stores the parameter at each iteration; `get(k, delay)` fetches
+/// the snapshot from iteration `k - delay` if still retained.
+pub struct History {
+    cap: usize,
+    slots: Vec<Vec<f32>>,
+    /// Iteration number of the most recent snapshot (next push is iter+1).
+    latest: Option<u64>,
+}
+
+impl History {
+    pub fn new(cap: usize) -> Self {
+        assert!(cap >= 1);
+        Self {
+            cap,
+            slots: Vec::with_capacity(cap),
+            latest: None,
+        }
+    }
+
+    /// Record the parameter at iteration `k` (must be called with strictly
+    /// increasing k starting at 0).
+    pub fn push(&mut self, k: u64, param: &[f32]) {
+        match self.latest {
+            None => assert_eq!(k, 0, "history must start at iteration 0"),
+            Some(prev) => assert_eq!(k, prev + 1, "non-contiguous history"),
+        }
+        if self.slots.len() == self.cap {
+            // overwrite oldest slot
+            let idx = (k % self.cap as u64) as usize;
+            self.slots[idx].clear();
+            self.slots[idx].extend_from_slice(param);
+        } else {
+            self.slots.push(param.to_vec());
+        }
+        self.latest = Some(k);
+    }
+
+    /// Parameter snapshot from iteration `k - delay`; None if evicted.
+    pub fn get(&self, delay: u64) -> Option<&[f32]> {
+        let latest = self.latest?;
+        if delay > latest && delay > 0 {
+            // older than the start: clamp to iteration 0 if retained
+            return None;
+        }
+        let want = latest.saturating_sub(delay);
+        if latest - want >= self.slots.len() as u64 {
+            return None;
+        }
+        let idx = (want % self.cap as u64) as usize;
+        Some(&self.slots[idx])
+    }
+
+    pub fn latest_iter(&self) -> Option<u64> {
+        self.latest
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accept_rule_matches_paper() {
+        // at k=10, delays up to 5 accepted
+        assert!(accept_delay(10, 5));
+        assert!(!accept_delay(10, 6));
+        assert!(accept_delay(0, 0));
+        assert!(!accept_delay(1, 1));
+        assert!(accept_delay(2, 1));
+    }
+
+    #[test]
+    fn delay_means() {
+        let mut rng = Pcg64::seeded(1);
+        for model in [
+            DelayModel::None,
+            DelayModel::Fixed(7),
+            DelayModel::Poisson { kappa: 5.0 },
+            DelayModel::pareto_with_mean(10.0),
+        ] {
+            let n = 60_000;
+            let mean = (0..n).map(|_| model.sample(&mut rng) as f64).sum::<f64>()
+                / n as f64;
+            let expected = model.mean();
+            // Pareto rounding biases slightly; generous tolerance.
+            assert!(
+                (mean - expected).abs() < 0.15 * expected.max(1.0),
+                "{model:?}: sample mean {mean} vs {expected}"
+            );
+        }
+    }
+
+    #[test]
+    fn pareto_mean_parameterization() {
+        assert_eq!(DelayModel::pareto_with_mean(20.0).mean(), 20.0);
+    }
+
+    #[test]
+    fn history_retrieval() {
+        let mut h = History::new(4);
+        for k in 0..10u64 {
+            h.push(k, &[k as f32]);
+        }
+        assert_eq!(h.get(0).unwrap(), &[9.0]);
+        assert_eq!(h.get(3).unwrap(), &[6.0]);
+        assert!(h.get(4).is_none()); // evicted
+    }
+
+    #[test]
+    fn history_clamps_before_start() {
+        let mut h = History::new(8);
+        h.push(0, &[0.0]);
+        h.push(1, &[1.0]);
+        assert_eq!(h.get(1).unwrap(), &[0.0]);
+        assert!(h.get(5).is_none());
+    }
+
+    #[test]
+    #[should_panic]
+    fn history_requires_contiguity() {
+        let mut h = History::new(4);
+        h.push(0, &[0.0]);
+        h.push(2, &[2.0]);
+    }
+}

@@ -1,0 +1,5 @@
+//! Simulation substrates: update-delay models (paper §2.3, §3.4) and
+//! straggler/heterogeneous-worker models (paper §3.3).
+
+pub mod delay;
+pub mod straggler;

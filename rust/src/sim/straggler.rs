@@ -1,0 +1,105 @@
+//! Straggler / heterogeneous-worker models (paper §3.3).
+//!
+//! The paper simulates slow workers by giving worker `w_i` a *return
+//! probability* `p_i`: after solving each subproblem the worker reports the
+//! solution with probability `p_i` and silently drops it otherwise, so a
+//! worker with p = 0.8 is effectively 20% slower. Two scenarios are studied:
+//! a single straggler among full-speed workers (Fig 3a) and a heterogeneous
+//! fleet with `p_i = theta + i/T` (Fig 3b).
+
+use crate::util::rng::Pcg64;
+
+/// Per-worker return probabilities.
+#[derive(Debug, Clone)]
+pub struct StragglerModel {
+    pub probs: Vec<f64>,
+}
+
+impl StragglerModel {
+    /// All workers at full speed.
+    pub fn none(workers: usize) -> Self {
+        Self {
+            probs: vec![1.0; workers],
+        }
+    }
+
+    /// One straggler with return probability `p`, the rest at full speed
+    /// (paper Fig 3a).
+    pub fn single(workers: usize, p: f64) -> Self {
+        assert!(workers >= 1);
+        let mut probs = vec![1.0; workers];
+        probs[0] = p.clamp(0.0, 1.0);
+        Self { probs }
+    }
+
+    /// Heterogeneous fleet: p_i = theta + i/T for i = 1..T, clamped to 1
+    /// (paper Fig 3b).
+    pub fn heterogeneous(workers: usize, theta: f64) -> Self {
+        let t = workers as f64;
+        let probs = (1..=workers)
+            .map(|i| (theta + i as f64 / t).clamp(0.0, 1.0))
+            .collect();
+        Self { probs }
+    }
+
+    /// Should worker `w`'s latest solution be reported?
+    #[inline]
+    pub fn reports(&self, worker: usize, rng: &mut Pcg64) -> bool {
+        rng.bernoulli(self.probs[worker])
+    }
+
+    /// Average worker speed (effective fraction of solves that land).
+    pub fn mean_speed(&self) -> f64 {
+        self.probs.iter().sum::<f64>() / self.probs.len() as f64
+    }
+
+    /// Speed of the slowest worker (what a synchronous scheme is gated on).
+    pub fn min_speed(&self) -> f64 {
+        self.probs.iter().cloned().fold(f64::INFINITY, f64::min)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_straggler_shape() {
+        let m = StragglerModel::single(14, 0.25);
+        assert_eq!(m.probs.len(), 14);
+        assert_eq!(m.probs[0], 0.25);
+        assert!(m.probs[1..].iter().all(|&p| p == 1.0));
+        assert!((m.mean_speed() - (0.25 + 13.0) / 14.0).abs() < 1e-12);
+        assert_eq!(m.min_speed(), 0.25);
+    }
+
+    #[test]
+    fn heterogeneous_matches_paper_formula() {
+        let t = 14usize;
+        let theta = 0.3;
+        let m = StragglerModel::heterogeneous(t, theta);
+        for (idx, &p) in m.probs.iter().enumerate() {
+            let i = idx + 1;
+            let expect = (theta + i as f64 / t as f64).min(1.0);
+            assert!((p - expect).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn reports_frequency_tracks_probability() {
+        let m = StragglerModel::single(3, 0.4);
+        let mut rng = Pcg64::seeded(9);
+        let n = 50_000;
+        let hits = (0..n).filter(|_| m.reports(0, &mut rng)).count();
+        assert!((hits as f64 / n as f64 - 0.4).abs() < 0.01);
+        let hits1 = (0..1000).filter(|_| m.reports(1, &mut rng)).count();
+        assert_eq!(hits1, 1000);
+    }
+
+    #[test]
+    fn none_is_full_speed() {
+        let m = StragglerModel::none(5);
+        assert_eq!(m.mean_speed(), 1.0);
+        assert_eq!(m.min_speed(), 1.0);
+    }
+}

@@ -1,0 +1,192 @@
+//! Sequential minibatch BCFW — the reference implementation of AP-BCFW's
+//! update rule with no threads and no delay (paper Algorithm 1 semantics,
+//! "perfect server"). tau = 1 is exactly BCFW [Lacoste-Julien et al. 2013].
+//!
+//! Used by the epoch-counting experiments (Fig 1a/1b), where speedup is
+//! measured in *epochs to convergence* rather than wall-clock.
+
+use super::{schedule_gamma, Monitor, SolveOptions, SolveResult};
+use crate::problems::{ApplyOptions, Problem};
+use crate::util::rng::Pcg64;
+
+/// Run minibatch BCFW on `problem`.
+pub fn solve<P: Problem>(problem: &P, opts: &SolveOptions) -> SolveResult {
+    let n = problem.num_blocks();
+    let tau = opts.tau.clamp(1, n);
+    let mut rng = Pcg64::new(opts.seed, 1);
+    let mut param = problem.init_param();
+    let mut state = problem.init_server();
+    let mut mon = Monitor::new(problem, opts);
+
+    let mut oracle_calls: u64 = 0;
+    let mut k: u64 = 0;
+    loop {
+        // Uniform size-tau subset of blocks (disjoint by construction, as
+        // the perfect server would assemble after collision handling).
+        let blocks = rng.subset(n, tau);
+        let batch: Vec<_> = blocks
+            .iter()
+            .map(|&i| problem.oracle(&param, i))
+            .collect();
+        oracle_calls += tau as u64;
+        let gamma = schedule_gamma(n, tau, k);
+        let info = problem.apply(
+            &mut state,
+            &mut param,
+            &batch,
+            ApplyOptions {
+                gamma,
+                line_search: opts.line_search,
+            },
+        );
+        k += 1;
+        mon.after_apply(&param, &state, info.batch_gap, tau);
+
+        if k % opts.sample_every as u64 == 0
+            && mon.sample_and_check(k, oracle_calls, &param, &state)
+        {
+            break;
+        }
+        // Safety: always stop on resource exhaustion even between samples.
+        if k % 1024 == 0 {
+            let epochs = oracle_calls as f64 / n as f64;
+            if opts.stop.exhausted(epochs, mon.watch.elapsed_s()) {
+                mon.sample_and_check(k, oracle_calls, &param, &state);
+                break;
+            }
+        }
+    }
+
+    let final_param = mon.eval_param(&param).to_vec();
+    SolveResult {
+        trace: mon.trace,
+        param: final_param,
+        raw_param: param,
+        oracle_calls,
+        iterations: k,
+        dropped: 0,
+        elapsed_s: mon.watch.elapsed_s(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::problems::gfl::Gfl;
+    use crate::problems::simplex_qp::SimplexQp;
+    use crate::solver::StopCond;
+    use crate::util::rng::Pcg64;
+
+    fn gfl_instance() -> Gfl {
+        let mut rng = Pcg64::seeded(5);
+        let (d, n) = (6, 40);
+        let y = rng.gaussian_vec(d * n);
+        Gfl::new(d, n, 0.2, y)
+    }
+
+    fn opts(tau: usize, max_epochs: f64) -> SolveOptions {
+        SolveOptions {
+            tau,
+            line_search: false,
+            weighted_averaging: false,
+            sample_every: 16,
+            exact_gap: true,
+            stop: StopCond {
+                max_epochs,
+                max_secs: 30.0,
+                ..Default::default()
+            },
+            seed: 7,
+        }
+    }
+
+    #[test]
+    fn bcfw_converges_on_gfl() {
+        let p = gfl_instance();
+        let r = solve(&p, &opts(1, 200.0));
+        let f_end = r.trace.last().unwrap().objective;
+        // f(0) = 0; must be well below after 200 epochs
+        assert!(f_end < -0.1, "f_end={f_end}");
+        let gap = r.trace.last().unwrap().gap;
+        assert!(gap >= -1e-8);
+        assert!(gap < 1.0, "gap={gap}");
+    }
+
+    #[test]
+    fn objective_trend_is_decreasing_overall() {
+        let p = gfl_instance();
+        let r = solve(&p, &opts(4, 100.0));
+        let objs: Vec<f64> =
+            r.trace.samples.iter().map(|s| s.objective).collect();
+        assert!(objs.last().unwrap() < &objs[0]);
+        // monotone up to small noise
+        for w in objs.windows(2) {
+            assert!(w[1] <= w[0] + 1e-6, "{objs:?}");
+        }
+    }
+
+    #[test]
+    fn larger_tau_converges_in_fewer_iterations_on_incoherent_qp() {
+        // mu=0: fully separable, minibatching should give near-linear
+        // speedup in iterations (not oracle calls).
+        let qp = SimplexQp::random(32, 4, 1.0, 0.0, 3, 2);
+        let f1 = solve(&qp, &opts(1, 60.0));
+        let f8 = solve(&qp, &opts(8, 60.0));
+        let t1 = f1.trace.last().unwrap();
+        let t8 = f8.trace.last().unwrap();
+        // similar epochs; tau=8 used ~8x fewer server iterations
+        assert!(
+            (f8.iterations as f64) < 0.25 * f1.iterations as f64,
+            "{} vs {}",
+            f8.iterations,
+            f1.iterations
+        );
+        // and reached at least comparable objective
+        assert!(t8.objective < t1.objective + 0.05);
+    }
+
+    #[test]
+    fn line_search_at_least_as_good_per_epoch() {
+        let p = gfl_instance();
+        let mut o1 = opts(2, 30.0);
+        let mut o2 = o1.clone();
+        o1.line_search = false;
+        o2.line_search = true;
+        let r_fixed = solve(&p, &o1);
+        let r_ls = solve(&p, &o2);
+        assert!(
+            r_ls.trace.last().unwrap().objective
+                <= r_fixed.trace.last().unwrap().objective + 1e-6
+        );
+    }
+
+    #[test]
+    fn weighted_averaging_returns_averaged_param() {
+        let p = gfl_instance();
+        let mut o = opts(1, 10.0);
+        o.weighted_averaging = true;
+        let r = solve(&p, &o);
+        assert_ne!(r.param, r.raw_param);
+        // averaged iterate should be feasible too (convex combination)
+        for t in 0..p.m {
+            let nrm =
+                crate::util::la::norm2(&r.param[t * p.d..(t + 1) * p.d]);
+            assert!(nrm <= p.lam + 1e-5);
+        }
+    }
+
+    #[test]
+    fn stops_on_primal_target() {
+        let p = gfl_instance();
+        // compute a reference optimum first
+        let r_ref = solve(&p, &opts(1, 400.0));
+        let f_star = r_ref.trace.last().unwrap().objective;
+        let mut o = opts(1, 1e9);
+        o.stop.f_star = Some(f_star);
+        o.stop.eps_primal = Some(0.05);
+        o.stop.max_secs = 60.0;
+        let r = solve(&p, &o);
+        let f_end = r.trace.last().unwrap().objective;
+        assert!(f_end - f_star <= 0.06, "didn't stop at target");
+    }
+}

@@ -1,0 +1,308 @@
+//! Sequential solvers and shared solver machinery.
+//!
+//! [`minibatch`] is the reference (thread-free) implementation of AP-BCFW's
+//! update rule — BCFW at tau = 1 — used by the epoch-counting experiments
+//! (Fig 1). [`batch_fw`] is classical Frank-Wolfe (tau = n). [`delayed`]
+//! adds the paper's iid-staleness model (Fig 4). [`pbcd`] is the parallel
+//! block-coordinate-descent baseline of §D.4.
+
+pub mod batch_fw;
+pub mod delayed;
+pub mod minibatch;
+pub mod pbcd;
+
+use crate::problems::Problem;
+use crate::util::metrics::{Sample, Stopwatch, Trace};
+
+/// The paper's step-size schedule gamma_k = 2 n tau / (tau^2 k + 2 n),
+/// clamped to [0, 1]: for tau > 1 the raw formula starts at gamma_0 = tau,
+/// which would leave the feasible set — iterates must remain convex
+/// combinations of extreme points, so any implementation caps at 1 (the
+/// descent lemma only improves for gamma <= 1).
+#[inline]
+pub fn schedule_gamma(n: usize, tau: usize, k: u64) -> f32 {
+    let (n, tau) = (n as f64, tau as f64);
+    (2.0 * n * tau / (tau * tau * k as f64 + 2.0 * n)).min(1.0) as f32
+}
+
+/// Batch Frank-Wolfe schedule gamma_k = 2/(k+2).
+#[inline]
+pub fn schedule_gamma_batch(k: u64) -> f32 {
+    2.0 / (k as f64 + 2.0) as f32
+}
+
+/// Stopping conditions; any satisfied condition stops the solve.
+#[derive(Debug, Clone, Copy)]
+pub struct StopCond {
+    /// Known/cached optimal value (enables eps_primal).
+    pub f_star: Option<f64>,
+    /// Stop when f - f_star <= eps_primal.
+    pub eps_primal: Option<f64>,
+    /// Stop when the (estimated or exact) surrogate gap <= eps_gap.
+    pub eps_gap: Option<f64>,
+    /// Hard cap on effective data passes (oracle calls / n).
+    pub max_epochs: f64,
+    /// Hard wall-clock cap in seconds.
+    pub max_secs: f64,
+}
+
+impl Default for StopCond {
+    fn default() -> Self {
+        Self {
+            f_star: None,
+            eps_primal: None,
+            eps_gap: None,
+            max_epochs: 100.0,
+            max_secs: 600.0,
+        }
+    }
+}
+
+impl StopCond {
+    /// Whether a (objective, gap) observation satisfies a target condition.
+    pub fn target_met(&self, objective: f64, gap: f64) -> bool {
+        if let (Some(fs), Some(eps)) = (self.f_star, self.eps_primal) {
+            if objective - fs <= eps {
+                return true;
+            }
+        }
+        if let Some(eg) = self.eps_gap {
+            if gap <= eg {
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Whether resource limits are exhausted.
+    pub fn exhausted(&self, epochs: f64, secs: f64) -> bool {
+        epochs >= self.max_epochs || secs >= self.max_secs
+    }
+}
+
+/// Options shared by the sequential solvers.
+#[derive(Debug, Clone)]
+pub struct SolveOptions {
+    /// Minibatch size tau.
+    pub tau: usize,
+    /// Exact coordinate line search instead of the schedule.
+    pub line_search: bool,
+    /// Weighted iterate averaging x-bar_k (rho_k prop. to k), as used for
+    /// the structural SVM experiments.
+    pub weighted_averaging: bool,
+    /// Record a trace sample every this many server iterations.
+    pub sample_every: usize,
+    /// Compute the exact duality gap at sample points (otherwise the
+    /// unbiased n/tau-scaled batch-gap estimate is recorded).
+    pub exact_gap: bool,
+    pub stop: StopCond,
+    pub seed: u64,
+}
+
+impl Default for SolveOptions {
+    fn default() -> Self {
+        Self {
+            tau: 1,
+            line_search: false,
+            weighted_averaging: false,
+            sample_every: 64,
+            exact_gap: true,
+            stop: StopCond::default(),
+            seed: 0,
+        }
+    }
+}
+
+/// Result of a sequential solve.
+pub struct SolveResult {
+    pub trace: Trace,
+    /// Final parameter (the averaged iterate when averaging was on).
+    pub param: Vec<f32>,
+    /// Final raw (non-averaged) parameter.
+    pub raw_param: Vec<f32>,
+    pub oracle_calls: u64,
+    pub iterations: u64,
+    /// Oracle calls whose updates were dropped (delay rule; delayed solver).
+    pub dropped: u64,
+    pub elapsed_s: f64,
+}
+
+/// Weighted iterate averaging: x-bar_k = (2/(k(k+1))) sum_{j<=k} j x_j,
+/// maintained incrementally (k starts at 1 on the first `update`).
+pub struct WeightedAverage {
+    pub param: Vec<f32>,
+    pub aux: f64,
+    k: u64,
+}
+
+impl WeightedAverage {
+    pub fn new(dim: usize) -> Self {
+        Self {
+            param: vec![0.0; dim],
+            aux: 0.0,
+            k: 0,
+        }
+    }
+
+    /// Fold in the iterate of step k (called once per server iteration).
+    pub fn update(&mut self, param: &[f32], aux: f64) {
+        self.k += 1;
+        let c = 2.0 / (self.k as f64 + 1.0);
+        let b = 1.0 - c;
+        for (avg, &x) in self.param.iter_mut().zip(param.iter()) {
+            *avg = (b * *avg as f64 + c * x as f64) as f32;
+        }
+        self.aux = b * self.aux + c * aux;
+    }
+}
+
+/// Internal helper: shared trace/stop bookkeeping across solvers.
+pub(crate) struct Monitor<'a, P: Problem> {
+    pub problem: &'a P,
+    pub opts: &'a SolveOptions,
+    pub watch: Stopwatch,
+    pub trace: Trace,
+    pub avg: Option<WeightedAverage>,
+    /// Most recent unbiased gap estimate (n/tau * batch gap).
+    pub gap_estimate: f64,
+}
+
+impl<'a, P: Problem> Monitor<'a, P> {
+    pub fn new(problem: &'a P, opts: &'a SolveOptions) -> Self {
+        let avg = if opts.weighted_averaging {
+            Some(WeightedAverage::new(problem.param_dim()))
+        } else {
+            None
+        };
+        Self {
+            problem,
+            opts,
+            watch: Stopwatch::start(),
+            trace: Trace::default(),
+            avg,
+            gap_estimate: f64::INFINITY,
+        }
+    }
+
+    /// Fold the iterate into the average and update the gap estimate.
+    pub fn after_apply(
+        &mut self,
+        param: &[f32],
+        state: &P::ServerState,
+        batch_gap: f64,
+        tau: usize,
+    ) {
+        if let Some(avg) = &mut self.avg {
+            avg.update(param, self.problem.aux(state));
+        }
+        let n = self.problem.num_blocks() as f64;
+        let inst = batch_gap * n / tau.max(1) as f64;
+        // Smooth the noisy instantaneous estimate a little.
+        self.gap_estimate = if self.gap_estimate.is_finite() {
+            0.8 * self.gap_estimate + 0.2 * inst
+        } else {
+            inst
+        };
+    }
+
+    /// The parameter whose quality we report (averaged if enabled).
+    pub fn eval_param<'b>(&'b self, raw: &'b [f32]) -> &'b [f32] {
+        match &self.avg {
+            Some(avg) => &avg.param,
+            None => raw,
+        }
+    }
+
+    /// Record a sample; returns true if a stop condition is met.
+    pub fn sample_and_check(
+        &mut self,
+        iter: u64,
+        oracle_calls: u64,
+        raw_param: &[f32],
+        state: &P::ServerState,
+    ) -> bool {
+        let objective = match &self.avg {
+            Some(avg) => self.problem.objective_from(&avg.param, avg.aux),
+            None => self.problem.objective(state, raw_param),
+        };
+        let gap = if self.opts.exact_gap {
+            match &self.avg {
+                Some(avg) => self.problem.full_gap(state, &avg.param),
+                None => self.problem.full_gap(state, raw_param),
+            }
+        } else {
+            self.gap_estimate
+        };
+        let elapsed_s = self.watch.elapsed_s();
+        self.trace.push(Sample {
+            iter: iter as usize,
+            oracle_calls,
+            elapsed_s,
+            objective,
+            gap,
+        });
+        let epochs = oracle_calls as f64 / self.problem.num_blocks() as f64;
+        self.opts.stop.target_met(objective, gap)
+            || self.opts.stop.exhausted(epochs, elapsed_s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedule_matches_paper_formula() {
+        // gamma = 2 n tau / (tau^2 k + 2 n) once below the clamp
+        let g = schedule_gamma(100, 4, 100);
+        let expect = 2.0 * 100.0 * 4.0 / (16.0 * 100.0 + 200.0);
+        assert!((g as f64 - expect).abs() < 1e-6);
+        // tau = 1 reduces to BCFW's 2n/(k+2n)
+        let g1 = schedule_gamma(50, 1, 7);
+        assert!((g1 as f64 - 100.0 / 107.0).abs() < 1e-6);
+        // early iterations clamp to 1 (raw formula would be tau at k=0)
+        assert_eq!(schedule_gamma(10, 10, 0), 1.0);
+        assert_eq!(schedule_gamma(100, 8, 0), 1.0);
+    }
+
+    #[test]
+    fn schedule_is_decreasing_and_in_unit_interval() {
+        let mut prev = f32::INFINITY;
+        for k in 0..1000u64 {
+            let g = schedule_gamma(200, 8, k);
+            assert!(g > 0.0 && g <= 1.0_f32.min(prev));
+            prev = g;
+        }
+    }
+
+    #[test]
+    fn weighted_average_formula() {
+        // x-bar_k = 2/(k(k+1)) sum j x_j ; with x_j = j: sum j^2 * 2/(k(k+1))
+        let mut wa = WeightedAverage::new(1);
+        for j in 1..=10u64 {
+            wa.update(&[j as f32], j as f64);
+        }
+        let k = 10.0f64;
+        let sum_j2 = (1..=10).map(|j| (j * j) as f64).sum::<f64>();
+        let expect = 2.0 / (k * (k + 1.0)) * sum_j2;
+        assert!((wa.param[0] as f64 - expect).abs() < 1e-4);
+        assert!((wa.aux - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn stop_conditions() {
+        let st = StopCond {
+            f_star: Some(1.0),
+            eps_primal: Some(0.1),
+            eps_gap: Some(0.01),
+            max_epochs: 5.0,
+            max_secs: 10.0,
+        };
+        assert!(st.target_met(1.05, 1.0)); // primal met
+        assert!(st.target_met(2.0, 0.005)); // gap met
+        assert!(!st.target_met(2.0, 1.0));
+        assert!(st.exhausted(5.0, 0.0));
+        assert!(st.exhausted(0.0, 10.0));
+        assert!(!st.exhausted(4.9, 9.9));
+    }
+}

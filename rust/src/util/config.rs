@@ -1,0 +1,283 @@
+//! INI-style configuration system.
+//!
+//! The launcher reads `[section]`-structured `key = value` files (plus
+//! `--set section.key=value` CLI overrides) into a typed `Config`. No TOML
+//! crate exists in the offline vendor set, so this is a small, strict parser
+//! of the subset we need: sections, scalar keys, `#`/`;` comments, and
+//! whitespace tolerance. Unknown keys are preserved (and listable) so
+//! experiments can carry ad-hoc parameters.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// Parsed configuration: `section.key -> value` (strings; typed accessors).
+#[derive(Debug, Clone, Default)]
+pub struct Config {
+    values: BTreeMap<String, String>,
+}
+
+/// Error with line information for parse failures.
+#[derive(Debug)]
+pub struct ConfigError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "config parse error at line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for ConfigError {}
+
+impl Config {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Parse INI text. Later keys override earlier ones.
+    pub fn parse(text: &str) -> Result<Self, ConfigError> {
+        let mut cfg = Self::new();
+        cfg.merge_str(text)?;
+        Ok(cfg)
+    }
+
+    /// Parse and merge INI text into this config.
+    pub fn merge_str(&mut self, text: &str) -> Result<(), ConfigError> {
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') || line.starts_with(';')
+            {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                // Allow trailing comments after the header.
+                let rest = match rest.find(|c| c == '#' || c == ';') {
+                    Some(pos) => rest[..pos].trim_end(),
+                    None => rest,
+                };
+                let name = rest.strip_suffix(']').ok_or(ConfigError {
+                    line: lineno + 1,
+                    msg: "unterminated section header".into(),
+                })?;
+                let name = name.trim();
+                if name.is_empty() {
+                    return Err(ConfigError {
+                        line: lineno + 1,
+                        msg: "empty section name".into(),
+                    });
+                }
+                section = name.to_string();
+                continue;
+            }
+            let (key, value) = line.split_once('=').ok_or(ConfigError {
+                line: lineno + 1,
+                msg: format!("expected key = value, got {line:?}"),
+            })?;
+            let key = key.trim();
+            if key.is_empty() {
+                return Err(ConfigError {
+                    line: lineno + 1,
+                    msg: "empty key".into(),
+                });
+            }
+            // Strip trailing comment from the value.
+            let mut value = value.trim();
+            if let Some(pos) = value.find(|c| c == '#' || c == ';') {
+                value = value[..pos].trim();
+            }
+            self.set(&format!("{section}.{key}"), value);
+        }
+        Ok(())
+    }
+
+    /// Load from a file path.
+    pub fn load(path: &str) -> anyhow::Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Ok(Self::parse(&text)?)
+    }
+
+    /// Set `section.key` (or bare `key` for the root section).
+    pub fn set(&mut self, dotted: &str, value: &str) {
+        let dotted = dotted.strip_prefix('.').unwrap_or(dotted);
+        self.values.insert(dotted.to_string(), value.to_string());
+    }
+
+    /// Raw string lookup.
+    pub fn get(&self, dotted: &str) -> Option<&str> {
+        self.values.get(dotted).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, dotted: &str, default: &str) -> String {
+        self.get(dotted).unwrap_or(default).to_string()
+    }
+
+    pub fn get_usize(&self, dotted: &str, default: usize) -> usize {
+        self.get(dotted)
+            .map(|v| {
+                v.parse().unwrap_or_else(|_| {
+                    panic!("config {dotted}={v:?} is not a usize")
+                })
+            })
+            .unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, dotted: &str, default: u64) -> u64 {
+        self.get(dotted)
+            .map(|v| {
+                v.parse().unwrap_or_else(|_| {
+                    panic!("config {dotted}={v:?} is not a u64")
+                })
+            })
+            .unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, dotted: &str, default: f64) -> f64 {
+        self.get(dotted)
+            .map(|v| {
+                v.parse().unwrap_or_else(|_| {
+                    panic!("config {dotted}={v:?} is not a f64")
+                })
+            })
+            .unwrap_or(default)
+    }
+
+    pub fn get_bool(&self, dotted: &str, default: bool) -> bool {
+        match self.get(dotted) {
+            None => default,
+            Some("true") | Some("1") | Some("yes") | Some("on") => true,
+            Some("false") | Some("0") | Some("no") | Some("off") => false,
+            Some(v) => panic!("config {dotted}={v:?} is not a bool"),
+        }
+    }
+
+    /// Comma-separated list of usizes, e.g. `taus = 1, 2, 4, 8`.
+    pub fn get_usize_list(&self, dotted: &str, default: &[usize]) -> Vec<usize> {
+        match self.get(dotted) {
+            None => default.to_vec(),
+            Some(v) => v
+                .split(',')
+                .map(|p| {
+                    p.trim().parse().unwrap_or_else(|_| {
+                        panic!("config {dotted}: bad usize {p:?}")
+                    })
+                })
+                .collect(),
+        }
+    }
+
+    /// Comma-separated list of f64s.
+    pub fn get_f64_list(&self, dotted: &str, default: &[f64]) -> Vec<f64> {
+        match self.get(dotted) {
+            None => default.to_vec(),
+            Some(v) => v
+                .split(',')
+                .map(|p| {
+                    p.trim().parse().unwrap_or_else(|_| {
+                        panic!("config {dotted}: bad f64 {p:?}")
+                    })
+                })
+                .collect(),
+        }
+    }
+
+    /// All keys under a section prefix.
+    pub fn keys_under(&self, section: &str) -> Vec<String> {
+        let prefix = format!("{section}.");
+        self.values
+            .keys()
+            .filter(|k| k.starts_with(&prefix))
+            .cloned()
+            .collect()
+    }
+
+    /// Iterate all entries (for dump/debug).
+    pub fn iter(&self) -> impl Iterator<Item = (&String, &String)> {
+        self.values.iter()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# top comment
+root_key = 7
+
+[gfl]
+d = 10
+n = 100          # inline comment
+lambda = 0.01
+taus = 1, 2, 4, 8
+
+[run]
+line_search = true
+mode = async
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.get_usize("root_key", 0), 7);
+        assert_eq!(c.get_usize("gfl.d", 0), 10);
+        assert_eq!(c.get_usize("gfl.n", 0), 100);
+        assert!((c.get_f64("gfl.lambda", 0.0) - 0.01).abs() < 1e-12);
+        assert_eq!(c.get_usize_list("gfl.taus", &[]), vec![1, 2, 4, 8]);
+        assert!(c.get_bool("run.line_search", false));
+        assert_eq!(c.get_or("run.mode", "sync"), "async");
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let c = Config::parse("").unwrap();
+        assert_eq!(c.get_usize("absent", 42), 42);
+        assert!(!c.get_bool("absent", false));
+        assert_eq!(c.get_f64_list("absent", &[1.5]), vec![1.5]);
+    }
+
+    #[test]
+    fn later_overrides_earlier() {
+        let mut c = Config::parse("[a]\nx = 1\n").unwrap();
+        c.merge_str("[a]\nx = 2\n").unwrap();
+        assert_eq!(c.get_usize("a.x", 0), 2);
+    }
+
+    #[test]
+    fn cli_set_override() {
+        let mut c = Config::parse(SAMPLE).unwrap();
+        c.set("gfl.d", "25");
+        assert_eq!(c.get_usize("gfl.d", 0), 25);
+    }
+
+    #[test]
+    fn rejects_bad_lines() {
+        assert!(Config::parse("not a kv line").is_err());
+        assert!(Config::parse("[unterminated").is_err());
+        assert!(Config::parse("[]\n").is_err());
+        assert!(Config::parse(" = 3").is_err());
+    }
+
+    #[test]
+    fn section_header_trailing_comment() {
+        let c = Config::parse("[sec]   # note\nx = 1\n").unwrap();
+        assert_eq!(c.get_usize("sec.x", 0), 1);
+    }
+
+    #[test]
+    fn keys_under_section() {
+        let c = Config::parse(SAMPLE).unwrap();
+        let keys = c.keys_under("gfl");
+        assert_eq!(keys.len(), 4);
+        assert!(keys.iter().all(|k| k.starts_with("gfl.")));
+    }
+
+    #[test]
+    #[should_panic]
+    fn typed_accessor_panics_on_garbage() {
+        let c = Config::parse("[a]\nx = banana\n").unwrap();
+        c.get_usize("a.x", 0);
+    }
+}

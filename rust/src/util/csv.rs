@@ -1,0 +1,156 @@
+//! Minimal CSV emission for experiment results.
+//!
+//! Writers quote only when needed (comma/quote/newline in a field) and keep
+//! an in-memory copy so tests and the experiment runner can inspect rows
+//! without re-reading the file.
+
+use std::fs::File;
+use std::io::{BufWriter, Write as _};
+use std::path::Path;
+
+/// A table being accumulated and (optionally) streamed to disk.
+pub struct CsvWriter {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+    sink: Option<BufWriter<File>>,
+}
+
+fn escape(field: &str) -> String {
+    if field.contains(',') || field.contains('"') || field.contains('\n') {
+        format!("\"{}\"", field.replace('"', "\"\""))
+    } else {
+        field.to_string()
+    }
+}
+
+impl CsvWriter {
+    /// In-memory only.
+    pub fn in_memory(header: &[&str]) -> Self {
+        Self {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            sink: None,
+        }
+    }
+
+    /// Streaming to a file (parent directories created).
+    pub fn to_file(path: &Path, header: &[&str]) -> anyhow::Result<Self> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut sink = BufWriter::new(File::create(path)?);
+        let head_line = header
+            .iter()
+            .map(|h| escape(h))
+            .collect::<Vec<_>>()
+            .join(",");
+        writeln!(sink, "{head_line}")?;
+        Ok(Self {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            sink: Some(sink),
+        })
+    }
+
+    /// Append a row; panics if the arity does not match the header.
+    pub fn row(&mut self, fields: &[String]) {
+        assert_eq!(
+            fields.len(),
+            self.header.len(),
+            "csv row arity {} != header arity {}",
+            fields.len(),
+            self.header.len()
+        );
+        if let Some(sink) = &mut self.sink {
+            let line = fields
+                .iter()
+                .map(|f| escape(f))
+                .collect::<Vec<_>>()
+                .join(",");
+            writeln!(sink, "{line}").expect("csv write");
+        }
+        self.rows.push(fields.to_vec());
+    }
+
+    /// Convenience for display-able fields.
+    pub fn rowd(&mut self, fields: &[&dyn std::fmt::Display]) {
+        let fs: Vec<String> = fields.iter().map(|f| f.to_string()).collect();
+        self.row(&fs);
+    }
+
+    pub fn header(&self) -> &[String] {
+        &self.header
+    }
+
+    pub fn rows(&self) -> &[Vec<String>] {
+        &self.rows
+    }
+
+    /// Flush the file sink (no-op in memory).
+    pub fn flush(&mut self) -> anyhow::Result<()> {
+        if let Some(sink) = &mut self.sink {
+            sink.flush()?;
+        }
+        Ok(())
+    }
+
+    /// Render the whole table as a CSV string (from the in-memory copy).
+    pub fn to_csv_string(&self) -> String {
+        let mut out = String::new();
+        out.push_str(
+            &self
+                .header
+                .iter()
+                .map(|h| escape(h))
+                .collect::<Vec<_>>()
+                .join(","),
+        );
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(
+                &row.iter().map(|f| escape(f)).collect::<Vec<_>>().join(","),
+            );
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn in_memory_roundtrip() {
+        let mut w = CsvWriter::in_memory(&["a", "b"]);
+        w.row(&["1".into(), "2".into()]);
+        w.rowd(&[&3.5, &"x,y"]);
+        let s = w.to_csv_string();
+        assert_eq!(s, "a,b\n1,2\n3.5,\"x,y\"\n");
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_mismatch_panics() {
+        let mut w = CsvWriter::in_memory(&["a", "b"]);
+        w.row(&["only-one".into()]);
+    }
+
+    #[test]
+    fn escaping_quotes() {
+        assert_eq!(escape("plain"), "plain");
+        assert_eq!(escape("say \"hi\""), "\"say \"\"hi\"\"\"");
+    }
+
+    #[test]
+    fn file_sink_writes() {
+        let dir = std::env::temp_dir().join("apbcfw_csv_test");
+        let path = dir.join("t.csv");
+        let mut w = CsvWriter::to_file(&path, &["x"]).unwrap();
+        w.row(&["7".into()]);
+        w.flush().unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "x\n7\n");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

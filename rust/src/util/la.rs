@@ -1,0 +1,181 @@
+//! Dense vector primitives used on the coordinator hot path.
+//!
+//! These are the L3 inner loops (update application is `axpy` over block
+//! slices; gap/line-search terms are `dot`s). Kept free of bounds checks in
+//! the core loops via iterator zips; the §Perf pass benchmarks these.
+
+/// y += a * x
+#[inline]
+pub fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x.iter()) {
+        *yi += a * *xi;
+    }
+}
+
+/// y = (1 - a) * y + a * x   (convex combination, FW block update)
+#[inline]
+pub fn lerp_into(a: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    let b = 1.0 - a;
+    for (yi, xi) in y.iter_mut().zip(x.iter()) {
+        *yi = b * *yi + a * *xi;
+    }
+}
+
+/// <x, y> accumulated in f64 for stability.
+///
+/// §Perf note: a 4-way unrolled variant was tried and showed no gain on
+/// this host (the f32->f64 convert chain, not the add latency, bounds it);
+/// reverted to the simple loop — see EXPERIMENTS.md §Perf.
+#[inline]
+pub fn dot(x: &[f32], y: &[f32]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    let mut acc = 0.0f64;
+    for (xi, yi) in x.iter().zip(y.iter()) {
+        acc += (*xi as f64) * (*yi as f64);
+    }
+    acc
+}
+
+/// ||x||_2^2 in f64.
+#[inline]
+pub fn norm2_sq(x: &[f32]) -> f64 {
+    let mut acc = 0.0f64;
+    for xi in x {
+        acc += (*xi as f64) * (*xi as f64);
+    }
+    acc
+}
+
+/// ||x||_2.
+#[inline]
+pub fn norm2(x: &[f32]) -> f64 {
+    norm2_sq(x).sqrt()
+}
+
+/// x scaled in place.
+#[inline]
+pub fn scale(a: f32, x: &mut [f32]) {
+    for xi in x {
+        *xi *= a;
+    }
+}
+
+/// Euclidean projection of `x` onto the l2 ball of radius `r` (in place).
+pub fn project_l2_ball(r: f64, x: &mut [f32]) {
+    let n = norm2(x);
+    if n > r {
+        let s = (r / n) as f32;
+        scale(s, x);
+    }
+}
+
+/// Euclidean projection onto the probability simplex (Held et al. 1974 /
+/// Duchi et al. 2008 sort-based algorithm), in place.
+pub fn project_simplex(x: &mut [f32]) {
+    let n = x.len();
+    assert!(n > 0);
+    let mut u: Vec<f64> = x.iter().map(|&v| v as f64).collect();
+    u.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    let mut css = 0.0f64;
+    let mut rho = 0usize;
+    let mut theta = 0.0f64;
+    for (j, &uj) in u.iter().enumerate() {
+        css += uj;
+        let t = (css - 1.0) / (j + 1) as f64;
+        if uj - t > 0.0 {
+            rho = j + 1;
+            theta = t;
+        }
+    }
+    debug_assert!(rho > 0);
+    for v in x.iter_mut() {
+        *v = ((*v as f64) - theta).max(0.0) as f32;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn axpy_and_lerp() {
+        let x = [1.0f32, 2.0, 3.0];
+        let mut y = [10.0f32, 10.0, 10.0];
+        axpy(2.0, &x, &mut y);
+        assert_eq!(y, [12.0, 14.0, 16.0]);
+        let mut z = [0.0f32, 0.0, 4.0];
+        lerp_into(0.25, &x, &mut z);
+        assert_eq!(z, [0.25, 0.5, 3.75]);
+    }
+
+    #[test]
+    fn dot_and_norms() {
+        let x = [3.0f32, 4.0];
+        assert_eq!(dot(&x, &x), 25.0);
+        assert_eq!(norm2(&x), 5.0);
+        assert_eq!(norm2_sq(&x), 25.0);
+    }
+
+    #[test]
+    fn l2_projection() {
+        let mut x = [3.0f32, 4.0];
+        project_l2_ball(10.0, &mut x);
+        assert_eq!(x, [3.0, 4.0]); // inside: untouched
+        project_l2_ball(1.0, &mut x);
+        assert!((norm2(&x) - 1.0).abs() < 1e-6);
+        assert!((x[1] / x[0] - 4.0 / 3.0).abs() < 1e-5); // direction kept
+    }
+
+    #[test]
+    fn simplex_projection_basic() {
+        let mut x = [0.2f32, 0.3, 0.5];
+        project_simplex(&mut x);
+        // already on the simplex: unchanged
+        assert!((x[0] - 0.2).abs() < 1e-6 && (x[2] - 0.5).abs() < 1e-6);
+
+        let mut y = [2.0f32, 0.0, 0.0];
+        project_simplex(&mut y);
+        assert_eq!(y, [1.0, 0.0, 0.0]);
+
+        let mut z = [0.5f32, 0.5, 0.5];
+        project_simplex(&mut z);
+        let sum: f32 = z.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-5);
+        assert!(z.iter().all(|&v| (v - 1.0 / 3.0).abs() < 1e-5));
+    }
+
+    #[test]
+    fn simplex_projection_matches_definition() {
+        // Projection must be the closest simplex point: check optimality via
+        // random feasible comparisons.
+        use crate::util::rng::Pcg64;
+        let mut rng = Pcg64::seeded(9);
+        for _ in 0..50 {
+            let x0: Vec<f32> = (0..6).map(|_| rng.gaussian() as f32).collect();
+            let mut p = x0.clone();
+            project_simplex(&mut p);
+            let sum: f64 = p.iter().map(|&v| v as f64).sum();
+            assert!((sum - 1.0).abs() < 1e-5);
+            assert!(p.iter().all(|&v| v >= -1e-7));
+            let d_p: f64 = x0
+                .iter()
+                .zip(&p)
+                .map(|(a, b)| ((a - b) as f64).powi(2))
+                .sum();
+            for _ in 0..20 {
+                // random simplex point
+                let mut q: Vec<f64> = (0..6).map(|_| -rng.uniform().ln()).collect();
+                let s: f64 = q.iter().sum();
+                q.iter_mut().for_each(|v| *v /= s);
+                let d_q: f64 = x0
+                    .iter()
+                    .zip(&q)
+                    .map(|(a, b)| ((*a as f64) - b).powi(2))
+                    .sum();
+                assert!(d_p <= d_q + 1e-6);
+            }
+        }
+    }
+}

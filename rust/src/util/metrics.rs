@@ -1,0 +1,215 @@
+//! Run metrics: convergence traces and coordinator counters.
+//!
+//! A `Trace` records (iteration, oracle calls, wall-clock, primal value,
+//! gap estimate) samples during a solve; experiments post-process traces
+//! into the paper's figures. `Counters` aggregates coordinator-side event
+//! counts (updates applied/dropped, collisions, oracle calls) with atomics
+//! so worker threads can bump them without locks.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+/// One convergence sample.
+#[derive(Debug, Clone, Copy)]
+pub struct Sample {
+    /// Server iteration k.
+    pub iter: usize,
+    /// Total oracle calls so far (epochs = calls / n).
+    pub oracle_calls: u64,
+    /// Seconds since solve start.
+    pub elapsed_s: f64,
+    /// Objective f(x^(k)).
+    pub objective: f64,
+    /// Surrogate duality-gap estimate (exact if computed over all blocks).
+    pub gap: f64,
+}
+
+/// Convergence trace of a solve.
+#[derive(Debug, Clone, Default)]
+pub struct Trace {
+    pub samples: Vec<Sample>,
+}
+
+impl Trace {
+    pub fn push(&mut self, s: Sample) {
+        self.samples.push(s);
+    }
+
+    pub fn last(&self) -> Option<&Sample> {
+        self.samples.last()
+    }
+
+    /// First sample index where objective - f_star <= eps; None if never.
+    pub fn first_below(&self, f_star: f64, eps: f64) -> Option<&Sample> {
+        self.samples
+            .iter()
+            .find(|s| s.objective - f_star <= eps)
+    }
+
+    /// First sample where gap <= eps.
+    pub fn first_gap_below(&self, eps: f64) -> Option<&Sample> {
+        self.samples.iter().find(|s| s.gap <= eps)
+    }
+
+    /// Epochs (oracle calls / n) needed to reach f - f_star <= eps.
+    pub fn epochs_to(&self, f_star: f64, eps: f64, n: usize) -> Option<f64> {
+        self.first_below(f_star, eps)
+            .map(|s| s.oracle_calls as f64 / n as f64)
+    }
+
+    /// Wall-clock seconds to reach f - f_star <= eps.
+    pub fn secs_to(&self, f_star: f64, eps: f64) -> Option<f64> {
+        self.first_below(f_star, eps).map(|s| s.elapsed_s)
+    }
+
+    /// Best (lowest) objective seen.
+    pub fn best_objective(&self) -> f64 {
+        self.samples
+            .iter()
+            .map(|s| s.objective)
+            .fold(f64::INFINITY, f64::min)
+    }
+}
+
+/// Lock-free coordinator counters (shared across worker threads).
+#[derive(Debug, Default)]
+pub struct Counters {
+    /// Oracle subproblems solved by workers.
+    pub oracle_calls: AtomicU64,
+    /// Updates applied by the server.
+    pub updates_applied: AtomicU64,
+    /// Updates overwritten due to block collision (paper Alg 1, step 1).
+    pub collisions: AtomicU64,
+    /// Updates dropped by the staleness rule (delay > k/2) or straggler sim.
+    pub dropped: AtomicU64,
+    /// Server iterations completed.
+    pub iterations: AtomicU64,
+}
+
+impl Counters {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn snapshot(&self) -> CounterSnapshot {
+        CounterSnapshot {
+            oracle_calls: self.oracle_calls.load(Ordering::Relaxed),
+            updates_applied: self.updates_applied.load(Ordering::Relaxed),
+            collisions: self.collisions.load(Ordering::Relaxed),
+            dropped: self.dropped.load(Ordering::Relaxed),
+            iterations: self.iterations.load(Ordering::Relaxed),
+        }
+    }
+
+    #[inline]
+    pub fn bump(counter: &AtomicU64) {
+        counter.fetch_add(1, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add(counter: &AtomicU64, v: u64) {
+        counter.fetch_add(v, Ordering::Relaxed);
+    }
+}
+
+/// Plain-data copy of `Counters`.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CounterSnapshot {
+    pub oracle_calls: u64,
+    pub updates_applied: u64,
+    pub collisions: u64,
+    pub dropped: u64,
+    pub iterations: u64,
+}
+
+/// Simple wall-clock stopwatch.
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Self {
+            start: Instant::now(),
+        }
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::start()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk_trace() -> Trace {
+        let mut t = Trace::default();
+        for k in 0..10 {
+            t.push(Sample {
+                iter: k,
+                oracle_calls: (k as u64 + 1) * 5,
+                elapsed_s: k as f64 * 0.1,
+                objective: 10.0 / (k as f64 + 1.0),
+                gap: 20.0 / (k as f64 + 1.0),
+            });
+        }
+        t
+    }
+
+    #[test]
+    fn first_below_finds_threshold() {
+        let t = mk_trace();
+        // f - 0 <= 2.0 first at k: 10/(k+1) <= 2 -> k >= 4.
+        let s = t.first_below(0.0, 2.0).unwrap();
+        assert_eq!(s.iter, 4);
+        assert!(t.first_below(0.0, 0.5).is_none());
+    }
+
+    #[test]
+    fn epochs_and_secs() {
+        let t = mk_trace();
+        let e = t.epochs_to(0.0, 2.0, 5).unwrap();
+        assert_eq!(e, 5.0); // k=4 -> calls=25 -> /5
+        let s = t.secs_to(0.0, 2.0).unwrap();
+        assert!((s - 0.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gap_threshold() {
+        let t = mk_trace();
+        let s = t.first_gap_below(4.0).unwrap();
+        assert_eq!(s.iter, 4);
+    }
+
+    #[test]
+    fn counters_threaded() {
+        use std::sync::Arc;
+        let c = Arc::new(Counters::new());
+        let mut handles = vec![];
+        for _ in 0..4 {
+            let c = Arc::clone(&c);
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..1000 {
+                    Counters::bump(&c.oracle_calls);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(c.snapshot().oracle_calls, 4000);
+    }
+
+    #[test]
+    fn best_objective() {
+        let t = mk_trace();
+        assert!((t.best_objective() - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,10 @@
+//! Infrastructure substrates: PRNG, config, CSV, stats, metrics, vector
+//! math, and a property-testing harness (see DESIGN.md §3 S19-S22).
+
+pub mod config;
+pub mod csv;
+pub mod la;
+pub mod metrics;
+pub mod proptest;
+pub mod rng;
+pub mod stats;

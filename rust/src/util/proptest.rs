@@ -1,0 +1,133 @@
+//! Miniature property-testing harness (offline substitute for `proptest`).
+//!
+//! Usage:
+//! ```ignore
+//! check(100, 42, |g| {
+//!     let n = g.usize_in(1, 50);
+//!     let xs = g.f32_vec(n, -10.0, 10.0);
+//!     prop_assert(xs.len() == n, "length");
+//! });
+//! ```
+//! On failure the harness re-raises with the failing case number and seed so
+//! the case is reproducible (`Gen` is a thin deterministic wrapper over
+//! `Pcg64`). No shrinking — cases are kept small instead.
+
+use super::rng::Pcg64;
+
+/// Value generator handed to each property case.
+pub struct Gen {
+    rng: Pcg64,
+    /// Per-case seed (for failure reports).
+    pub case_seed: u64,
+}
+
+impl Gen {
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        lo + self.rng.below(hi - lo + 1)
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range_f64(lo, hi)
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        self.rng.range_f64(lo as f64, hi as f64) as f32
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.bernoulli(0.5)
+    }
+
+    pub fn f32_vec(&mut self, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..len).map(|_| self.f32_in(lo, hi)).collect()
+    }
+
+    pub fn gaussian_vec(&mut self, len: usize) -> Vec<f32> {
+        self.rng.gaussian_vec(len)
+    }
+
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len())]
+    }
+
+    pub fn subset(&mut self, n: usize, tau: usize) -> Vec<usize> {
+        self.rng.subset(n, tau)
+    }
+
+    /// Access the raw rng for anything else.
+    pub fn rng(&mut self) -> &mut Pcg64 {
+        &mut self.rng
+    }
+}
+
+/// Run `cases` property cases derived from `seed`. The closure should panic
+/// (e.g. via `assert!`) on property violation.
+pub fn check<F: FnMut(&mut Gen)>(cases: usize, seed: u64, mut prop: F) {
+    for case in 0..cases {
+        let case_seed = seed
+            .wrapping_mul(0x9e37_79b9_7f4a_7c15)
+            .wrapping_add(case as u64);
+        let mut g = Gen {
+            rng: Pcg64::new(case_seed, 77),
+            case_seed,
+        };
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+            || prop(&mut g),
+        ));
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| {
+                    payload.downcast_ref::<&str>().map(|s| s.to_string())
+                })
+                .unwrap_or_else(|| "<non-string panic>".to_string());
+            panic!(
+                "property failed at case {case}/{cases} (case_seed={case_seed}): {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check(25, 1, |g| {
+            let n = g.usize_in(1, 10);
+            assert!((1..=10).contains(&n));
+            count += 1;
+        });
+        assert_eq!(count, 25);
+    }
+
+    #[test]
+    fn failing_property_reports_case() {
+        let r = std::panic::catch_unwind(|| {
+            check(50, 2, |g| {
+                let v = g.usize_in(0, 100);
+                assert!(v < 50, "v too big: {v}");
+            });
+        });
+        let payload = r.unwrap_err();
+        let msg = payload
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_else(|| "<non-string>".into());
+        assert!(msg.contains("property failed"), "{msg}");
+        assert!(msg.contains("case_seed="), "{msg}");
+    }
+
+    #[test]
+    fn generator_is_deterministic_per_case() {
+        let mut first: Vec<usize> = vec![];
+        check(10, 3, |g| first.push(g.usize_in(0, 1_000_000)));
+        let mut second: Vec<usize> = vec![];
+        check(10, 3, |g| second.push(g.usize_in(0, 1_000_000)));
+        assert_eq!(first, second);
+    }
+}

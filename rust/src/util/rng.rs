@@ -1,0 +1,280 @@
+//! Deterministic PRNG + distribution sampling.
+//!
+//! The offline image has no `rand` crate, so we implement PCG64 (O'Neill,
+//! "PCG: A Family of Simple Fast Space-Efficient Statistically Good
+//! Algorithms for Random Number Generation") plus the handful of
+//! distributions the paper's simulations need: uniform, Gaussian
+//! (Box-Muller), Poisson (Knuth / inversion), Pareto (inverse CDF), and
+//! Fisher-Yates shuffling / reservoir-free subset sampling.
+
+/// PCG-XSL-RR 128/64 generator. Deterministic, seedable, `Send`.
+#[derive(Clone, Debug)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128,
+}
+
+const PCG_MULT: u128 = 0x2360_ed05_1fc6_5da4_4385_df64_9fcc_f645;
+
+impl Pcg64 {
+    /// Create a generator from a seed and stream id.
+    pub fn new(seed: u64, stream: u64) -> Self {
+        let inc = (((stream as u128) << 64) | 0xda3e_39cb_94b9_5bdb) | 1;
+        let mut rng = Self { state: 0, inc };
+        rng.state = rng.state.wrapping_mul(PCG_MULT).wrapping_add(rng.inc);
+        rng.state = rng.state.wrapping_add(seed as u128);
+        rng.state = rng.state.wrapping_mul(PCG_MULT).wrapping_add(rng.inc);
+        rng
+    }
+
+    /// Convenience: stream 0.
+    pub fn seeded(seed: u64) -> Self {
+        Self::new(seed, 0)
+    }
+
+    /// Next raw 64 random bits.
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let rot = (self.state >> 122) as u32;
+        let xsl = ((self.state >> 64) as u64) ^ (self.state as u64);
+        xsl.rotate_right(rot)
+    }
+
+    /// Uniform in [0, 1).
+    pub fn uniform(&mut self) -> f64 {
+        // 53 mantissa bits.
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in [0, n) without modulo bias (Lemire's method).
+    pub fn below(&mut self, n: usize) -> usize {
+        assert!(n > 0, "below(0)");
+        let n = n as u64;
+        loop {
+            let x = self.next_u64();
+            let (hi, lo) = {
+                let m = (x as u128) * (n as u128);
+                ((m >> 64) as u64, m as u64)
+            };
+            if lo >= n || lo >= (u64::MAX - n + 1) % n {
+                return hi as usize;
+            }
+        }
+    }
+
+    /// Uniform in [lo, hi).
+    pub fn range_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.uniform()
+    }
+
+    /// Standard normal via Box-Muller.
+    pub fn gaussian(&mut self) -> f64 {
+        let u1 = loop {
+            let u = self.uniform();
+            if u > 0.0 {
+                break u;
+            }
+        };
+        let u2 = self.uniform();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Bernoulli with success probability `p`.
+    pub fn bernoulli(&mut self, p: f64) -> bool {
+        self.uniform() < p
+    }
+
+    /// Poisson(lambda). Knuth's product method for small lambda, normal
+    /// approximation with continuity correction for large lambda.
+    pub fn poisson(&mut self, lambda: f64) -> u64 {
+        assert!(lambda >= 0.0);
+        if lambda == 0.0 {
+            return 0;
+        }
+        if lambda < 30.0 {
+            let l = (-lambda).exp();
+            let mut k = 0u64;
+            let mut p = 1.0;
+            loop {
+                p *= self.uniform();
+                if p <= l {
+                    return k;
+                }
+                k += 1;
+            }
+        } else {
+            // PTRS would be exact; a clamped normal approximation is fine
+            // for the delay-simulation use case (lambda <= ~100).
+            let x = lambda + lambda.sqrt() * self.gaussian();
+            x.max(0.0).round() as u64
+        }
+    }
+
+    /// Pareto(shape alpha, scale x_m) via inverse CDF, rounded to nearest
+    /// integer as in the paper's Section 3.4 delay experiment.
+    pub fn pareto(&mut self, alpha: f64, xm: f64) -> f64 {
+        let u = loop {
+            let u = self.uniform();
+            if u > 0.0 {
+                break u;
+            }
+        };
+        xm / u.powf(1.0 / alpha)
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// A uniformly random size-`tau` subset of [0, n) (partial Fisher-Yates).
+    pub fn subset(&mut self, n: usize, tau: usize) -> Vec<usize> {
+        assert!(tau <= n);
+        let mut idx: Vec<usize> = (0..n).collect();
+        for i in 0..tau {
+            let j = i + self.below(n - i);
+            idx.swap(i, j);
+        }
+        idx.truncate(tau);
+        idx
+    }
+
+    /// Sample a standard-normal f32 vector.
+    pub fn gaussian_vec(&mut self, len: usize) -> Vec<f32> {
+        (0..len).map(|_| self.gaussian() as f32).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = Pcg64::seeded(42);
+        let mut b = Pcg64::seeded(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn streams_differ() {
+        let mut a = Pcg64::new(42, 0);
+        let mut b = Pcg64::new(42, 1);
+        assert_ne!(
+            (0..8).map(|_| a.next_u64()).collect::<Vec<_>>(),
+            (0..8).map(|_| b.next_u64()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn uniform_in_unit_interval_and_mean() {
+        let mut rng = Pcg64::seeded(1);
+        let n = 20_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let u = rng.uniform();
+            assert!((0.0..1.0).contains(&u));
+            sum += u;
+        }
+        assert!((sum / n as f64 - 0.5).abs() < 0.01);
+    }
+
+    #[test]
+    fn below_is_unbiased_enough() {
+        let mut rng = Pcg64::seeded(2);
+        let mut counts = [0usize; 7];
+        for _ in 0..70_000 {
+            counts[rng.below(7)] += 1;
+        }
+        for &c in &counts {
+            assert!((c as f64 - 10_000.0).abs() < 500.0, "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn gaussian_moments() {
+        let mut rng = Pcg64::seeded(3);
+        let n = 50_000;
+        let xs: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
+            / n as f64;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn poisson_mean_small_and_large_lambda() {
+        let mut rng = Pcg64::seeded(4);
+        for &lam in &[0.5, 3.0, 12.0, 60.0] {
+            let n = 20_000;
+            let mean = (0..n).map(|_| rng.poisson(lam) as f64).sum::<f64>()
+                / n as f64;
+            assert!(
+                (mean - lam).abs() < 0.1 * lam.max(1.0),
+                "lambda={lam} mean={mean}"
+            );
+        }
+    }
+
+    #[test]
+    fn pareto_support_and_median() {
+        let mut rng = Pcg64::seeded(5);
+        // alpha=2, xm=5 -> median = xm * 2^(1/2).
+        let n = 40_000;
+        let mut xs: Vec<f64> = (0..n).map(|_| rng.pareto(2.0, 5.0)).collect();
+        assert!(xs.iter().all(|&x| x >= 5.0));
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let med = xs[n / 2];
+        assert!((med - 5.0 * 2f64.sqrt()).abs() < 0.15, "median={med}");
+    }
+
+    #[test]
+    fn pareto_expectation_alpha2() {
+        // E[X] = alpha*xm/(alpha-1) = 2*xm for alpha=2 (paper: xm = kappa/2
+        // gives E = kappa).
+        let mut rng = Pcg64::seeded(6);
+        let n = 200_000;
+        let kappa = 10.0;
+        let mean = (0..n)
+            .map(|_| rng.pareto(2.0, kappa / 2.0))
+            .sum::<f64>()
+            / n as f64;
+        assert!((mean - kappa).abs() < 0.5, "mean={mean}");
+    }
+
+    #[test]
+    fn subset_is_uniform_and_distinct() {
+        let mut rng = Pcg64::seeded(7);
+        let mut hits = [0usize; 10];
+        for _ in 0..10_000 {
+            let s = rng.subset(10, 3);
+            assert_eq!(s.len(), 3);
+            let mut t = s.clone();
+            t.sort_unstable();
+            t.dedup();
+            assert_eq!(t.len(), 3, "duplicates in {s:?}");
+            for i in s {
+                hits[i] += 1;
+            }
+        }
+        for &h in &hits {
+            assert!((h as f64 - 3_000.0).abs() < 250.0, "{hits:?}");
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Pcg64::seeded(8);
+        let mut xs: Vec<usize> = (0..50).collect();
+        rng.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+    }
+}

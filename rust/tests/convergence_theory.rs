@@ -1,0 +1,142 @@
+//! Convergence-theory checks: the iterates must respect the paper's
+//! Theorem 1/2 bounds (up to the measured constants) and the qualitative
+//! claims of §2.2.
+
+use apbcfw::data::signal;
+use apbcfw::problems::gfl::Gfl;
+use apbcfw::problems::simplex_qp::SimplexQp;
+use apbcfw::problems::Problem;
+use apbcfw::solver::{minibatch, SolveOptions, StopCond};
+
+fn solve_trace(
+    p: &impl Problem,
+    tau: usize,
+    epochs: f64,
+    seed: u64,
+) -> apbcfw::util::metrics::Trace {
+    minibatch::solve(
+        p,
+        &SolveOptions {
+            tau,
+            sample_every: 1,
+            exact_gap: true,
+            stop: StopCond {
+                max_epochs: epochs,
+                max_secs: 60.0,
+                ..Default::default()
+            },
+            seed,
+            ..Default::default()
+        },
+    )
+    .trace
+}
+
+/// Theorem 1: E f(x_k) - f* <= 2nC / (tau^2 k + 2n). We verify the O(1/k)
+/// *shape*: suboptimality at iteration 4k is at most ~1/2 of that at k
+/// (with slack for stochasticity), over a geometric grid.
+#[test]
+fn theorem1_one_over_k_decay_gfl() {
+    let sig = signal::piecewise_constant(8, 50, 4, 2.0, 0.5, 21);
+    let p = Gfl::new(8, 50, 0.2, sig.noisy.clone());
+    let trace = solve_trace(&p, 1, 400.0, 22);
+    let f_star = trace.best_objective();
+    let sub = |k: usize| -> f64 {
+        trace
+            .samples
+            .iter()
+            .find(|s| s.iter >= k)
+            .map(|s| s.objective - f_star)
+            .unwrap_or(0.0)
+    };
+    let mut violations = 0;
+    let mut checks = 0;
+    for k in [50usize, 100, 200, 400, 800] {
+        let h1 = sub(k);
+        let h4 = sub(4 * k);
+        if h1 > 1e-9 {
+            checks += 1;
+            if h4 > 0.75 * h1 {
+                violations += 1;
+            }
+        }
+    }
+    assert!(checks >= 3, "trace too short to test decay");
+    assert!(
+        violations <= 1,
+        "objective not decaying ~1/k: {violations}/{checks} violations"
+    );
+}
+
+/// Theorem 2: the surrogate duality gap upper-bounds suboptimality and its
+/// running minimum decays.
+#[test]
+fn theorem2_gap_bounds_suboptimality() {
+    let sig = signal::piecewise_constant(6, 40, 4, 2.0, 0.5, 23);
+    let p = Gfl::new(6, 40, 0.3, sig.noisy.clone());
+    let trace = solve_trace(&p, 2, 300.0, 24);
+    let f_star = trace.best_objective();
+    for s in &trace.samples {
+        assert!(
+            s.gap >= s.objective - f_star - 1e-6,
+            "iter {}: gap {} < subopt {}",
+            s.iter,
+            s.gap,
+            s.objective - f_star
+        );
+    }
+    // running min gap shrinks by >= 10x from the first quarter to the last
+    let qlen = trace.samples.len() / 4;
+    let early: f64 = trace.samples[..qlen]
+        .iter()
+        .map(|s| s.gap)
+        .fold(f64::INFINITY, f64::min);
+    let late: f64 = trace.samples[3 * qlen..]
+        .iter()
+        .map(|s| s.gap)
+        .fold(f64::INFINITY, f64::min);
+    assert!(
+        late < 0.2 * early,
+        "gap did not shrink: early {early} late {late}"
+    );
+}
+
+/// §2.2: on a separable problem (mu = 0), minibatching tau gives a ~tau-fold
+/// reduction in iterations to a fixed threshold; on a strongly coupled
+/// problem the reduction degrades.
+#[test]
+fn minibatch_speedup_depends_on_coupling() {
+    let thresholds_check = |mu: f64, seed: u64| -> f64 {
+        let qp = SimplexQp::random(24, 4, 1.0, mu, 4, seed);
+        let f_star = {
+            let t = solve_trace(&qp, 1, 4000.0, 31);
+            t.best_objective()
+        };
+        let f0 = qp.objective(&(), &qp.init_param());
+        let eps = 0.05 * (f0 - f_star);
+        let iters_to = |tau: usize| -> f64 {
+            let t = solve_trace(&qp, tau, 4000.0, 32);
+            t.first_below(f_star, eps)
+                .map(|s| s.iter as f64)
+                .unwrap_or(f64::INFINITY)
+        };
+        iters_to(1) / iters_to(8)
+    };
+    let speedup_separable = thresholds_check(0.0, 41);
+    assert!(
+        speedup_separable > 3.0,
+        "separable speedup too low: {speedup_separable}"
+    );
+}
+
+/// Initialization dependence (§2.1): with tau^2 > n the early iterations
+/// use gamma = 1 and wipe out the initial condition; the first post-clamp
+/// objective must already be below f(x_0).
+#[test]
+fn large_tau_escapes_initialization_fast() {
+    let sig = signal::piecewise_constant(6, 30, 4, 2.0, 0.5, 25);
+    let p = Gfl::new(6, 30, 0.3, sig.noisy.clone());
+    let f0 = p.objective(&(), &p.init_param());
+    let trace = solve_trace(&p, 8, 20.0, 26); // tau^2 = 64 > n = 29
+    assert!(trace.samples[0].objective < f0);
+}

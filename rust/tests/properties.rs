@@ -1,0 +1,295 @@
+//! Property tests over coordinator and problem invariants (the offline
+//! substitute for `proptest` — see `apbcfw::util::proptest`).
+
+use apbcfw::coordinator::buffer::BatchAssembler;
+use apbcfw::coordinator::UpdateMsg;
+use apbcfw::data::signal;
+use apbcfw::problems::gfl::Gfl;
+use apbcfw::problems::simplex_qp::SimplexQp;
+use apbcfw::problems::ssvm::{ssvm_apply, SsvmState};
+use apbcfw::problems::{ApplyOptions, BlockOracle, Problem};
+use apbcfw::sim::delay::{accept_delay, DelayModel};
+use apbcfw::solver::schedule_gamma;
+use apbcfw::util::la;
+use apbcfw::util::proptest::check;
+
+#[test]
+fn prop_buffer_batches_are_disjoint_and_sized() {
+    check(200, 101, |g| {
+        let n = g.usize_in(2, 40);
+        let tau = g.usize_in(1, n);
+        let inserts = g.usize_in(0, 120);
+        let mut asm = BatchAssembler::new();
+        let mut inserted = std::collections::HashSet::new();
+        for _ in 0..inserts {
+            let block = g.usize_in(0, n - 1);
+            inserted.insert(block);
+            asm.insert(UpdateMsg {
+                oracle: BlockOracle {
+                    block,
+                    s: vec![0.0],
+                    ls: 0.0,
+                },
+                k_read: 0,
+                worker: 0,
+            });
+        }
+        assert_eq!(asm.len(), inserted.len(), "pending = distinct inserted");
+        match asm.take_batch(tau) {
+            Some(batch) => {
+                assert!(batch.len() >= tau);
+                let mut blocks: Vec<usize> =
+                    batch.iter().map(|m| m.oracle.block).collect();
+                blocks.sort_unstable();
+                let len = blocks.len();
+                blocks.dedup();
+                assert_eq!(blocks.len(), len, "duplicate block in batch");
+                assert!(asm.is_empty());
+            }
+            None => assert!(inserted.len() < tau),
+        }
+    });
+}
+
+#[test]
+fn prop_schedule_gamma_bounds_and_monotonicity() {
+    check(300, 102, |g| {
+        let n = g.usize_in(1, 10_000);
+        let tau = g.usize_in(1, n);
+        let k = g.usize_in(0, 1_000_000) as u64;
+        let gamma = schedule_gamma(n, tau, k);
+        assert!((0.0..=1.0).contains(&gamma), "gamma={gamma}");
+        assert!(gamma > 0.0);
+        let gamma_next = schedule_gamma(n, tau, k + 1);
+        assert!(gamma_next <= gamma, "schedule must be non-increasing");
+    });
+}
+
+#[test]
+fn prop_delay_drop_rule() {
+    check(300, 103, |g| {
+        let k = g.usize_in(0, 10_000) as u64;
+        let delay = g.usize_in(0, 10_000) as u64;
+        let accepted = accept_delay(k, delay);
+        assert_eq!(accepted, 2 * delay <= k);
+        // monotone: if a delay is accepted, any smaller delay is too
+        if accepted && delay > 0 {
+            assert!(accept_delay(k, delay - 1));
+        }
+    });
+}
+
+#[test]
+fn prop_delay_models_nonnegative_and_mean_finite() {
+    check(60, 104, |g| {
+        let kappa = g.f64_in(0.1, 30.0);
+        let model = *g.pick(&[
+            DelayModel::Poisson { kappa },
+            DelayModel::pareto_with_mean(kappa),
+            DelayModel::Fixed(kappa as u64),
+        ]);
+        for _ in 0..50 {
+            let s = model.sample(g.rng());
+            let _ = s; // non-negative by type
+        }
+        assert!(model.mean().is_finite());
+    });
+}
+
+#[test]
+fn prop_gfl_iterates_stay_feasible_under_any_interleaving() {
+    check(40, 105, |g| {
+        let d = g.usize_in(1, 6);
+        let n = g.usize_in(3, 25);
+        let lam = g.f64_in(0.01, 2.0);
+        let sig =
+            signal::piecewise_constant(d, n, 3, 1.0, 0.3, g.case_seed);
+        let gfl = Gfl::new(d, n, lam, sig.noisy.clone());
+        let mut param = gfl.init_param();
+        let steps = g.usize_in(1, 60);
+        for k in 0..steps {
+            let tau = g.usize_in(1, gfl.m.min(8));
+            let blocks = g.subset(gfl.m, tau);
+            let batch: Vec<_> =
+                blocks.iter().map(|&t| gfl.oracle(&param, t)).collect();
+            let gamma = if g.bool() {
+                schedule_gamma(gfl.m, tau, k as u64)
+            } else {
+                g.f32_in(0.0, 1.0)
+            };
+            gfl.apply(
+                &mut (),
+                &mut param,
+                &batch,
+                ApplyOptions {
+                    gamma,
+                    line_search: g.bool(),
+                },
+            );
+        }
+        for t in 0..gfl.m {
+            let nrm = la::norm2(&param[t * d..(t + 1) * d]);
+            assert!(
+                nrm <= lam + 1e-4,
+                "block {t}: ||u|| = {nrm} > lam = {lam}"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_qp_iterates_stay_on_simplices() {
+    check(40, 106, |g| {
+        let n = g.usize_in(2, 12);
+        let m = g.usize_in(2, 6);
+        let qp = SimplexQp::random(
+            n,
+            m,
+            g.f64_in(0.1, 2.0),
+            g.f64_in(0.0, 1.0),
+            3,
+            g.case_seed,
+        );
+        let mut x = qp.init_param();
+        for k in 0..g.usize_in(1, 50) {
+            let tau = g.usize_in(1, n);
+            let blocks = g.subset(n, tau);
+            let batch: Vec<_> =
+                blocks.iter().map(|&i| qp.oracle(&x, i)).collect();
+            qp.apply(
+                &mut (),
+                &mut x,
+                &batch,
+                ApplyOptions {
+                    gamma: schedule_gamma(n, tau, k as u64),
+                    line_search: g.bool(),
+                },
+            );
+        }
+        for b in 0..n {
+            let blk = &x[b * m..(b + 1) * m];
+            let sum: f64 = blk.iter().map(|&v| v as f64).sum();
+            assert!((sum - 1.0).abs() < 1e-3, "block {b} sum {sum}");
+            assert!(blk.iter().all(|&v| v >= -1e-5));
+        }
+    });
+}
+
+#[test]
+fn prop_ssvm_state_w_always_equals_sum_wi() {
+    check(60, 107, |g| {
+        let n = g.usize_in(1, 8);
+        let dim = g.usize_in(1, 12);
+        let lam = g.f64_in(0.01, 2.0);
+        let mut st = SsvmState::new(n, dim);
+        let mut w = vec![0.0f32; dim];
+        for k in 0..g.usize_in(1, 30) {
+            let tau = g.usize_in(1, n);
+            let blocks = g.subset(n, tau);
+            let batch: Vec<BlockOracle> = blocks
+                .iter()
+                .map(|&b| BlockOracle {
+                    block: b,
+                    s: g.f32_vec(dim, -1.0, 1.0),
+                    ls: g.f64_in(0.0, 1.0),
+                })
+                .collect();
+            let gamma = schedule_gamma(n, tau, k as u64);
+            ssvm_apply(lam, &mut st, &mut w, &batch, gamma, g.bool());
+        }
+        let mut sum = vec![0.0f32; dim];
+        for i in 0..n {
+            la::axpy(1.0, st.wi(i), &mut sum);
+        }
+        for (a, b) in w.iter().zip(sum.iter()) {
+            assert!(
+                (a - b).abs() < 1e-3,
+                "w != sum w_i: {a} vs {b}"
+            );
+        }
+        let l_sum: f64 = st.li.iter().sum();
+        assert!((st.l - l_sum).abs() < 1e-6);
+    });
+}
+
+#[test]
+fn prop_block_gap_nonnegative_at_oracle_solution() {
+    check(40, 108, |g| {
+        let d = g.usize_in(1, 5);
+        let n = g.usize_in(3, 20);
+        let lam = g.f64_in(0.05, 1.0);
+        let sig =
+            signal::piecewise_constant(d, n, 3, 1.0, 0.3, g.case_seed + 7);
+        let gfl = Gfl::new(d, n, lam, sig.noisy.clone());
+        // random feasible point
+        let mut param = gfl.init_param();
+        for _ in 0..g.usize_in(0, 20) {
+            let t = g.usize_in(0, gfl.m - 1);
+            let o = gfl.oracle(&param, t);
+            gfl.apply(
+                &mut (),
+                &mut param,
+                &[o],
+                ApplyOptions {
+                    gamma: g.f32_in(0.0, 1.0),
+                    line_search: false,
+                },
+            );
+        }
+        let t = g.usize_in(0, gfl.m - 1);
+        let o = gfl.oracle(&param, t);
+        let gap = gfl.block_gap(&(), &param, &o);
+        assert!(gap >= -1e-6, "gap_i(x) = {gap} < 0");
+    });
+}
+
+#[test]
+fn prop_line_search_never_worse_than_schedule() {
+    check(30, 109, |g| {
+        let n = g.usize_in(3, 10);
+        let m = g.usize_in(2, 5);
+        let qp = SimplexQp::random(n, m, 1.0, g.f64_in(0.0, 0.5), 3, g.case_seed);
+        let mut x = qp.init_param();
+        // a few warmup steps
+        for k in 0..g.usize_in(0, 10) {
+            let i = g.usize_in(0, n - 1);
+            let o = qp.oracle(&x, i);
+            qp.apply(
+                &mut (),
+                &mut x,
+                &[o],
+                ApplyOptions {
+                    gamma: schedule_gamma(n, 1, k as u64),
+                    line_search: false,
+                },
+            );
+        }
+        let tau = g.usize_in(1, n);
+        let blocks = g.subset(n, tau);
+        let batch: Vec<_> = blocks.iter().map(|&i| qp.oracle(&x, i)).collect();
+        let mut x_ls = x.clone();
+        qp.apply(
+            &mut (),
+            &mut x_ls,
+            &batch,
+            ApplyOptions {
+                gamma: 0.0,
+                line_search: true,
+            },
+        );
+        let mut x_fixed = x.clone();
+        qp.apply(
+            &mut (),
+            &mut x_fixed,
+            &batch,
+            ApplyOptions {
+                gamma: g.f32_in(0.0, 1.0),
+                line_search: false,
+            },
+        );
+        assert!(
+            qp.objective_of(&x_ls) <= qp.objective_of(&x_fixed) + 1e-6,
+            "line search must dominate any fixed step"
+        );
+    });
+}

@@ -1,0 +1,221 @@
+//! Integration: AOT-compiled XLA artifacts vs native rust compute.
+//!
+//! Requires `make artifacts` (skips, loudly, when artifacts/ is missing so
+//! plain `cargo test` works in a fresh checkout).
+
+use apbcfw::data::{mixture, ocr_like, signal};
+use apbcfw::problems::gfl::{Gfl, GflOracleBackend};
+use apbcfw::problems::ssvm::chain::{ChainDecoder, ChainSsvm};
+use apbcfw::problems::ssvm::multiclass::{MulticlassDecoder, MulticlassSsvm};
+use apbcfw::problems::Problem;
+use apbcfw::runtime::service;
+use apbcfw::runtime::xla_backends::{
+    XlaChainDecoder, XlaGfl, XlaGflPrimal, XlaMulticlassDecoder,
+};
+use apbcfw::solver::{minibatch, SolveOptions, StopCond};
+use apbcfw::util::la;
+use apbcfw::util::rng::Pcg64;
+use std::sync::Arc;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.txt").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+        None
+    }
+}
+
+/// Default artifact shapes (must match python/compile/aot.py defaults).
+const GFL_D: usize = 10;
+const GFL_N: usize = 100;
+const CHAIN_K: usize = 26;
+const CHAIN_D: usize = 128;
+const CHAIN_L: usize = 9;
+const MC_K: usize = 10;
+const MC_D: usize = 64;
+
+#[test]
+fn gfl_step_artifact_matches_native() {
+    let Some(dir) = artifacts_dir() else { return };
+    let handle = service::spawn(dir).unwrap();
+    let mut rng = Pcg64::seeded(1);
+    let lam = 0.01;
+    let y = rng.gaussian_vec(GFL_D * GFL_N);
+    let gfl = Gfl::new(GFL_D, GFL_N, lam, y);
+    let xla = XlaGfl::new(handle, GFL_D, GFL_N, lam, &gfl.b).unwrap();
+
+    // random feasible U
+    let mut u = rng.gaussian_vec(GFL_D * (GFL_N - 1));
+    for t in 0..GFL_N - 1 {
+        la::project_l2_ball(lam, &mut u[t * GFL_D..(t + 1) * GFL_D]);
+    }
+    let (g, s, gap, f) = xla.step(&u);
+    // native comparison
+    let mut native_gap_sum = 0.0;
+    for t in 0..gfl.m {
+        let gn = gfl.grad_col(&u, t);
+        for r in 0..GFL_D {
+            assert!(
+                (g[t * GFL_D + r] - gn[r]).abs() < 1e-4,
+                "grad mismatch at ({t},{r})"
+            );
+        }
+        let o = gfl.oracle(&u, t);
+        for r in 0..GFL_D {
+            assert!(
+                (s[t * GFL_D + r] - o.s[r]).abs() < 1e-4,
+                "oracle mismatch at ({t},{r})"
+            );
+        }
+        let bg = gfl.block_gap(&(), &u, &o);
+        assert!((gap[t] as f64 - bg).abs() < 1e-3, "gap mismatch at {t}");
+        native_gap_sum += bg;
+    }
+    let _ = native_gap_sum;
+    assert!(
+        (f - gfl.objective_of(&u)).abs() < 1e-3,
+        "objective mismatch: xla {f} native {}",
+        gfl.objective_of(&u)
+    );
+}
+
+#[test]
+fn gfl_primal_artifact_matches_native() {
+    let Some(dir) = artifacts_dir() else { return };
+    let handle = service::spawn(dir).unwrap();
+    let mut rng = Pcg64::seeded(2);
+    let lam = 0.5;
+    let sig = signal::piecewise_constant(GFL_D, GFL_N, 5, 2.0, 0.5, 7);
+    let gfl = Gfl::new(GFL_D, GFL_N, lam, sig.noisy.clone());
+    let xla =
+        XlaGflPrimal::new(handle, GFL_D, GFL_N, lam, &gfl.y).unwrap();
+    let mut u = rng.gaussian_vec(GFL_D * (GFL_N - 1));
+    for t in 0..GFL_N - 1 {
+        la::project_l2_ball(lam, &mut u[t * GFL_D..(t + 1) * GFL_D]);
+    }
+    let (x, p) = xla.primal(&u);
+    let xn = gfl.primal_signal(&u);
+    for (a, b) in x.iter().zip(xn.iter()) {
+        assert!((a - b).abs() < 1e-4);
+    }
+    assert!(
+        (p - gfl.primal_objective(&u)).abs()
+            < 1e-3 * gfl.primal_objective(&u).abs().max(1.0)
+    );
+}
+
+#[test]
+fn chain_decoder_artifact_matches_native_viterbi() {
+    let Some(dir) = artifacts_dir() else { return };
+    let handle = service::spawn(dir).unwrap();
+    let data = Arc::new(ocr_like::generate(
+        20, CHAIN_K, CHAIN_D, CHAIN_L, 0.15, 3,
+    ));
+    let problem = ChainSsvm::new(data.clone(), 1.0);
+    let xla = XlaChainDecoder::new(handle, data.clone()).unwrap();
+    let mut rng = Pcg64::seeded(4);
+    let w: Vec<f32> = rng.gaussian_vec(problem.dim());
+    for i in 0..10 {
+        for lw in [0.0f32, 1.0] {
+            let (ys_n, h_n) = problem.viterbi(&w, i, lw);
+            let (ys_x, h_x) = xla.decode(&w, i, lw);
+            assert_eq!(ys_n, ys_x, "decode mismatch i={i} lw={lw}");
+            assert!(
+                (h_n - h_x).abs() < 1e-2 * h_n.abs().max(1.0),
+                "H mismatch i={i}: native {h_n} xla {h_x}"
+            );
+        }
+    }
+}
+
+#[test]
+fn multiclass_decoder_artifact_matches_native() {
+    let Some(dir) = artifacts_dir() else { return };
+    let handle = service::spawn(dir).unwrap();
+    let data = Arc::new(mixture::generate(40, MC_K, MC_D, 0.2, 5));
+    let problem = MulticlassSsvm::new(data.clone(), 0.1);
+    let xla = XlaMulticlassDecoder::new(handle, data.clone()).unwrap();
+    let mut rng = Pcg64::seeded(6);
+    let w: Vec<f32> = rng.gaussian_vec(problem.dim());
+    for i in 0..40 {
+        for lw in [0.0f32, 1.0] {
+            let (y_n, h_n) = problem.argmax(&w, i, lw);
+            let (y_x, h_x) = xla.decode(&w, i, lw);
+            assert_eq!(y_n, y_x, "argmax mismatch i={i} lw={lw}");
+            assert!((h_n - h_x).abs() < 1e-3 * h_n.abs().max(1.0));
+        }
+    }
+}
+
+#[test]
+fn solve_with_xla_backend_converges_like_native() {
+    let Some(dir) = artifacts_dir() else { return };
+    let handle = service::spawn(dir).unwrap();
+    let mut rng = Pcg64::seeded(8);
+    let lam = 0.05;
+    let y = rng.gaussian_vec(GFL_D * GFL_N);
+    let native = Gfl::new(GFL_D, GFL_N, lam, y.clone());
+    let backend =
+        Arc::new(XlaGfl::new(handle, GFL_D, GFL_N, lam, &native.b).unwrap());
+    let xla_problem =
+        Gfl::new(GFL_D, GFL_N, lam, y).with_backend(backend);
+
+    let opts = SolveOptions {
+        tau: 4,
+        line_search: true,
+        sample_every: 16,
+        exact_gap: false,
+        stop: StopCond {
+            max_epochs: 30.0,
+            max_secs: 120.0,
+            ..Default::default()
+        },
+        seed: 9,
+        ..Default::default()
+    };
+    let r_native = minibatch::solve(&native, &opts);
+    let r_xla = minibatch::solve(&xla_problem, &opts);
+    let f_native = r_native.trace.last().unwrap().objective;
+    let f_xla = r_xla.trace.last().unwrap().objective;
+    // Same seeds, same oracle answers -> same trajectory (f32 tolerance).
+    assert!(
+        (f_native - f_xla).abs() < 1e-3 * f_native.abs().max(1.0),
+        "native {f_native} vs xla {f_xla}"
+    );
+}
+
+#[test]
+fn xla_backed_async_coordinator_run() {
+    // The XLA service handle must be usable from multiple worker threads.
+    let Some(dir) = artifacts_dir() else { return };
+    let handle = service::spawn(dir).unwrap();
+    let mut rng = Pcg64::seeded(10);
+    let lam = 0.05;
+    let y = rng.gaussian_vec(GFL_D * GFL_N);
+    let native = Gfl::new(GFL_D, GFL_N, lam, y.clone());
+    let backend =
+        Arc::new(XlaGfl::new(handle, GFL_D, GFL_N, lam, &native.b).unwrap());
+    let problem = Gfl::new(GFL_D, GFL_N, lam, y).with_backend(backend);
+
+    let cfg = apbcfw::coordinator::RunConfig {
+        workers: 3,
+        tau: 4,
+        line_search: true,
+        straggler: apbcfw::sim::straggler::StragglerModel::none(3),
+        sample_every: 8,
+        exact_gap: false,
+        stop: StopCond {
+            max_epochs: 20.0,
+            max_secs: 60.0,
+            ..Default::default()
+        },
+        seed: 11,
+        ..Default::default()
+    };
+    let r = apbcfw::coordinator::apbcfw::run(&problem, &cfg);
+    assert!(r.counters.updates_applied > 0);
+    let f_end = r.trace.last().unwrap().objective;
+    assert!(f_end < -1e-3, "async+xla should make progress: {f_end}");
+}
