@@ -1,43 +1,144 @@
-//! Micro-benchmarks of the L3 hot-path primitives: vector math, buffer
-//! operations, shared-parameter publish/read, and gap accumulation.
-//! These are the §Perf targets — see EXPERIMENTS.md §Perf.
+//! Micro-benchmarks of the L3 hot-path primitives: vector math (scalar vs
+//! SIMD-dispatched), shared-parameter publish/read (per-element atomic
+//! baseline vs wide-word), buffer operations, and the allocating vs
+//! zero-allocation (`oracle` vs snapshot-reuse + `oracle_into`) worker
+//! loops for the GFL and chain-SSVM oracles.
+//!
+//! These are the §Perf targets — see EXPERIMENTS.md §Perf. Every row is
+//! also written to `BENCH_hotpaths.json` at the repo root so the perf
+//! trajectory is tracked across PRs. Run with:
+//!
+//! ```bash
+//! cargo bench --bench hot_paths
+//! ```
 
 mod bench_util;
 
 use apbcfw::coordinator::buffer::BatchAssembler;
-use apbcfw::coordinator::shared::SharedParam;
+use apbcfw::coordinator::shared::{SharedParam, SnapshotMode};
 use apbcfw::coordinator::UpdateMsg;
-use apbcfw::problems::BlockOracle;
-use apbcfw::util::la;
+use apbcfw::data::{ocr_like, signal};
+use apbcfw::problems::gfl::Gfl;
+use apbcfw::problems::ssvm::chain::ChainSsvm;
+use apbcfw::problems::{BlockOracle, Problem};
 use apbcfw::util::rng::Pcg64;
+use apbcfw::util::simd;
+use apbcfw::util::stats::Summary;
 use bench_util::bench;
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::Arc;
+
+/// Collected (name, summary) rows for the JSON report.
+struct Report {
+    rows: Vec<(String, Summary)>,
+}
+
+impl Report {
+    fn new() -> Self {
+        Self { rows: Vec::new() }
+    }
+
+    fn add<F: FnMut()>(&mut self, name: &str, reps: usize, f: F) {
+        let s = bench(name, reps, f);
+        self.rows.push((name.to_string(), s));
+    }
+
+    fn write_json(&self, path: &str) {
+        let mut out = String::new();
+        out.push_str("{\n");
+        out.push_str("  \"bench\": \"hot_paths\",\n");
+        out.push_str("  \"unit\": \"ns_per_call\",\n");
+        out.push_str("  \"status\": \"measured\",\n");
+        out.push_str("  \"rows\": [\n");
+        for (i, (name, s)) in self.rows.iter().enumerate() {
+            out.push_str(&format!(
+                "    {{\"name\": \"{}\", \"mean\": {:.1}, \"median\": {:.1}, \"p95\": {:.1}, \"reps\": {}}}{}\n",
+                name,
+                s.mean,
+                s.median,
+                s.p95,
+                s.n,
+                if i + 1 < self.rows.len() { "," } else { "" }
+            ));
+        }
+        out.push_str("  ]\n");
+        out.push_str("}\n");
+        match std::fs::write(path, out) {
+            Ok(()) => println!("\nwrote {path}"),
+            Err(e) => println!("\nfailed to write {path}: {e}"),
+        }
+    }
+}
+
+/// Per-element AtomicU32 shared-parameter baseline (the pre-§Perf layout),
+/// kept here so publish/read rows compare old vs new storage directly.
+struct NarrowParam {
+    bits: Vec<AtomicU32>,
+}
+
+impl NarrowParam {
+    fn new(init: &[f32]) -> Self {
+        Self {
+            bits: init.iter().map(|v| AtomicU32::new(v.to_bits())).collect(),
+        }
+    }
+
+    fn publish(&self, values: &[f32]) {
+        for (b, v) in self.bits.iter().zip(values.iter()) {
+            b.store(v.to_bits(), Ordering::Relaxed);
+        }
+    }
+
+    fn read(&self, out: &mut Vec<f32>) {
+        out.clear();
+        out.extend(
+            self.bits
+                .iter()
+                .map(|b| f32::from_bits(b.load(Ordering::Relaxed))),
+        );
+    }
+}
 
 fn main() {
     println!("== hot_paths ==");
     let mut rng = Pcg64::seeded(1);
+    let mut report = Report::new();
 
+    // ---- L3 kernels: scalar reference vs dispatched SIMD ----
     // axpy / dot at the SSVM parameter dimension (K*d + K*K = 4004)
     let dim = 26 * 128 + 26 * 26;
     let x = rng.gaussian_vec(dim);
     let mut y = rng.gaussian_vec(dim);
-    bench("axpy dim=4004", 5000, || {
-        la::axpy(0.01, &x, &mut y);
+    report.add("axpy scalar dim=4004", 5000, || {
+        simd::axpy_scalar(0.01, &x, &mut y);
+    });
+    report.add("axpy simd dim=4004", 5000, || {
+        apbcfw::util::la::axpy(0.01, &x, &mut y);
     });
     let mut acc = 0.0;
-    bench("dot dim=4004", 5000, || {
-        acc += la::dot(&x, &y);
+    report.add("dot scalar dim=4004", 5000, || {
+        acc += simd::dot_scalar(&x, &y);
+    });
+    report.add("dot simd dim=4004", 5000, || {
+        acc += apbcfw::util::la::dot(&x, &y);
+    });
+    report.add("norm2_sq simd dim=4004", 5000, || {
+        acc += apbcfw::util::la::norm2_sq(&x);
     });
     std::hint::black_box(acc);
 
     // lerp at the GFL column dimension
     let xc = rng.gaussian_vec(10);
     let mut yc = rng.gaussian_vec(10);
-    bench("lerp_into dim=10 (GFL column)", 20000, || {
-        la::lerp_into(0.3, &xc, &mut yc);
+    report.add("lerp_into scalar dim=10 (GFL column)", 20000, || {
+        simd::lerp_into_scalar(0.3, &xc, &mut yc);
+    });
+    report.add("lerp_into simd dim=10 (GFL column)", 20000, || {
+        apbcfw::util::la::lerp_into(0.3, &xc, &mut yc);
     });
 
-    // batch assembler: insert + take at tau = 16
-    bench("assembler insert+take tau=16 n=1000", 2000, || {
+    // ---- batch assembler: insert + take at tau = 16 ----
+    report.add("assembler insert+take tau=16 n=1000", 2000, || {
         let mut asm = BatchAssembler::new();
         let mut r = Pcg64::seeded(7);
         while asm.len() < 16 {
@@ -54,23 +155,111 @@ fn main() {
         std::hint::black_box(asm.take_batch(16));
     });
 
-    // shared parameter publish + snapshot at SSVM dim
+    // ---- shared parameter: per-element atomic baseline vs wide-word ----
+    let narrow = NarrowParam::new(&x);
+    report.add("SharedParam publish/elem-atomic dim=4004", 5000, || {
+        narrow.publish(&y);
+    });
     let sp = SharedParam::new(&x);
-    bench("SharedParam publish dim=4004", 5000, || {
+    report.add("SharedParam publish/wide-word dim=4004", 5000, || {
         sp.publish(&y, 1);
     });
     let mut buf = Vec::new();
-    bench("SharedParam read dim=4004", 5000, || {
+    report.add("SharedParam read/elem-atomic dim=4004", 5000, || {
+        narrow.read(&mut buf);
+        std::hint::black_box(buf.len());
+    });
+    report.add("SharedParam read/wide-word dim=4004", 5000, || {
         sp.read(&mut buf);
         std::hint::black_box(buf.len());
     });
+    let spc = SharedParam::with_mode(&x, SnapshotMode::Consistent);
+    report.add("SharedParam read/consistent dim=4004", 5000, || {
+        spc.read(&mut buf);
+        std::hint::black_box(buf.len());
+    });
 
-    // simplex projection (PBCD hot path)
+    // ---- worker loop: allocating oracle vs zero-alloc oracle_into ----
+    // GFL at the paper shape (d=10, n=100): snapshot + one oracle call,
+    // exactly what a worker does per solve.
+    let sig = signal::piecewise_constant(10, 100, 6, 2.0, 0.5, 3);
+    let gfl = Gfl::new(10, 100, 0.01, sig.noisy.clone());
+    let gfl_shared = SharedParam::new(&gfl.init_param());
+    let mut block = 0usize;
+    report.add("gfl worker loop allocating (read_vec+oracle)", 10000, || {
+        let snapshot = gfl_shared.read_vec();
+        block = (block + 1) % gfl.num_blocks();
+        std::hint::black_box(gfl.oracle(&snapshot, block));
+    });
+    let mut snap: Vec<f32> = Vec::new();
+    let mut slot = BlockOracle::empty();
+    report.add("gfl worker loop zero-alloc (read+oracle_into)", 10000, || {
+        gfl_shared.read(&mut snap);
+        block = (block + 1) % gfl.num_blocks();
+        gfl.oracle_into(&snap, block, &mut slot);
+        std::hint::black_box(slot.ls);
+    });
+
+    // Chain SSVM at the paper shape (K=26, d=128, L=9).
+    let data = Arc::new(ocr_like::generate(64, 26, 128, 9, 0.15, 4));
+    let chain = ChainSsvm::new(data, 1.0);
+    let w: Vec<f32> = rng.gaussian_vec(chain.dim());
+    let chain_shared = SharedParam::new(&w);
+    report.add("chain worker loop allocating (read_vec+oracle)", 1000, || {
+        let snapshot = chain_shared.read_vec();
+        block = (block + 1) % chain.num_blocks();
+        std::hint::black_box(chain.oracle(&snapshot, block));
+    });
+    let mut cslot = BlockOracle::empty();
+    report.add(
+        "chain worker loop zero-alloc (read+oracle_into)",
+        1000,
+        || {
+            chain_shared.read(&mut snap);
+            block = (block + 1) % chain.num_blocks();
+            chain.oracle_into(&snap, block, &mut cslot);
+            std::hint::black_box(cslot.ls);
+        },
+    );
+
+    // ---- simplex projection (PBCD hot path) ----
     let mut blk = rng.gaussian_vec(10);
-    bench("project_simplex dim=10", 20000, || {
+    report.add("project_simplex dim=10", 20000, || {
         let mut b = blk.clone();
-        la::project_simplex(&mut b);
+        apbcfw::util::la::project_simplex(&mut b);
         std::hint::black_box(&b);
     });
     blk[0] += 1.0;
+
+    // Repo root (benches run with CWD = the rust/ package).
+    report.write_json(concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/../BENCH_hotpaths.json"
+    ));
+
+    // Gate for the PR's acceptance criterion: the zero-allocation loop
+    // must not be slower than the allocating one. A small tolerance
+    // absorbs noisy shared-CI hosts; a clear regression fails the run
+    // (set HOTPATHS_NO_GATE=1 to measure without gating).
+    let find = |name: &str| {
+        report
+            .rows
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, s)| s.median)
+            .unwrap_or_else(|| panic!("bench row {name:?} missing"))
+    };
+    let gfl_ratio = find("gfl worker loop allocating (read_vec+oracle)")
+        / find("gfl worker loop zero-alloc (read+oracle_into)");
+    let chain_ratio = find("chain worker loop allocating (read_vec+oracle)")
+        / find("chain worker loop zero-alloc (read+oracle_into)");
+    println!("\nzero-alloc speedup: gfl {gfl_ratio:.2}x, chain {chain_ratio:.2}x");
+    let gated = std::env::var("HOTPATHS_NO_GATE").is_err();
+    if gated && (gfl_ratio < 0.9 || chain_ratio < 0.9) {
+        eprintln!(
+            "FAIL: zero-alloc path regressed below the allocating path \
+             (gfl {gfl_ratio:.2}x, chain {chain_ratio:.2}x; threshold 0.9)"
+        );
+        std::process::exit(1);
+    }
 }

@@ -35,6 +35,11 @@ fn main() {
     bench("gfl native oracle (1 block)", 20000, || {
         std::hint::black_box(gfl.oracle(&u, 42));
     });
+    let mut slot = apbcfw::problems::BlockOracle::empty();
+    bench("gfl native oracle_into (1 block)", 20000, || {
+        gfl.oracle_into(&u, 42, &mut slot);
+        std::hint::black_box(slot.ls);
+    });
     bench("gfl native full objective", 5000, || {
         std::hint::black_box(gfl.objective_of(&u));
     });
@@ -51,6 +56,10 @@ fn main() {
     let w: Vec<f32> = rng.gaussian_vec(chain.dim());
     bench("chain native Viterbi oracle", 2000, || {
         std::hint::black_box(chain.viterbi(&w, 3, 1.0));
+    });
+    bench("chain native oracle_into (scratch Viterbi)", 2000, || {
+        chain.oracle_into(&w, 3, &mut slot);
+        std::hint::black_box(slot.ls);
     });
     bench("chain payload build", 5000, || {
         let ys = chain.viterbi(&w, 3, 1.0).0;
@@ -102,6 +111,10 @@ fn main() {
     let wm: Vec<f32> = rng.gaussian_vec(mc.dim());
     bench("multiclass native oracle", 20000, || {
         std::hint::black_box(mc.argmax(&wm, 7, 1.0));
+    });
+    bench("multiclass native oracle_into", 20000, || {
+        mc.oracle_into(&wm, 7, &mut slot);
+        std::hint::black_box(slot.ls);
     });
     if let Some(h) = &handle {
         let dec = XlaMulticlassDecoder::new(h.clone(), mc_data).unwrap();

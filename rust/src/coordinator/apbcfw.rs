@@ -8,16 +8,24 @@
 //! assembles tau disjoint blocks (collision-overwrite), applies them with
 //! the paper's step size (or exact line search), publishes, and repeats.
 //! No thread ever waits for a straggler.
+//!
+//! §Perf: the loop is allocation-free in steady state. Each worker owns a
+//! snapshot buffer (re-read only on version change) and a [`BlockOracle`]
+//! scratch filled by [`Problem::oracle_into`]; payload buffers of applied
+//! updates are recycled back to workers through a bounded free-list, so
+//! after warm-up the worker->server->worker ring reuses the same
+//! allocations. Straggler-dropped and redone solves never allocate at all.
+//! Old-vs-new numbers in EXPERIMENTS.md §Perf (`benches/hot_paths.rs`).
 
 use super::buffer::BatchAssembler;
 use super::shared::SharedParam;
 use super::{RunConfig, RunResult, UpdateMsg};
-use crate::problems::{ApplyOptions, Problem};
+use crate::problems::{ApplyOptions, BlockOracle, Problem};
 use crate::solver::{schedule_gamma, WeightedAverage};
 use crate::util::metrics::{Counters, Sample, Stopwatch, Trace};
 use crate::util::rng::Pcg64;
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc;
+use std::sync::{mpsc, Mutex};
 use std::time::Duration;
 
 /// Run asynchronous AP-BCFW with `cfg.workers` worker threads.
@@ -31,7 +39,7 @@ pub fn run<P: Problem>(problem: &P, cfg: &RunConfig) -> RunResult {
     let tau = cfg.tau.clamp(1, n);
     let mut master = problem.init_param();
     let mut state = problem.init_server();
-    let shared = SharedParam::new(&master);
+    let shared = SharedParam::with_mode(&master, cfg.snapshot_mode);
     let stop = AtomicBool::new(false);
     let counters = Counters::new();
     // Bounded queue: workers block when the server falls behind. This is
@@ -41,10 +49,22 @@ pub fn run<P: Problem>(problem: &P, cfg: &RunConfig) -> RunResult {
     // same effect from its network/receive buffer.
     let queue_cap = (cfg.queue_factor.max(1) * tau).max(2 * cfg.workers);
     let (tx, rx) = mpsc::sync_channel::<UpdateMsg>(queue_cap);
+    // Payload-buffer free list: the server returns applied/dropped `s`
+    // vectors here and workers pick them up before the next solve, making
+    // the send path allocation-free after warm-up. Bounded so a slow
+    // consumer cannot hoard memory.
+    let pool_cap = queue_cap + cfg.workers;
+    let oracle_pool: Mutex<Vec<Vec<f32>>> = Mutex::new(Vec::new());
     let watch = Stopwatch::start();
 
     let mut trace = Trace::default();
-    let mut avg: Option<WeightedAverage> = None; // reserved for parity
+    // Weighted iterate averaging (matches the sequential solvers; the
+    // async trace/result then report the averaged iterate).
+    let mut avg: Option<WeightedAverage> = if cfg.weighted_averaging {
+        Some(WeightedAverage::new(problem.param_dim()))
+    } else {
+        None
+    };
     let mut gap_estimate = f64::INFINITY;
     let mut k: u64 = 0;
     let mut asm = BatchAssembler::new();
@@ -56,12 +76,17 @@ pub fn run<P: Problem>(problem: &P, cfg: &RunConfig) -> RunResult {
             let shared = &shared;
             let stop = &stop;
             let counters = &counters;
+            let pool = &oracle_pool;
             let straggler = cfg.straggler.clone();
             let (lo, hi) = cfg.work_multiplier;
             let seed = cfg.seed;
             scope.spawn(move || {
                 let mut rng = Pcg64::new(seed, 1000 + w as u64);
                 let mut snapshot: Vec<f32> = Vec::new();
+                // Reusable oracle slot: `oracle_into` fills it in place;
+                // its payload buffer is handed to the server on send and
+                // replaced from the recycle pool.
+                let mut scratch = BlockOracle::empty();
                 // Re-read the shared parameter only when the server has
                 // published a new version — between publishes the snapshot
                 // is bit-identical, and the O(dim) atomic read was the
@@ -81,15 +106,25 @@ pub fn run<P: Problem>(problem: &P, cfg: &RunConfig) -> RunResult {
                     } else {
                         lo
                     };
-                    let mut oracle = problem.oracle(&snapshot, i);
+                    if scratch.s.capacity() == 0 {
+                        // Opportunistic: on contention just allocate.
+                        if let Ok(mut p) = pool.try_lock() {
+                            if let Some(buf) = p.pop() {
+                                scratch.s = buf;
+                            }
+                        }
+                    }
+                    problem.oracle_into(&snapshot, i, &mut scratch);
                     for _ in 1..reps {
-                        oracle = problem.oracle(&snapshot, i);
+                        problem.oracle_into(&snapshot, i, &mut scratch);
                     }
                     Counters::bump(&counters.oracle_calls);
                     if !straggler.reports(w, &mut rng) {
                         Counters::bump(&counters.dropped);
                         continue;
                     }
+                    let oracle =
+                        std::mem::replace(&mut scratch, BlockOracle::empty());
                     if tx
                         .send(UpdateMsg {
                             oracle,
@@ -113,6 +148,13 @@ pub fn run<P: Problem>(problem: &P, cfg: &RunConfig) -> RunResult {
                     let delay = k.saturating_sub(msg.k_read);
                     if cfg.staleness_rule && 2 * delay > k && delay > 0 {
                         Counters::bump(&counters.dropped);
+                        if let Ok(mut p) = oracle_pool.try_lock() {
+                            if p.len() < pool_cap {
+                                let mut s = msg.oracle.s;
+                                s.clear();
+                                p.push(s);
+                            }
+                        }
                     } else if cfg.collision_overwrite {
                         asm.insert(msg);
                     } else {
@@ -139,15 +181,27 @@ pub fn run<P: Problem>(problem: &P, cfg: &RunConfig) -> RunResult {
                 k += 1;
                 // Publish only the dirty ranges when the problem can name
                 // them (GFL/QP: tau block slices instead of the whole
-                // parameter); SSVM updates w densely -> full publish.
+                // parameter); SSVM updates w densely -> full publish. The
+                // whole batch is one consistency section in Consistent
+                // mode — readers never see it half-applied.
                 match problem.touched_ranges(&batch) {
                     Some(ranges) => {
-                        for r in ranges {
-                            shared.publish_range(r.start, &master[r]);
-                        }
-                        shared.bump_version();
+                        shared.publish_ranges(&ranges, &master);
                     }
                     None => shared.publish(&master, k),
+                }
+                // Recycle applied payload buffers back to the workers —
+                // opportunistically: if the pool is contended, dropping
+                // the buffers is cheaper than waiting.
+                if let Ok(mut p) = oracle_pool.try_lock() {
+                    for o in batch {
+                        if p.len() >= pool_cap {
+                            break;
+                        }
+                        let mut s = o.s;
+                        s.clear();
+                        p.push(s);
+                    }
                 }
                 Counters::add(&counters.updates_applied, tau as u64);
                 counters.iterations.store(k, Ordering::Relaxed);
@@ -162,9 +216,17 @@ pub fn run<P: Problem>(problem: &P, cfg: &RunConfig) -> RunResult {
                 };
 
                 if k % cfg.sample_every as u64 == 0 {
-                    let objective = problem.objective(&state, &master);
+                    // Report the averaged iterate when averaging is on
+                    // (exactly like the sequential Monitor).
+                    let objective = match &avg {
+                        Some(a) => problem.objective_from(&a.param, a.aux),
+                        None => problem.objective(&state, &master),
+                    };
                     let gap = if cfg.exact_gap {
-                        problem.full_gap(&state, &master)
+                        match &avg {
+                            Some(a) => problem.full_gap(&state, &a.param),
+                            None => problem.full_gap(&state, &master),
+                        }
                     } else {
                         gap_estimate
                     };
@@ -210,10 +272,16 @@ pub fn run<P: Problem>(problem: &P, cfg: &RunConfig) -> RunResult {
         f64::INFINITY
     };
 
-    // Final sample for completeness.
-    let objective = problem.objective(&state, &master);
+    // Final sample for completeness (averaged iterate when enabled).
+    let objective = match &avg {
+        Some(a) => problem.objective_from(&a.param, a.aux),
+        None => problem.objective(&state, &master),
+    };
     let gap = if cfg.exact_gap {
-        problem.full_gap(&state, &master)
+        match &avg {
+            Some(a) => problem.full_gap(&state, &a.param),
+            None => problem.full_gap(&state, &master),
+        }
     } else {
         gap_estimate
     };
@@ -227,7 +295,10 @@ pub fn run<P: Problem>(problem: &P, cfg: &RunConfig) -> RunResult {
 
     RunResult {
         trace,
-        param: master,
+        param: match avg {
+            Some(a) => a.param,
+            None => master,
+        },
         counters: snap,
         elapsed_s,
         secs_per_pass,
@@ -296,6 +367,32 @@ mod tests {
         let p = gfl_instance();
         let mut c = cfg(1, 1);
         c.stop.eps_gap = Some(0.05);
+        let r = run(&p, &c);
+        assert!(r.trace.last().unwrap().gap <= 0.05);
+    }
+
+    #[test]
+    fn weighted_averaging_reports_feasible_average() {
+        let p = gfl_instance();
+        let mut c = cfg(2, 2);
+        c.weighted_averaging = true;
+        c.stop.eps_gap = Some(0.15);
+        let r = run(&p, &c);
+        // The averaged iterate is a convex combination of feasible
+        // iterates, so it must be feasible itself; the trace reports it.
+        assert!(r.trace.last().unwrap().gap <= 0.15);
+        for t in 0..p.m {
+            let nrm =
+                crate::util::la::norm2(&r.param[t * p.d..(t + 1) * p.d]);
+            assert!(nrm <= p.lam + 1e-4, "block {t} norm {nrm}");
+        }
+    }
+
+    #[test]
+    fn consistent_snapshot_mode_converges() {
+        let p = gfl_instance();
+        let mut c = cfg(3, 4);
+        c.snapshot_mode = crate::coordinator::shared::SnapshotMode::Consistent;
         let r = run(&p, &c);
         assert!(r.trace.last().unwrap().gap <= 0.05);
     }

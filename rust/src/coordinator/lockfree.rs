@@ -9,7 +9,7 @@
 
 use super::shared::SharedParam;
 use super::{RunConfig, RunResult};
-use crate::problems::ProjectableProblem;
+use crate::problems::{BlockOracle, ProjectableProblem};
 use crate::util::metrics::{Counters, Sample, Stopwatch, Trace};
 use crate::util::rng::Pcg64;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -20,6 +20,14 @@ where
     P: ProjectableProblem<ServerState = ()>,
 {
     let n = problem.num_blocks();
+    // Hogwild element-wise updates are inherently torn across elements; a
+    // Consistent-mode request would serialize every fetch_add through the
+    // seqlock and still not give cross-element consistency guarantees the
+    // algorithm could use. Reject it loudly instead of ignoring the flag.
+    assert!(
+        cfg.snapshot_mode == super::shared::SnapshotMode::Torn,
+        "lockfree variant requires SnapshotMode::Torn (hogwild updates)"
+    );
     let shared = SharedParam::new(&problem.init_param());
     let counter = AtomicU64::new(0);
     let stop = AtomicBool::new(false);
@@ -37,17 +45,21 @@ where
             scope.spawn(move || {
                 let mut rng = Pcg64::new(seed, 3000 + w as u64);
                 let mut snapshot: Vec<f32> = Vec::new();
+                // The oracle never leaves this thread, so one scratch slot
+                // serves the whole run — the loop is allocation-free in
+                // steady state (§Perf).
+                let mut scratch = BlockOracle::empty();
                 while !stop.load(Ordering::Acquire) {
                     let i = rng.below(n);
                     shared.read(&mut snapshot);
-                    let o = problem.oracle(&snapshot, i);
+                    problem.oracle_into(&snapshot, i, &mut scratch);
                     Counters::bump(&counters.oracle_calls);
                     let k = counter.load(Ordering::Relaxed);
                     let gamma = 2.0 * n as f32
                         / (k as f32 + 2.0 * n as f32);
                     let range = problem.block_range(i);
                     for (j, idx) in range.enumerate() {
-                        let delta = gamma * (o.s[j] - snapshot[idx]);
+                        let delta = gamma * (scratch.s[j] - snapshot[idx]);
                         shared.fetch_add_f32(idx, delta);
                     }
                     counter.fetch_add(1, Ordering::Relaxed);

@@ -52,6 +52,14 @@ pub struct RunConfig {
     /// Worker->server queue capacity as a multiple of tau (backpressure
     /// depth; see §Perf).
     pub queue_factor: usize,
+    /// Weighted iterate averaging x-bar_k (rho_k prop. to k) on the server,
+    /// matching the sequential solvers' option — the SSVM experiments
+    /// report the averaged iterate.
+    pub weighted_averaging: bool,
+    /// Shared-parameter snapshot contract: `Torn` is the paper's §2.3
+    /// inconsistent-read regime (default); `Consistent` serves seqlock
+    /// snapshots for the consistent-read comparison scenario.
+    pub snapshot_mode: shared::SnapshotMode,
     pub stop: crate::solver::StopCond,
     pub seed: u64,
 }
@@ -69,6 +77,8 @@ impl Default for RunConfig {
             exact_gap: false,
             collision_overwrite: true,
             queue_factor: 4,
+            weighted_averaging: false,
+            snapshot_mode: shared::SnapshotMode::Torn,
             stop: crate::solver::StopCond::default(),
             seed: 0,
         }

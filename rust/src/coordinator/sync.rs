@@ -13,7 +13,7 @@ use crate::solver::schedule_gamma;
 use crate::util::metrics::{Counters, Sample, Stopwatch, Trace};
 use crate::util::rng::Pcg64;
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc;
+use std::sync::{mpsc, Mutex};
 
 enum Assignment {
     Solve(Vec<usize>),
@@ -27,7 +27,7 @@ pub fn run<P: Problem>(problem: &P, cfg: &RunConfig) -> RunResult {
     let tau = cfg.tau.clamp(1, n);
     let mut master = problem.init_param();
     let mut state = problem.init_server();
-    let shared = SharedParam::new(&master);
+    let shared = SharedParam::with_mode(&master, cfg.snapshot_mode);
     let counters = Counters::new();
     let watch = Stopwatch::start();
     let stop_flag = AtomicBool::new(false);
@@ -35,6 +35,11 @@ pub fn run<P: Problem>(problem: &P, cfg: &RunConfig) -> RunResult {
     let mut trace = Trace::default();
     let mut gap_estimate = f64::INFINITY;
     let mut k: u64 = 0;
+    // Payload-buffer free list (same scheme as the async runtime): the
+    // server recycles applied `s` vectors, workers pick them up before a
+    // solve, so the report path is allocation-free after warm-up.
+    let pool_cap = 2 * tau + cfg.workers;
+    let oracle_pool: Mutex<Vec<Vec<f32>>> = Mutex::new(Vec::new());
 
     // Per-worker assignment channels + shared result channel.
     let mut assign_txs = Vec::with_capacity(cfg.workers);
@@ -51,12 +56,16 @@ pub fn run<P: Problem>(problem: &P, cfg: &RunConfig) -> RunResult {
             let res_tx = res_tx.clone();
             let shared = &shared;
             let counters = &counters;
+            let pool = &oracle_pool;
             let straggler = cfg.straggler.clone();
             let stop_flag = &stop_flag;
             let seed = cfg.seed;
             scope.spawn(move || {
                 let mut rng = Pcg64::new(seed, 2000 + w as u64);
                 let mut snapshot: Vec<f32> = Vec::new();
+                // Scratch slot reused across straggler redos: only the
+                // successfully-reported solve transfers its buffer (§Perf).
+                let mut scratch = BlockOracle::empty();
                 while let Ok(Assignment::Solve(blocks)) = a_rx.recv() {
                     if stop_flag.load(Ordering::Acquire) {
                         break;
@@ -64,13 +73,24 @@ pub fn run<P: Problem>(problem: &P, cfg: &RunConfig) -> RunResult {
                     shared.read(&mut snapshot);
                     let mut out = Vec::with_capacity(blocks.len());
                     for i in blocks {
+                        if scratch.s.capacity() == 0 {
+                            // Opportunistic: on contention just allocate.
+                            if let Ok(mut p) = pool.try_lock() {
+                                if let Some(buf) = p.pop() {
+                                    scratch.s = buf;
+                                }
+                            }
+                        }
                         // Redo until the solve is successfully reported —
                         // the synchronous server can't proceed without it.
                         loop {
-                            let o = problem.oracle(&snapshot, i);
+                            problem.oracle_into(&snapshot, i, &mut scratch);
                             Counters::bump(&counters.oracle_calls);
                             if straggler.reports(w, &mut rng) {
-                                out.push(o);
+                                out.push(std::mem::replace(
+                                    &mut scratch,
+                                    BlockOracle::empty(),
+                                ));
                                 break;
                             }
                             Counters::bump(&counters.dropped);
@@ -121,6 +141,17 @@ pub fn run<P: Problem>(problem: &P, cfg: &RunConfig) -> RunResult {
             k += 1;
             shared.publish(&master, k);
             Counters::add(&counters.updates_applied, batch.len() as u64);
+            // Recycle applied payload buffers back to the workers.
+            if let Ok(mut p) = oracle_pool.try_lock() {
+                for o in batch {
+                    if p.len() >= pool_cap {
+                        break;
+                    }
+                    let mut s = o.s;
+                    s.clear();
+                    p.push(s);
+                }
+            }
             counters.iterations.store(k, Ordering::Relaxed);
             let inst = info.batch_gap * n as f64 / tau as f64;
             gap_estimate = if gap_estimate.is_finite() {

@@ -75,8 +75,16 @@ impl Gfl {
 
     /// Gradient column t at `u` (the tridiagonal stencil).
     pub fn grad_col(&self, u: &[f32], t: usize) -> Vec<f32> {
+        let mut g = vec![0.0f32; self.d];
+        self.grad_col_into(u, t, &mut g);
+        g
+    }
+
+    /// Gradient column t written into a caller-owned buffer of length `d`
+    /// (the allocation-free form used by [`Problem::oracle_into`]).
+    pub fn grad_col_into(&self, u: &[f32], t: usize, g: &mut [f32]) {
         let d = self.d;
-        let mut g = vec![0.0f32; d];
+        debug_assert_eq!(g.len(), d);
         let ut = self.col(u, t);
         let bt = &self.b[t * d..(t + 1) * d];
         for r in 0..d {
@@ -93,22 +101,6 @@ impl Gfl {
             for r in 0..d {
                 g[r] -= un[r];
             }
-        }
-        g
-    }
-
-    fn oracle_from_grad(&self, t: usize, g: Vec<f32>) -> BlockOracle {
-        let nrm = la::norm2(&g);
-        let mut s = g;
-        if nrm > 0.0 {
-            la::scale((-self.lam / nrm) as f32, &mut s);
-        } else {
-            s.iter_mut().for_each(|v| *v = 0.0);
-        }
-        BlockOracle {
-            block: t,
-            s,
-            ls: 0.0,
         }
     }
 
@@ -202,8 +194,37 @@ impl Problem for Gfl {
                 ls: 0.0,
             };
         }
-        let g = self.grad_col(param, block);
-        self.oracle_from_grad(block, g)
+        // Native path: delegate to `oracle_into` so there is exactly ONE
+        // implementation of the oracle arithmetic (bit-identity by
+        // construction). No recursion: `oracle_into` only calls back into
+        // `oracle` on the backend path, which returned above.
+        let mut out = BlockOracle::empty();
+        self.oracle_into(param, block, &mut out);
+        out
+    }
+
+    fn oracle_into(&self, param: &[f32], block: usize, out: &mut BlockOracle) {
+        if self.backend.is_some() {
+            // Artifact path keeps its own buffers; fall back.
+            *out = self.oracle(param, block);
+            return;
+        }
+        // Compute the gradient directly into the payload buffer, then
+        // rescale in place — same operation order as `oracle`, so the
+        // result is bit-identical (property-tested). No zero-fill:
+        // `grad_col_into` assigns every element.
+        out.block = block;
+        out.ls = 0.0;
+        if out.s.len() != self.d {
+            out.s.resize(self.d, 0.0);
+        }
+        self.grad_col_into(param, block, &mut out.s);
+        let nrm = la::norm2(&out.s);
+        if nrm > 0.0 {
+            la::scale((-self.lam / nrm) as f32, &mut out.s);
+        } else {
+            out.s.iter_mut().for_each(|v| *v = 0.0);
+        }
     }
 
     fn block_gap(
@@ -301,6 +322,13 @@ impl ProjectableProblem for Gfl {
 
     fn block_grad(&self, param: &[f32], block: usize) -> Vec<f32> {
         self.grad_col(param, block)
+    }
+
+    fn block_grad_into(&self, param: &[f32], block: usize, out: &mut Vec<f32>) {
+        if out.len() != self.d {
+            out.resize(self.d, 0.0);
+        }
+        self.grad_col_into(param, block, out);
     }
 
     fn project_block(&self, _block: usize, x: &mut [f32]) {

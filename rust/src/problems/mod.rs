@@ -33,6 +33,19 @@ pub struct BlockOracle {
     pub ls: f64,
 }
 
+impl BlockOracle {
+    /// An empty oracle slot, ready to be filled by
+    /// [`Problem::oracle_into`]. Allocation happens lazily on first fill
+    /// and is reused afterwards.
+    pub fn empty() -> Self {
+        Self {
+            block: 0,
+            s: Vec::new(),
+            ls: 0.0,
+        }
+    }
+}
+
 /// Options controlling how the server applies a minibatch.
 #[derive(Debug, Clone, Copy)]
 pub struct ApplyOptions {
@@ -72,6 +85,18 @@ pub trait Problem: Send + Sync {
 
     /// Solve the block linear subproblem (paper Eq. 3) at `param`.
     fn oracle(&self, param: &[f32], block: usize) -> BlockOracle;
+
+    /// Allocation-free oracle: solve the block subproblem into a
+    /// caller-owned [`BlockOracle`], reusing `out.s`'s buffer. Workers hold
+    /// one slot per thread and call this in their hot loop, so a steady
+    /// state run performs no per-oracle allocation (§Perf).
+    ///
+    /// The default delegates to [`Problem::oracle`]; implementations MUST
+    /// produce bit-identical output to `oracle` (property-tested in
+    /// `rust/tests/hot_path_equivalence.rs`).
+    fn oracle_into(&self, param: &[f32], block: usize, out: &mut BlockOracle) {
+        *out = self.oracle(param, block);
+    }
 
     /// Surrogate-gap contribution of `o` evaluated at the *current* param
     /// and state: `g_i = <x_i - s_i, grad_i f(x)>`.
@@ -137,6 +162,15 @@ pub trait ProjectableProblem: Problem {
 
     /// grad_i f(param) as a dense block vector.
     fn block_grad(&self, param: &[f32], block: usize) -> Vec<f32>;
+
+    /// Allocation-free block gradient into a caller-owned buffer (cleared
+    /// and resized to the block dimension). Default delegates to
+    /// [`ProjectableProblem::block_grad`]; native implementations reuse
+    /// the buffer so the PBCD hot loop stays allocation-free.
+    fn block_grad_into(&self, param: &[f32], block: usize, out: &mut Vec<f32>) {
+        out.clear();
+        out.extend_from_slice(&self.block_grad(param, block));
+    }
 
     /// Euclidean projection of a block vector onto M_i (in place).
     fn project_block(&self, block: usize, x: &mut [f32]);

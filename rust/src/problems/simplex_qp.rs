@@ -11,6 +11,14 @@
 use super::{ApplyInfo, ApplyOptions, BlockOracle, Problem, ProjectableProblem};
 use crate::util::la;
 use crate::util::rng::Pcg64;
+use std::cell::RefCell;
+
+thread_local! {
+    /// Per-thread (z = A^T x, block gradient) scratch for the
+    /// allocation-free oracle path.
+    static QP_SCRATCH: RefCell<(Vec<f64>, Vec<f64>)> =
+        const { RefCell::new((Vec::new(), Vec::new())) };
+}
 
 /// Product-of-simplices QP instance.
 pub struct SimplexQp {
@@ -49,7 +57,15 @@ impl SimplexQp {
 
     /// z = A^T x  (p-dim).
     fn at_x(&self, x: &[f32]) -> Vec<f64> {
-        let mut z = vec![0.0f64; self.p];
+        let mut z = Vec::new();
+        self.at_x_into(x, &mut z);
+        z
+    }
+
+    /// z = A^T x into a caller-owned buffer (cleared + resized to p).
+    fn at_x_into(&self, x: &[f32], z: &mut Vec<f64>) {
+        z.clear();
+        z.resize(self.p, 0.0);
         for (r, &xr) in x.iter().enumerate() {
             if xr != 0.0 {
                 let row = &self.a[r * self.p..(r + 1) * self.p];
@@ -58,7 +74,6 @@ impl SimplexQp {
                 }
             }
         }
-        z
     }
 
     /// Full gradient Qx + c (O(dim*p)).
@@ -78,9 +93,27 @@ impl SimplexQp {
 
     /// Gradient of one block (O(dim*p) due to the coupling term).
     pub fn block_gradient(&self, x: &[f32], block: usize) -> Vec<f64> {
-        let z = self.at_x(x);
+        let mut z = Vec::new();
+        let mut g = Vec::new();
+        self.at_x_into(x, &mut z);
+        self.block_gradient_given_z(x, block, &z, &mut g);
+        g
+    }
+
+    /// Block gradient given a precomputed z = A^T x, written into `g`
+    /// (cleared + resized to m). Same arithmetic as [`Self::block_gradient`].
+    fn block_gradient_given_z(
+        &self,
+        x: &[f32],
+        block: usize,
+        z: &[f64],
+        g: &mut Vec<f64>,
+    ) {
         let lo = block * self.m;
-        let mut g = vec![0.0f64; self.m];
+        // Every element is assigned below; only fix the length.
+        if g.len() != self.m {
+            g.resize(self.m, 0.0);
+        }
         for (off, gr) in g.iter_mut().enumerate() {
             let r = lo + off;
             let row = &self.a[r * self.p..(r + 1) * self.p];
@@ -90,7 +123,6 @@ impl SimplexQp {
             }
             *gr = self.b * x[r] as f64 + self.mu * az + self.c[r] as f64;
         }
-        g
     }
 
     /// f(x) = 1/2 b ||x||^2 + 1/2 mu ||A^T x||^2 + <c, x>.
@@ -169,18 +201,33 @@ impl Problem for SimplexQp {
     fn init_server(&self) -> Self::ServerState {}
 
     fn oracle(&self, param: &[f32], block: usize) -> BlockOracle {
-        let g = self.block_gradient(param, block);
-        let mut arg = 0usize;
-        let mut best = f64::INFINITY;
-        for (j, &gj) in g.iter().enumerate() {
-            if gj < best {
-                best = gj;
-                arg = j;
+        // Single implementation of the oracle arithmetic: delegate to the
+        // scratch form (bit-identity between the two by construction).
+        let mut out = BlockOracle::empty();
+        self.oracle_into(param, block, &mut out);
+        out
+    }
+
+    fn oracle_into(&self, param: &[f32], block: usize, out: &mut BlockOracle) {
+        QP_SCRATCH.with(|cell| {
+            let mut guard = cell.borrow_mut();
+            let (z, g) = &mut *guard;
+            self.at_x_into(param, z);
+            self.block_gradient_given_z(param, block, z, g);
+            let mut arg = 0usize;
+            let mut best = f64::INFINITY;
+            for (j, &gj) in g.iter().enumerate() {
+                if gj < best {
+                    best = gj;
+                    arg = j;
+                }
             }
-        }
-        let mut s = vec![0.0f32; self.m];
-        s[arg] = 1.0;
-        BlockOracle { block, s, ls: 0.0 }
+            out.block = block;
+            out.ls = 0.0;
+            out.s.clear();
+            out.s.resize(self.m, 0.0);
+            out.s[arg] = 1.0;
+        });
     }
 
     fn block_gap(
@@ -261,6 +308,17 @@ impl ProjectableProblem for SimplexQp {
             .into_iter()
             .map(|v| v as f32)
             .collect()
+    }
+
+    fn block_grad_into(&self, param: &[f32], block: usize, out: &mut Vec<f32>) {
+        QP_SCRATCH.with(|cell| {
+            let mut guard = cell.borrow_mut();
+            let (z, g) = &mut *guard;
+            self.at_x_into(param, z);
+            self.block_gradient_given_z(param, block, z, g);
+            out.clear();
+            out.extend(g.iter().map(|&v| v as f32));
+        });
     }
 
     fn project_block(&self, _block: usize, x: &mut [f32]) {

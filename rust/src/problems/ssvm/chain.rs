@@ -9,7 +9,38 @@
 use super::super::{ApplyInfo, ApplyOptions, BlockOracle, Problem};
 use super::{ssvm_apply, ssvm_block_gap, SsvmState};
 use crate::data::ocr_like::ChainDataset;
+use std::cell::RefCell;
 use std::sync::Arc;
+
+/// Reusable buffers for one loss-augmented Viterbi solve. Workers keep one
+/// per thread (via [`Problem::oracle_into`]'s thread-local, or explicitly
+/// through [`ChainSsvm::viterbi_into`]); buffers are resized on first use
+/// and reused afterwards, so the decode hot loop performs no allocation.
+#[derive(Default)]
+pub struct ViterbiScratch {
+    /// Node scores theta (ell x k).
+    theta: Vec<f64>,
+    /// Forward max-sum values (k).
+    alpha: Vec<f64>,
+    /// Next-step values (k), swapped with `alpha` per step.
+    next: Vec<f64>,
+    /// Backpointers (ell x k).
+    ptr: Vec<u16>,
+    /// Decoded label sequence (ell) — the solve's output.
+    pub ys: Vec<u16>,
+}
+
+thread_local! {
+    static CHAIN_SCRATCH: RefCell<ViterbiScratch> = const {
+        RefCell::new(ViterbiScratch {
+            theta: Vec::new(),
+            alpha: Vec::new(),
+            next: Vec::new(),
+            ptr: Vec::new(),
+            ys: Vec::new(),
+        })
+    };
+}
 
 /// Pluggable loss-augmented decoder (XLA artifact path implements this).
 pub trait ChainDecoder: Send + Sync {
@@ -63,12 +94,31 @@ impl ChainSsvm {
 
     /// Native loss-augmented Viterbi: returns (y*, H_i(y*; w)).
     pub fn viterbi(&self, w: &[f32], i: usize, loss_weight: f32) -> (Vec<u16>, f64) {
+        let mut sc = ViterbiScratch::default();
+        let h = self.viterbi_into(w, i, loss_weight, &mut sc);
+        (sc.ys, h)
+    }
+
+    /// Allocation-free Viterbi: identical numerics to [`Self::viterbi`],
+    /// with all DP state in the caller-owned scratch. Returns H_i(y*; w);
+    /// the decode y* is left in `sc.ys`.
+    pub fn viterbi_into(
+        &self,
+        w: &[f32],
+        i: usize,
+        loss_weight: f32,
+        sc: &mut ViterbiScratch,
+    ) -> f64 {
         let (k, d, ell) = (self.data.k, self.data.d, self.data.ell);
         let wu = self.wu(w);
         let tr = self.trans(w);
         let ytrue = self.data.label_seq(i);
         // Node scores theta[t][c] = <wu_c, x_t> + lw/L * 1{c != y_t}.
-        let mut theta = vec![0.0f64; ell * k];
+        // Scratch buffers are length-fixed only — every cell that is read
+        // below is assigned first, so no zero-fill is needed.
+        if sc.theta.len() != ell * k {
+            sc.theta.resize(ell * k, 0.0);
+        }
         for t in 0..ell {
             let x = self.data.feature(i, t);
             for c in 0..k {
@@ -80,45 +130,52 @@ impl ChainSsvm {
                 if c != ytrue[t] as usize {
                     s += loss_weight as f64 / ell as f64;
                 }
-                theta[t * k + c] = s;
+                sc.theta[t * k + c] = s;
             }
         }
         // Forward max-sum with backpointers.
-        let mut alpha: Vec<f64> = theta[..k].to_vec();
-        let mut ptr = vec![0u16; ell * k];
-        let mut next = vec![0.0f64; k];
+        sc.alpha.clear();
+        sc.alpha.extend_from_slice(&sc.theta[..k]);
+        if sc.ptr.len() != ell * k {
+            sc.ptr.resize(ell * k, 0);
+        }
+        if sc.next.len() != k {
+            sc.next.resize(k, 0.0);
+        }
         for t in 1..ell {
             for c in 0..k {
                 let mut best = f64::NEG_INFINITY;
                 let mut arg = 0u16;
                 for j in 0..k {
-                    let v = alpha[j] + tr[j * k + c] as f64;
+                    let v = sc.alpha[j] + tr[j * k + c] as f64;
                     if v > best {
                         best = v;
                         arg = j as u16;
                     }
                 }
-                ptr[t * k + c] = arg;
-                next[c] = best + theta[t * k + c];
+                sc.ptr[t * k + c] = arg;
+                sc.next[c] = best + sc.theta[t * k + c];
             }
-            std::mem::swap(&mut alpha, &mut next);
+            std::mem::swap(&mut sc.alpha, &mut sc.next);
         }
         let (mut yc, mut v) = (0usize, f64::NEG_INFINITY);
-        for (c, &a) in alpha.iter().enumerate() {
+        for (c, &a) in sc.alpha.iter().enumerate() {
             if a > v {
                 v = a;
                 yc = c;
             }
         }
-        let mut ys = vec![0u16; ell];
-        ys[ell - 1] = yc as u16;
+        if sc.ys.len() != ell {
+            sc.ys.resize(ell, 0);
+        }
+        sc.ys[ell - 1] = yc as u16;
         for t in (0..ell - 1).rev() {
-            ys[t] = ptr[(t + 1) * k + ys[t + 1] as usize];
+            sc.ys[t] = sc.ptr[(t + 1) * k + sc.ys[t + 1] as usize];
         }
         // Score of the ground truth (no loss).
         let mut score_true = 0.0f64;
         for t in 0..ell {
-            score_true += theta[t * k + ytrue[t] as usize];
+            score_true += sc.theta[t * k + ytrue[t] as usize];
             // theta includes no loss at the true label, so this is the raw
             // unary score already.
             if t > 0 {
@@ -126,12 +183,24 @@ impl ChainSsvm {
                     tr[ytrue[t - 1] as usize * k + ytrue[t] as usize] as f64;
             }
         }
-        (ys, v - score_true)
+        v - score_true
     }
 
     /// Build the BCFW payload for decode y*: w_s = psi_i(y*)/(lam n),
     /// l_s = Hamming(y*, y_i)/(L n).
     pub fn payload(&self, i: usize, ystar: &[u16]) -> (Vec<f32>, f64) {
+        let mut ws = Vec::new();
+        let ls = self.payload_into(i, ystar, &mut ws);
+        (ws, ls)
+    }
+
+    /// Payload written into a caller-owned buffer; returns l_s.
+    pub fn payload_into(
+        &self,
+        i: usize,
+        ystar: &[u16],
+        ws: &mut Vec<f32>,
+    ) -> f64 {
         let (k, d, ell, n) = (
             self.data.k,
             self.data.d,
@@ -139,7 +208,8 @@ impl ChainSsvm {
             self.data.n,
         );
         let scale = (1.0 / (self.lam * n as f64)) as f32;
-        let mut ws = vec![0.0f32; self.dim()];
+        ws.clear();
+        ws.resize(self.dim(), 0.0);
         let ytrue = self.data.label_seq(i);
         let mut mistakes = 0usize;
         for t in 0..ell {
@@ -166,8 +236,7 @@ impl ChainSsvm {
                 }
             }
         }
-        let ls = mistakes as f64 / (ell as f64 * n as f64);
-        (ws, ls)
+        mistakes as f64 / (ell as f64 * n as f64)
     }
 
     /// Average Hamming test error of plain (non-loss-augmented) decoding.
@@ -238,6 +307,20 @@ impl Problem for ChainSsvm {
             s: ws,
             ls,
         }
+    }
+
+    fn oracle_into(&self, param: &[f32], block: usize, out: &mut BlockOracle) {
+        if self.decoder.is_some() {
+            *out = self.oracle(param, block);
+            return;
+        }
+        CHAIN_SCRATCH.with(|cell| {
+            let mut guard = cell.borrow_mut();
+            let sc = &mut *guard;
+            self.viterbi_into(param, block, 1.0, sc);
+            out.block = block;
+            out.ls = self.payload_into(block, &sc.ys, &mut out.s);
+        });
     }
 
     fn block_gap(

@@ -64,6 +64,14 @@ pub fn ssvm_block_gap(
     lam * (la::dot(w, wi) - la::dot(w, &o.s)) - state.li[o.block] + o.ls
 }
 
+thread_local! {
+    /// Per-thread direction buffer for [`ssvm_apply`] — the server applies
+    /// batches in a tight loop, so the O(dim) direction vector is reused
+    /// instead of reallocated each iteration (§Perf).
+    static APPLY_DW: std::cell::RefCell<Vec<f32>> =
+        const { std::cell::RefCell::new(Vec::new()) };
+}
+
 /// Apply a disjoint-block batch; returns (gamma_used, batch_gap).
 pub fn ssvm_apply(
     lam: f64,
@@ -73,38 +81,45 @@ pub fn ssvm_apply(
     gamma: f32,
     line_search: bool,
 ) -> (f32, f64) {
-    let dim = state.dim;
-    // Direction: Delta_w = sum_i (w_s - w_i), Delta_l = sum_i (l_s - l_i).
-    let mut dw = vec![0.0f32; dim];
-    let mut dl = 0.0f64;
-    for o in batch {
-        debug_assert_eq!(o.s.len(), dim);
-        let wi = state.wi(o.block);
-        for (dwr, (sr, wir)) in dw.iter_mut().zip(o.s.iter().zip(wi.iter())) {
-            *dwr += sr - wir;
+    APPLY_DW.with(|cell| {
+        let mut guard = cell.borrow_mut();
+        let dw = &mut *guard;
+        let dim = state.dim;
+        // Direction: Delta_w = sum_i (w_s - w_i), Delta_l = sum_i (l_s - l_i).
+        dw.clear();
+        dw.resize(dim, 0.0);
+        let mut dl = 0.0f64;
+        for o in batch {
+            debug_assert_eq!(o.s.len(), dim);
+            let wi = state.wi(o.block);
+            for (dwr, (sr, wir)) in
+                dw.iter_mut().zip(o.s.iter().zip(wi.iter()))
+            {
+                *dwr += sr - wir;
+            }
+            dl += o.ls - state.li[o.block];
         }
-        dl += o.ls - state.li[o.block];
-    }
-    let batch_gap = -lam * la::dot(w, &dw) + dl;
-    let g = if line_search {
-        let denom = lam * la::norm2_sq(&dw);
-        if denom <= 0.0 {
-            0.0
+        let batch_gap = -lam * la::dot(w, dw) + dl;
+        let g = if line_search {
+            let denom = lam * la::norm2_sq(dw);
+            if denom <= 0.0 {
+                0.0
+            } else {
+                (batch_gap / denom).clamp(0.0, 1.0) as f32
+            }
         } else {
-            (batch_gap / denom).clamp(0.0, 1.0) as f32
+            gamma
+        };
+        for o in batch {
+            let li = state.li[o.block];
+            state.li[o.block] = li + g as f64 * (o.ls - li);
+            let wi = state.wi_mut(o.block);
+            la::lerp_into(g, &o.s, wi);
         }
-    } else {
-        gamma
-    };
-    for o in batch {
-        let li = state.li[o.block];
-        state.li[o.block] = li + g as f64 * (o.ls - li);
-        let wi = state.wi_mut(o.block);
-        la::lerp_into(g, &o.s, wi);
-    }
-    state.l += g as f64 * dl;
-    la::axpy(g, &dw, w);
-    (g, batch_gap)
+        state.l += g as f64 * dl;
+        la::axpy(g, dw, w);
+        (g, batch_gap)
+    })
 }
 
 /// Dual objective f(alpha) = lambda/2 ||w||^2 - l.

@@ -40,37 +40,51 @@ impl MulticlassSsvm {
         self.data.k * self.data.d
     }
 
-    /// Native loss-augmented argmax: (y*, H_i).
+    /// Native loss-augmented argmax: (y*, H_i). Single pass, no score
+    /// buffer — the per-class score and augmented max are tracked inline,
+    /// which keeps [`Problem::oracle_into`] allocation-free.
     pub fn argmax(&self, w: &[f32], i: usize, loss_weight: f32) -> (usize, f64) {
         let (k, d) = (self.data.k, self.data.d);
         let x = self.data.feature(i);
         let yt = self.data.label(i);
-        let mut scores = vec![0.0f64; k];
+        let mut best = f64::NEG_INFINITY;
+        let mut arg = 0usize;
+        let mut score_true = 0.0f64;
         for c in 0..k {
             let row = &w[c * d..(c + 1) * d];
             let mut s = 0.0f64;
             for r in 0..d {
                 s += row[r] as f64 * x[r] as f64;
             }
-            scores[c] = s;
-        }
-        let mut best = f64::NEG_INFINITY;
-        let mut arg = 0usize;
-        for c in 0..k {
-            let aug = scores[c]
-                + if c != yt { loss_weight as f64 } else { 0.0 };
+            if c == yt {
+                score_true = s;
+            }
+            let aug = s + if c != yt { loss_weight as f64 } else { 0.0 };
             if aug > best {
                 best = aug;
                 arg = c;
             }
         }
-        (arg, best - scores[yt])
+        (arg, best - score_true)
     }
 
     /// BCFW payload for decode y*: w_s = psi_i(y*)/(lam n), l_s = 1{y* != y_i}/n.
     pub fn payload(&self, i: usize, ystar: usize) -> (Vec<f32>, f64) {
+        let mut ws = Vec::new();
+        let ls = self.payload_into(i, ystar, &mut ws);
+        (ws, ls)
+    }
+
+    /// Payload written into a caller-owned buffer; returns l_s.
+    pub fn payload_into(
+        &self,
+        i: usize,
+        ystar: usize,
+        ws: &mut Vec<f32>,
+    ) -> f64 {
         let (d, n) = (self.data.d, self.data.n);
-        let mut ws = vec![0.0f32; self.dim()];
+        ws.clear();
+        ws.resize(self.dim(), 0.0);
         let yt = self.data.label(i);
         if ystar != yt {
             let scale = (1.0 / (self.lam * n as f64)) as f32;
@@ -79,9 +93,9 @@ impl MulticlassSsvm {
                 ws[yt * d + r] += scale * x[r];
                 ws[ystar * d + r] -= scale * x[r];
             }
-            (ws, 1.0 / n as f64)
+            1.0 / n as f64
         } else {
-            (ws, 0.0)
+            0.0
         }
     }
 
@@ -136,6 +150,16 @@ impl Problem for MulticlassSsvm {
             s: ws,
             ls,
         }
+    }
+
+    fn oracle_into(&self, param: &[f32], block: usize, out: &mut BlockOracle) {
+        if self.decoder.is_some() {
+            *out = self.oracle(param, block);
+            return;
+        }
+        let (ystar, _h) = self.argmax(param, block, 1.0);
+        out.block = block;
+        out.ls = self.payload_into(block, ystar, &mut out.s);
     }
 
     fn block_gap(

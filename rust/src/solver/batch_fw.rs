@@ -3,7 +3,7 @@
 //! convergence guarantee reduces to this case at tau = n (§2.1).
 
 use super::{schedule_gamma_batch, Monitor, SolveOptions, SolveResult};
-use crate::problems::{ApplyOptions, Problem};
+use crate::problems::{ApplyOptions, BlockOracle, Problem};
 
 /// Run batch FW on `problem`. `opts.tau` is ignored (always n).
 pub fn solve<P: Problem>(problem: &P, opts: &SolveOptions) -> SolveResult {
@@ -12,11 +12,16 @@ pub fn solve<P: Problem>(problem: &P, opts: &SolveOptions) -> SolveResult {
     let mut state = problem.init_server();
     let mut mon = Monitor::new(problem, opts);
 
+    // One persistent oracle slot per block, refilled in place (§Perf).
+    let mut batch: Vec<BlockOracle> =
+        (0..n).map(|_| BlockOracle::empty()).collect();
+
     let mut oracle_calls: u64 = 0;
     let mut k: u64 = 0;
     loop {
-        let batch: Vec<_> =
-            (0..n).map(|i| problem.oracle(&param, i)).collect();
+        for (i, slot) in batch.iter_mut().enumerate() {
+            problem.oracle_into(&param, i, slot);
+        }
         oracle_calls += n as u64;
         let gamma = schedule_gamma_batch(k);
         let info = problem.apply(

@@ -8,7 +8,7 @@
 //! effect of staleness from system noise — exactly the Fig 4 experiment.
 
 use super::{schedule_gamma, Monitor, SolveOptions, SolveResult};
-use crate::problems::{ApplyOptions, Problem};
+use crate::problems::{ApplyOptions, BlockOracle, Problem};
 use crate::sim::delay::{accept_delay, DelayModel, History};
 use crate::util::rng::Pcg64;
 
@@ -49,12 +49,18 @@ pub fn solve<P: Problem>(
     let mut hist = History::new(dopts.history);
     hist.push(0, &param);
 
+    // Persistent scratch: index buffer + tau oracle slots; accepted
+    // updates fill slots[..used] in place each iteration (§Perf).
+    let mut blocks: Vec<usize> = Vec::new();
+    let mut slots: Vec<BlockOracle> =
+        (0..tau).map(|_| BlockOracle::empty()).collect();
+
     let mut oracle_calls: u64 = 0;
     let mut dropped: u64 = 0;
     let mut k: u64 = 0;
     loop {
-        let blocks = rng.subset(n, tau);
-        let mut batch = Vec::with_capacity(tau);
+        rng.subset_into(n, tau, &mut blocks);
+        let mut used = 0usize;
         for &i in &blocks {
             let delay = dopts.model.sample(&mut rng);
             oracle_calls += 1;
@@ -63,7 +69,10 @@ pub fn solve<P: Problem>(
                 continue;
             }
             match hist.get(delay) {
-                Some(stale) => batch.push(problem.oracle(stale, i)),
+                Some(stale) => {
+                    problem.oracle_into(stale, i, &mut slots[used]);
+                    used += 1;
+                }
                 None => {
                     // Evicted from history: equivalent to an over-stale
                     // update, dropped by the same rule.
@@ -71,18 +80,19 @@ pub fn solve<P: Problem>(
                 }
             }
         }
-        if !batch.is_empty() {
+        if used > 0 {
+            let batch = &slots[..used];
             let gamma = schedule_gamma(n, tau, k);
             let info = problem.apply(
                 &mut state,
                 &mut param,
-                &batch,
+                batch,
                 ApplyOptions {
                     gamma,
                     line_search: opts.line_search,
                 },
             );
-            mon.after_apply(&param, &state, info.batch_gap, batch.len());
+            mon.after_apply(&param, &state, info.batch_gap, used);
         }
         k += 1;
         hist.push(k, &param);

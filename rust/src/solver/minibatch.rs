@@ -6,7 +6,7 @@
 //! measured in *epochs to convergence* rather than wall-clock.
 
 use super::{schedule_gamma, Monitor, SolveOptions, SolveResult};
-use crate::problems::{ApplyOptions, Problem};
+use crate::problems::{ApplyOptions, BlockOracle, Problem};
 use crate::util::rng::Pcg64;
 
 /// Run minibatch BCFW on `problem`.
@@ -18,16 +18,22 @@ pub fn solve<P: Problem>(problem: &P, opts: &SolveOptions) -> SolveResult {
     let mut state = problem.init_server();
     let mut mon = Monitor::new(problem, opts);
 
+    // Persistent per-iteration scratch: block indices + one oracle slot
+    // per batch position, refilled in place (§Perf: no allocation after
+    // the first iteration).
+    let mut blocks: Vec<usize> = Vec::new();
+    let mut batch: Vec<BlockOracle> =
+        (0..tau).map(|_| BlockOracle::empty()).collect();
+
     let mut oracle_calls: u64 = 0;
     let mut k: u64 = 0;
     loop {
         // Uniform size-tau subset of blocks (disjoint by construction, as
         // the perfect server would assemble after collision handling).
-        let blocks = rng.subset(n, tau);
-        let batch: Vec<_> = blocks
-            .iter()
-            .map(|&i| problem.oracle(&param, i))
-            .collect();
+        rng.subset_into(n, tau, &mut blocks);
+        for (slot, &i) in batch.iter_mut().zip(blocks.iter()) {
+            problem.oracle_into(&param, i, slot);
+        }
         oracle_calls += tau as u64;
         let gamma = schedule_gamma(n, tau, k);
         let info = problem.apply(

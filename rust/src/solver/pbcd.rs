@@ -22,27 +22,36 @@ pub fn solve<P: ProjectableProblem>(
     let mut state = problem.init_server();
     let mut mon = Monitor::new(problem, opts);
 
+    // Persistent scratch: index buffer, gradient buffer, and one
+    // (range, block-iterate) slot per batch position (§Perf: the PBCD
+    // loop is allocation-free in steady state).
+    let mut blocks: Vec<usize> = Vec::new();
+    let mut g: Vec<f32> = Vec::new();
+    let mut updates: Vec<(std::ops::Range<usize>, Vec<f32>)> =
+        (0..tau).map(|_| (0..0, Vec::new())).collect();
+
     let mut oracle_calls: u64 = 0;
     let mut k: u64 = 0;
     loop {
-        let blocks = rng.subset(n, tau);
+        rng.subset_into(n, tau, &mut blocks);
         // Compute all block updates at the frozen iterate ...
-        let mut updates = Vec::with_capacity(tau);
-        for &i in &blocks {
-            let g = problem.block_grad(&param, i);
+        for (slot, &i) in updates.iter_mut().zip(blocks.iter()) {
+            problem.block_grad_into(&param, i, &mut g);
             let li = problem.block_lipschitz(i).max(1e-12);
             let range = problem.block_range(i);
-            let mut xi: Vec<f32> = param[range.clone()].to_vec();
+            let (slot_range, xi) = slot;
+            *slot_range = range.clone();
+            xi.clear();
+            xi.extend_from_slice(&param[range]);
             for (x, gv) in xi.iter_mut().zip(g.iter()) {
                 *x -= (*gv as f64 / li) as f32;
             }
-            problem.project_block(i, &mut xi);
-            updates.push((range, xi));
+            problem.project_block(i, xi);
             oracle_calls += 1;
         }
         // ... then apply them (synchronous parallel semantics).
-        for (range, xi) in updates {
-            param[range].copy_from_slice(&xi);
+        for (range, xi) in &updates {
+            param[range.clone()].copy_from_slice(xi);
         }
         k += 1;
         // No FW gap here; report 0 increment so the estimate stays inf and

@@ -1,51 +1,37 @@
 //! Dense vector primitives used on the coordinator hot path.
 //!
 //! These are the L3 inner loops (update application is `axpy` over block
-//! slices; gap/line-search terms are `dot`s). Kept free of bounds checks in
-//! the core loops via iterator zips; the §Perf pass benchmarks these.
+//! slices; gap/line-search terms are `dot`s). Since the §Perf vectorization
+//! pass they are thin re-exports of [`crate::util::simd`], which serves
+//! 8-lane AVX2+FMA kernels (runtime-detected) with a portable chunked
+//! fallback; the original scalar loops survive as `simd::*_scalar` for the
+//! equivalence tests and old-vs-new bench rows. Numbers in
+//! EXPERIMENTS.md §Perf.
+
+use super::simd;
 
 /// y += a * x
 #[inline]
 pub fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
-    debug_assert_eq!(x.len(), y.len());
-    for (yi, xi) in y.iter_mut().zip(x.iter()) {
-        *yi += a * *xi;
-    }
+    simd::axpy(a, x, y)
 }
 
 /// y = (1 - a) * y + a * x   (convex combination, FW block update)
 #[inline]
 pub fn lerp_into(a: f32, x: &[f32], y: &mut [f32]) {
-    debug_assert_eq!(x.len(), y.len());
-    let b = 1.0 - a;
-    for (yi, xi) in y.iter_mut().zip(x.iter()) {
-        *yi = b * *yi + a * *xi;
-    }
+    simd::lerp_into(a, x, y)
 }
 
-/// <x, y> accumulated in f64 for stability.
-///
-/// §Perf note: a 4-way unrolled variant was tried and showed no gain on
-/// this host (the f32->f64 convert chain, not the add latency, bounds it);
-/// reverted to the simple loop — see EXPERIMENTS.md §Perf.
+/// <x, y> accumulated in f64 for stability (8-way pairwise partials).
 #[inline]
 pub fn dot(x: &[f32], y: &[f32]) -> f64 {
-    debug_assert_eq!(x.len(), y.len());
-    let mut acc = 0.0f64;
-    for (xi, yi) in x.iter().zip(y.iter()) {
-        acc += (*xi as f64) * (*yi as f64);
-    }
-    acc
+    simd::dot(x, y)
 }
 
 /// ||x||_2^2 in f64.
 #[inline]
 pub fn norm2_sq(x: &[f32]) -> f64 {
-    let mut acc = 0.0f64;
-    for xi in x {
-        acc += (*xi as f64) * (*xi as f64);
-    }
-    acc
+    simd::norm2_sq(x)
 }
 
 /// ||x||_2.
@@ -57,9 +43,7 @@ pub fn norm2(x: &[f32]) -> f64 {
 /// x scaled in place.
 #[inline]
 pub fn scale(a: f32, x: &mut [f32]) {
-    for xi in x {
-        *xi *= a;
-    }
+    simd::scale(a, x)
 }
 
 /// Euclidean projection of `x` onto the l2 ball of radius `r` (in place).

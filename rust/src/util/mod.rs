@@ -7,4 +7,5 @@ pub mod la;
 pub mod metrics;
 pub mod proptest;
 pub mod rng;
+pub mod simd;
 pub mod stats;

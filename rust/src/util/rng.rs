@@ -132,14 +132,23 @@ impl Pcg64 {
 
     /// A uniformly random size-`tau` subset of [0, n) (partial Fisher-Yates).
     pub fn subset(&mut self, n: usize, tau: usize) -> Vec<usize> {
+        let mut out = Vec::new();
+        self.subset_into(n, tau, &mut out);
+        out
+    }
+
+    /// [`Self::subset`] into a caller-owned buffer (identical sampling
+    /// sequence, no allocation in steady state — the buffer keeps capacity
+    /// n across calls). On return `out` holds exactly the tau samples.
+    pub fn subset_into(&mut self, n: usize, tau: usize, out: &mut Vec<usize>) {
         assert!(tau <= n);
-        let mut idx: Vec<usize> = (0..n).collect();
+        out.clear();
+        out.extend(0..n);
         for i in 0..tau {
             let j = i + self.below(n - i);
-            idx.swap(i, j);
+            out.swap(i, j);
         }
-        idx.truncate(tau);
-        idx
+        out.truncate(tau);
     }
 
     /// Sample a standard-normal f32 vector.

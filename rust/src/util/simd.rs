@@ -1,0 +1,480 @@
+//! Vectorized L3 kernels with runtime CPU-feature dispatch.
+//!
+//! Every dense primitive on the coordinator hot path (`axpy`, `lerp_into`,
+//! `dot`, `norm2_sq`, `scale`) is served from here in one of three forms:
+//!
+//! - **AVX2+FMA** (`x86_64`, detected once at runtime via
+//!   `is_x86_feature_detected!`): 8 f32 lanes per step; reductions convert
+//!   to f64 lanes and fuse with FMA, so `dot`/`norm2_sq` accumulate in
+//!   8 parallel f64 partials.
+//! - **Chunked portable fallback**: the same 8-lane shape written as plain
+//!   slice code the autovectorizer handles on any target, with the same
+//!   8-partial f64 accumulation.
+//! - **Scalar reference** (`*_scalar`): the original single-accumulator
+//!   loops, kept public as the ground truth for the equivalence property
+//!   tests and the old-vs-new rows in `benches/hot_paths.rs`.
+//!
+//! Accumulation-order note: the vector forms sum reductions pairwise over
+//! 8 f64 partials, so `dot`/`norm2_sq` are not bit-identical to the scalar
+//! reference — they are at least as accurate (pairwise summation has lower
+//! worst-case error) and the property tests pin them within ULP-scale
+//! tolerance. Element-wise kernels (`axpy`, `lerp_into`, `scale`) differ
+//! from scalar only by FMA contraction on the AVX2 path.
+//!
+//! Perf numbers for every kernel are tracked in EXPERIMENTS.md §Perf via
+//! `benches/hot_paths.rs` -> `BENCH_hotpaths.json`.
+
+// Fixed-width indexed loops in the chunked kernels are deliberate:
+// `chunks_exact` + constant bounds is the shape LLVM reliably vectorizes.
+#![allow(clippy::needless_range_loop)]
+
+/// Width (f32 lanes) of one vector step; also the number of f64 partial
+/// accumulators used by reductions.
+pub const LANES: usize = 8;
+
+#[cfg(target_arch = "x86_64")]
+fn have_avx2_fma() -> bool {
+    use std::sync::atomic::{AtomicU8, Ordering};
+    // 0 = unknown, 1 = absent, 2 = present. The cpuid probe is cheap but
+    // not free; the hot loops call this per operation.
+    static CACHE: AtomicU8 = AtomicU8::new(0);
+    match CACHE.load(Ordering::Relaxed) {
+        2 => true,
+        1 => false,
+        _ => {
+            let yes = is_x86_feature_detected!("avx2")
+                && is_x86_feature_detected!("fma");
+            CACHE.store(if yes { 2 } else { 1 }, Ordering::Relaxed);
+            yes
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Public dispatching entry points
+// ---------------------------------------------------------------------------
+
+/// y += a * x
+#[inline]
+pub fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    #[cfg(target_arch = "x86_64")]
+    if have_avx2_fma() {
+        // SAFETY: AVX2+FMA presence checked above.
+        unsafe { avx2::axpy(a, x, y) };
+        return;
+    }
+    axpy_chunked(a, x, y)
+}
+
+/// y = (1 - a) * y + a * x
+#[inline]
+pub fn lerp_into(a: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    #[cfg(target_arch = "x86_64")]
+    if have_avx2_fma() {
+        // SAFETY: AVX2+FMA presence checked above.
+        unsafe { avx2::lerp_into(a, x, y) };
+        return;
+    }
+    lerp_into_chunked(a, x, y)
+}
+
+/// <x, y> accumulated in f64.
+#[inline]
+pub fn dot(x: &[f32], y: &[f32]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    #[cfg(target_arch = "x86_64")]
+    if have_avx2_fma() {
+        // SAFETY: AVX2+FMA presence checked above.
+        return unsafe { avx2::dot(x, y) };
+    }
+    dot_chunked(x, y)
+}
+
+/// ||x||^2 accumulated in f64.
+#[inline]
+pub fn norm2_sq(x: &[f32]) -> f64 {
+    #[cfg(target_arch = "x86_64")]
+    if have_avx2_fma() {
+        // SAFETY: AVX2+FMA presence checked above.
+        return unsafe { avx2::norm2_sq(x) };
+    }
+    norm2_sq_chunked(x)
+}
+
+/// x *= a
+#[inline]
+pub fn scale(a: f32, x: &mut [f32]) {
+    #[cfg(target_arch = "x86_64")]
+    if have_avx2_fma() {
+        // SAFETY: AVX2+FMA presence checked above.
+        unsafe { avx2::scale(a, x) };
+        return;
+    }
+    scale_chunked(a, x)
+}
+
+// ---------------------------------------------------------------------------
+// Scalar references (the pre-vectorization kernels, verbatim)
+// ---------------------------------------------------------------------------
+
+/// Reference y += a * x (single accumulator order).
+pub fn axpy_scalar(a: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x.iter()) {
+        *yi += a * *xi;
+    }
+}
+
+/// Reference y = (1-a) y + a x.
+pub fn lerp_into_scalar(a: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    let b = 1.0 - a;
+    for (yi, xi) in y.iter_mut().zip(x.iter()) {
+        *yi = b * *yi + a * *xi;
+    }
+}
+
+/// Reference <x, y> with one sequential f64 accumulator.
+pub fn dot_scalar(x: &[f32], y: &[f32]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    let mut acc = 0.0f64;
+    for (xi, yi) in x.iter().zip(y.iter()) {
+        acc += (*xi as f64) * (*yi as f64);
+    }
+    acc
+}
+
+/// Reference ||x||^2 with one sequential f64 accumulator.
+pub fn norm2_sq_scalar(x: &[f32]) -> f64 {
+    let mut acc = 0.0f64;
+    for xi in x {
+        acc += (*xi as f64) * (*xi as f64);
+    }
+    acc
+}
+
+/// Reference x *= a.
+pub fn scale_scalar(a: f32, x: &mut [f32]) {
+    for xi in x {
+        *xi *= a;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Portable chunked fallback (8-lane shape, autovectorizer-friendly)
+//
+// The fixed-width indexed loops are deliberate: `chunks_exact` + constant
+// bounds is the shape LLVM reliably vectorizes.
+// ---------------------------------------------------------------------------
+
+/// Pairwise-combine 8 f64 partial sums (fixed reduction tree).
+#[inline]
+fn reduce8(acc: [f64; LANES]) -> f64 {
+    ((acc[0] + acc[1]) + (acc[2] + acc[3]))
+        + ((acc[4] + acc[5]) + (acc[6] + acc[7]))
+}
+
+fn axpy_chunked(a: f32, x: &[f32], y: &mut [f32]) {
+    let mut xc = x.chunks_exact(LANES);
+    let mut yc = y.chunks_exact_mut(LANES);
+    for (xs, ys) in (&mut xc).zip(&mut yc) {
+        for k in 0..LANES {
+            ys[k] += a * xs[k];
+        }
+    }
+    for (xi, yi) in xc.remainder().iter().zip(yc.into_remainder()) {
+        *yi += a * *xi;
+    }
+}
+
+fn lerp_into_chunked(a: f32, x: &[f32], y: &mut [f32]) {
+    let b = 1.0 - a;
+    let mut xc = x.chunks_exact(LANES);
+    let mut yc = y.chunks_exact_mut(LANES);
+    for (xs, ys) in (&mut xc).zip(&mut yc) {
+        for k in 0..LANES {
+            ys[k] = b * ys[k] + a * xs[k];
+        }
+    }
+    for (xi, yi) in xc.remainder().iter().zip(yc.into_remainder()) {
+        *yi = b * *yi + a * *xi;
+    }
+}
+
+/// Chunked dot with 8 f64 partials (public: the non-x86 production path,
+/// and the cross-check target for the AVX2 path in tests).
+pub fn dot_chunked(x: &[f32], y: &[f32]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    let mut acc = [0.0f64; LANES];
+    let mut xc = x.chunks_exact(LANES);
+    let mut yc = y.chunks_exact(LANES);
+    for (xs, ys) in (&mut xc).zip(&mut yc) {
+        for k in 0..LANES {
+            acc[k] += xs[k] as f64 * ys[k] as f64;
+        }
+    }
+    let mut tail = 0.0f64;
+    for (xi, yi) in xc.remainder().iter().zip(yc.remainder()) {
+        tail += *xi as f64 * *yi as f64;
+    }
+    reduce8(acc) + tail
+}
+
+/// Chunked squared norm with 8 f64 partials.
+pub fn norm2_sq_chunked(x: &[f32]) -> f64 {
+    let mut acc = [0.0f64; LANES];
+    let mut xc = x.chunks_exact(LANES);
+    for xs in &mut xc {
+        for k in 0..LANES {
+            acc[k] += xs[k] as f64 * xs[k] as f64;
+        }
+    }
+    let mut tail = 0.0f64;
+    for xi in xc.remainder() {
+        tail += *xi as f64 * *xi as f64;
+    }
+    reduce8(acc) + tail
+}
+
+fn scale_chunked(a: f32, x: &mut [f32]) {
+    let mut xc = x.chunks_exact_mut(LANES);
+    for xs in &mut xc {
+        for k in 0..LANES {
+            xs[k] *= a;
+        }
+    }
+    for xi in xc.into_remainder() {
+        *xi *= a;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// AVX2 + FMA path
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use super::LANES;
+    use std::arch::x86_64::*;
+
+    /// # Safety
+    /// Caller must have verified AVX2 and FMA support.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
+        let n = x.len().min(y.len());
+        let va = _mm256_set1_ps(a);
+        let mut i = 0usize;
+        while i + LANES <= n {
+            let vx = _mm256_loadu_ps(x.as_ptr().add(i));
+            let vy = _mm256_loadu_ps(y.as_ptr().add(i));
+            _mm256_storeu_ps(
+                y.as_mut_ptr().add(i),
+                _mm256_fmadd_ps(va, vx, vy),
+            );
+            i += LANES;
+        }
+        while i < n {
+            y[i] += a * x[i];
+            i += 1;
+        }
+    }
+
+    /// # Safety
+    /// Caller must have verified AVX2 and FMA support.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn lerp_into(a: f32, x: &[f32], y: &mut [f32]) {
+        let n = x.len().min(y.len());
+        let b = 1.0 - a;
+        let va = _mm256_set1_ps(a);
+        let vb = _mm256_set1_ps(b);
+        let mut i = 0usize;
+        while i + LANES <= n {
+            let vx = _mm256_loadu_ps(x.as_ptr().add(i));
+            let vy = _mm256_loadu_ps(y.as_ptr().add(i));
+            // b*y + a*x, with the a*x product fused into the add.
+            let ax = _mm256_mul_ps(va, vx);
+            _mm256_storeu_ps(
+                y.as_mut_ptr().add(i),
+                _mm256_fmadd_ps(vb, vy, ax),
+            );
+            i += LANES;
+        }
+        while i < n {
+            y[i] = b * y[i] + a * x[i];
+            i += 1;
+        }
+    }
+
+    /// Widen the two 4-lane halves of an 8-lane f32 vector to f64.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn widen(v: __m256) -> (__m256d, __m256d) {
+        let lo = _mm256_cvtps_pd(_mm256_castps256_ps128(v));
+        let hi = _mm256_cvtps_pd(_mm256_extractf128_ps::<1>(v));
+        (lo, hi)
+    }
+
+    /// # Safety
+    /// Caller must have verified AVX2 and FMA support.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn dot(x: &[f32], y: &[f32]) -> f64 {
+        let n = x.len().min(y.len());
+        let mut acc_lo = _mm256_setzero_pd();
+        let mut acc_hi = _mm256_setzero_pd();
+        let mut i = 0usize;
+        while i + LANES <= n {
+            let vx = _mm256_loadu_ps(x.as_ptr().add(i));
+            let vy = _mm256_loadu_ps(y.as_ptr().add(i));
+            let (xlo, xhi) = widen(vx);
+            let (ylo, yhi) = widen(vy);
+            acc_lo = _mm256_fmadd_pd(xlo, ylo, acc_lo);
+            acc_hi = _mm256_fmadd_pd(xhi, yhi, acc_hi);
+            i += LANES;
+        }
+        let mut buf = [0.0f64; 4];
+        _mm256_storeu_pd(buf.as_mut_ptr(), _mm256_add_pd(acc_lo, acc_hi));
+        let mut acc = (buf[0] + buf[1]) + (buf[2] + buf[3]);
+        while i < n {
+            acc += x[i] as f64 * y[i] as f64;
+            i += 1;
+        }
+        acc
+    }
+
+    /// # Safety
+    /// Caller must have verified AVX2 and FMA support.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn norm2_sq(x: &[f32]) -> f64 {
+        let n = x.len();
+        let mut acc_lo = _mm256_setzero_pd();
+        let mut acc_hi = _mm256_setzero_pd();
+        let mut i = 0usize;
+        while i + LANES <= n {
+            let vx = _mm256_loadu_ps(x.as_ptr().add(i));
+            let (xlo, xhi) = widen(vx);
+            acc_lo = _mm256_fmadd_pd(xlo, xlo, acc_lo);
+            acc_hi = _mm256_fmadd_pd(xhi, xhi, acc_hi);
+            i += LANES;
+        }
+        let mut buf = [0.0f64; 4];
+        _mm256_storeu_pd(buf.as_mut_ptr(), _mm256_add_pd(acc_lo, acc_hi));
+        let mut acc = (buf[0] + buf[1]) + (buf[2] + buf[3]);
+        while i < n {
+            acc += x[i] as f64 * x[i] as f64;
+            i += 1;
+        }
+        acc
+    }
+
+    /// # Safety
+    /// Caller must have verified AVX2 and FMA support.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn scale(a: f32, x: &mut [f32]) {
+        let n = x.len();
+        let va = _mm256_set1_ps(a);
+        let mut i = 0usize;
+        while i + LANES <= n {
+            let vx = _mm256_loadu_ps(x.as_ptr().add(i));
+            _mm256_storeu_ps(x.as_mut_ptr().add(i), _mm256_mul_ps(va, vx));
+            i += LANES;
+        }
+        while i < n {
+            x[i] *= a;
+            i += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn close(a: f64, b: f64, tol: f64) -> bool {
+        (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs()))
+    }
+
+    #[test]
+    fn dispatch_matches_scalar_across_sizes() {
+        let mut rng = Pcg64::seeded(11);
+        for n in (0..=64).chain([100, 1000, 4003, 4096]) {
+            let x = rng.gaussian_vec(n);
+            let y0 = rng.gaussian_vec(n);
+
+            // dot / norm2_sq: pairwise vs sequential within f64 ULP scale.
+            assert!(
+                close(dot(&x, &y0), dot_scalar(&x, &y0), 1e-12),
+                "dot n={n}"
+            );
+            assert!(
+                close(norm2_sq(&x), norm2_sq_scalar(&x), 1e-12),
+                "norm2 n={n}"
+            );
+            assert!(
+                close(dot_chunked(&x, &y0), dot_scalar(&x, &y0), 1e-12),
+                "dot_chunked n={n}"
+            );
+
+            // axpy / lerp / scale: elementwise, FMA contraction only.
+            let mut ya = y0.clone();
+            let mut yb = y0.clone();
+            axpy(0.37, &x, &mut ya);
+            axpy_scalar(0.37, &x, &mut yb);
+            for (a, b) in ya.iter().zip(&yb) {
+                assert!(
+                    ((a - b) as f64).abs() <= 1e-6 * (1.0 + (*b as f64).abs()),
+                    "axpy n={n}: {a} vs {b}"
+                );
+            }
+
+            let mut la = y0.clone();
+            let mut lb = y0.clone();
+            lerp_into(0.25, &x, &mut la);
+            lerp_into_scalar(0.25, &x, &mut lb);
+            for (a, b) in la.iter().zip(&lb) {
+                assert!(
+                    ((a - b) as f64).abs() <= 1e-6 * (1.0 + (*b as f64).abs()),
+                    "lerp n={n}"
+                );
+            }
+
+            let mut sa = y0.clone();
+            let mut sb = y0.clone();
+            scale(-1.5, &mut sa);
+            scale_scalar(-1.5, &mut sb);
+            assert_eq!(sa, sb, "scale is exact (single multiply) n={n}");
+        }
+    }
+
+    #[test]
+    fn empty_inputs_are_noops() {
+        assert_eq!(dot(&[], &[]), 0.0);
+        assert_eq!(norm2_sq(&[]), 0.0);
+        let mut y: Vec<f32> = vec![];
+        axpy(2.0, &[], &mut y);
+        lerp_into(0.5, &[], &mut y);
+        scale(3.0, &mut y);
+        assert!(y.is_empty());
+    }
+
+    #[test]
+    fn exact_small_cases() {
+        // Values where every intermediate is exactly representable: all
+        // paths must agree bit-for-bit.
+        let x = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0, 9.0];
+        let mut y = [10.0f32; 9];
+        axpy(2.0, &x, &mut y);
+        assert_eq!(
+            y,
+            [12.0, 14.0, 16.0, 18.0, 20.0, 22.0, 24.0, 26.0, 28.0]
+        );
+        assert_eq!(dot(&x, &x), 285.0);
+        assert_eq!(norm2_sq(&x), 285.0);
+        let mut z = [0.0f32, 0.0, 4.0, 0.0, 0.0, 0.0, 0.0, 0.0, 8.0];
+        lerp_into(0.25, &x[..9], &mut z);
+        assert_eq!(z[0], 0.25);
+        assert_eq!(z[2], 3.75);
+        assert_eq!(z[8], 8.25);
+    }
+}

@@ -1,0 +1,212 @@
+//! Hot-path equivalence properties (§Perf acceptance):
+//!
+//! 1. `Problem::oracle_into` must be BIT-IDENTICAL to `Problem::oracle`
+//!    for all four problems, including when the output slot is dirty from
+//!    a previous (different-block) solve — buffer reuse must not leak.
+//! 2. The SIMD-dispatched kernels must match the scalar references within
+//!    ULP-scale tolerance across sizes 0..64 and large random vectors
+//!    (reductions re-associate; elementwise ops differ only by FMA).
+
+use apbcfw::data::{mixture, ocr_like, signal};
+use apbcfw::problems::gfl::Gfl;
+use apbcfw::problems::simplex_qp::SimplexQp;
+use apbcfw::problems::ssvm::chain::ChainSsvm;
+use apbcfw::problems::ssvm::multiclass::MulticlassSsvm;
+use apbcfw::problems::{BlockOracle, Problem};
+use apbcfw::util::la;
+use apbcfw::util::proptest::check;
+use apbcfw::util::simd;
+use std::sync::Arc;
+
+/// Assert two oracles are identical to the bit.
+fn assert_oracle_bits_eq(a: &BlockOracle, b: &BlockOracle, ctx: &str) {
+    assert_eq!(a.block, b.block, "{ctx}: block");
+    assert_eq!(a.ls.to_bits(), b.ls.to_bits(), "{ctx}: ls");
+    assert_eq!(a.s.len(), b.s.len(), "{ctx}: payload length");
+    for (j, (x, y)) in a.s.iter().zip(b.s.iter()).enumerate() {
+        assert_eq!(
+            x.to_bits(),
+            y.to_bits(),
+            "{ctx}: payload[{j}] {x} vs {y}"
+        );
+    }
+}
+
+/// Drive `oracle` vs `oracle_into` over random params/blocks, reusing one
+/// dirty slot throughout to exercise buffer reuse.
+fn check_problem_equivalence<P: Problem>(p: &P, cases: usize, seed: u64) {
+    let mut slot = BlockOracle::empty();
+    check(cases, seed, |g| {
+        let dim = p.param_dim();
+        let param = g.gaussian_vec(dim);
+        let block = g.usize_in(0, p.num_blocks() - 1);
+        let reference = p.oracle(&param, block);
+        p.oracle_into(&param, block, &mut slot);
+        assert_oracle_bits_eq(&slot, &reference, p.name());
+    });
+}
+
+#[test]
+fn gfl_oracle_into_is_bit_identical() {
+    let sig = signal::piecewise_constant(7, 41, 5, 2.0, 0.5, 11);
+    let gfl = Gfl::new(7, 41, 0.25, sig.noisy.clone());
+    check_problem_equivalence(&gfl, 100, 301);
+}
+
+#[test]
+fn gfl_oracle_into_handles_zero_gradient() {
+    // All-zero observations give a zero gradient column at u = 0: the
+    // zero-norm branch must also match bit-for-bit.
+    let gfl = Gfl::new(3, 5, 0.5, vec![0.0; 15]);
+    let u = gfl.init_param();
+    let mut slot = BlockOracle::empty();
+    for t in 0..gfl.m {
+        let reference = gfl.oracle(&u, t);
+        gfl.oracle_into(&u, t, &mut slot);
+        assert_oracle_bits_eq(&slot, &reference, "gfl-zero");
+    }
+}
+
+#[test]
+fn simplex_qp_oracle_into_is_bit_identical() {
+    let qp = SimplexQp::random(12, 5, 1.0, 0.4, 3, 17);
+    check_problem_equivalence(&qp, 100, 302);
+}
+
+#[test]
+fn chain_ssvm_oracle_into_is_bit_identical() {
+    let data = Arc::new(ocr_like::generate(20, 5, 9, 6, 0.15, 23));
+    let chain = ChainSsvm::new(data, 0.1);
+    check_problem_equivalence(&chain, 60, 303);
+}
+
+#[test]
+fn multiclass_ssvm_oracle_into_is_bit_identical() {
+    let data = Arc::new(mixture::generate(40, 6, 11, 0.2, 29));
+    let mc = MulticlassSsvm::new(data, 0.05);
+    check_problem_equivalence(&mc, 100, 304);
+}
+
+#[test]
+fn oracle_into_slot_reuse_is_stateless() {
+    // Filling the same slot with different blocks in sequence must give
+    // the same answers as fresh slots (no state bleeds through the buffer).
+    let sig = signal::piecewise_constant(6, 30, 4, 2.0, 0.5, 31);
+    let gfl = Gfl::new(6, 30, 0.2, sig.noisy.clone());
+    let u = gfl.init_param();
+    let mut reused = BlockOracle::empty();
+    for pass in 0..3 {
+        for t in 0..gfl.m {
+            gfl.oracle_into(&u, t, &mut reused);
+            let fresh = gfl.oracle(&u, t);
+            assert_oracle_bits_eq(&reused, &fresh, "reuse");
+        }
+        let _ = pass;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SIMD kernel vs scalar reference
+// ---------------------------------------------------------------------------
+
+fn rel_close(a: f64, b: f64, tol: f64) -> bool {
+    (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs()))
+}
+
+#[test]
+fn simd_reductions_match_scalar_small_sizes() {
+    check(200, 401, |g| {
+        let n = g.usize_in(0, 64);
+        let x = g.gaussian_vec(n);
+        let y = g.gaussian_vec(n);
+        assert!(
+            rel_close(la::dot(&x, &y), simd::dot_scalar(&x, &y), 1e-12),
+            "dot n={n}"
+        );
+        assert!(
+            rel_close(la::norm2_sq(&x), simd::norm2_sq_scalar(&x), 1e-12),
+            "norm2_sq n={n}"
+        );
+    });
+}
+
+#[test]
+fn simd_reductions_match_scalar_large_vectors() {
+    check(20, 402, |g| {
+        let n = g.usize_in(1000, 8192);
+        let x = g.gaussian_vec(n);
+        let y = g.gaussian_vec(n);
+        // Pairwise vs sequential summation: difference is bounded by the
+        // summation error, far below 1e-10 relative at these sizes.
+        assert!(
+            rel_close(la::dot(&x, &y), simd::dot_scalar(&x, &y), 1e-10),
+            "dot n={n}"
+        );
+        assert!(
+            rel_close(la::norm2_sq(&x), simd::norm2_sq_scalar(&x), 1e-10),
+            "norm2_sq n={n}"
+        );
+    });
+}
+
+#[test]
+fn simd_elementwise_match_scalar_within_fma_ulp() {
+    check(100, 403, |g| {
+        let n = g.usize_in(0, 64);
+        let a = g.f32_in(-2.0, 2.0);
+        let x = g.gaussian_vec(n);
+        let y0 = g.gaussian_vec(n);
+
+        let mut ys = y0.clone();
+        let mut yv = y0.clone();
+        simd::axpy_scalar(a, &x, &mut ys);
+        la::axpy(a, &x, &mut yv);
+        for (j, (s, v)) in ys.iter().zip(yv.iter()).enumerate() {
+            let d = (*s as f64 - *v as f64).abs();
+            assert!(
+                d <= 1e-6 * (1.0 + (*s as f64).abs()),
+                "axpy n={n} j={j}: {s} vs {v}"
+            );
+        }
+
+        let mut ls = y0.clone();
+        let mut lv = y0.clone();
+        let t = g.f32_in(0.0, 1.0);
+        simd::lerp_into_scalar(t, &x, &mut ls);
+        la::lerp_into(t, &x, &mut lv);
+        for (j, (s, v)) in ls.iter().zip(lv.iter()).enumerate() {
+            let d = (*s as f64 - *v as f64).abs();
+            assert!(
+                d <= 1e-6 * (1.0 + (*s as f64).abs()),
+                "lerp n={n} j={j}: {s} vs {v}"
+            );
+        }
+
+        let mut ss = y0.clone();
+        let mut sv = y0;
+        simd::scale_scalar(a, &mut ss);
+        la::scale(a, &mut sv);
+        assert_eq!(ss, sv, "scale n={n} (single multiply is exact)");
+    });
+}
+
+#[test]
+fn chunked_fallback_matches_scalar() {
+    // The portable path is the production kernel on non-x86 targets; pin
+    // it against the scalar reference independently of dispatch.
+    check(100, 404, |g| {
+        let n = g.usize_in(0, 200);
+        let x = g.gaussian_vec(n);
+        let y = g.gaussian_vec(n);
+        assert!(rel_close(
+            simd::dot_chunked(&x, &y),
+            simd::dot_scalar(&x, &y),
+            1e-12
+        ));
+        assert!(rel_close(
+            simd::norm2_sq_chunked(&x),
+            simd::norm2_sq_scalar(&x),
+            1e-12
+        ));
+    });
+}

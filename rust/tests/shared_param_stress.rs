@@ -1,0 +1,181 @@
+//! Concurrency stress for the wide-word [`SharedParam`]:
+//!
+//! - Torn mode, odd (non-u64-aligned) length: concurrent whole-vector
+//!   publishers + readers must never produce a value that was not written
+//!   by *some* publisher — lanes may mix iterations (paper §2.3) but a
+//!   word-packed store must never corrupt a lane.
+//! - Concurrent `publish_range` writers over adjacent ranges sharing a
+//!   boundary word must not clobber each other's lanes.
+//! - Consistent mode: readers must NEVER observe a torn snapshot (every
+//!   element from the same publish).
+
+use apbcfw::coordinator::shared::{SharedParam, SnapshotMode};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+#[test]
+fn torn_mode_odd_length_values_never_corrupt() {
+    // Publishers write constant vectors (value = publisher id + 1); any
+    // element a reader sees must be 0 (init) or one of those constants.
+    let len = 33; // odd: exercises the half-used tail word
+    let init = vec![0.0f32; len];
+    let sp = Arc::new(SharedParam::new(&init));
+    let stop = Arc::new(AtomicBool::new(false));
+    let mut writer_handles = Vec::new();
+    for wid in 0..3u32 {
+        let sp = Arc::clone(&sp);
+        let stop = Arc::clone(&stop);
+        writer_handles.push(std::thread::spawn(move || {
+            let vals = vec![(wid + 1) as f32; len];
+            let mut v = 0u64;
+            while !stop.load(Ordering::Relaxed) {
+                v += 1;
+                sp.publish(&vals, v);
+            }
+        }));
+    }
+    let mut reader_handles = Vec::new();
+    for _ in 0..4 {
+        let sp = Arc::clone(&sp);
+        reader_handles.push(std::thread::spawn(move || {
+            let mut buf = Vec::new();
+            for _ in 0..20_000 {
+                sp.read(&mut buf);
+                assert_eq!(buf.len(), len);
+                for (i, &x) in buf.iter().enumerate() {
+                    assert!(
+                        x == 0.0 || x == 1.0 || x == 2.0 || x == 3.0,
+                        "corrupt lane value {x} at {i}"
+                    );
+                }
+            }
+        }));
+    }
+    for r in reader_handles {
+        r.join().unwrap();
+    }
+    stop.store(true, Ordering::Relaxed);
+    for w in writer_handles {
+        w.join().unwrap();
+    }
+}
+
+#[test]
+fn concurrent_range_publishers_do_not_clobber_neighbor_lanes() {
+    // Two writers own adjacent odd-length ranges [0, 5) and [5, 9): the
+    // boundary element pair (4, 5) shares one u64 word. After any number
+    // of concurrent publishes, each element must hold its own writer's
+    // value exactly.
+    let len = 9;
+    let init = vec![0.0f32; len];
+    let sp = Arc::new(SharedParam::new(&init));
+    let mut handles = Vec::new();
+    for (lo, hi, base) in [(0usize, 5usize, 100.0f32), (5, 9, 200.0)] {
+        let sp = Arc::clone(&sp);
+        handles.push(std::thread::spawn(move || {
+            let vals: Vec<f32> =
+                (lo..hi).map(|i| base + i as f32).collect();
+            for _ in 0..50_000 {
+                sp.publish_range(lo, &vals);
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let v = sp.read_vec();
+    for (i, &x) in v.iter().enumerate() {
+        let expect = if i < 5 { 100.0 + i as f32 } else { 200.0 + i as f32 };
+        assert_eq!(x, expect, "element {i}");
+    }
+}
+
+#[test]
+fn concurrent_fetch_add_across_lane_pairs_is_exact() {
+    // Hogwild updates on an odd-length vector: every lane (both halves of
+    // interior words and the lone tail lane) must sum exactly.
+    let len = 5;
+    let init = vec![0.0f32; len];
+    let sp = Arc::new(SharedParam::new(&init));
+    let mut handles = Vec::new();
+    for t in 0..10usize {
+        let sp = Arc::clone(&sp);
+        handles.push(std::thread::spawn(move || {
+            for _ in 0..8_000 {
+                sp.fetch_add_f32(t % len, 1.0);
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let v = sp.read_vec();
+    // 10 threads round-robin over 5 indices: 2 threads per index.
+    for (i, &x) in v.iter().enumerate() {
+        assert_eq!(x, 16_000.0, "element {i}");
+    }
+}
+
+#[test]
+fn consistent_mode_never_observes_torn_snapshot() {
+    // Publishers write uniform vectors; under Consistent mode every
+    // snapshot must be uniform (all elements from one publish).
+    let len = 33; // odd again
+    let init = vec![0.0f32; len];
+    let sp = Arc::new(SharedParam::with_mode(&init, SnapshotMode::Consistent));
+    let stop = Arc::new(AtomicBool::new(false));
+    let mut writer_handles = Vec::new();
+    for wid in 0..2u32 {
+        let sp = Arc::clone(&sp);
+        let stop = Arc::clone(&stop);
+        writer_handles.push(std::thread::spawn(move || {
+            let mut v = 0u64;
+            while !stop.load(Ordering::Relaxed) {
+                v += 1;
+                let val = (wid * 1_000_000 + (v % 1_000) as u32) as f32;
+                let vals = vec![val; len];
+                sp.publish(&vals, v);
+            }
+        }));
+    }
+    let mut reader_handles = Vec::new();
+    for _ in 0..4 {
+        let sp = Arc::clone(&sp);
+        reader_handles.push(std::thread::spawn(move || {
+            let mut buf = Vec::new();
+            for _ in 0..10_000 {
+                sp.read(&mut buf);
+                assert_eq!(buf.len(), len);
+                let first = buf[0];
+                assert!(
+                    buf.iter().all(|&x| x == first),
+                    "torn consistent snapshot: {buf:?}"
+                );
+            }
+        }));
+    }
+    for r in reader_handles {
+        r.join().unwrap();
+    }
+    stop.store(true, Ordering::Relaxed);
+    for w in writer_handles {
+        w.join().unwrap();
+    }
+}
+
+#[test]
+fn torn_mode_version_gated_snapshot_reuse_pattern() {
+    // The worker pattern: re-read only on version change. Interleave
+    // publishes and reads and verify the version counter orders them.
+    let sp = SharedParam::new(&[1.0, 2.0, 3.0]);
+    let mut snap = Vec::new();
+    let mut seen = sp.version();
+    sp.read(&mut snap);
+    assert_eq!(snap, vec![1.0, 2.0, 3.0]);
+    sp.publish(&[4.0, 5.0, 6.0], seen + 1);
+    assert!(sp.version() > seen);
+    seen = sp.version();
+    sp.read(&mut snap);
+    assert_eq!(snap, vec![4.0, 5.0, 6.0]);
+    assert_eq!(sp.version(), seen);
+}
