@@ -8,10 +8,10 @@
 
 use apbcfw::data::signal;
 use apbcfw::problems::gfl::Gfl;
-use apbcfw::solver::{minibatch, SolveOptions, StopCond};
+use apbcfw::run::{Engine, Runner, RunSpec};
 use apbcfw::util::la;
 
-fn main() {
+fn main() -> anyhow::Result<()> {
     let (d, n) = (10, 120);
     let sig = signal::piecewise_constant(d, n, 6, 3.0, 0.8, 7);
 
@@ -19,22 +19,14 @@ fn main() {
     println!("lambda    dual f     primal P   rec.MSE   change-points");
     for &lam in &[0.5, 1.0, 2.0, 4.0, 8.0, 12.0] {
         let p = Gfl::new(d, n, lam, sig.noisy.clone());
-        let r = minibatch::solve(
-            &p,
-            &SolveOptions {
-                tau: 8,
-                line_search: true,
-                sample_every: 64,
-                exact_gap: false,
-                stop: StopCond {
-                    max_epochs: 1500.0,
-                    max_secs: 30.0,
-                    ..Default::default()
-                },
-                seed: 3,
-                ..Default::default()
-            },
-        );
+        let spec = RunSpec::new(Engine::sequential())
+            .tau(8)
+            .line_search(true)
+            .sample_every(64)
+            .max_epochs(1500.0)
+            .max_secs(30.0)
+            .seed(3);
+        let r = Runner::new(spec)?.solve_problem(&p)?;
         let x = p.primal_signal(&r.raw_param);
         let mse = x
             .iter()
@@ -71,4 +63,5 @@ fn main() {
             .sum::<f64>()
             / (d * n) as f64
     );
+    Ok(())
 }

@@ -1,18 +1,37 @@
-//! Quickstart: solve a Group Fused Lasso instance with AP-BCFW in three
-//! execution modes and print convergence summaries.
+//! Quickstart: solve a Group Fused Lasso instance through the unified
+//! `run` API — one `RunSpec` per execution engine, one `Report` shape
+//! back, and a live `Observer` watching convergence while the async solve
+//! runs.
 //!
 //! ```bash
 //! cargo run --release --example quickstart
 //! ```
 
-use apbcfw::coordinator::{apbcfw as coord, RunConfig};
 use apbcfw::data::signal;
 use apbcfw::problems::gfl::Gfl;
 use apbcfw::problems::Problem;
-use apbcfw::sim::straggler::StragglerModel;
-use apbcfw::solver::{minibatch, SolveOptions, StopCond};
+use apbcfw::run::{Engine, Observer, Runner, RunSpec};
+use apbcfw::util::metrics::Sample;
 
-fn main() {
+/// A minimal live observer: prints every 4th convergence sample as the
+/// server records it (a dashboard would stream these instead).
+struct LivePrinter {
+    seen: usize,
+}
+
+impl Observer for LivePrinter {
+    fn on_sample(&mut self, s: &Sample) {
+        if self.seen % 4 == 0 {
+            println!(
+                "  [live] iter={:<6} f={:+.5} gap={:.2e} t={:.2}s",
+                s.iter, s.objective, s.gap, s.elapsed_s
+            );
+        }
+        self.seen += 1;
+    }
+}
+
+fn main() -> anyhow::Result<()> {
     // 1. A piecewise-constant signal with shared change points + noise.
     let (d, n, lam) = (10, 100, 1.0);
     let sig = signal::piecewise_constant(d, n, 6, 2.0, 0.5, 42);
@@ -32,63 +51,56 @@ fn main() {
     );
 
     // 3. Sequential BCFW (tau = 1) — the Lacoste-Julien et al. baseline.
-    let r_seq = minibatch::solve(
-        &problem,
-        &SolveOptions {
-            tau: 1,
-            line_search: true,
-            sample_every: 32,
-            exact_gap: true,
-            stop: StopCond {
-                eps_gap: Some(1e-2),
-                max_epochs: 2000.0,
-                max_secs: 60.0,
-                ..Default::default()
-            },
-            seed: 1,
-            ..Default::default()
-        },
-    );
-    let last = r_seq.trace.last().unwrap();
+    //    Engine-specific knobs live in the Engine; shared knobs on the
+    //    spec builder.
+    let seq_spec = RunSpec::new(Engine::sequential())
+        .tau(1)
+        .line_search(true)
+        .sample_every(32)
+        .exact_gap(true)
+        .eps_gap(1e-2)
+        .max_epochs(2000.0)
+        .max_secs(60.0)
+        .seed(1);
+    let r_seq = Runner::new(seq_spec)?.solve_problem(&problem)?;
+    let last = r_seq.last().unwrap();
     println!(
         "BCFW (tau=1):      f={:.5} gap={:.2e} after {:.1} epochs, {:.2}s",
         last.objective,
         last.gap,
-        last.oracle_calls as f64 / problem.num_blocks() as f64,
+        r_seq.epochs(problem.num_blocks()),
         last.elapsed_s
     );
 
-    // 4. AP-BCFW: asynchronous workers + minibatch server (tau = 8, T = 4).
-    let r_async = coord::run(
-        &problem,
-        &RunConfig {
-            workers: 4,
-            tau: 8,
-            line_search: true,
-            straggler: StragglerModel::none(4),
-            sample_every: 16,
-            exact_gap: true,
-            stop: StopCond {
-                eps_gap: Some(1e-2),
-                max_epochs: 20_000.0,
-                max_secs: 60.0,
-                ..Default::default()
-            },
-            seed: 2,
-            ..Default::default()
-        },
-    );
-    let last = r_async.trace.last().unwrap();
+    // 4. AP-BCFW: asynchronous workers + minibatch server (tau = 8,
+    //    T = 4), with a live observer streaming samples mid-solve.
+    let async_spec = RunSpec::new(Engine::asynchronous(4))
+        .tau(8)
+        .line_search(true)
+        .sample_every(16)
+        .exact_gap(true)
+        .eps_gap(1e-2)
+        .max_epochs(20_000.0)
+        .max_secs(60.0)
+        .seed(2);
+    println!("AP-BCFW (T=4,tau=8) running with a live observer:");
+    let mut live = LivePrinter { seen: 0 };
+    let r_async =
+        Runner::new(async_spec)?.solve_problem_observed(&problem, &mut live)?;
+    let last = r_async.last().unwrap();
     println!(
         "AP-BCFW (T=4,tau=8): f={:.5} gap={:.2e} in {} server iters, {:.2}s",
-        last.objective, last.gap, last.iter, last.elapsed_s
+        last.objective,
+        last.gap,
+        r_async.iterations(),
+        last.elapsed_s
     );
     println!(
         "  counters: {} oracle calls, {} applied, {} collisions, {} dropped",
-        r_async.counters.oracle_calls,
+        r_async.oracle_calls(),
         r_async.counters.updates_applied,
         r_async.counters.collisions,
-        r_async.counters.dropped
+        r_async.dropped()
     );
 
     // 5. Recover the denoised signal from the dual iterate.
@@ -105,4 +117,5 @@ fn main() {
         mse(&sig.noisy),
         mse(&x)
     );
+    Ok(())
 }

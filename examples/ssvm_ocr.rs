@@ -10,17 +10,15 @@
 //! make artifacts && cargo run --release --example ssvm_ocr
 //! ```
 
-use apbcfw::coordinator::{apbcfw as coord, RunConfig};
 use apbcfw::data::ocr_like::{self, ChainDataset};
 use apbcfw::problems::ssvm::chain::ChainSsvm;
 use apbcfw::problems::Problem;
+use apbcfw::run::{Engine, Runner, RunSpec};
 use apbcfw::runtime::service;
 use apbcfw::runtime::xla_backends::XlaChainDecoder;
-use apbcfw::sim::straggler::StragglerModel;
-use apbcfw::solver::StopCond;
 use std::sync::Arc;
 
-fn main() {
+fn main() -> anyhow::Result<()> {
     // OCR-like task: K=26 letters, 128 pixels/letter, length-9 words
     // (the artifact shapes exported by python/compile/aot.py defaults).
     let (n_train, n_test, k, d, ell) = (1000usize, 200usize, 26, 128, 9);
@@ -80,24 +78,16 @@ fn main() {
         .unwrap_or(4);
     let mut total_secs = 0.0;
     for &budget in &[1.0f64, 2.0, 4.0, 8.0, 16.0] {
-        let cfg = RunConfig {
-            workers,
-            tau: 2 * workers,
-            line_search: true,
-            straggler: StragglerModel::none(workers),
-            sample_every: 32,
-            exact_gap: false,
-            stop: StopCond {
-                max_epochs: budget,
-                max_secs: 300.0,
-                ..Default::default()
-            },
-            seed: 7,
-            ..Default::default()
-        };
-        let r = coord::run(&train_problem, &cfg);
+        let spec = RunSpec::new(Engine::asynchronous(workers))
+            .tau(2 * workers)
+            .line_search(true)
+            .sample_every(32)
+            .max_epochs(budget)
+            .max_secs(300.0)
+            .seed(7);
+        let r = Runner::new(spec)?.solve_problem(&train_problem)?;
         total_secs += r.elapsed_s;
-        let last = r.trace.last().unwrap();
+        let last = r.last().unwrap();
         println!(
             "epoch budget {budget:>4}: dual f = {:>10.6} | est.gap = {:>9.2e} | train err {:.3} | test err {:.3} | {:>5.1}s | {} iters, {} oracle calls, {} collisions",
             last.objective,
@@ -105,10 +95,11 @@ fn main() {
             train_problem.hamming_error(&r.param, &train_idx),
             eval_problem.hamming_error(&r.param, &test_idx),
             r.elapsed_s,
-            r.counters.iterations,
-            r.counters.oracle_calls,
+            r.iterations(),
+            r.oracle_calls(),
             r.counters.collisions,
         );
     }
     println!("total training time across budgets: {total_secs:.1}s (T={workers})");
+    Ok(())
 }

@@ -6,14 +6,12 @@
 //! cargo run --release --example straggler_robustness
 //! ```
 
-use apbcfw::coordinator::{apbcfw as coord, sync, RunConfig};
 use apbcfw::data::ocr_like;
 use apbcfw::problems::ssvm::chain::ChainSsvm;
-use apbcfw::sim::straggler::StragglerModel;
-use apbcfw::solver::StopCond;
+use apbcfw::run::{Engine, Runner, RunSpec, StragglerSpec};
 use std::sync::Arc;
 
-fn main() {
+fn main() -> anyhow::Result<()> {
     let data = Arc::new(ocr_like::generate(200, 26, 128, 9, 0.15, 99));
     let problem = ChainSsvm::new(data, 1.0);
     let workers = 4;
@@ -23,23 +21,21 @@ fn main() {
     println!("{:<12} {:>14} {:>14}", "straggler", "async s/pass", "sync s/pass");
     let mut base: Option<(f64, f64)> = None;
     for &p in &[1.0, 0.25, 0.1] {
-        let cfg = |s: StragglerModel| RunConfig {
-            workers,
-            tau: workers,
-            line_search: true,
-            straggler: s,
-            sample_every: 64,
-            exact_gap: false,
-            stop: StopCond {
-                max_epochs: passes,
-                max_secs: 120.0,
-                ..Default::default()
-            },
-            seed: 5,
-            ..Default::default()
+        // Same knobs, two engines; the straggler model's arity is derived
+        // from the engine's worker count by the spec builder.
+        let spec = |engine: Engine| {
+            RunSpec::new(engine.with_straggler(StragglerSpec::Single { p }))
+                .tau(workers)
+                .line_search(true)
+                .sample_every(64)
+                .max_epochs(passes)
+                .max_secs(120.0)
+                .seed(5)
         };
-        let ra = coord::run(&problem, &cfg(StragglerModel::single(workers, p)));
-        let rs = sync::run(&problem, &cfg(StragglerModel::single(workers, p)));
+        let ra = Runner::new(spec(Engine::asynchronous(workers)))?
+            .solve_problem(&problem)?;
+        let rs = Runner::new(spec(Engine::synchronous(workers)))?
+            .solve_problem(&problem)?;
         if base.is_none() {
             base = Some((ra.secs_per_pass, rs.secs_per_pass));
         }
@@ -55,4 +51,5 @@ fn main() {
     println!(
         "\nasync tracks the *average* worker speed; sync is gated on the slowest\n(paper Fig 3a; on a single-core container the contrast is attenuated\nbecause dropped async solves also consume the shared CPU)."
     );
+    Ok(())
 }

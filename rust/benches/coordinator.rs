@@ -3,12 +3,12 @@
 
 mod bench_util;
 
-use apbcfw::coordinator::{apbcfw as coord, lockfree, sync, RunConfig};
+use apbcfw::coordinator::{apbcfw as coord, lockfree, sync};
 use apbcfw::data::signal;
 use apbcfw::problems::gfl::Gfl;
 use apbcfw::problems::{ApplyOptions, Problem};
-use apbcfw::sim::straggler::StragglerModel;
-use apbcfw::solver::{minibatch, SolveOptions, StopCond};
+use apbcfw::run::{Engine, RunSpec};
+use apbcfw::solver::minibatch;
 use bench_util::bench;
 
 fn gfl() -> Gfl {
@@ -45,37 +45,26 @@ fn main() {
     }
 
     // throughput: oracle calls per second per mode, fixed 1.0s budget
-    let budget = StopCond {
-        max_epochs: f64::INFINITY,
-        max_secs: 1.0,
-        ..Default::default()
+    let throughput_spec = |engine: Engine, seed: u64| {
+        RunSpec::new(engine)
+            .tau(8)
+            .sample_every(1 << 20)
+            .max_epochs(f64::INFINITY)
+            .max_secs(1.0)
+            .seed(seed)
     };
     let seq = minibatch::solve(
         &p,
-        &SolveOptions {
-            tau: 8,
-            sample_every: 1 << 20,
-            exact_gap: false,
-            stop: budget,
-            seed: 1,
-            ..Default::default()
-        },
+        &throughput_spec(Engine::Seq, 1).solve_options(),
     );
     println!(
         "mode=sequential   tau=8          {:>10.0} oracle calls/s",
         seq.oracle_calls as f64 / seq.elapsed_s
     );
     for workers in [1usize, 2, 4] {
-        let cfg = RunConfig {
-            workers,
-            tau: 8,
-            straggler: StragglerModel::none(workers),
-            sample_every: 1 << 20,
-            exact_gap: false,
-            stop: budget,
-            seed: 2,
-            ..Default::default()
-        };
+        let cfg = throughput_spec(Engine::asynchronous(workers), 2)
+            .run_config()
+            .unwrap();
         let r = coord::run(&p, &cfg);
         println!(
             "mode=async        tau=8 T={workers}      {:>10.0} oracle calls/s ({} applied, {} collisions)",
@@ -84,22 +73,22 @@ fn main() {
             r.counters.collisions,
         );
     }
-    let cfg = RunConfig {
-        workers: 4,
-        tau: 8,
-        straggler: StragglerModel::none(4),
-        sample_every: 1 << 20,
-        exact_gap: false,
-        stop: budget,
-        seed: 3,
-        ..Default::default()
-    };
-    let r = sync::run(&p, &cfg);
+    let r = sync::run(
+        &p,
+        &throughput_spec(Engine::synchronous(4), 3)
+            .run_config()
+            .unwrap(),
+    );
     println!(
         "mode=sync         tau=8 T=4      {:>10.0} oracle calls/s",
         r.counters.oracle_calls as f64 / r.elapsed_s
     );
-    let r = lockfree::run(&p, &cfg);
+    let r = lockfree::run(
+        &p,
+        &throughput_spec(Engine::lockfree(4), 3)
+            .run_config()
+            .unwrap(),
+    );
     println!(
         "mode=lockfree     tau=1 T=4      {:>10.0} oracle calls/s",
         r.counters.oracle_calls as f64 / r.elapsed_s

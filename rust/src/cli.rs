@@ -4,13 +4,23 @@
 //!
 //! ```text
 //! apbcfw exp <id|all> [--config FILE] [--set sect.key=val ...]
-//! apbcfw solve <gfl|ssvm|multiclass|qp> [--mode seq|async|sync|lockfree]
-//!        [--tau N] [--workers N] [--epochs F] [--line-search]
+//! apbcfw solve <gfl|ssvm|multiclass|qp>
+//!        [--mode seq|batch|delayed|pbcd|async|sync|lockfree]
+//!        [--tau N] [--workers N] [--epochs F] [--seed N] [--line-search]
+//!        [--straggler none|single:P|hetero:T|p1,p2,..]
+//!        [--snapshot-mode torn|consistent] [--queue-factor N]
 //!        [--config FILE] [--set sect.key=val ...]
 //! apbcfw artifacts-check [--dir DIR]
 //! apbcfw info
 //! ```
+//!
+//! Every solve flag is sugar for a `--set run.<key>=<value>` override: the
+//! launcher builds a [`crate::run::RunSpec`] from the layered config, so
+//! flags, `--config` files and `--set` all reach the same knobs (and knobs
+//! without dedicated flags — `run.weighted_averaging`, `run.delay`,
+//! `run.work_multiplier`, ... — are always reachable through `--set`).
 
+use crate::run::{ENGINE_NAMES, PROBLEM_NAMES};
 use crate::util::config::Config;
 use anyhow::{anyhow, bail, Result};
 
@@ -19,15 +29,8 @@ use anyhow::{anyhow, bail, Result};
 pub enum Command {
     /// Run a paper experiment by id.
     Exp { id: String },
-    /// Run a single solve and print a summary.
-    Solve {
-        problem: String,
-        mode: String,
-        tau: usize,
-        workers: usize,
-        epochs: f64,
-        line_search: bool,
-    },
+    /// Run a single solve (spec in the layered config) and print a summary.
+    Solve { problem: String },
     /// Load and compile every artifact in the manifest.
     ArtifactsCheck { dir: String },
     /// Print build/environment info.
@@ -42,6 +45,18 @@ pub struct Cli {
     pub command: Command,
     pub config: Config,
 }
+
+/// Solve flags that lower to `run.*` config keys.
+const SOLVE_FLAG_KEYS: &[(&str, &str)] = &[
+    ("mode", "run.mode"),
+    ("tau", "run.tau"),
+    ("workers", "run.workers"),
+    ("epochs", "run.epochs"),
+    ("seed", "run.seed"),
+    ("straggler", "run.straggler"),
+    ("snapshot-mode", "run.snapshot_mode"),
+    ("queue-factor", "run.queue_factor"),
+];
 
 /// Parse argv (excluding the binary name).
 pub fn parse(args: &[String]) -> Result<Cli> {
@@ -65,7 +80,8 @@ pub fn parse(args: &[String]) -> Result<Cli> {
             let takes_value = matches!(
                 name,
                 "config" | "set" | "dir" | "mode" | "tau" | "workers"
-                    | "epochs"
+                    | "epochs" | "seed" | "straggler" | "snapshot-mode"
+                    | "queue-factor"
             );
             if takes_value {
                 let v = rest
@@ -120,33 +136,54 @@ pub fn parse(args: &[String]) -> Result<Cli> {
                 .first()
                 .ok_or_else(|| anyhow!("solve: missing problem name"))?
                 .to_string();
-            if !["gfl", "ssvm", "multiclass", "qp"].contains(&problem.as_str())
+            if !PROBLEM_NAMES.contains(&problem.as_str()) {
+                bail!(
+                    "solve: unknown problem {problem:?} \
+                     (registered: {PROBLEM_NAMES:?})"
+                );
+            }
+            if let Some(mode) = flag_val("mode") {
+                if !ENGINE_NAMES.contains(&mode) {
+                    bail!(
+                        "solve: unknown mode {mode:?} \
+                         (engines: {ENGINE_NAMES:?})"
+                    );
+                }
+            }
+            // Lower convenience flags onto the unified run.* keys; flags
+            // are sugar for --set, applied after it so the explicit flag
+            // wins over a conflicting --set of the same key. Numeric flags
+            // are validated here so a typo gets the CLI's clean error
+            // instead of a panic in the typed config accessors.
+            for (flag, key) in SOLVE_FLAG_KEYS {
+                if let Some(v) = flag_val(flag) {
+                    let ok = match *flag {
+                        "tau" | "workers" | "queue-factor" => {
+                            v.parse::<usize>().is_ok()
+                        }
+                        "seed" => v.parse::<u64>().is_ok(),
+                        "epochs" => v.parse::<f64>().is_ok(),
+                        _ => true,
+                    };
+                    if !ok {
+                        bail!("--{flag}: invalid value {v:?}");
+                    }
+                    config.set(key, v);
+                }
+            }
+            if has_flag("line-search") {
+                config.set("run.line_search", "true");
+            }
+            // Historical launcher defaults, unless the user already chose.
+            if config.get("run.epochs").is_none()
+                && config.get("run.max_epochs").is_none()
             {
-                bail!("solve: unknown problem {problem:?}");
+                config.set("run.epochs", "50");
             }
-            let mode =
-                flag_val("mode").unwrap_or("seq").to_string();
-            if !["seq", "async", "sync", "lockfree"].contains(&mode.as_str())
-            {
-                bail!("solve: unknown mode {mode:?}");
+            if config.get("run.max_secs").is_none() {
+                config.set("run.max_secs", "300");
             }
-            Command::Solve {
-                problem,
-                mode,
-                tau: flag_val("tau")
-                    .map(|v| v.parse())
-                    .transpose()?
-                    .unwrap_or(1),
-                workers: flag_val("workers")
-                    .map(|v| v.parse())
-                    .transpose()?
-                    .unwrap_or(2),
-                epochs: flag_val("epochs")
-                    .map(|v| v.parse())
-                    .transpose()?
-                    .unwrap_or(50.0),
-                line_search: has_flag("line-search"),
-            }
+            Command::Solve { problem }
         }
         "artifacts-check" => Command::ArtifactsCheck {
             dir: flag_val("dir").unwrap_or("artifacts").to_string(),
@@ -166,8 +203,15 @@ USAGE:
   apbcfw exp <id|all> [--config FILE] [--set sect.key=val ...]
       ids: fig1a fig1b fig2a fig2b fig2c fig2d fig3a fig3b fig4 fig5
            ex1 ex2 d4 prop1
-  apbcfw solve <gfl|ssvm|multiclass|qp> [--mode seq|async|sync|lockfree]
-         [--tau N] [--workers N] [--epochs F] [--line-search]
+  apbcfw solve <gfl|ssvm|multiclass|qp>
+         [--mode seq|batch|delayed|pbcd|async|sync|lockfree]
+         [--tau N] [--workers N] [--epochs F] [--seed N] [--line-search]
+         [--straggler none|single:P|hetero:T|p1,p2,..]
+         [--snapshot-mode torn|consistent] [--queue-factor N]
+         [--config FILE] [--set sect.key=val ...]
+      every flag is sugar for --set run.<key>=<val>; further knobs
+      (run.delay, run.weighted_averaging, run.work_multiplier, run.eps_gap,
+      ...) are reachable through --set / --config only.
   apbcfw artifacts-check [--dir DIR]
   apbcfw info
 ";
@@ -192,7 +236,7 @@ mod tests {
     }
 
     #[test]
-    fn parses_solve_with_flags() {
+    fn solve_flags_lower_to_run_keys() {
         let cli = parse(&sv(&[
             "solve",
             "gfl",
@@ -202,26 +246,57 @@ mod tests {
             "8",
             "--workers",
             "4",
+            "--seed",
+            "11",
+            "--straggler",
+            "single:0.25",
+            "--snapshot-mode",
+            "consistent",
+            "--queue-factor",
+            "16",
             "--line-search",
         ]))
         .unwrap();
-        match cli.command {
+        assert_eq!(
+            cli.command,
             Command::Solve {
-                problem,
-                mode,
-                tau,
-                workers,
-                line_search,
-                ..
-            } => {
-                assert_eq!(problem, "gfl");
-                assert_eq!(mode, "async");
-                assert_eq!(tau, 8);
-                assert_eq!(workers, 4);
-                assert!(line_search);
+                problem: "gfl".into()
             }
-            other => panic!("{other:?}"),
-        }
+        );
+        let c = &cli.config;
+        assert_eq!(c.get("run.mode"), Some("async"));
+        assert_eq!(c.get_usize("run.tau", 0), 8);
+        assert_eq!(c.get_usize("run.workers", 0), 4);
+        assert_eq!(c.get_u64("run.seed", 0), 11);
+        assert_eq!(c.get("run.straggler"), Some("single:0.25"));
+        assert_eq!(c.get("run.snapshot_mode"), Some("consistent"));
+        assert_eq!(c.get_usize("run.queue_factor", 0), 16);
+        assert!(c.get_bool("run.line_search", false));
+    }
+
+    #[test]
+    fn solve_parses_into_a_valid_run_spec() {
+        // The full path the launcher takes: flags -> config -> RunSpec.
+        let cli = parse(&sv(&[
+            "solve", "qp", "--mode", "delayed", "--tau", "2", "--set",
+            "run.delay=poisson:5",
+        ]))
+        .unwrap();
+        let spec = crate::run::RunSpec::from_config(&cli.config).unwrap();
+        assert_eq!(spec.engine.name(), "delayed");
+        assert_eq!(spec.tau, 2);
+        // CLI default budget applied.
+        assert_eq!(spec.stop.max_epochs, 50.0);
+        assert_eq!(spec.stop.max_secs, 300.0);
+    }
+
+    #[test]
+    fn flag_beats_set_for_same_key() {
+        let cli = parse(&sv(&[
+            "solve", "gfl", "--set", "run.tau=3", "--tau", "9",
+        ]))
+        .unwrap();
+        assert_eq!(cli.config.get_usize("run.tau", 0), 9);
     }
 
     #[test]
@@ -235,10 +310,43 @@ mod tests {
     }
 
     #[test]
-    fn rejects_unknown_command_and_problem() {
+    fn explicit_budget_not_overridden_by_defaults() {
+        let cli = parse(&sv(&[
+            "solve", "gfl", "--set", "run.max_epochs=7",
+        ]))
+        .unwrap();
+        let spec = crate::run::RunSpec::from_config(&cli.config).unwrap();
+        assert_eq!(spec.stop.max_epochs, 7.0);
+    }
+
+    #[test]
+    fn rejects_unknown_command_problem_and_mode() {
         assert!(parse(&sv(&["frobnicate"])).is_err());
         assert!(parse(&sv(&["solve", "nosuch"])).is_err());
         assert!(parse(&sv(&["solve", "gfl", "--mode", "warp"])).is_err());
+    }
+
+    #[test]
+    fn rejects_non_numeric_flag_values_cleanly() {
+        // A clean Err (not a panic in the config accessors), matching the
+        // legacy parser's behaviour.
+        for args in [
+            ["solve", "gfl", "--tau", "abc"],
+            ["solve", "gfl", "--workers", "two"],
+            ["solve", "gfl", "--epochs", "lots"],
+            ["solve", "gfl", "--seed", "-1"],
+            ["solve", "gfl", "--queue-factor", "4x"],
+        ] {
+            assert!(parse(&sv(&args)).is_err(), "{args:?}");
+        }
+    }
+
+    #[test]
+    fn new_modes_accepted() {
+        for mode in ["batch", "delayed", "pbcd"] {
+            let cli = parse(&sv(&["solve", "gfl", "--mode", mode])).unwrap();
+            assert_eq!(cli.config.get("run.mode"), Some(mode));
+        }
     }
 
     #[test]

@@ -21,6 +21,7 @@ use super::buffer::BatchAssembler;
 use super::shared::SharedParam;
 use super::{RunConfig, RunResult, UpdateMsg};
 use crate::problems::{ApplyOptions, BlockOracle, Problem};
+use crate::run::Observer;
 use crate::solver::{schedule_gamma, WeightedAverage};
 use crate::util::metrics::{Counters, Sample, Stopwatch, Trace};
 use crate::util::rng::Pcg64;
@@ -30,6 +31,16 @@ use std::time::Duration;
 
 /// Run asynchronous AP-BCFW with `cfg.workers` worker threads.
 pub fn run<P: Problem>(problem: &P, cfg: &RunConfig) -> RunResult {
+    run_observed(problem, cfg, &mut ())
+}
+
+/// Run asynchronous AP-BCFW, streaming live events to `obs` from the
+/// server thread (workers never touch the observer).
+pub fn run_observed<P: Problem>(
+    problem: &P,
+    cfg: &RunConfig,
+    obs: &mut dyn Observer,
+) -> RunResult {
     assert_eq!(
         cfg.straggler.probs.len(),
         cfg.workers,
@@ -205,6 +216,7 @@ pub fn run<P: Problem>(problem: &P, cfg: &RunConfig) -> RunResult {
                 }
                 Counters::add(&counters.updates_applied, tau as u64);
                 counters.iterations.store(k, Ordering::Relaxed);
+                obs.on_apply(k, info.gamma, info.batch_gap);
                 if let Some(a) = &mut avg {
                     a.update(&master, problem.aux(&state));
                 }
@@ -231,13 +243,15 @@ pub fn run<P: Problem>(problem: &P, cfg: &RunConfig) -> RunResult {
                         gap_estimate
                     };
                     let snap = counters.snapshot();
-                    trace.push(Sample {
+                    let sample = Sample {
                         iter: k as usize,
                         oracle_calls: snap.oracle_calls,
                         elapsed_s: watch.elapsed_s(),
                         objective,
                         gap,
-                    });
+                    };
+                    obs.on_sample(&sample);
+                    trace.push(sample);
                     let epochs = snap.oracle_calls as f64 / n as f64;
                     if cfg.stop.target_met(objective, gap)
                         || cfg.stop.exhausted(epochs, watch.elapsed_s())
@@ -285,20 +299,27 @@ pub fn run<P: Problem>(problem: &P, cfg: &RunConfig) -> RunResult {
     } else {
         gap_estimate
     };
-    trace.push(Sample {
+    let sample = Sample {
         iter: k as usize,
         oracle_calls: snap.oracle_calls,
         elapsed_s,
         objective,
         gap,
-    });
+    };
+    obs.on_sample(&sample);
+    trace.push(sample);
 
+    let (param, raw_param) = match avg {
+        Some(a) => (a.param, master),
+        None => {
+            let raw = master.clone();
+            (master, raw)
+        }
+    };
     RunResult {
         trace,
-        param: match avg {
-            Some(a) => a.param,
-            None => master,
-        },
+        param,
+        raw_param,
         counters: snap,
         elapsed_s,
         secs_per_pass,
@@ -309,6 +330,7 @@ pub fn run<P: Problem>(problem: &P, cfg: &RunConfig) -> RunResult {
 mod tests {
     use super::*;
     use crate::problems::gfl::Gfl;
+    use crate::run::{Engine, RunSpec};
     use crate::sim::straggler::StragglerModel;
     use crate::solver::StopCond;
     use crate::util::rng::Pcg64;
@@ -321,21 +343,16 @@ mod tests {
     }
 
     fn cfg(workers: usize, tau: usize) -> RunConfig {
-        RunConfig {
-            workers,
-            tau,
-            straggler: StragglerModel::none(workers),
-            sample_every: 16,
-            exact_gap: true,
-            stop: StopCond {
-                eps_gap: Some(0.05),
-                max_epochs: 5000.0,
-                max_secs: 30.0,
-                ..Default::default()
-            },
-            seed: 5,
-            ..Default::default()
-        }
+        RunSpec::new(Engine::asynchronous(workers))
+            .tau(tau)
+            .sample_every(16)
+            .exact_gap(true)
+            .eps_gap(0.05)
+            .max_epochs(5000.0)
+            .max_secs(30.0)
+            .seed(5)
+            .run_config()
+            .unwrap()
     }
 
     #[test]

@@ -10,12 +10,27 @@
 use super::shared::SharedParam;
 use super::{RunConfig, RunResult};
 use crate::problems::{BlockOracle, ProjectableProblem};
+use crate::run::Observer;
 use crate::util::metrics::{Counters, Sample, Stopwatch, Trace};
 use crate::util::rng::Pcg64;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 
 /// Run the lock-free variant. `cfg.tau` is ignored (always 1).
 pub fn run<P>(problem: &P, cfg: &RunConfig) -> RunResult
+where
+    P: ProjectableProblem<ServerState = ()>,
+{
+    run_observed(problem, cfg, &mut ())
+}
+
+/// Run the lock-free variant, streaming live sample events to `obs` from
+/// the monitor thread. Updates land from worker threads without a server
+/// step, so no `on_apply` events are emitted.
+pub fn run_observed<P>(
+    problem: &P,
+    cfg: &RunConfig,
+    obs: &mut dyn Observer,
+) -> RunResult
 where
     P: ProjectableProblem<ServerState = ()>,
 {
@@ -83,13 +98,15 @@ where
                     f64::NAN
                 };
                 let snap = counters.snapshot();
-                trace.push(Sample {
+                let sample = Sample {
                     iter: k as usize,
                     oracle_calls: snap.oracle_calls,
                     elapsed_s: watch.elapsed_s(),
                     objective,
                     gap,
-                });
+                };
+                obs.on_sample(&sample);
+                trace.push(sample);
                 let epochs = snap.oracle_calls as f64 / n as f64;
                 if cfg.stop.target_met(objective, gap)
                     || cfg.stop.exhausted(epochs, watch.elapsed_s())
@@ -120,16 +137,19 @@ where
     let param = shared.read_vec();
     let objective = problem.objective_from(&param, 0.0);
     let gap = problem.full_gap(&(), &param);
-    trace.push(Sample {
+    let sample = Sample {
         iter: snap.iterations as usize,
         oracle_calls: snap.oracle_calls,
         elapsed_s,
         objective,
         gap,
-    });
+    };
+    obs.on_sample(&sample);
+    trace.push(sample);
 
     RunResult {
         trace,
+        raw_param: param.clone(),
         param,
         counters: snap,
         elapsed_s,
@@ -141,8 +161,7 @@ where
 mod tests {
     use super::*;
     use crate::problems::gfl::Gfl;
-    use crate::sim::straggler::StragglerModel;
-    use crate::solver::StopCond;
+    use crate::run::{Engine, RunSpec};
     use crate::util::rng::Pcg64;
 
     fn gfl_instance() -> Gfl {
@@ -153,21 +172,15 @@ mod tests {
     }
 
     fn cfg(workers: usize) -> RunConfig {
-        RunConfig {
-            workers,
-            tau: 1,
-            straggler: StragglerModel::none(workers),
-            sample_every: 64,
-            exact_gap: true,
-            stop: StopCond {
-                eps_gap: Some(0.1),
-                max_epochs: 5000.0,
-                max_secs: 30.0,
-                ..Default::default()
-            },
-            seed: 9,
-            ..Default::default()
-        }
+        RunSpec::new(Engine::lockfree(workers))
+            .sample_every(64)
+            .exact_gap(true)
+            .eps_gap(0.1)
+            .max_epochs(5000.0)
+            .max_secs(30.0)
+            .seed(9)
+            .run_config()
+            .unwrap()
     }
 
     #[test]

@@ -7,6 +7,13 @@
 //! - [`apbcfw`]: the asynchronous server/worker runtime (Algorithms 1-2).
 //! - [`sync`]: SP-BCFW, the synchronous comparator of §3.3.
 //! - [`lockfree`]: the tau = 1 serverless variant (Algorithm 3).
+//!
+//! These are the threaded engine implementations behind the unified
+//! [`crate::run::Runner`] API — prefer launching them through a
+//! [`crate::run::RunSpec`], which lowers to the [`RunConfig`] consumed
+//! here. Each engine exposes a `run` entry point plus a `run_observed`
+//! variant that streams live [`crate::run::Observer`] events from the
+//! server/monitor thread.
 
 pub mod apbcfw;
 pub mod buffer;
@@ -26,7 +33,16 @@ pub struct UpdateMsg {
 }
 
 /// Configuration of the threaded coordinator runs.
-#[derive(Debug, Clone)]
+///
+/// Production call sites never build this directly: a
+/// [`crate::run::RunSpec`] lowers to it via `RunSpec::run_config`, which
+/// also derives the straggler model's arity from `workers` (the
+/// `Default` below pairs `workers: 2` with `StragglerModel::none(2)`, but
+/// a struct-update override of `workers` alone would desynchronize them —
+/// the spec builder makes that unrepresentable). Direct construction is
+/// reserved for `rust/src/run/` and the equivalence tests that pin the
+/// lowering.
+#[derive(Debug, Clone, PartialEq)]
 pub struct RunConfig {
     /// Number of worker threads T.
     pub workers: usize,
@@ -88,7 +104,10 @@ impl Default for RunConfig {
 /// Outcome of a threaded run.
 pub struct RunResult {
     pub trace: crate::util::metrics::Trace,
+    /// The reported iterate (the weighted average when averaging was on).
     pub param: Vec<f32>,
+    /// The final raw (non-averaged) master iterate.
+    pub raw_param: Vec<f32>,
     pub counters: crate::util::metrics::CounterSnapshot,
     pub elapsed_s: f64,
     /// Wall-clock seconds per effective data pass (n applied updates).

@@ -9,6 +9,7 @@
 use super::shared::SharedParam;
 use super::{RunConfig, RunResult};
 use crate::problems::{ApplyOptions, BlockOracle, Problem};
+use crate::run::Observer;
 use crate::solver::schedule_gamma;
 use crate::util::metrics::{Counters, Sample, Stopwatch, Trace};
 use crate::util::rng::Pcg64;
@@ -22,6 +23,16 @@ enum Assignment {
 
 /// Run synchronous SP-BCFW.
 pub fn run<P: Problem>(problem: &P, cfg: &RunConfig) -> RunResult {
+    run_observed(problem, cfg, &mut ())
+}
+
+/// Run synchronous SP-BCFW, streaming live events to `obs` from the
+/// server thread.
+pub fn run_observed<P: Problem>(
+    problem: &P,
+    cfg: &RunConfig,
+    obs: &mut dyn Observer,
+) -> RunResult {
     assert_eq!(cfg.straggler.probs.len(), cfg.workers);
     let n = problem.num_blocks();
     let tau = cfg.tau.clamp(1, n);
@@ -140,6 +151,7 @@ pub fn run<P: Problem>(problem: &P, cfg: &RunConfig) -> RunResult {
             );
             k += 1;
             shared.publish(&master, k);
+            obs.on_apply(k, info.gamma, info.batch_gap);
             Counters::add(&counters.updates_applied, batch.len() as u64);
             // Recycle applied payload buffers back to the workers.
             if let Ok(mut p) = oracle_pool.try_lock() {
@@ -168,13 +180,15 @@ pub fn run<P: Problem>(problem: &P, cfg: &RunConfig) -> RunResult {
                     gap_estimate
                 };
                 let snap = counters.snapshot();
-                trace.push(Sample {
+                let sample = Sample {
                     iter: k as usize,
                     oracle_calls: snap.oracle_calls,
                     elapsed_s: watch.elapsed_s(),
                     objective,
                     gap,
-                });
+                };
+                obs.on_sample(&sample);
+                trace.push(sample);
                 let epochs = snap.oracle_calls as f64 / n as f64;
                 if cfg.stop.target_met(objective, gap)
                     || cfg.stop.exhausted(epochs, watch.elapsed_s())
@@ -211,16 +225,19 @@ pub fn run<P: Problem>(problem: &P, cfg: &RunConfig) -> RunResult {
     } else {
         gap_estimate
     };
-    trace.push(Sample {
+    let sample = Sample {
         iter: k as usize,
         oracle_calls: snap.oracle_calls,
         elapsed_s,
         objective,
         gap,
-    });
+    };
+    obs.on_sample(&sample);
+    trace.push(sample);
 
     RunResult {
         trace,
+        raw_param: master.clone(),
         param: master,
         counters: snap,
         elapsed_s,
@@ -232,8 +249,8 @@ pub fn run<P: Problem>(problem: &P, cfg: &RunConfig) -> RunResult {
 mod tests {
     use super::*;
     use crate::problems::gfl::Gfl;
+    use crate::run::{Engine, RunSpec};
     use crate::sim::straggler::StragglerModel;
-    use crate::solver::StopCond;
     use crate::util::rng::Pcg64;
 
     fn gfl_instance() -> Gfl {
@@ -244,21 +261,16 @@ mod tests {
     }
 
     fn cfg(workers: usize, tau: usize) -> RunConfig {
-        RunConfig {
-            workers,
-            tau,
-            straggler: StragglerModel::none(workers),
-            sample_every: 16,
-            exact_gap: true,
-            stop: StopCond {
-                eps_gap: Some(0.05),
-                max_epochs: 5000.0,
-                max_secs: 30.0,
-                ..Default::default()
-            },
-            seed: 6,
-            ..Default::default()
-        }
+        RunSpec::new(Engine::synchronous(workers))
+            .tau(tau)
+            .sample_every(16)
+            .exact_gap(true)
+            .eps_gap(0.05)
+            .max_epochs(5000.0)
+            .max_secs(30.0)
+            .seed(6)
+            .run_config()
+            .unwrap()
     }
 
     #[test]

@@ -8,13 +8,10 @@
 //! one design decision at a time.
 
 use super::print_table;
-use crate::coordinator::{apbcfw, RunConfig};
 use crate::data::signal;
 use crate::problems::gfl::Gfl;
+use crate::run::{Engine, Runner, RunSpec};
 use crate::sim::delay::DelayModel;
-use crate::sim::straggler::StragglerModel;
-use crate::solver::delayed::{self, DelayOptions};
-use crate::solver::{SolveOptions, StopCond};
 use crate::util::config::Config;
 use crate::util::csv::CsvWriter;
 use anyhow::Result;
@@ -43,28 +40,19 @@ pub fn run(cfg: &Config, out: &Path) -> Result<()> {
         let mut calls = 0.0f64;
         let mut failures = 0usize;
         for r in 0..reps {
-            let opts = SolveOptions {
-                tau: 1,
-                sample_every: 32,
-                exact_gap: true,
-                stop: StopCond {
-                    eps_gap: Some(gap_target),
-                    max_epochs: 5e4,
-                    max_secs: 60.0,
-                    ..Default::default()
-                },
-                seed: seed + 100 * r as u64,
-                ..Default::default()
-            };
-            let res = delayed::solve(
-                &problem,
-                &opts,
-                &DelayOptions {
-                    model: DelayModel::pareto_with_mean(15.0),
-                    history: 1 << 14,
-                    enforce_drop_rule: enforce,
-                },
-            );
+            let spec = RunSpec::new(
+                Engine::delayed(DelayModel::pareto_with_mean(15.0))
+                    .with_delay_history(1 << 14)
+                    .with_drop_rule(enforce),
+            )
+            .tau(1)
+            .sample_every(32)
+            .exact_gap(true)
+            .eps_gap(gap_target)
+            .max_epochs(5e4)
+            .max_secs(60.0)
+            .seed(seed + 100 * r as u64);
+            let res = Runner::new(spec)?.solve_problem(&problem)?;
             match res.trace.first_gap_below(gap_target) {
                 Some(s) => calls += s.oracle_calls as f64,
                 None => failures += 1,
@@ -86,24 +74,18 @@ pub fn run(cfg: &Config, out: &Path) -> Result<()> {
 
     // ---------- (b) collision policy ----------
     for overwrite in [true, false] {
-        let rcfg = RunConfig {
-            workers: 3,
-            tau: 8,
-            line_search: true,
-            straggler: StragglerModel::none(3),
-            sample_every: 8,
-            exact_gap: true,
-            collision_overwrite: overwrite,
-            stop: StopCond {
-                eps_gap: Some(gap_target),
-                max_epochs: 5e4,
-                max_secs: 60.0,
-                ..Default::default()
-            },
-            seed,
-            ..Default::default()
-        };
-        let r = apbcfw::run(&problem, &rcfg);
+        let spec = RunSpec::new(
+            Engine::asynchronous(3).with_collision_overwrite(overwrite),
+        )
+        .tau(8)
+        .line_search(true)
+        .sample_every(8)
+        .exact_gap(true)
+        .eps_gap(gap_target)
+        .max_epochs(5e4)
+        .max_secs(60.0)
+        .seed(seed);
+        let r = Runner::new(spec)?.solve_problem(&problem)?;
         let label = if overwrite {
             "overwrite (paper)"
         } else {
@@ -128,24 +110,17 @@ pub fn run(cfg: &Config, out: &Path) -> Result<()> {
 
     // ---------- (c) backpressure queue depth ----------
     for qf in [1usize, 4, 16, 64] {
-        let rcfg = RunConfig {
-            workers: 3,
-            tau: 8,
-            line_search: true,
-            straggler: StragglerModel::none(3),
-            sample_every: 8,
-            exact_gap: true,
-            queue_factor: qf,
-            stop: StopCond {
-                eps_gap: Some(gap_target),
-                max_epochs: 5e4,
-                max_secs: 60.0,
-                ..Default::default()
-            },
-            seed,
-            ..Default::default()
-        };
-        let r = apbcfw::run(&problem, &rcfg);
+        let spec =
+            RunSpec::new(Engine::asynchronous(3).with_queue_factor(qf))
+                .tau(8)
+                .line_search(true)
+                .sample_every(8)
+                .exact_gap(true)
+                .eps_gap(gap_target)
+                .max_epochs(5e4)
+                .max_secs(60.0)
+                .seed(seed);
+        let r = Runner::new(spec)?.solve_problem(&problem)?;
         w.row(&[
             "queue_depth".into(),
             format!("{qf}x tau"),

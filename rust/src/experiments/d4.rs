@@ -7,7 +7,8 @@
 use super::print_table;
 use crate::problems::simplex_qp::SimplexQp;
 use crate::problems::Problem;
-use crate::solver::{minibatch, pbcd, SolveOptions, StopCond};
+use crate::run::{Engine, Runner, RunSpec};
+use crate::solver::StopCond;
 use crate::util::config::Config;
 use crate::util::csv::CsvWriter;
 use anyhow::Result;
@@ -27,20 +28,15 @@ pub fn run(cfg: &Config, out: &Path) -> Result<()> {
     let qp = SimplexQp::random(n, m, b, mu, p, seed);
     // Reference optimum via a long line-search FW run.
     let f_star = {
-        let opts = SolveOptions {
-            tau: 1,
-            line_search: true,
-            sample_every: 256,
-            exact_gap: false,
-            stop: StopCond {
-                max_epochs: 20_000.0,
-                max_secs: 120.0,
-                ..Default::default()
-            },
-            seed: 999,
-            ..Default::default()
-        };
-        minibatch::solve(&qp, &opts)
+        let spec = RunSpec::new(Engine::Seq)
+            .tau(1)
+            .line_search(true)
+            .sample_every(256)
+            .max_epochs(20_000.0)
+            .max_secs(120.0)
+            .seed(999);
+        Runner::new(spec)?
+            .solve_problem(&qp)?
             .trace
             .last()
             .unwrap()
@@ -54,25 +50,24 @@ pub fn run(cfg: &Config, out: &Path) -> Result<()> {
         &["tau", "apbcfw_epochs", "pbcd_epochs"],
     )?;
     for &tau in &taus {
-        let mk = || SolveOptions {
-            tau,
-            line_search: true,
-            sample_every: 16,
-            exact_gap: false,
-            stop: StopCond {
-                f_star: Some(f_star),
-                eps_primal: Some(eps),
-                max_epochs,
-                max_secs: 60.0,
-                ..Default::default()
-            },
-            seed,
-            ..Default::default()
+        let mk = |engine: Engine, line_search: bool| {
+            RunSpec::new(engine)
+                .tau(tau)
+                .line_search(line_search)
+                .sample_every(16)
+                .stop(StopCond {
+                    f_star: Some(f_star),
+                    eps_primal: Some(eps),
+                    max_epochs,
+                    max_secs: 60.0,
+                    ..Default::default()
+                })
+                .seed(seed)
         };
-        let r_fw = minibatch::solve(&qp, &mk());
-        let mut o_bcd = mk();
-        o_bcd.line_search = false;
-        let r_bcd = pbcd::solve(&qp, &o_bcd);
+        let r_fw =
+            Runner::new(mk(Engine::Seq, true))?.solve_problem(&qp)?;
+        let r_bcd = Runner::new(mk(Engine::Pbcd, false))?
+            .solve_projectable(&qp)?;
         let fmt = |e: Option<f64>| {
             e.map(|v| format!("{v:.1}")).unwrap_or_else(|| "-".into())
         };

@@ -14,7 +14,8 @@ use crate::data::{mixture, signal};
 use crate::problems::gfl::Gfl;
 use crate::problems::simplex_qp::SimplexQp;
 use crate::problems::ssvm::multiclass::MulticlassSsvm;
-use crate::solver::{minibatch, SolveOptions, StopCond};
+use crate::run::{Engine, Runner, RunSpec};
+use crate::solver::StopCond;
 use crate::util::config::Config;
 use crate::util::csv::CsvWriter;
 use crate::util::rng::Pcg64;
@@ -48,22 +49,19 @@ pub fn ex1(cfg: &Config, out: &Path) -> Result<()> {
     )?;
     let mut base: Option<f64> = None;
     for &tau in &taus {
-        let opts = SolveOptions {
-            tau,
-            line_search: true,
-            weighted_averaging: false,
-            sample_every: 8.max(64 / tau.max(1)),
-            exact_gap: false,
-            stop: StopCond {
+        let spec = RunSpec::new(Engine::Seq)
+            .tau(tau)
+            .line_search(true)
+            .sample_every(8.max(64 / tau.max(1)))
+            .stop(StopCond {
                 f_star: Some(f_star),
                 eps_primal: Some(eps),
                 max_epochs,
                 max_secs: 120.0,
                 ..Default::default()
-            },
-            seed,
-        };
-        let r = minibatch::solve(&problem, &opts);
+            })
+            .seed(seed);
+        let r = Runner::new(spec)?.solve_problem(&problem)?;
         let epochs = r.trace.epochs_to(f_star, eps, n);
         // Iteration speedup (consistent with Fig 1): iterations(tau=1) /
         // iterations(tau) = tau * epochs(1)/epochs(tau); efficiency is the

@@ -11,7 +11,8 @@ use crate::data::{ocr_like, signal};
 use crate::problems::gfl::Gfl;
 use crate::problems::ssvm::chain::ChainSsvm;
 use crate::problems::Problem;
-use crate::solver::{minibatch, SolveOptions, StopCond};
+use crate::run::{Engine, Runner, RunSpec};
+use crate::solver::StopCond;
 use crate::util::config::Config;
 use crate::util::csv::CsvWriter;
 use anyhow::Result;
@@ -47,13 +48,12 @@ fn speedup_sweep<P: Problem>(
     // iterations(threshold) at the baseline tau (first entry, usually 1).
     let mut base: Vec<Option<f64>> = vec![None; thresholds.len()];
     for &tau in taus {
-        let opts = SolveOptions {
-            tau,
-            line_search,
-            weighted_averaging,
-            sample_every: 1,
-            exact_gap: false,
-            stop: StopCond {
+        let spec = RunSpec::new(Engine::Seq)
+            .tau(tau)
+            .line_search(line_search)
+            .weighted_averaging(weighted_averaging)
+            .sample_every(1)
+            .stop(StopCond {
                 f_star: Some(f_star),
                 eps_primal: Some(thresholds.iter().cloned().fold(
                     f64::INFINITY,
@@ -62,10 +62,9 @@ fn speedup_sweep<P: Problem>(
                 max_epochs,
                 max_secs: 300.0,
                 ..Default::default()
-            },
-            seed,
-        };
-        let r = minibatch::solve(problem, &opts);
+            })
+            .seed(seed);
+        let r = Runner::new(spec)?.solve_problem(problem)?;
         for (ti, &th) in thresholds.iter().enumerate() {
             let eps = th * gap0;
             let hit = r.trace.first_below(f_star, eps);

@@ -7,10 +7,9 @@
 //!     solves per oracle call).
 
 use super::{print_table, reference_optimum};
-use crate::coordinator::{apbcfw, RunConfig};
 use crate::data::ocr_like;
 use crate::problems::ssvm::chain::ChainSsvm;
-use crate::sim::straggler::StragglerModel;
+use crate::run::{Engine, Report, Runner, RunSpec};
 use crate::solver::StopCond;
 use crate::util::config::Config;
 use crate::util::csv::CsvWriter;
@@ -52,31 +51,28 @@ fn setup(cfg: &Config, section: &str, out: &Path) -> Result<Fig2Setup> {
     })
 }
 
-fn run_cfg(
+fn run_async(
     s: &Fig2Setup,
     workers: usize,
     tau: usize,
     work_multiplier: (u32, u32),
-) -> RunConfig {
-    RunConfig {
-        workers,
-        tau,
-        line_search: true,
-        staleness_rule: true,
-        straggler: StragglerModel::none(workers),
-        work_multiplier,
-        sample_every: 8,
-        exact_gap: false,
-        stop: StopCond {
-            f_star: Some(s.f_star),
-            eps_primal: Some(s.eps_abs),
-            max_epochs: 1e9,
-            max_secs: s.max_secs,
-            ..Default::default()
-        },
-        seed: s.seed,
+) -> Result<Report> {
+    let (lo, hi) = work_multiplier;
+    let spec = RunSpec::new(
+        Engine::asynchronous(workers).with_work_multiplier(lo, hi),
+    )
+    .tau(tau)
+    .line_search(true)
+    .sample_every(8)
+    .stop(StopCond {
+        f_star: Some(s.f_star),
+        eps_primal: Some(s.eps_abs),
+        max_epochs: 1e9,
+        max_secs: s.max_secs,
         ..Default::default()
-    }
+    })
+    .seed(s.seed);
+    Runner::new(spec)?.solve_problem(&s.problem)
 }
 
 /// Fig 2(a): suboptimality vs wall-clock, T = 8, tau in {1T, 3T, 5T}.
@@ -90,7 +86,7 @@ pub fn fig2a(cfg: &Config, out: &Path) -> Result<()> {
     )?;
     for &m in &mults {
         let tau = m * t;
-        let r = apbcfw::run(&s.problem, &run_cfg(&s, t, tau, (1, 1)));
+        let r = run_async(&s, t, tau, (1, 1))?;
         for smp in &r.trace.samples {
             w.row(&[
                 format!("T{t}_tau{tau}"),
@@ -100,7 +96,7 @@ pub fn fig2a(cfg: &Config, out: &Path) -> Result<()> {
         }
     }
     // single-thread BCFW reference
-    let r = apbcfw::run(&s.problem, &run_cfg(&s, 1, 1, (1, 1)));
+    let r = run_async(&s, 1, 1, (1, 1))?;
     for smp in &r.trace.samples {
         w.row(&[
             "BCFW_T1".into(),
@@ -120,11 +116,11 @@ fn best_tau(
     workers: usize,
     mults: &[usize],
     work: (u32, u32),
-) -> (usize, f64) {
+) -> Result<(usize, f64)> {
     let mut best = (workers, f64::INFINITY);
     for &m in mults {
         let tau = (m * workers).max(1);
-        let r = apbcfw::run(&s.problem, &run_cfg(s, workers, tau, work));
+        let r = run_async(s, workers, tau, work)?;
         let t = r
             .trace
             .secs_to(s.f_star, s.eps_abs)
@@ -133,7 +129,7 @@ fn best_tau(
             best = (tau, t);
         }
     }
-    best
+    Ok(best)
 }
 
 /// Fig 2(b): suboptimality vs wall-clock for varying T (best tau each).
@@ -146,8 +142,8 @@ pub fn fig2b(cfg: &Config, out: &Path) -> Result<()> {
         &["T", "best_tau", "elapsed_s", "suboptimality"],
     )?;
     for &t in &ts {
-        let (tau, _) = best_tau(&s, t, &mults, (1, 1));
-        let r = apbcfw::run(&s.problem, &run_cfg(&s, t, tau, (1, 1)));
+        let (tau, _) = best_tau(&s, t, &mults, (1, 1))?;
+        let r = run_async(&s, t, tau, (1, 1))?;
         for smp in &r.trace.samples {
             w.row(&[
                 t.to_string(),
@@ -180,7 +176,7 @@ fn speedup_vs_workers(
     )?;
     let mut base: Option<f64> = None;
     for &t in &ts {
-        let (tau, secs) = best_tau(&s, t, &mults, work);
+        let (tau, secs) = best_tau(&s, t, &mults, work)?;
         if base.is_none() {
             base = Some(secs);
         }

@@ -5,11 +5,9 @@
 //! (b) heterogeneous workers p_i = theta + i/T; x-axis 1/theta.
 
 use super::print_table;
-use crate::coordinator::{apbcfw, sync, RunConfig};
 use crate::data::ocr_like;
 use crate::problems::ssvm::chain::ChainSsvm;
-use crate::sim::straggler::StragglerModel;
-use crate::solver::StopCond;
+use crate::run::{Engine, Runner, RunSpec, StragglerSpec};
 use crate::util::config::Config;
 use crate::util::csv::CsvWriter;
 use anyhow::Result;
@@ -31,30 +29,28 @@ fn run_pair(
     p: &ChainSsvm,
     workers: usize,
     tau: usize,
-    straggler: StragglerModel,
+    straggler: StragglerSpec,
     passes: f64,
     seed: u64,
-) -> (f64, f64) {
-    let mk = |straggler: StragglerModel| RunConfig {
-        workers,
-        tau,
-        line_search: true,
-        staleness_rule: true,
-        straggler,
-        work_multiplier: (1, 1),
-        sample_every: 64,
-        exact_gap: false,
-        stop: StopCond {
-            max_epochs: passes,
-            max_secs: 60.0,
-            ..Default::default()
-        },
-        seed,
-        ..Default::default()
+) -> Result<(f64, f64)> {
+    let mk = |engine: Engine| {
+        RunSpec::new(engine)
+            .tau(tau)
+            .line_search(true)
+            .sample_every(64)
+            .max_epochs(passes)
+            .max_secs(60.0)
+            .seed(seed)
     };
-    let ra = apbcfw::run(p, &mk(straggler.clone()));
-    let rs = sync::run(p, &mk(straggler));
-    (ra.secs_per_pass, rs.secs_per_pass)
+    let ra = Runner::new(mk(
+        Engine::asynchronous(workers).with_straggler(straggler.clone()),
+    ))?
+    .solve_problem(p)?;
+    let rs = Runner::new(mk(
+        Engine::synchronous(workers).with_straggler(straggler),
+    ))?
+    .solve_problem(p)?;
+    Ok((ra.secs_per_pass, rs.secs_per_pass))
 }
 
 /// Fig 3(a): one straggler with return probability p.
@@ -77,10 +73,10 @@ pub fn fig3a(cfg: &Config, out: &Path) -> Result<()> {
             &p,
             workers,
             tau,
-            StragglerModel::single(workers, prob),
+            StragglerSpec::Single { p: prob },
             passes,
             seed,
-        );
+        )?;
         if base.is_none() {
             base = Some((a, s));
         }
@@ -119,10 +115,10 @@ pub fn fig3b(cfg: &Config, out: &Path) -> Result<()> {
             &p,
             workers,
             tau,
-            StragglerModel::heterogeneous(workers, theta),
+            StragglerSpec::Heterogeneous { theta },
             passes,
             seed,
-        );
+        )?;
         if base.is_none() {
             base = Some((a, s));
         }

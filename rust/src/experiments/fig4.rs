@@ -8,9 +8,8 @@
 use super::print_table;
 use crate::data::signal;
 use crate::problems::gfl::Gfl;
+use crate::run::{Engine, Runner, RunSpec};
 use crate::sim::delay::DelayModel;
-use crate::solver::delayed::{self, DelayOptions};
-use crate::solver::{SolveOptions, StopCond};
 use crate::util::config::Config;
 use crate::util::csv::CsvWriter;
 use anyhow::Result;
@@ -34,34 +33,23 @@ pub fn run(cfg: &Config, out: &Path) -> Result<()> {
         &["distribution", "kappa", "iters_mean", "ratio_vs_zero"],
     )?;
 
-    let solve_one = |model: DelayModel, rep: u64| -> f64 {
-        let opts = SolveOptions {
-            tau: 1,
-            line_search: false,
-            sample_every: 32,
-            exact_gap: true,
-            stop: StopCond {
-                eps_gap: Some(gap_target),
-                max_epochs: 1e5,
-                max_secs: 120.0,
-                ..Default::default()
-            },
-            seed: seed + 1000 * rep,
-            ..Default::default()
-        };
-        let r = delayed::solve(
-            &problem,
-            &opts,
-            &DelayOptions {
-                model,
-                history: 1 << 14,
-                ..Default::default()
-            },
-        );
-        r.trace
+    let solve_one = |model: DelayModel, rep: u64| -> Result<f64> {
+        let spec = RunSpec::new(
+            Engine::delayed(model).with_delay_history(1 << 14),
+        )
+        .tau(1)
+        .sample_every(32)
+        .exact_gap(true)
+        .eps_gap(gap_target)
+        .max_epochs(1e5)
+        .max_secs(120.0)
+        .seed(seed + 1000 * rep);
+        let r = Runner::new(spec)?.solve_problem(&problem)?;
+        Ok(r
+            .trace
             .first_gap_below(gap_target)
             .map(|s| s.oracle_calls as f64)
-            .unwrap_or(f64::NAN)
+            .unwrap_or(f64::NAN))
     };
 
     for dist in ["poisson", "pareto"] {
@@ -74,10 +62,11 @@ pub fn run(cfg: &Config, out: &Path) -> Result<()> {
             } else {
                 DelayModel::pareto_with_mean(kappa)
             };
-            let mean: f64 = (0..reps)
-                .map(|r| solve_one(model, r as u64))
-                .sum::<f64>()
-                / reps as f64;
+            let mut acc = 0.0f64;
+            for r in 0..reps {
+                acc += solve_one(model, r as u64)?;
+            }
+            let mean = acc / reps as f64;
             if base.is_none() {
                 base = Some(mean);
             }

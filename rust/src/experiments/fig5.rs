@@ -4,7 +4,7 @@
 use super::print_table;
 use crate::data::signal;
 use crate::problems::gfl::Gfl;
-use crate::solver::{minibatch, SolveOptions, StopCond};
+use crate::run::{Engine, Runner, RunSpec};
 use crate::util::config::Config;
 use crate::util::csv::CsvWriter;
 use anyhow::Result;
@@ -21,20 +21,14 @@ pub fn run(cfg: &Config, out: &Path) -> Result<()> {
 
     let sig = signal::piecewise_constant(d, n, segments, 3.0, noise, seed);
     let problem = Gfl::new(d, n, lam, sig.noisy.clone());
-    let opts = SolveOptions {
-        tau: 8,
-        line_search: true,
-        sample_every: 64,
-        exact_gap: false,
-        stop: StopCond {
-            max_epochs: epochs,
-            max_secs: 120.0,
-            ..Default::default()
-        },
-        seed,
-        ..Default::default()
-    };
-    let r = minibatch::solve(&problem, &opts);
+    let spec = RunSpec::new(Engine::Seq)
+        .tau(8)
+        .line_search(true)
+        .sample_every(64)
+        .max_epochs(epochs)
+        .max_secs(120.0)
+        .seed(seed);
+    let r = Runner::new(spec)?.solve_problem(&problem)?;
     let x = problem.primal_signal(&r.raw_param);
 
     // Per-time-point CSV with the first dimension of each series.

@@ -16,7 +16,7 @@ pub mod ex_curvature;
 pub mod prop1;
 
 use crate::problems::Problem;
-use crate::solver::{minibatch, SolveOptions, StopCond};
+use crate::run::{Engine, Runner, RunSpec};
 use crate::util::config::Config;
 use anyhow::{anyhow, Result};
 use std::path::{Path, PathBuf};
@@ -81,20 +81,14 @@ pub fn reference_optimum<P: Problem>(
         }
     }
     println!("[fstar] computing reference optimum for {key} ...");
-    let opts = SolveOptions {
-        tau: 1,
-        line_search: true,
-        sample_every: 256,
-        exact_gap: false,
-        stop: StopCond {
-            max_epochs: epochs,
-            max_secs: 600.0,
-            ..Default::default()
-        },
-        seed: 123,
-        ..Default::default()
-    };
-    let r = minibatch::solve(problem, &opts);
+    let spec = RunSpec::new(Engine::Seq)
+        .tau(1)
+        .line_search(true)
+        .sample_every(256)
+        .max_epochs(epochs)
+        .max_secs(600.0)
+        .seed(123);
+    let r = Runner::new(spec)?.solve_problem(problem)?;
     // Lower-bound correction: subtract the final gap so thresholds are
     // reachable (f* <= f_end, and f_end - gap <= f*).
     let f_end = r.trace.last().map(|s| s.objective).unwrap_or(0.0);

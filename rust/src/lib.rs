@@ -7,7 +7,9 @@
 //! - **Layer 3 (this crate)** — the paper's contribution: the asynchronous
 //!   minibatch coordinator ([`coordinator`]), baselines ([`solver`]),
 //!   delay/straggler simulation ([`sim`]), problems ([`problems`]) and the
-//!   curvature analysis toolkit ([`analysis`]).
+//!   curvature analysis toolkit ([`analysis`]). The [`run`] module is the
+//!   public API over all of it: `RunSpec` -> `Runner` -> `Report` with a
+//!   live `Observer` stream, spanning every execution engine.
 //! - **Layer 2/1 (python/, build time only)** — JAX models and Pallas
 //!   kernels AOT-lowered to HLO text artifacts, executed through the PJRT
 //!   CPU client by [`runtime`]. Python never runs on the solve path.
@@ -20,6 +22,7 @@ pub mod coordinator;
 pub mod data;
 pub mod experiments;
 pub mod problems;
+pub mod run;
 pub mod runtime;
 pub mod sim;
 pub mod solver;

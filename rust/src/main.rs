@@ -1,17 +1,13 @@
 //! `apbcfw` launcher: experiments, single solves, artifact checks.
+//!
+//! Solves go through the unified [`apbcfw::run`] API: the CLI lowers its
+//! flags into `run.*` config keys, `RunSpec::from_config` builds the spec,
+//! the problem registry builds the instance, and `Runner` dispatches —
+//! engine x problem without a hand-written match matrix.
 
 use anyhow::Result;
 use apbcfw::cli::{self, Command};
-use apbcfw::coordinator::{apbcfw as coord, lockfree, sync, RunConfig};
-use apbcfw::data::{mixture, ocr_like, signal};
-use apbcfw::problems::gfl::Gfl;
-use apbcfw::problems::simplex_qp::SimplexQp;
-use apbcfw::problems::ssvm::chain::ChainSsvm;
-use apbcfw::problems::ssvm::multiclass::MulticlassSsvm;
-use apbcfw::sim::straggler::StragglerModel;
-use apbcfw::solver::{minibatch, SolveOptions, StopCond};
-use apbcfw::util::config::Config;
-use std::sync::Arc;
+use apbcfw::run::{ProblemInstance, Report, Runner, RunSpec};
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -37,26 +33,19 @@ fn run(args: &[String]) -> Result<()> {
                     .map(|v| v.get())
                     .unwrap_or(0)
             );
+            println!(
+                "engines: {:?}",
+                apbcfw::run::ENGINE_NAMES
+            );
+            println!(
+                "problems: {:?}",
+                apbcfw::run::PROBLEM_NAMES
+            );
             Ok(())
         }
         Command::Exp { id } => apbcfw::experiments::run(&id, &cli.config),
         Command::ArtifactsCheck { dir } => artifacts_check(&dir),
-        Command::Solve {
-            problem,
-            mode,
-            tau,
-            workers,
-            epochs,
-            line_search,
-        } => solve(
-            &cli.config,
-            &problem,
-            &mode,
-            tau,
-            workers,
-            epochs,
-            line_search,
-        ),
+        Command::Solve { problem } => solve(&cli.config, &problem),
     }
 }
 
@@ -72,131 +61,28 @@ fn artifacts_check(dir: &str) -> Result<()> {
     Ok(())
 }
 
-fn summarize(name: &str, trace: &apbcfw::util::metrics::Trace) {
-    if let Some(last) = trace.last() {
+fn solve(cfg: &apbcfw::util::config::Config, problem: &str) -> Result<()> {
+    let spec = RunSpec::from_config(cfg)?;
+    let instance = ProblemInstance::from_config(problem, cfg)?;
+    let runner = Runner::new(spec)?;
+    let report = runner.solve(&instance)?;
+    summarize(&format!("{problem}/{}", report.engine), &report);
+    Ok(())
+}
+
+fn summarize(name: &str, r: &Report) {
+    if let Some(last) = r.last() {
         println!(
             "[{name}] iters={} oracle_calls={} f={:.6e} gap={:.4e} t={:.2}s",
             last.iter, last.oracle_calls, last.objective, last.gap,
             last.elapsed_s
         );
     }
-}
-
-fn solve(
-    cfg: &Config,
-    problem: &str,
-    mode: &str,
-    tau: usize,
-    workers: usize,
-    epochs: f64,
-    line_search: bool,
-) -> Result<()> {
-    let seed = cfg.get_u64("run.seed", 1);
-    let stop = StopCond {
-        max_epochs: epochs,
-        max_secs: cfg.get_f64("run.max_secs", 300.0),
-        ..Default::default()
-    };
-    let sopts = SolveOptions {
-        tau,
-        line_search,
-        sample_every: cfg.get_usize("run.sample_every", 64),
-        exact_gap: cfg.get_bool("run.exact_gap", false),
-        stop,
-        seed,
-        ..Default::default()
-    };
-    let rcfg = RunConfig {
-        workers,
-        tau,
-        line_search,
-        straggler: StragglerModel::none(workers),
-        sample_every: sopts.sample_every,
-        exact_gap: sopts.exact_gap,
-        stop,
-        seed,
-        ..Default::default()
-    };
-
-    match problem {
-        "gfl" => {
-            let d = cfg.get_usize("gfl.d", 10);
-            let n = cfg.get_usize("gfl.n", 100);
-            let lam = cfg.get_f64("gfl.lambda", 0.01);
-            let sig =
-                signal::piecewise_constant(d, n, 6, 2.0, 0.5, seed);
-            let p = Gfl::new(d, n, lam, sig.noisy.clone());
-            match mode {
-                "seq" => summarize("gfl/seq", &minibatch::solve(&p, &sopts).trace),
-                "async" => summarize("gfl/async", &coord::run(&p, &rcfg).trace),
-                "sync" => summarize("gfl/sync", &sync::run(&p, &rcfg).trace),
-                "lockfree" => {
-                    summarize("gfl/lockfree", &lockfree::run(&p, &rcfg).trace)
-                }
-                _ => unreachable!(),
-            }
-        }
-        "ssvm" => {
-            let n = cfg.get_usize("ssvm.n", 600);
-            let k = cfg.get_usize("ssvm.k", 26);
-            let d = cfg.get_usize("ssvm.d", 128);
-            let ell = cfg.get_usize("ssvm.ell", 9);
-            let lam = cfg.get_f64("ssvm.lambda", 1.0);
-            let data =
-                Arc::new(ocr_like::generate(n, k, d, ell, 0.15, seed));
-            let p = ChainSsvm::new(data, lam);
-            match mode {
-                "seq" => {
-                    summarize("ssvm/seq", &minibatch::solve(&p, &sopts).trace)
-                }
-                "async" => summarize("ssvm/async", &coord::run(&p, &rcfg).trace),
-                "sync" => summarize("ssvm/sync", &sync::run(&p, &rcfg).trace),
-                "lockfree" => anyhow::bail!(
-                    "lockfree mode requires a parameter-space problem (gfl/qp)"
-                ),
-                _ => unreachable!(),
-            }
-        }
-        "multiclass" => {
-            let n = cfg.get_usize("multiclass.n", 800);
-            let k = cfg.get_usize("multiclass.k", 10);
-            let d = cfg.get_usize("multiclass.d", 64);
-            let lam = cfg.get_f64("multiclass.lambda", 0.01);
-            let data = Arc::new(mixture::generate(n, k, d, 0.05, seed));
-            let p = MulticlassSsvm::new(data, lam);
-            match mode {
-                "seq" => summarize(
-                    "multiclass/seq",
-                    &minibatch::solve(&p, &sopts).trace,
-                ),
-                "async" => {
-                    summarize("multiclass/async", &coord::run(&p, &rcfg).trace)
-                }
-                "sync" => {
-                    summarize("multiclass/sync", &sync::run(&p, &rcfg).trace)
-                }
-                "lockfree" => anyhow::bail!(
-                    "lockfree mode requires a parameter-space problem (gfl/qp)"
-                ),
-                _ => unreachable!(),
-            }
-        }
-        "qp" => {
-            let n = cfg.get_usize("qp.n", 64);
-            let m = cfg.get_usize("qp.m", 5);
-            let mu = cfg.get_f64("qp.mu", 0.1);
-            let p = SimplexQp::random(n, m, 1.0, mu, 4, seed);
-            match mode {
-                "seq" => summarize("qp/seq", &minibatch::solve(&p, &sopts).trace),
-                "async" => summarize("qp/async", &coord::run(&p, &rcfg).trace),
-                "sync" => summarize("qp/sync", &sync::run(&p, &rcfg).trace),
-                "lockfree" => {
-                    summarize("qp/lockfree", &lockfree::run(&p, &rcfg).trace)
-                }
-                _ => unreachable!(),
-            }
-        }
-        _ => unreachable!(),
-    }
-    Ok(())
+    println!(
+        "  applied={} dropped={} collisions={} secs/pass={:.3}",
+        r.counters.updates_applied,
+        r.counters.dropped,
+        r.counters.collisions,
+        r.secs_per_pass
+    );
 }

@@ -310,17 +310,24 @@ impl Problem for ChainSsvm {
     }
 
     fn oracle_into(&self, param: &[f32], block: usize, out: &mut BlockOracle) {
-        if self.decoder.is_some() {
-            *out = self.oracle(param, block);
-            return;
+        // Both paths build the payload into the caller's pooled `out.s`
+        // buffer: the external-decoder (XLA artifact / fallback) path used
+        // to delegate to `oracle` and drop the pooled buffer on every
+        // call, re-allocating a dim-D payload each oracle.
+        match &self.decoder {
+            Some(dec) => {
+                let (ystar, _h) = dec.decode(param, block, 1.0);
+                out.block = block;
+                out.ls = self.payload_into(block, &ystar, &mut out.s);
+            }
+            None => CHAIN_SCRATCH.with(|cell| {
+                let mut guard = cell.borrow_mut();
+                let sc = &mut *guard;
+                self.viterbi_into(param, block, 1.0, sc);
+                out.block = block;
+                out.ls = self.payload_into(block, &sc.ys, &mut out.s);
+            }),
         }
-        CHAIN_SCRATCH.with(|cell| {
-            let mut guard = cell.borrow_mut();
-            let sc = &mut *guard;
-            self.viterbi_into(param, block, 1.0, sc);
-            out.block = block;
-            out.ls = self.payload_into(block, &sc.ys, &mut out.s);
-        });
     }
 
     fn block_gap(

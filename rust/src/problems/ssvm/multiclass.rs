@@ -153,11 +153,11 @@ impl Problem for MulticlassSsvm {
     }
 
     fn oracle_into(&self, param: &[f32], block: usize, out: &mut BlockOracle) {
-        if self.decoder.is_some() {
-            *out = self.oracle(param, block);
-            return;
-        }
-        let (ystar, _h) = self.argmax(param, block, 1.0);
+        // Decode through whichever backend is active, but always build the
+        // payload into the caller's pooled `out.s` buffer — the external-
+        // decoder path used to delegate to `oracle` and re-allocate a
+        // dim-D payload on every call.
+        let (ystar, _h) = self.decode(param, block, 1.0);
         out.block = block;
         out.ls = self.payload_into(block, ystar, &mut out.s);
     }

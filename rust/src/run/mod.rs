@@ -1,0 +1,286 @@
+//! The unified solve API: one spec -> engine -> report surface over every
+//! execution engine.
+//!
+//! The paper's central claim is that one update rule (AP-BCFW) subsumes a
+//! whole family of execution regimes — sequential, minibatched, delayed,
+//! synchronous, asynchronous, serverless. This module makes the code say
+//! the same thing: a [`RunSpec`] names an [`Engine`] plus the knobs shared
+//! by all of them, a [`Runner`] dispatches it over any problem, and every
+//! engine returns the same [`Report`]. An [`Observer`] can watch apply and
+//! sample events live while the solve runs.
+//!
+//! ```no_run
+//! # fn main() -> anyhow::Result<()> {
+//! use apbcfw::run::{Engine, ProblemInstance, Runner, RunSpec};
+//! use apbcfw::util::config::Config;
+//!
+//! let cfg = Config::parse("[run]\nmode = async\nworkers = 4\ntau = 8\n")?;
+//! let spec = RunSpec::from_config(&cfg)?;
+//! let problem = ProblemInstance::from_config("gfl", &cfg)?;
+//! let report = Runner::new(spec)?.solve(&problem)?;
+//! println!("f = {:?}", report.last());
+//! # Ok(())
+//! # }
+//! ```
+//!
+//! # How to add an engine
+//!
+//! 1. Implement the loop next to its family: sequential loops live in
+//!    [`crate::solver`], threaded ones in [`crate::coordinator`]. Provide
+//!    both a plain entry point and an `*_observed` variant that drives the
+//!    [`Observer`] (one `on_apply` per server step, one `on_sample` per
+//!    trace sample) and returns the family's result struct.
+//! 2. Add a variant to [`Engine`] carrying the engine-specific knobs, a
+//!    constructor with legacy-faithful defaults, and its name in
+//!    [`ENGINE_NAMES`]. Extend `RunSpec::from_config` / `validate` and the
+//!    lowering (`solve_options` or `run_config`).
+//! 3. Dispatch it in `Runner::solve_problem_observed` (engines needing
+//!    only [`Problem`](crate::problems::Problem)) or
+//!    `Runner::solve_projectable_observed` (engines needing projections /
+//!    a stateless server), wrapping the result with `Report::from_solve`
+//!    or `Report::from_run`.
+//! 4. Add a seeded equivalence test in `rust/tests/runner_equivalence.rs`
+//!    pinning the `Runner` path to the legacy entry point.
+//!
+//! # How to add a problem
+//!
+//! 1. Implement [`Problem`](crate::problems::Problem) (and
+//!    [`ProjectableProblem`](crate::problems::ProjectableProblem) with
+//!    `ServerState = ()` if the `pbcd`/`lockfree` engines should apply).
+//! 2. Register it: a variant in [`ProblemInstance`], a name in
+//!    [`PROBLEM_NAMES`], a `from_config` arm building it from its config
+//!    section, and arms in the accessor/dispatch matches (the compiler
+//!    walks you through them).
+//!
+//! Custom problems outside the registry can skip step 2 and call
+//! [`Runner::solve_problem`] / [`Runner::solve_projectable`] directly.
+
+pub mod observe;
+pub mod registry;
+pub mod report;
+pub mod spec;
+
+pub use observe::{ChannelObserver, CollectObserver, LiveEvent, Observer};
+pub use registry::{ProblemInstance, PROBLEM_NAMES};
+pub use report::Report;
+pub use spec::{Engine, RunSpec, StragglerSpec, ENGINE_NAMES};
+
+use crate::coordinator::{apbcfw, lockfree, sync};
+use crate::problems::{Problem, ProjectableProblem};
+use crate::solver::{batch_fw, delayed, minibatch, pbcd};
+use anyhow::Result;
+
+/// Executes a validated [`RunSpec`] against problems. The only production
+/// path that lowers a spec into the engine option structs — everything
+/// else (CLI, experiments, examples, services) goes through here.
+pub struct Runner {
+    spec: RunSpec,
+}
+
+impl Runner {
+    /// Validate `spec` and wrap it. Straggler-arity mismatches, zero
+    /// worker counts, and degenerate cadences are rejected here rather
+    /// than panicking mid-solve.
+    pub fn new(spec: RunSpec) -> Result<Runner> {
+        spec.validate()?;
+        Ok(Runner { spec })
+    }
+
+    pub fn spec(&self) -> &RunSpec {
+        &self.spec
+    }
+
+    /// Solve a registered problem.
+    pub fn solve(&self, problem: &ProblemInstance) -> Result<Report> {
+        self.solve_observed(problem, &mut ())
+    }
+
+    /// Solve a registered problem, streaming live events to `obs`.
+    pub fn solve_observed(
+        &self,
+        problem: &ProblemInstance,
+        obs: &mut dyn Observer,
+    ) -> Result<Report> {
+        problem.supports(&self.spec.engine)?;
+        match problem {
+            ProblemInstance::Gfl(p) => self.solve_projectable_observed(p, obs),
+            ProblemInstance::Qp(p) => self.solve_projectable_observed(p, obs),
+            ProblemInstance::Chain(p) => self.solve_problem_observed(p, obs),
+            ProblemInstance::Multiclass(p) => {
+                self.solve_problem_observed(p, obs)
+            }
+        }
+    }
+
+    /// Solve any [`Problem`] (registered or not). Errors for the
+    /// `pbcd`/`lockfree` engines, which need block projections and a
+    /// stateless server — use [`Runner::solve_projectable`] for those.
+    pub fn solve_problem<P: Problem>(&self, problem: &P) -> Result<Report> {
+        self.solve_problem_observed(problem, &mut ())
+    }
+
+    /// Observer-streaming variant of [`Runner::solve_problem`].
+    pub fn solve_problem_observed<P: Problem>(
+        &self,
+        problem: &P,
+        obs: &mut dyn Observer,
+    ) -> Result<Report> {
+        let n = problem.num_blocks();
+        let name = self.spec.engine.name();
+        Ok(match &self.spec.engine {
+            Engine::Seq => Report::from_solve(
+                name,
+                n,
+                minibatch::solve_observed(
+                    problem,
+                    &self.spec.solve_options(),
+                    obs,
+                ),
+            ),
+            Engine::Batch => Report::from_solve(
+                name,
+                n,
+                batch_fw::solve_observed(
+                    problem,
+                    &self.spec.solve_options(),
+                    obs,
+                ),
+            ),
+            Engine::Delayed { .. } => Report::from_solve(
+                name,
+                n,
+                delayed::solve_observed(
+                    problem,
+                    &self.spec.solve_options(),
+                    &self.spec.delay_options().expect("delayed engine"),
+                    obs,
+                ),
+            ),
+            Engine::Async { .. } => Report::from_run(
+                name,
+                apbcfw::run_observed(problem, &self.spec.run_config()?, obs),
+            ),
+            Engine::Sync { .. } => Report::from_run(
+                name,
+                sync::run_observed(problem, &self.spec.run_config()?, obs),
+            ),
+            Engine::Pbcd | Engine::Lockfree { .. } => {
+                return Err(registry::parameter_space_error(
+                    &self.spec.engine,
+                    problem.name(),
+                ))
+            }
+        })
+    }
+
+    /// Solve any parameter-space problem (block projections + stateless
+    /// server); this unlocks all seven engines.
+    pub fn solve_projectable<P>(&self, problem: &P) -> Result<Report>
+    where
+        P: ProjectableProblem<ServerState = ()>,
+    {
+        self.solve_projectable_observed(problem, &mut ())
+    }
+
+    /// Observer-streaming variant of [`Runner::solve_projectable`].
+    pub fn solve_projectable_observed<P>(
+        &self,
+        problem: &P,
+        obs: &mut dyn Observer,
+    ) -> Result<Report>
+    where
+        P: ProjectableProblem<ServerState = ()>,
+    {
+        let n = problem.num_blocks();
+        let name = self.spec.engine.name();
+        match &self.spec.engine {
+            Engine::Pbcd => Ok(Report::from_solve(
+                name,
+                n,
+                pbcd::solve_observed(
+                    problem,
+                    &self.spec.solve_options(),
+                    obs,
+                ),
+            )),
+            Engine::Lockfree { .. } => Ok(Report::from_run(
+                name,
+                lockfree::run_observed(problem, &self.spec.run_config()?, obs),
+            )),
+            _ => self.solve_problem_observed(problem, obs),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::signal;
+    use crate::problems::gfl::Gfl;
+    use crate::solver::StopCond;
+
+    fn gfl() -> Gfl {
+        let sig = signal::piecewise_constant(4, 24, 4, 2.0, 0.5, 11);
+        Gfl::new(4, 24, 0.2, sig.noisy)
+    }
+
+    fn budget() -> StopCond {
+        StopCond {
+            max_epochs: 10.0,
+            max_secs: 20.0,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn runner_rejects_invalid_spec() {
+        let spec = RunSpec::new(Engine::asynchronous(0));
+        assert!(Runner::new(spec).is_err());
+        let spec = RunSpec::new(Engine::Seq).sample_every(0);
+        assert!(Runner::new(spec).is_err());
+    }
+
+    #[test]
+    fn generic_path_rejects_parameter_space_engines() {
+        // `solve_problem` only sees the Problem trait, so pbcd/lockfree
+        // must be refused with the registry's single capability error.
+        let p = gfl();
+        for engine in [Engine::pbcd(), Engine::lockfree(2)] {
+            let runner =
+                Runner::new(RunSpec::new(engine).stop(budget())).unwrap();
+            let err = runner.solve_problem(&p).unwrap_err().to_string();
+            assert!(err.contains("parameter-space"), "{err}");
+        }
+    }
+
+    #[test]
+    fn projectable_path_runs_every_engine_on_gfl() {
+        let p = gfl();
+        let engines = [
+            Engine::sequential(),
+            Engine::batch(),
+            Engine::delayed(crate::sim::delay::DelayModel::Fixed(1)),
+            Engine::pbcd(),
+            Engine::asynchronous(2),
+            Engine::synchronous(2),
+            Engine::lockfree(2),
+        ];
+        for engine in engines {
+            let name = engine.name();
+            let spec = RunSpec::new(engine)
+                .tau(2)
+                .sample_every(4)
+                .stop(budget())
+                .seed(5);
+            let r = Runner::new(spec)
+                .unwrap()
+                .solve_projectable(&p)
+                .unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert_eq!(r.engine, name);
+            assert!(r.last().is_some(), "{name}: empty trace");
+            assert_eq!(r.param.len(), 4 * 23, "{name}");
+            assert_eq!(r.raw_param.len(), 4 * 23, "{name}");
+            assert!(r.oracle_calls() > 0, "{name}");
+        }
+    }
+}

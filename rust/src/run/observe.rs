@@ -1,0 +1,154 @@
+//! Live solve observation: the streaming callback hook every engine drives.
+//!
+//! An [`Observer`] receives events *while the solve is in flight* — one
+//! `on_apply` per server apply step and one `on_sample` per trace sample —
+//! so the runtime service and future dashboards can watch convergence live
+//! instead of scraping the trace post-hoc. Events are emitted from the
+//! engine's monitor/server thread (never from oracle workers), so an
+//! observer needs no synchronization of its own.
+//!
+//! The unit type `()` is the no-op observer behind the plain entry points
+//! (`minibatch::solve`, `apbcfw::run`, ...); [`CollectObserver`] gathers
+//! events in memory for tests and post-processing; [`ChannelObserver`]
+//! streams them over an mpsc channel to a consumer on another thread.
+
+use crate::util::metrics::Sample;
+use std::sync::mpsc;
+
+/// Callback surface for live solve events.
+///
+/// Both methods default to no-ops so an observer can subscribe to either
+/// stream independently. Calls arrive in program order from a single
+/// thread per solve.
+pub trait Observer {
+    /// One server apply step completed. `iter` is the server iteration
+    /// count *after* the step; `gamma` is the step size actually used and
+    /// `batch_gap` the applied batch's surrogate-gap mass (both NaN for
+    /// engines without a Frank-Wolfe step, e.g. the PBCD baseline).
+    fn on_apply(&mut self, iter: u64, gamma: f32, batch_gap: f64) {
+        let _ = (iter, gamma, batch_gap);
+    }
+
+    /// One convergence sample was recorded into the trace.
+    fn on_sample(&mut self, sample: &Sample) {
+        let _ = sample;
+    }
+}
+
+/// The no-op observer: every plain (observer-less) entry point lowers to
+/// `solve_observed(.., &mut ())`.
+impl Observer for () {}
+
+/// Collects every event in memory (tests, post-hoc analysis).
+#[derive(Debug, Default)]
+pub struct CollectObserver {
+    /// `(iter, gamma, batch_gap)` per apply step, in order.
+    pub applies: Vec<(u64, f32, f64)>,
+    /// Every trace sample, in order.
+    pub samples: Vec<Sample>,
+}
+
+impl CollectObserver {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl Observer for CollectObserver {
+    fn on_apply(&mut self, iter: u64, gamma: f32, batch_gap: f64) {
+        self.applies.push((iter, gamma, batch_gap));
+    }
+
+    fn on_sample(&mut self, sample: &Sample) {
+        self.samples.push(*sample);
+    }
+}
+
+/// A live solve event as shipped by [`ChannelObserver`].
+#[derive(Debug, Clone, Copy)]
+pub enum LiveEvent {
+    Apply {
+        iter: u64,
+        gamma: f32,
+        batch_gap: f64,
+    },
+    Sample(Sample),
+}
+
+/// Streams events over an mpsc channel so a service/dashboard thread can
+/// consume them while the solve runs. Sends are best-effort: a dropped
+/// receiver never stalls or fails the solve.
+pub struct ChannelObserver {
+    tx: mpsc::Sender<LiveEvent>,
+}
+
+impl ChannelObserver {
+    /// Create an observer and the receiving end of its event stream.
+    pub fn pair() -> (Self, mpsc::Receiver<LiveEvent>) {
+        let (tx, rx) = mpsc::channel();
+        (Self { tx }, rx)
+    }
+}
+
+impl Observer for ChannelObserver {
+    fn on_apply(&mut self, iter: u64, gamma: f32, batch_gap: f64) {
+        self.tx
+            .send(LiveEvent::Apply {
+                iter,
+                gamma,
+                batch_gap,
+            })
+            .ok();
+    }
+
+    fn on_sample(&mut self, sample: &Sample) {
+        self.tx.send(LiveEvent::Sample(*sample)).ok();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(iter: usize) -> Sample {
+        Sample {
+            iter,
+            oracle_calls: iter as u64,
+            elapsed_s: 0.0,
+            objective: -1.0,
+            gap: 0.5,
+        }
+    }
+
+    #[test]
+    fn collect_observer_records_in_order() {
+        let mut obs = CollectObserver::new();
+        obs.on_apply(1, 0.5, 0.1);
+        obs.on_sample(&sample(1));
+        obs.on_apply(2, 0.25, 0.05);
+        assert_eq!(obs.applies, vec![(1, 0.5, 0.1), (2, 0.25, 0.05)]);
+        assert_eq!(obs.samples.len(), 1);
+        assert_eq!(obs.samples[0].iter, 1);
+    }
+
+    #[test]
+    fn channel_observer_streams_and_survives_dropped_receiver() {
+        let (mut obs, rx) = ChannelObserver::pair();
+        obs.on_sample(&sample(3));
+        match rx.recv().unwrap() {
+            LiveEvent::Sample(s) => assert_eq!(s.iter, 3),
+            other => panic!("{other:?}"),
+        }
+        drop(rx);
+        // Must not panic or error once the consumer is gone.
+        obs.on_apply(4, 1.0, 0.0);
+        obs.on_sample(&sample(4));
+    }
+
+    #[test]
+    fn unit_is_noop_observer() {
+        let obs: &mut dyn Observer = &mut ();
+        obs.on_apply(1, 0.1, 0.2);
+        obs.on_sample(&sample(1));
+    }
+}

@@ -1,0 +1,204 @@
+//! Problem registry: enum dispatch over the built-in problems plus the
+//! single source of engine-capability errors.
+//!
+//! [`ProblemInstance`] collapses the launcher's problem x engine match
+//! matrix: `ProblemInstance::from_config` builds any registered problem
+//! from layered config, and [`Runner`](crate::run::Runner) dispatches any
+//! engine over it. The "parameter-space problems only" restriction of the
+//! `pbcd`/`lockfree` engines is enforced here, in one place, instead of
+//! ad-hoc `bail!`s per call site.
+
+use super::spec::Engine;
+use crate::data::{mixture, ocr_like, signal};
+use crate::problems::gfl::Gfl;
+use crate::problems::simplex_qp::SimplexQp;
+use crate::problems::ssvm::chain::ChainSsvm;
+use crate::problems::ssvm::multiclass::MulticlassSsvm;
+use crate::problems::Problem;
+use crate::util::config::Config;
+use anyhow::{anyhow, bail, Result};
+use std::sync::Arc;
+
+/// Registered problem names — the CLI `solve <problem>` vocabulary.
+pub const PROBLEM_NAMES: &[&str] = &["gfl", "ssvm", "multiclass", "qp"];
+
+/// The capability error for engines restricted to parameter-space
+/// problems. Every dispatch path (registry and generic) routes through
+/// this one constructor.
+pub(crate) fn parameter_space_error(
+    engine: &Engine,
+    problem: &str,
+) -> anyhow::Error {
+    anyhow!(
+        "engine `{}` requires a parameter-space problem (gfl/qp): \
+         `{problem}` keeps per-block state on the server",
+        engine.name()
+    )
+}
+
+/// A built-in problem, constructed from config and solvable by any
+/// supported engine through [`Runner::solve`](crate::run::Runner::solve).
+pub enum ProblemInstance {
+    Gfl(Gfl),
+    Qp(SimplexQp),
+    Chain(ChainSsvm),
+    Multiclass(MulticlassSsvm),
+}
+
+impl ProblemInstance {
+    /// Build a registered problem from layered config. Section keys match
+    /// the historical launcher defaults (`[gfl]`, `[ssvm]`, `[multiclass]`,
+    /// `[qp]`); data generation is seeded from `run.seed`.
+    pub fn from_config(name: &str, cfg: &Config) -> Result<Self> {
+        let seed = cfg.get_u64("run.seed", 1);
+        match name {
+            "gfl" => {
+                let d = cfg.get_usize("gfl.d", 10);
+                let n = cfg.get_usize("gfl.n", 100);
+                let lam = cfg.get_f64("gfl.lambda", 0.01);
+                let segments = cfg.get_usize("gfl.segments", 6);
+                let noise = cfg.get_f64("gfl.noise", 0.5);
+                let sig =
+                    signal::piecewise_constant(d, n, segments, 2.0, noise, seed);
+                Ok(ProblemInstance::Gfl(Gfl::new(d, n, lam, sig.noisy)))
+            }
+            "ssvm" => {
+                let n = cfg.get_usize("ssvm.n", 600);
+                let k = cfg.get_usize("ssvm.k", 26);
+                let d = cfg.get_usize("ssvm.d", 128);
+                let ell = cfg.get_usize("ssvm.ell", 9);
+                let lam = cfg.get_f64("ssvm.lambda", 1.0);
+                let noise = cfg.get_f64("ssvm.noise", 0.15);
+                let data =
+                    Arc::new(ocr_like::generate(n, k, d, ell, noise, seed));
+                Ok(ProblemInstance::Chain(ChainSsvm::new(data, lam)))
+            }
+            "multiclass" => {
+                let n = cfg.get_usize("multiclass.n", 800);
+                let k = cfg.get_usize("multiclass.k", 10);
+                let d = cfg.get_usize("multiclass.d", 64);
+                let lam = cfg.get_f64("multiclass.lambda", 0.01);
+                let noise = cfg.get_f64("multiclass.noise", 0.05);
+                let data = Arc::new(mixture::generate(n, k, d, noise, seed));
+                Ok(ProblemInstance::Multiclass(MulticlassSsvm::new(data, lam)))
+            }
+            "qp" => {
+                let n = cfg.get_usize("qp.n", 64);
+                let m = cfg.get_usize("qp.m", 5);
+                let mu = cfg.get_f64("qp.mu", 0.1);
+                Ok(ProblemInstance::Qp(SimplexQp::random(
+                    n, m, 1.0, mu, 4, seed,
+                )))
+            }
+            other => bail!(
+                "unknown problem {other:?}; registered: {PROBLEM_NAMES:?}"
+            ),
+        }
+    }
+
+    /// The inner problem's name (`gfl`, `simplex_qp`, `ssvm_chain`,
+    /// `ssvm_multiclass`).
+    pub fn name(&self) -> &'static str {
+        match self {
+            ProblemInstance::Gfl(p) => p.name(),
+            ProblemInstance::Qp(p) => p.name(),
+            ProblemInstance::Chain(p) => p.name(),
+            ProblemInstance::Multiclass(p) => p.name(),
+        }
+    }
+
+    /// Number of coordinate blocks n.
+    pub fn num_blocks(&self) -> usize {
+        match self {
+            ProblemInstance::Gfl(p) => p.num_blocks(),
+            ProblemInstance::Qp(p) => p.num_blocks(),
+            ProblemInstance::Chain(p) => p.num_blocks(),
+            ProblemInstance::Multiclass(p) => p.num_blocks(),
+        }
+    }
+
+    /// Shared-parameter dimension.
+    pub fn param_dim(&self) -> usize {
+        match self {
+            ProblemInstance::Gfl(p) => p.param_dim(),
+            ProblemInstance::Qp(p) => p.param_dim(),
+            ProblemInstance::Chain(p) => p.param_dim(),
+            ProblemInstance::Multiclass(p) => p.param_dim(),
+        }
+    }
+
+    /// Whether the problem exposes block projections + a stateless server
+    /// (what the `pbcd` and `lockfree` engines need).
+    pub fn is_parameter_space(&self) -> bool {
+        matches!(self, ProblemInstance::Gfl(_) | ProblemInstance::Qp(_))
+    }
+
+    /// Capability check: can `engine` solve this problem?
+    pub fn supports(&self, engine: &Engine) -> Result<()> {
+        if engine.requires_parameter_space() && !self.is_parameter_space() {
+            return Err(parameter_space_error(engine, self.name()));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_cfg() -> Config {
+        Config::parse(
+            "[run]\nseed = 3\n\
+             [gfl]\nd = 4\nn = 20\n\
+             [qp]\nn = 12\nm = 3\n\
+             [ssvm]\nn = 12\nk = 3\nd = 6\nell = 4\n\
+             [multiclass]\nn = 16\nk = 3\nd = 6\n",
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn builds_every_registered_problem() {
+        let cfg = small_cfg();
+        for &name in PROBLEM_NAMES {
+            let p = ProblemInstance::from_config(name, &cfg).unwrap();
+            assert!(p.num_blocks() > 0, "{name}");
+            assert!(p.param_dim() > 0, "{name}");
+        }
+    }
+
+    #[test]
+    fn rejects_unknown_problem() {
+        assert!(ProblemInstance::from_config("nosuch", &small_cfg()).is_err());
+    }
+
+    #[test]
+    fn capability_matrix() {
+        let cfg = small_cfg();
+        let engines = [
+            Engine::sequential(),
+            Engine::batch(),
+            Engine::delayed(crate::sim::delay::DelayModel::None),
+            Engine::pbcd(),
+            Engine::asynchronous(2),
+            Engine::synchronous(2),
+            Engine::lockfree(2),
+        ];
+        for &name in PROBLEM_NAMES {
+            let p = ProblemInstance::from_config(name, &cfg).unwrap();
+            for engine in &engines {
+                let ok = p.supports(engine).is_ok();
+                let expect = !engine.requires_parameter_space()
+                    || p.is_parameter_space();
+                assert_eq!(ok, expect, "{name} x {}", engine.name());
+            }
+        }
+        // The error names the restriction.
+        let ssvm = ProblemInstance::from_config("ssvm", &cfg).unwrap();
+        let err = ssvm
+            .supports(&Engine::lockfree(2))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("parameter-space"), "{err}");
+    }
+}

@@ -1,0 +1,98 @@
+//! The unified solve report: one result surface over all engines.
+//!
+//! [`Report`] merges the sequential [`SolveResult`] and the threaded
+//! [`RunResult`] into a single shape — trace, final/raw parameter,
+//! counters, wall-clock, and seconds-per-effective-pass — so callers never
+//! branch on which family of engine produced a result.
+
+use crate::coordinator::RunResult;
+use crate::solver::SolveResult;
+use crate::util::metrics::{CounterSnapshot, Sample, Trace};
+
+/// Outcome of a [`Runner`](crate::run::Runner) solve.
+#[derive(Debug, Clone)]
+pub struct Report {
+    /// Canonical name of the engine that produced this report.
+    pub engine: &'static str,
+    /// Convergence trace (always ends with a final sample).
+    pub trace: Trace,
+    /// The reported iterate: the weighted average when averaging was on,
+    /// otherwise the final raw iterate.
+    pub param: Vec<f32>,
+    /// The final raw (non-averaged) iterate.
+    pub raw_param: Vec<f32>,
+    /// Event counters (oracle calls, applied/dropped updates, collisions,
+    /// server iterations). Sequential engines have zero collisions and
+    /// count every non-dropped oracle call as applied.
+    pub counters: CounterSnapshot,
+    pub elapsed_s: f64,
+    /// Wall-clock seconds per effective data pass (n applied updates);
+    /// infinite when nothing was applied.
+    pub secs_per_pass: f64,
+}
+
+impl Report {
+    /// Last (final) trace sample.
+    pub fn last(&self) -> Option<&Sample> {
+        self.trace.last()
+    }
+
+    pub fn oracle_calls(&self) -> u64 {
+        self.counters.oracle_calls
+    }
+
+    pub fn iterations(&self) -> u64 {
+        self.counters.iterations
+    }
+
+    pub fn dropped(&self) -> u64 {
+        self.counters.dropped
+    }
+
+    /// Effective data passes consumed (oracle calls / n).
+    pub fn epochs(&self, num_blocks: usize) -> f64 {
+        self.counters.oracle_calls as f64 / num_blocks.max(1) as f64
+    }
+
+    /// Wrap a sequential solve result.
+    pub fn from_solve(
+        engine: &'static str,
+        num_blocks: usize,
+        r: SolveResult,
+    ) -> Report {
+        let applied = r.oracle_calls.saturating_sub(r.dropped);
+        let passes = applied as f64 / num_blocks.max(1) as f64;
+        Report {
+            engine,
+            trace: r.trace,
+            param: r.param,
+            raw_param: r.raw_param,
+            counters: CounterSnapshot {
+                oracle_calls: r.oracle_calls,
+                updates_applied: applied,
+                collisions: 0,
+                dropped: r.dropped,
+                iterations: r.iterations,
+            },
+            elapsed_s: r.elapsed_s,
+            secs_per_pass: if passes > 0.0 {
+                r.elapsed_s / passes
+            } else {
+                f64::INFINITY
+            },
+        }
+    }
+
+    /// Wrap a threaded coordinator result.
+    pub fn from_run(engine: &'static str, r: RunResult) -> Report {
+        Report {
+            engine,
+            trace: r.trace,
+            param: r.param,
+            raw_param: r.raw_param,
+            counters: r.counters,
+            elapsed_s: r.elapsed_s,
+            secs_per_pass: r.secs_per_pass,
+        }
+    }
+}

@@ -1,0 +1,1026 @@
+//! The unified run specification: one builder covering every execution
+//! engine.
+//!
+//! [`RunSpec`] carries the knobs shared by all engines (tau, line search,
+//! averaging, sampling, stop conditions, seed); engine-specific knobs live
+//! inside the [`Engine`] variant they belong to, so a spec can never carry
+//! a knob its engine would silently ignore. `RunSpec::from_config` is the
+//! single path by which `--config` / `--set` layering reaches every knob.
+//!
+//! A spec *lowers* to the legacy per-family option structs through
+//! [`RunSpec::solve_options`] / [`RunSpec::delay_options`] /
+//! [`RunSpec::run_config`]; the [`Runner`](crate::run::Runner) is the only
+//! production caller of those, which is what makes the lowering (and thus
+//! the equivalence tests in `rust/tests/runner_equivalence.rs`) exhaustive.
+
+use crate::coordinator::shared::SnapshotMode;
+use crate::coordinator::RunConfig;
+use crate::sim::delay::DelayModel;
+use crate::sim::straggler::StragglerModel;
+use crate::solver::delayed::DelayOptions;
+use crate::solver::{SolveOptions, StopCond};
+use crate::util::config::Config;
+use anyhow::{anyhow, bail, ensure, Result};
+
+/// Canonical engine names in registry order — the CLI `--mode` vocabulary.
+pub const ENGINE_NAMES: &[&str] =
+    &["seq", "batch", "delayed", "pbcd", "async", "sync", "lockfree"];
+
+/// Worker straggler behaviour, sized at lowering time from the engine's
+/// worker count — the spec can never carry a model whose arity disagrees
+/// with `workers` (the historical `RunConfig::default()` footgun).
+#[derive(Debug, Clone, PartialEq)]
+pub enum StragglerSpec {
+    /// All workers at full speed.
+    None,
+    /// One straggler (worker 0) with return probability `p` (Fig 3a).
+    Single { p: f64 },
+    /// Heterogeneous fleet `p_i = theta + i/T` (Fig 3b).
+    Heterogeneous { theta: f64 },
+    /// Explicit per-worker probabilities; the arity is validated against
+    /// the engine's worker count when the spec is lowered.
+    Explicit(StragglerModel),
+}
+
+impl StragglerSpec {
+    /// Materialize a model for `workers` workers.
+    pub fn resolve(&self, workers: usize) -> Result<StragglerModel> {
+        match self {
+            StragglerSpec::None => Ok(StragglerModel::none(workers)),
+            StragglerSpec::Single { p } => {
+                Ok(StragglerModel::single(workers, *p))
+            }
+            StragglerSpec::Heterogeneous { theta } => {
+                Ok(StragglerModel::heterogeneous(workers, *theta))
+            }
+            StragglerSpec::Explicit(m) => {
+                ensure!(
+                    m.probs.len() == workers,
+                    "straggler model lists {} return probabilities but the \
+                     engine runs {} workers",
+                    m.probs.len(),
+                    workers
+                );
+                Ok(m.clone())
+            }
+        }
+    }
+
+    /// Parse the CLI/config grammar: `none`, `single:P`, `hetero:THETA`,
+    /// or an explicit comma-separated probability list `p1,p2,...`.
+    pub fn parse(text: &str) -> Result<Self> {
+        let text = text.trim();
+        if text.is_empty() || text == "none" {
+            return Ok(StragglerSpec::None);
+        }
+        if let Some(p) = text.strip_prefix("single:") {
+            let p: f64 = p
+                .trim()
+                .parse()
+                .map_err(|_| anyhow!("straggler single:{p:?}: bad probability"))?;
+            return Ok(StragglerSpec::Single { p });
+        }
+        if let Some(theta) = text.strip_prefix("hetero:") {
+            let theta: f64 = theta
+                .trim()
+                .parse()
+                .map_err(|_| anyhow!("straggler hetero:{theta:?}: bad theta"))?;
+            return Ok(StragglerSpec::Heterogeneous { theta });
+        }
+        if text.contains(',') || text.parse::<f64>().is_ok() {
+            let probs = text
+                .split(',')
+                .map(|p| {
+                    p.trim().parse::<f64>().map_err(|_| {
+                        anyhow!("straggler list: bad probability {p:?}")
+                    })
+                })
+                .collect::<Result<Vec<f64>>>()?;
+            return Ok(StragglerSpec::Explicit(StragglerModel { probs }));
+        }
+        bail!(
+            "unknown straggler spec {text:?} \
+             (expected none | single:P | hetero:THETA | p1,p2,...)"
+        )
+    }
+}
+
+/// One of the seven execution engines, with its engine-specific knobs
+/// scoped under the variant. Defaults (via the constructors below) mirror
+/// the historical `SolveOptions`/`RunConfig`/`DelayOptions` defaults so
+/// lowering a fresh spec reproduces legacy behaviour exactly.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Engine {
+    /// Sequential minibatch BCFW (tau = 1 is exactly BCFW) — the paper's
+    /// Algorithm 1 semantics with a perfect server.
+    Seq,
+    /// Classical batch Frank-Wolfe (tau = n; the spec's `tau` is ignored).
+    Batch,
+    /// Sequential BCFW with iid oracle staleness (paper §2.3/§3.4, Fig 4).
+    Delayed {
+        model: DelayModel,
+        /// Snapshot-history capacity (delays beyond it are dropped).
+        history: usize,
+        /// Enforce the paper's k/2 staleness acceptance rule.
+        enforce_drop_rule: bool,
+    },
+    /// Parallel block-coordinate descent baseline (§D.4); requires a
+    /// parameter-space (projectable) problem.
+    Pbcd,
+    /// AP-BCFW: asynchronous workers + minibatch server (Algorithms 1-2).
+    Async {
+        workers: usize,
+        straggler: StragglerSpec,
+        /// Drop updates staler than k/2 (paper Thm 4).
+        staleness_rule: bool,
+        /// Harder-subproblem simulation: redo each solve m ~ U(lo, hi)
+        /// times (Fig 2d).
+        work_multiplier: (u32, u32),
+        /// Overwrite colliding pending updates with fresher ones (paper
+        /// Algorithm 1 step 1); `false` keeps the old one (ablation).
+        collision_overwrite: bool,
+        /// Worker->server queue capacity as a multiple of tau.
+        queue_factor: usize,
+        snapshot_mode: SnapshotMode,
+    },
+    /// SP-BCFW: the synchronous minibatch comparator (§3.3).
+    Sync {
+        workers: usize,
+        straggler: StragglerSpec,
+        snapshot_mode: SnapshotMode,
+    },
+    /// Serverless lock-free tau = 1 variant (Algorithm 3); requires a
+    /// parameter-space problem and always uses torn snapshots.
+    Lockfree { workers: usize },
+}
+
+impl Engine {
+    /// Sequential minibatch BCFW.
+    pub fn sequential() -> Self {
+        Engine::Seq
+    }
+
+    /// Classical batch Frank-Wolfe.
+    pub fn batch() -> Self {
+        Engine::Batch
+    }
+
+    /// Delayed-oracle BCFW with the default history/drop-rule knobs
+    /// (matches `DelayOptions::default()`).
+    pub fn delayed(model: DelayModel) -> Self {
+        Engine::Delayed {
+            model,
+            history: 512,
+            enforce_drop_rule: true,
+        }
+    }
+
+    /// Parallel BCD baseline.
+    pub fn pbcd() -> Self {
+        Engine::Pbcd
+    }
+
+    /// Asynchronous AP-BCFW with the historical `RunConfig` defaults.
+    pub fn asynchronous(workers: usize) -> Self {
+        Engine::Async {
+            workers,
+            straggler: StragglerSpec::None,
+            staleness_rule: true,
+            work_multiplier: (1, 1),
+            collision_overwrite: true,
+            queue_factor: 4,
+            snapshot_mode: SnapshotMode::Torn,
+        }
+    }
+
+    /// Synchronous SP-BCFW.
+    pub fn synchronous(workers: usize) -> Self {
+        Engine::Sync {
+            workers,
+            straggler: StragglerSpec::None,
+            snapshot_mode: SnapshotMode::Torn,
+        }
+    }
+
+    /// Lock-free serverless variant.
+    pub fn lockfree(workers: usize) -> Self {
+        Engine::Lockfree { workers }
+    }
+
+    /// Canonical name (the CLI `--mode` value).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Engine::Seq => "seq",
+            Engine::Batch => "batch",
+            Engine::Delayed { .. } => "delayed",
+            Engine::Pbcd => "pbcd",
+            Engine::Async { .. } => "async",
+            Engine::Sync { .. } => "sync",
+            Engine::Lockfree { .. } => "lockfree",
+        }
+    }
+
+    /// Worker-thread count (1 for the sequential engines).
+    pub fn workers(&self) -> usize {
+        match self {
+            Engine::Async { workers, .. }
+            | Engine::Sync { workers, .. }
+            | Engine::Lockfree { workers } => *workers,
+            _ => 1,
+        }
+    }
+
+    /// Whether the engine spawns worker threads.
+    pub fn is_threaded(&self) -> bool {
+        matches!(
+            self,
+            Engine::Async { .. } | Engine::Sync { .. } | Engine::Lockfree { .. }
+        )
+    }
+
+    /// Whether the engine needs a parameter-space (projectable, stateless
+    /// server) problem — the registry turns this into the single
+    /// "parameter-space problems only" error.
+    pub fn requires_parameter_space(&self) -> bool {
+        matches!(self, Engine::Pbcd | Engine::Lockfree { .. })
+    }
+
+    /// Set the straggler model (async/sync engines).
+    pub fn with_straggler(mut self, spec: StragglerSpec) -> Self {
+        match &mut self {
+            Engine::Async { straggler, .. } | Engine::Sync { straggler, .. } => {
+                *straggler = spec;
+            }
+            _ => panic!("engine `{}` has no `straggler` knob", self.name()),
+        }
+        self
+    }
+
+    /// Toggle the k/2 staleness rule (async engine).
+    pub fn with_staleness_rule(mut self, on: bool) -> Self {
+        if let Engine::Async { staleness_rule, .. } = &mut self {
+            *staleness_rule = on;
+        } else {
+            panic!("engine `{}` has no `staleness_rule` knob", self.name());
+        }
+        self
+    }
+
+    /// Set the harder-subproblem work multiplier range (async engine).
+    pub fn with_work_multiplier(mut self, lo: u32, hi: u32) -> Self {
+        if let Engine::Async {
+            work_multiplier, ..
+        } = &mut self
+        {
+            *work_multiplier = (lo, hi);
+        } else {
+            panic!("engine `{}` has no `work_multiplier` knob", self.name());
+        }
+        self
+    }
+
+    /// Set the collision policy (async engine).
+    pub fn with_collision_overwrite(mut self, on: bool) -> Self {
+        if let Engine::Async {
+            collision_overwrite,
+            ..
+        } = &mut self
+        {
+            *collision_overwrite = on;
+        } else {
+            panic!(
+                "engine `{}` has no `collision_overwrite` knob",
+                self.name()
+            );
+        }
+        self
+    }
+
+    /// Set the backpressure queue depth in multiples of tau (async engine).
+    pub fn with_queue_factor(mut self, qf: usize) -> Self {
+        if let Engine::Async { queue_factor, .. } = &mut self {
+            *queue_factor = qf;
+        } else {
+            panic!("engine `{}` has no `queue_factor` knob", self.name());
+        }
+        self
+    }
+
+    /// Set the shared-parameter snapshot contract (async/sync engines; the
+    /// lock-free engine is torn by construction).
+    pub fn with_snapshot_mode(mut self, mode: SnapshotMode) -> Self {
+        match &mut self {
+            Engine::Async { snapshot_mode, .. }
+            | Engine::Sync { snapshot_mode, .. } => {
+                *snapshot_mode = mode;
+            }
+            _ => panic!("engine `{}` has no `snapshot_mode` knob", self.name()),
+        }
+        self
+    }
+
+    /// Set the delay-history capacity (delayed engine).
+    pub fn with_delay_history(mut self, cap: usize) -> Self {
+        if let Engine::Delayed { history, .. } = &mut self {
+            *history = cap;
+        } else {
+            panic!("engine `{}` has no `delay_history` knob", self.name());
+        }
+        self
+    }
+
+    /// Toggle the delayed engine's k/2 drop rule (ablation).
+    pub fn with_drop_rule(mut self, on: bool) -> Self {
+        if let Engine::Delayed {
+            enforce_drop_rule, ..
+        } = &mut self
+        {
+            *enforce_drop_rule = on;
+        } else {
+            panic!("engine `{}` has no `drop_rule` knob", self.name());
+        }
+        self
+    }
+}
+
+/// The unified run specification: engine + every cross-engine knob.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunSpec {
+    pub engine: Engine,
+    /// Minibatch size tau (clamped to [1, n] by the engines; ignored by
+    /// `batch`, which always uses tau = n, and `lockfree`, always 1).
+    pub tau: usize,
+    /// Exact coordinate line search instead of the schedule. Not defined
+    /// for `pbcd` (1/L_i steps) or `lockfree` (fixed schedule); `validate`
+    /// rejects it there rather than silently ignoring it.
+    pub line_search: bool,
+    /// Weighted iterate averaging x-bar_k (rho_k prop. to k); the trace
+    /// and `Report::param` then report the averaged iterate. Implemented
+    /// by the seq/batch/delayed/async engines; `validate` rejects it for
+    /// the others rather than silently ignoring it.
+    pub weighted_averaging: bool,
+    /// Trace sample cadence in server iterations.
+    pub sample_every: usize,
+    /// Compute the exact duality gap at sample points (expensive) instead
+    /// of the n/tau-scaled batch-gap estimate.
+    pub exact_gap: bool,
+    pub stop: StopCond,
+    pub seed: u64,
+}
+
+impl RunSpec {
+    /// A spec with the shared-knob defaults (tau 1, no line search, no
+    /// averaging, sample every 64 iterations, estimated gap, default stop
+    /// conditions, seed 0).
+    pub fn new(engine: Engine) -> Self {
+        Self {
+            engine,
+            tau: 1,
+            line_search: false,
+            weighted_averaging: false,
+            sample_every: 64,
+            exact_gap: false,
+            stop: StopCond::default(),
+            seed: 0,
+        }
+    }
+
+    pub fn tau(mut self, tau: usize) -> Self {
+        self.tau = tau;
+        self
+    }
+
+    pub fn line_search(mut self, on: bool) -> Self {
+        self.line_search = on;
+        self
+    }
+
+    pub fn weighted_averaging(mut self, on: bool) -> Self {
+        self.weighted_averaging = on;
+        self
+    }
+
+    pub fn sample_every(mut self, every: usize) -> Self {
+        self.sample_every = every;
+        self
+    }
+
+    pub fn exact_gap(mut self, on: bool) -> Self {
+        self.exact_gap = on;
+        self
+    }
+
+    pub fn stop(mut self, stop: StopCond) -> Self {
+        self.stop = stop;
+        self
+    }
+
+    pub fn max_epochs(mut self, epochs: f64) -> Self {
+        self.stop.max_epochs = epochs;
+        self
+    }
+
+    pub fn max_secs(mut self, secs: f64) -> Self {
+        self.stop.max_secs = secs;
+        self
+    }
+
+    pub fn eps_gap(mut self, eps: f64) -> Self {
+        self.stop.eps_gap = Some(eps);
+        self
+    }
+
+    /// Stop at `f - f_star <= eps_primal`.
+    pub fn target(mut self, f_star: f64, eps_primal: f64) -> Self {
+        self.stop.f_star = Some(f_star);
+        self.stop.eps_primal = Some(eps_primal);
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Check the spec is self-consistent (worker counts, straggler arity,
+    /// sample cadence, work-multiplier range). `Runner::new` calls this.
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.tau >= 1, "tau must be >= 1");
+        ensure!(self.sample_every >= 1, "sample_every must be >= 1");
+        if self.weighted_averaging {
+            ensure!(
+                !matches!(
+                    self.engine,
+                    Engine::Pbcd | Engine::Sync { .. } | Engine::Lockfree { .. }
+                ),
+                "engine `{}` does not implement weighted iterate averaging \
+                 (supported: seq, batch, delayed, async)",
+                self.engine.name()
+            );
+        }
+        if self.line_search {
+            ensure!(
+                !matches!(
+                    self.engine,
+                    Engine::Pbcd | Engine::Lockfree { .. }
+                ),
+                "engine `{}` has no line search (pbcd takes 1/L_i gradient \
+                 steps; lockfree uses the fixed schedule)",
+                self.engine.name()
+            );
+        }
+        if self.engine.is_threaded() {
+            ensure!(
+                self.engine.workers() >= 1,
+                "engine `{}` needs at least one worker",
+                self.engine.name()
+            );
+        }
+        match &self.engine {
+            Engine::Async {
+                workers,
+                straggler,
+                work_multiplier: (lo, hi),
+                ..
+            } => {
+                straggler.resolve(*workers)?;
+                ensure!(
+                    *lo >= 1 && lo <= hi,
+                    "work_multiplier range ({lo}, {hi}) must satisfy 1 <= lo <= hi"
+                );
+            }
+            Engine::Sync {
+                workers, straggler, ..
+            } => {
+                straggler.resolve(*workers)?;
+            }
+            Engine::Delayed { history, .. } => {
+                ensure!(*history >= 1, "delay history must be >= 1");
+            }
+            _ => {}
+        }
+        Ok(())
+    }
+
+    /// Build a spec from layered config (`[run]` section). This is the one
+    /// path by which `--config` files and `--set` overrides reach every
+    /// knob; the CLI's convenience flags lower to the same keys.
+    ///
+    /// Recognized keys (all under `run.`): `mode`, `tau`, `workers`,
+    /// `epochs`/`max_epochs`, `max_secs`, `eps_gap`, `eps_primal`,
+    /// `f_star`, `line_search`, `weighted_averaging`, `sample_every`,
+    /// `exact_gap`, `seed`, `straggler`, `snapshot_mode`, `queue_factor`,
+    /// `staleness_rule`, `collision_overwrite`, `work_multiplier`,
+    /// `delay`, `delay_history`, `drop_rule`.
+    pub fn from_config(cfg: &Config) -> Result<Self> {
+        let mode = cfg.get_or("run.mode", "seq");
+        let workers = cfg.get_usize("run.workers", 2);
+        let straggler =
+            StragglerSpec::parse(&cfg.get_or("run.straggler", "none"))?;
+        let snapshot_mode = match cfg.get_or("run.snapshot_mode", "torn").as_str()
+        {
+            "torn" => SnapshotMode::Torn,
+            "consistent" => SnapshotMode::Consistent,
+            other => bail!(
+                "unknown run.snapshot_mode {other:?} (torn | consistent)"
+            ),
+        };
+        let engine = match mode.as_str() {
+            "seq" => Engine::Seq,
+            "batch" => Engine::Batch,
+            "delayed" => Engine::Delayed {
+                model: parse_delay(&cfg.get_or("run.delay", "none"))?,
+                history: cfg.get_usize("run.delay_history", 512),
+                enforce_drop_rule: cfg.get_bool("run.drop_rule", true),
+            },
+            "pbcd" => Engine::Pbcd,
+            "async" => {
+                let wm = cfg.get_usize_list("run.work_multiplier", &[1, 1]);
+                ensure!(
+                    matches!(wm.len(), 1 | 2),
+                    "run.work_multiplier expects `m` or `lo,hi`"
+                );
+                let lo = wm[0] as u32;
+                let hi = *wm.last().unwrap() as u32;
+                Engine::Async {
+                    workers,
+                    straggler,
+                    staleness_rule: cfg.get_bool("run.staleness_rule", true),
+                    work_multiplier: (lo, hi),
+                    collision_overwrite: cfg
+                        .get_bool("run.collision_overwrite", true),
+                    queue_factor: cfg.get_usize("run.queue_factor", 4),
+                    snapshot_mode,
+                }
+            }
+            "sync" => Engine::Sync {
+                workers,
+                straggler,
+                snapshot_mode,
+            },
+            "lockfree" => {
+                // The engine's own contract (coordinator/lockfree.rs) is
+                // to reject consistent snapshots loudly — hogwild updates
+                // are inherently torn — so an explicit request must not be
+                // silently downgraded here.
+                ensure!(
+                    snapshot_mode == SnapshotMode::Torn,
+                    "run.snapshot_mode=consistent is not available for the \
+                     lockfree engine (hogwild updates are inherently torn)"
+                );
+                Engine::Lockfree { workers }
+            }
+            other => bail!(
+                "unknown run.mode {other:?}; known engines: {ENGINE_NAMES:?}"
+            ),
+        };
+        // Engine-scoped keys must not be silently ignored (the builder
+        // methods panic for the same misuse): reject any that were set but
+        // have no knob on the selected engine. `run.workers` and `run.tau`
+        // are exempt — shared across the threaded/sequential families and
+        // documented as ignored where not applicable.
+        const SCOPED_KEYS: &[(&str, &[&str])] = &[
+            ("run.straggler", &["async", "sync"]),
+            // lockfree accepts only the torn default (checked above).
+            ("run.snapshot_mode", &["async", "sync", "lockfree"]),
+            ("run.queue_factor", &["async"]),
+            ("run.staleness_rule", &["async"]),
+            ("run.collision_overwrite", &["async"]),
+            ("run.work_multiplier", &["async"]),
+            ("run.delay", &["delayed"]),
+            ("run.delay_history", &["delayed"]),
+            ("run.drop_rule", &["delayed"]),
+        ];
+        let mode_name = engine.name();
+        for (key, modes) in SCOPED_KEYS {
+            if cfg.get(key).is_some() && !modes.contains(&mode_name) {
+                bail!(
+                    "{key} has no effect with run.mode={mode_name} \
+                     (applies to {modes:?}); remove it or change the mode"
+                );
+            }
+        }
+        let defaults = StopCond::default();
+        let stop = StopCond {
+            f_star: cfg
+                .get("run.f_star")
+                .map(|_| cfg.get_f64("run.f_star", 0.0)),
+            eps_primal: cfg
+                .get("run.eps_primal")
+                .map(|_| cfg.get_f64("run.eps_primal", 0.0)),
+            eps_gap: cfg
+                .get("run.eps_gap")
+                .map(|_| cfg.get_f64("run.eps_gap", 0.0)),
+            max_epochs: cfg.get_f64(
+                "run.epochs",
+                cfg.get_f64("run.max_epochs", defaults.max_epochs),
+            ),
+            max_secs: cfg.get_f64("run.max_secs", defaults.max_secs),
+        };
+        Ok(RunSpec {
+            engine,
+            tau: cfg.get_usize("run.tau", 1),
+            line_search: cfg.get_bool("run.line_search", false),
+            weighted_averaging: cfg.get_bool("run.weighted_averaging", false),
+            sample_every: cfg.get_usize("run.sample_every", 64),
+            exact_gap: cfg.get_bool("run.exact_gap", false),
+            stop,
+            // The historical launcher default; ProblemInstance::from_config
+            // seeds data generation from the same key and default, so one
+            // un-seeded `apbcfw solve` stays internally consistent and
+            // reproducible against pre-Runner output.
+            seed: cfg.get_u64("run.seed", 1),
+        })
+    }
+
+    /// Lower the shared knobs to the sequential-solver options struct.
+    pub fn solve_options(&self) -> SolveOptions {
+        SolveOptions {
+            tau: self.tau,
+            line_search: self.line_search,
+            weighted_averaging: self.weighted_averaging,
+            sample_every: self.sample_every,
+            exact_gap: self.exact_gap,
+            stop: self.stop,
+            seed: self.seed,
+        }
+    }
+
+    /// Lower the delayed engine's knobs; `None` for other engines.
+    pub fn delay_options(&self) -> Option<DelayOptions> {
+        match &self.engine {
+            Engine::Delayed {
+                model,
+                history,
+                enforce_drop_rule,
+            } => Some(DelayOptions {
+                model: *model,
+                history: *history,
+                enforce_drop_rule: *enforce_drop_rule,
+            }),
+            _ => None,
+        }
+    }
+
+    /// Lower to the threaded coordinator config. The straggler model's
+    /// arity is derived from the engine's worker count here (and an
+    /// explicit mismatched model is rejected). Errors for sequential
+    /// engines.
+    pub fn run_config(&self) -> Result<RunConfig> {
+        let cfg = match &self.engine {
+            Engine::Async {
+                workers,
+                straggler,
+                staleness_rule,
+                work_multiplier,
+                collision_overwrite,
+                queue_factor,
+                snapshot_mode,
+            } => RunConfig {
+                workers: *workers,
+                tau: self.tau,
+                line_search: self.line_search,
+                staleness_rule: *staleness_rule,
+                straggler: straggler.resolve(*workers)?,
+                work_multiplier: *work_multiplier,
+                sample_every: self.sample_every,
+                exact_gap: self.exact_gap,
+                collision_overwrite: *collision_overwrite,
+                queue_factor: *queue_factor,
+                weighted_averaging: self.weighted_averaging,
+                snapshot_mode: *snapshot_mode,
+                stop: self.stop,
+                seed: self.seed,
+            },
+            Engine::Sync {
+                workers,
+                straggler,
+                snapshot_mode,
+            } => RunConfig {
+                workers: *workers,
+                tau: self.tau,
+                line_search: self.line_search,
+                straggler: straggler.resolve(*workers)?,
+                sample_every: self.sample_every,
+                exact_gap: self.exact_gap,
+                snapshot_mode: *snapshot_mode,
+                stop: self.stop,
+                seed: self.seed,
+                ..RunConfig::default()
+            },
+            Engine::Lockfree { workers } => RunConfig {
+                workers: *workers,
+                tau: 1,
+                straggler: StragglerModel::none(*workers),
+                sample_every: self.sample_every,
+                exact_gap: self.exact_gap,
+                // The lock-free engine asserts torn snapshots (hogwild).
+                snapshot_mode: SnapshotMode::Torn,
+                stop: self.stop,
+                seed: self.seed,
+                ..RunConfig::default()
+            },
+            other => bail!(
+                "engine `{}` is sequential; it lowers to SolveOptions, \
+                 not RunConfig",
+                other.name()
+            ),
+        };
+        Ok(cfg)
+    }
+}
+
+fn parse_delay(text: &str) -> Result<DelayModel> {
+    let text = text.trim();
+    if text.is_empty() || text == "none" {
+        return Ok(DelayModel::None);
+    }
+    if let Some(k) = text.strip_prefix("fixed:") {
+        let k: u64 = k
+            .trim()
+            .parse()
+            .map_err(|_| anyhow!("delay fixed:{k:?}: bad integer"))?;
+        return Ok(DelayModel::Fixed(k));
+    }
+    if let Some(kappa) = text.strip_prefix("poisson:") {
+        let kappa: f64 = kappa
+            .trim()
+            .parse()
+            .map_err(|_| anyhow!("delay poisson:{kappa:?}: bad kappa"))?;
+        return Ok(DelayModel::Poisson { kappa });
+    }
+    if let Some(kappa) = text.strip_prefix("pareto:") {
+        let kappa: f64 = kappa
+            .trim()
+            .parse()
+            .map_err(|_| anyhow!("delay pareto:{kappa:?}: bad kappa"))?;
+        return Ok(DelayModel::pareto_with_mean(kappa));
+    }
+    bail!(
+        "unknown delay model {text:?} \
+         (expected none | fixed:K | poisson:KAPPA | pareto:KAPPA)"
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn engine_names_cover_all_variants() {
+        let engines = [
+            Engine::sequential(),
+            Engine::batch(),
+            Engine::delayed(DelayModel::None),
+            Engine::pbcd(),
+            Engine::asynchronous(2),
+            Engine::synchronous(2),
+            Engine::lockfree(2),
+        ];
+        let names: Vec<&str> = engines.iter().map(|e| e.name()).collect();
+        assert_eq!(names, ENGINE_NAMES);
+    }
+
+    #[test]
+    fn async_defaults_lower_to_legacy_run_config_defaults() {
+        let spec = RunSpec::new(Engine::asynchronous(2)).tau(2);
+        let lowered = spec.run_config().unwrap();
+        let legacy = RunConfig::default();
+        assert_eq!(lowered, legacy);
+    }
+
+    #[test]
+    fn seq_defaults_lower_to_solve_options_fields() {
+        let spec = RunSpec::new(Engine::Seq)
+            .tau(3)
+            .line_search(true)
+            .sample_every(7)
+            .exact_gap(true)
+            .seed(9);
+        let o = spec.solve_options();
+        assert_eq!(o.tau, 3);
+        assert!(o.line_search);
+        assert_eq!(o.sample_every, 7);
+        assert!(o.exact_gap);
+        assert_eq!(o.seed, 9);
+        assert!(!o.weighted_averaging);
+    }
+
+    #[test]
+    fn straggler_arity_derived_from_workers() {
+        for workers in [1usize, 3, 14] {
+            let m = StragglerSpec::Single { p: 0.25 }
+                .resolve(workers)
+                .unwrap();
+            assert_eq!(m.probs.len(), workers);
+            assert_eq!(m.probs[0], 0.25);
+        }
+    }
+
+    #[test]
+    fn explicit_straggler_arity_mismatch_is_rejected() {
+        let spec = RunSpec::new(
+            Engine::asynchronous(3).with_straggler(StragglerSpec::Explicit(
+                StragglerModel::none(2),
+            )),
+        );
+        let err = spec.validate().unwrap_err().to_string();
+        assert!(err.contains("straggler"), "{err}");
+        assert!(spec.run_config().is_err());
+    }
+
+    #[test]
+    fn straggler_spec_parse_grammar() {
+        assert_eq!(StragglerSpec::parse("none").unwrap(), StragglerSpec::None);
+        assert_eq!(
+            StragglerSpec::parse("single:0.2").unwrap(),
+            StragglerSpec::Single { p: 0.2 }
+        );
+        assert_eq!(
+            StragglerSpec::parse("hetero:0.5").unwrap(),
+            StragglerSpec::Heterogeneous { theta: 0.5 }
+        );
+        match StragglerSpec::parse("0.5,1.0,1.0").unwrap() {
+            StragglerSpec::Explicit(m) => {
+                assert_eq!(m.probs, vec![0.5, 1.0, 1.0])
+            }
+            other => panic!("{other:?}"),
+        }
+        assert!(StragglerSpec::parse("warp").is_err());
+    }
+
+    #[test]
+    fn delay_parse_grammar() {
+        assert_eq!(parse_delay("none").unwrap(), DelayModel::None);
+        assert_eq!(parse_delay("fixed:4").unwrap(), DelayModel::Fixed(4));
+        assert_eq!(
+            parse_delay("poisson:10").unwrap(),
+            DelayModel::Poisson { kappa: 10.0 }
+        );
+        assert_eq!(
+            parse_delay("pareto:20").unwrap(),
+            DelayModel::pareto_with_mean(20.0)
+        );
+        assert!(parse_delay("bogus").is_err());
+    }
+
+    #[test]
+    fn from_config_reaches_every_knob() {
+        let cfg = Config::parse(
+            "[run]\n\
+             mode = async\n\
+             workers = 5\n\
+             tau = 10\n\
+             line_search = true\n\
+             weighted_averaging = true\n\
+             sample_every = 8\n\
+             exact_gap = true\n\
+             seed = 42\n\
+             epochs = 12.5\n\
+             max_secs = 30\n\
+             eps_gap = 0.01\n\
+             straggler = single:0.5\n\
+             snapshot_mode = consistent\n\
+             queue_factor = 16\n\
+             staleness_rule = false\n\
+             collision_overwrite = false\n\
+             work_multiplier = 5, 15\n",
+        )
+        .unwrap();
+        let spec = RunSpec::from_config(&cfg).unwrap();
+        let expect = RunSpec::new(
+            Engine::asynchronous(5)
+                .with_straggler(StragglerSpec::Single { p: 0.5 })
+                .with_staleness_rule(false)
+                .with_work_multiplier(5, 15)
+                .with_collision_overwrite(false)
+                .with_queue_factor(16)
+                .with_snapshot_mode(SnapshotMode::Consistent),
+        )
+        .tau(10)
+        .line_search(true)
+        .weighted_averaging(true)
+        .sample_every(8)
+        .exact_gap(true)
+        .seed(42)
+        .max_epochs(12.5)
+        .max_secs(30.0)
+        .eps_gap(0.01);
+        assert_eq!(spec, expect);
+    }
+
+    #[test]
+    fn from_config_delayed_engine() {
+        let cfg = Config::parse(
+            "[run]\nmode = delayed\ndelay = poisson:10\ndelay_history = 4096\n",
+        )
+        .unwrap();
+        let spec = RunSpec::from_config(&cfg).unwrap();
+        assert_eq!(
+            spec.engine,
+            Engine::delayed(DelayModel::Poisson { kappa: 10.0 })
+                .with_delay_history(4096)
+        );
+        assert!(spec.delay_options().unwrap().enforce_drop_rule);
+    }
+
+    #[test]
+    fn from_config_rejects_unknown_mode() {
+        let cfg = Config::parse("[run]\nmode = warp\n").unwrap();
+        assert!(RunSpec::from_config(&cfg).is_err());
+    }
+
+    #[test]
+    fn from_config_rejects_consistent_snapshots_for_lockfree() {
+        let cfg = Config::parse(
+            "[run]\nmode = lockfree\nsnapshot_mode = consistent\n",
+        )
+        .unwrap();
+        let err = RunSpec::from_config(&cfg).unwrap_err().to_string();
+        assert!(err.contains("lockfree"), "{err}");
+        // The torn default still parses.
+        let cfg = Config::parse("[run]\nmode = lockfree\n").unwrap();
+        assert!(RunSpec::from_config(&cfg).is_ok());
+    }
+
+    #[test]
+    fn line_search_rejected_for_engines_without_it() {
+        for engine in [Engine::pbcd(), Engine::lockfree(2)] {
+            let name = engine.name();
+            let err = RunSpec::new(engine)
+                .line_search(true)
+                .validate()
+                .unwrap_err()
+                .to_string();
+            assert!(err.contains("line search"), "{name}: {err}");
+        }
+        assert!(RunSpec::new(Engine::synchronous(2))
+            .line_search(true)
+            .validate()
+            .is_ok());
+    }
+
+    #[test]
+    fn weighted_averaging_rejected_for_engines_without_it() {
+        for engine in [Engine::pbcd(), Engine::synchronous(2), Engine::lockfree(2)]
+        {
+            let name = engine.name();
+            let err = RunSpec::new(engine)
+                .weighted_averaging(true)
+                .validate()
+                .unwrap_err()
+                .to_string();
+            assert!(err.contains("averaging"), "{name}: {err}");
+        }
+        for engine in [
+            Engine::sequential(),
+            Engine::batch(),
+            Engine::delayed(DelayModel::None),
+            Engine::asynchronous(2),
+        ] {
+            assert!(RunSpec::new(engine)
+                .weighted_averaging(true)
+                .validate()
+                .is_ok());
+        }
+    }
+
+    #[test]
+    fn from_config_rejects_engine_scoped_keys_on_wrong_mode() {
+        for (text, needle) in [
+            ("[run]\nmode = seq\nstraggler = single:0.1\n", "straggler"),
+            ("[run]\nmode = sync\nqueue_factor = 64\n", "queue_factor"),
+            ("[run]\nmode = async\ndelay = poisson:5\n", "delay"),
+            ("[run]\nmode = delayed\nwork_multiplier = 5, 15\n", "work"),
+        ] {
+            let cfg = Config::parse(text).unwrap();
+            let err = RunSpec::from_config(&cfg).unwrap_err().to_string();
+            assert!(err.contains(needle), "{text}: {err}");
+        }
+        // Shared knobs stay accepted everywhere.
+        let cfg =
+            Config::parse("[run]\nmode = seq\nworkers = 4\ntau = 2\n").unwrap();
+        assert!(RunSpec::from_config(&cfg).is_ok());
+    }
+
+    #[test]
+    fn from_config_default_seed_matches_registry_default() {
+        // One un-seeded `apbcfw solve` must use the same seed for data
+        // generation (registry) and the solver (spec): the historical 1.
+        let cfg = Config::parse("").unwrap();
+        assert_eq!(RunSpec::from_config(&cfg).unwrap().seed, 1);
+    }
+
+    #[test]
+    fn sequential_engines_refuse_run_config() {
+        for engine in [Engine::Seq, Engine::Batch, Engine::Pbcd] {
+            assert!(RunSpec::new(engine).run_config().is_err());
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "no `queue_factor` knob")]
+    fn knob_on_wrong_engine_panics() {
+        let _ = Engine::Seq.with_queue_factor(8);
+    }
+}

@@ -1,13 +1,24 @@
-//! XLA oracle service: confines the (non-`Send`) PJRT client and compiled
-//! executables to one dedicated thread and serves execution requests over
-//! channels.
+//! Runtime services: the XLA oracle service and the live solve service.
 //!
-//! The `xla` crate's handles hold `Rc`s and raw pointers, so they must not
-//! cross threads. Worker threads instead hold a cheap [`XlaHandle`]
-//! (Send + Sync) and submit raw tensors; the service thread materializes
-//! literals, executes, and ships raw tensors back. This mirrors how a real
-//! deployment would pin an accelerator context to a driver thread.
+//! **XLA oracle service** — confines the (non-`Send`) PJRT client and
+//! compiled executables to one dedicated thread and serves execution
+//! requests over channels. The `xla` crate's handles hold `Rc`s and raw
+//! pointers, so they must not cross threads. Worker threads instead hold a
+//! cheap [`XlaHandle`] (Send + Sync) and submit raw tensors; the service
+//! thread materializes literals, executes, and ships raw tensors back.
+//! This mirrors how a real deployment would pin an accelerator context to
+//! a driver thread.
+//!
+//! **Live solve service** — [`spawn_solve`] runs a unified-API solve
+//! ([`crate::run::Runner`]) on a background thread and streams
+//! [`LiveEvent`]s to the caller through the engine-driven
+//! [`crate::run::Observer`] hook, so a service endpoint or dashboard can
+//! watch convergence while the solve is in flight instead of scraping the
+//! trace afterwards.
 
+use crate::run::{
+    ChannelObserver, LiveEvent, ProblemInstance, Report, Runner, RunSpec,
+};
 use anyhow::{anyhow, Result};
 use std::sync::mpsc;
 use std::sync::Mutex;
@@ -108,6 +119,44 @@ pub fn spawn(artifact_dir: impl Into<std::path::PathBuf>) -> Result<std::sync::A
     Ok(std::sync::Arc::new(XlaHandle { tx: Mutex::new(tx) }))
 }
 
+/// A solve running on a background service thread, with its live event
+/// stream. Drain [`SolveSession::events`] while it runs; [`join`]
+/// (consuming) returns the final [`Report`].
+///
+/// [`join`]: SolveSession::join
+pub struct SolveSession {
+    /// Live apply/sample events, in engine order. Dropping the receiver is
+    /// safe — the solve continues and only the stream stops.
+    pub events: mpsc::Receiver<LiveEvent>,
+    handle: std::thread::JoinHandle<Result<Report>>,
+}
+
+impl SolveSession {
+    /// Block until the solve finishes and return its report.
+    pub fn join(self) -> Result<Report> {
+        self.handle
+            .join()
+            .map_err(|_| anyhow!("solve service thread panicked"))?
+    }
+}
+
+/// Run `spec` against a registered problem on a dedicated thread,
+/// streaming live events. The spec is validated — including the engine x
+/// problem capability check — before the thread spawns, so configuration
+/// errors surface synchronously instead of as a dead event stream.
+pub fn spawn_solve(
+    spec: RunSpec,
+    problem: ProblemInstance,
+) -> Result<SolveSession> {
+    spec.validate()?;
+    problem.supports(&spec.engine)?;
+    let (mut obs, events) = ChannelObserver::pair();
+    let handle = std::thread::Builder::new()
+        .name("solve-service".into())
+        .spawn(move || Runner::new(spec)?.solve_observed(&problem, &mut obs))?;
+    Ok(SolveSession { events, handle })
+}
+
 fn serve_one(store: &super::ArtifactStore, req: &Request) -> Result<Vec<Tensor>> {
     let artifact = store.get(&req.artifact)?;
     let literals = req
@@ -131,4 +180,49 @@ fn serve_one(store: &super::ArtifactStore, req: &Request) -> Result<Vec<Tensor>>
             }
         })
         .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::run::{Engine, RunSpec};
+    use crate::util::config::Config;
+
+    #[test]
+    fn solve_service_streams_events_and_reports() {
+        let cfg = Config::parse(
+            "[run]\nseed = 5\n[gfl]\nd = 4\nn = 24\nlambda = 0.2\n",
+        )
+        .unwrap();
+        let problem = ProblemInstance::from_config("gfl", &cfg).unwrap();
+        let spec = RunSpec::new(Engine::sequential())
+            .tau(2)
+            .sample_every(4)
+            .exact_gap(true)
+            .max_epochs(8.0)
+            .max_secs(20.0)
+            .seed(5);
+        let session = spawn_solve(spec, problem).unwrap();
+        let events: Vec<LiveEvent> = session.events.iter().collect();
+        let report = session.join().unwrap();
+        let samples = events
+            .iter()
+            .filter(|e| matches!(e, LiveEvent::Sample(_)))
+            .count();
+        assert_eq!(samples, report.trace.samples.len());
+        assert!(
+            events
+                .iter()
+                .any(|e| matches!(e, LiveEvent::Apply { .. })),
+            "no apply events streamed"
+        );
+    }
+
+    #[test]
+    fn solve_service_rejects_invalid_spec_synchronously() {
+        let cfg = Config::parse("[gfl]\nd = 4\nn = 24\n").unwrap();
+        let problem = ProblemInstance::from_config("gfl", &cfg).unwrap();
+        let spec = RunSpec::new(Engine::asynchronous(0));
+        assert!(spawn_solve(spec, problem).is_err());
+    }
 }

@@ -10,7 +10,7 @@
 use crate::util::rng::Pcg64;
 
 /// Per-worker return probabilities.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct StragglerModel {
     pub probs: Vec<f64>,
 }

@@ -4,13 +4,23 @@
 
 use super::{schedule_gamma_batch, Monitor, SolveOptions, SolveResult};
 use crate::problems::{ApplyOptions, BlockOracle, Problem};
+use crate::run::Observer;
 
 /// Run batch FW on `problem`. `opts.tau` is ignored (always n).
 pub fn solve<P: Problem>(problem: &P, opts: &SolveOptions) -> SolveResult {
+    solve_observed(problem, opts, &mut ())
+}
+
+/// Run batch FW, streaming live events to `obs`.
+pub fn solve_observed<P: Problem>(
+    problem: &P,
+    opts: &SolveOptions,
+    obs: &mut dyn Observer,
+) -> SolveResult {
     let n = problem.num_blocks();
     let mut param = problem.init_param();
     let mut state = problem.init_server();
-    let mut mon = Monitor::new(problem, opts);
+    let mut mon = Monitor::new(problem, opts, obs);
 
     // One persistent oracle slot per block, refilled in place (§Perf).
     let mut batch: Vec<BlockOracle> =
@@ -34,7 +44,7 @@ pub fn solve<P: Problem>(problem: &P, opts: &SolveOptions) -> SolveResult {
             },
         );
         k += 1;
-        mon.after_apply(&param, &state, info.batch_gap, n);
+        mon.after_apply(k, &param, &state, info, n);
         // Every iteration is one full epoch; always sample.
         if mon.sample_and_check(k, oracle_calls, &param, &state) {
             break;
@@ -57,7 +67,7 @@ pub fn solve<P: Problem>(problem: &P, opts: &SolveOptions) -> SolveResult {
 mod tests {
     use super::*;
     use crate::problems::gfl::Gfl;
-    use crate::solver::{SolveOptions, StopCond};
+    use crate::run::{Engine, RunSpec};
     use crate::util::rng::Pcg64;
 
     fn gfl_instance() -> Gfl {
@@ -70,16 +80,13 @@ mod tests {
     #[test]
     fn batch_fw_converges_and_gap_shrinks() {
         let p = gfl_instance();
-        let opts = SolveOptions {
-            line_search: true,
-            stop: StopCond {
-                eps_gap: Some(1e-3),
-                max_epochs: 4000.0,
-                max_secs: 30.0,
-                ..Default::default()
-            },
-            ..Default::default()
-        };
+        let opts = RunSpec::new(Engine::Batch)
+            .line_search(true)
+            .exact_gap(true)
+            .eps_gap(1e-3)
+            .max_epochs(4000.0)
+            .max_secs(30.0)
+            .solve_options();
         let r = solve(&p, &opts);
         let last = r.trace.last().unwrap();
         assert!(last.gap <= 1e-3, "gap={}", last.gap);
@@ -90,15 +97,12 @@ mod tests {
     #[test]
     fn duality_gap_upper_bounds_suboptimality_along_run() {
         let p = gfl_instance();
-        let opts = SolveOptions {
-            line_search: true,
-            stop: StopCond {
-                max_epochs: 300.0,
-                max_secs: 30.0,
-                ..Default::default()
-            },
-            ..Default::default()
-        };
+        let opts = RunSpec::new(Engine::Batch)
+            .line_search(true)
+            .exact_gap(true)
+            .max_epochs(300.0)
+            .max_secs(30.0)
+            .solve_options();
         let r = solve(&p, &opts);
         let f_best = r.trace.best_objective();
         for s in &r.trace.samples {

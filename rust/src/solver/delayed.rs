@@ -13,7 +13,7 @@ use crate::sim::delay::{accept_delay, DelayModel, History};
 use crate::util::rng::Pcg64;
 
 /// Extra options for the delayed solve.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct DelayOptions {
     pub model: DelayModel,
     /// History capacity (delays beyond this are treated as > k/2 and
@@ -40,12 +40,22 @@ pub fn solve<P: Problem>(
     opts: &SolveOptions,
     dopts: &DelayOptions,
 ) -> SolveResult {
+    solve_observed(problem, opts, dopts, &mut ())
+}
+
+/// Run delayed-oracle BCFW, streaming live events to `obs`.
+pub fn solve_observed<P: Problem>(
+    problem: &P,
+    opts: &SolveOptions,
+    dopts: &DelayOptions,
+    obs: &mut dyn crate::run::Observer,
+) -> SolveResult {
     let n = problem.num_blocks();
     let tau = opts.tau.clamp(1, n);
     let mut rng = Pcg64::new(opts.seed, 2);
     let mut param = problem.init_param();
     let mut state = problem.init_server();
-    let mut mon = Monitor::new(problem, opts);
+    let mut mon = Monitor::new(problem, opts, obs);
     let mut hist = History::new(dopts.history);
     hist.push(0, &param);
 
@@ -92,7 +102,7 @@ pub fn solve<P: Problem>(
                     line_search: opts.line_search,
                 },
             );
-            mon.after_apply(&param, &state, info.batch_gap, used);
+            mon.after_apply(k + 1, &param, &state, info, used);
         }
         k += 1;
         hist.push(k, &param);
@@ -127,7 +137,7 @@ pub fn solve<P: Problem>(
 mod tests {
     use super::*;
     use crate::problems::gfl::Gfl;
-    use crate::solver::StopCond;
+    use crate::run::{Engine, RunSpec};
     use crate::util::rng::Pcg64;
 
     fn gfl_instance() -> Gfl {
@@ -138,19 +148,15 @@ mod tests {
     }
 
     fn opts() -> SolveOptions {
-        SolveOptions {
-            tau: 1,
-            sample_every: 32,
-            exact_gap: true,
-            stop: StopCond {
-                eps_gap: Some(0.1),
-                max_epochs: 3000.0,
-                max_secs: 60.0,
-                ..Default::default()
-            },
-            seed: 3,
-            ..Default::default()
-        }
+        RunSpec::new(Engine::delayed(DelayModel::None))
+            .tau(1)
+            .sample_every(32)
+            .exact_gap(true)
+            .eps_gap(0.1)
+            .max_epochs(3000.0)
+            .max_secs(60.0)
+            .seed(3)
+            .solve_options()
     }
 
     #[test]

@@ -7,16 +7,26 @@
 
 use super::{schedule_gamma, Monitor, SolveOptions, SolveResult};
 use crate::problems::{ApplyOptions, BlockOracle, Problem};
+use crate::run::Observer;
 use crate::util::rng::Pcg64;
 
 /// Run minibatch BCFW on `problem`.
 pub fn solve<P: Problem>(problem: &P, opts: &SolveOptions) -> SolveResult {
+    solve_observed(problem, opts, &mut ())
+}
+
+/// Run minibatch BCFW, streaming live events to `obs`.
+pub fn solve_observed<P: Problem>(
+    problem: &P,
+    opts: &SolveOptions,
+    obs: &mut dyn Observer,
+) -> SolveResult {
     let n = problem.num_blocks();
     let tau = opts.tau.clamp(1, n);
     let mut rng = Pcg64::new(opts.seed, 1);
     let mut param = problem.init_param();
     let mut state = problem.init_server();
-    let mut mon = Monitor::new(problem, opts);
+    let mut mon = Monitor::new(problem, opts, obs);
 
     // Persistent per-iteration scratch: block indices + one oracle slot
     // per batch position, refilled in place (§Perf: no allocation after
@@ -46,7 +56,7 @@ pub fn solve<P: Problem>(problem: &P, opts: &SolveOptions) -> SolveResult {
             },
         );
         k += 1;
-        mon.after_apply(&param, &state, info.batch_gap, tau);
+        mon.after_apply(k, &param, &state, info, tau);
 
         if k % opts.sample_every as u64 == 0
             && mon.sample_and_check(k, oracle_calls, &param, &state)
@@ -80,7 +90,7 @@ mod tests {
     use super::*;
     use crate::problems::gfl::Gfl;
     use crate::problems::simplex_qp::SimplexQp;
-    use crate::solver::StopCond;
+    use crate::run::{Engine, RunSpec};
     use crate::util::rng::Pcg64;
 
     fn gfl_instance() -> Gfl {
@@ -91,19 +101,14 @@ mod tests {
     }
 
     fn opts(tau: usize, max_epochs: f64) -> SolveOptions {
-        SolveOptions {
-            tau,
-            line_search: false,
-            weighted_averaging: false,
-            sample_every: 16,
-            exact_gap: true,
-            stop: StopCond {
-                max_epochs,
-                max_secs: 30.0,
-                ..Default::default()
-            },
-            seed: 7,
-        }
+        RunSpec::new(Engine::Seq)
+            .tau(tau)
+            .sample_every(16)
+            .exact_gap(true)
+            .max_epochs(max_epochs)
+            .max_secs(30.0)
+            .seed(7)
+            .solve_options()
     }
 
     #[test]

@@ -1,17 +1,25 @@
-//! Sequential solvers and shared solver machinery.
+//! Sequential solver engines and shared solver machinery.
 //!
 //! [`minibatch`] is the reference (thread-free) implementation of AP-BCFW's
 //! update rule — BCFW at tau = 1 — used by the epoch-counting experiments
 //! (Fig 1). [`batch_fw`] is classical Frank-Wolfe (tau = n). [`delayed`]
 //! adds the paper's iid-staleness model (Fig 4). [`pbcd`] is the parallel
 //! block-coordinate-descent baseline of §D.4.
+//!
+//! These are the engine implementations behind the unified
+//! [`crate::run::Runner`] API — prefer launching them through a
+//! [`crate::run::RunSpec`], which lowers to the [`SolveOptions`] consumed
+//! here and is the one place `--config`/`--set` layering reaches. Each
+//! engine exposes a `solve` entry point plus a `solve_observed` variant
+//! that streams live [`crate::run::Observer`] events.
 
 pub mod batch_fw;
 pub mod delayed;
 pub mod minibatch;
 pub mod pbcd;
 
-use crate::problems::Problem;
+use crate::problems::{ApplyInfo, Problem};
+use crate::run::Observer;
 use crate::util::metrics::{Sample, Stopwatch, Trace};
 
 /// The paper's step-size schedule gamma_k = 2 n tau / (tau^2 k + 2 n),
@@ -32,7 +40,7 @@ pub fn schedule_gamma_batch(k: u64) -> f32 {
 }
 
 /// Stopping conditions; any satisfied condition stops the solve.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct StopCond {
     /// Known/cached optimal value (enables eps_primal).
     pub f_star: Option<f64>,
@@ -81,7 +89,13 @@ impl StopCond {
 }
 
 /// Options shared by the sequential solvers.
-#[derive(Debug, Clone)]
+///
+/// Production call sites never build this directly: a
+/// [`crate::run::RunSpec`] lowers to it via `RunSpec::solve_options`, so
+/// every knob stays reachable from config layering. Direct construction is
+/// reserved for `rust/src/run/` and the equivalence tests that pin the
+/// lowering.
+#[derive(Debug, Clone, PartialEq)]
 pub struct SolveOptions {
     /// Minibatch size tau.
     pub tau: usize,
@@ -156,7 +170,8 @@ impl WeightedAverage {
     }
 }
 
-/// Internal helper: shared trace/stop bookkeeping across solvers.
+/// Internal helper: shared trace/stop bookkeeping across solvers, and the
+/// single point that drives the live [`Observer`] stream.
 pub(crate) struct Monitor<'a, P: Problem> {
     pub problem: &'a P,
     pub opts: &'a SolveOptions,
@@ -165,10 +180,15 @@ pub(crate) struct Monitor<'a, P: Problem> {
     pub avg: Option<WeightedAverage>,
     /// Most recent unbiased gap estimate (n/tau * batch gap).
     pub gap_estimate: f64,
+    pub obs: &'a mut dyn Observer,
 }
 
 impl<'a, P: Problem> Monitor<'a, P> {
-    pub fn new(problem: &'a P, opts: &'a SolveOptions) -> Self {
+    pub fn new(
+        problem: &'a P,
+        opts: &'a SolveOptions,
+        obs: &'a mut dyn Observer,
+    ) -> Self {
         let avg = if opts.weighted_averaging {
             Some(WeightedAverage::new(problem.param_dim()))
         } else {
@@ -181,22 +201,33 @@ impl<'a, P: Problem> Monitor<'a, P> {
             trace: Trace::default(),
             avg,
             gap_estimate: f64::INFINITY,
+            obs,
         }
     }
 
-    /// Fold the iterate into the average and update the gap estimate.
+    /// Emit a live apply event without FW bookkeeping (PBCD, whose steps
+    /// have no Frank-Wolfe gamma/gap — both are reported as NaN).
+    pub fn notify_apply(&mut self, iter: u64, gamma: f32, batch_gap: f64) {
+        self.obs.on_apply(iter, gamma, batch_gap);
+    }
+
+    /// Fold the iterate into the average, update the gap estimate, and
+    /// emit the live apply event. `iter` is the server iteration count
+    /// after this apply.
     pub fn after_apply(
         &mut self,
+        iter: u64,
         param: &[f32],
         state: &P::ServerState,
-        batch_gap: f64,
+        info: ApplyInfo,
         tau: usize,
     ) {
+        self.obs.on_apply(iter, info.gamma, info.batch_gap);
         if let Some(avg) = &mut self.avg {
             avg.update(param, self.problem.aux(state));
         }
         let n = self.problem.num_blocks() as f64;
-        let inst = batch_gap * n / tau.max(1) as f64;
+        let inst = info.batch_gap * n / tau.max(1) as f64;
         // Smooth the noisy instantaneous estimate a little.
         self.gap_estimate = if self.gap_estimate.is_finite() {
             0.8 * self.gap_estimate + 0.2 * inst
@@ -234,13 +265,15 @@ impl<'a, P: Problem> Monitor<'a, P> {
             self.gap_estimate
         };
         let elapsed_s = self.watch.elapsed_s();
-        self.trace.push(Sample {
+        let sample = Sample {
             iter: iter as usize,
             oracle_calls,
             elapsed_s,
             objective,
             gap,
-        });
+        };
+        self.obs.on_sample(&sample);
+        self.trace.push(sample);
         let epochs = oracle_calls as f64 / self.problem.num_blocks() as f64;
         self.opts.stop.target_met(objective, gap)
             || self.opts.stop.exhausted(epochs, elapsed_s)

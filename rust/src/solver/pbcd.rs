@@ -8,6 +8,7 @@
 
 use super::{Monitor, SolveOptions, SolveResult};
 use crate::problems::ProjectableProblem;
+use crate::run::Observer;
 use crate::util::rng::Pcg64;
 
 /// Run parallel BCD on `problem`.
@@ -15,12 +16,23 @@ pub fn solve<P: ProjectableProblem>(
     problem: &P,
     opts: &SolveOptions,
 ) -> SolveResult {
+    solve_observed(problem, opts, &mut ())
+}
+
+/// Run parallel BCD, streaming live events to `obs`. PBCD has no
+/// Frank-Wolfe step size or surrogate gap, so apply events carry NaN for
+/// both.
+pub fn solve_observed<P: ProjectableProblem>(
+    problem: &P,
+    opts: &SolveOptions,
+    obs: &mut dyn Observer,
+) -> SolveResult {
     let n = problem.num_blocks();
     let tau = opts.tau.clamp(1, n);
     let mut rng = Pcg64::new(opts.seed, 3);
     let mut param = problem.init_param();
     let mut state = problem.init_server();
-    let mut mon = Monitor::new(problem, opts);
+    let mut mon = Monitor::new(problem, opts, obs);
 
     // Persistent scratch: index buffer, gradient buffer, and one
     // (range, block-iterate) slot per batch position (§Perf: the PBCD
@@ -54,6 +66,7 @@ pub fn solve<P: ProjectableProblem>(
             param[range.clone()].copy_from_slice(xi);
         }
         k += 1;
+        mon.notify_apply(k, f32::NAN, f64::NAN);
         // No FW gap here; report 0 increment so the estimate stays inf and
         // stopping relies on f_star or budget.
         if k % opts.sample_every as u64 == 0
@@ -87,21 +100,17 @@ mod tests {
     use super::*;
     use crate::problems::simplex_qp::SimplexQp;
     use crate::problems::Problem;
-    use crate::solver::{SolveOptions, StopCond};
+    use crate::run::{Engine, RunSpec};
+    use crate::solver::SolveOptions;
 
     fn opts(tau: usize) -> SolveOptions {
-        SolveOptions {
-            tau,
-            sample_every: 32,
-            exact_gap: false,
-            stop: StopCond {
-                max_epochs: 200.0,
-                max_secs: 30.0,
-                ..Default::default()
-            },
-            seed: 4,
-            ..Default::default()
-        }
+        RunSpec::new(Engine::Pbcd)
+            .tau(tau)
+            .sample_every(32)
+            .max_epochs(200.0)
+            .max_secs(30.0)
+            .seed(4)
+            .solve_options()
     }
 
     #[test]
@@ -123,14 +132,9 @@ mod tests {
     fn pbcd_and_fw_reach_similar_objective_on_easy_qp() {
         let qp = SimplexQp::random(12, 4, 1.0, 0.0, 3, 6);
         let r_bcd = solve(&qp, &opts(3));
-        let r_fw = crate::solver::minibatch::solve(
-            &qp,
-            &SolveOptions {
-                tau: 3,
-                line_search: true,
-                ..opts(3)
-            },
-        );
+        let mut fw_opts = opts(3);
+        fw_opts.line_search = true;
+        let r_fw = crate::solver::minibatch::solve(&qp, &fw_opts);
         let f_bcd = r_bcd.trace.last().unwrap().objective;
         let f_fw = r_fw.trace.last().unwrap().objective;
         assert!(

@@ -6,7 +6,7 @@ use apbcfw::data::signal;
 use apbcfw::problems::gfl::Gfl;
 use apbcfw::problems::simplex_qp::SimplexQp;
 use apbcfw::problems::Problem;
-use apbcfw::solver::{minibatch, SolveOptions, StopCond};
+use apbcfw::run::{Engine, Runner, RunSpec};
 
 fn solve_trace(
     p: &impl Problem,
@@ -14,22 +14,18 @@ fn solve_trace(
     epochs: f64,
     seed: u64,
 ) -> apbcfw::util::metrics::Trace {
-    minibatch::solve(
-        p,
-        &SolveOptions {
-            tau,
-            sample_every: 1,
-            exact_gap: true,
-            stop: StopCond {
-                max_epochs: epochs,
-                max_secs: 60.0,
-                ..Default::default()
-            },
-            seed,
-            ..Default::default()
-        },
-    )
-    .trace
+    let spec = RunSpec::new(Engine::Seq)
+        .tau(tau)
+        .sample_every(1)
+        .exact_gap(true)
+        .max_epochs(epochs)
+        .max_secs(60.0)
+        .seed(seed);
+    Runner::new(spec)
+        .unwrap()
+        .solve_problem(p)
+        .unwrap()
+        .trace
 }
 
 /// Theorem 1: E f(x_k) - f* <= 2nC / (tau^2 k + 2n). We verify the O(1/k)

@@ -2,17 +2,17 @@
 //! instances to comparable quality, counters are consistent, and the
 //! straggler/delay machinery behaves as the paper describes.
 
-use apbcfw::coordinator::{apbcfw as coord, lockfree, sync, RunConfig};
+use apbcfw::coordinator::{apbcfw as coord, lockfree, sync};
 use apbcfw::data::{mixture, ocr_like, signal};
 use apbcfw::problems::gfl::Gfl;
 use apbcfw::problems::simplex_qp::SimplexQp;
 use apbcfw::problems::ssvm::chain::ChainSsvm;
 use apbcfw::problems::ssvm::multiclass::MulticlassSsvm;
 use apbcfw::problems::Problem;
+use apbcfw::run::{Engine, RunSpec, StragglerSpec};
 use apbcfw::sim::delay::DelayModel;
-use apbcfw::sim::straggler::StragglerModel;
 use apbcfw::solver::delayed::{self, DelayOptions};
-use apbcfw::solver::{batch_fw, minibatch, SolveOptions, StopCond};
+use apbcfw::solver::{batch_fw, minibatch, StopCond};
 use apbcfw::util::rng::Pcg64;
 use std::sync::Arc;
 
@@ -37,32 +37,31 @@ fn all_modes_reach_same_quality_on_gfl() {
 
     let seq = minibatch::solve(
         &p,
-        &SolveOptions {
-            tau: 4,
-            sample_every: 16,
-            exact_gap: true,
-            stop: stop_gap(eps),
-            seed: 2,
-            ..Default::default()
-        },
+        &RunSpec::new(Engine::Seq)
+            .tau(4)
+            .sample_every(16)
+            .exact_gap(true)
+            .stop(stop_gap(eps))
+            .seed(2)
+            .solve_options(),
     );
     assert!(seq.trace.last().unwrap().gap <= eps);
 
-    let mk_cfg = |workers: usize| RunConfig {
-        workers,
-        tau: 4,
-        straggler: StragglerModel::none(workers),
-        sample_every: 16,
-        exact_gap: true,
-        stop: stop_gap(eps),
-        seed: 3,
-        ..Default::default()
+    let mk_cfg = |engine: Engine| {
+        RunSpec::new(engine)
+            .tau(4)
+            .sample_every(16)
+            .exact_gap(true)
+            .stop(stop_gap(eps))
+            .seed(3)
+            .run_config()
+            .unwrap()
     };
-    let a = coord::run(&p, &mk_cfg(3));
+    let a = coord::run(&p, &mk_cfg(Engine::asynchronous(3)));
     assert!(a.trace.last().unwrap().gap <= eps, "async");
-    let s = sync::run(&p, &mk_cfg(3));
+    let s = sync::run(&p, &mk_cfg(Engine::synchronous(3)));
     assert!(s.trace.last().unwrap().gap <= eps, "sync");
-    let lf = lockfree::run(&p, &mk_cfg(2));
+    let lf = lockfree::run(&p, &mk_cfg(Engine::lockfree(2)));
     assert!(
         lf.trace.last().unwrap().gap <= 2.0 * eps,
         "lockfree gap {}",
@@ -71,14 +70,13 @@ fn all_modes_reach_same_quality_on_gfl() {
 
     let b = batch_fw::solve(
         &p,
-        &SolveOptions {
-            line_search: true,
-            sample_every: 1,
-            exact_gap: true,
-            stop: stop_gap(eps),
-            seed: 4,
-            ..Default::default()
-        },
+        &RunSpec::new(Engine::Batch)
+            .line_search(true)
+            .sample_every(1)
+            .exact_gap(true)
+            .stop(stop_gap(eps))
+            .seed(4)
+            .solve_options(),
     );
     assert!(b.trace.last().unwrap().gap <= eps, "batch");
 }
@@ -89,21 +87,15 @@ fn chain_ssvm_async_end_to_end_improves_error() {
     let p = ChainSsvm::new(data, 0.05);
     let idx: Vec<usize> = (0..80).collect();
     let err0 = p.hamming_error(&p.init_param(), &idx);
-    let cfg = RunConfig {
-        workers: 4,
-        tau: 8,
-        line_search: true,
-        straggler: StragglerModel::none(4),
-        sample_every: 16,
-        exact_gap: false,
-        stop: StopCond {
-            max_epochs: 40.0,
-            max_secs: 60.0,
-            ..Default::default()
-        },
-        seed: 6,
-        ..Default::default()
-    };
+    let cfg = RunSpec::new(Engine::asynchronous(4))
+        .tau(8)
+        .line_search(true)
+        .sample_every(16)
+        .max_epochs(40.0)
+        .max_secs(60.0)
+        .seed(6)
+        .run_config()
+        .unwrap();
     let r = coord::run(&p, &cfg);
     let err1 = p.hamming_error(&r.param, &idx);
     assert!(err1 < err0, "hamming {err0} -> {err1}");
@@ -117,21 +109,15 @@ fn multiclass_ssvm_sync_end_to_end() {
     let p = MulticlassSsvm::new(data, 0.02);
     let idx: Vec<usize> = (0..120).collect();
     let err0 = p.zero_one_error(&p.init_param(), &idx);
-    let cfg = RunConfig {
-        workers: 3,
-        tau: 6,
-        line_search: true,
-        straggler: StragglerModel::none(3),
-        sample_every: 16,
-        exact_gap: false,
-        stop: StopCond {
-            max_epochs: 60.0,
-            max_secs: 60.0,
-            ..Default::default()
-        },
-        seed: 8,
-        ..Default::default()
-    };
+    let cfg = RunSpec::new(Engine::synchronous(3))
+        .tau(6)
+        .line_search(true)
+        .sample_every(16)
+        .max_epochs(60.0)
+        .max_secs(60.0)
+        .seed(8)
+        .run_config()
+        .unwrap();
     let r = sync::run(&p, &cfg);
     let err1 = p.zero_one_error(&r.param, &idx);
     assert!(err1 < err0, "0/1 error {err0} -> {err1}");
@@ -144,27 +130,23 @@ fn async_is_robust_to_straggler_sync_is_not() {
     // oracle whose cost dominates coordination — the chain SSVM Viterbi.
     let data = Arc::new(ocr_like::generate(150, 10, 48, 7, 0.15, 9));
     let p = ChainSsvm::new(data, 1.0);
-    let run_pair = |straggler: StragglerModel| {
-        let cfg = RunConfig {
-            workers: 4,
-            tau: 4,
-            straggler,
-            sample_every: 64,
-            exact_gap: false,
-            stop: StopCond {
-                max_epochs: 8.0,
-                max_secs: 60.0,
-                ..Default::default()
-            },
-            seed: 10,
-            ..Default::default()
+    let run_pair = |straggler: StragglerSpec| {
+        let mk = |engine: Engine| {
+            RunSpec::new(engine.with_straggler(straggler.clone()))
+                .tau(4)
+                .sample_every(64)
+                .max_epochs(8.0)
+                .max_secs(60.0)
+                .seed(10)
+                .run_config()
+                .unwrap()
         };
-        let a = coord::run(&p, &cfg);
-        let s = sync::run(&p, &cfg);
+        let a = coord::run(&p, &mk(Engine::asynchronous(4)));
+        let s = sync::run(&p, &mk(Engine::synchronous(4)));
         (a.secs_per_pass, s.secs_per_pass)
     };
-    let (a_fast, s_fast) = run_pair(StragglerModel::none(4));
-    let (a_slow, s_slow) = run_pair(StragglerModel::single(4, 0.15));
+    let (a_fast, s_fast) = run_pair(StragglerSpec::None);
+    let (a_slow, s_slow) = run_pair(StragglerSpec::Single { p: 0.15 });
     let a_ratio = a_slow / a_fast;
     let s_ratio = s_slow / s_fast;
     // On this container (1 core) the effect is attenuated by timeslicing —
@@ -183,20 +165,17 @@ fn async_is_robust_to_straggler_sync_is_not() {
 #[test]
 fn counters_are_consistent_async() {
     let p = gfl_instance(11);
-    let cfg = RunConfig {
-        workers: 3,
-        tau: 5,
-        straggler: StragglerModel::single(3, 0.5),
-        sample_every: 32,
-        exact_gap: false,
-        stop: StopCond {
-            max_epochs: 50.0,
-            max_secs: 30.0,
-            ..Default::default()
-        },
-        seed: 12,
-        ..Default::default()
-    };
+    let cfg = RunSpec::new(
+        Engine::asynchronous(3)
+            .with_straggler(StragglerSpec::Single { p: 0.5 }),
+    )
+    .tau(5)
+    .sample_every(32)
+    .max_epochs(50.0)
+    .max_secs(30.0)
+    .seed(12)
+    .run_config()
+    .unwrap();
     let r = coord::run(&p, &cfg);
     let c = r.counters;
     // every applied update corresponds to a successful oracle call
@@ -214,18 +193,13 @@ fn counters_are_consistent_async() {
 #[test]
 fn delayed_solver_matches_paper_drop_rule_accounting() {
     let p = gfl_instance(13);
-    let opts = SolveOptions {
-        tau: 2,
-        sample_every: 64,
-        exact_gap: false,
-        stop: StopCond {
-            max_epochs: 30.0,
-            max_secs: 30.0,
-            ..Default::default()
-        },
-        seed: 14,
-        ..Default::default()
-    };
+    let opts = RunSpec::new(Engine::delayed(DelayModel::None))
+        .tau(2)
+        .sample_every(64)
+        .max_epochs(30.0)
+        .max_secs(30.0)
+        .seed(14)
+        .solve_options();
     let r = delayed::solve(
         &p,
         &opts,
@@ -248,22 +222,20 @@ fn delayed_solver_matches_paper_drop_rule_accounting() {
 fn qp_async_with_heterogeneous_workers() {
     let qp = SimplexQp::random(30, 4, 1.0, 0.2, 3, 15);
     let f0 = qp.objective(&(), &qp.init_param());
-    let cfg = RunConfig {
-        workers: 4,
-        tau: 6,
-        line_search: true,
-        straggler: StragglerModel::heterogeneous(4, 0.3),
-        sample_every: 16,
-        exact_gap: true,
-        stop: StopCond {
-            eps_gap: Some(0.02),
-            max_epochs: 10_000.0,
-            max_secs: 30.0,
-            ..Default::default()
-        },
-        seed: 16,
-        ..Default::default()
-    };
+    let cfg = RunSpec::new(
+        Engine::asynchronous(4)
+            .with_straggler(StragglerSpec::Heterogeneous { theta: 0.3 }),
+    )
+    .tau(6)
+    .line_search(true)
+    .sample_every(16)
+    .exact_gap(true)
+    .eps_gap(0.02)
+    .max_epochs(10_000.0)
+    .max_secs(30.0)
+    .seed(16)
+    .run_config()
+    .unwrap();
     let r = coord::run(&qp, &cfg);
     let last = r.trace.last().unwrap();
     assert!(last.objective < f0);
@@ -279,18 +251,13 @@ fn qp_async_with_heterogeneous_workers() {
 #[test]
 fn deterministic_sequential_solves_given_seed() {
     let p = gfl_instance(17);
-    let opts = SolveOptions {
-        tau: 3,
-        sample_every: 16,
-        exact_gap: false,
-        stop: StopCond {
-            max_epochs: 20.0,
-            max_secs: 30.0,
-            ..Default::default()
-        },
-        seed: 18,
-        ..Default::default()
-    };
+    let opts = RunSpec::new(Engine::Seq)
+        .tau(3)
+        .sample_every(16)
+        .max_epochs(20.0)
+        .max_secs(30.0)
+        .seed(18)
+        .solve_options();
     let a = minibatch::solve(&p, &opts);
     let b = minibatch::solve(&p, &opts);
     assert_eq!(a.raw_param, b.raw_param);
@@ -303,20 +270,13 @@ fn lockfree_scales_throughput_with_threads() {
     // Compute-bound oracle so scaling isn't hidden by memory traffic.
     let p = SimplexQp::random(100, 16, 1.0, 0.5, 16, 19);
     let run_with = |workers: usize| {
-        let cfg = RunConfig {
-            workers,
-            tau: 1,
-            straggler: StragglerModel::none(workers),
-            sample_every: 1 << 20,
-            exact_gap: false,
-            stop: StopCond {
-                max_epochs: f64::INFINITY,
-                max_secs: 0.5,
-                ..Default::default()
-            },
-            seed: 20,
-            ..Default::default()
-        };
+        let cfg = RunSpec::new(Engine::lockfree(workers))
+            .sample_every(1 << 20)
+            .max_epochs(f64::INFINITY)
+            .max_secs(0.5)
+            .seed(20)
+            .run_config()
+            .unwrap();
         let r = lockfree::run(&p, &cfg);
         r.counters.oracle_calls as f64 / r.elapsed_s
     };

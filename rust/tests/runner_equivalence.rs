@@ -1,0 +1,466 @@
+//! Seeded equivalence: the unified `Runner` path must reproduce the legacy
+//! per-engine entry points exactly, so rewiring the experiments through
+//! `RunSpec` cannot silently change paper figures.
+//!
+//! Proof obligations per engine family:
+//!
+//! - **Sequential engines** (seq, batch, delayed, pbcd) are deterministic
+//!   given a seed, so we run the legacy entry point with hand-built
+//!   options AND the `Runner` with the equivalent spec, then compare the
+//!   final/raw parameters and the whole trace **bit-identically**
+//!   (`f64::to_bits` on objectives/gaps).
+//! - **Threaded engines** (async, sync, lockfree) are scheduling-
+//!   nondeterministic — two legacy runs already differ — so bit-equality
+//!   between runs is not a meaningful claim. There the `Runner` path *is*
+//!   the legacy function invoked with a lowered `RunConfig`; we prove the
+//!   lowering is field-for-field identical to the hand-built legacy
+//!   config (`RunConfig: PartialEq`) and that the `Runner` run completes
+//!   and converges. Identical config + identical code path is the
+//!   strongest equivalence that exists for these engines.
+//!
+//! This file (plus `rust/src/run/`) is the only place allowed to construct
+//! `SolveOptions`/`RunConfig` directly.
+
+use apbcfw::coordinator::{apbcfw as coord, lockfree, sync, RunConfig};
+use apbcfw::data::{mixture, ocr_like, signal};
+use apbcfw::problems::gfl::Gfl;
+use apbcfw::problems::simplex_qp::SimplexQp;
+use apbcfw::problems::ssvm::chain::ChainSsvm;
+use apbcfw::problems::ssvm::multiclass::MulticlassSsvm;
+use apbcfw::run::{
+    CollectObserver, Engine, ProblemInstance, Report, Runner, RunSpec,
+    StragglerSpec,
+};
+use apbcfw::sim::delay::DelayModel;
+use apbcfw::sim::straggler::StragglerModel;
+use apbcfw::solver::delayed::DelayOptions;
+use apbcfw::solver::{batch_fw, delayed, minibatch, pbcd, SolveOptions, StopCond};
+use apbcfw::util::config::Config;
+use std::sync::Arc;
+
+// ---------- small instances (one per problem family) ----------
+
+fn gfl() -> Gfl {
+    let sig = signal::piecewise_constant(5, 30, 4, 2.0, 0.5, 17);
+    Gfl::new(5, 30, 0.2, sig.noisy)
+}
+
+fn qp() -> SimplexQp {
+    SimplexQp::random(16, 4, 1.0, 0.2, 3, 18)
+}
+
+fn chain() -> ChainSsvm {
+    let data = Arc::new(ocr_like::generate(20, 3, 6, 4, 0.1, 19));
+    ChainSsvm::new(data, 0.1)
+}
+
+fn multiclass() -> MulticlassSsvm {
+    let data = Arc::new(mixture::generate(24, 3, 6, 0.1, 20));
+    MulticlassSsvm::new(data, 0.1)
+}
+
+// ---------- shared knobs, built both ways ----------
+
+fn stop() -> StopCond {
+    StopCond {
+        max_epochs: 15.0,
+        max_secs: 30.0,
+        ..Default::default()
+    }
+}
+
+/// Legacy options matching `spec(engine)` below.
+fn legacy_opts(tau: usize) -> SolveOptions {
+    SolveOptions {
+        tau,
+        line_search: true,
+        weighted_averaging: false,
+        sample_every: 4,
+        exact_gap: true,
+        stop: stop(),
+        seed: 33,
+    }
+}
+
+/// The unified spec whose lowering must equal `legacy_opts(tau)`.
+fn spec(engine: Engine, tau: usize) -> RunSpec {
+    RunSpec::new(engine)
+        .tau(tau)
+        .line_search(true)
+        .sample_every(4)
+        .exact_gap(true)
+        .stop(stop())
+        .seed(33)
+}
+
+/// Bit-identical comparison of a Runner report vs a legacy solve result.
+fn assert_bit_identical(
+    label: &str,
+    report: &Report,
+    legacy: &apbcfw::solver::SolveResult,
+) {
+    assert_eq!(report.param, legacy.param, "{label}: param");
+    assert_eq!(report.raw_param, legacy.raw_param, "{label}: raw_param");
+    assert_eq!(report.oracle_calls(), legacy.oracle_calls, "{label}: calls");
+    assert_eq!(report.iterations(), legacy.iterations, "{label}: iters");
+    assert_eq!(report.dropped(), legacy.dropped, "{label}: dropped");
+    assert_eq!(
+        report.trace.samples.len(),
+        legacy.trace.samples.len(),
+        "{label}: trace length"
+    );
+    for (i, (a, b)) in report
+        .trace
+        .samples
+        .iter()
+        .zip(legacy.trace.samples.iter())
+        .enumerate()
+    {
+        assert_eq!(a.iter, b.iter, "{label}: sample {i} iter");
+        assert_eq!(
+            a.oracle_calls, b.oracle_calls,
+            "{label}: sample {i} oracle_calls"
+        );
+        assert_eq!(
+            a.objective.to_bits(),
+            b.objective.to_bits(),
+            "{label}: sample {i} objective"
+        );
+        assert_eq!(
+            a.gap.to_bits(),
+            b.gap.to_bits(),
+            "{label}: sample {i} gap"
+        );
+    }
+}
+
+// ---------- sequential engines: bit-identical runs ----------
+
+#[test]
+fn seq_engine_matches_minibatch_on_all_problem_families() {
+    let tau = 2;
+    let opts = legacy_opts(tau);
+    let runner = Runner::new(spec(Engine::Seq, tau)).unwrap();
+
+    let p = gfl();
+    assert_bit_identical(
+        "seq/gfl",
+        &runner.solve_problem(&p).unwrap(),
+        &minibatch::solve(&p, &opts),
+    );
+    let p = qp();
+    assert_bit_identical(
+        "seq/qp",
+        &runner.solve_problem(&p).unwrap(),
+        &minibatch::solve(&p, &opts),
+    );
+    let p = chain();
+    assert_bit_identical(
+        "seq/ssvm",
+        &runner.solve_problem(&p).unwrap(),
+        &minibatch::solve(&p, &opts),
+    );
+    let p = multiclass();
+    assert_bit_identical(
+        "seq/multiclass",
+        &runner.solve_problem(&p).unwrap(),
+        &minibatch::solve(&p, &opts),
+    );
+}
+
+#[test]
+fn seq_engine_matches_with_weighted_averaging() {
+    let mut opts = legacy_opts(1);
+    opts.weighted_averaging = true;
+    let runner =
+        Runner::new(spec(Engine::Seq, 1).weighted_averaging(true)).unwrap();
+    let p = chain();
+    assert_bit_identical(
+        "seq+avg/ssvm",
+        &runner.solve_problem(&p).unwrap(),
+        &minibatch::solve(&p, &opts),
+    );
+}
+
+#[test]
+fn batch_engine_matches_batch_fw() {
+    let opts = legacy_opts(1);
+    let runner = Runner::new(spec(Engine::Batch, 1)).unwrap();
+    let p = gfl();
+    assert_bit_identical(
+        "batch/gfl",
+        &runner.solve_problem(&p).unwrap(),
+        &batch_fw::solve(&p, &opts),
+    );
+    let p = qp();
+    assert_bit_identical(
+        "batch/qp",
+        &runner.solve_problem(&p).unwrap(),
+        &batch_fw::solve(&p, &opts),
+    );
+}
+
+#[test]
+fn delayed_engine_matches_delayed_solver() {
+    let model = DelayModel::Poisson { kappa: 3.0 };
+    let dopts = DelayOptions {
+        model,
+        history: 256,
+        enforce_drop_rule: true,
+    };
+    let engine = Engine::delayed(model).with_delay_history(256);
+    let runner = Runner::new(spec(engine.clone(), 2)).unwrap();
+    // The spec's delay lowering is exactly the hand-built DelayOptions.
+    assert_eq!(spec(engine, 2).delay_options().unwrap(), dopts);
+
+    let opts = legacy_opts(2);
+    let p = gfl();
+    assert_bit_identical(
+        "delayed/gfl",
+        &runner.solve_problem(&p).unwrap(),
+        &delayed::solve(&p, &opts, &dopts),
+    );
+    let p = chain();
+    assert_bit_identical(
+        "delayed/ssvm",
+        &runner.solve_problem(&p).unwrap(),
+        &delayed::solve(&p, &opts, &dopts),
+    );
+}
+
+#[test]
+fn pbcd_engine_matches_pbcd_solver() {
+    // pbcd has no line search (validate rejects it), so both paths run
+    // with it off — matching the legacy d4 experiment's o_bcd config.
+    let mut opts = legacy_opts(3);
+    opts.line_search = false;
+    let runner =
+        Runner::new(spec(Engine::Pbcd, 3).line_search(false)).unwrap();
+    let p = qp();
+    assert_bit_identical(
+        "pbcd/qp",
+        &runner.solve_projectable(&p).unwrap(),
+        &pbcd::solve(&p, &opts),
+    );
+    let p = gfl();
+    assert_bit_identical(
+        "pbcd/gfl",
+        &runner.solve_projectable(&p).unwrap(),
+        &pbcd::solve(&p, &opts),
+    );
+}
+
+// ---------- threaded engines: lowering equality + live run ----------
+
+fn threaded_stop() -> StopCond {
+    StopCond {
+        eps_gap: Some(0.1),
+        max_epochs: 4000.0,
+        max_secs: 30.0,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn async_spec_lowers_to_legacy_run_config_and_converges() {
+    let legacy = RunConfig {
+        workers: 3,
+        tau: 4,
+        line_search: true,
+        straggler: StragglerModel::single(3, 0.5),
+        sample_every: 8,
+        exact_gap: true,
+        queue_factor: 16,
+        stop: threaded_stop(),
+        seed: 44,
+        ..Default::default()
+    };
+    let spec = RunSpec::new(
+        Engine::asynchronous(3)
+            .with_straggler(StragglerSpec::Single { p: 0.5 })
+            .with_queue_factor(16),
+    )
+    .tau(4)
+    .line_search(true)
+    .sample_every(8)
+    .exact_gap(true)
+    .stop(threaded_stop())
+    .seed(44);
+    assert_eq!(spec.run_config().unwrap(), legacy);
+
+    // Identical config + shared code path (`run` delegates to
+    // `run_observed`): the runner run must still converge like a direct
+    // coord::run with this config would.
+    let p = gfl();
+    let r = Runner::new(spec).unwrap().solve_problem(&p).unwrap();
+    assert!(r.last().unwrap().gap <= 0.1, "gap={}", r.last().unwrap().gap);
+    let direct = coord::run(&p, &legacy);
+    assert!(direct.trace.last().unwrap().gap <= 0.1);
+}
+
+#[test]
+fn sync_spec_lowers_to_legacy_run_config_and_converges() {
+    let legacy = RunConfig {
+        workers: 2,
+        tau: 3,
+        line_search: true,
+        straggler: StragglerModel::none(2),
+        sample_every: 8,
+        exact_gap: true,
+        stop: threaded_stop(),
+        seed: 45,
+        ..Default::default()
+    };
+    let spec = RunSpec::new(Engine::synchronous(2))
+        .tau(3)
+        .line_search(true)
+        .sample_every(8)
+        .exact_gap(true)
+        .stop(threaded_stop())
+        .seed(45);
+    assert_eq!(spec.run_config().unwrap(), legacy);
+
+    let p = gfl();
+    let r = Runner::new(spec).unwrap().solve_problem(&p).unwrap();
+    assert!(r.last().unwrap().gap <= 0.1);
+    let direct = sync::run(&p, &legacy);
+    assert!(direct.trace.last().unwrap().gap <= 0.1);
+}
+
+#[test]
+fn lockfree_spec_lowers_to_legacy_run_config_and_converges() {
+    let legacy = RunConfig {
+        workers: 2,
+        tau: 1,
+        straggler: StragglerModel::none(2),
+        sample_every: 32,
+        exact_gap: true,
+        stop: threaded_stop(),
+        seed: 46,
+        ..Default::default()
+    };
+    let spec = RunSpec::new(Engine::lockfree(2))
+        .sample_every(32)
+        .exact_gap(true)
+        .stop(threaded_stop())
+        .seed(46);
+    assert_eq!(spec.run_config().unwrap(), legacy);
+
+    let p = gfl();
+    let r = Runner::new(spec).unwrap().solve_projectable(&p).unwrap();
+    assert!(r.last().unwrap().gap <= 0.2, "gap={}", r.last().unwrap().gap);
+    let direct = lockfree::run(&p, &legacy);
+    assert!(direct.trace.last().unwrap().gap <= 0.2);
+}
+
+// ---------- observer: live samples during a run ----------
+
+#[test]
+fn observer_receives_live_samples_and_applies_seq() {
+    let p = gfl();
+    let mut obs = CollectObserver::new();
+    let r = Runner::new(spec(Engine::Seq, 2))
+        .unwrap()
+        .solve_problem_observed(&p, &mut obs)
+        .unwrap();
+    // Every trace sample was streamed live, in order.
+    assert_eq!(obs.samples.len(), r.trace.samples.len());
+    for (a, b) in obs.samples.iter().zip(r.trace.samples.iter()) {
+        assert_eq!(a.iter, b.iter);
+        assert_eq!(a.objective.to_bits(), b.objective.to_bits());
+    }
+    // One apply event per server iteration, with a usable step size.
+    assert_eq!(obs.applies.len(), r.iterations() as usize);
+    assert!(obs.applies.iter().all(|(_, g, _)| (0.0..=1.0).contains(g)));
+}
+
+#[test]
+fn observer_receives_live_samples_async() {
+    let p = gfl();
+    let mut obs = CollectObserver::new();
+    let spec = RunSpec::new(Engine::asynchronous(2))
+        .tau(2)
+        .sample_every(8)
+        .exact_gap(true)
+        .stop(threaded_stop())
+        .seed(47);
+    let r = Runner::new(spec)
+        .unwrap()
+        .solve_problem_observed(&p, &mut obs)
+        .unwrap();
+    assert!(!obs.samples.is_empty());
+    assert_eq!(obs.samples.len(), r.trace.samples.len());
+    assert!(!obs.applies.is_empty());
+}
+
+// ---------- spec hygiene: straggler arity & registry errors ----------
+
+#[test]
+fn straggler_model_size_follows_worker_count() {
+    for workers in [1usize, 2, 5] {
+        let spec = RunSpec::new(
+            Engine::asynchronous(workers)
+                .with_straggler(StragglerSpec::Heterogeneous { theta: 0.3 }),
+        );
+        let cfg = spec.run_config().unwrap();
+        assert_eq!(cfg.straggler.probs.len(), workers);
+        assert_eq!(cfg.straggler, StragglerModel::heterogeneous(workers, 0.3));
+    }
+}
+
+#[test]
+fn mismatched_explicit_straggler_is_rejected_not_asserted() {
+    // The historical footgun: RunConfig::default() pairs a 2-worker
+    // straggler model with whatever `workers` the caller overrides,
+    // panicking inside the engine. The spec builder turns this into a
+    // validation error instead.
+    let spec = RunSpec::new(Engine::asynchronous(4).with_straggler(
+        StragglerSpec::Explicit(StragglerModel::none(2)),
+    ));
+    let err = Runner::new(spec).err().expect("must be rejected");
+    let msg = err.to_string();
+    assert!(msg.contains("straggler"), "{msg}");
+    assert!(msg.contains('2') && msg.contains('4'), "{msg}");
+}
+
+#[test]
+fn registry_rejects_parameter_space_engines_for_ssvm() {
+    let cfg = Config::parse(
+        "[run]\nseed = 2\n[ssvm]\nn = 12\nk = 3\nd = 6\nell = 4\n\
+         [multiclass]\nn = 12\nk = 3\nd = 6\n",
+    )
+    .unwrap();
+    for problem in ["ssvm", "multiclass"] {
+        let instance = ProblemInstance::from_config(problem, &cfg).unwrap();
+        for engine in [Engine::pbcd(), Engine::lockfree(2)] {
+            let runner = Runner::new(
+                RunSpec::new(engine).max_epochs(1.0).max_secs(5.0),
+            )
+            .unwrap();
+            let err = runner.solve(&instance).unwrap_err().to_string();
+            assert!(
+                err.contains("parameter-space"),
+                "{problem}: {err}"
+            );
+        }
+    }
+}
+
+#[test]
+fn registry_dispatch_matches_generic_path_bit_identically() {
+    // Solving through the registry (ProblemInstance) and through the
+    // generic solve_problem path must be the same computation.
+    let cfg = Config::parse(
+        "[run]\nseed = 17\n[gfl]\nd = 5\nn = 30\nlambda = 0.2\n",
+    )
+    .unwrap();
+    let instance = ProblemInstance::from_config("gfl", &cfg).unwrap();
+    let runner = Runner::new(spec(Engine::Seq, 2)).unwrap();
+    let via_registry = runner.solve(&instance).unwrap();
+    let ProblemInstance::Gfl(ref p) = instance else {
+        panic!("expected gfl")
+    };
+    let direct = runner.solve_problem(p).unwrap();
+    assert_eq!(via_registry.param, direct.param);
+    assert_eq!(via_registry.oracle_calls(), direct.oracle_calls());
+}

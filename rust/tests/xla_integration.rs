@@ -12,7 +12,8 @@ use apbcfw::runtime::service;
 use apbcfw::runtime::xla_backends::{
     XlaChainDecoder, XlaGfl, XlaGflPrimal, XlaMulticlassDecoder,
 };
-use apbcfw::solver::{minibatch, SolveOptions, StopCond};
+use apbcfw::run::{Engine, RunSpec};
+use apbcfw::solver::minibatch;
 use apbcfw::util::la;
 use apbcfw::util::rng::Pcg64;
 use std::sync::Arc;
@@ -162,19 +163,14 @@ fn solve_with_xla_backend_converges_like_native() {
     let xla_problem =
         Gfl::new(GFL_D, GFL_N, lam, y).with_backend(backend);
 
-    let opts = SolveOptions {
-        tau: 4,
-        line_search: true,
-        sample_every: 16,
-        exact_gap: false,
-        stop: StopCond {
-            max_epochs: 30.0,
-            max_secs: 120.0,
-            ..Default::default()
-        },
-        seed: 9,
-        ..Default::default()
-    };
+    let opts = RunSpec::new(Engine::Seq)
+        .tau(4)
+        .line_search(true)
+        .sample_every(16)
+        .max_epochs(30.0)
+        .max_secs(120.0)
+        .seed(9)
+        .solve_options();
     let r_native = minibatch::solve(&native, &opts);
     let r_xla = minibatch::solve(&xla_problem, &opts);
     let f_native = r_native.trace.last().unwrap().objective;
@@ -199,21 +195,15 @@ fn xla_backed_async_coordinator_run() {
         Arc::new(XlaGfl::new(handle, GFL_D, GFL_N, lam, &native.b).unwrap());
     let problem = Gfl::new(GFL_D, GFL_N, lam, y).with_backend(backend);
 
-    let cfg = apbcfw::coordinator::RunConfig {
-        workers: 3,
-        tau: 4,
-        line_search: true,
-        straggler: apbcfw::sim::straggler::StragglerModel::none(3),
-        sample_every: 8,
-        exact_gap: false,
-        stop: StopCond {
-            max_epochs: 20.0,
-            max_secs: 60.0,
-            ..Default::default()
-        },
-        seed: 11,
-        ..Default::default()
-    };
+    let cfg = RunSpec::new(Engine::asynchronous(3))
+        .tau(4)
+        .line_search(true)
+        .sample_every(8)
+        .max_epochs(20.0)
+        .max_secs(60.0)
+        .seed(11)
+        .run_config()
+        .unwrap();
     let r = apbcfw::coordinator::apbcfw::run(&problem, &cfg);
     assert!(r.counters.updates_applied > 0);
     let f_end = r.trace.last().unwrap().objective;

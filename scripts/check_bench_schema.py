@@ -1,0 +1,47 @@
+#!/usr/bin/env python3
+"""Schema gate for BENCH_hotpaths.json.
+
+The file is committed PR-over-PR (pending or measured) and consumed by the
+perf regression gate, so it must stay machine-readable in both states:
+
+    {"bench": "hot_paths", "unit": "ns_per_call",
+     "status": "measured" | "pending-first-run",
+     "rows": [{"name": str, "mean": num, "median": num,
+               "p95": num, "reps": int}, ...]}
+
+Exit code 0 iff the file conforms. Usage:
+    python3 scripts/check_bench_schema.py [path]
+"""
+
+import json
+import sys
+
+
+def check(path: str) -> str:
+    with open(path) as f:
+        doc = json.load(f)
+    for key in ("bench", "unit", "status", "rows"):
+        assert key in doc, f"missing key: {key}"
+    assert doc["bench"] == "hot_paths", f"bench: {doc['bench']!r}"
+    assert doc["unit"] == "ns_per_call", f"unit: {doc['unit']!r}"
+    assert doc["status"] in ("measured", "pending-first-run"), doc["status"]
+    assert isinstance(doc["rows"], list), "rows must be a list"
+    for row in doc["rows"]:
+        for key in ("name", "mean", "median", "p95", "reps"):
+            assert key in row, f"row missing {key}: {row}"
+        assert isinstance(row["name"], str), row
+        for key in ("mean", "median", "p95"):
+            assert isinstance(row[key], (int, float)), row
+        assert isinstance(row["reps"], int), row
+    if doc["status"] == "measured":
+        assert doc["rows"], "measured report must carry rows"
+    return f"{path} OK ({doc['status']}, {len(doc['rows'])} rows)"
+
+
+if __name__ == "__main__":
+    target = sys.argv[1] if len(sys.argv) > 1 else "BENCH_hotpaths.json"
+    try:
+        print(check(target))
+    except (AssertionError, json.JSONDecodeError, OSError) as e:
+        print(f"schema check FAILED for {target}: {e}", file=sys.stderr)
+        sys.exit(1)
