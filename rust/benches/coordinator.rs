@@ -73,6 +73,21 @@ fn main() {
             r.counters.collisions,
         );
     }
+    // Batched fan-out: tau_w blocks per snapshot amortize the O(dim)
+    // shared-parameter read; reads-per-update is the §Perf headline.
+    for batch in [4usize, 16] {
+        let cfg = throughput_spec(Engine::asynchronous(4), 2)
+            .batch(batch)
+            .run_config()
+            .unwrap();
+        let r = coord::run(&p, &cfg);
+        println!(
+            "mode=async        tau=8 T=4 b={batch:<2} {:>10.0} oracle calls/s ({:.3} snapshot reads/update)",
+            r.counters.oracle_calls as f64 / r.elapsed_s,
+            r.counters.snapshot_reads as f64
+                / r.counters.updates_applied.max(1) as f64,
+        );
+    }
     let r = sync::run(
         &p,
         &throughput_spec(Engine::synchronous(4), 3)

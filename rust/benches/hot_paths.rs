@@ -1,12 +1,15 @@
 //! Micro-benchmarks of the L3 hot-path primitives: vector math (scalar vs
 //! SIMD-dispatched), shared-parameter publish/read (per-element atomic
-//! baseline vs wide-word), buffer operations, and the allocating vs
+//! baseline vs wide-word), buffer operations, the allocating vs
 //! zero-allocation (`oracle` vs snapshot-reuse + `oracle_into`) worker
-//! loops for the GFL and chain-SSVM oracles.
+//! loops for the GFL and chain-SSVM oracles, and the batched fan-out's
+//! snapshot-read amortization (reads per applied update at batch 1/4/16,
+//! measured on a real async engine run).
 //!
 //! These are the §Perf targets — see EXPERIMENTS.md §Perf. Every row is
 //! also written to `BENCH_hotpaths.json` at the repo root so the perf
-//! trajectory is tracked across PRs. Run with:
+//! trajectory is tracked across PRs (timing rows in ns_per_call; metric
+//! rows carry their own `unit`). Run with:
 //!
 //! ```bash
 //! cargo bench --bench hot_paths
@@ -14,23 +17,37 @@
 
 mod bench_util;
 
+use apbcfw::coordinator::apbcfw as coord;
 use apbcfw::coordinator::buffer::BatchAssembler;
 use apbcfw::coordinator::shared::{SharedParam, SnapshotMode};
 use apbcfw::coordinator::UpdateMsg;
 use apbcfw::data::{ocr_like, signal};
 use apbcfw::problems::gfl::Gfl;
-use apbcfw::problems::ssvm::chain::ChainSsvm;
+use apbcfw::problems::ssvm::chain::{ChainSsvm, ViterbiScratch};
 use apbcfw::problems::{BlockOracle, Problem};
+use apbcfw::run::{Engine, RunSpec};
 use apbcfw::util::rng::Pcg64;
 use apbcfw::util::simd;
-use apbcfw::util::stats::Summary;
 use bench_util::bench;
 use std::sync::atomic::{AtomicU32, Ordering};
 use std::sync::Arc;
 
-/// Collected (name, summary) rows for the JSON report.
+/// One JSON report row: a timing summary (default ns_per_call) or a plain
+/// metric with its own unit.
+struct Row {
+    name: String,
+    mean: f64,
+    median: f64,
+    p95: f64,
+    reps: usize,
+    /// Per-row unit override (e.g. "reads_per_update"); None inherits the
+    /// report-level ns_per_call.
+    unit: Option<&'static str>,
+}
+
+/// Collected rows for the JSON report.
 struct Report {
-    rows: Vec<(String, Summary)>,
+    rows: Vec<Row>,
 }
 
 impl Report {
@@ -40,7 +57,27 @@ impl Report {
 
     fn add<F: FnMut()>(&mut self, name: &str, reps: usize, f: F) {
         let s = bench(name, reps, f);
-        self.rows.push((name.to_string(), s));
+        self.rows.push(Row {
+            name: name.to_string(),
+            mean: s.mean,
+            median: s.median,
+            p95: s.p95,
+            reps: s.n,
+            unit: None,
+        });
+    }
+
+    /// Record a single measured metric (mean == median == p95 == value).
+    fn add_metric(&mut self, name: &str, unit: &'static str, value: f64) {
+        println!("{name:<55} {value:>10.4} {unit}");
+        self.rows.push(Row {
+            name: name.to_string(),
+            mean: value,
+            median: value,
+            p95: value,
+            reps: 1,
+            unit: Some(unit),
+        });
     }
 
     fn write_json(&self, path: &str) {
@@ -50,14 +87,19 @@ impl Report {
         out.push_str("  \"unit\": \"ns_per_call\",\n");
         out.push_str("  \"status\": \"measured\",\n");
         out.push_str("  \"rows\": [\n");
-        for (i, (name, s)) in self.rows.iter().enumerate() {
+        for (i, r) in self.rows.iter().enumerate() {
+            let unit = match r.unit {
+                Some(u) => format!(", \"unit\": \"{u}\""),
+                None => String::new(),
+            };
             out.push_str(&format!(
-                "    {{\"name\": \"{}\", \"mean\": {:.1}, \"median\": {:.1}, \"p95\": {:.1}, \"reps\": {}}}{}\n",
-                name,
-                s.mean,
-                s.median,
-                s.p95,
-                s.n,
+                "    {{\"name\": \"{}\", \"mean\": {:.4}, \"median\": {:.4}, \"p95\": {:.4}, \"reps\": {}{}}}{}\n",
+                r.name,
+                r.mean,
+                r.median,
+                r.p95,
+                r.reps,
+                unit,
                 if i + 1 < self.rows.len() { "," } else { "" }
             ));
         }
@@ -143,11 +185,32 @@ fn main() {
         let mut r = Pcg64::seeded(7);
         while asm.len() < 16 {
             asm.insert(UpdateMsg {
-                oracle: BlockOracle {
+                oracles: vec![BlockOracle {
                     block: r.below(1000),
                     s: vec![0.0; 8],
                     ls: 0.0,
-                },
+                }],
+                k_read: 0,
+                worker: 0,
+            });
+        }
+        std::hint::black_box(asm.take_batch(16));
+    });
+    report.add("assembler insert+take tau=16 batched x4", 2000, || {
+        let mut asm = BatchAssembler::new();
+        let mut r = Pcg64::seeded(7);
+        let mut blocks = Vec::new();
+        while asm.len() < 16 {
+            apbcfw::coordinator::pick_blocks(&mut r, 1000, 4, &mut blocks);
+            asm.insert(UpdateMsg {
+                oracles: blocks
+                    .iter()
+                    .map(|&block| BlockOracle {
+                        block,
+                        s: vec![0.0; 8],
+                        ls: 0.0,
+                    })
+                    .collect(),
                 k_read: 0,
                 worker: 0,
             });
@@ -196,9 +259,29 @@ fn main() {
     report.add("gfl worker loop zero-alloc (read+oracle_into)", 10000, || {
         gfl_shared.read(&mut snap);
         block = (block + 1) % gfl.num_blocks();
-        gfl.oracle_into(&snap, block, &mut slot);
+        gfl.oracle_into(&snap, block, &mut (), &mut slot);
         std::hint::black_box(slot.ls);
     });
+
+    // Batched fan-out round: ONE snapshot read amortized over `b` oracle
+    // solves (what a batched worker does per iteration). Compare the
+    // per-round medians divided by b against the batch=1 row.
+    for b in [4usize, 16] {
+        let mut slots: Vec<BlockOracle> =
+            (0..b).map(|_| BlockOracle::empty()).collect();
+        report.add(
+            &format!("gfl worker round read+{b}x oracle_into (batch={b})"),
+            10000 / b,
+            || {
+                gfl_shared.read(&mut snap);
+                for slot in slots.iter_mut() {
+                    block = (block + 1) % gfl.num_blocks();
+                    gfl.oracle_into(&snap, block, &mut (), slot);
+                }
+                std::hint::black_box(slots[0].ls);
+            },
+        );
+    }
 
     // Chain SSVM at the paper shape (K=26, d=128, L=9).
     let data = Arc::new(ocr_like::generate(64, 26, 128, 9, 0.15, 4));
@@ -211,16 +294,43 @@ fn main() {
         std::hint::black_box(chain.oracle(&snapshot, block));
     });
     let mut cslot = BlockOracle::empty();
+    let mut viterbi_sc = ViterbiScratch::default();
     report.add(
         "chain worker loop zero-alloc (read+oracle_into)",
         1000,
         || {
             chain_shared.read(&mut snap);
             block = (block + 1) % chain.num_blocks();
-            chain.oracle_into(&snap, block, &mut cslot);
+            chain.oracle_into(&snap, block, &mut viterbi_sc, &mut cslot);
             std::hint::black_box(cslot.ls);
         },
     );
+
+    // ---- batched fan-out: snapshot reads per applied update ----
+    // Real async engine runs on the paper-shape GFL (99 blocks, 2
+    // workers): the headline metric the batched worker API exists to
+    // improve. Version-gating already skips redundant reads at batch=1;
+    // batching divides what remains by tau_w.
+    println!();
+    for b in [1usize, 4, 16] {
+        let cfg = RunSpec::new(Engine::asynchronous(2))
+            .tau(4)
+            .batch(b)
+            .sample_every(1 << 20)
+            .max_epochs(30.0)
+            .max_secs(10.0)
+            .seed(3)
+            .run_config()
+            .expect("async spec lowers");
+        let r = coord::run(&gfl, &cfg);
+        report.add_metric(
+            &format!("async snapshot-reads-per-update batch={b}"),
+            "reads_per_update",
+            r.counters.snapshot_reads as f64
+                / r.counters.updates_applied.max(1) as f64,
+        );
+    }
+    println!();
 
     // ---- simplex projection (PBCD hot path) ----
     let mut blk = rng.gaussian_vec(10);
@@ -245,8 +355,8 @@ fn main() {
         report
             .rows
             .iter()
-            .find(|(n, _)| n == name)
-            .map(|(_, s)| s.median)
+            .find(|r| r.name == name)
+            .map(|r| r.median)
             .unwrap_or_else(|| panic!("bench row {name:?} missing"))
     };
     let gfl_ratio = find("gfl worker loop allocating (read_vec+oracle)")

@@ -37,7 +37,7 @@ fn main() {
     });
     let mut slot = apbcfw::problems::BlockOracle::empty();
     bench("gfl native oracle_into (1 block)", 20000, || {
-        gfl.oracle_into(&u, 42, &mut slot);
+        gfl.oracle_into(&u, 42, &mut (), &mut slot);
         std::hint::black_box(slot.ls);
     });
     bench("gfl native full objective", 5000, || {
@@ -57,8 +57,10 @@ fn main() {
     bench("chain native Viterbi oracle", 2000, || {
         std::hint::black_box(chain.viterbi(&w, 3, 1.0));
     });
+    let mut viterbi_sc =
+        apbcfw::problems::ssvm::chain::ViterbiScratch::default();
     bench("chain native oracle_into (scratch Viterbi)", 2000, || {
-        chain.oracle_into(&w, 3, &mut slot);
+        chain.oracle_into(&w, 3, &mut viterbi_sc, &mut slot);
         std::hint::black_box(slot.ls);
     });
     bench("chain payload build", 5000, || {
@@ -113,7 +115,7 @@ fn main() {
         std::hint::black_box(mc.argmax(&wm, 7, 1.0));
     });
     bench("multiclass native oracle_into", 20000, || {
-        mc.oracle_into(&wm, 7, &mut slot);
+        mc.oracle_into(&wm, 7, &mut (), &mut slot);
         std::hint::black_box(slot.ls);
     });
     if let Some(h) = &handle {

@@ -6,8 +6,8 @@
 //! apbcfw exp <id|all> [--config FILE] [--set sect.key=val ...]
 //! apbcfw solve <gfl|ssvm|multiclass|qp>
 //!        [--mode seq|batch|delayed|pbcd|async|sync|lockfree]
-//!        [--tau N] [--workers N] [--epochs F] [--seed N] [--line-search]
-//!        [--straggler none|single:P|hetero:T|p1,p2,..]
+//!        [--tau N] [--batch N] [--workers N] [--epochs F] [--seed N]
+//!        [--line-search] [--straggler none|single:P|hetero:T|p1,p2,..]
 //!        [--snapshot-mode torn|consistent] [--queue-factor N]
 //!        [--config FILE] [--set sect.key=val ...]
 //! apbcfw artifacts-check [--dir DIR]
@@ -50,6 +50,7 @@ pub struct Cli {
 const SOLVE_FLAG_KEYS: &[(&str, &str)] = &[
     ("mode", "run.mode"),
     ("tau", "run.tau"),
+    ("batch", "run.batch"),
     ("workers", "run.workers"),
     ("epochs", "run.epochs"),
     ("seed", "run.seed"),
@@ -79,9 +80,9 @@ pub fn parse(args: &[String]) -> Result<Cli> {
         if let Some(name) = a.strip_prefix("--") {
             let takes_value = matches!(
                 name,
-                "config" | "set" | "dir" | "mode" | "tau" | "workers"
-                    | "epochs" | "seed" | "straggler" | "snapshot-mode"
-                    | "queue-factor"
+                "config" | "set" | "dir" | "mode" | "tau" | "batch"
+                    | "workers" | "epochs" | "seed" | "straggler"
+                    | "snapshot-mode" | "queue-factor"
             );
             if takes_value {
                 let v = rest
@@ -158,7 +159,7 @@ pub fn parse(args: &[String]) -> Result<Cli> {
             for (flag, key) in SOLVE_FLAG_KEYS {
                 if let Some(v) = flag_val(flag) {
                     let ok = match *flag {
-                        "tau" | "workers" | "queue-factor" => {
+                        "tau" | "batch" | "workers" | "queue-factor" => {
                             v.parse::<usize>().is_ok()
                         }
                         "seed" => v.parse::<u64>().is_ok(),
@@ -205,10 +206,12 @@ USAGE:
            ex1 ex2 d4 prop1
   apbcfw solve <gfl|ssvm|multiclass|qp>
          [--mode seq|batch|delayed|pbcd|async|sync|lockfree]
-         [--tau N] [--workers N] [--epochs F] [--seed N] [--line-search]
-         [--straggler none|single:P|hetero:T|p1,p2,..]
+         [--tau N] [--batch N] [--workers N] [--epochs F] [--seed N]
+         [--line-search] [--straggler none|single:P|hetero:T|p1,p2,..]
          [--snapshot-mode torn|consistent] [--queue-factor N]
          [--config FILE] [--set sect.key=val ...]
+      --batch is the worker fan-out tau_w (threaded modes only): blocks
+      each worker solves per shared-parameter snapshot.
       every flag is sugar for --set run.<key>=<val>; further knobs
       (run.delay, run.weighted_averaging, run.work_multiplier, run.eps_gap,
       ...) are reachable through --set / --config only.
@@ -244,6 +247,8 @@ mod tests {
             "async",
             "--tau",
             "8",
+            "--batch",
+            "4",
             "--workers",
             "4",
             "--seed",
@@ -266,6 +271,7 @@ mod tests {
         let c = &cli.config;
         assert_eq!(c.get("run.mode"), Some("async"));
         assert_eq!(c.get_usize("run.tau", 0), 8);
+        assert_eq!(c.get_usize("run.batch", 0), 4);
         assert_eq!(c.get_usize("run.workers", 0), 4);
         assert_eq!(c.get_u64("run.seed", 0), 11);
         assert_eq!(c.get("run.straggler"), Some("single:0.25"));
@@ -332,6 +338,7 @@ mod tests {
         // legacy parser's behaviour.
         for args in [
             ["solve", "gfl", "--tau", "abc"],
+            ["solve", "gfl", "--batch", "-2"],
             ["solve", "gfl", "--workers", "two"],
             ["solve", "gfl", "--epochs", "lots"],
             ["solve", "gfl", "--seed", "-1"],

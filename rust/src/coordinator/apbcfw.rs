@@ -3,24 +3,30 @@
 //! memory; here worker threads + a server thread over a shared parameter).
 //!
 //! Workers loop: snapshot the shared parameter (lock-free, possibly mid-
-//! publish — the delayed/inconsistent-read regime of §2.3), pick a block
-//! uniformly, solve the linear subproblem, and push the update. The server
-//! assembles tau disjoint blocks (collision-overwrite), applies them with
-//! the paper's step size (or exact line search), publishes, and repeats.
-//! No thread ever waits for a straggler.
+//! publish — the delayed/inconsistent-read regime of §2.3), pick
+//! `cfg.batch` distinct blocks uniformly, solve all their linear
+//! subproblems against that one snapshot, and push them as one multi-block
+//! payload (the batched fan-out; `batch = 1` is the paper's single-block
+//! worker). The server assembles tau disjoint blocks across payloads
+//! (collision-overwrite), applies them with the paper's step size (or
+//! exact line search), publishes, and repeats. No thread ever waits for a
+//! straggler.
 //!
 //! §Perf: the loop is allocation-free in steady state. Each worker owns a
-//! snapshot buffer (re-read only on version change) and a [`BlockOracle`]
-//! scratch filled by [`Problem::oracle_into`]; payload buffers of applied
-//! updates are recycled back to workers through a bounded free-list, so
-//! after warm-up the worker->server->worker ring reuses the same
-//! allocations. Straggler-dropped and redone solves never allocate at all.
-//! Old-vs-new numbers in EXPERIMENTS.md §Perf (`benches/hot_paths.rs`).
+//! snapshot buffer (re-read only on version change — batching further
+//! amortizes the O(dim) read across `batch` solves), a caller-owned
+//! [`Problem::Scratch`], and a payload container of [`BlockOracle`] slots
+//! filled by [`Problem::oracle_into`]; the server recycles both the
+//! applied/displaced payload buffers and the emptied message containers
+//! back to workers through bounded free-lists, so after warm-up the
+//! worker->server->worker ring reuses the same allocations.
+//! Straggler-dropped and redone solves never allocate at all. Old-vs-new
+//! numbers in EXPERIMENTS.md §Perf (`benches/hot_paths.rs`).
 
 use super::buffer::BatchAssembler;
 use super::shared::SharedParam;
-use super::{RunConfig, RunResult, UpdateMsg};
-use crate::problems::{ApplyOptions, BlockOracle, Problem};
+use super::{pick_blocks, RunConfig, RunResult, UpdateMsg};
+use crate::problems::{ApplyOptions, BlockOracle, OracleScratch, Problem};
 use crate::run::Observer;
 use crate::solver::{schedule_gamma, WeightedAverage};
 use crate::util::metrics::{Counters, Sample, Stopwatch, Trace};
@@ -48,6 +54,7 @@ pub fn run_observed<P: Problem>(
     );
     let n = problem.num_blocks();
     let tau = cfg.tau.clamp(1, n);
+    let wbatch = cfg.worker_batch(n);
     let mut master = problem.init_param();
     let mut state = problem.init_server();
     let shared = SharedParam::with_mode(&master, cfg.snapshot_mode);
@@ -64,8 +71,13 @@ pub fn run_observed<P: Problem>(
     // vectors here and workers pick them up before the next solve, making
     // the send path allocation-free after warm-up. Bounded so a slow
     // consumer cannot hoard memory.
-    let pool_cap = queue_cap + cfg.workers;
+    let pool_cap = (queue_cap + cfg.workers) * wbatch;
     let oracle_pool: Mutex<Vec<Vec<f32>>> = Mutex::new(Vec::new());
+    // Message-container free list: the assembler hands back each payload's
+    // emptied `Vec<BlockOracle>` and the server returns it here, so the
+    // multi-block send path reuses containers as well as buffers.
+    let msg_pool: Mutex<Vec<Vec<BlockOracle>>> = Mutex::new(Vec::new());
+    let msg_pool_cap = queue_cap + cfg.workers;
     let watch = Stopwatch::start();
 
     let mut trace = Trace::default();
@@ -88,57 +100,88 @@ pub fn run_observed<P: Problem>(
             let stop = &stop;
             let counters = &counters;
             let pool = &oracle_pool;
+            let vec_pool = &msg_pool;
             let straggler = cfg.straggler.clone();
             let (lo, hi) = cfg.work_multiplier;
             let seed = cfg.seed;
             scope.spawn(move || {
                 let mut rng = Pcg64::new(seed, 1000 + w as u64);
                 let mut snapshot: Vec<f32> = Vec::new();
-                // Reusable oracle slot: `oracle_into` fills it in place;
-                // its payload buffer is handed to the server on send and
-                // replaced from the recycle pool.
-                let mut scratch = BlockOracle::empty();
+                let mut blocks: Vec<usize> = Vec::new();
+                // Caller-owned oracle scratch: one per worker, reused
+                // across every block of every batch.
+                let mut oscratch = OracleScratch::<P>::default();
+                // Multi-block payload under construction: `oracle_into`
+                // fills its slots in place; the container and its payload
+                // buffers are handed to the server on send and replaced
+                // from the recycle pools.
+                let mut payload: Vec<BlockOracle> = Vec::new();
                 // Re-read the shared parameter only when the server has
                 // published a new version — between publishes the snapshot
                 // is bit-identical, and the O(dim) atomic read was the
-                // dominant per-oracle cost for cheap oracles (§Perf).
+                // dominant per-oracle cost for cheap oracles; batching
+                // amortizes it over `wbatch` solves either way (§Perf).
                 let mut snap_version = u64::MAX;
                 while !stop.load(Ordering::Acquire) {
                     let k_read = shared.version();
                     if k_read != snap_version || snapshot.is_empty() {
                         shared.read(&mut snapshot);
                         snap_version = k_read;
+                        Counters::bump(&counters.snapshot_reads);
                     }
-                    let i = rng.below(n);
-                    // Harder-subproblem simulation (Fig 2d): redo the solve
-                    // m ~ Uniform(lo, hi) times; only the last one counts.
+                    // tau_w distinct blocks per snapshot (one `below(n)`
+                    // draw — the historical single-block path — at 1).
+                    pick_blocks(&mut rng, n, wbatch, &mut blocks);
+                    // Harder-subproblem simulation (Fig 2d): redo each
+                    // solve m ~ Uniform(lo, hi) times; only the last
+                    // counts.
                     let reps = if hi > lo {
                         lo + rng.below((hi - lo + 1) as usize) as u32
                     } else {
                         lo
                     };
-                    if scratch.s.capacity() == 0 {
-                        // Opportunistic: on contention just allocate.
-                        if let Ok(mut p) = pool.try_lock() {
-                            if let Some(buf) = p.pop() {
-                                scratch.s = buf;
+                    // Top up the container and its payload buffers from
+                    // the recycle pools. Opportunistic: on contention just
+                    // allocate.
+                    if payload.capacity() == 0 {
+                        if let Ok(mut p) = vec_pool.try_lock() {
+                            if let Some(v) = p.pop() {
+                                payload = v;
                             }
                         }
                     }
-                    problem.oracle_into(&snapshot, i, &mut scratch);
-                    for _ in 1..reps {
-                        problem.oracle_into(&snapshot, i, &mut scratch);
+                    while payload.len() < wbatch {
+                        payload.push(BlockOracle::empty());
                     }
-                    Counters::bump(&counters.oracle_calls);
+                    for (slot, &i) in payload.iter_mut().zip(blocks.iter()) {
+                        if slot.s.capacity() == 0 {
+                            if let Ok(mut p) = pool.try_lock() {
+                                if let Some(buf) = p.pop() {
+                                    slot.s = buf;
+                                }
+                            }
+                        }
+                        problem.oracle_into(&snapshot, i, &mut oscratch, slot);
+                        for _ in 1..reps {
+                            problem.oracle_into(
+                                &snapshot,
+                                i,
+                                &mut oscratch,
+                                slot,
+                            );
+                        }
+                        Counters::bump(&counters.oracle_calls);
+                    }
                     if !straggler.reports(w, &mut rng) {
-                        Counters::bump(&counters.dropped);
+                        // The whole payload fails to report; its slots are
+                        // reused next iteration without any allocation.
+                        Counters::add(&counters.dropped, wbatch as u64);
                         continue;
                     }
-                    let oracle =
-                        std::mem::replace(&mut scratch, BlockOracle::empty());
+                    let oracles = std::mem::take(&mut payload);
                     if tx
                         .send(UpdateMsg {
-                            oracle,
+                            oracles,
                             k_read,
                             worker: w,
                         })
@@ -152,24 +195,46 @@ pub fn run_observed<P: Problem>(
         drop(tx);
 
         // ---------------- server ----------------
+        // Recycle a message container and the payload buffers inside it
+        // back to the worker pools — opportunistically: if a pool is
+        // contended or full, dropping is cheaper than waiting.
+        let recycle = |mut oracles: Vec<BlockOracle>| {
+            if !oracles.is_empty() {
+                if let Ok(mut p) = oracle_pool.try_lock() {
+                    while let Some(o) = oracles.pop() {
+                        if p.len() >= pool_cap {
+                            break;
+                        }
+                        let mut s = o.s;
+                        s.clear();
+                        p.push(s);
+                    }
+                }
+                oracles.clear();
+            }
+            if let Ok(mut p) = msg_pool.try_lock() {
+                if p.len() < msg_pool_cap {
+                    p.push(oracles);
+                }
+            }
+        };
         'serve: loop {
             match rx.recv_timeout(Duration::from_millis(2)) {
                 Ok(msg) => {
                     // Staleness rule (paper Thm 4): drop if delay > k/2.
+                    // Every oracle in a payload was read at the same
+                    // k_read, so the whole payload shares one verdict.
                     let delay = k.saturating_sub(msg.k_read);
                     if cfg.staleness_rule && 2 * delay > k && delay > 0 {
-                        Counters::bump(&counters.dropped);
-                        if let Ok(mut p) = oracle_pool.try_lock() {
-                            if p.len() < pool_cap {
-                                let mut s = msg.oracle.s;
-                                s.clear();
-                                p.push(s);
-                            }
-                        }
+                        Counters::add(
+                            &counters.dropped,
+                            msg.oracles.len() as u64,
+                        );
+                        recycle(msg.oracles);
                     } else if cfg.collision_overwrite {
-                        asm.insert(msg);
+                        recycle(asm.insert(msg));
                     } else {
-                        asm.insert_keep_old(msg);
+                        recycle(asm.insert_keep_old(msg));
                     }
                 }
                 Err(mpsc::RecvTimeoutError::Timeout) => {}
@@ -179,7 +244,14 @@ pub fn run_observed<P: Problem>(
             while let Some(batch_msgs) = asm.take_batch(tau) {
                 let batch: Vec<_> =
                     batch_msgs.into_iter().map(|m| m.oracle).collect();
-                let gamma = schedule_gamma(n, tau, k);
+                // A multi-block payload can push the pending set past tau
+                // before the server drains it, so the applied batch may
+                // exceed tau; the step size, counters, and gap scaling all
+                // use the actual size. Single-block payloads grow pending
+                // by one, so at batch = 1 this is exactly tau (the
+                // historical value, bit-for-bit).
+                let applied = batch.len();
+                let gamma = schedule_gamma(n, applied, k);
                 let info = problem.apply(
                     &mut state,
                     &mut master,
@@ -201,26 +273,16 @@ pub fn run_observed<P: Problem>(
                     }
                     None => shared.publish(&master, k),
                 }
-                // Recycle applied payload buffers back to the workers —
-                // opportunistically: if the pool is contended, dropping
-                // the buffers is cheaper than waiting.
-                if let Ok(mut p) = oracle_pool.try_lock() {
-                    for o in batch {
-                        if p.len() >= pool_cap {
-                            break;
-                        }
-                        let mut s = o.s;
-                        s.clear();
-                        p.push(s);
-                    }
-                }
-                Counters::add(&counters.updates_applied, tau as u64);
+                // Recycle the applied payload buffers AND the batch
+                // container back to the workers.
+                recycle(batch);
+                Counters::add(&counters.updates_applied, applied as u64);
                 counters.iterations.store(k, Ordering::Relaxed);
                 obs.on_apply(k, info.gamma, info.batch_gap);
                 if let Some(a) = &mut avg {
                     a.update(&master, problem.aux(&state));
                 }
-                let inst = info.batch_gap * n as f64 / tau as f64;
+                let inst = info.batch_gap * n as f64 / applied as f64;
                 gap_estimate = if gap_estimate.is_finite() {
                     0.8 * gap_estimate + 0.2 * inst
                 } else {
@@ -412,6 +474,35 @@ mod tests {
         c.snapshot_mode = crate::coordinator::shared::SnapshotMode::Consistent;
         let r = run(&p, &c);
         assert!(r.trace.last().unwrap().gap <= 0.05);
+    }
+
+    #[test]
+    fn batched_workers_converge_and_amortize_snapshot_reads() {
+        let p = gfl_instance(); // 39 blocks
+        let mut c = cfg(2, 4);
+        c.batch = 4; // 4 x 2 <= 39
+        let r = run(&p, &c);
+        assert!(r.trace.last().unwrap().gap <= 0.05);
+        assert!(r.counters.snapshot_reads > 0);
+        // Each worker reads at most one snapshot per 4-block round (and
+        // only on version change), so reads are at most ~calls/4 plus a
+        // partial final round per worker.
+        assert!(
+            r.counters.snapshot_reads
+                <= r.counters.oracle_calls / 4 + 2 * c.workers as u64,
+            "reads={} calls={}",
+            r.counters.snapshot_reads,
+            r.counters.oracle_calls
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "must not exceed")]
+    fn oversized_batch_panics() {
+        let p = gfl_instance(); // 39 blocks
+        let mut c = cfg(8, 4);
+        c.batch = 8; // 8 x 8 > 39
+        let _ = run(&p, &c);
     }
 
     #[test]

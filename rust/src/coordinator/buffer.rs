@@ -1,18 +1,39 @@
 //! Server-side update buffer: Algorithm 1, step 1.
 //!
 //! "Read from buffer until it has updates for tau disjoint blocks
-//! (overwrite in case of collision)." The assembler ingests worker updates
-//! one at a time; a second update for a block already pending *replaces* it
-//! (it was computed from a fresher parameter), counting a collision. When
-//! tau distinct blocks are pending, `take_batch` drains them.
+//! (overwrite in case of collision)." The assembler ingests worker
+//! messages — each a multi-block payload of oracles for distinct blocks
+//! solved against one snapshot — and tracks one pending update per block; a
+//! second update for a block already pending *replaces* it (it was computed
+//! from a fresher parameter), counting a collision. When tau distinct
+//! blocks are pending, `take_batch` drains them **in ascending block
+//! order**, so the applied batch (and therefore every float accumulated
+//! over it) is a deterministic function of the pending set — what lets the
+//! batched-fan-out equivalence tests compare single-block and multi-block
+//! ingestion bit-for-bit.
+//!
+//! §Perf: `insert` consumes the message's payload container and hands it
+//! back emptied (refilled with any displaced oracles), so the server can
+//! recycle both the container and the displaced `s` buffers to workers
+//! instead of allocating per round trip.
 
 use super::UpdateMsg;
+use crate::problems::BlockOracle;
 use std::collections::HashMap;
+
+/// One pending per-block update inside the assembler.
+pub struct PendingUpdate {
+    pub oracle: BlockOracle,
+    /// Server iteration whose parameter the oracle was computed from.
+    pub k_read: u64,
+    /// Worker that solved it.
+    pub worker: usize,
+}
 
 /// Disjoint-block batch assembler with collision-overwrite semantics.
 #[derive(Default)]
 pub struct BatchAssembler {
-    pending: HashMap<usize, UpdateMsg>,
+    pending: HashMap<usize, PendingUpdate>,
     collisions: u64,
 }
 
@@ -21,32 +42,71 @@ impl BatchAssembler {
         Self::default()
     }
 
-    /// Ingest one update. Returns true if it overwrote a pending one.
-    pub fn insert(&mut self, msg: UpdateMsg) -> bool {
-        let collided = self
-            .pending
-            .insert(msg.oracle.block, msg)
-            .is_some();
-        if collided {
-            self.collisions += 1;
+    /// Ingest every oracle in the message (blocks within one message are
+    /// distinct by the worker contract). A block already pending is
+    /// overwritten by the fresher oracle, counting a collision. Returns
+    /// the message's payload container, emptied and refilled with the
+    /// displaced oracles (empty when nothing collided) so the caller can
+    /// recycle the buffers.
+    pub fn insert(&mut self, msg: UpdateMsg) -> Vec<BlockOracle> {
+        let UpdateMsg {
+            mut oracles,
+            k_read,
+            worker,
+        } = msg;
+        // Compact displaced oracles into the front of the container while
+        // draining it: position `idx` has already been taken by the time
+        // `kept <= idx` is written.
+        let mut kept = 0usize;
+        for idx in 0..oracles.len() {
+            let o = std::mem::replace(&mut oracles[idx], BlockOracle::empty());
+            if let Some(old) = self.pending.insert(
+                o.block,
+                PendingUpdate {
+                    oracle: o,
+                    k_read,
+                    worker,
+                },
+            ) {
+                self.collisions += 1;
+                oracles[kept] = old.oracle;
+                kept += 1;
+            }
         }
-        collided
+        oracles.truncate(kept);
+        oracles
     }
 
     /// Ablation variant: on collision keep the OLD pending update instead
-    /// of the fresher one. Returns true if the new update was discarded.
-    pub fn insert_keep_old(&mut self, msg: UpdateMsg) -> bool {
+    /// of the fresher one. Returns the container refilled with the
+    /// discarded (new) oracles.
+    pub fn insert_keep_old(&mut self, msg: UpdateMsg) -> Vec<BlockOracle> {
         use std::collections::hash_map::Entry;
-        match self.pending.entry(msg.oracle.block) {
-            Entry::Occupied(_) => {
-                self.collisions += 1;
-                true
-            }
-            Entry::Vacant(v) => {
-                v.insert(msg);
-                false
+        let UpdateMsg {
+            mut oracles,
+            k_read,
+            worker,
+        } = msg;
+        let mut kept = 0usize;
+        for idx in 0..oracles.len() {
+            let o = std::mem::replace(&mut oracles[idx], BlockOracle::empty());
+            match self.pending.entry(o.block) {
+                Entry::Occupied(_) => {
+                    self.collisions += 1;
+                    oracles[kept] = o;
+                    kept += 1;
+                }
+                Entry::Vacant(v) => {
+                    v.insert(PendingUpdate {
+                        oracle: o,
+                        k_read,
+                        worker,
+                    });
+                }
             }
         }
+        oracles.truncate(kept);
+        oracles
     }
 
     /// Number of distinct blocks pending.
@@ -64,12 +124,17 @@ impl BatchAssembler {
     }
 
     /// If at least `tau` distinct blocks are pending, drain and return
-    /// exactly the pending set (which is disjoint by construction).
-    pub fn take_batch(&mut self, tau: usize) -> Option<Vec<UpdateMsg>> {
+    /// exactly the pending set (disjoint by construction), sorted by block
+    /// index so the applied batch order — and every order-sensitive float
+    /// reduction over it — is deterministic given the set.
+    pub fn take_batch(&mut self, tau: usize) -> Option<Vec<PendingUpdate>> {
         if self.pending.len() < tau {
             return None;
         }
-        Some(self.pending.drain().map(|(_, m)| m).collect())
+        let mut batch: Vec<PendingUpdate> =
+            self.pending.drain().map(|(_, m)| m).collect();
+        batch.sort_unstable_by_key(|p| p.oracle.block);
+        Some(batch)
     }
 
     /// Drop every pending update (used on shutdown).
@@ -81,15 +146,29 @@ impl BatchAssembler {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::problems::BlockOracle;
 
     fn msg(block: usize, k_read: u64) -> UpdateMsg {
         UpdateMsg {
-            oracle: BlockOracle {
+            oracles: vec![BlockOracle {
                 block,
                 s: vec![k_read as f32],
                 ls: 0.0,
-            },
+            }],
+            k_read,
+            worker: 0,
+        }
+    }
+
+    fn multi_msg(blocks: &[usize], k_read: u64) -> UpdateMsg {
+        UpdateMsg {
+            oracles: blocks
+                .iter()
+                .map(|&block| BlockOracle {
+                    block,
+                    s: vec![k_read as f32],
+                    ls: 0.0,
+                })
+                .collect(),
             k_read,
             worker: 0,
         }
@@ -104,9 +183,9 @@ mod tests {
         asm.insert(msg(3, 0));
         let batch = asm.take_batch(3).unwrap();
         assert_eq!(batch.len(), 3);
-        let mut blocks: Vec<usize> =
+        let blocks: Vec<usize> =
             batch.iter().map(|m| m.oracle.block).collect();
-        blocks.sort_unstable();
+        // take_batch returns blocks in ascending order (deterministic).
         assert_eq!(blocks, vec![1, 2, 3]);
         assert!(asm.is_empty());
     }
@@ -114,12 +193,47 @@ mod tests {
     #[test]
     fn collision_overwrites_with_fresher_update() {
         let mut asm = BatchAssembler::new();
-        assert!(!asm.insert(msg(5, 1)));
-        assert!(asm.insert(msg(5, 9))); // collision
+        assert!(asm.insert(msg(5, 1)).is_empty());
+        let displaced = asm.insert(msg(5, 9)); // collision
+        assert_eq!(displaced.len(), 1, "old oracle handed back for recycle");
+        assert_eq!(displaced[0].s, vec![1.0f32]);
         assert_eq!(asm.collisions(), 1);
         assert_eq!(asm.len(), 1);
         let batch = asm.take_batch(1).unwrap();
         assert_eq!(batch[0].k_read, 9, "must keep the fresher update");
+    }
+
+    #[test]
+    fn keep_old_discards_new_and_returns_it() {
+        let mut asm = BatchAssembler::new();
+        assert!(asm.insert_keep_old(msg(5, 1)).is_empty());
+        let discarded = asm.insert_keep_old(msg(5, 9));
+        assert_eq!(discarded.len(), 1);
+        assert_eq!(discarded[0].s, vec![9.0f32], "new oracle discarded");
+        assert_eq!(asm.collisions(), 1);
+        let batch = asm.take_batch(1).unwrap();
+        assert_eq!(batch[0].k_read, 1, "must keep the old update");
+    }
+
+    #[test]
+    fn multi_block_payload_merges_like_single_messages() {
+        // One 3-block message must leave the assembler in exactly the
+        // state three 1-block messages would.
+        let mut grouped = BatchAssembler::new();
+        grouped.insert(multi_msg(&[4, 7, 9], 2));
+        let mut single = BatchAssembler::new();
+        for b in [4usize, 7, 9] {
+            single.insert(msg(b, 2));
+        }
+        let a = grouped.take_batch(3).unwrap();
+        let b = single.take_batch(3).unwrap();
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x.oracle.block, y.oracle.block);
+            assert_eq!(x.oracle.s, y.oracle.s);
+            assert_eq!(x.k_read, y.k_read);
+        }
+        assert_eq!(grouped.collisions(), single.collisions());
     }
 
     #[test]
@@ -135,6 +249,14 @@ mod tests {
         blocks.dedup();
         assert_eq!(blocks.len(), 10);
         assert_eq!(asm.collisions(), 90);
+    }
+
+    #[test]
+    fn insert_returns_emptied_container_for_recycling() {
+        let mut asm = BatchAssembler::new();
+        let empties = asm.insert(multi_msg(&[0, 1, 2], 0));
+        assert!(empties.is_empty());
+        assert!(empties.capacity() >= 3, "container kept for reuse");
     }
 
     #[test]

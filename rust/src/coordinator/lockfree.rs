@@ -1,15 +1,17 @@
 //! Lock-free serverless AP-BCFW at tau = 1 (paper Algorithm 3).
 //!
-//! No server: every thread repeatedly picks a block, solves the subproblem
-//! against a lock-free snapshot of the shared parameter, reads the global
-//! counter for its step size gamma = 2n/(k+2n), and atomically adds the
-//! delta gamma (s_i - x_i) into the shared block — Hogwild-style. Restricted
-//! to parameter-space problems (`ServerState = ()`) with block-addressable
-//! payloads ([`ProjectableProblem`] supplies `block_range`).
+//! No server: every thread repeatedly picks `cfg.batch` distinct blocks,
+//! solves their subproblems against ONE lock-free snapshot of the shared
+//! parameter (the batched fan-out; `batch = 1` is the paper's per-block
+//! loop), then for each block reads the global counter for its step size
+//! gamma = 2n/(k+2n) and atomically adds the delta gamma (s_i - x_i) into
+//! the shared block — Hogwild-style. Restricted to parameter-space
+//! problems (`ServerState = ()`) with block-addressable payloads
+//! ([`ProjectableProblem`] supplies `block_range`).
 
 use super::shared::SharedParam;
-use super::{RunConfig, RunResult};
-use crate::problems::{BlockOracle, ProjectableProblem};
+use super::{pick_blocks, RunConfig, RunResult};
+use crate::problems::{BlockOracle, OracleScratch, ProjectableProblem};
 use crate::run::Observer;
 use crate::util::metrics::{Counters, Sample, Stopwatch, Trace};
 use crate::util::rng::Pcg64;
@@ -43,6 +45,7 @@ where
         cfg.snapshot_mode == super::shared::SnapshotMode::Torn,
         "lockfree variant requires SnapshotMode::Torn (hogwild updates)"
     );
+    let wbatch = cfg.worker_batch(n);
     let shared = SharedParam::new(&problem.init_param());
     let counter = AtomicU64::new(0);
     let stop = AtomicBool::new(false);
@@ -60,25 +63,40 @@ where
             scope.spawn(move || {
                 let mut rng = Pcg64::new(seed, 3000 + w as u64);
                 let mut snapshot: Vec<f32> = Vec::new();
-                // The oracle never leaves this thread, so one scratch slot
-                // serves the whole run — the loop is allocation-free in
+                let mut blocks: Vec<usize> = Vec::new();
+                // The oracles never leave this thread, so one slot per
+                // batch position plus one caller-owned oracle scratch
+                // serve the whole run — the loop is allocation-free in
                 // steady state (§Perf).
-                let mut scratch = BlockOracle::empty();
+                let mut oscratch = OracleScratch::<P>::default();
+                let mut slots: Vec<BlockOracle> =
+                    (0..wbatch).map(|_| BlockOracle::empty()).collect();
                 while !stop.load(Ordering::Acquire) {
-                    let i = rng.below(n);
+                    // tau_w distinct blocks, all solved against the one
+                    // snapshot read below (one `below(n)` draw at 1 — the
+                    // historical per-block loop).
+                    pick_blocks(&mut rng, n, wbatch, &mut blocks);
                     shared.read(&mut snapshot);
-                    problem.oracle_into(&snapshot, i, &mut scratch);
-                    Counters::bump(&counters.oracle_calls);
-                    let k = counter.load(Ordering::Relaxed);
-                    let gamma = 2.0 * n as f32
-                        / (k as f32 + 2.0 * n as f32);
-                    let range = problem.block_range(i);
-                    for (j, idx) in range.enumerate() {
-                        let delta = gamma * (scratch.s[j] - snapshot[idx]);
-                        shared.fetch_add_f32(idx, delta);
+                    Counters::bump(&counters.snapshot_reads);
+                    for (slot, &i) in slots.iter_mut().zip(blocks.iter()) {
+                        problem.oracle_into(&snapshot, i, &mut oscratch, slot);
+                        Counters::bump(&counters.oracle_calls);
                     }
-                    counter.fetch_add(1, Ordering::Relaxed);
-                    Counters::bump(&counters.updates_applied);
+                    // Apply per block: each update reads the counter for
+                    // its own step size, exactly as the per-block loop
+                    // did.
+                    for (slot, &i) in slots.iter().zip(blocks.iter()) {
+                        let k = counter.load(Ordering::Relaxed);
+                        let gamma = 2.0 * n as f32
+                            / (k as f32 + 2.0 * n as f32);
+                        let range = problem.block_range(i);
+                        for (j, idx) in range.enumerate() {
+                            let delta = gamma * (slot.s[j] - snapshot[idx]);
+                            shared.fetch_add_f32(idx, delta);
+                        }
+                        counter.fetch_add(1, Ordering::Relaxed);
+                        Counters::bump(&counters.updates_applied);
+                    }
                 }
             });
         }
@@ -200,6 +218,26 @@ mod tests {
             r.trace.last().unwrap().gap
         );
         assert!(r.counters.updates_applied > 0);
+    }
+
+    #[test]
+    fn batched_lockfree_converges() {
+        let p = gfl_instance(); // 39 blocks
+        let mut c = cfg(2);
+        c.batch = 4; // 4 x 2 <= 39
+        let r = run(&p, &c);
+        assert!(
+            r.trace.last().unwrap().gap <= 0.15,
+            "gap={}",
+            r.trace.last().unwrap().gap
+        );
+        // One snapshot read serves the whole 4-block round.
+        assert!(
+            r.counters.snapshot_reads <= r.counters.oracle_calls / 4 + 2,
+            "reads={} calls={}",
+            r.counters.snapshot_reads,
+            r.counters.oracle_calls
+        );
     }
 
     #[test]

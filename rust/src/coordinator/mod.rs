@@ -22,14 +22,60 @@ pub mod shared;
 pub mod sync;
 
 use crate::problems::BlockOracle;
+use crate::util::rng::Pcg64;
 
-/// Message from a worker to the server.
+/// Message from a worker to the server: a multi-block payload of oracles
+/// for pairwise-distinct blocks, all solved against ONE shared-parameter
+/// snapshot (the batched fan-out that amortizes snapshot reads across
+/// `RunConfig::batch` solves). Single-block workers (`batch = 1`) send a
+/// one-entry payload through exactly the same path.
 pub struct UpdateMsg {
-    pub oracle: BlockOracle,
-    /// Server iteration whose parameter the oracle was computed from.
+    /// Oracles for pairwise-distinct blocks (length = worker batch).
+    pub oracles: Vec<BlockOracle>,
+    /// Server iteration whose parameter the oracles were computed from.
     pub k_read: u64,
     /// Sender worker id.
     pub worker: usize,
+}
+
+/// Sample the `batch` pairwise-distinct blocks a worker solves against one
+/// snapshot. At `batch = 1` this consumes exactly one `rng.below(n)` draw
+/// and yields its value — bit-identical, draw-for-draw, to the historical
+/// single-block worker path (pinned in
+/// `rust/tests/batched_fanout_equivalence.rs`); for larger batches it is a
+/// uniform size-`batch` subset via Floyd's sampling — O(batch) work per
+/// round, never the O(n) index fill of `subset_into`, so block selection
+/// stays off the worker's critical path at any problem size. (The subset
+/// is uniform; its order is not, which no engine depends on: the async
+/// server re-orders batches by block anyway, and lockfree's per-block
+/// updates are order-agnostic.)
+#[inline]
+pub fn pick_blocks(
+    rng: &mut Pcg64,
+    n: usize,
+    batch: usize,
+    out: &mut Vec<usize>,
+) {
+    if batch <= 1 {
+        // Same single draw as `subset_into(n, 1, ..)` without its O(n)
+        // index fill: out[0] = swap target of the first Fisher-Yates step,
+        // which over 0..n is the drawn index itself.
+        out.clear();
+        out.push(rng.below(n));
+    } else {
+        debug_assert!(batch <= n);
+        out.clear();
+        for i in (n - batch)..n {
+            let j = rng.below(i + 1);
+            // Linear membership scan: batch is small (tau_w), so this
+            // beats any set structure and allocates nothing.
+            if out.contains(&j) {
+                out.push(i);
+            } else {
+                out.push(j);
+            }
+        }
+    }
 }
 
 /// Configuration of the threaded coordinator runs.
@@ -48,6 +94,13 @@ pub struct RunConfig {
     pub workers: usize,
     /// Minibatch size tau.
     pub tau: usize,
+    /// Worker fan-out batch tau_w: distinct blocks each worker solves per
+    /// shared-parameter snapshot, submitted as one multi-block payload.
+    /// 1 reproduces the historical single-block worker loop exactly;
+    /// larger values amortize the O(dim) snapshot read across `batch`
+    /// oracle solves. Engines require `batch * workers <= n` when
+    /// `batch > 1` (the `RunSpec` lowering validates this).
+    pub batch: usize,
     /// Exact line search on the server.
     pub line_search: bool,
     /// Enforce the paper's staleness rule (drop updates older than k/2).
@@ -80,11 +133,28 @@ pub struct RunConfig {
     pub seed: u64,
 }
 
+impl RunConfig {
+    /// The clamped worker fan-out batch, with the n-dependent backstop
+    /// check shared by every threaded engine. The production validation
+    /// is `Runner::check_batch` (a clean error at dispatch); this assert
+    /// guards callers that hand a `RunConfig` to an engine directly.
+    pub(crate) fn worker_batch(&self, n: usize) -> usize {
+        let batch = self.batch.max(1);
+        assert!(
+            batch == 1 || batch * self.workers <= n,
+            "batch ({batch}) x workers ({}) must not exceed n = {n} blocks",
+            self.workers
+        );
+        batch
+    }
+}
+
 impl Default for RunConfig {
     fn default() -> Self {
         Self {
             workers: 2,
             tau: 2,
+            batch: 1,
             line_search: false,
             staleness_rule: true,
             straggler: crate::sim::straggler::StragglerModel::none(2),

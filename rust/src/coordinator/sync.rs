@@ -1,14 +1,21 @@
 //! SP-BCFW: the synchronous minibatch comparator (paper §3.3).
 //!
-//! Each iteration the server picks tau disjoint blocks, assigns tau/T to
-//! each worker, and *waits for all of them* before applying the batch.
-//! Stragglers are simulated with return probabilities: a failed report
-//! forces the worker to redo the solve, so the iteration takes as long as
-//! the slowest worker — the behaviour Fig 3 contrasts with AP-BCFW.
+//! Each iteration the server picks tau disjoint blocks, assigns them to
+//! workers in contiguous chunks (round-robin; `batch = 1` is the
+//! historical element-wise round-robin), and *waits for all of them*
+//! before applying the batch. A worker solves its whole assignment
+//! against ONE snapshot of the shared parameter — the synchronous form of
+//! the batched fan-out. Because the server samples only tau blocks per
+//! round, `cfg.batch` is a CAP on the chunk, clamped to the floor share
+//! `tau / workers` so no worker is ever idled (the full fan-out needs
+//! `tau >= batch * workers`). Stragglers are simulated with return
+//! probabilities: a failed report forces the worker to redo the solve, so
+//! the iteration takes as long as the slowest worker — the behaviour Fig 3
+//! contrasts with AP-BCFW.
 
 use super::shared::SharedParam;
 use super::{RunConfig, RunResult};
-use crate::problems::{ApplyOptions, BlockOracle, Problem};
+use crate::problems::{ApplyOptions, BlockOracle, OracleScratch, Problem};
 use crate::run::Observer;
 use crate::solver::schedule_gamma;
 use crate::util::metrics::{Counters, Sample, Stopwatch, Trace};
@@ -36,6 +43,7 @@ pub fn run_observed<P: Problem>(
     assert_eq!(cfg.straggler.probs.len(), cfg.workers);
     let n = problem.num_blocks();
     let tau = cfg.tau.clamp(1, n);
+    let wbatch = cfg.worker_batch(n);
     let mut master = problem.init_param();
     let mut state = problem.init_server();
     let shared = SharedParam::with_mode(&master, cfg.snapshot_mode);
@@ -74,14 +82,20 @@ pub fn run_observed<P: Problem>(
             scope.spawn(move || {
                 let mut rng = Pcg64::new(seed, 2000 + w as u64);
                 let mut snapshot: Vec<f32> = Vec::new();
-                // Scratch slot reused across straggler redos: only the
+                // Caller-owned oracle scratch, reused across the whole
+                // assignment (and across straggler redos).
+                let mut oscratch = OracleScratch::<P>::default();
+                // Payload slot reused across straggler redos: only the
                 // successfully-reported solve transfers its buffer (§Perf).
                 let mut scratch = BlockOracle::empty();
                 while let Ok(Assignment::Solve(blocks)) = a_rx.recv() {
                     if stop_flag.load(Ordering::Acquire) {
                         break;
                     }
+                    // One snapshot per assignment: every block of this
+                    // round's chunk is solved against the same parameter.
                     shared.read(&mut snapshot);
+                    Counters::bump(&counters.snapshot_reads);
                     let mut out = Vec::with_capacity(blocks.len());
                     for i in blocks {
                         if scratch.s.capacity() == 0 {
@@ -95,7 +109,12 @@ pub fn run_observed<P: Problem>(
                         // Redo until the solve is successfully reported —
                         // the synchronous server can't proceed without it.
                         loop {
-                            problem.oracle_into(&snapshot, i, &mut scratch);
+                            problem.oracle_into(
+                                &snapshot,
+                                i,
+                                &mut oscratch,
+                                &mut scratch,
+                            );
                             Counters::bump(&counters.oracle_calls);
                             if straggler.reports(w, &mut rng) {
                                 out.push(std::mem::replace(
@@ -116,13 +135,23 @@ pub fn run_observed<P: Problem>(
         drop(res_tx);
 
         let mut rng = Pcg64::new(cfg.seed, 4);
+        // Per-worker chunk: `wbatch` blocks per snapshot, but never more
+        // than the FLOOR share of tau — a larger chunk (ceil, or a fan-out
+        // with batch >= tau) would leave trailing workers with no blocks
+        // on every round and silently shrink the fleet (e.g. tau=4, T=3,
+        // chunk=2 assigns 2/2/0). The floor keeps every worker assigned
+        // whenever tau >= workers; at wbatch = 1 the chunk is 1: the
+        // historical element-wise round-robin, bit-for-bit.
+        let chunk = wbatch.min(tau / cfg.workers).max(1);
         'serve: loop {
-            // Assign tau disjoint blocks round-robin across workers.
+            // Assign tau disjoint blocks across workers in contiguous
+            // chunks (round-robin over chunks); a worker solves its whole
+            // chunk against one snapshot.
             let blocks = rng.subset(n, tau);
             let mut assignments: Vec<Vec<usize>> =
                 vec![Vec::new(); cfg.workers];
             for (j, &b) in blocks.iter().enumerate() {
-                assignments[j % cfg.workers].push(b);
+                assignments[(j / chunk) % cfg.workers].push(b);
             }
             let mut outstanding = 0usize;
             for (w, a) in assignments.into_iter().enumerate() {
@@ -293,6 +322,16 @@ mod tests {
         // Redos mean oracle calls strictly exceed applied updates.
         assert!(r.counters.dropped > 0);
         assert!(r.counters.oracle_calls > r.counters.updates_applied);
+    }
+
+    #[test]
+    fn batched_assignment_converges() {
+        let p = gfl_instance(); // 39 blocks
+        let mut c = cfg(3, 6);
+        c.batch = 2; // chunks of 2, 3 workers: 6 <= 39
+        let r = run(&p, &c);
+        assert!(r.trace.last().unwrap().gap <= 0.05);
+        assert_eq!(r.counters.dropped, 0);
     }
 
     #[test]

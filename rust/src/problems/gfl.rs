@@ -164,6 +164,9 @@ impl Gfl {
 
 impl Problem for Gfl {
     type ServerState = ();
+    // The oracle writes the gradient column straight into the payload
+    // buffer, so there is no intermediate state to own.
+    type Scratch = ();
 
     fn name(&self) -> &'static str {
         "gfl"
@@ -199,11 +202,17 @@ impl Problem for Gfl {
         // construction). No recursion: `oracle_into` only calls back into
         // `oracle` on the backend path, which returned above.
         let mut out = BlockOracle::empty();
-        self.oracle_into(param, block, &mut out);
+        self.oracle_into(param, block, &mut (), &mut out);
         out
     }
 
-    fn oracle_into(&self, param: &[f32], block: usize, out: &mut BlockOracle) {
+    fn oracle_into(
+        &self,
+        param: &[f32],
+        block: usize,
+        _scratch: &mut (),
+        out: &mut BlockOracle,
+    ) {
         if self.backend.is_some() {
             // Artifact path keeps its own buffers; fall back.
             *out = self.oracle(param, block);
@@ -324,7 +333,13 @@ impl ProjectableProblem for Gfl {
         self.grad_col(param, block)
     }
 
-    fn block_grad_into(&self, param: &[f32], block: usize, out: &mut Vec<f32>) {
+    fn block_grad_into(
+        &self,
+        param: &[f32],
+        block: usize,
+        _scratch: &mut (),
+        out: &mut Vec<f32>,
+    ) {
         if out.len() != self.d {
             out.resize(self.d, 0.0);
         }

@@ -12,6 +12,22 @@
 //! Workers call [`Problem::oracle`] on a (possibly stale) parameter
 //! snapshot; the server calls [`Problem::apply`] with a batch of oracles for
 //! *disjoint* blocks, the paper's Algorithm 1 step 3.
+//!
+//! # Oracle scratch ownership
+//!
+//! Every problem names an explicit [`Problem::Scratch`] type — the working
+//! memory its oracle needs beyond the output payload (Viterbi DP tables for
+//! the chain SSVM, the `A^T x` coupling buffers for the simplex QP, nothing
+//! for GFL/multiclass). The CALLER owns the scratch: a worker constructs one
+//! `Scratch::default()` next to its [`BlockOracle`] slot and threads both
+//! through every [`Problem::oracle_into`] call. This replaces the historical
+//! hidden `thread_local!` `RefCell` scratch, which was non-reentrant and
+//! resize-thrashed whenever two differently-shaped instances of the same
+//! problem type shared a thread.
+//! Because `Scratch: Send`, the scratch moves with its worker — batched
+//! workers solving several blocks per snapshot reuse one scratch across the
+//! whole batch with zero allocation (see `rust/tests/hot_path_equivalence.rs`
+//! for the reentrancy property tests).
 
 pub mod gfl;
 pub mod simplex_qp;
@@ -65,10 +81,21 @@ pub struct ApplyInfo {
     pub batch_gap: f64,
 }
 
+/// Caller-owned oracle scratch for problem `P` — shorthand for the
+/// associated [`Problem::Scratch`] type at worker declaration sites.
+pub type OracleScratch<P> = <P as Problem>::Scratch;
+
 /// A block-separable Frank-Wolfe problem (paper Eq. 2).
 pub trait Problem: Send + Sync {
     /// Server-side bookkeeping state.
     type ServerState: Send;
+
+    /// Caller-owned oracle working memory (see the module docs' scratch
+    /// ownership contract). `()` for problems whose oracle writes straight
+    /// into the payload buffer. `Default` gives an empty scratch whose
+    /// buffers are sized lazily on first use and reused afterwards; `Send`
+    /// lets the scratch move with its worker thread.
+    type Scratch: Send + Default;
 
     fn name(&self) -> &'static str;
 
@@ -87,14 +114,24 @@ pub trait Problem: Send + Sync {
     fn oracle(&self, param: &[f32], block: usize) -> BlockOracle;
 
     /// Allocation-free oracle: solve the block subproblem into a
-    /// caller-owned [`BlockOracle`], reusing `out.s`'s buffer. Workers hold
-    /// one slot per thread and call this in their hot loop, so a steady
-    /// state run performs no per-oracle allocation (§Perf).
+    /// caller-owned [`BlockOracle`], reusing `out.s`'s buffer and the
+    /// caller-owned `scratch` for any intermediate state. Workers hold one
+    /// (scratch, slot) pair and call this in their hot loop — batched
+    /// workers reuse the same pair across every block of a snapshot — so a
+    /// steady-state run performs no per-oracle allocation (§Perf).
     ///
     /// The default delegates to [`Problem::oracle`]; implementations MUST
-    /// produce bit-identical output to `oracle` (property-tested in
+    /// produce bit-identical output to `oracle` regardless of the scratch's
+    /// prior contents (property-tested in
     /// `rust/tests/hot_path_equivalence.rs`).
-    fn oracle_into(&self, param: &[f32], block: usize, out: &mut BlockOracle) {
+    fn oracle_into(
+        &self,
+        param: &[f32],
+        block: usize,
+        scratch: &mut Self::Scratch,
+        out: &mut BlockOracle,
+    ) {
+        let _ = scratch;
         *out = self.oracle(param, block);
     }
 
@@ -164,10 +201,18 @@ pub trait ProjectableProblem: Problem {
     fn block_grad(&self, param: &[f32], block: usize) -> Vec<f32>;
 
     /// Allocation-free block gradient into a caller-owned buffer (cleared
-    /// and resized to the block dimension). Default delegates to
+    /// and resized to the block dimension), using the same caller-owned
+    /// [`Problem::Scratch`] as the oracle path. Default delegates to
     /// [`ProjectableProblem::block_grad`]; native implementations reuse
-    /// the buffer so the PBCD hot loop stays allocation-free.
-    fn block_grad_into(&self, param: &[f32], block: usize, out: &mut Vec<f32>) {
+    /// the buffers so the PBCD hot loop stays allocation-free.
+    fn block_grad_into(
+        &self,
+        param: &[f32],
+        block: usize,
+        scratch: &mut Self::Scratch,
+        out: &mut Vec<f32>,
+    ) {
+        let _ = scratch;
         out.clear();
         out.extend_from_slice(&self.block_grad(param, block));
     }

@@ -11,13 +11,19 @@
 use super::{ApplyInfo, ApplyOptions, BlockOracle, Problem, ProjectableProblem};
 use crate::util::la;
 use crate::util::rng::Pcg64;
-use std::cell::RefCell;
 
-thread_local! {
-    /// Per-thread (z = A^T x, block gradient) scratch for the
-    /// allocation-free oracle path.
-    static QP_SCRATCH: RefCell<(Vec<f64>, Vec<f64>)> =
-        const { RefCell::new((Vec::new(), Vec::new())) };
+/// Caller-owned scratch for the allocation-free QP oracle/gradient path:
+/// the coupling vector `z = A^T x` (p-dim) and the block gradient (m-dim).
+/// Buffers are sized lazily on first use and reused afterwards; owning it
+/// at the call site (rather than in a thread-local) keeps `oracle_into`
+/// reentrant and free of resize thrash when differently-shaped instances
+/// share a thread.
+#[derive(Default)]
+pub struct QpScratch {
+    /// z = A^T x (p-dim).
+    z: Vec<f64>,
+    /// Block gradient (m-dim, f64 accumulation).
+    g: Vec<f64>,
 }
 
 /// Product-of-simplices QP instance.
@@ -180,6 +186,7 @@ impl SimplexQp {
 
 impl Problem for SimplexQp {
     type ServerState = ();
+    type Scratch = QpScratch;
 
     fn name(&self) -> &'static str {
         "simplex_qp"
@@ -203,31 +210,34 @@ impl Problem for SimplexQp {
     fn oracle(&self, param: &[f32], block: usize) -> BlockOracle {
         // Single implementation of the oracle arithmetic: delegate to the
         // scratch form (bit-identity between the two by construction).
+        let mut sc = QpScratch::default();
         let mut out = BlockOracle::empty();
-        self.oracle_into(param, block, &mut out);
+        self.oracle_into(param, block, &mut sc, &mut out);
         out
     }
 
-    fn oracle_into(&self, param: &[f32], block: usize, out: &mut BlockOracle) {
-        QP_SCRATCH.with(|cell| {
-            let mut guard = cell.borrow_mut();
-            let (z, g) = &mut *guard;
-            self.at_x_into(param, z);
-            self.block_gradient_given_z(param, block, z, g);
-            let mut arg = 0usize;
-            let mut best = f64::INFINITY;
-            for (j, &gj) in g.iter().enumerate() {
-                if gj < best {
-                    best = gj;
-                    arg = j;
-                }
+    fn oracle_into(
+        &self,
+        param: &[f32],
+        block: usize,
+        sc: &mut QpScratch,
+        out: &mut BlockOracle,
+    ) {
+        self.at_x_into(param, &mut sc.z);
+        self.block_gradient_given_z(param, block, &sc.z, &mut sc.g);
+        let mut arg = 0usize;
+        let mut best = f64::INFINITY;
+        for (j, &gj) in sc.g.iter().enumerate() {
+            if gj < best {
+                best = gj;
+                arg = j;
             }
-            out.block = block;
-            out.ls = 0.0;
-            out.s.clear();
-            out.s.resize(self.m, 0.0);
-            out.s[arg] = 1.0;
-        });
+        }
+        out.block = block;
+        out.ls = 0.0;
+        out.s.clear();
+        out.s.resize(self.m, 0.0);
+        out.s[arg] = 1.0;
     }
 
     fn block_gap(
@@ -310,15 +320,17 @@ impl ProjectableProblem for SimplexQp {
             .collect()
     }
 
-    fn block_grad_into(&self, param: &[f32], block: usize, out: &mut Vec<f32>) {
-        QP_SCRATCH.with(|cell| {
-            let mut guard = cell.borrow_mut();
-            let (z, g) = &mut *guard;
-            self.at_x_into(param, z);
-            self.block_gradient_given_z(param, block, z, g);
-            out.clear();
-            out.extend(g.iter().map(|&v| v as f32));
-        });
+    fn block_grad_into(
+        &self,
+        param: &[f32],
+        block: usize,
+        sc: &mut QpScratch,
+        out: &mut Vec<f32>,
+    ) {
+        self.at_x_into(param, &mut sc.z);
+        self.block_gradient_given_z(param, block, &sc.z, &mut sc.g);
+        out.clear();
+        out.extend(sc.g.iter().map(|&v| v as f32));
     }
 
     fn project_block(&self, _block: usize, x: &mut [f32]) {

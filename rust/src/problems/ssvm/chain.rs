@@ -9,13 +9,15 @@
 use super::super::{ApplyInfo, ApplyOptions, BlockOracle, Problem};
 use super::{ssvm_apply, ssvm_block_gap, SsvmState};
 use crate::data::ocr_like::ChainDataset;
-use std::cell::RefCell;
 use std::sync::Arc;
 
-/// Reusable buffers for one loss-augmented Viterbi solve. Workers keep one
-/// per thread (via [`Problem::oracle_into`]'s thread-local, or explicitly
-/// through [`ChainSsvm::viterbi_into`]); buffers are resized on first use
-/// and reused afterwards, so the decode hot loop performs no allocation.
+/// Reusable buffers for one loss-augmented Viterbi solve — the chain
+/// SSVM's caller-owned [`Problem::Scratch`]. Workers keep one next to
+/// their [`BlockOracle`] slot and thread it through
+/// [`Problem::oracle_into`] (or explicitly through
+/// [`ChainSsvm::viterbi_into`]); buffers are resized on first use and
+/// reused afterwards, so the decode hot loop performs no allocation and
+/// stays reentrant across differently-shaped instances.
 #[derive(Default)]
 pub struct ViterbiScratch {
     /// Node scores theta (ell x k).
@@ -28,18 +30,6 @@ pub struct ViterbiScratch {
     ptr: Vec<u16>,
     /// Decoded label sequence (ell) — the solve's output.
     pub ys: Vec<u16>,
-}
-
-thread_local! {
-    static CHAIN_SCRATCH: RefCell<ViterbiScratch> = const {
-        RefCell::new(ViterbiScratch {
-            theta: Vec::new(),
-            alpha: Vec::new(),
-            next: Vec::new(),
-            ptr: Vec::new(),
-            ys: Vec::new(),
-        })
-    };
 }
 
 /// Pluggable loss-augmented decoder (XLA artifact path implements this).
@@ -278,6 +268,7 @@ impl ChainSsvm {
 
 impl Problem for ChainSsvm {
     type ServerState = SsvmState;
+    type Scratch = ViterbiScratch;
 
     fn name(&self) -> &'static str {
         "ssvm_chain"
@@ -309,7 +300,13 @@ impl Problem for ChainSsvm {
         }
     }
 
-    fn oracle_into(&self, param: &[f32], block: usize, out: &mut BlockOracle) {
+    fn oracle_into(
+        &self,
+        param: &[f32],
+        block: usize,
+        sc: &mut ViterbiScratch,
+        out: &mut BlockOracle,
+    ) {
         // Both paths build the payload into the caller's pooled `out.s`
         // buffer: the external-decoder (XLA artifact / fallback) path used
         // to delegate to `oracle` and drop the pooled buffer on every
@@ -320,13 +317,11 @@ impl Problem for ChainSsvm {
                 out.block = block;
                 out.ls = self.payload_into(block, &ystar, &mut out.s);
             }
-            None => CHAIN_SCRATCH.with(|cell| {
-                let mut guard = cell.borrow_mut();
-                let sc = &mut *guard;
+            None => {
                 self.viterbi_into(param, block, 1.0, sc);
                 out.block = block;
                 out.ls = self.payload_into(block, &sc.ys, &mut out.s);
-            }),
+            }
         }
     }
 

@@ -30,6 +30,11 @@ pub struct SsvmState {
     pub l: f64,
     /// Parameter dimension.
     pub dim: usize,
+    /// Direction buffer for [`ssvm_apply`] — the server applies batches in
+    /// a tight loop, so the O(dim) direction vector lives in the explicit
+    /// server state (caller-owned, like the oracle scratch) instead of
+    /// being reallocated per batch or hidden in a thread-local.
+    dw: Vec<f32>,
 }
 
 impl SsvmState {
@@ -39,6 +44,7 @@ impl SsvmState {
             li: vec![0.0; n],
             l: 0.0,
             dim,
+            dw: Vec::new(),
         }
     }
 
@@ -64,15 +70,14 @@ pub fn ssvm_block_gap(
     lam * (la::dot(w, wi) - la::dot(w, &o.s)) - state.li[o.block] + o.ls
 }
 
-thread_local! {
-    /// Per-thread direction buffer for [`ssvm_apply`] — the server applies
-    /// batches in a tight loop, so the O(dim) direction vector is reused
-    /// instead of reallocated each iteration (§Perf).
-    static APPLY_DW: std::cell::RefCell<Vec<f32>> =
-        const { std::cell::RefCell::new(Vec::new()) };
-}
-
 /// Apply a disjoint-block batch; returns (gamma_used, batch_gap).
+///
+/// The direction build and the gap evaluation are FUSED into one traversal
+/// of the batch payloads: each oracle's contribution to both
+/// `Delta_w = sum_i (w_s - w_i)` and `<w, Delta_w>` is accumulated in the
+/// same pass over the dim-length vectors, so the batch gap costs no second
+/// O(dim) sweep (the historical implementation rebuilt the dot product
+/// from the finished direction).
 pub fn ssvm_apply(
     lam: f64,
     state: &mut SsvmState,
@@ -81,45 +86,53 @@ pub fn ssvm_apply(
     gamma: f32,
     line_search: bool,
 ) -> (f32, f64) {
-    APPLY_DW.with(|cell| {
-        let mut guard = cell.borrow_mut();
-        let dw = &mut *guard;
-        let dim = state.dim;
-        // Direction: Delta_w = sum_i (w_s - w_i), Delta_l = sum_i (l_s - l_i).
-        dw.clear();
-        dw.resize(dim, 0.0);
-        let mut dl = 0.0f64;
-        for o in batch {
-            debug_assert_eq!(o.s.len(), dim);
-            let wi = state.wi(o.block);
-            for (dwr, (sr, wir)) in
-                dw.iter_mut().zip(o.s.iter().zip(wi.iter()))
-            {
-                *dwr += sr - wir;
-            }
-            dl += o.ls - state.li[o.block];
+    let dim = state.dim;
+    // Detach the direction buffer so the per-block `state.wi(..)` views
+    // below can borrow `state` immutably alongside it; reattached at the
+    // end, so its capacity persists across calls.
+    let mut dw = std::mem::take(&mut state.dw);
+    dw.clear();
+    dw.resize(dim, 0.0);
+    let mut dl = 0.0f64;
+    // <w, Delta_w>, accumulated per oracle in the fused pass.
+    let mut w_dot_dw = 0.0f64;
+    for o in batch {
+        debug_assert_eq!(o.s.len(), dim);
+        let wi = state.wi(o.block);
+        let mut acc = 0.0f64;
+        for ((dwr, &wr), (sr, wir)) in dw
+            .iter_mut()
+            .zip(w.iter())
+            .zip(o.s.iter().zip(wi.iter()))
+        {
+            let d = sr - wir;
+            *dwr += d;
+            acc += wr as f64 * d as f64;
         }
-        let batch_gap = -lam * la::dot(w, dw) + dl;
-        let g = if line_search {
-            let denom = lam * la::norm2_sq(dw);
-            if denom <= 0.0 {
-                0.0
-            } else {
-                (batch_gap / denom).clamp(0.0, 1.0) as f32
-            }
+        w_dot_dw += acc;
+        dl += o.ls - state.li[o.block];
+    }
+    let batch_gap = -lam * w_dot_dw + dl;
+    let g = if line_search {
+        let denom = lam * la::norm2_sq(&dw);
+        if denom <= 0.0 {
+            0.0
         } else {
-            gamma
-        };
-        for o in batch {
-            let li = state.li[o.block];
-            state.li[o.block] = li + g as f64 * (o.ls - li);
-            let wi = state.wi_mut(o.block);
-            la::lerp_into(g, &o.s, wi);
+            (batch_gap / denom).clamp(0.0, 1.0) as f32
         }
-        state.l += g as f64 * dl;
-        la::axpy(g, dw, w);
-        (g, batch_gap)
-    })
+    } else {
+        gamma
+    };
+    for o in batch {
+        let li = state.li[o.block];
+        state.li[o.block] = li + g as f64 * (o.ls - li);
+        let wi = state.wi_mut(o.block);
+        la::lerp_into(g, &o.s, wi);
+    }
+    state.l += g as f64 * dl;
+    la::axpy(g, &dw, w);
+    state.dw = dw;
+    (g, batch_gap)
 }
 
 /// Dual objective f(alpha) = lambda/2 ||w||^2 - l.

@@ -121,6 +121,9 @@ impl MulticlassSsvm {
 
 impl Problem for MulticlassSsvm {
     type ServerState = SsvmState;
+    // The single-pass argmax tracks its running max inline; the payload is
+    // built straight into the caller's slot, so no scratch is needed.
+    type Scratch = ();
 
     fn name(&self) -> &'static str {
         "ssvm_multiclass"
@@ -152,7 +155,13 @@ impl Problem for MulticlassSsvm {
         }
     }
 
-    fn oracle_into(&self, param: &[f32], block: usize, out: &mut BlockOracle) {
+    fn oracle_into(
+        &self,
+        param: &[f32],
+        block: usize,
+        _scratch: &mut (),
+        out: &mut BlockOracle,
+    ) {
         // Decode through whichever backend is active, but always build the
         // payload into the caller's pooled `out.s` buffer — the external-
         // decoder path used to delegate to `oracle` and re-allocate a

@@ -42,6 +42,28 @@
 //! 4. Add a seeded equivalence test in `rust/tests/runner_equivalence.rs`
 //!    pinning the `Runner` path to the legacy entry point.
 //!
+//! # How to add a batched engine knob
+//!
+//! `run.batch` (the worker fan-out tau_w) is the template for a knob whose
+//! validity depends on BOTH the engine and the problem:
+//!
+//! 1. Put the field on [`RunSpec`] (shared across the threaded family) or
+//!    on the [`Engine`] variant (single engine), with a default that
+//!    reproduces legacy behaviour exactly — `batch = 1` is the historical
+//!    single-block worker, pinned bit-identically in
+//!    `rust/tests/batched_fanout_equivalence.rs`.
+//! 2. Engine-independent validation goes in `RunSpec::validate` (`batch >
+//!    1` requires a threaded engine) and `from_config`'s scoped-key table
+//!    (`run.batch` rejected outright on sequential modes); the
+//!    problem-dependent half lives in `Runner::check_batch` (`batch *
+//!    workers <= n`), because only the dispatch site holds the problem.
+//!    The engines keep a defensive assert for direct `RunConfig` callers.
+//! 3. Thread the lowered value through `RunSpec::run_config` into
+//!    [`crate::coordinator::RunConfig`] and consume it in the engine
+//!    loops; every oracle a worker batches goes through the caller-owned
+//!    [`crate::problems::Problem::Scratch`], so batching stays
+//!    allocation-free by construction.
+//!
 //! # How to add a problem
 //!
 //! 1. Implement [`Problem`](crate::problems::Problem) (and
@@ -68,7 +90,7 @@ pub use spec::{Engine, RunSpec, StragglerSpec, ENGINE_NAMES};
 use crate::coordinator::{apbcfw, lockfree, sync};
 use crate::problems::{Problem, ProjectableProblem};
 use crate::solver::{batch_fw, delayed, minibatch, pbcd};
-use anyhow::Result;
+use anyhow::{ensure, Result};
 
 /// Executes a validated [`RunSpec`] against problems. The only production
 /// path that lowers a spec into the engine option structs — everything
@@ -88,6 +110,24 @@ impl Runner {
 
     pub fn spec(&self) -> &RunSpec {
         &self.spec
+    }
+
+    /// Problem-dependent half of the batched fan-out validation: a spec
+    /// alone can check that `batch > 1` names a threaded engine, but only
+    /// here, with the problem in hand, can `batch * workers <= n` be
+    /// enforced (each worker needs `batch` distinct blocks per round, and
+    /// the fleet must not cover more than one full pass per snapshot).
+    fn check_batch(&self, n: usize) -> Result<()> {
+        let batch = self.spec.batch;
+        if batch > 1 {
+            let workers = self.spec.engine.workers();
+            ensure!(
+                batch * workers <= n,
+                "run.batch ({batch}) x workers ({workers}) exceeds the \
+                 problem's {n} blocks; lower the batch or the worker count"
+            );
+        }
+        Ok(())
     }
 
     /// Solve a registered problem.
@@ -126,6 +166,7 @@ impl Runner {
         obs: &mut dyn Observer,
     ) -> Result<Report> {
         let n = problem.num_blocks();
+        self.check_batch(n)?;
         let name = self.spec.engine.name();
         Ok(match &self.spec.engine {
             Engine::Seq => Report::from_solve(
@@ -192,6 +233,7 @@ impl Runner {
         P: ProjectableProblem<ServerState = ()>,
     {
         let n = problem.num_blocks();
+        self.check_batch(n)?;
         let name = self.spec.engine.name();
         match &self.spec.engine {
             Engine::Pbcd => Ok(Report::from_solve(

@@ -73,6 +73,8 @@ impl Report {
                 collisions: 0,
                 dropped: r.dropped,
                 iterations: r.iterations,
+                // Sequential solvers read the parameter in place.
+                snapshot_reads: 0,
             },
             elapsed_s: r.elapsed_s,
             secs_per_pass: if passes > 0.0 {

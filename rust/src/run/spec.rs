@@ -350,6 +350,19 @@ pub struct RunSpec {
     /// Minibatch size tau (clamped to [1, n] by the engines; ignored by
     /// `batch`, which always uses tau = n, and `lockfree`, always 1).
     pub tau: usize,
+    /// Worker fan-out batch tau_w: distinct blocks each worker solves per
+    /// shared-parameter snapshot, submitted as one multi-block payload.
+    /// Threaded engines only (`validate` rejects `batch > 1` elsewhere);
+    /// the `Runner` additionally checks `batch * workers <= n` against the
+    /// problem. 1 (the default) reproduces the historical single-block
+    /// worker loop exactly. The async/lockfree workers sample their own
+    /// blocks, so they realize tau_w exactly; the sync server samples only
+    /// tau blocks per round, so there `batch` acts as a CAP on the
+    /// per-worker chunk — the effective chunk is
+    /// `min(batch, tau / workers).max(1)`, keeping every worker assigned
+    /// (raise tau to at least `batch * workers` to realize the full
+    /// fan-out).
+    pub batch: usize,
     /// Exact coordinate line search instead of the schedule. Not defined
     /// for `pbcd` (1/L_i steps) or `lockfree` (fixed schedule); `validate`
     /// rejects it there rather than silently ignoring it.
@@ -376,6 +389,7 @@ impl RunSpec {
         Self {
             engine,
             tau: 1,
+            batch: 1,
             line_search: false,
             weighted_averaging: false,
             sample_every: 64,
@@ -387,6 +401,12 @@ impl RunSpec {
 
     pub fn tau(mut self, tau: usize) -> Self {
         self.tau = tau;
+        self
+    }
+
+    /// Worker fan-out batch (threaded engines only; see the field docs).
+    pub fn batch(mut self, batch: usize) -> Self {
+        self.batch = batch;
         self
     }
 
@@ -446,6 +466,13 @@ impl RunSpec {
     /// sample cadence, work-multiplier range). `Runner::new` calls this.
     pub fn validate(&self) -> Result<()> {
         ensure!(self.tau >= 1, "tau must be >= 1");
+        ensure!(self.batch >= 1, "batch must be >= 1");
+        ensure!(
+            self.batch == 1 || self.engine.is_threaded(),
+            "run.batch > 1 requires a threaded engine (async, sync, \
+             lockfree); engine `{}` has no worker fan-out to batch",
+            self.engine.name()
+        );
         ensure!(self.sample_every >= 1, "sample_every must be >= 1");
         if self.weighted_averaging {
             ensure!(
@@ -506,12 +533,12 @@ impl RunSpec {
     /// path by which `--config` files and `--set` overrides reach every
     /// knob; the CLI's convenience flags lower to the same keys.
     ///
-    /// Recognized keys (all under `run.`): `mode`, `tau`, `workers`,
-    /// `epochs`/`max_epochs`, `max_secs`, `eps_gap`, `eps_primal`,
-    /// `f_star`, `line_search`, `weighted_averaging`, `sample_every`,
-    /// `exact_gap`, `seed`, `straggler`, `snapshot_mode`, `queue_factor`,
-    /// `staleness_rule`, `collision_overwrite`, `work_multiplier`,
-    /// `delay`, `delay_history`, `drop_rule`.
+    /// Recognized keys (all under `run.`): `mode`, `tau`, `batch`,
+    /// `workers`, `epochs`/`max_epochs`, `max_secs`, `eps_gap`,
+    /// `eps_primal`, `f_star`, `line_search`, `weighted_averaging`,
+    /// `sample_every`, `exact_gap`, `seed`, `straggler`, `snapshot_mode`,
+    /// `queue_factor`, `staleness_rule`, `collision_overwrite`,
+    /// `work_multiplier`, `delay`, `delay_history`, `drop_rule`.
     pub fn from_config(cfg: &Config) -> Result<Self> {
         let mode = cfg.get_or("run.mode", "seq");
         let workers = cfg.get_usize("run.workers", 2);
@@ -580,6 +607,8 @@ impl RunSpec {
         // are exempt — shared across the threaded/sequential families and
         // documented as ignored where not applicable.
         const SCOPED_KEYS: &[(&str, &[&str])] = &[
+            // Worker fan-out exists only on the threaded engines.
+            ("run.batch", &["async", "sync", "lockfree"]),
             ("run.straggler", &["async", "sync"]),
             // lockfree accepts only the torn default (checked above).
             ("run.snapshot_mode", &["async", "sync", "lockfree"]),
@@ -620,6 +649,7 @@ impl RunSpec {
         Ok(RunSpec {
             engine,
             tau: cfg.get_usize("run.tau", 1),
+            batch: cfg.get_usize("run.batch", 1),
             line_search: cfg.get_bool("run.line_search", false),
             weighted_averaging: cfg.get_bool("run.weighted_averaging", false),
             sample_every: cfg.get_usize("run.sample_every", 64),
@@ -679,6 +709,7 @@ impl RunSpec {
             } => RunConfig {
                 workers: *workers,
                 tau: self.tau,
+                batch: self.batch,
                 line_search: self.line_search,
                 staleness_rule: *staleness_rule,
                 straggler: straggler.resolve(*workers)?,
@@ -699,6 +730,7 @@ impl RunSpec {
             } => RunConfig {
                 workers: *workers,
                 tau: self.tau,
+                batch: self.batch,
                 line_search: self.line_search,
                 straggler: straggler.resolve(*workers)?,
                 sample_every: self.sample_every,
@@ -711,6 +743,7 @@ impl RunSpec {
             Engine::Lockfree { workers } => RunConfig {
                 workers: *workers,
                 tau: 1,
+                batch: self.batch,
                 straggler: StragglerModel::none(*workers),
                 sample_every: self.sample_every,
                 exact_gap: self.exact_gap,
@@ -871,6 +904,7 @@ mod tests {
              mode = async\n\
              workers = 5\n\
              tau = 10\n\
+             batch = 3\n\
              line_search = true\n\
              weighted_averaging = true\n\
              sample_every = 8\n\
@@ -898,6 +932,7 @@ mod tests {
                 .with_snapshot_mode(SnapshotMode::Consistent),
         )
         .tau(10)
+        .batch(3)
         .line_search(true)
         .weighted_averaging(true)
         .sample_every(8)
@@ -941,6 +976,65 @@ mod tests {
         // The torn default still parses.
         let cfg = Config::parse("[run]\nmode = lockfree\n").unwrap();
         assert!(RunSpec::from_config(&cfg).is_ok());
+    }
+
+    #[test]
+    fn batch_rejected_for_sequential_engines() {
+        for engine in [
+            Engine::sequential(),
+            Engine::batch(),
+            Engine::delayed(DelayModel::None),
+            Engine::pbcd(),
+        ] {
+            let name = engine.name();
+            let err = RunSpec::new(engine)
+                .batch(4)
+                .validate()
+                .unwrap_err()
+                .to_string();
+            assert!(err.contains("threaded"), "{name}: {err}");
+        }
+        for engine in
+            [Engine::asynchronous(2), Engine::synchronous(2), Engine::lockfree(2)]
+        {
+            assert!(RunSpec::new(engine).batch(4).validate().is_ok());
+        }
+        assert!(RunSpec::new(Engine::Seq).batch(0).validate().is_err());
+        // The default batch = 1 stays valid everywhere.
+        assert!(RunSpec::new(Engine::Seq).validate().is_ok());
+    }
+
+    #[test]
+    fn batch_lowers_into_run_config() {
+        for engine in
+            [Engine::asynchronous(2), Engine::synchronous(2), Engine::lockfree(2)]
+        {
+            let cfg = RunSpec::new(engine).batch(4).run_config().unwrap();
+            assert_eq!(cfg.batch, 4);
+        }
+        // Default lowering carries batch = 1 (the legacy single-block
+        // worker), matching RunConfig::default().
+        let cfg = RunSpec::new(Engine::asynchronous(2))
+            .tau(2)
+            .run_config()
+            .unwrap();
+        assert_eq!(cfg.batch, RunConfig::default().batch);
+    }
+
+    #[test]
+    fn from_config_rejects_batch_on_sequential_modes() {
+        let cfg = Config::parse("[run]\nmode = seq\nbatch = 4\n").unwrap();
+        let err = RunSpec::from_config(&cfg).unwrap_err().to_string();
+        assert!(err.contains("run.batch"), "{err}");
+        // Accepted on every threaded mode.
+        for mode in ["async", "sync", "lockfree"] {
+            let cfg =
+                Config::parse(&format!("[run]\nmode = {mode}\nbatch = 4\n"))
+                    .unwrap();
+            let spec = RunSpec::from_config(&cfg).unwrap();
+            assert_eq!(spec.batch, 4, "{mode}");
+            assert!(spec.validate().is_ok(), "{mode}");
+        }
     }
 
     #[test]

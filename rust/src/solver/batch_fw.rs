@@ -3,7 +3,7 @@
 //! convergence guarantee reduces to this case at tau = n (§2.1).
 
 use super::{schedule_gamma_batch, Monitor, SolveOptions, SolveResult};
-use crate::problems::{ApplyOptions, BlockOracle, Problem};
+use crate::problems::{ApplyOptions, BlockOracle, OracleScratch, Problem};
 use crate::run::Observer;
 
 /// Run batch FW on `problem`. `opts.tau` is ignored (always n).
@@ -22,7 +22,9 @@ pub fn solve_observed<P: Problem>(
     let mut state = problem.init_server();
     let mut mon = Monitor::new(problem, opts, obs);
 
-    // One persistent oracle slot per block, refilled in place (§Perf).
+    // One persistent oracle slot per block plus the caller-owned oracle
+    // scratch, refilled in place (§Perf).
+    let mut oscratch = OracleScratch::<P>::default();
     let mut batch: Vec<BlockOracle> =
         (0..n).map(|_| BlockOracle::empty()).collect();
 
@@ -30,7 +32,7 @@ pub fn solve_observed<P: Problem>(
     let mut k: u64 = 0;
     loop {
         for (i, slot) in batch.iter_mut().enumerate() {
-            problem.oracle_into(&param, i, slot);
+            problem.oracle_into(&param, i, &mut oscratch, slot);
         }
         oracle_calls += n as u64;
         let gamma = schedule_gamma_batch(k);

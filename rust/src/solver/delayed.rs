@@ -8,7 +8,7 @@
 //! effect of staleness from system noise — exactly the Fig 4 experiment.
 
 use super::{schedule_gamma, Monitor, SolveOptions, SolveResult};
-use crate::problems::{ApplyOptions, BlockOracle, Problem};
+use crate::problems::{ApplyOptions, BlockOracle, OracleScratch, Problem};
 use crate::sim::delay::{accept_delay, DelayModel, History};
 use crate::util::rng::Pcg64;
 
@@ -59,9 +59,11 @@ pub fn solve_observed<P: Problem>(
     let mut hist = History::new(dopts.history);
     hist.push(0, &param);
 
-    // Persistent scratch: index buffer + tau oracle slots; accepted
-    // updates fill slots[..used] in place each iteration (§Perf).
+    // Persistent scratch: index buffer, caller-owned oracle scratch, and
+    // tau oracle slots; accepted updates fill slots[..used] in place each
+    // iteration (§Perf).
     let mut blocks: Vec<usize> = Vec::new();
+    let mut oscratch = OracleScratch::<P>::default();
     let mut slots: Vec<BlockOracle> =
         (0..tau).map(|_| BlockOracle::empty()).collect();
 
@@ -80,7 +82,7 @@ pub fn solve_observed<P: Problem>(
             }
             match hist.get(delay) {
                 Some(stale) => {
-                    problem.oracle_into(stale, i, &mut slots[used]);
+                    problem.oracle_into(stale, i, &mut oscratch, &mut slots[used]);
                     used += 1;
                 }
                 None => {

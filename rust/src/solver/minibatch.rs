@@ -6,7 +6,7 @@
 //! measured in *epochs to convergence* rather than wall-clock.
 
 use super::{schedule_gamma, Monitor, SolveOptions, SolveResult};
-use crate::problems::{ApplyOptions, BlockOracle, Problem};
+use crate::problems::{ApplyOptions, BlockOracle, OracleScratch, Problem};
 use crate::run::Observer;
 use crate::util::rng::Pcg64;
 
@@ -28,10 +28,11 @@ pub fn solve_observed<P: Problem>(
     let mut state = problem.init_server();
     let mut mon = Monitor::new(problem, opts, obs);
 
-    // Persistent per-iteration scratch: block indices + one oracle slot
-    // per batch position, refilled in place (§Perf: no allocation after
-    // the first iteration).
+    // Persistent per-iteration scratch: block indices, the caller-owned
+    // oracle scratch, and one oracle slot per batch position, refilled in
+    // place (§Perf: no allocation after the first iteration).
     let mut blocks: Vec<usize> = Vec::new();
+    let mut oscratch = OracleScratch::<P>::default();
     let mut batch: Vec<BlockOracle> =
         (0..tau).map(|_| BlockOracle::empty()).collect();
 
@@ -42,7 +43,7 @@ pub fn solve_observed<P: Problem>(
         // the perfect server would assemble after collision handling).
         rng.subset_into(n, tau, &mut blocks);
         for (slot, &i) in batch.iter_mut().zip(blocks.iter()) {
-            problem.oracle_into(&param, i, slot);
+            problem.oracle_into(&param, i, &mut oscratch, slot);
         }
         oracle_calls += tau as u64;
         let gamma = schedule_gamma(n, tau, k);

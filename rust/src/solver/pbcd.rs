@@ -7,7 +7,7 @@
 //! [`ProjectableProblem`] (block projections).
 
 use super::{Monitor, SolveOptions, SolveResult};
-use crate::problems::ProjectableProblem;
+use crate::problems::{OracleScratch, ProjectableProblem};
 use crate::run::Observer;
 use crate::util::rng::Pcg64;
 
@@ -34,10 +34,11 @@ pub fn solve_observed<P: ProjectableProblem>(
     let mut state = problem.init_server();
     let mut mon = Monitor::new(problem, opts, obs);
 
-    // Persistent scratch: index buffer, gradient buffer, and one
-    // (range, block-iterate) slot per batch position (§Perf: the PBCD
-    // loop is allocation-free in steady state).
+    // Persistent scratch: index buffer, caller-owned problem scratch,
+    // gradient buffer, and one (range, block-iterate) slot per batch
+    // position (§Perf: the PBCD loop is allocation-free in steady state).
     let mut blocks: Vec<usize> = Vec::new();
+    let mut oscratch = OracleScratch::<P>::default();
     let mut g: Vec<f32> = Vec::new();
     let mut updates: Vec<(std::ops::Range<usize>, Vec<f32>)> =
         (0..tau).map(|_| (0..0, Vec::new())).collect();
@@ -48,7 +49,7 @@ pub fn solve_observed<P: ProjectableProblem>(
         rng.subset_into(n, tau, &mut blocks);
         // Compute all block updates at the frozen iterate ...
         for (slot, &i) in updates.iter_mut().zip(blocks.iter()) {
-            problem.block_grad_into(&param, i, &mut g);
+            problem.block_grad_into(&param, i, &mut oscratch, &mut g);
             let li = problem.block_lipschitz(i).max(1e-12);
             let range = problem.block_range(i);
             let (slot_range, xi) = slot;

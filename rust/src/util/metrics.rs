@@ -84,6 +84,10 @@ pub struct Counters {
     pub dropped: AtomicU64,
     /// Server iterations completed.
     pub iterations: AtomicU64,
+    /// Full shared-parameter snapshot reads performed by workers. Batched
+    /// fan-out exists to push snapshot_reads / oracle_calls well below 1;
+    /// the `hot_paths` bench reports that ratio at batch 1/4/16.
+    pub snapshot_reads: AtomicU64,
 }
 
 impl Counters {
@@ -98,6 +102,7 @@ impl Counters {
             collisions: self.collisions.load(Ordering::Relaxed),
             dropped: self.dropped.load(Ordering::Relaxed),
             iterations: self.iterations.load(Ordering::Relaxed),
+            snapshot_reads: self.snapshot_reads.load(Ordering::Relaxed),
         }
     }
 
@@ -120,6 +125,7 @@ pub struct CounterSnapshot {
     pub collisions: u64,
     pub dropped: u64,
     pub iterations: u64,
+    pub snapshot_reads: u64,
 }
 
 /// Simple wall-clock stopwatch.

@@ -1,9 +1,16 @@
 //! Hot-path equivalence properties (§Perf acceptance):
 //!
 //! 1. `Problem::oracle_into` must be BIT-IDENTICAL to `Problem::oracle`
-//!    for all four problems, including when the output slot is dirty from
-//!    a previous (different-block) solve — buffer reuse must not leak.
-//! 2. The SIMD-dispatched kernels must match the scalar references within
+//!    for all four problems, including when the output slot AND the
+//!    caller-owned scratch are dirty from a previous (different-block,
+//!    even different-instance) solve — buffer reuse must not leak.
+//! 2. The caller-owned scratch must be REENTRANT: two differently-shaped
+//!    instances of the same problem type alternating `oracle_into` calls
+//!    on one thread (each with its own scratch) must produce exactly what
+//!    fresh-scratch calls produce — the RefCell resize-thrash case the
+//!    historical thread-local scratch could not express safely. The
+//!    scratch is also `Send`, so it can move with its worker.
+//! 3. The SIMD-dispatched kernels must match the scalar references within
 //!    ULP-scale tolerance across sizes 0..64 and large random vectors
 //!    (reductions re-associate; elementwise ops differ only by FMA).
 
@@ -12,7 +19,7 @@ use apbcfw::problems::gfl::Gfl;
 use apbcfw::problems::simplex_qp::SimplexQp;
 use apbcfw::problems::ssvm::chain::ChainSsvm;
 use apbcfw::problems::ssvm::multiclass::MulticlassSsvm;
-use apbcfw::problems::{BlockOracle, Problem};
+use apbcfw::problems::{BlockOracle, OracleScratch, Problem};
 use apbcfw::util::la;
 use apbcfw::util::proptest::check;
 use apbcfw::util::simd;
@@ -33,15 +40,17 @@ fn assert_oracle_bits_eq(a: &BlockOracle, b: &BlockOracle, ctx: &str) {
 }
 
 /// Drive `oracle` vs `oracle_into` over random params/blocks, reusing one
-/// dirty slot throughout to exercise buffer reuse.
+/// dirty slot AND one dirty caller-owned scratch throughout to exercise
+/// buffer reuse.
 fn check_problem_equivalence<P: Problem>(p: &P, cases: usize, seed: u64) {
     let mut slot = BlockOracle::empty();
+    let mut scratch = OracleScratch::<P>::default();
     check(cases, seed, |g| {
         let dim = p.param_dim();
         let param = g.gaussian_vec(dim);
         let block = g.usize_in(0, p.num_blocks() - 1);
         let reference = p.oracle(&param, block);
-        p.oracle_into(&param, block, &mut slot);
+        p.oracle_into(&param, block, &mut scratch, &mut slot);
         assert_oracle_bits_eq(&slot, &reference, p.name());
     });
 }
@@ -62,7 +71,7 @@ fn gfl_oracle_into_handles_zero_gradient() {
     let mut slot = BlockOracle::empty();
     for t in 0..gfl.m {
         let reference = gfl.oracle(&u, t);
-        gfl.oracle_into(&u, t, &mut slot);
+        gfl.oracle_into(&u, t, &mut (), &mut slot);
         assert_oracle_bits_eq(&slot, &reference, "gfl-zero");
     }
 }
@@ -97,12 +106,105 @@ fn oracle_into_slot_reuse_is_stateless() {
     let mut reused = BlockOracle::empty();
     for pass in 0..3 {
         for t in 0..gfl.m {
-            gfl.oracle_into(&u, t, &mut reused);
+            gfl.oracle_into(&u, t, &mut (), &mut reused);
             let fresh = gfl.oracle(&u, t);
             assert_oracle_bits_eq(&reused, &fresh, "reuse");
         }
         let _ = pass;
     }
+}
+
+// ---------------------------------------------------------------------------
+// Caller-owned scratch: reentrancy across differently-shaped instances
+// ---------------------------------------------------------------------------
+
+/// Alternate `oracle_into` between two differently-shaped instances of one
+/// problem type on a single thread, each with its OWN caller-owned scratch
+/// reused across the whole interleaving, and pin every output against a
+/// fresh-scratch `oracle` call. Under the historical `thread_local!`
+/// scratch this access pattern resized the shared buffers on every single
+/// call (the ROADMAP's "resize-thrash" case) and the `RefCell` made any
+/// reentrant use a runtime panic; with caller-owned scratch it is
+/// allocation-free after warm-up and trivially correct.
+fn check_interleaved_reentrancy<P: Problem>(a: &P, b: &P, seed: u64) {
+    let mut sc_a = OracleScratch::<P>::default();
+    let mut sc_b = OracleScratch::<P>::default();
+    let mut slot_a = BlockOracle::empty();
+    let mut slot_b = BlockOracle::empty();
+    check(40, seed, |g| {
+        let pa = g.gaussian_vec(a.param_dim());
+        let pb = g.gaussian_vec(b.param_dim());
+        let ba = g.usize_in(0, a.num_blocks() - 1);
+        let bb = g.usize_in(0, b.num_blocks() - 1);
+        // a then b then a again: the second a-call sees a scratch whose
+        // sibling instance ran in between.
+        a.oracle_into(&pa, ba, &mut sc_a, &mut slot_a);
+        assert_oracle_bits_eq(&slot_a, &a.oracle(&pa, ba), "interleave-a1");
+        b.oracle_into(&pb, bb, &mut sc_b, &mut slot_b);
+        assert_oracle_bits_eq(&slot_b, &b.oracle(&pb, bb), "interleave-b");
+        a.oracle_into(&pa, ba, &mut sc_a, &mut slot_a);
+        assert_oracle_bits_eq(&slot_a, &a.oracle(&pa, ba), "interleave-a2");
+    });
+}
+
+#[test]
+fn chain_scratch_reentrant_across_shapes() {
+    // Different K, d, AND ell: every Viterbi buffer (theta, alpha, ptr,
+    // ys) would need a different size in each instance.
+    let small = ChainSsvm::new(
+        Arc::new(ocr_like::generate(8, 3, 5, 4, 0.1, 41)),
+        0.1,
+    );
+    let large = ChainSsvm::new(
+        Arc::new(ocr_like::generate(6, 6, 11, 7, 0.1, 43)),
+        0.2,
+    );
+    check_interleaved_reentrancy(&small, &large, 501);
+}
+
+#[test]
+fn qp_scratch_reentrant_across_shapes() {
+    // Different m AND p: both the z = A^T x buffer and the gradient
+    // buffer change shape between instances.
+    let small = SimplexQp::random(6, 3, 1.0, 0.3, 2, 47);
+    let large = SimplexQp::random(9, 7, 1.0, 0.5, 5, 53);
+    check_interleaved_reentrancy(&small, &large, 502);
+}
+
+#[test]
+fn scratch_is_send_and_moves_with_its_worker() {
+    fn assert_send<T: Send + Default>() -> T {
+        T::default()
+    }
+    // Compile-time: every problem's scratch satisfies `Send + Default`.
+    let chain_sc = assert_send::<OracleScratch<ChainSsvm>>();
+    let qp_sc = assert_send::<OracleScratch<SimplexQp>>();
+    assert_send::<OracleScratch<Gfl>>();
+    assert_send::<OracleScratch<MulticlassSsvm>>();
+    // Runtime: a warm scratch can move to another thread and keep
+    // producing bit-identical oracles there.
+    let data = Arc::new(ocr_like::generate(10, 4, 6, 5, 0.1, 59));
+    let chain = ChainSsvm::new(data, 0.1);
+    let qp = SimplexQp::random(8, 4, 1.0, 0.2, 3, 61);
+    let mut chain_sc = chain_sc;
+    let mut qp_sc = qp_sc;
+    let mut slot = BlockOracle::empty();
+    let wc = {
+        let mut rng = apbcfw::util::rng::Pcg64::seeded(63);
+        rng.gaussian_vec(chain.dim())
+    };
+    let wq = qp.init_param();
+    chain.oracle_into(&wc, 1, &mut chain_sc, &mut slot); // warm it up
+    qp.oracle_into(&wq, 2, &mut qp_sc, &mut slot);
+    std::thread::scope(|scope| {
+        scope.spawn(move || {
+            let mut slot = BlockOracle::empty();
+            chain.oracle_into(&wc, 3, &mut chain_sc, &mut slot);
+            assert_oracle_bits_eq(&slot, &chain.oracle(&wc, 3), "send-chain");
+            qp.oracle_into(&wq, 5, &mut qp_sc, &mut slot);
+            assert_oracle_bits_eq(&slot, &qp.oracle(&wq, 5), "send-qp");
+        });
+    });
 }
 
 // ---------------------------------------------------------------------------

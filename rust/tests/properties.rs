@@ -22,14 +22,23 @@ fn prop_buffer_batches_are_disjoint_and_sized() {
         let mut asm = BatchAssembler::new();
         let mut inserted = std::collections::HashSet::new();
         for _ in 0..inserts {
-            let block = g.usize_in(0, n - 1);
-            inserted.insert(block);
+            // Payloads of 1..=3 distinct blocks (the batched fan-out
+            // message shape; 1 is the historical single-block message).
+            let payload = g.usize_in(1, 3.min(n));
+            let mut blocks = std::collections::HashSet::new();
+            while blocks.len() < payload {
+                blocks.insert(g.usize_in(0, n - 1));
+            }
+            inserted.extend(blocks.iter().copied());
             asm.insert(UpdateMsg {
-                oracle: BlockOracle {
-                    block,
-                    s: vec![0.0],
-                    ls: 0.0,
-                },
+                oracles: blocks
+                    .into_iter()
+                    .map(|block| BlockOracle {
+                        block,
+                        s: vec![0.0],
+                        ls: 0.0,
+                    })
+                    .collect(),
                 k_read: 0,
                 worker: 0,
             });
@@ -38,12 +47,17 @@ fn prop_buffer_batches_are_disjoint_and_sized() {
         match asm.take_batch(tau) {
             Some(batch) => {
                 assert!(batch.len() >= tau);
-                let mut blocks: Vec<usize> =
+                let blocks: Vec<usize> =
                     batch.iter().map(|m| m.oracle.block).collect();
-                blocks.sort_unstable();
-                let len = blocks.len();
-                blocks.dedup();
-                assert_eq!(blocks.len(), len, "duplicate block in batch");
+                let mut sorted = blocks.clone();
+                sorted.sort_unstable();
+                assert_eq!(
+                    blocks, sorted,
+                    "take_batch must drain in block order"
+                );
+                let len = sorted.len();
+                sorted.dedup();
+                assert_eq!(sorted.len(), len, "duplicate block in batch");
                 assert!(asm.is_empty());
             }
             None => assert!(inserted.len() < tau),

@@ -393,6 +393,99 @@ fn observer_receives_live_samples_async() {
     assert!(!obs.applies.is_empty());
 }
 
+// ---------- run.batch: lowering + validation ----------
+
+#[test]
+fn default_batch_lowering_is_field_for_field_unchanged() {
+    // A spec that never mentions batch must lower to the legacy config
+    // exactly — batch = 1 is the historical single-block worker, and the
+    // PartialEq covers every RunConfig field including the new one.
+    let legacy = RunConfig {
+        workers: 3,
+        tau: 4,
+        stop: threaded_stop(),
+        straggler: StragglerModel::none(3),
+        seed: 50,
+        ..Default::default()
+    };
+    assert_eq!(legacy.batch, 1, "legacy default is single-block");
+    let spec = RunSpec::new(Engine::asynchronous(3))
+        .tau(4)
+        .stop(threaded_stop())
+        .seed(50);
+    assert_eq!(spec.run_config().unwrap(), legacy);
+    // Same from the config path.
+    let cfg = Config::parse("[run]\nmode = async\nworkers = 3\ntau = 4\n")
+        .unwrap();
+    assert_eq!(RunSpec::from_config(&cfg).unwrap().batch, 1);
+}
+
+#[test]
+fn batch_lowers_into_run_config_for_all_threaded_engines() {
+    let cfg = Config::parse(
+        "[run]\nmode = async\nworkers = 2\ntau = 4\nbatch = 4\n",
+    )
+    .unwrap();
+    let spec = RunSpec::from_config(&cfg).unwrap();
+    assert_eq!(spec.batch, 4);
+    assert_eq!(spec.run_config().unwrap().batch, 4);
+    for engine in
+        [Engine::asynchronous(2), Engine::synchronous(2), Engine::lockfree(2)]
+    {
+        let spec = RunSpec::new(engine).batch(3);
+        assert_eq!(spec.run_config().unwrap().batch, 3);
+    }
+}
+
+#[test]
+fn batch_rejected_on_sequential_engines() {
+    // Builder path: validate (via Runner::new) refuses batch > 1 off the
+    // threaded family.
+    for engine in
+        [Engine::Seq, Engine::Batch, Engine::delayed(DelayModel::None), Engine::pbcd()]
+    {
+        let name = engine.name();
+        let err = Runner::new(RunSpec::new(engine).batch(2))
+            .err()
+            .expect("must be rejected")
+            .to_string();
+        assert!(err.contains("threaded"), "{name}: {err}");
+    }
+    // Config path: run.batch is an engine-scoped key, rejected outright on
+    // sequential modes even at its default value.
+    for mode in ["seq", "batch", "delayed", "pbcd"] {
+        let cfg =
+            Config::parse(&format!("[run]\nmode = {mode}\nbatch = 2\n"))
+                .unwrap();
+        let err = RunSpec::from_config(&cfg).unwrap_err().to_string();
+        assert!(err.contains("run.batch"), "{mode}: {err}");
+    }
+}
+
+#[test]
+fn batch_times_workers_above_n_is_rejected_at_dispatch() {
+    // Only the Runner holds the problem, so the n-dependent half of the
+    // validation errors there (not in validate, not in the engine assert).
+    let p = gfl(); // 29 blocks
+    let spec = RunSpec::new(Engine::asynchronous(8))
+        .tau(4)
+        .batch(4) // 8 x 4 = 32 > 29
+        .stop(threaded_stop());
+    let runner = Runner::new(spec).unwrap(); // spec alone is fine
+    let err = runner.solve_problem(&p).unwrap_err().to_string();
+    assert!(err.contains("exceeds"), "{err}");
+    assert!(err.contains("29"), "{err}");
+    // The same fleet on a big enough problem is accepted.
+    let spec = RunSpec::new(Engine::asynchronous(2))
+        .tau(4)
+        .batch(4) // 2 x 4 = 8 <= 29
+        .exact_gap(true)
+        .sample_every(8)
+        .stop(threaded_stop());
+    let r = Runner::new(spec).unwrap().solve_problem(&p).unwrap();
+    assert!(r.last().unwrap().gap <= 0.1);
+}
+
 // ---------- spec hygiene: straggler arity & registry errors ----------
 
 #[test]

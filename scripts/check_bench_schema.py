@@ -7,7 +7,11 @@ perf regression gate, so it must stay machine-readable in both states:
     {"bench": "hot_paths", "unit": "ns_per_call",
      "status": "measured" | "pending-first-run",
      "rows": [{"name": str, "mean": num, "median": num,
-               "p95": num, "reps": int}, ...]}
+               "p95": num, "reps": int, "unit"?: str}, ...]}
+
+A row-level "unit" overrides the report-level one for metric rows that are
+not timings (e.g. the batched fan-out's "reads_per_update" rows at batch
+1/4/16, where mean == median == p95 == the measured ratio).
 
 Exit code 0 iff the file conforms. Usage:
     python3 scripts/check_bench_schema.py [path]
@@ -33,6 +37,8 @@ def check(path: str) -> str:
         for key in ("mean", "median", "p95"):
             assert isinstance(row[key], (int, float)), row
         assert isinstance(row["reps"], int), row
+        if "unit" in row:
+            assert isinstance(row["unit"], str) and row["unit"], row
     if doc["status"] == "measured":
         assert doc["rows"], "measured report must carry rows"
     return f"{path} OK ({doc['status']}, {len(doc['rows'])} rows)"
