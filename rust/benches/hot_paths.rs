@@ -1,10 +1,13 @@
 //! Micro-benchmarks of the L3 hot-path primitives: vector math (scalar vs
 //! SIMD-dispatched), shared-parameter publish/read (per-element atomic
-//! baseline vs wide-word), buffer operations, the allocating vs
-//! zero-allocation (`oracle` vs snapshot-reuse + `oracle_into`) worker
-//! loops for the GFL and chain-SSVM oracles, and the batched fan-out's
-//! snapshot-read amortization (reads per applied update at batch 1/4/16,
-//! measured on a real async engine run).
+//! baseline vs wide-word, packed vs cacheline-padded layout), buffer
+//! operations, the allocating vs zero-allocation (`oracle` vs
+//! snapshot-reuse + `oracle_into`) worker loops for the GFL and
+//! chain-SSVM oracles, the batched fan-out's snapshot-read amortization
+//! (reads per applied update at batch 1/4/16, measured on a real async
+//! engine run), and the sparse-payload pipeline's dense-vs-sparse apply
+//! throughput + bytes-per-update rows (fused SSVM apply on dense vs
+//! sparse batches; real async runs with `run.payload` forced both ways).
 //!
 //! These are the §Perf targets — see EXPERIMENTS.md §Perf. Every row is
 //! also written to `BENCH_hotpaths.json` at the repo root so the perf
@@ -19,12 +22,15 @@ mod bench_util;
 
 use apbcfw::coordinator::apbcfw as coord;
 use apbcfw::coordinator::buffer::BatchAssembler;
-use apbcfw::coordinator::shared::{SharedParam, SnapshotMode};
+use apbcfw::coordinator::shared::{ParamLayout, SharedParam, SnapshotMode};
 use apbcfw::coordinator::UpdateMsg;
-use apbcfw::data::{ocr_like, signal};
+use apbcfw::data::{mixture, ocr_like, signal};
 use apbcfw::problems::gfl::Gfl;
 use apbcfw::problems::ssvm::chain::{ChainSsvm, ViterbiScratch};
-use apbcfw::problems::{BlockOracle, Problem};
+use apbcfw::problems::ssvm::multiclass::MulticlassSsvm;
+use apbcfw::problems::{
+    ApplyOptions, BlockOracle, PayloadKind, PayloadMode, Problem,
+};
 use apbcfw::run::{Engine, RunSpec};
 use apbcfw::util::rng::Pcg64;
 use apbcfw::util::simd;
@@ -185,11 +191,11 @@ fn main() {
         let mut r = Pcg64::seeded(7);
         while asm.len() < 16 {
             asm.insert(UpdateMsg {
-                oracles: vec![BlockOracle {
-                    block: r.below(1000),
-                    s: vec![0.0; 8],
-                    ls: 0.0,
-                }],
+                oracles: vec![BlockOracle::dense(
+                    r.below(1000),
+                    vec![0.0; 8],
+                    0.0,
+                )],
                 k_read: 0,
                 worker: 0,
             });
@@ -205,11 +211,7 @@ fn main() {
             asm.insert(UpdateMsg {
                 oracles: blocks
                     .iter()
-                    .map(|&block| BlockOracle {
-                        block,
-                        s: vec![0.0; 8],
-                        ls: 0.0,
-                    })
+                    .map(|&block| BlockOracle::dense(block, vec![0.0; 8], 0.0))
                     .collect(),
                 k_read: 0,
                 worker: 0,
@@ -239,6 +241,16 @@ fn main() {
     let spc = SharedParam::with_mode(&x, SnapshotMode::Consistent);
     report.add("SharedParam read/consistent dim=4004", 5000, || {
         spc.read(&mut buf);
+        std::hint::black_box(buf.len());
+    });
+    // Packed vs cacheline-padded layout (the NUMA/false-sharing study
+    // knob): same semantics, 8x footprint, one word per line.
+    let spp = SharedParam::with_layout(&x, SnapshotMode::Torn, ParamLayout::Padded);
+    report.add("SharedParam publish/padded dim=4004", 5000, || {
+        spp.publish(&y, 1);
+    });
+    report.add("SharedParam read/padded dim=4004", 5000, || {
+        spp.read(&mut buf);
         std::hint::black_box(buf.len());
     });
 
@@ -305,6 +317,86 @@ fn main() {
             std::hint::black_box(cslot.ls);
         },
     );
+
+    // ---- sparse oracle payloads: apply throughput + bytes per update ----
+    // Multiclass SSVM at K=10 d=64 (dim 640): the server's fused
+    // gap+direction apply over an 8-oracle batch, dense payloads vs their
+    // sparse twins (bit-identical outputs by the payload contract — these
+    // rows measure the bandwidth saving of never densifying).
+    let mc_data = Arc::new(mixture::generate(64, 10, 64, 0.1, 5));
+    let mc = MulticlassSsvm::new(mc_data, 0.01);
+    let wm: Vec<f32> = rng.gaussian_vec(mc.dim());
+    for kind in [PayloadKind::Dense, PayloadKind::Sparse] {
+        let batch: Vec<BlockOracle> = (0..8)
+            .map(|i| {
+                let mut slot = BlockOracle::empty_with(kind);
+                mc.oracle_into(&wm, i * 7, &mut (), &mut slot);
+                slot
+            })
+            .collect();
+        let label = match kind {
+            PayloadKind::Dense => "dense",
+            PayloadKind::Sparse => "sparse",
+        };
+        let mut state = mc.init_server();
+        let mut w = wm.clone();
+        report.add(
+            &format!("ssvm apply fused batch=8 {label} (dim=640)"),
+            2000,
+            || {
+                let info = mc.apply(
+                    &mut state,
+                    &mut w,
+                    &batch,
+                    ApplyOptions {
+                        gamma: 0.05,
+                        line_search: false,
+                    },
+                );
+                std::hint::black_box(info.batch_gap);
+            },
+        );
+        let bytes: usize = batch.iter().map(|o| o.s.wire_bytes()).sum();
+        report.add_metric(
+            &format!("ssvm payload bytes-per-oracle {label} (dim=640)"),
+            "bytes_per_oracle",
+            bytes as f64 / batch.len() as f64,
+        );
+    }
+
+    // Real async engine runs with the payload knob forced both ways: the
+    // shipped bytes per applied update, measured from the coordinator's
+    // payload telemetry (multiclass SSVM, 2 workers, tau 4).
+    println!();
+    let mc_small = MulticlassSsvm::new(
+        Arc::new(mixture::generate(48, 8, 32, 0.15, 6)),
+        0.05,
+    );
+    for mode in [PayloadMode::Dense, PayloadMode::Sparse] {
+        let cfg = RunSpec::new(Engine::asynchronous(2))
+            .tau(4)
+            .payload(mode)
+            .sample_every(1 << 20)
+            .max_epochs(30.0)
+            .max_secs(10.0)
+            .seed(3)
+            .run_config()
+            .expect("async spec lowers");
+        let r = coord::run(&mc_small, &cfg);
+        report.add_metric(
+            &format!("async bytes-per-update payload={}", mode.name()),
+            "bytes_per_update",
+            r.counters.payload_bytes as f64
+                / r.counters.updates_applied.max(1) as f64,
+        );
+        report.add_metric(
+            &format!("async payload-nnz-per-oracle payload={}", mode.name()),
+            "nnz_per_oracle",
+            r.counters.payload_nnz as f64
+                / r.counters.oracle_calls.max(1) as f64,
+        );
+    }
+    println!();
 
     // ---- batched fan-out: snapshot reads per applied update ----
     // Real async engine runs on the paper-shape GFL (99 blocks, 2

@@ -63,6 +63,13 @@ fn main() {
         chain.oracle_into(&w, 3, &mut viterbi_sc, &mut slot);
         std::hint::black_box(slot.ls);
     });
+    let mut sparse_slot = apbcfw::problems::BlockOracle::empty_with(
+        apbcfw::problems::PayloadKind::Sparse,
+    );
+    bench("chain native oracle_into (sparse payload)", 2000, || {
+        chain.oracle_into(&w, 3, &mut viterbi_sc, &mut sparse_slot);
+        std::hint::black_box(sparse_slot.s.nnz());
+    });
     bench("chain payload build", 5000, || {
         let ys = chain.viterbi(&w, 3, 1.0).0;
         std::hint::black_box(chain.payload(3, &ys));
@@ -117,6 +124,10 @@ fn main() {
     bench("multiclass native oracle_into", 20000, || {
         mc.oracle_into(&wm, 7, &mut (), &mut slot);
         std::hint::black_box(slot.ls);
+    });
+    bench("multiclass native oracle_into (sparse payload)", 20000, || {
+        mc.oracle_into(&wm, 7, &mut (), &mut sparse_slot);
+        std::hint::black_box(sparse_slot.s.nnz());
     });
     if let Some(h) = &handle {
         let dec = XlaMulticlassDecoder::new(h.clone(), mc_data).unwrap();

@@ -213,8 +213,9 @@ USAGE:
       --batch is the worker fan-out tau_w (threaded modes only): blocks
       each worker solves per shared-parameter snapshot.
       every flag is sugar for --set run.<key>=<val>; further knobs
-      (run.delay, run.weighted_averaging, run.work_multiplier, run.eps_gap,
-      ...) are reachable through --set / --config only.
+      (run.payload=auto|dense|sparse, run.delay, run.weighted_averaging,
+      run.work_multiplier, run.eps_gap, ...) are reachable through
+      --set / --config only.
   apbcfw artifacts-check [--dir DIR]
   apbcfw info
 ";

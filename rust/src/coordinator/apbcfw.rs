@@ -26,7 +26,9 @@
 use super::buffer::BatchAssembler;
 use super::shared::SharedParam;
 use super::{pick_blocks, RunConfig, RunResult, UpdateMsg};
-use crate::problems::{ApplyOptions, BlockOracle, OracleScratch, Problem};
+use crate::problems::{
+    ApplyOptions, BlockOracle, OraclePayload, OracleScratch, Problem,
+};
 use crate::run::Observer;
 use crate::solver::{schedule_gamma, WeightedAverage};
 use crate::util::metrics::{Counters, Sample, Stopwatch, Trace};
@@ -55,6 +57,10 @@ pub fn run_observed<P: Problem>(
     let n = problem.num_blocks();
     let tau = cfg.tau.clamp(1, n);
     let wbatch = cfg.worker_batch(n);
+    // Payload representation workers request from `oracle_into` (the
+    // `run.payload` knob resolved against the problem's natural
+    // representation; bit-identical either way by the payload contract).
+    let pkind = cfg.payload.resolve(problem.preferred_payload());
     let mut master = problem.init_param();
     let mut state = problem.init_server();
     let shared = SharedParam::with_mode(&master, cfg.snapshot_mode);
@@ -67,12 +73,14 @@ pub fn run_observed<P: Problem>(
     // same effect from its network/receive buffer.
     let queue_cap = (cfg.queue_factor.max(1) * tau).max(2 * cfg.workers);
     let (tx, rx) = mpsc::sync_channel::<UpdateMsg>(queue_cap);
-    // Payload-buffer free list: the server returns applied/dropped `s`
-    // vectors here and workers pick them up before the next solve, making
-    // the send path allocation-free after warm-up. Bounded so a slow
-    // consumer cannot hoard memory.
+    // Payload-container free list: the server returns applied/displaced/
+    // dropped `s` containers here (dense OR sparse — the pool is
+    // representation-agnostic, so displaced sparse containers are reused
+    // exactly like dense ones) and workers pick them up before the next
+    // solve, making the send path allocation-free after warm-up. Bounded
+    // so a slow consumer cannot hoard memory.
     let pool_cap = (queue_cap + cfg.workers) * wbatch;
-    let oracle_pool: Mutex<Vec<Vec<f32>>> = Mutex::new(Vec::new());
+    let oracle_pool: Mutex<Vec<OraclePayload>> = Mutex::new(Vec::new());
     // Message-container free list: the assembler hands back each payload's
     // emptied `Vec<BlockOracle>` and the server returns it here, so the
     // multi-block send path reuses containers as well as buffers.
@@ -151,13 +159,18 @@ pub fn run_observed<P: Problem>(
                         }
                     }
                     while payload.len() < wbatch {
-                        payload.push(BlockOracle::empty());
+                        payload.push(BlockOracle::empty_with(pkind));
                     }
                     for (slot, &i) in payload.iter_mut().zip(blocks.iter()) {
-                        if slot.s.capacity() == 0 {
+                        if slot.s.is_unallocated() {
                             if let Ok(mut p) = pool.try_lock() {
                                 if let Some(buf) = p.pop() {
+                                    // Pooled containers may carry either
+                                    // representation; convert in place
+                                    // (buffer-reusing) to this run's
+                                    // requested kind.
                                     slot.s = buf;
+                                    slot.s.set_kind(pkind);
                                 }
                             }
                         }
@@ -195,9 +208,12 @@ pub fn run_observed<P: Problem>(
         drop(tx);
 
         // ---------------- server ----------------
-        // Recycle a message container and the payload buffers inside it
+        // Recycle a message container and the payload containers inside it
         // back to the worker pools — opportunistically: if a pool is
-        // contended or full, dropping is cheaper than waiting.
+        // contended or full, dropping is cheaper than waiting. The payload
+        // pool takes dense and sparse containers alike (workers re-shape
+        // them on pickup), so a displaced sparse oracle's buffers are
+        // reused, not dropped.
         let recycle = |mut oracles: Vec<BlockOracle>| {
             if !oracles.is_empty() {
                 if let Ok(mut p) = oracle_pool.try_lock() {
@@ -206,7 +222,7 @@ pub fn run_observed<P: Problem>(
                             break;
                         }
                         let mut s = o.s;
-                        s.clear();
+                        s.recycle();
                         p.push(s);
                     }
                 }
@@ -221,6 +237,17 @@ pub fn run_observed<P: Problem>(
         'serve: loop {
             match rx.recv_timeout(Duration::from_millis(2)) {
                 Ok(msg) => {
+                    // Payload telemetry: nnz + wire bytes of everything
+                    // shipped worker -> server, counted at receipt
+                    // (includes payloads later dropped or displaced —
+                    // they crossed the channel either way).
+                    let (mut nnz, mut bytes) = (0u64, 0u64);
+                    for o in &msg.oracles {
+                        nnz += o.s.nnz() as u64;
+                        bytes += o.s.wire_bytes() as u64;
+                    }
+                    Counters::add(&counters.payload_nnz, nnz);
+                    Counters::add(&counters.payload_bytes, bytes);
                     // Staleness rule (paper Thm 4): drop if delay > k/2.
                     // Every oracle in a payload was read at the same
                     // k_read, so the whole payload shares one verdict.
@@ -503,6 +530,39 @@ mod tests {
         let mut c = cfg(8, 4);
         c.batch = 8; // 8 x 8 > 39
         let _ = run(&p, &c);
+    }
+
+    #[test]
+    fn sparse_payload_ships_fewer_bytes_per_oracle() {
+        // Simplex QP's oracle is a 1-hot vertex: forced-sparse runs must
+        // ship far fewer payload bytes per oracle than forced-dense ones,
+        // and both must converge (they are bit-identical by the payload
+        // contract).
+        use crate::problems::simplex_qp::SimplexQp;
+        use crate::problems::PayloadMode;
+        let qp = SimplexQp::random(24, 8, 1.0, 0.2, 3, 21);
+        let mut bytes_per_oracle = Vec::new();
+        for mode in [PayloadMode::Dense, PayloadMode::Sparse] {
+            let mut c = cfg(2, 4);
+            c.payload = mode;
+            c.line_search = true;
+            c.stop.eps_gap = Some(0.1);
+            let r = run(&qp, &c);
+            assert!(r.trace.last().unwrap().gap <= 0.1, "{mode:?}");
+            assert!(r.counters.payload_bytes > 0);
+            assert!(r.counters.payload_nnz > 0);
+            bytes_per_oracle.push(
+                r.counters.payload_bytes as f64
+                    / r.counters.oracle_calls.max(1) as f64,
+            );
+        }
+        // Dense ships 4*m = 32 bytes per oracle; sparse 4 + 8 = 12.
+        assert!(
+            bytes_per_oracle[1] < bytes_per_oracle[0],
+            "sparse {} !< dense {}",
+            bytes_per_oracle[1],
+            bytes_per_oracle[0]
+        );
     }
 
     #[test]

@@ -149,11 +149,7 @@ mod tests {
 
     fn msg(block: usize, k_read: u64) -> UpdateMsg {
         UpdateMsg {
-            oracles: vec![BlockOracle {
-                block,
-                s: vec![k_read as f32],
-                ls: 0.0,
-            }],
+            oracles: vec![BlockOracle::dense(block, vec![k_read as f32], 0.0)],
             k_read,
             worker: 0,
         }
@@ -163,12 +159,26 @@ mod tests {
         UpdateMsg {
             oracles: blocks
                 .iter()
-                .map(|&block| BlockOracle {
-                    block,
-                    s: vec![k_read as f32],
-                    ls: 0.0,
+                .map(|&block| {
+                    BlockOracle::dense(block, vec![k_read as f32], 0.0)
                 })
                 .collect(),
+            k_read,
+            worker: 0,
+        }
+    }
+
+    fn sparse_msg(block: usize, k_read: u64) -> UpdateMsg {
+        UpdateMsg {
+            oracles: vec![BlockOracle {
+                block,
+                s: crate::problems::OraclePayload::Sparse {
+                    idx: vec![0],
+                    val: vec![k_read as f32],
+                    dim: 4,
+                },
+                ls: 0.0,
+            }],
             k_read,
             worker: 0,
         }
@@ -196,7 +206,7 @@ mod tests {
         assert!(asm.insert(msg(5, 1)).is_empty());
         let displaced = asm.insert(msg(5, 9)); // collision
         assert_eq!(displaced.len(), 1, "old oracle handed back for recycle");
-        assert_eq!(displaced[0].s, vec![1.0f32]);
+        assert_eq!(displaced[0].s.as_dense().unwrap(), &[1.0f32]);
         assert_eq!(asm.collisions(), 1);
         assert_eq!(asm.len(), 1);
         let batch = asm.take_batch(1).unwrap();
@@ -209,10 +219,45 @@ mod tests {
         assert!(asm.insert_keep_old(msg(5, 1)).is_empty());
         let discarded = asm.insert_keep_old(msg(5, 9));
         assert_eq!(discarded.len(), 1);
-        assert_eq!(discarded[0].s, vec![9.0f32], "new oracle discarded");
+        assert_eq!(
+            discarded[0].s.as_dense().unwrap(),
+            &[9.0f32],
+            "new oracle discarded"
+        );
         assert_eq!(asm.collisions(), 1);
         let batch = asm.take_batch(1).unwrap();
         assert_eq!(batch[0].k_read, 1, "must keep the old update");
+    }
+
+    #[test]
+    fn displaced_sparse_containers_are_handed_back_for_recycling() {
+        // Collision handling is representation-agnostic: a displaced
+        // sparse oracle comes back with its idx/val buffers intact (the
+        // engines' pools then reuse them), under BOTH collision policies.
+        let mut asm = BatchAssembler::new();
+        assert!(asm.insert(sparse_msg(3, 1)).is_empty());
+        let displaced = asm.insert(sparse_msg(3, 2));
+        assert_eq!(displaced.len(), 1);
+        match &displaced[0].s {
+            crate::problems::OraclePayload::Sparse { idx, val, .. } => {
+                assert_eq!(idx, &[0u32]);
+                assert_eq!(val, &[1.0f32]);
+            }
+            other => panic!("displaced payload densified: {other:?}"),
+        }
+        let mut asm = BatchAssembler::new();
+        assert!(asm.insert_keep_old(sparse_msg(3, 1)).is_empty());
+        let discarded = asm.insert_keep_old(sparse_msg(3, 2));
+        assert_eq!(discarded.len(), 1);
+        match &discarded[0].s {
+            crate::problems::OraclePayload::Sparse { val, .. } => {
+                assert_eq!(val, &[2.0f32]);
+            }
+            other => panic!("discarded payload densified: {other:?}"),
+        }
+        // A sparse update that wins the collision is applied as-is.
+        let batch = asm.take_batch(1).unwrap();
+        assert_eq!(batch[0].oracle.s.nnz(), 1);
     }
 
     #[test]

@@ -46,6 +46,7 @@ where
         "lockfree variant requires SnapshotMode::Torn (hogwild updates)"
     );
     let wbatch = cfg.worker_batch(n);
+    let pkind = cfg.payload.resolve(problem.preferred_payload());
     let shared = SharedParam::new(&problem.init_param());
     let counter = AtomicU64::new(0);
     let stop = AtomicBool::new(false);
@@ -69,8 +70,9 @@ where
                 // serve the whole run — the loop is allocation-free in
                 // steady state (§Perf).
                 let mut oscratch = OracleScratch::<P>::default();
-                let mut slots: Vec<BlockOracle> =
-                    (0..wbatch).map(|_| BlockOracle::empty()).collect();
+                let mut slots: Vec<BlockOracle> = (0..wbatch)
+                    .map(|_| BlockOracle::empty_with(pkind))
+                    .collect();
                 while !stop.load(Ordering::Acquire) {
                     // tau_w distinct blocks, all solved against the one
                     // snapshot read below (one `below(n)` draw at 1 — the
@@ -78,21 +80,47 @@ where
                     pick_blocks(&mut rng, n, wbatch, &mut blocks);
                     shared.read(&mut snapshot);
                     Counters::bump(&counters.snapshot_reads);
+                    let (mut nnz, mut bytes) = (0u64, 0u64);
                     for (slot, &i) in slots.iter_mut().zip(blocks.iter()) {
                         problem.oracle_into(&snapshot, i, &mut oscratch, slot);
                         Counters::bump(&counters.oracle_calls);
+                        nnz += slot.s.nnz() as u64;
+                        bytes += slot.s.wire_bytes() as u64;
                     }
+                    // Serverless: nothing crosses a channel, but the
+                    // telemetry still reports what a distributed
+                    // deployment of this loop would ship.
+                    Counters::add(&counters.payload_nnz, nnz);
+                    Counters::add(&counters.payload_bytes, bytes);
                     // Apply per block: each update reads the counter for
                     // its own step size, exactly as the per-block loop
-                    // did.
+                    // did. The dense arm keeps the historical indexed
+                    // loop; the sparse arm streams `dense_iter`, which
+                    // yields the same float sequence, so the hogwild
+                    // deltas are bit-identical either way.
                     for (slot, &i) in slots.iter().zip(blocks.iter()) {
                         let k = counter.load(Ordering::Relaxed);
                         let gamma = 2.0 * n as f32
                             / (k as f32 + 2.0 * n as f32);
                         let range = problem.block_range(i);
-                        for (j, idx) in range.enumerate() {
-                            let delta = gamma * (slot.s[j] - snapshot[idx]);
-                            shared.fetch_add_f32(idx, delta);
+                        debug_assert_eq!(slot.s.dim(), range.len());
+                        match slot.s.as_dense() {
+                            Some(s) => {
+                                for (j, idx) in range.enumerate() {
+                                    let delta =
+                                        gamma * (s[j] - snapshot[idx]);
+                                    shared.fetch_add_f32(idx, delta);
+                                }
+                            }
+                            None => {
+                                for (idx, sj) in
+                                    range.zip(slot.s.dense_iter())
+                                {
+                                    let delta =
+                                        gamma * (sj - snapshot[idx]);
+                                    shared.fetch_add_f32(idx, delta);
+                                }
+                            }
                         }
                         counter.fetch_add(1, Ordering::Relaxed);
                         Counters::bump(&counters.updates_applied);

@@ -101,6 +101,11 @@ pub struct RunConfig {
     /// oracle solves. Engines require `batch * workers <= n` when
     /// `batch > 1` (the `RunSpec` lowering validates this).
     pub batch: usize,
+    /// Oracle payload representation workers request (`run.payload`):
+    /// `Auto` resolves to each problem's natural representation, pinned
+    /// bit-identical to `Dense` by the equivalence tests — see the payload
+    /// representation contract in `crate::problems`.
+    pub payload: crate::problems::PayloadMode,
     /// Exact line search on the server.
     pub line_search: bool,
     /// Enforce the paper's staleness rule (drop updates older than k/2).
@@ -155,6 +160,7 @@ impl Default for RunConfig {
             workers: 2,
             tau: 2,
             batch: 1,
+            payload: crate::problems::PayloadMode::Auto,
             line_search: false,
             staleness_rule: true,
             straggler: crate::sim::straggler::StragglerModel::none(2),

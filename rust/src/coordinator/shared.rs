@@ -38,6 +38,39 @@ pub enum SnapshotMode {
     Consistent,
 }
 
+/// Wide words (u64) per 64-byte cache line — the [`ParamLayout::Padded`]
+/// stride.
+const WORDS_PER_LINE: usize = 8;
+
+/// Memory layout of the wide-word storage — the NUMA/false-sharing study
+/// knob (ROADMAP). Both layouts have identical read/publish semantics;
+/// they trade memory footprint against cross-core cache-line contention.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ParamLayout {
+    /// Words packed contiguously (default): four element-pairs share each
+    /// cache line, so concurrent writers of adjacent small blocks can
+    /// false-share a line even though their lanes are disjoint.
+    #[default]
+    Packed,
+    /// One wide word per 64-byte cache line (8x the footprint): adjacent
+    /// blocks land on distinct lines, isolating per-block hogwild writers
+    /// at the cost of 8x less spatial locality for full-vector
+    /// snapshots. Opt-in for small-dim problems where false sharing
+    /// dominates; the `hot_paths` bench emits the packed-vs-padded
+    /// publish/read rows.
+    Padded,
+}
+
+impl ParamLayout {
+    #[inline]
+    fn stride(self) -> usize {
+        match self {
+            ParamLayout::Packed => 1,
+            ParamLayout::Padded => WORDS_PER_LINE,
+        }
+    }
+}
+
 /// Pack two adjacent f32 elements into one u64 word (low lane = even idx).
 #[inline]
 fn pack(lo: f32, hi: f32) -> u64 {
@@ -49,13 +82,18 @@ const HI_MASK: u64 = 0xFFFF_FFFF_0000_0000;
 
 /// Shared parameter + iteration version counter.
 pub struct SharedParam {
-    /// ceil(len/2) words; odd `len` leaves the last word's high lane unused.
+    /// ceil(len/2) logical words at [`ParamLayout`]-dependent stride; odd
+    /// `len` leaves the last word's high lane unused.
     words: Vec<AtomicU64>,
+    /// Physical distance between consecutive logical words (1 packed,
+    /// [`WORDS_PER_LINE`] padded).
+    stride: usize,
     len: usize,
     version: AtomicU64,
     /// Seqlock word (odd = publish in flight); used in `Consistent` mode.
     seq: AtomicU64,
     mode: SnapshotMode,
+    layout: ParamLayout,
 }
 
 impl SharedParam {
@@ -63,24 +101,51 @@ impl SharedParam {
         Self::with_mode(init, SnapshotMode::Torn)
     }
 
-    /// Construct with an explicit snapshot consistency mode.
+    /// Construct with an explicit snapshot consistency mode (packed
+    /// layout).
     pub fn with_mode(init: &[f32], mode: SnapshotMode) -> Self {
+        Self::with_layout(init, mode, ParamLayout::Packed)
+    }
+
+    /// Construct with explicit snapshot consistency mode AND storage
+    /// layout.
+    pub fn with_layout(
+        init: &[f32],
+        mode: SnapshotMode,
+        layout: ParamLayout,
+    ) -> Self {
         let len = init.len();
-        let mut words = Vec::with_capacity(len.div_ceil(2));
+        let stride = layout.stride();
+        let nwords = len.div_ceil(2);
+        let mut words = Vec::with_capacity(nwords * stride);
+        let mut push_word = |bits: u64| {
+            words.push(AtomicU64::new(bits));
+            for _ in 1..stride {
+                words.push(AtomicU64::new(0));
+            }
+        };
         let mut chunks = init.chunks_exact(2);
         for pair in &mut chunks {
-            words.push(AtomicU64::new(pack(pair[0], pair[1])));
+            push_word(pack(pair[0], pair[1]));
         }
         if let [last] = chunks.remainder() {
-            words.push(AtomicU64::new(pack(*last, 0.0)));
+            push_word(pack(*last, 0.0));
         }
         Self {
             words,
+            stride,
             len,
             version: AtomicU64::new(0),
             seq: AtomicU64::new(0),
             mode,
+            layout,
         }
+    }
+
+    /// The atomic word holding elements `2*wi` and `2*wi + 1`.
+    #[inline]
+    fn word(&self, wi: usize) -> &AtomicU64 {
+        &self.words[wi * self.stride]
     }
 
     pub fn len(&self) -> usize {
@@ -94,6 +159,11 @@ impl SharedParam {
     /// The configured snapshot mode.
     pub fn mode(&self) -> SnapshotMode {
         self.mode
+    }
+
+    /// The configured storage layout.
+    pub fn layout(&self) -> ParamLayout {
+        self.layout
     }
 
     /// Current server iteration.
@@ -137,13 +207,13 @@ impl SharedParam {
         out.clear();
         out.reserve(self.len);
         let full = self.len / 2;
-        for w in &self.words[..full] {
-            let bits = w.load(Ordering::Relaxed);
+        for wi in 0..full {
+            let bits = self.word(wi).load(Ordering::Relaxed);
             out.push(f32::from_bits(bits as u32));
             out.push(f32::from_bits((bits >> 32) as u32));
         }
         if self.len % 2 == 1 {
-            let bits = self.words[full].load(Ordering::Relaxed);
+            let bits = self.word(full).load(Ordering::Relaxed);
             out.push(f32::from_bits(bits as u32));
         }
     }
@@ -189,12 +259,13 @@ impl SharedParam {
             self.seq_lock();
         }
         let mut chunks = values.chunks_exact(2);
-        for (w, pair) in self.words.iter().zip(&mut chunks) {
-            w.store(pack(pair[0], pair[1]), Ordering::Relaxed);
+        for (wi, pair) in (&mut chunks).enumerate() {
+            self.word(wi).store(pack(pair[0], pair[1]), Ordering::Relaxed);
         }
         if let [last] = chunks.remainder() {
             // Odd tail: the high lane is unused, safe to overwrite whole.
-            self.words[self.len / 2].store(pack(*last, 0.0), Ordering::Relaxed);
+            self.word(self.len / 2)
+                .store(pack(*last, 0.0), Ordering::Relaxed);
         }
         if guard {
             self.seq_unlock();
@@ -255,7 +326,7 @@ impl SharedParam {
             v += 1;
         }
         while i + 1 < end {
-            self.words[i / 2]
+            self.word(i / 2)
                 .store(pack(values[v], values[v + 1]), Ordering::Relaxed);
             i += 2;
             v += 2;
@@ -268,7 +339,7 @@ impl SharedParam {
 
     /// CAS-update the single lane holding element `idx`.
     fn store_lane(&self, idx: usize, val: f32) {
-        let cell = &self.words[idx / 2];
+        let cell = self.word(idx / 2);
         let bits = val.to_bits() as u64;
         let mut cur = cell.load(Ordering::Relaxed);
         loop {
@@ -315,7 +386,7 @@ impl SharedParam {
     }
 
     fn fetch_add_f32_unguarded(&self, idx: usize, delta: f32) {
-        let cell = &self.words[idx / 2];
+        let cell = self.word(idx / 2);
         let hi_lane = idx % 2 == 1;
         let mut cur = cell.load(Ordering::Relaxed);
         loop {
@@ -436,6 +507,45 @@ mod tests {
             sp.read_vec(),
             vec![0.0, 2.0, 3.0, 0.0, 0.0, 6.0, 7.0]
         );
+    }
+
+    #[test]
+    fn padded_layout_roundtrips_all_operations() {
+        for len in [0usize, 1, 2, 3, 5, 8, 9, 33] {
+            let init: Vec<f32> = (0..len).map(|i| i as f32 - 2.5).collect();
+            let sp = SharedParam::with_layout(
+                &init,
+                SnapshotMode::Torn,
+                ParamLayout::Padded,
+            );
+            assert_eq!(sp.layout(), ParamLayout::Padded);
+            assert_eq!(sp.read_vec(), init, "len={len}");
+            let flip: Vec<f32> = init.iter().map(|v| -v).collect();
+            sp.publish(&flip, 1);
+            assert_eq!(sp.read_vec(), flip, "publish len={len}");
+            if len >= 4 {
+                sp.publish_range(1, &[7.0, 8.0, 9.0]);
+                let v = sp.read_vec();
+                assert_eq!(&v[1..4], &[7.0, 8.0, 9.0], "range len={len}");
+                assert_eq!(v[0], flip[0], "neighbor lane len={len}");
+            }
+            if len >= 1 {
+                sp.fetch_add_f32(len - 1, 2.0);
+            }
+        }
+    }
+
+    #[test]
+    fn padded_layout_consistent_mode_roundtrip() {
+        let sp = SharedParam::with_layout(
+            &[1.0, 2.0, 3.0],
+            SnapshotMode::Consistent,
+            ParamLayout::Padded,
+        );
+        sp.publish(&[4.0, 5.0, 6.0], 1);
+        assert_eq!(sp.read_vec(), vec![4.0, 5.0, 6.0]);
+        sp.publish_range(1, &[9.0]);
+        assert_eq!(sp.read_vec(), vec![4.0, 9.0, 6.0]);
     }
 
     #[test]

@@ -15,7 +15,9 @@
 
 use super::shared::SharedParam;
 use super::{RunConfig, RunResult};
-use crate::problems::{ApplyOptions, BlockOracle, OracleScratch, Problem};
+use crate::problems::{
+    ApplyOptions, BlockOracle, OraclePayload, OracleScratch, Problem,
+};
 use crate::run::Observer;
 use crate::solver::schedule_gamma;
 use crate::util::metrics::{Counters, Sample, Stopwatch, Trace};
@@ -44,6 +46,7 @@ pub fn run_observed<P: Problem>(
     let n = problem.num_blocks();
     let tau = cfg.tau.clamp(1, n);
     let wbatch = cfg.worker_batch(n);
+    let pkind = cfg.payload.resolve(problem.preferred_payload());
     let mut master = problem.init_param();
     let mut state = problem.init_server();
     let shared = SharedParam::with_mode(&master, cfg.snapshot_mode);
@@ -54,11 +57,12 @@ pub fn run_observed<P: Problem>(
     let mut trace = Trace::default();
     let mut gap_estimate = f64::INFINITY;
     let mut k: u64 = 0;
-    // Payload-buffer free list (same scheme as the async runtime): the
-    // server recycles applied `s` vectors, workers pick them up before a
-    // solve, so the report path is allocation-free after warm-up.
+    // Payload-container free list (same scheme as the async runtime,
+    // representation-agnostic): the server recycles applied `s`
+    // containers, workers pick them up before a solve, so the report path
+    // is allocation-free after warm-up.
     let pool_cap = 2 * tau + cfg.workers;
-    let oracle_pool: Mutex<Vec<Vec<f32>>> = Mutex::new(Vec::new());
+    let oracle_pool: Mutex<Vec<OraclePayload>> = Mutex::new(Vec::new());
 
     // Per-worker assignment channels + shared result channel.
     let mut assign_txs = Vec::with_capacity(cfg.workers);
@@ -87,7 +91,7 @@ pub fn run_observed<P: Problem>(
                 let mut oscratch = OracleScratch::<P>::default();
                 // Payload slot reused across straggler redos: only the
                 // successfully-reported solve transfers its buffer (§Perf).
-                let mut scratch = BlockOracle::empty();
+                let mut scratch = BlockOracle::empty_with(pkind);
                 while let Ok(Assignment::Solve(blocks)) = a_rx.recv() {
                     if stop_flag.load(Ordering::Acquire) {
                         break;
@@ -98,11 +102,12 @@ pub fn run_observed<P: Problem>(
                     Counters::bump(&counters.snapshot_reads);
                     let mut out = Vec::with_capacity(blocks.len());
                     for i in blocks {
-                        if scratch.s.capacity() == 0 {
+                        if scratch.s.is_unallocated() {
                             // Opportunistic: on contention just allocate.
                             if let Ok(mut p) = pool.try_lock() {
                                 if let Some(buf) = p.pop() {
                                     scratch.s = buf;
+                                    scratch.s.set_kind(pkind);
                                 }
                             }
                         }
@@ -119,7 +124,7 @@ pub fn run_observed<P: Problem>(
                             if straggler.reports(w, &mut rng) {
                                 out.push(std::mem::replace(
                                     &mut scratch,
-                                    BlockOracle::empty(),
+                                    BlockOracle::empty_with(pkind),
                                 ));
                                 break;
                             }
@@ -168,6 +173,14 @@ pub fn run_observed<P: Problem>(
                     Err(_) => break 'serve,
                 }
             }
+            // Payload telemetry: everything shipped worker -> server.
+            let (mut nnz, mut bytes) = (0u64, 0u64);
+            for o in &batch {
+                nnz += o.s.nnz() as u64;
+                bytes += o.s.wire_bytes() as u64;
+            }
+            Counters::add(&counters.payload_nnz, nnz);
+            Counters::add(&counters.payload_bytes, bytes);
             let gamma = schedule_gamma(n, tau, k);
             let info = problem.apply(
                 &mut state,
@@ -182,14 +195,15 @@ pub fn run_observed<P: Problem>(
             shared.publish(&master, k);
             obs.on_apply(k, info.gamma, info.batch_gap);
             Counters::add(&counters.updates_applied, batch.len() as u64);
-            // Recycle applied payload buffers back to the workers.
+            // Recycle applied payload containers back to the workers
+            // (dense or sparse alike).
             if let Ok(mut p) = oracle_pool.try_lock() {
                 for o in batch {
                     if p.len() >= pool_cap {
                         break;
                     }
                     let mut s = o.s;
-                    s.clear();
+                    s.recycle();
                     p.push(s);
                 }
             }

@@ -85,4 +85,13 @@ fn summarize(name: &str, r: &Report) {
         r.counters.collisions,
         r.secs_per_pass
     );
+    if r.counters.payload_bytes > 0 {
+        println!(
+            "  payload: {:.1} bytes/update, {:.1} nnz/oracle",
+            r.counters.payload_bytes as f64
+                / r.counters.updates_applied.max(1) as f64,
+            r.counters.payload_nnz as f64
+                / r.counters.oracle_calls.max(1) as f64
+        );
+    }
 }

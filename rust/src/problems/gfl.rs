@@ -14,7 +14,10 @@
 //! `gfl_step` XLA artifact through [`GflOracleBackend`] — the two are
 //! cross-validated in integration tests.
 
-use super::{ApplyInfo, ApplyOptions, BlockOracle, Problem, ProjectableProblem};
+use super::{
+    ApplyInfo, ApplyOptions, BlockOracle, OraclePayload, Problem,
+    ProjectableProblem,
+};
 use crate::util::la;
 use std::sync::Arc;
 
@@ -191,11 +194,11 @@ impl Problem for Gfl {
             // Artifact path: full-step evaluation, slice the block column.
             let (_g, s, _gap, _f) = be.step(param);
             let d = self.d;
-            return BlockOracle {
+            return BlockOracle::dense(
                 block,
-                s: s[block * d..(block + 1) * d].to_vec(),
-                ls: 0.0,
-            };
+                s[block * d..(block + 1) * d].to_vec(),
+                0.0,
+            );
         }
         // Native path: delegate to `oracle_into` so there is exactly ONE
         // implementation of the oracle arithmetic (bit-identity by
@@ -221,18 +224,22 @@ impl Problem for Gfl {
         // Compute the gradient directly into the payload buffer, then
         // rescale in place — same operation order as `oracle`, so the
         // result is bit-identical (property-tested). No zero-fill:
-        // `grad_col_into` assigns every element.
+        // `grad_col_into` assigns every element. GFL's oracle is a dense
+        // ball-boundary column, so a sparse container request is
+        // overridden (the documented dense fallback of the payload
+        // representation contract).
         out.block = block;
         out.ls = 0.0;
-        if out.s.len() != self.d {
-            out.s.resize(self.d, 0.0);
+        let s = out.s.ensure_dense();
+        if s.len() != self.d {
+            s.resize(self.d, 0.0);
         }
-        self.grad_col_into(param, block, &mut out.s);
-        let nrm = la::norm2(&out.s);
+        self.grad_col_into(param, block, s);
+        let nrm = la::norm2(s);
         if nrm > 0.0 {
-            la::scale((-self.lam / nrm) as f32, &mut out.s);
+            la::scale((-self.lam / nrm) as f32, s);
         } else {
-            out.s.iter_mut().for_each(|v| *v = 0.0);
+            s.iter_mut().for_each(|v| *v = 0.0);
         }
     }
 
@@ -244,7 +251,15 @@ impl Problem for Gfl {
     ) -> f64 {
         let g = self.grad_col(param, o.block);
         let ut = self.col(param, o.block);
-        la::dot(ut, &g) - la::dot(&o.s, &g)
+        let s_dot_g = match &o.s {
+            OraclePayload::Dense(s) => la::dot(s, &g),
+            // Never produced by this problem; accepted for the consumer
+            // contract (hand-built batches).
+            OraclePayload::Sparse { idx, val, .. } => {
+                la::dot_sparse(idx, val, &g)
+            }
+        };
+        la::dot(ut, &g) - s_dot_g
     }
 
     fn apply(
@@ -268,8 +283,17 @@ impl Problem for Gfl {
             let mut delta = std::collections::HashMap::new();
             for o in batch {
                 let ut = self.col(param, o.block);
-                let dcol: Vec<f32> =
-                    o.s.iter().zip(ut.iter()).map(|(s, u)| s - u).collect();
+                let dcol: Vec<f32> = match &o.s {
+                    OraclePayload::Dense(s) => {
+                        s.iter().zip(ut.iter()).map(|(s, u)| s - u).collect()
+                    }
+                    OraclePayload::Sparse { .. } => o
+                        .s
+                        .dense_iter()
+                        .zip(ut.iter())
+                        .map(|(s, u)| s - u)
+                        .collect(),
+                };
                 delta.insert(o.block, dcol);
             }
             let zeros = vec![0.0f32; d];
@@ -301,8 +325,14 @@ impl Problem for Gfl {
             opts.gamma
         };
         for o in batch {
+            debug_assert_eq!(o.s.dim(), d);
             let col = &mut param[o.block * d..(o.block + 1) * d];
-            la::lerp_into(gamma, &o.s, col);
+            match &o.s {
+                OraclePayload::Dense(s) => la::lerp_into(gamma, s, col),
+                OraclePayload::Sparse { idx, val, .. } => {
+                    la::lerp_into_sparse(gamma, idx, val, col)
+                }
+            }
         }
         ApplyInfo { gamma, batch_gap }
     }
@@ -404,8 +434,9 @@ mod tests {
         for t in [0usize, 5, gfl.m - 1] {
             let o = gfl.oracle(&u, t);
             let g = gfl.grad_col(&u, t);
-            let val = la::dot(&o.s, &g);
-            assert!((la::norm2(&o.s) - gfl.lam).abs() < 1e-5);
+            let s = o.s.as_dense().expect("gfl oracle is dense");
+            let val = la::dot(s, &g);
+            assert!((la::norm2(s) - gfl.lam).abs() < 1e-5);
             for _ in 0..30 {
                 let mut v = rng.gaussian_vec(gfl.d);
                 la::project_l2_ball(gfl.lam, &mut v);

@@ -28,36 +28,411 @@
 //! workers solving several blocks per snapshot reuse one scratch across the
 //! whole batch with zero allocation (see `rust/tests/hot_path_equivalence.rs`
 //! for the reentrancy property tests).
+//!
+//! # Oracle payload representation contract
+//!
+//! [`BlockOracle::s`] is an [`OraclePayload`] — either a dense vector or a
+//! `(idx, val, dim)` sparse triple — because three of the four problems
+//! emit structurally sparse vertices (simplex QP: a 1-hot vertex;
+//! multiclass SSVM: `±psi_i(y*)/(lambda n)` on two class rows; chain SSVM:
+//! the emission features of mistaken positions plus transition counts).
+//! Shipping those sparse keeps the bytes per update and the server's apply
+//! bandwidth proportional to the nonzeros instead of the parameter
+//! dimension. The contract, pinned by `rust/tests/hot_path_equivalence.rs`:
+//!
+//! - **Request.** The CALLER chooses the representation by the variant of
+//!   the `out.s` container it passes to [`Problem::oracle_into`] (workers
+//!   resolve the `run.payload` knob — `auto | dense | sparse` — against
+//!   [`Problem::preferred_payload`] once and size their slots with
+//!   [`BlockOracle::empty_with`]). Recycled containers of the other
+//!   variant are converted in place, reusing their buffers
+//!   ([`OraclePayload::set_kind`]).
+//! - **Fallback.** A problem that implements only one representation may
+//!   override the request by converting the container (GFL always emits
+//!   dense — its oracle is a dense ball-boundary column). Consumers must
+//!   therefore accept either variant regardless of the requested mode.
+//! - **Bit-identity.** A sparse payload densifies
+//!   ([`OraclePayload::densify_into`]) to exactly the bits the dense
+//!   emission would have produced, and every consumer (the fused SSVM
+//!   gap+direction traversal, the parameter-space applies, the lock-free
+//!   hogwild update) produces bit-identical results from either
+//!   representation: the sparse convex-combination update is
+//!   scale-by-`1-gamma`-then-scatter-axpy, which visits the same floats in
+//!   the same order as the (deliberately unfused) dense `lerp_into` on the
+//!   nonzero support. The one out-of-scope corner is negative-zero /
+//!   negative-underflow inputs, which no problem emits.
+//! - **Invariants.** Sparse `idx` is strictly ascending, in-bounds, and
+//!   parallel to `val`; explicit zeros are allowed (and required where the
+//!   dense accumulation writes one, e.g. cancelling chain transitions).
 
 pub mod gfl;
 pub mod simplex_qp;
 pub mod ssvm;
+
+/// Which concrete representation an [`OraclePayload`] container uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PayloadKind {
+    /// Full `dim`-length vector.
+    Dense,
+    /// `(idx, val)` pairs over a `dim`-length implicit-zero vector.
+    Sparse,
+}
+
+/// The `run.payload` knob: which representation workers request from
+/// [`Problem::oracle_into`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PayloadMode {
+    /// Each problem's natural representation
+    /// ([`Problem::preferred_payload`]).
+    #[default]
+    Auto,
+    /// Force dense payloads everywhere (the historical wire format).
+    Dense,
+    /// Request sparse payloads (problems without a sparse emitter fall
+    /// back to dense — see the module docs' representation contract).
+    Sparse,
+}
+
+impl PayloadMode {
+    /// Resolve the knob against a problem's natural representation.
+    pub fn resolve(self, natural: PayloadKind) -> PayloadKind {
+        match self {
+            PayloadMode::Auto => natural,
+            PayloadMode::Dense => PayloadKind::Dense,
+            PayloadMode::Sparse => PayloadKind::Sparse,
+        }
+    }
+
+    /// Parse the config grammar (`auto | dense | sparse`).
+    pub fn parse(text: &str) -> Option<Self> {
+        match text.trim() {
+            "auto" => Some(PayloadMode::Auto),
+            "dense" => Some(PayloadMode::Dense),
+            "sparse" => Some(PayloadMode::Sparse),
+            _ => None,
+        }
+    }
+
+    /// Canonical config spelling.
+    pub fn name(self) -> &'static str {
+        match self {
+            PayloadMode::Auto => "auto",
+            PayloadMode::Dense => "dense",
+            PayloadMode::Sparse => "sparse",
+        }
+    }
+}
+
+/// A block-oracle solution payload: dense vector or sparse triple. See the
+/// module docs' representation contract.
+#[derive(Debug, Clone, PartialEq)]
+pub enum OraclePayload {
+    /// Full `dim`-length payload vector.
+    Dense(Vec<f32>),
+    /// Nonzero support of a `dim`-length vector: `val[k]` at index
+    /// `idx[k]`, `idx` strictly ascending and in-bounds.
+    Sparse {
+        idx: Vec<u32>,
+        val: Vec<f32>,
+        dim: u32,
+    },
+}
+
+impl Default for OraclePayload {
+    fn default() -> Self {
+        OraclePayload::Dense(Vec::new())
+    }
+}
+
+impl OraclePayload {
+    /// An empty container of the given representation (buffers allocate
+    /// lazily on first fill and are reused afterwards).
+    pub fn empty(kind: PayloadKind) -> Self {
+        match kind {
+            PayloadKind::Dense => OraclePayload::Dense(Vec::new()),
+            PayloadKind::Sparse => OraclePayload::Sparse {
+                idx: Vec::new(),
+                val: Vec::new(),
+                dim: 0,
+            },
+        }
+    }
+
+    /// The container's current representation.
+    pub fn kind(&self) -> PayloadKind {
+        match self {
+            OraclePayload::Dense(_) => PayloadKind::Dense,
+            OraclePayload::Sparse { .. } => PayloadKind::Sparse,
+        }
+    }
+
+    /// Logical (dense) dimension of the payload.
+    pub fn dim(&self) -> usize {
+        match self {
+            OraclePayload::Dense(s) => s.len(),
+            OraclePayload::Sparse { dim, .. } => *dim as usize,
+        }
+    }
+
+    /// Number of explicitly stored values (dense: the full dimension).
+    /// This is the `payload_nnz` telemetry unit.
+    pub fn nnz(&self) -> usize {
+        match self {
+            OraclePayload::Dense(s) => s.len(),
+            OraclePayload::Sparse { val, .. } => val.len(),
+        }
+    }
+
+    /// Wire size of the payload body in bytes (excludes the
+    /// representation-independent block/ls header): dense `4*dim`, sparse
+    /// `4 + 8*nnz` (dim word + u32 index + f32 value per entry). This is
+    /// the `payload_bytes` telemetry unit.
+    pub fn wire_bytes(&self) -> usize {
+        match self {
+            OraclePayload::Dense(s) => 4 * s.len(),
+            OraclePayload::Sparse { val, .. } => 4 + 8 * val.len(),
+        }
+    }
+
+    /// Whether the container holds no reusable buffer capacity (a fresh
+    /// slot that should be topped up from a recycle pool before filling).
+    pub fn is_unallocated(&self) -> bool {
+        match self {
+            OraclePayload::Dense(s) => s.capacity() == 0,
+            OraclePayload::Sparse { idx, val, .. } => {
+                val.capacity() == 0 && idx.capacity() == 0
+            }
+        }
+    }
+
+    /// Clear stored values, retaining buffer capacity (recycle-pool form).
+    pub fn recycle(&mut self) {
+        match self {
+            OraclePayload::Dense(s) => s.clear(),
+            OraclePayload::Sparse { idx, val, dim } => {
+                idx.clear();
+                val.clear();
+                *dim = 0;
+            }
+        }
+    }
+
+    /// Convert the container to the given representation in place, reusing
+    /// the f32 buffer across the variant switch; contents are cleared.
+    pub fn set_kind(&mut self, kind: PayloadKind) {
+        match kind {
+            PayloadKind::Dense => {
+                self.make_dense();
+            }
+            PayloadKind::Sparse => {
+                self.make_sparse(0);
+            }
+        }
+    }
+
+    /// View the container as its dense buffer, converting (and clearing) a
+    /// sparse container first. An already-dense buffer keeps its contents,
+    /// so fillers that assign every element can skip the zero-fill.
+    pub fn ensure_dense(&mut self) -> &mut Vec<f32> {
+        if let OraclePayload::Sparse { val, .. } = self {
+            let mut v = std::mem::take(val);
+            v.clear();
+            *self = OraclePayload::Dense(v);
+        }
+        match self {
+            OraclePayload::Dense(s) => s,
+            OraclePayload::Sparse { .. } => unreachable!(),
+        }
+    }
+
+    /// Turn the container into an EMPTY dense buffer (reusing the sparse
+    /// value buffer if the variant switches) and return it for filling.
+    pub fn make_dense(&mut self) -> &mut Vec<f32> {
+        let s = self.ensure_dense();
+        s.clear();
+        s
+    }
+
+    /// Turn the container into an EMPTY sparse triple with logical
+    /// dimension `dim` (reusing the dense buffer as the value buffer if
+    /// the variant switches) and return `(idx, val)` for filling.
+    pub fn make_sparse(&mut self, dim: usize) -> (&mut Vec<u32>, &mut Vec<f32>) {
+        if let OraclePayload::Dense(s) = self {
+            let v = std::mem::take(s);
+            *self = OraclePayload::Sparse {
+                idx: Vec::new(),
+                val: v,
+                dim: 0,
+            };
+        }
+        match self {
+            OraclePayload::Sparse { idx, val, dim: d } => {
+                idx.clear();
+                val.clear();
+                *d = dim as u32;
+                (idx, val)
+            }
+            OraclePayload::Dense(_) => unreachable!(),
+        }
+    }
+
+    /// The payload as a dense slice, when it is stored dense.
+    pub fn as_dense(&self) -> Option<&[f32]> {
+        match self {
+            OraclePayload::Dense(s) => Some(s),
+            OraclePayload::Sparse { .. } => None,
+        }
+    }
+
+    /// Write the dense form into `out` (cleared + resized to `dim`). The
+    /// densified bits equal what the dense emission would have produced
+    /// (module-docs contract).
+    pub fn densify_into(&self, out: &mut Vec<f32>) {
+        out.clear();
+        match self {
+            OraclePayload::Dense(s) => out.extend_from_slice(s),
+            OraclePayload::Sparse { idx, val, dim } => {
+                out.resize(*dim as usize, 0.0);
+                for (&i, &v) in idx.iter().zip(val.iter()) {
+                    out[i as usize] = v;
+                }
+            }
+        }
+    }
+
+    /// Allocating [`OraclePayload::densify_into`].
+    pub fn to_dense_vec(&self) -> Vec<f32> {
+        let mut out = Vec::new();
+        self.densify_into(&mut out);
+        out
+    }
+
+    /// Iterate the payload as the logical `dim`-length dense sequence
+    /// without materializing it — the cursor consumers (fused SSVM apply,
+    /// QP gap, lock-free hogwild update) are built on this, and on a dense
+    /// container it yields exactly the slice's floats in order.
+    pub fn dense_iter(&self) -> PayloadDenseIter<'_> {
+        match self {
+            OraclePayload::Dense(s) => PayloadDenseIter::Dense(s.iter()),
+            OraclePayload::Sparse { idx, val, dim } => {
+                PayloadDenseIter::Sparse {
+                    idx,
+                    val,
+                    cursor: 0,
+                    pos: 0,
+                    dim: *dim,
+                }
+            }
+        }
+    }
+
+    /// Debug-check the sparse invariants (strictly ascending, in-bounds
+    /// `idx`, parallel `val`). No-op for dense.
+    pub fn debug_check_invariants(&self) {
+        if let OraclePayload::Sparse { idx, val, dim } = self {
+            debug_assert_eq!(idx.len(), val.len());
+            debug_assert!(idx.windows(2).all(|w| w[0] < w[1]));
+            debug_assert!(idx.last().map_or(true, |&i| i < *dim));
+        }
+    }
+}
+
+/// Iterator over the logical dense view of an [`OraclePayload`].
+pub enum PayloadDenseIter<'a> {
+    Dense(std::slice::Iter<'a, f32>),
+    Sparse {
+        idx: &'a [u32],
+        val: &'a [f32],
+        cursor: usize,
+        pos: u32,
+        dim: u32,
+    },
+}
+
+impl Iterator for PayloadDenseIter<'_> {
+    type Item = f32;
+
+    #[inline]
+    fn next(&mut self) -> Option<f32> {
+        match self {
+            PayloadDenseIter::Dense(it) => it.next().copied(),
+            PayloadDenseIter::Sparse {
+                idx,
+                val,
+                cursor,
+                pos,
+                dim,
+            } => {
+                if *pos >= *dim {
+                    return None;
+                }
+                let v = if *cursor < idx.len() && idx[*cursor] == *pos {
+                    let v = val[*cursor];
+                    *cursor += 1;
+                    v
+                } else {
+                    0.0
+                };
+                *pos += 1;
+                Some(v)
+            }
+        }
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        let n = match self {
+            PayloadDenseIter::Dense(it) => it.len(),
+            PayloadDenseIter::Sparse { pos, dim, .. } => {
+                (*dim - *pos) as usize
+            }
+        };
+        (n, Some(n))
+    }
+}
+
+impl ExactSizeIterator for PayloadDenseIter<'_> {}
 
 /// A linear-oracle solution for one block.
 ///
 /// `s` is the payload the server needs to apply the update: the oracle
 /// vertex itself for parameter-space problems (GFL: the s-column; simplex
 /// QP: the vertex), or the derived primal direction for structural SVM
-/// (`w_s = psi_i(y*)/(lambda n)`).
+/// (`w_s = psi_i(y*)/(lambda n)`) — dense or sparse per the module docs'
+/// representation contract.
 #[derive(Debug, Clone)]
 pub struct BlockOracle {
     /// Block index in [0, n).
     pub block: usize,
-    /// Solution payload (dimension = problem-specific block payload dim).
-    pub s: Vec<f32>,
+    /// Solution payload (logical dimension = problem-specific block
+    /// payload dim).
+    pub s: OraclePayload,
     /// Scalar payload (SSVM: l_s = L_i(y*)/n; unused elsewhere).
     pub ls: f64,
 }
 
 impl BlockOracle {
-    /// An empty oracle slot, ready to be filled by
+    /// An empty DENSE oracle slot, ready to be filled by
     /// [`Problem::oracle_into`]. Allocation happens lazily on first fill
     /// and is reused afterwards.
     pub fn empty() -> Self {
+        Self::empty_with(PayloadKind::Dense)
+    }
+
+    /// An empty oracle slot requesting the given payload representation.
+    pub fn empty_with(kind: PayloadKind) -> Self {
         Self {
             block: 0,
-            s: Vec::new(),
+            s: OraclePayload::empty(kind),
             ls: 0.0,
+        }
+    }
+
+    /// A filled dense oracle (test/bench convenience).
+    pub fn dense(block: usize, s: Vec<f32>, ls: f64) -> Self {
+        Self {
+            block,
+            s: OraclePayload::Dense(s),
+            ls,
         }
     }
 }
@@ -110,19 +485,31 @@ pub trait Problem: Send + Sync {
 
     fn init_server(&self) -> Self::ServerState;
 
+    /// The payload representation this problem's oracle naturally emits
+    /// (what `run.payload = auto` resolves to). Dense by default; problems
+    /// whose vertices are structurally sparse override this — see the
+    /// module docs' representation contract.
+    fn preferred_payload(&self) -> PayloadKind {
+        PayloadKind::Dense
+    }
+
     /// Solve the block linear subproblem (paper Eq. 3) at `param`.
+    /// Always returns a DENSE payload (the historical allocating API).
     fn oracle(&self, param: &[f32], block: usize) -> BlockOracle;
 
     /// Allocation-free oracle: solve the block subproblem into a
-    /// caller-owned [`BlockOracle`], reusing `out.s`'s buffer and the
+    /// caller-owned [`BlockOracle`], reusing `out.s`'s buffers and the
     /// caller-owned `scratch` for any intermediate state. Workers hold one
     /// (scratch, slot) pair and call this in their hot loop — batched
     /// workers reuse the same pair across every block of a snapshot — so a
     /// steady-state run performs no per-oracle allocation (§Perf).
     ///
-    /// The default delegates to [`Problem::oracle`]; implementations MUST
-    /// produce bit-identical output to `oracle` regardless of the scratch's
-    /// prior contents (property-tested in
+    /// The variant of the incoming `out.s` container is the caller's
+    /// representation request; implementations without an emitter for it
+    /// convert the container (module-docs contract). The default delegates
+    /// to [`Problem::oracle`] (dense); implementations MUST produce output
+    /// that DENSIFIES bit-identically to `oracle`, regardless of the
+    /// scratch's or container's prior contents (property-tested in
     /// `rust/tests/hot_path_equivalence.rs`).
     fn oracle_into(
         &self,

@@ -8,7 +8,10 @@
 //! linear oracle (vertex of the simplex) and the block Euclidean projection
 //! are both available.
 
-use super::{ApplyInfo, ApplyOptions, BlockOracle, Problem, ProjectableProblem};
+use super::{
+    ApplyInfo, ApplyOptions, BlockOracle, OraclePayload, PayloadKind, Problem,
+    ProjectableProblem,
+};
 use crate::util::la;
 use crate::util::rng::Pcg64;
 
@@ -207,6 +210,12 @@ impl Problem for SimplexQp {
 
     fn init_server(&self) -> Self::ServerState {}
 
+    fn preferred_payload(&self) -> PayloadKind {
+        // The simplex oracle is a 1-hot vertex: one (idx, val) pair versus
+        // an m-length dense vector.
+        PayloadKind::Sparse
+    }
+
     fn oracle(&self, param: &[f32], block: usize) -> BlockOracle {
         // Single implementation of the oracle arithmetic: delegate to the
         // scratch form (bit-identity between the two by construction).
@@ -235,9 +244,22 @@ impl Problem for SimplexQp {
         }
         out.block = block;
         out.ls = 0.0;
-        out.s.clear();
-        out.s.resize(self.m, 0.0);
-        out.s[arg] = 1.0;
+        // Emit the representation the caller's container requests (the
+        // densified sparse form is bit-identical to the dense emission: a
+        // single 1.0 over implicit zeros).
+        match out.s.kind() {
+            PayloadKind::Dense => {
+                // make_dense clears, so the resize zero-fills every slot.
+                let s = out.s.make_dense();
+                s.resize(self.m, 0.0);
+                s[arg] = 1.0;
+            }
+            PayloadKind::Sparse => {
+                let (idx, val) = out.s.make_sparse(self.m);
+                idx.push(arg as u32);
+                val.push(1.0);
+            }
+        }
     }
 
     fn block_gap(
@@ -248,9 +270,23 @@ impl Problem for SimplexQp {
     ) -> f64 {
         let g = self.block_gradient(param, o.block);
         let lo = o.block * self.m;
+        debug_assert_eq!(o.s.dim(), self.m);
         let mut gap = 0.0f64;
-        for j in 0..self.m {
-            gap += (param[lo + j] as f64 - o.s[j] as f64) * g[j];
+        // The sparse arm's implicit zeros yield the same f64 terms as the
+        // dense payload's stored zeros (x - 0.0 == x), so both
+        // representations accumulate identical bits; the dense arm keeps
+        // the plain indexed loop.
+        match &o.s {
+            OraclePayload::Dense(s) => {
+                for j in 0..self.m {
+                    gap += (param[lo + j] as f64 - s[j] as f64) * g[j];
+                }
+            }
+            OraclePayload::Sparse { .. } => {
+                for (j, sj) in o.s.dense_iter().enumerate() {
+                    gap += (param[lo + j] as f64 - sj as f64) * g[j];
+                }
+            }
         }
         gap
     }
@@ -271,8 +307,17 @@ impl Problem for SimplexQp {
             let mut dir = vec![0.0f32; self.dim()];
             for o in batch {
                 let lo = o.block * self.m;
-                for j in 0..self.m {
-                    dir[lo + j] = o.s[j] - param[lo + j];
+                match &o.s {
+                    OraclePayload::Dense(s) => {
+                        for j in 0..self.m {
+                            dir[lo + j] = s[j] - param[lo + j];
+                        }
+                    }
+                    OraclePayload::Sparse { .. } => {
+                        for (j, sj) in o.s.dense_iter().enumerate() {
+                            dir[lo + j] = sj - param[lo + j];
+                        }
+                    }
                 }
             }
             let quad = self.quad_form(&dir);
@@ -286,7 +331,14 @@ impl Problem for SimplexQp {
         };
         for o in batch {
             let lo = o.block * self.m;
-            la::lerp_into(gamma, &o.s, &mut param[lo..lo + self.m]);
+            debug_assert_eq!(o.s.dim(), self.m);
+            let blk = &mut param[lo..lo + self.m];
+            match &o.s {
+                OraclePayload::Dense(s) => la::lerp_into(gamma, s, blk),
+                OraclePayload::Sparse { idx, val, .. } => {
+                    la::lerp_into_sparse(gamma, idx, val, blk)
+                }
+            }
         }
         ApplyInfo { gamma, batch_gap }
     }
@@ -382,10 +434,31 @@ mod tests {
         for i in 0..qp.n {
             let o = qp.oracle(&x, i);
             let g = qp.block_gradient(&x, i);
-            let picked = o.s.iter().position(|&v| v == 1.0).unwrap();
+            let s = o.s.as_dense().expect("oracle() returns dense");
+            let picked = s.iter().position(|&v| v == 1.0).unwrap();
             let min = g.iter().cloned().fold(f64::INFINITY, f64::min);
             assert!((g[picked] - min).abs() < 1e-12);
-            assert_eq!(o.s.iter().filter(|&&v| v != 0.0).count(), 1);
+            assert_eq!(s.iter().filter(|&&v| v != 0.0).count(), 1);
+        }
+    }
+
+    #[test]
+    fn sparse_oracle_is_one_hot_and_densifies_identically() {
+        let qp = instance(0.6);
+        let x = qp.init_param();
+        let mut sc = QpScratch::default();
+        let mut slot = BlockOracle::empty_with(PayloadKind::Sparse);
+        for i in 0..qp.n {
+            qp.oracle_into(&x, i, &mut sc, &mut slot);
+            assert_eq!(slot.s.nnz(), 1, "1-hot vertex");
+            assert_eq!(slot.s.dim(), qp.m);
+            slot.s.debug_check_invariants();
+            let dense = qp.oracle(&x, i);
+            assert_eq!(
+                slot.s.to_dense_vec(),
+                dense.s.as_dense().unwrap(),
+                "block {i}"
+            );
         }
     }
 

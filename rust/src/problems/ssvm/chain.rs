@@ -6,7 +6,9 @@
 //! rust DP below or by the AOT-compiled `ssvm_chain` Pallas artifact via
 //! [`ChainDecoder`].
 
-use super::super::{ApplyInfo, ApplyOptions, BlockOracle, Problem};
+use super::super::{
+    ApplyInfo, ApplyOptions, BlockOracle, PayloadKind, Problem,
+};
 use super::{ssvm_apply, ssvm_block_gap, SsvmState};
 use crate::data::ocr_like::ChainDataset;
 use std::sync::Arc;
@@ -30,6 +32,15 @@ pub struct ViterbiScratch {
     ptr: Vec<u16>,
     /// Decoded label sequence (ell) — the solve's output.
     pub ys: Vec<u16>,
+    /// Sparse-payload accumulation buffer (dim, all-zero between calls):
+    /// the feature-map difference is accumulated here with exactly the
+    /// dense emitter's `+=` order, then the touched cells are gathered and
+    /// re-zeroed — so the sparse payload densifies bit-identically without
+    /// an O(dim) sweep per oracle.
+    pay: Vec<f32>,
+    /// Indices touched while accumulating `pay` (with duplicates until the
+    /// sort+dedup gather).
+    touched: Vec<u32>,
 }
 
 /// Pluggable loss-augmented decoder (XLA artifact path implements this).
@@ -229,6 +240,73 @@ impl ChainSsvm {
         mistakes as f64 / (ell as f64 * n as f64)
     }
 
+    /// Sparse form of [`ChainSsvm::payload_into`]: the support is the
+    /// emission features of mistaken positions plus the touched transition
+    /// counts. Values are accumulated in `pay` (a caller-owned dim-length
+    /// buffer, all-zero between calls — [`ViterbiScratch::pay`] at the
+    /// `oracle_into` site) with the dense emitter's exact `+=` order, so
+    /// the payload densifies bit-identically (explicit zeros from
+    /// cancelling transitions included), gathered in ascending index order
+    /// into `(idx, val)`, and the touched cells are re-zeroed for the next
+    /// call. Returns l_s.
+    pub fn payload_into_sparse(
+        &self,
+        i: usize,
+        ystar: &[u16],
+        pay: &mut Vec<f32>,
+        touched: &mut Vec<u32>,
+        idx: &mut Vec<u32>,
+        val: &mut Vec<f32>,
+    ) -> f64 {
+        let (k, d, ell, n) =
+            (self.data.k, self.data.d, self.data.ell, self.data.n);
+        let dim = self.dim();
+        let scale = (1.0 / (self.lam * n as f64)) as f32;
+        if pay.len() != dim {
+            pay.clear();
+            pay.resize(dim, 0.0);
+        }
+        touched.clear();
+        let ytrue = self.data.label_seq(i);
+        let mut mistakes = 0usize;
+        for t in 0..ell {
+            let x = self.data.feature(i, t);
+            let yt = ytrue[t] as usize;
+            let yst = ystar[t] as usize;
+            if yt != yst {
+                mistakes += 1;
+                let base_t = yt * d;
+                let base_s = yst * d;
+                for r in 0..d {
+                    pay[base_t + r] += scale * x[r];
+                    touched.push((base_t + r) as u32);
+                    pay[base_s + r] -= scale * x[r];
+                    touched.push((base_s + r) as u32);
+                }
+            }
+            if t > 0 {
+                let (pt, ps) = (ytrue[t - 1] as usize, ystar[t - 1] as usize);
+                if pt != ps || yt != yst {
+                    let off = k * d;
+                    pay[off + pt * k + yt] += scale;
+                    touched.push((off + pt * k + yt) as u32);
+                    pay[off + ps * k + yst] -= scale;
+                    touched.push((off + ps * k + yst) as u32);
+                }
+            }
+        }
+        touched.sort_unstable();
+        touched.dedup();
+        idx.clear();
+        val.clear();
+        for &c in touched.iter() {
+            idx.push(c);
+            val.push(pay[c as usize]);
+            pay[c as usize] = 0.0;
+        }
+        mistakes as f64 / (ell as f64 * n as f64)
+    }
+
     /// Average Hamming test error of plain (non-loss-augmented) decoding.
     pub fn hamming_error(&self, w: &[f32], indices: &[usize]) -> f64 {
         let mut wrong = 0usize;
@@ -290,14 +368,17 @@ impl Problem for ChainSsvm {
         SsvmState::new(self.data.n, self.dim())
     }
 
+    fn preferred_payload(&self) -> PayloadKind {
+        // The feature-map difference touches only the emission features of
+        // mistaken positions plus a few transition counts — tiny next to
+        // dim = K*d + K*K.
+        PayloadKind::Sparse
+    }
+
     fn oracle(&self, param: &[f32], block: usize) -> BlockOracle {
         let (ystar, _h) = self.decode(param, block, 1.0);
         let (ws, ls) = self.payload(block, &ystar);
-        BlockOracle {
-            block,
-            s: ws,
-            ls,
-        }
+        BlockOracle::dense(block, ws, ls)
     }
 
     fn oracle_into(
@@ -308,19 +389,37 @@ impl Problem for ChainSsvm {
         out: &mut BlockOracle,
     ) {
         // Both paths build the payload into the caller's pooled `out.s`
-        // buffer: the external-decoder (XLA artifact / fallback) path used
-        // to delegate to `oracle` and drop the pooled buffer on every
-        // call, re-allocating a dim-D payload each oracle.
+        // container, in whichever representation it requests: the
+        // external-decoder (XLA artifact / fallback) path used to delegate
+        // to `oracle` and drop the pooled buffer on every call,
+        // re-allocating a dim-D payload each oracle.
+        out.block = block;
         match &self.decoder {
             Some(dec) => {
+                // External decode lands in `sc.ys` too, so both arms feed
+                // one payload-build path below.
                 let (ystar, _h) = dec.decode(param, block, 1.0);
-                out.block = block;
-                out.ls = self.payload_into(block, &ystar, &mut out.s);
+                sc.ys.clear();
+                sc.ys.extend_from_slice(&ystar);
             }
             None => {
                 self.viterbi_into(param, block, 1.0, sc);
-                out.block = block;
-                out.ls = self.payload_into(block, &sc.ys, &mut out.s);
+            }
+        }
+        // Split the scratch so the decode output (ys) and the sparse
+        // accumulation buffers (pay/touched) borrow disjointly.
+        let ViterbiScratch {
+            ys, pay, touched, ..
+        } = sc;
+        match out.s.kind() {
+            PayloadKind::Dense => {
+                let s = out.s.ensure_dense();
+                out.ls = self.payload_into(block, ys, s);
+            }
+            PayloadKind::Sparse => {
+                let (idx, val) = out.s.make_sparse(self.dim());
+                out.ls =
+                    self.payload_into_sparse(block, ys, pay, touched, idx, val);
             }
         }
     }
@@ -440,6 +539,31 @@ mod tests {
         for i in 0..p.data.n {
             let (_, h) = p.viterbi(&w, i, 1.0);
             assert!(h >= -1e-9, "H_{i} = {h}");
+        }
+    }
+
+    #[test]
+    fn sparse_payload_densifies_bit_identically() {
+        let p = instance();
+        let mut rng = Pcg64::seeded(12);
+        let w: Vec<f32> = rng.gaussian_vec(p.dim());
+        let mut sc = ViterbiScratch::default();
+        let mut slot = BlockOracle::empty_with(PayloadKind::Sparse);
+        for i in 0..p.data.n {
+            p.oracle_into(&w, i, &mut sc, &mut slot);
+            slot.s.debug_check_invariants();
+            let dense = p.oracle(&w, i);
+            assert_eq!(slot.ls.to_bits(), dense.ls.to_bits(), "ls {i}");
+            let d = dense.s.as_dense().unwrap();
+            let ds = slot.s.to_dense_vec();
+            for (j, (a, b)) in ds.iter().zip(d.iter()).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "seq {i} elem {j}");
+            }
+            // The accumulation buffer must be back to all-zero, or the
+            // next oracle would leak values.
+            assert!(sc.pay.iter().all(|&v| v == 0.0), "pay not re-zeroed");
+            // The support is tiny relative to dim (that is the point).
+            assert!(slot.s.nnz() <= 2 * p.data.ell * (p.data.d + 1));
         }
     }
 

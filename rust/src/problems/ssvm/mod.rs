@@ -17,7 +17,7 @@
 pub mod chain;
 pub mod multiclass;
 
-use super::BlockOracle;
+use super::{BlockOracle, OraclePayload};
 use crate::util::la;
 
 /// Server-side per-block bookkeeping shared by both SSVM variants.
@@ -60,6 +60,11 @@ impl SsvmState {
 }
 
 /// `g_i = lambda <w, w_i - w_s> - l_i + l_s` at the current (w, state).
+///
+/// Accepts either payload representation. Monitoring callers feed it
+/// dense oracles (`Problem::oracle`); the sparse arm's gather dot is
+/// tolerance-equivalent, not bit-matched, to the pairwise dense `dot` —
+/// the bit-pinned batch gap lives in [`ssvm_apply`]'s fused traversal.
 pub fn ssvm_block_gap(
     lam: f64,
     state: &SsvmState,
@@ -67,7 +72,11 @@ pub fn ssvm_block_gap(
     o: &BlockOracle,
 ) -> f64 {
     let wi = state.wi(o.block);
-    lam * (la::dot(w, wi) - la::dot(w, &o.s)) - state.li[o.block] + o.ls
+    let w_dot_s = match &o.s {
+        OraclePayload::Dense(s) => la::dot(w, s),
+        OraclePayload::Sparse { idx, val, .. } => la::dot_sparse(idx, val, w),
+    };
+    lam * (la::dot(w, wi) - w_dot_s) - state.li[o.block] + o.ls
 }
 
 /// Apply a disjoint-block batch; returns (gamma_used, batch_gap).
@@ -78,6 +87,13 @@ pub fn ssvm_block_gap(
 /// same pass over the dim-length vectors, so the batch gap costs no second
 /// O(dim) sweep (the historical implementation rebuilt the dot product
 /// from the finished direction).
+///
+/// Payloads may be dense or sparse; the traversal streams a sparse payload
+/// through `dense_iter` (never materializing it), which yields exactly the
+/// dense payload's floats, so both representations accumulate bit-identical
+/// `dw`/`batch_gap` — and the per-block `w_i` convex update uses the sparse
+/// scale-then-scatter lerp, bit-identical to the dense `lerp_into` (see
+/// `util::simd`).
 pub fn ssvm_apply(
     lam: f64,
     state: &mut SsvmState,
@@ -97,17 +113,36 @@ pub fn ssvm_apply(
     // <w, Delta_w>, accumulated per oracle in the fused pass.
     let mut w_dot_dw = 0.0f64;
     for o in batch {
-        debug_assert_eq!(o.s.len(), dim);
+        debug_assert_eq!(o.s.dim(), dim);
         let wi = state.wi(o.block);
         let mut acc = 0.0f64;
-        for ((dwr, &wr), (sr, wir)) in dw
-            .iter_mut()
-            .zip(w.iter())
-            .zip(o.s.iter().zip(wi.iter()))
-        {
-            let d = sr - wir;
-            *dwr += d;
-            acc += wr as f64 * d as f64;
+        // Per-oracle match so the dense arm keeps the plain slice loop
+        // (no per-element iterator dispatch on the hot path); the sparse
+        // arm streams dense_iter, which yields exactly the dense
+        // payload's floats — both accumulate identical bits.
+        match &o.s {
+            OraclePayload::Dense(s) => {
+                for ((dwr, &wr), (sr, wir)) in dw
+                    .iter_mut()
+                    .zip(w.iter())
+                    .zip(s.iter().zip(wi.iter()))
+                {
+                    let d = sr - wir;
+                    *dwr += d;
+                    acc += wr as f64 * d as f64;
+                }
+            }
+            OraclePayload::Sparse { .. } => {
+                for ((dwr, &wr), (sr, wir)) in dw
+                    .iter_mut()
+                    .zip(w.iter())
+                    .zip(o.s.dense_iter().zip(wi.iter()))
+                {
+                    let d = sr - wir;
+                    *dwr += d;
+                    acc += wr as f64 * d as f64;
+                }
+            }
         }
         w_dot_dw += acc;
         dl += o.ls - state.li[o.block];
@@ -127,7 +162,12 @@ pub fn ssvm_apply(
         let li = state.li[o.block];
         state.li[o.block] = li + g as f64 * (o.ls - li);
         let wi = state.wi_mut(o.block);
-        la::lerp_into(g, &o.s, wi);
+        match &o.s {
+            OraclePayload::Dense(s) => la::lerp_into(g, s, wi),
+            OraclePayload::Sparse { idx, val, .. } => {
+                la::lerp_into_sparse(g, idx, val, wi)
+            }
+        }
     }
     state.l += g as f64 * dl;
     la::axpy(g, &dw, w);
@@ -145,7 +185,66 @@ mod tests {
     use super::*;
 
     fn mk_oracle(block: usize, s: Vec<f32>, ls: f64) -> BlockOracle {
-        BlockOracle { block, s, ls }
+        BlockOracle::dense(block, s, ls)
+    }
+
+    /// Sparse twin of a dense payload: explicit support of the nonzeros.
+    fn sparsify(o: &BlockOracle) -> BlockOracle {
+        let s = o.s.as_dense().unwrap();
+        let mut idx = Vec::new();
+        let mut val = Vec::new();
+        for (j, &v) in s.iter().enumerate() {
+            if v != 0.0 {
+                idx.push(j as u32);
+                val.push(v);
+            }
+        }
+        BlockOracle {
+            block: o.block,
+            s: OraclePayload::Sparse {
+                idx,
+                val,
+                dim: s.len() as u32,
+            },
+            ls: o.ls,
+        }
+    }
+
+    #[test]
+    fn sparse_batch_applies_bit_identically_to_dense() {
+        let (n, dim, lam) = (4, 7, 0.5);
+        let batches = vec![
+            vec![mk_oracle(0, vec![1.0, 0.0, 0.0, -2.0, 0.0, 0.5, 0.0], 0.1)],
+            vec![
+                mk_oracle(1, vec![0.0; 7], 0.0), // empty support
+                mk_oracle(2, vec![0.5, -0.5, 0.0, 0.0, 1.5, 0.0, 0.25], 0.05),
+            ],
+            vec![mk_oracle(0, vec![-1.0, 0.0, 1.0, 0.0, 0.0, 0.0, 2.0], 0.3)],
+        ];
+        for line_search in [false, true] {
+            let mut st_d = SsvmState::new(n, dim);
+            let mut w_d = vec![0.0f32; dim];
+            let mut st_s = SsvmState::new(n, dim);
+            let mut w_s = vec![0.0f32; dim];
+            for (k, b) in batches.iter().enumerate() {
+                // k = 0 exercises the clamped gamma = 1 step.
+                let gamma = 2.0 / (k as f32 + 2.0);
+                let sb: Vec<BlockOracle> = b.iter().map(sparsify).collect();
+                let (gd, gapd) =
+                    ssvm_apply(lam, &mut st_d, &mut w_d, b, gamma, line_search);
+                let (gs, gaps) =
+                    ssvm_apply(lam, &mut st_s, &mut w_s, &sb, gamma, line_search);
+                assert_eq!(gd.to_bits(), gs.to_bits(), "gamma k={k}");
+                assert_eq!(gapd.to_bits(), gaps.to_bits(), "gap k={k}");
+            }
+            for (a, b) in w_d.iter().zip(&w_s) {
+                assert_eq!(a.to_bits(), b.to_bits(), "w");
+            }
+            for (a, b) in st_d.wi.iter().zip(&st_s.wi) {
+                assert_eq!(a.to_bits(), b.to_bits(), "wi");
+            }
+            assert_eq!(st_d.l.to_bits(), st_s.l.to_bits());
+        }
     }
 
     #[test]

@@ -4,7 +4,9 @@
 //! block oracle is loss-augmented argmax over K classes with 0/1 loss:
 //! `y* = argmax_j [ 1{j != y_i} + <w_j - w_{y_i}, x_i> ]`.
 
-use super::super::{ApplyInfo, ApplyOptions, BlockOracle, Problem};
+use super::super::{
+    ApplyInfo, ApplyOptions, BlockOracle, PayloadKind, Problem,
+};
 use super::{ssvm_apply, ssvm_block_gap, SsvmState};
 use crate::data::mixture::MulticlassDataset;
 use std::sync::Arc;
@@ -99,6 +101,51 @@ impl MulticlassSsvm {
         }
     }
 
+    /// Sparse form of [`MulticlassSsvm::payload_into`]: the support is the
+    /// true and decoded class rows (empty when `y* == y_i`), emitted in
+    /// ascending index order with exactly the dense accumulation's values
+    /// (`0.0 ± scale*x[r]`), so the payload densifies bit-identically.
+    /// Returns l_s.
+    pub fn payload_into_sparse(
+        &self,
+        i: usize,
+        ystar: usize,
+        idx: &mut Vec<u32>,
+        val: &mut Vec<f32>,
+    ) -> f64 {
+        let (d, n) = (self.data.d, self.data.n);
+        idx.clear();
+        val.clear();
+        let yt = self.data.label(i);
+        if ystar == yt {
+            return 0.0;
+        }
+        let scale = (1.0 / (self.lam * n as f64)) as f32;
+        let x = self.data.feature(i);
+        let (lo, hi, lo_is_true) = if yt < ystar {
+            (yt, ystar, true)
+        } else {
+            (ystar, yt, false)
+        };
+        for r in 0..d {
+            idx.push((lo * d + r) as u32);
+            val.push(if lo_is_true {
+                0.0 + scale * x[r]
+            } else {
+                0.0 - scale * x[r]
+            });
+        }
+        for r in 0..d {
+            idx.push((hi * d + r) as u32);
+            val.push(if lo_is_true {
+                0.0 - scale * x[r]
+            } else {
+                0.0 + scale * x[r]
+            });
+        }
+        1.0 / n as f64
+    }
+
     /// 0/1 test error of plain argmax prediction.
     pub fn zero_one_error(&self, w: &[f32], indices: &[usize]) -> f64 {
         let mut wrong = 0usize;
@@ -145,14 +192,16 @@ impl Problem for MulticlassSsvm {
         SsvmState::new(self.data.n, self.dim())
     }
 
+    fn preferred_payload(&self) -> PayloadKind {
+        // One class row of ±psi_i(y*)/(lambda n): 2d entries (or none)
+        // versus the K*d dense vector.
+        PayloadKind::Sparse
+    }
+
     fn oracle(&self, param: &[f32], block: usize) -> BlockOracle {
         let (ystar, _h) = self.decode(param, block, 1.0);
         let (ws, ls) = self.payload(block, ystar);
-        BlockOracle {
-            block,
-            s: ws,
-            ls,
-        }
+        BlockOracle::dense(block, ws, ls)
     }
 
     fn oracle_into(
@@ -163,12 +212,20 @@ impl Problem for MulticlassSsvm {
         out: &mut BlockOracle,
     ) {
         // Decode through whichever backend is active, but always build the
-        // payload into the caller's pooled `out.s` buffer — the external-
-        // decoder path used to delegate to `oracle` and re-allocate a
-        // dim-D payload on every call.
+        // payload into the caller's pooled `out.s` container (in whichever
+        // representation it requests) — the external-decoder path used to
+        // delegate to `oracle` and re-allocate a dim-D payload per call.
         let (ystar, _h) = self.decode(param, block, 1.0);
         out.block = block;
-        out.ls = self.payload_into(block, ystar, &mut out.s);
+        out.ls = match out.s.kind() {
+            PayloadKind::Dense => {
+                self.payload_into(block, ystar, out.s.ensure_dense())
+            }
+            PayloadKind::Sparse => {
+                let (idx, val) = out.s.make_sparse(self.dim());
+                self.payload_into_sparse(block, ystar, idx, val)
+            }
+        };
     }
 
     fn block_gap(
@@ -264,6 +321,32 @@ mod tests {
             "{norm_sq} vs {expected}"
         );
         assert!((ls - 1.0 / p.data.n as f64).abs() < 1e-15);
+    }
+
+    #[test]
+    fn sparse_payload_densifies_bit_identically() {
+        let p = instance();
+        let mut rng = Pcg64::seeded(9);
+        let w: Vec<f32> = rng.gaussian_vec(p.dim());
+        let mut slot = BlockOracle::empty_with(PayloadKind::Sparse);
+        for i in 0..p.data.n {
+            p.oracle_into(&w, i, &mut (), &mut slot);
+            slot.s.debug_check_invariants();
+            let dense = p.oracle(&w, i);
+            assert_eq!(slot.ls.to_bits(), dense.ls.to_bits(), "ls {i}");
+            let d = dense.s.as_dense().unwrap();
+            let ds = slot.s.to_dense_vec();
+            for (j, (a, b)) in ds.iter().zip(d.iter()).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "i={i} j={j}");
+            }
+            assert!(slot.s.nnz() == 0 || slot.s.nnz() == 2 * p.data.d);
+        }
+        // Empty-support arm (y* == y_i), driven deterministically: the
+        // emitter must clear a dirty container and return ls = 0.
+        let (mut idx, mut val) = (vec![7u32], vec![3.0f32]);
+        let ls = p.payload_into_sparse(4, p.data.label(4), &mut idx, &mut val);
+        assert_eq!(ls, 0.0);
+        assert!(idx.is_empty() && val.is_empty(), "stale support kept");
     }
 
     #[test]

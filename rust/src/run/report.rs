@@ -73,8 +73,11 @@ impl Report {
                 collisions: 0,
                 dropped: r.dropped,
                 iterations: r.iterations,
-                // Sequential solvers read the parameter in place.
+                // Sequential solvers read the parameter in place and ship
+                // nothing over a channel.
                 snapshot_reads: 0,
+                payload_nnz: 0,
+                payload_bytes: 0,
             },
             elapsed_s: r.elapsed_s,
             secs_per_pass: if passes > 0.0 {

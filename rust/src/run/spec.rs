@@ -15,6 +15,7 @@
 
 use crate::coordinator::shared::SnapshotMode;
 use crate::coordinator::RunConfig;
+use crate::problems::PayloadMode;
 use crate::sim::delay::DelayModel;
 use crate::sim::straggler::StragglerModel;
 use crate::solver::delayed::DelayOptions;
@@ -363,6 +364,13 @@ pub struct RunSpec {
     /// (raise tau to at least `batch * workers` to realize the full
     /// fan-out).
     pub batch: usize,
+    /// Oracle payload representation (`run.payload = auto|dense|sparse`):
+    /// what workers request from `oracle_into`. `auto` (the default)
+    /// resolves to each problem's natural representation; every
+    /// combination is pinned bit-identical to `dense`, so this is purely a
+    /// bytes/bandwidth knob — see the payload representation contract in
+    /// [`crate::problems`]. Valid on every engine.
+    pub payload: PayloadMode,
     /// Exact coordinate line search instead of the schedule. Not defined
     /// for `pbcd` (1/L_i steps) or `lockfree` (fixed schedule); `validate`
     /// rejects it there rather than silently ignoring it.
@@ -390,6 +398,7 @@ impl RunSpec {
             engine,
             tau: 1,
             batch: 1,
+            payload: PayloadMode::Auto,
             line_search: false,
             weighted_averaging: false,
             sample_every: 64,
@@ -407,6 +416,12 @@ impl RunSpec {
     /// Worker fan-out batch (threaded engines only; see the field docs).
     pub fn batch(mut self, batch: usize) -> Self {
         self.batch = batch;
+        self
+    }
+
+    /// Oracle payload representation (see the field docs).
+    pub fn payload(mut self, mode: PayloadMode) -> Self {
+        self.payload = mode;
         self
     }
 
@@ -534,13 +549,20 @@ impl RunSpec {
     /// knob; the CLI's convenience flags lower to the same keys.
     ///
     /// Recognized keys (all under `run.`): `mode`, `tau`, `batch`,
-    /// `workers`, `epochs`/`max_epochs`, `max_secs`, `eps_gap`,
+    /// `payload`, `workers`, `epochs`/`max_epochs`, `max_secs`, `eps_gap`,
     /// `eps_primal`, `f_star`, `line_search`, `weighted_averaging`,
     /// `sample_every`, `exact_gap`, `seed`, `straggler`, `snapshot_mode`,
     /// `queue_factor`, `staleness_rule`, `collision_overwrite`,
     /// `work_multiplier`, `delay`, `delay_history`, `drop_rule`.
     pub fn from_config(cfg: &Config) -> Result<Self> {
         let mode = cfg.get_or("run.mode", "seq");
+        let payload_text = cfg.get_or("run.payload", "auto");
+        let payload = PayloadMode::parse(&payload_text).ok_or_else(|| {
+            anyhow!(
+                "unknown run.payload {payload_text:?} \
+                 (expected auto | dense | sparse)"
+            )
+        })?;
         let workers = cfg.get_usize("run.workers", 2);
         let straggler =
             StragglerSpec::parse(&cfg.get_or("run.straggler", "none"))?;
@@ -650,6 +672,7 @@ impl RunSpec {
             engine,
             tau: cfg.get_usize("run.tau", 1),
             batch: cfg.get_usize("run.batch", 1),
+            payload,
             line_search: cfg.get_bool("run.line_search", false),
             weighted_averaging: cfg.get_bool("run.weighted_averaging", false),
             sample_every: cfg.get_usize("run.sample_every", 64),
@@ -667,6 +690,7 @@ impl RunSpec {
     pub fn solve_options(&self) -> SolveOptions {
         SolveOptions {
             tau: self.tau,
+            payload: self.payload,
             line_search: self.line_search,
             weighted_averaging: self.weighted_averaging,
             sample_every: self.sample_every,
@@ -710,6 +734,7 @@ impl RunSpec {
                 workers: *workers,
                 tau: self.tau,
                 batch: self.batch,
+                payload: self.payload,
                 line_search: self.line_search,
                 staleness_rule: *staleness_rule,
                 straggler: straggler.resolve(*workers)?,
@@ -731,6 +756,7 @@ impl RunSpec {
                 workers: *workers,
                 tau: self.tau,
                 batch: self.batch,
+                payload: self.payload,
                 line_search: self.line_search,
                 straggler: straggler.resolve(*workers)?,
                 sample_every: self.sample_every,
@@ -744,6 +770,7 @@ impl RunSpec {
                 workers: *workers,
                 tau: 1,
                 batch: self.batch,
+                payload: self.payload,
                 straggler: StragglerModel::none(*workers),
                 sample_every: self.sample_every,
                 exact_gap: self.exact_gap,
@@ -957,6 +984,51 @@ mod tests {
                 .with_delay_history(4096)
         );
         assert!(spec.delay_options().unwrap().enforce_drop_rule);
+    }
+
+    #[test]
+    fn payload_mode_parses_and_lowers_everywhere() {
+        for (text, mode) in [
+            ("auto", PayloadMode::Auto),
+            ("dense", PayloadMode::Dense),
+            ("sparse", PayloadMode::Sparse),
+        ] {
+            let cfg = Config::parse(&format!(
+                "[run]\nmode = async\nworkers = 2\npayload = {text}\n"
+            ))
+            .unwrap();
+            let spec = RunSpec::from_config(&cfg).unwrap();
+            assert_eq!(spec.payload, mode, "{text}");
+            assert_eq!(spec.run_config().unwrap().payload, mode, "{text}");
+            assert_eq!(spec.solve_options().payload, mode, "{text}");
+        }
+        // The knob is engine-agnostic: accepted on sequential modes too.
+        for mode in ["seq", "batch", "delayed", "pbcd", "sync", "lockfree"] {
+            let cfg = Config::parse(&format!(
+                "[run]\nmode = {mode}\npayload = sparse\n{}",
+                if mode == "delayed" { "delay = none\n" } else { "" }
+            ))
+            .unwrap();
+            let spec = RunSpec::from_config(&cfg).unwrap();
+            assert_eq!(spec.payload, PayloadMode::Sparse, "{mode}");
+            assert!(spec.validate().is_ok(), "{mode}");
+        }
+        // Default stays auto (the problem's natural representation).
+        let spec =
+            RunSpec::from_config(&Config::parse("").unwrap()).unwrap();
+        assert_eq!(spec.payload, PayloadMode::Auto);
+    }
+
+    #[test]
+    fn from_config_rejects_invalid_payload_mode() {
+        for bad in ["bogus", "Sparse", "dense,sparse", "csr"] {
+            let cfg =
+                Config::parse(&format!("[run]\nmode = seq\npayload = {bad}\n"))
+                    .unwrap();
+            let err = RunSpec::from_config(&cfg).unwrap_err().to_string();
+            assert!(err.contains("run.payload"), "{bad}: {err}");
+            assert!(err.contains("auto | dense | sparse"), "{bad}: {err}");
+        }
     }
 
     #[test]

@@ -22,11 +22,13 @@ pub fn solve_observed<P: Problem>(
     let mut state = problem.init_server();
     let mut mon = Monitor::new(problem, opts, obs);
 
-    // One persistent oracle slot per block plus the caller-owned oracle
-    // scratch, refilled in place (§Perf).
+    // One persistent oracle slot per block (in the `run.payload`-requested
+    // representation) plus the caller-owned oracle scratch, refilled in
+    // place (§Perf).
+    let pkind = opts.payload.resolve(problem.preferred_payload());
     let mut oscratch = OracleScratch::<P>::default();
     let mut batch: Vec<BlockOracle> =
-        (0..n).map(|_| BlockOracle::empty()).collect();
+        (0..n).map(|_| BlockOracle::empty_with(pkind)).collect();
 
     let mut oracle_calls: u64 = 0;
     let mut k: u64 = 0;

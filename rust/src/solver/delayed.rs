@@ -60,12 +60,13 @@ pub fn solve_observed<P: Problem>(
     hist.push(0, &param);
 
     // Persistent scratch: index buffer, caller-owned oracle scratch, and
-    // tau oracle slots; accepted updates fill slots[..used] in place each
-    // iteration (§Perf).
+    // tau oracle slots (in the `run.payload`-requested representation);
+    // accepted updates fill slots[..used] in place each iteration (§Perf).
+    let pkind = opts.payload.resolve(problem.preferred_payload());
     let mut blocks: Vec<usize> = Vec::new();
     let mut oscratch = OracleScratch::<P>::default();
     let mut slots: Vec<BlockOracle> =
-        (0..tau).map(|_| BlockOracle::empty()).collect();
+        (0..tau).map(|_| BlockOracle::empty_with(pkind)).collect();
 
     let mut oracle_calls: u64 = 0;
     let mut dropped: u64 = 0;

@@ -29,12 +29,14 @@ pub fn solve_observed<P: Problem>(
     let mut mon = Monitor::new(problem, opts, obs);
 
     // Persistent per-iteration scratch: block indices, the caller-owned
-    // oracle scratch, and one oracle slot per batch position, refilled in
-    // place (§Perf: no allocation after the first iteration).
+    // oracle scratch, and one oracle slot per batch position (in the
+    // `run.payload`-requested representation), refilled in place (§Perf:
+    // no allocation after the first iteration).
+    let pkind = opts.payload.resolve(problem.preferred_payload());
     let mut blocks: Vec<usize> = Vec::new();
     let mut oscratch = OracleScratch::<P>::default();
     let mut batch: Vec<BlockOracle> =
-        (0..tau).map(|_| BlockOracle::empty()).collect();
+        (0..tau).map(|_| BlockOracle::empty_with(pkind)).collect();
 
     let mut oracle_calls: u64 = 0;
     let mut k: u64 = 0;

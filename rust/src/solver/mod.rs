@@ -99,6 +99,11 @@ impl StopCond {
 pub struct SolveOptions {
     /// Minibatch size tau.
     pub tau: usize,
+    /// Oracle payload representation requested from `oracle_into`
+    /// (`run.payload`); `Auto` resolves to the problem's natural
+    /// representation and is pinned bit-identical to `Dense` — see the
+    /// payload representation contract in [`crate::problems`].
+    pub payload: crate::problems::PayloadMode,
     /// Exact coordinate line search instead of the schedule.
     pub line_search: bool,
     /// Weighted iterate averaging x-bar_k (rho_k prop. to k), as used for
@@ -117,6 +122,7 @@ impl Default for SolveOptions {
     fn default() -> Self {
         Self {
             tau: 1,
+            payload: crate::problems::PayloadMode::Auto,
             line_search: false,
             weighted_averaging: false,
             sample_every: 64,

@@ -46,6 +46,26 @@ pub fn scale(a: f32, x: &mut [f32]) {
     simd::scale(a, x)
 }
 
+/// Scatter axpy over a sparse `(idx, val)` support: y[idx[k]] += a val[k].
+#[inline]
+pub fn axpy_sparse(a: f32, idx: &[u32], val: &[f32], y: &mut [f32]) {
+    simd::axpy_sparse(a, idx, val, y)
+}
+
+/// Sparse convex-combination update y = (1-a) y + a x_sparse, bit-identical
+/// to [`lerp_into`] on the densified x (scale-then-scatter-axpy; see
+/// `util::simd` for the contraction contract).
+#[inline]
+pub fn lerp_into_sparse(a: f32, idx: &[u32], val: &[f32], y: &mut [f32]) {
+    simd::lerp_into_sparse(a, idx, val, y)
+}
+
+/// <x_sparse, y> accumulated sequentially in f64 (monitoring-grade).
+#[inline]
+pub fn dot_sparse(idx: &[u32], val: &[f32], y: &[f32]) -> f64 {
+    simd::dot_sparse(idx, val, y)
+}
+
 /// Euclidean projection of `x` onto the l2 ball of radius `r` (in place).
 pub fn project_l2_ball(r: f64, x: &mut [f32]) {
     let n = norm2(x);

@@ -88,6 +88,17 @@ pub struct Counters {
     /// fan-out exists to push snapshot_reads / oracle_calls well below 1;
     /// the `hot_paths` bench reports that ratio at batch 1/4/16.
     pub snapshot_reads: AtomicU64,
+    /// Sum of explicitly stored payload values across every oracle shipped
+    /// worker -> server (`OraclePayload::nnz`): dense payloads count the
+    /// full dimension, sparse ones their support. `payload_nnz /
+    /// oracle payload count` is the average shipped density.
+    pub payload_nnz: AtomicU64,
+    /// Sum of payload wire bytes across every oracle shipped
+    /// (`OraclePayload::wire_bytes`). `payload_bytes / updates_applied` is
+    /// the `hot_paths` bench's bytes-per-update row — the
+    /// communication-efficiency axis the sparse payload pipeline exists to
+    /// shrink.
+    pub payload_bytes: AtomicU64,
 }
 
 impl Counters {
@@ -103,6 +114,8 @@ impl Counters {
             dropped: self.dropped.load(Ordering::Relaxed),
             iterations: self.iterations.load(Ordering::Relaxed),
             snapshot_reads: self.snapshot_reads.load(Ordering::Relaxed),
+            payload_nnz: self.payload_nnz.load(Ordering::Relaxed),
+            payload_bytes: self.payload_bytes.load(Ordering::Relaxed),
         }
     }
 
@@ -126,6 +139,8 @@ pub struct CounterSnapshot {
     pub dropped: u64,
     pub iterations: u64,
     pub snapshot_reads: u64,
+    pub payload_nnz: u64,
+    pub payload_bytes: u64,
 }
 
 /// Simple wall-clock stopwatch.

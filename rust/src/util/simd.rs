@@ -18,8 +18,18 @@
 //! 8 f64 partials, so `dot`/`norm2_sq` are not bit-identical to the scalar
 //! reference — they are at least as accurate (pairwise summation has lower
 //! worst-case error) and the property tests pin them within ULP-scale
-//! tolerance. Element-wise kernels (`axpy`, `lerp_into`, `scale`) differ
-//! from scalar only by FMA contraction on the AVX2 path.
+//! tolerance. `axpy` differs from scalar only by FMA contraction on the
+//! AVX2 path; `lerp_into` and `scale` are deliberately UNFUSED on every
+//! path, so they are bit-identical across dispatch AND bit-identical to
+//! the sparse scale-then-scatter-axpy form ([`lerp_into_sparse`]) on the
+//! nonzero support — the invariant the sparse-payload pipeline's
+//! dense-vs-sparse equivalence tests pin.
+//!
+//! Sparse kernels ([`axpy_sparse`], [`lerp_into_sparse`], [`dot_sparse`])
+//! operate on a strictly-ascending `(idx, val)` support over an implicit-
+//! zero vector. Their dispatching entry points currently route to the
+//! scalar forms (scatter/gather SIMD can slot in behind them later); the
+//! `*_scalar` references are the canonical semantics either way.
 //!
 //! Perf numbers for every kernel are tracked in EXPERIMENTS.md §Perf via
 //! `benches/hot_paths.rs` -> `BENCH_hotpaths.json`.
@@ -113,6 +123,88 @@ pub fn scale(a: f32, x: &mut [f32]) {
         return;
     }
     scale_chunked(a, x)
+}
+
+// ---------------------------------------------------------------------------
+// Sparse kernels: strictly-ascending (idx, val) support, implicit zeros
+// ---------------------------------------------------------------------------
+
+/// Scatter axpy: `y[idx[k]] += a * val[k]`.
+///
+/// `idx` must be strictly ascending and in bounds. Unfused (`y + round(a*v)`)
+/// on every path, matching the scalar `axpy` reference — and therefore the
+/// on-support arithmetic of the unfused dense [`lerp_into`] when composed
+/// by [`lerp_into_sparse`].
+#[inline]
+pub fn axpy_sparse(a: f32, idx: &[u32], val: &[f32], y: &mut [f32]) {
+    axpy_sparse_scalar(a, idx, val, y)
+}
+
+/// Reference scatter axpy (the canonical semantics).
+pub fn axpy_sparse_scalar(a: f32, idx: &[u32], val: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(idx.len(), val.len());
+    for (&i, &v) in idx.iter().zip(val.iter()) {
+        y[i as usize] += a * v;
+    }
+}
+
+/// Sparse convex-combination update: `y = (1 - a) y + a x` for a sparse
+/// `x`, realized as scale-by-`1-a`-then-scatter-axpy.
+///
+/// Bit-identical to the dense [`lerp_into`] applied to the densified `x`
+/// for `a` in [0, 1] (the FW step range): off the support both compute
+/// `round(b*y)` (dense adds an exact `+0.0`), on the support both compute
+/// `round(round(b*y) + round(a*v))` — which is why the dense kernel is
+/// deliberately unfused. At `a == 1` (`b == 0`, the clamped early-schedule
+/// step) the off-support elements are written as exact `+0.0` to match the
+/// dense `±0 + 0` sum, where plain scaling would leave `-0.0` for negative
+/// `y`. Negative-zero / negative-underflow *inputs* are out of scope (no
+/// problem emits them).
+#[inline]
+pub fn lerp_into_sparse(a: f32, idx: &[u32], val: &[f32], y: &mut [f32]) {
+    let b = 1.0 - a;
+    if b == 0.0 {
+        y.fill(0.0);
+    } else {
+        scale(b, y);
+    }
+    axpy_sparse(a, idx, val, y);
+}
+
+/// Reference sparse lerp (scalar scale + scalar scatter).
+pub fn lerp_into_sparse_scalar(
+    a: f32,
+    idx: &[u32],
+    val: &[f32],
+    y: &mut [f32],
+) {
+    let b = 1.0 - a;
+    if b == 0.0 {
+        y.fill(0.0);
+    } else {
+        scale_scalar(b, y);
+    }
+    axpy_sparse_scalar(a, idx, val, y);
+}
+
+/// Gather dot: `sum_k val[k] * y[idx[k]]` accumulated sequentially in f64.
+///
+/// Monitoring-grade: NOT bit-matched to the pairwise dense [`dot`] on the
+/// densified vector (different accumulation tree); within summation-error
+/// tolerance of it, pinned by the property tests.
+#[inline]
+pub fn dot_sparse(idx: &[u32], val: &[f32], y: &[f32]) -> f64 {
+    dot_sparse_scalar(idx, val, y)
+}
+
+/// Reference gather dot.
+pub fn dot_sparse_scalar(idx: &[u32], val: &[f32], y: &[f32]) -> f64 {
+    debug_assert_eq!(idx.len(), val.len());
+    let mut acc = 0.0f64;
+    for (&i, &v) in idx.iter().zip(val.iter()) {
+        acc += v as f64 * y[i as usize] as f64;
+    }
+    acc
 }
 
 // ---------------------------------------------------------------------------
@@ -293,11 +385,16 @@ mod avx2 {
         while i + LANES <= n {
             let vx = _mm256_loadu_ps(x.as_ptr().add(i));
             let vy = _mm256_loadu_ps(y.as_ptr().add(i));
-            // b*y + a*x, with the a*x product fused into the add.
+            // round(b*y) + round(a*x), deliberately UNFUSED: every lerp
+            // path (this one, the chunked fallback, the scalar reference,
+            // and the sparse scale-then-scatter form) then computes the
+            // exact same two-rounding expression, which is what pins the
+            // dense-vs-sparse payload equivalence bit-for-bit.
             let ax = _mm256_mul_ps(va, vx);
+            let by = _mm256_mul_ps(vb, vy);
             _mm256_storeu_ps(
                 y.as_mut_ptr().add(i),
-                _mm256_fmadd_ps(vb, vy, ax),
+                _mm256_add_ps(by, ax),
             );
             i += LANES;
         }
@@ -432,10 +529,12 @@ mod tests {
             let mut lb = y0.clone();
             lerp_into(0.25, &x, &mut la);
             lerp_into_scalar(0.25, &x, &mut lb);
-            for (a, b) in la.iter().zip(&lb) {
-                assert!(
-                    ((a - b) as f64).abs() <= 1e-6 * (1.0 + (*b as f64).abs()),
-                    "lerp n={n}"
+            // lerp is unfused on every path, so dispatch == scalar exactly.
+            for (j, (a, b)) in la.iter().zip(&lb).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "lerp n={n} j={j}: {a} vs {b}"
                 );
             }
 
@@ -444,6 +543,111 @@ mod tests {
             scale(-1.5, &mut sa);
             scale_scalar(-1.5, &mut sb);
             assert_eq!(sa, sb, "scale is exact (single multiply) n={n}");
+        }
+    }
+
+    /// Random strictly-ascending support of ~density over [0, n).
+    fn random_support(
+        rng: &mut Pcg64,
+        n: usize,
+        density: f64,
+    ) -> (Vec<u32>, Vec<f32>) {
+        let mut idx = Vec::new();
+        let mut val = Vec::new();
+        for i in 0..n {
+            if (rng.uniform()) < density {
+                idx.push(i as u32);
+                // Gaussian draws are never exactly ±0.
+                val.push(rng.gaussian() as f32);
+            }
+        }
+        (idx, val)
+    }
+
+    fn densify(idx: &[u32], val: &[f32], n: usize) -> Vec<f32> {
+        let mut x = vec![0.0f32; n];
+        for (&i, &v) in idx.iter().zip(val.iter()) {
+            x[i as usize] = v;
+        }
+        x
+    }
+
+    #[test]
+    fn lerp_sparse_bit_identical_to_dense_lerp() {
+        let mut rng = Pcg64::seeded(21);
+        for n in [0usize, 1, 5, 8, 9, 33, 100, 1000] {
+            for density in [0.0, 0.05, 0.5, 1.0] {
+                let (idx, val) = random_support(&mut rng, n, density);
+                let x = densify(&idx, &val, n);
+                let y0 = rng.gaussian_vec(n);
+                // Include both clamp endpoints of the FW step range.
+                for a in [0.0f32, 0.12, 0.5, 0.999, 1.0] {
+                    let mut yd = y0.clone();
+                    let mut ys = y0.clone();
+                    lerp_into(a, &x, &mut yd);
+                    lerp_into_sparse(a, &idx, &val, &mut ys);
+                    for (j, (d, s)) in yd.iter().zip(&ys).enumerate() {
+                        assert_eq!(
+                            d.to_bits(),
+                            s.to_bits(),
+                            "n={n} a={a} j={j}: dense {d} vs sparse {s}"
+                        );
+                    }
+                    let mut yr = y0.clone();
+                    lerp_into_sparse_scalar(a, &idx, &val, &mut yr);
+                    assert_eq!(ys, yr, "scalar sparse ref n={n} a={a}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lerp_sparse_gamma_one_matches_dense_on_negative_iterates() {
+        // The b == 0 branch: dense lerp leaves +0.0 off the support even
+        // for negative y; plain scaling would leave -0.0.
+        let idx = [2u32, 5];
+        let val = [0.7f32, -1.3];
+        let x = densify(&idx, &val, 8);
+        let y0: Vec<f32> = (0..8).map(|i| -(i as f32) - 0.5).collect();
+        let mut yd = y0.clone();
+        let mut ys = y0.clone();
+        lerp_into(1.0, &x, &mut yd);
+        lerp_into_sparse(1.0, &idx, &val, &mut ys);
+        for (j, (d, s)) in yd.iter().zip(&ys).enumerate() {
+            assert_eq!(d.to_bits(), s.to_bits(), "j={j}: {d} vs {s}");
+        }
+        assert_eq!(ys[0].to_bits(), 0.0f32.to_bits(), "+0.0 off support");
+    }
+
+    #[test]
+    fn axpy_sparse_matches_scalar_axpy_on_support() {
+        let mut rng = Pcg64::seeded(22);
+        for n in [0usize, 7, 64, 500] {
+            let (idx, val) = random_support(&mut rng, n, 0.2);
+            let x = densify(&idx, &val, n);
+            let y0 = rng.gaussian_vec(n);
+            let mut ya = y0.clone();
+            let mut yb = y0.clone();
+            axpy_sparse(0.37, &idx, &val, &mut ya);
+            axpy_scalar(0.37, &x, &mut yb);
+            assert_eq!(ya, yb, "n={n}");
+        }
+    }
+
+    #[test]
+    fn dot_sparse_matches_dense_dot_within_tolerance() {
+        let mut rng = Pcg64::seeded(23);
+        for n in [0usize, 9, 100, 4003] {
+            let (idx, val) = random_support(&mut rng, n, 0.3);
+            let x = densify(&idx, &val, n);
+            let y = rng.gaussian_vec(n);
+            let ds = dot_sparse(&idx, &val, &y);
+            assert!(
+                close(ds, dot(&x, &y), 1e-12),
+                "n={n}: {ds} vs {}",
+                dot(&x, &y)
+            );
+            assert_eq!(ds, dot_sparse_scalar(&idx, &val, &y));
         }
     }
 

@@ -40,7 +40,10 @@ use apbcfw::coordinator::{pick_blocks, UpdateMsg};
 use apbcfw::data::signal;
 use apbcfw::problems::gfl::Gfl;
 use apbcfw::problems::simplex_qp::SimplexQp;
-use apbcfw::problems::{ApplyOptions, BlockOracle, Problem};
+use apbcfw::problems::{
+    ApplyOptions, BlockOracle, OracleScratch, PayloadKind, PayloadMode,
+    Problem,
+};
 use apbcfw::run::{Engine, Runner, RunSpec};
 use apbcfw::solver::{minibatch, schedule_gamma, StopCond};
 use apbcfw::util::rng::Pcg64;
@@ -107,13 +110,15 @@ fn batched_sampling_returns_distinct_blocks() {
 /// Drive the real server pipeline (assembler -> sorted take_batch ->
 /// apply) over scripted rounds, ingesting each round's oracles either as
 /// single-oracle messages (the historical shape) or grouped into
-/// multi-block payloads of `group`. Returns the final parameter and every
-/// ApplyInfo, for bit comparison.
+/// multi-block payloads of `group`, with payloads emitted in the given
+/// representation through recycled slot containers (the worker shape).
+/// Returns the final parameter and every ApplyInfo, for bit comparison.
 fn run_pipeline<P: Problem>(
     p: &P,
     tau: usize,
     group: usize,
     rounds: usize,
+    kind: PayloadKind,
 ) -> (Vec<f32>, Vec<(u32, u64)>) {
     let n = p.num_blocks();
     let mut param = p.init_param();
@@ -121,17 +126,36 @@ fn run_pipeline<P: Problem>(
     let mut asm = BatchAssembler::new();
     let mut rng = Pcg64::seeded(777);
     let mut infos = Vec::new();
+    let mut oscratch = OracleScratch::<P>::default();
+    // Recycle pool for payload containers, like the engines': applied and
+    // displaced containers return here and are re-shaped on pickup.
+    let mut pool: Vec<apbcfw::problems::OraclePayload> = Vec::new();
     let mut k: u64 = 0;
     for _ in 0..rounds {
         let blocks = rng.subset(n, tau);
-        let oracles: Vec<BlockOracle> =
-            blocks.iter().map(|&i| p.oracle(&param, i)).collect();
+        let oracles: Vec<BlockOracle> = blocks
+            .iter()
+            .map(|&i| {
+                let mut slot = BlockOracle::empty_with(kind);
+                if let Some(buf) = pool.pop() {
+                    slot.s = buf;
+                    slot.s.set_kind(kind);
+                }
+                p.oracle_into(&param, i, &mut oscratch, &mut slot);
+                slot
+            })
+            .collect();
         for chunk in oracles.chunks(group) {
-            asm.insert(UpdateMsg {
+            let displaced = asm.insert(UpdateMsg {
                 oracles: chunk.to_vec(),
                 k_read: k,
                 worker: 0,
             });
+            for o in displaced {
+                let mut s = o.s;
+                s.recycle();
+                pool.push(s);
+            }
         }
         while let Some(batch) = asm.take_batch(tau) {
             let batch: Vec<BlockOracle> =
@@ -147,28 +171,39 @@ fn run_pipeline<P: Problem>(
             );
             k += 1;
             infos.push((info.gamma.to_bits(), info.batch_gap.to_bits()));
+            for o in batch {
+                let mut s = o.s;
+                s.recycle();
+                pool.push(s);
+            }
         }
     }
     (param, infos)
 }
 
 fn assert_pipeline_equivalent<P: Problem>(p: &P, tau: usize) {
-    let (param1, infos1) = run_pipeline(p, tau, 1, 40);
-    for group in [2usize, 3, tau] {
-        let (param_g, infos_g) = run_pipeline(p, tau, group, 40);
-        assert_eq!(
-            infos1, infos_g,
-            "{}: ApplyInfo diverged at group={group}",
-            p.name()
-        );
-        assert_eq!(param1.len(), param_g.len());
-        for (j, (a, b)) in param1.iter().zip(param_g.iter()).enumerate() {
+    let (param1, infos1) = run_pipeline(p, tau, 1, 40, PayloadKind::Dense);
+    for kind in [PayloadKind::Dense, PayloadKind::Sparse] {
+        for group in [1usize, 2, 3, tau] {
+            if kind == PayloadKind::Dense && group == 1 {
+                continue; // the reference itself
+            }
+            let (param_g, infos_g) = run_pipeline(p, tau, group, 40, kind);
             assert_eq!(
-                a.to_bits(),
-                b.to_bits(),
-                "{}: param[{j}] {a} vs {b} at group={group}",
+                infos1, infos_g,
+                "{}: ApplyInfo diverged at group={group} {kind:?}",
                 p.name()
             );
+            assert_eq!(param1.len(), param_g.len());
+            for (j, (a, b)) in param1.iter().zip(param_g.iter()).enumerate()
+            {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "{}: param[{j}] {a} vs {b} at group={group} {kind:?}",
+                    p.name()
+                );
+            }
         }
     }
 }
@@ -180,6 +215,10 @@ fn server_pipeline_multi_block_equals_single_block_messages_gfl() {
 
 #[test]
 fn server_pipeline_multi_block_equals_single_block_messages_qp() {
+    // QP also exercises the sparse path end-to-end: sparse payloads ride
+    // the same channels/assembler/recycle pipeline and must apply
+    // bit-identically to the dense reference (recycled sparse containers
+    // included).
     assert_pipeline_equivalent(&qp(), 4);
 }
 
@@ -324,6 +363,39 @@ fn sync_batch1_bit_identical_to_single_block_reference_gfl() {
 #[test]
 fn sync_batch1_bit_identical_to_single_block_reference_qp() {
     assert_sync_batch1_matches_reference(&qp());
+}
+
+#[test]
+fn sync_single_worker_sparse_payload_bit_identical_to_dense() {
+    // The sync engine at workers = 1 is fully deterministic, so forcing
+    // run.payload=sparse vs =dense must agree to the bit — final param
+    // AND full trace — on a sparse-emitting problem (QP), through the
+    // real worker/channel/pool/apply pipeline. `auto` resolves to sparse
+    // here and must match too.
+    let p = qp();
+    let runs: Vec<_> = [PayloadMode::Dense, PayloadMode::Sparse, PayloadMode::Auto]
+        .into_iter()
+        .map(|mode| {
+            Runner::new(sync_spec(1, 47).payload(mode))
+                .unwrap()
+                .solve_problem(&p)
+                .unwrap()
+        })
+        .collect();
+    for r in &runs[1..] {
+        assert_eq!(runs[0].param.len(), r.param.len());
+        for (j, (a, b)) in runs[0].param.iter().zip(r.param.iter()).enumerate()
+        {
+            assert_eq!(a.to_bits(), b.to_bits(), "param[{j}] {a} vs {b}");
+        }
+        assert_eq!(runs[0].trace.samples.len(), r.trace.samples.len());
+        for (a, b) in runs[0].trace.samples.iter().zip(r.trace.samples.iter())
+        {
+            assert_eq!(a.iter, b.iter);
+            assert_eq!(a.objective.to_bits(), b.objective.to_bits());
+            assert_eq!(a.gap.to_bits(), b.gap.to_bits());
+        }
+    }
 }
 
 #[test]

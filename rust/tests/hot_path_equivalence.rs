@@ -19,18 +19,26 @@ use apbcfw::problems::gfl::Gfl;
 use apbcfw::problems::simplex_qp::SimplexQp;
 use apbcfw::problems::ssvm::chain::ChainSsvm;
 use apbcfw::problems::ssvm::multiclass::MulticlassSsvm;
-use apbcfw::problems::{BlockOracle, OracleScratch, Problem};
+use apbcfw::problems::{
+    ApplyOptions, BlockOracle, OracleScratch, PayloadKind, Problem,
+};
 use apbcfw::util::la;
 use apbcfw::util::proptest::check;
 use apbcfw::util::simd;
 use std::sync::Arc;
 
-/// Assert two oracles are identical to the bit.
+/// Assert two oracles are identical to the bit, comparing payloads through
+/// their DENSIFIED form (the payload representation contract: a sparse
+/// payload must densify to exactly the dense emission's bits).
 fn assert_oracle_bits_eq(a: &BlockOracle, b: &BlockOracle, ctx: &str) {
     assert_eq!(a.block, b.block, "{ctx}: block");
     assert_eq!(a.ls.to_bits(), b.ls.to_bits(), "{ctx}: ls");
-    assert_eq!(a.s.len(), b.s.len(), "{ctx}: payload length");
-    for (j, (x, y)) in a.s.iter().zip(b.s.iter()).enumerate() {
+    a.s.debug_check_invariants();
+    b.s.debug_check_invariants();
+    let da = a.s.to_dense_vec();
+    let db = b.s.to_dense_vec();
+    assert_eq!(da.len(), db.len(), "{ctx}: payload length");
+    for (j, (x, y)) in da.iter().zip(db.iter()).enumerate() {
         assert_eq!(
             x.to_bits(),
             y.to_bits(),
@@ -40,19 +48,21 @@ fn assert_oracle_bits_eq(a: &BlockOracle, b: &BlockOracle, ctx: &str) {
 }
 
 /// Drive `oracle` vs `oracle_into` over random params/blocks, reusing one
-/// dirty slot AND one dirty caller-owned scratch throughout to exercise
-/// buffer reuse.
+/// dirty slot (per requested representation) AND one dirty caller-owned
+/// scratch throughout to exercise buffer reuse.
 fn check_problem_equivalence<P: Problem>(p: &P, cases: usize, seed: u64) {
-    let mut slot = BlockOracle::empty();
-    let mut scratch = OracleScratch::<P>::default();
-    check(cases, seed, |g| {
-        let dim = p.param_dim();
-        let param = g.gaussian_vec(dim);
-        let block = g.usize_in(0, p.num_blocks() - 1);
-        let reference = p.oracle(&param, block);
-        p.oracle_into(&param, block, &mut scratch, &mut slot);
-        assert_oracle_bits_eq(&slot, &reference, p.name());
-    });
+    for kind in [PayloadKind::Dense, PayloadKind::Sparse] {
+        let mut slot = BlockOracle::empty_with(kind);
+        let mut scratch = OracleScratch::<P>::default();
+        check(cases, seed, |g| {
+            let dim = p.param_dim();
+            let param = g.gaussian_vec(dim);
+            let block = g.usize_in(0, p.num_blocks() - 1);
+            let reference = p.oracle(&param, block);
+            p.oracle_into(&param, block, &mut scratch, &mut slot);
+            assert_oracle_bits_eq(&slot, &reference, p.name());
+        });
+    }
 }
 
 #[test]
@@ -111,6 +121,146 @@ fn oracle_into_slot_reuse_is_stateless() {
             assert_oracle_bits_eq(&reused, &fresh, "reuse");
         }
         let _ = pass;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Payload representation equivalence: sparse == dense, bit for bit
+// ---------------------------------------------------------------------------
+
+/// Run the same scripted solve twice — dense-slot oracles vs sparse-slot
+/// oracles — and pin param, ApplyInfo, per-oracle block_gap, and objective
+/// bit-identical every iteration (the `run.payload` contract).
+fn check_payload_representation_equivalence<P: Problem>(
+    p: &P,
+    iters: usize,
+    seed: u64,
+) {
+    use apbcfw::solver::schedule_gamma;
+    use apbcfw::util::rng::Pcg64;
+    let n = p.num_blocks();
+    let tau = 3.min(n);
+    let mut param_d = p.init_param();
+    let mut state_d = p.init_server();
+    let mut param_s = p.init_param();
+    let mut state_s = p.init_server();
+    let mut sc_d = OracleScratch::<P>::default();
+    let mut sc_s = OracleScratch::<P>::default();
+    let mut slots_d: Vec<BlockOracle> = (0..tau)
+        .map(|_| BlockOracle::empty_with(PayloadKind::Dense))
+        .collect();
+    let mut slots_s: Vec<BlockOracle> = (0..tau)
+        .map(|_| BlockOracle::empty_with(PayloadKind::Sparse))
+        .collect();
+    let mut rng = Pcg64::seeded(seed);
+    for k in 0..iters {
+        let blocks = rng.subset(n, tau);
+        for ((sd, ss), &i) in
+            slots_d.iter_mut().zip(slots_s.iter_mut()).zip(blocks.iter())
+        {
+            p.oracle_into(&param_d, i, &mut sc_d, sd);
+            p.oracle_into(&param_s, i, &mut sc_s, ss);
+            assert_oracle_bits_eq(sd, ss, p.name());
+            let gd = p.block_gap(&state_d, &param_d, sd);
+            let gs = p.block_gap(&state_s, &param_s, ss);
+            // block_gap is bit-pinned for the problems whose apply
+            // consumes it (parameter-space); the SSVM gather-dot arm is
+            // monitoring-only and tolerance-grade.
+            assert!(
+                gd.to_bits() == gs.to_bits()
+                    || (gd - gs).abs() <= 1e-10 * (1.0 + gd.abs()),
+                "{}: block_gap {gd} vs {gs}",
+                p.name()
+            );
+        }
+        // k = 0 exercises the clamped gamma = 1 step; alternate exact
+        // line search to cover both step paths.
+        let opts = ApplyOptions {
+            gamma: schedule_gamma(n, tau, k as u64),
+            line_search: k % 2 == 1,
+        };
+        let info_d = p.apply(&mut state_d, &mut param_d, &slots_d, opts);
+        let info_s = p.apply(&mut state_s, &mut param_s, &slots_s, opts);
+        assert_eq!(
+            info_d.gamma.to_bits(),
+            info_s.gamma.to_bits(),
+            "{} k={k}: gamma {} vs {}",
+            p.name(),
+            info_d.gamma,
+            info_s.gamma
+        );
+        assert_eq!(
+            info_d.batch_gap.to_bits(),
+            info_s.batch_gap.to_bits(),
+            "{} k={k}: batch_gap {} vs {}",
+            p.name(),
+            info_d.batch_gap,
+            info_s.batch_gap
+        );
+        for (j, (a, b)) in param_d.iter().zip(param_s.iter()).enumerate() {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "{} k={k}: param[{j}] {a} vs {b}",
+                p.name()
+            );
+        }
+        let od = p.objective(&state_d, &param_d);
+        let os = p.objective(&state_s, &param_s);
+        assert_eq!(
+            od.to_bits(),
+            os.to_bits(),
+            "{} k={k}: objective {od} vs {os}",
+            p.name()
+        );
+    }
+}
+
+#[test]
+fn payload_sparse_equals_dense_gfl() {
+    // GFL is the dense-fallback proof: sparse-requested slots come back
+    // dense and the run is trivially identical.
+    let sig = signal::piecewise_constant(6, 30, 4, 2.0, 0.5, 71);
+    let gfl = Gfl::new(6, 30, 0.25, sig.noisy.clone());
+    check_payload_representation_equivalence(&gfl, 40, 601);
+}
+
+#[test]
+fn payload_sparse_equals_dense_simplex_qp() {
+    let qp = SimplexQp::random(14, 5, 1.0, 0.4, 3, 73);
+    check_payload_representation_equivalence(&qp, 40, 602);
+}
+
+#[test]
+fn payload_sparse_equals_dense_chain_ssvm() {
+    let data = Arc::new(ocr_like::generate(18, 5, 9, 6, 0.15, 79));
+    let chain = ChainSsvm::new(data, 0.1);
+    check_payload_representation_equivalence(&chain, 30, 603);
+}
+
+#[test]
+fn payload_sparse_equals_dense_multiclass_ssvm() {
+    let data = Arc::new(mixture::generate(30, 6, 11, 0.2, 83));
+    let mc = MulticlassSsvm::new(data, 0.05);
+    check_payload_representation_equivalence(&mc, 40, 604);
+}
+
+#[test]
+fn sparse_slot_reuse_across_blocks_is_stateless() {
+    // One sparse slot cycled through every block repeatedly must keep
+    // densifying to the fresh dense oracle — stale idx/val content from a
+    // previous (larger-support) fill must not leak.
+    let data = Arc::new(ocr_like::generate(12, 4, 7, 5, 0.15, 89));
+    let chain = ChainSsvm::new(data, 0.1);
+    let mut rng = apbcfw::util::rng::Pcg64::seeded(90);
+    let w: Vec<f32> = rng.gaussian_vec(chain.dim());
+    let mut sc = OracleScratch::<ChainSsvm>::default();
+    let mut slot = BlockOracle::empty_with(PayloadKind::Sparse);
+    for _pass in 0..3 {
+        for i in 0..chain.num_blocks() {
+            chain.oracle_into(&w, i, &mut sc, &mut slot);
+            assert_oracle_bits_eq(&slot, &chain.oracle(&w, i), "sparse-reuse");
+        }
     }
 }
 

@@ -30,13 +30,25 @@ fn prop_buffer_batches_are_disjoint_and_sized() {
                 blocks.insert(g.usize_in(0, n - 1));
             }
             inserted.extend(blocks.iter().copied());
+            // Mixed payload representations through one assembler: the
+            // buffer is representation-agnostic.
             asm.insert(UpdateMsg {
                 oracles: blocks
                     .into_iter()
-                    .map(|block| BlockOracle {
-                        block,
-                        s: vec![0.0],
-                        ls: 0.0,
+                    .map(|block| {
+                        if g.bool() {
+                            BlockOracle::dense(block, vec![0.0], 0.0)
+                        } else {
+                            BlockOracle {
+                                block,
+                                s: apbcfw::problems::OraclePayload::Sparse {
+                                    idx: vec![],
+                                    val: vec![],
+                                    dim: 1,
+                                },
+                                ls: 0.0,
+                            }
+                        }
                     })
                     .collect(),
                 k_read: 0,
@@ -202,10 +214,12 @@ fn prop_ssvm_state_w_always_equals_sum_wi() {
             let blocks = g.subset(n, tau);
             let batch: Vec<BlockOracle> = blocks
                 .iter()
-                .map(|&b| BlockOracle {
-                    block: b,
-                    s: g.f32_vec(dim, -1.0, 1.0),
-                    ls: g.f64_in(0.0, 1.0),
+                .map(|&b| {
+                    BlockOracle::dense(
+                        b,
+                        g.f32_vec(dim, -1.0, 1.0),
+                        g.f64_in(0.0, 1.0),
+                    )
                 })
                 .collect();
             let gamma = schedule_gamma(n, tau, k as u64);

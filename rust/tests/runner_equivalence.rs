@@ -27,6 +27,7 @@ use apbcfw::problems::gfl::Gfl;
 use apbcfw::problems::simplex_qp::SimplexQp;
 use apbcfw::problems::ssvm::chain::ChainSsvm;
 use apbcfw::problems::ssvm::multiclass::MulticlassSsvm;
+use apbcfw::problems::PayloadMode;
 use apbcfw::run::{
     CollectObserver, Engine, ProblemInstance, Report, Runner, RunSpec,
     StragglerSpec,
@@ -73,6 +74,7 @@ fn stop() -> StopCond {
 fn legacy_opts(tau: usize) -> SolveOptions {
     SolveOptions {
         tau,
+        payload: PayloadMode::Auto,
         line_search: true,
         weighted_averaging: false,
         sample_every: 4,
@@ -535,6 +537,105 @@ fn registry_rejects_parameter_space_engines_for_ssvm() {
                 err.contains("parameter-space"),
                 "{problem}: {err}"
             );
+        }
+    }
+}
+
+// ---------- run.payload: lowering + validation + equivalence ----------
+
+#[test]
+fn payload_lowers_into_both_option_families() {
+    let cfg = Config::parse(
+        "[run]\nmode = async\nworkers = 2\ntau = 2\npayload = sparse\n",
+    )
+    .unwrap();
+    let spec = RunSpec::from_config(&cfg).unwrap();
+    assert_eq!(spec.payload, PayloadMode::Sparse);
+    assert_eq!(spec.run_config().unwrap().payload, PayloadMode::Sparse);
+    let cfg =
+        Config::parse("[run]\nmode = seq\npayload = dense\n").unwrap();
+    let spec = RunSpec::from_config(&cfg).unwrap();
+    assert_eq!(spec.solve_options().payload, PayloadMode::Dense);
+    // Default lowering carries Auto — field-for-field equal to the legacy
+    // defaults (covered by RunConfig/SolveOptions PartialEq elsewhere).
+    assert_eq!(RunConfig::default().payload, PayloadMode::Auto);
+    assert_eq!(SolveOptions::default().payload, PayloadMode::Auto);
+}
+
+#[test]
+fn invalid_payload_value_is_rejected_at_parse() {
+    let cfg = Config::parse("[run]\nmode = seq\npayload = csc\n").unwrap();
+    let err = RunSpec::from_config(&cfg).unwrap_err().to_string();
+    assert!(err.contains("run.payload"), "{err}");
+}
+
+#[test]
+fn seq_engines_payload_sparse_bit_identical_to_dense() {
+    // The deterministic sequential engines must produce bit-identical
+    // runs under every payload mode, on both sparse-emitting problem
+    // families (QP: 1-hot vertices; multiclass: two-class-row payloads).
+    // This is the engine-level pin of the representation contract; GFL is
+    // the dense-fallback proof (sparse request → dense payloads).
+    fn run_modes<P: apbcfw::problems::Problem>(
+        p: &P,
+        engine: Engine,
+    ) -> Vec<Report> {
+        [PayloadMode::Dense, PayloadMode::Sparse, PayloadMode::Auto]
+            .into_iter()
+            .map(|m| {
+                Runner::new(spec(engine.clone(), 2).payload(m))
+                    .unwrap()
+                    .solve_problem(p)
+                    .unwrap()
+            })
+            .collect()
+    }
+    let qp = qp();
+    let mc = multiclass();
+    let g = gfl();
+    let mut reports = Vec::new();
+    for engine in [Engine::Seq, Engine::Batch, Engine::delayed(DelayModel::Fixed(1))]
+    {
+        reports.push((format!("qp/{}", engine.name()), run_modes(&qp, engine.clone())));
+        reports.push((format!("mc/{}", engine.name()), run_modes(&mc, engine.clone())));
+        reports.push((format!("gfl/{}", engine.name()), run_modes(&g, engine)));
+    }
+    for (label, rs) in &reports {
+        for r in &rs[1..] {
+            assert_eq!(rs[0].param.len(), r.param.len(), "{label}");
+            for (j, (a, b)) in
+                rs[0].param.iter().zip(r.param.iter()).enumerate()
+            {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "{label}: param[{j}] {a} vs {b}"
+                );
+            }
+            assert_eq!(
+                rs[0].trace.samples.len(),
+                r.trace.samples.len(),
+                "{label}: trace length"
+            );
+            for (sa, sb) in
+                rs[0].trace.samples.iter().zip(r.trace.samples.iter())
+            {
+                assert_eq!(sa.iter, sb.iter, "{label}");
+                assert_eq!(
+                    sa.objective.to_bits(),
+                    sb.objective.to_bits(),
+                    "{label}: objective {} vs {}",
+                    sa.objective,
+                    sb.objective
+                );
+                assert_eq!(
+                    sa.gap.to_bits(),
+                    sb.gap.to_bits(),
+                    "{label}: gap {} vs {}",
+                    sa.gap,
+                    sb.gap
+                );
+            }
         }
     }
 }

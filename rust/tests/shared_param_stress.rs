@@ -1,4 +1,6 @@
-//! Concurrency stress for the wide-word [`SharedParam`]:
+//! Concurrency stress for the wide-word [`SharedParam`], run over BOTH
+//! storage layouts (packed, and the cacheline-padded NUMA-study layout —
+//! same semantics, different false-sharing profile):
 //!
 //! - Torn mode, odd (non-u64-aligned) length: concurrent whole-vector
 //!   publishers + readers must never produce a value that was not written
@@ -9,17 +11,26 @@
 //! - Consistent mode: readers must NEVER observe a torn snapshot (every
 //!   element from the same publish).
 
-use apbcfw::coordinator::shared::{SharedParam, SnapshotMode};
+use apbcfw::coordinator::shared::{ParamLayout, SharedParam, SnapshotMode};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
+const LAYOUTS: [ParamLayout; 2] = [ParamLayout::Packed, ParamLayout::Padded];
+
 #[test]
 fn torn_mode_odd_length_values_never_corrupt() {
+    for layout in LAYOUTS {
+        torn_mode_odd_length_values_never_corrupt_in(layout);
+    }
+}
+
+fn torn_mode_odd_length_values_never_corrupt_in(layout: ParamLayout) {
     // Publishers write constant vectors (value = publisher id + 1); any
     // element a reader sees must be 0 (init) or one of those constants.
     let len = 33; // odd: exercises the half-used tail word
     let init = vec![0.0f32; len];
-    let sp = Arc::new(SharedParam::new(&init));
+    let sp =
+        Arc::new(SharedParam::with_layout(&init, SnapshotMode::Torn, layout));
     let stop = Arc::new(AtomicBool::new(false));
     let mut writer_handles = Vec::new();
     for wid in 0..3u32 {
@@ -62,67 +73,91 @@ fn torn_mode_odd_length_values_never_corrupt() {
 
 #[test]
 fn concurrent_range_publishers_do_not_clobber_neighbor_lanes() {
-    // Two writers own adjacent odd-length ranges [0, 5) and [5, 9): the
-    // boundary element pair (4, 5) shares one u64 word. After any number
-    // of concurrent publishes, each element must hold its own writer's
-    // value exactly.
-    let len = 9;
-    let init = vec![0.0f32; len];
-    let sp = Arc::new(SharedParam::new(&init));
-    let mut handles = Vec::new();
-    for (lo, hi, base) in [(0usize, 5usize, 100.0f32), (5, 9, 200.0)] {
-        let sp = Arc::clone(&sp);
-        handles.push(std::thread::spawn(move || {
-            let vals: Vec<f32> =
-                (lo..hi).map(|i| base + i as f32).collect();
-            for _ in 0..50_000 {
-                sp.publish_range(lo, &vals);
-            }
-        }));
-    }
-    for h in handles {
-        h.join().unwrap();
-    }
-    let v = sp.read_vec();
-    for (i, &x) in v.iter().enumerate() {
-        let expect = if i < 5 { 100.0 + i as f32 } else { 200.0 + i as f32 };
-        assert_eq!(x, expect, "element {i}");
+    for layout in LAYOUTS {
+        // Two writers own adjacent odd-length ranges [0, 5) and [5, 9):
+        // the boundary element pair (4, 5) shares one u64 word in either
+        // layout. After any number of concurrent publishes, each element
+        // must hold its own writer's value exactly.
+        let len = 9;
+        let init = vec![0.0f32; len];
+        let sp = Arc::new(SharedParam::with_layout(
+            &init,
+            SnapshotMode::Torn,
+            layout,
+        ));
+        let mut handles = Vec::new();
+        for (lo, hi, base) in [(0usize, 5usize, 100.0f32), (5, 9, 200.0)] {
+            let sp = Arc::clone(&sp);
+            handles.push(std::thread::spawn(move || {
+                let vals: Vec<f32> =
+                    (lo..hi).map(|i| base + i as f32).collect();
+                for _ in 0..50_000 {
+                    sp.publish_range(lo, &vals);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let v = sp.read_vec();
+        for (i, &x) in v.iter().enumerate() {
+            let expect =
+                if i < 5 { 100.0 + i as f32 } else { 200.0 + i as f32 };
+            assert_eq!(x, expect, "element {i} ({layout:?})");
+        }
     }
 }
 
 #[test]
 fn concurrent_fetch_add_across_lane_pairs_is_exact() {
-    // Hogwild updates on an odd-length vector: every lane (both halves of
-    // interior words and the lone tail lane) must sum exactly.
-    let len = 5;
-    let init = vec![0.0f32; len];
-    let sp = Arc::new(SharedParam::new(&init));
-    let mut handles = Vec::new();
-    for t in 0..10usize {
-        let sp = Arc::clone(&sp);
-        handles.push(std::thread::spawn(move || {
-            for _ in 0..8_000 {
-                sp.fetch_add_f32(t % len, 1.0);
-            }
-        }));
-    }
-    for h in handles {
-        h.join().unwrap();
-    }
-    let v = sp.read_vec();
-    // 10 threads round-robin over 5 indices: 2 threads per index.
-    for (i, &x) in v.iter().enumerate() {
-        assert_eq!(x, 16_000.0, "element {i}");
+    for layout in LAYOUTS {
+        // Hogwild updates on an odd-length vector: every lane (both
+        // halves of interior words and the lone tail lane) must sum
+        // exactly.
+        let len = 5;
+        let init = vec![0.0f32; len];
+        let sp = Arc::new(SharedParam::with_layout(
+            &init,
+            SnapshotMode::Torn,
+            layout,
+        ));
+        let mut handles = Vec::new();
+        for t in 0..10usize {
+            let sp = Arc::clone(&sp);
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..8_000 {
+                    sp.fetch_add_f32(t % len, 1.0);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let v = sp.read_vec();
+        // 10 threads round-robin over 5 indices: 2 threads per index.
+        for (i, &x) in v.iter().enumerate() {
+            assert_eq!(x, 16_000.0, "element {i} ({layout:?})");
+        }
     }
 }
 
 #[test]
 fn consistent_mode_never_observes_torn_snapshot() {
+    for layout in LAYOUTS {
+        consistent_mode_never_observes_torn_snapshot_in(layout);
+    }
+}
+
+fn consistent_mode_never_observes_torn_snapshot_in(layout: ParamLayout) {
     // Publishers write uniform vectors; under Consistent mode every
     // snapshot must be uniform (all elements from one publish).
     let len = 33; // odd again
     let init = vec![0.0f32; len];
-    let sp = Arc::new(SharedParam::with_mode(&init, SnapshotMode::Consistent));
+    let sp = Arc::new(SharedParam::with_layout(
+        &init,
+        SnapshotMode::Consistent,
+        layout,
+    ));
     let stop = Arc::new(AtomicBool::new(false));
     let mut writer_handles = Vec::new();
     for wid in 0..2u32 {

@@ -64,9 +64,10 @@ fn gfl_step_artifact_matches_native() {
             );
         }
         let o = gfl.oracle(&u, t);
+        let os = o.s.as_dense().expect("gfl oracle is dense");
         for r in 0..GFL_D {
             assert!(
-                (s[t * GFL_D + r] - o.s[r]).abs() < 1e-4,
+                (s[t * GFL_D + r] - os[r]).abs() < 1e-4,
                 "oracle mismatch at ({t},{r})"
             );
         }

@@ -11,7 +11,14 @@ perf regression gate, so it must stay machine-readable in both states:
 
 A row-level "unit" overrides the report-level one for metric rows that are
 not timings (e.g. the batched fan-out's "reads_per_update" rows at batch
-1/4/16, where mean == median == p95 == the measured ratio).
+1/4/16, or the sparse-payload pipeline's "bytes_per_update" /
+"nnz_per_oracle" rows, where mean == median == p95 == the measured value).
+Metric units are validated against a closed set so a typo'd unit cannot
+slip past the perf regression gate unnoticed.
+
+A measured report must carry the sparse-payload dense-vs-sparse row pairs
+(bytes-per-update and fused-apply throughput), which back the payload
+pipeline's acceptance criterion.
 
 Exit code 0 iff the file conforms. Usage:
     python3 scripts/check_bench_schema.py [path]
@@ -19,6 +26,23 @@ Exit code 0 iff the file conforms. Usage:
 
 import json
 import sys
+
+# Closed set of per-row metric units (timing rows inherit ns_per_call).
+KNOWN_ROW_UNITS = {
+    "reads_per_update",
+    "bytes_per_update",
+    "bytes_per_oracle",
+    "nnz_per_oracle",
+}
+
+# Row-name pairs a *measured* report must contain: the dense-vs-sparse
+# payload comparison emitted by benches/hot_paths.rs.
+REQUIRED_MEASURED_PREFIXES = [
+    "async bytes-per-update payload=dense",
+    "async bytes-per-update payload=sparse",
+    "ssvm apply fused batch=8 dense",
+    "ssvm apply fused batch=8 sparse",
+]
 
 
 def check(path: str) -> str:
@@ -38,9 +62,17 @@ def check(path: str) -> str:
             assert isinstance(row[key], (int, float)), row
         assert isinstance(row["reps"], int), row
         if "unit" in row:
-            assert isinstance(row["unit"], str) and row["unit"], row
+            assert row["unit"] in KNOWN_ROW_UNITS, (
+                f"unknown row unit {row['unit']!r} "
+                f"(known: {sorted(KNOWN_ROW_UNITS)}): {row}"
+            )
     if doc["status"] == "measured":
         assert doc["rows"], "measured report must carry rows"
+        names = [row["name"] for row in doc["rows"]]
+        for prefix in REQUIRED_MEASURED_PREFIXES:
+            assert any(n.startswith(prefix) for n in names), (
+                f"measured report missing dense-vs-sparse row {prefix!r}"
+            )
     return f"{path} OK ({doc['status']}, {len(doc['rows'])} rows)"
 
 
