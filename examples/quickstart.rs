@@ -6,6 +6,11 @@
 //! ```bash
 //! cargo run --release --example quickstart
 //! ```
+//!
+//! The same specs drive the distributed mode: `apbcfw serve gfl
+//! --self-host --workers 2` runs this solve with the worker fleet behind
+//! the TCP wire protocol (`docs/WIRE.md`), and `apbcfw serve` / `apbcfw
+//! worker` split it across machines.
 
 use apbcfw::data::signal;
 use apbcfw::problems::gfl::Gfl;

@@ -5,9 +5,11 @@
 //! snapshot-reuse + `oracle_into`) worker loops for the GFL and
 //! chain-SSVM oracles, the batched fan-out's snapshot-read amortization
 //! (reads per applied update at batch 1/4/16, measured on a real async
-//! engine run), and the sparse-payload pipeline's dense-vs-sparse apply
+//! engine run), the sparse-payload pipeline's dense-vs-sparse apply
 //! throughput + bytes-per-update rows (fused SSVM apply on dense vs
-//! sparse batches; real async runs with `run.payload` forced both ways).
+//! sparse batches; real async runs with `run.payload` forced both ways),
+//! and the distributed transport's dense-vs-sparse wire bytes-per-update
+//! rows (loopback serve+worker runs through the real TCP codec).
 //!
 //! These are the §Perf targets — see EXPERIMENTS.md §Perf. Every row is
 //! also written to `BENCH_hotpaths.json` at the repo root so the perf
@@ -419,6 +421,46 @@ fn main() {
             &format!("async snapshot-reads-per-update batch={b}"),
             "reads_per_update",
             r.counters.snapshot_reads as f64
+                / r.counters.updates_applied.max(1) as f64,
+        );
+    }
+    println!();
+
+    // ---- distributed transport: wire bytes per applied update ----
+    // Self-hosted loopback serve+worker runs (multiclass SSVM, 2 workers
+    // over 127.0.0.1) with the payload knob forced both ways: total frame
+    // bytes the server received per applied update — the real wire cost
+    // (headers included, docs/WIRE.md §4.4) that the sparse payload
+    // pipeline exists to shrink, now measured through an actual TCP
+    // codec round trip instead of the in-process channel estimate above.
+    println!();
+    let net_cfg = apbcfw::util::config::Config::parse(
+        "[run]\nseed = 6\n\
+         [multiclass]\nn = 48\nk = 8\nd = 32\nnoise = 0.15\nlambda = 0.05\n",
+    )
+    .expect("net bench config");
+    for mode in [PayloadMode::Dense, PayloadMode::Sparse] {
+        let spec = RunSpec::new(Engine::asynchronous(2))
+            .tau(4)
+            .payload(mode)
+            .sample_every(1 << 20)
+            .max_epochs(30.0)
+            .max_secs(10.0)
+            .seed(3);
+        let r = apbcfw::net::solve_loopback(
+            spec,
+            "multiclass",
+            &net_cfg,
+            "127.0.0.1:0",
+        )
+        .expect("loopback bench run");
+        report.add_metric(
+            &format!(
+                "net loopback wire bytes-per-update payload={}",
+                mode.name()
+            ),
+            "bytes_per_update",
+            r.counters.wire_rx_bytes as f64
                 / r.counters.updates_applied.max(1) as f64,
         );
     }

@@ -10,6 +10,8 @@
 //!        [--line-search] [--straggler none|single:P|hetero:T|p1,p2,..]
 //!        [--snapshot-mode torn|consistent] [--queue-factor N]
 //!        [--config FILE] [--set sect.key=val ...]
+//! apbcfw serve <problem> [--listen HOST:PORT] [--self-host] [solve flags]
+//! apbcfw worker [--connect HOST:PORT]
 //! apbcfw artifacts-check [--dir DIR]
 //! apbcfw info
 //! ```
@@ -31,6 +33,22 @@ pub enum Command {
     Exp { id: String },
     /// Run a single solve (spec in the layered config) and print a summary.
     Solve { problem: String },
+    /// Host the distributed delayed-update server (`net::serve`): listen
+    /// on `addr`, accept the spec's worker fleet, run the solve. With
+    /// `self_host`, spawn the workers in-process over loopback TCP.
+    Serve {
+        /// Registered problem name.
+        problem: String,
+        /// Listen address (`host:port`; port 0 = ephemeral).
+        addr: String,
+        /// Run the worker fleet in this process (loopback demo mode).
+        self_host: bool,
+    },
+    /// Join a serve-role host as a network worker (`net::worker`).
+    Worker {
+        /// Server address to connect to.
+        addr: String,
+    },
     /// Load and compile every artifact in the manifest.
     ArtifactsCheck { dir: String },
     /// Print build/environment info.
@@ -82,7 +100,7 @@ pub fn parse(args: &[String]) -> Result<Cli> {
                 name,
                 "config" | "set" | "dir" | "mode" | "tau" | "batch"
                     | "workers" | "epochs" | "seed" | "straggler"
-                    | "snapshot-mode" | "queue-factor"
+                    | "snapshot-mode" | "queue-factor" | "listen" | "connect"
             );
             if takes_value {
                 let v = rest
@@ -132,21 +150,21 @@ pub fn parse(args: &[String]) -> Result<Cli> {
                 .ok_or_else(|| anyhow!("exp: missing experiment id"))?;
             Command::Exp { id: id.to_string() }
         }
-        "solve" => {
+        "solve" | "serve" => {
             let problem = positional
                 .first()
-                .ok_or_else(|| anyhow!("solve: missing problem name"))?
+                .ok_or_else(|| anyhow!("{sub}: missing problem name"))?
                 .to_string();
             if !PROBLEM_NAMES.contains(&problem.as_str()) {
                 bail!(
-                    "solve: unknown problem {problem:?} \
+                    "{sub}: unknown problem {problem:?} \
                      (registered: {PROBLEM_NAMES:?})"
                 );
             }
             if let Some(mode) = flag_val("mode") {
                 if !ENGINE_NAMES.contains(&mode) {
                     bail!(
-                        "solve: unknown mode {mode:?} \
+                        "{sub}: unknown mode {mode:?} \
                          (engines: {ENGINE_NAMES:?})"
                     );
                 }
@@ -184,8 +202,36 @@ pub fn parse(args: &[String]) -> Result<Cli> {
             if config.get("run.max_secs").is_none() {
                 config.set("run.max_secs", "300");
             }
-            Command::Solve { problem }
+            if sub == "serve" {
+                // The serve role hosts the async engine's delayed-update
+                // loop; default the mode rather than making every serve
+                // invocation spell it (an explicit non-async mode gets
+                // `net::serve`'s clean rejection).
+                if config.get("run.mode").is_none() {
+                    config.set("run.mode", "async");
+                }
+                let self_host = has_flag("self-host");
+                let addr = flag_val("listen")
+                    .unwrap_or(if self_host {
+                        // Self-hosted runs pick an ephemeral port so demos
+                        // and CI never collide on a fixed one.
+                        "127.0.0.1:0"
+                    } else {
+                        "127.0.0.1:7878"
+                    })
+                    .to_string();
+                Command::Serve {
+                    problem,
+                    addr,
+                    self_host,
+                }
+            } else {
+                Command::Solve { problem }
+            }
         }
+        "worker" => Command::Worker {
+            addr: flag_val("connect").unwrap_or("127.0.0.1:7878").to_string(),
+        },
         "artifacts-check" => Command::ArtifactsCheck {
             dir: flag_val("dir").unwrap_or("artifacts").to_string(),
         },
@@ -216,6 +262,16 @@ USAGE:
       (run.payload=auto|dense|sparse, run.delay, run.weighted_averaging,
       run.work_multiplier, run.eps_gap, ...) are reachable through
       --set / --config only.
+  apbcfw serve <gfl|ssvm|multiclass|qp> [--listen HOST:PORT] [--self-host]
+         [solve flags as above; --mode defaults to async]
+      host the distributed delayed-update server: workers connect over
+      TCP (wire protocol: docs/WIRE.md), pull parameter snapshots, and
+      stream sparse oracle payloads back. --workers N is the fleet size
+      the server waits for. --self-host runs that fleet in-process over
+      127.0.0.1 (single-machine demo of the full wire path).
+  apbcfw worker [--connect HOST:PORT]
+      join a serve host as a network worker (retries the connect for a
+      few seconds so start order does not matter).
   apbcfw artifacts-check [--dir DIR]
   apbcfw info
 ";
@@ -361,5 +417,78 @@ mod tests {
     fn empty_is_help() {
         let cli = parse(&[]).unwrap();
         assert_eq!(cli.command, Command::Help);
+    }
+
+    #[test]
+    fn serve_defaults_async_mode_and_fixed_port() {
+        let cli = parse(&sv(&["serve", "gfl", "--workers", "3"])).unwrap();
+        assert_eq!(
+            cli.command,
+            Command::Serve {
+                problem: "gfl".into(),
+                addr: "127.0.0.1:7878".into(),
+                self_host: false,
+            }
+        );
+        assert_eq!(cli.config.get("run.mode"), Some("async"));
+        assert_eq!(cli.config.get_usize("run.workers", 0), 3);
+        // The solve budget defaults apply to serve too.
+        assert_eq!(cli.config.get("run.epochs"), Some("50"));
+    }
+
+    #[test]
+    fn serve_self_host_picks_ephemeral_port_and_listen_overrides() {
+        let cli = parse(&sv(&["serve", "qp", "--self-host"])).unwrap();
+        assert_eq!(
+            cli.command,
+            Command::Serve {
+                problem: "qp".into(),
+                addr: "127.0.0.1:0".into(),
+                self_host: true,
+            }
+        );
+        let cli = parse(&sv(&[
+            "serve",
+            "qp",
+            "--self-host",
+            "--listen",
+            "127.0.0.1:9100",
+        ]))
+        .unwrap();
+        match cli.command {
+            Command::Serve { addr, .. } => {
+                assert_eq!(addr, "127.0.0.1:9100")
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn serve_keeps_explicit_mode_for_net_to_validate() {
+        // A non-async mode parses (the engine vocabulary is shared); the
+        // serve role itself rejects it with a clean error at bind time.
+        let cli = parse(&sv(&["serve", "gfl", "--mode", "sync"])).unwrap();
+        assert_eq!(cli.config.get("run.mode"), Some("sync"));
+        assert!(parse(&sv(&["serve", "gfl", "--mode", "warp"])).is_err());
+        assert!(parse(&sv(&["serve", "nosuch"])).is_err());
+    }
+
+    #[test]
+    fn worker_parses_connect_addr() {
+        let cli = parse(&sv(&["worker"])).unwrap();
+        assert_eq!(
+            cli.command,
+            Command::Worker {
+                addr: "127.0.0.1:7878".into()
+            }
+        );
+        let cli =
+            parse(&sv(&["worker", "--connect", "10.0.0.5:7900"])).unwrap();
+        assert_eq!(
+            cli.command,
+            Command::Worker {
+                addr: "10.0.0.5:7900".into()
+            }
+        );
     }
 }

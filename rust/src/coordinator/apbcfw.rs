@@ -269,6 +269,13 @@ pub fn run_observed<P: Problem>(
             }
 
             while let Some(batch_msgs) = asm.take_batch(tau) {
+                // Stamp every applied update with its observed delay (the
+                // expected-delay counters shared with the net transport).
+                for m in &batch_msgs {
+                    let d = m.delay(k);
+                    Counters::add(&counters.delay_sum, d);
+                    Counters::max_of(&counters.delay_max, d);
+                }
                 let batch: Vec<_> =
                     batch_msgs.into_iter().map(|m| m.oracle).collect();
                 // A multi-block payload can push the pending set past tau

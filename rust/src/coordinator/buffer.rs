@@ -30,6 +30,18 @@ pub struct PendingUpdate {
     pub worker: usize,
 }
 
+impl PendingUpdate {
+    /// Observed delay at server iteration `k_now`: how many applies
+    /// happened between this oracle's snapshot and now. Servers stamp
+    /// every applied update with this at apply time (the
+    /// `delay_sum`/`delay_max` counters — the empirical expected-delay
+    /// kappa of the paper's §2.3/§3.4 analysis).
+    #[inline]
+    pub fn delay(&self, k_now: u64) -> u64 {
+        k_now.saturating_sub(self.k_read)
+    }
+}
+
 /// Disjoint-block batch assembler with collision-overwrite semantics.
 #[derive(Default)]
 pub struct BatchAssembler {

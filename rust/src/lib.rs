@@ -14,6 +14,12 @@
 //!   kernels AOT-lowered to HLO text artifacts, executed through the PJRT
 //!   CPU client by [`runtime`]. Python never runs on the solve path.
 //!
+//! The [`net`] module takes the delayed-update framework onto a real
+//! transport: a binary wire codec (`docs/WIRE.md`) plus TCP serve/worker
+//! roles, surfaced as `apbcfw serve` / `apbcfw worker`. See
+//! ARCHITECTURE.md for the module map and an oracle's life from LMO to
+//! wire to apply.
+//!
 //! See DESIGN.md for the full system inventory and experiment index.
 
 pub mod analysis;
@@ -21,6 +27,7 @@ pub mod cli;
 pub mod coordinator;
 pub mod data;
 pub mod experiments;
+pub mod net;
 pub mod problems;
 pub mod run;
 pub mod runtime;

@@ -46,7 +46,58 @@ fn run(args: &[String]) -> Result<()> {
         Command::Exp { id } => apbcfw::experiments::run(&id, &cli.config),
         Command::ArtifactsCheck { dir } => artifacts_check(&dir),
         Command::Solve { problem } => solve(&cli.config, &problem),
+        Command::Serve {
+            problem,
+            addr,
+            self_host,
+        } => serve(&cli.config, &problem, &addr, self_host),
+        Command::Worker { addr } => worker(&addr),
     }
+}
+
+fn serve(
+    cfg: &apbcfw::util::config::Config,
+    problem: &str,
+    addr: &str,
+    self_host: bool,
+) -> Result<()> {
+    let spec = RunSpec::from_config(cfg)?;
+    let workers = spec.engine.workers();
+    let report = if self_host {
+        println!(
+            "[serve] self-hosted loopback: {workers} worker(s) over {addr}"
+        );
+        apbcfw::net::solve_loopback(spec, problem, cfg, addr)?
+    } else {
+        let server = apbcfw::net::BoundServer::bind(spec, problem, cfg, addr)?;
+        println!(
+            "[serve] listening on {}; waiting for {workers} worker(s) \
+             (`apbcfw worker --connect {}`)",
+            server.local_addr()?,
+            server.local_addr()?
+        );
+        server.run(&mut ())?
+    };
+    summarize(&format!("{problem}/{}", report.engine), &report);
+    Ok(())
+}
+
+fn worker(addr: &str) -> Result<()> {
+    println!("[worker] connecting to {addr}");
+    let s = apbcfw::net::run_with_retry(
+        addr,
+        std::time::Duration::from_secs(10),
+    )?;
+    println!(
+        "[worker {}] done: {} rounds, {} oracle calls, tx={} B, rx={} B{}",
+        s.worker_id,
+        s.rounds,
+        s.oracle_calls,
+        s.tx_bytes,
+        s.rx_bytes,
+        if s.clean { "" } else { " (connection lost, not shut down)" }
+    );
+    Ok(())
 }
 
 fn artifacts_check(dir: &str) -> Result<()> {
@@ -92,6 +143,25 @@ fn summarize(name: &str, r: &Report) {
                 / r.counters.updates_applied.max(1) as f64,
             r.counters.payload_nnz as f64
                 / r.counters.oracle_calls.max(1) as f64
+        );
+    }
+    if r.counters.wire_tx_bytes + r.counters.wire_rx_bytes > 0 {
+        println!(
+            "  wire: tx={} B rx={} B ({:.1} rx-bytes/update)",
+            r.counters.wire_tx_bytes,
+            r.counters.wire_rx_bytes,
+            r.counters.wire_rx_bytes as f64
+                / r.counters.updates_applied.max(1) as f64,
+        );
+    }
+    // Observed-delay telemetry is stamped by the delayed-update servers
+    // (in-process async AND the net transport); engines without it keep
+    // the summary short.
+    if matches!(r.engine, "async" | "net") {
+        println!(
+            "  delay: mean {:.2}, max {} (empirical expected-delay kappa)",
+            r.counters.mean_delay(),
+            r.counters.delay_max
         );
     }
 }

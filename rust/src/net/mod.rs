@@ -1,0 +1,116 @@
+//! Distributed delayed-update transport: the wire codec and the TCP
+//! serve/worker roles.
+//!
+//! This subsystem turns the in-process delayed-update framework (paper
+//! §2.3/§3.4, [`crate::coordinator::apbcfw`]) into a deployable
+//! server/worker system over `std::net::TcpStream`:
+//!
+//! - [`wire`] — the versioned, length-prefixed binary codec for the
+//!   handshake, parameter snapshots (full or dirty-range delta), and
+//!   multi-block oracle payloads. Sparse payloads ship as their
+//!   `(idx, val, dim)` triple — never densified on the wire. The
+//!   normative spec is `docs/WIRE.md`.
+//! - [`server`] — the `serve` role: hosts the delayed-update server loop,
+//!   reusing the [`crate::coordinator::buffer::BatchAssembler`]
+//!   collision/assembly machinery, stamping every applied update with its
+//!   observed delay (the expected-delay counters), and answering snapshot
+//!   pulls with deltas when its dirty-range log covers the gap.
+//! - [`worker`] — the `worker` role: connects, rebuilds the problem from
+//!   the handshake config, and streams batched oracles.
+//!
+//! Both roles lower through the same [`crate::run::RunSpec`] as every
+//! other engine: `apbcfw serve` validates the spec exactly like
+//! `apbcfw solve --mode async` (the CLI surface), and
+//! [`server::solve_loopback`] self-hosts the whole fleet over 127.0.0.1 in
+//! one process — the mode the distributed==in-process equivalence tests
+//! in `rust/tests/net_transport.rs` pin (bit-identical to the sequential
+//! delayed engine at one worker, tolerance-bounded beyond).
+#![deny(missing_docs)]
+
+pub mod server;
+pub mod wire;
+pub mod worker;
+
+pub use server::{serve, solve_loopback, BoundServer};
+pub use worker::{run_with_retry, WorkerSummary};
+
+use crate::problems::PayloadMode;
+use std::ops::Range;
+
+/// Wire tag for a [`PayloadMode`] (`Hello.payload_mode`): 0 auto, 1
+/// dense, 2 sparse.
+pub fn payload_mode_tag(mode: PayloadMode) -> u8 {
+    match mode {
+        PayloadMode::Auto => 0,
+        PayloadMode::Dense => 1,
+        PayloadMode::Sparse => 2,
+    }
+}
+
+/// Inverse of [`payload_mode_tag`]; `None` for an unknown tag.
+pub fn payload_mode_from_tag(tag: u8) -> Option<PayloadMode> {
+    match tag {
+        0 => Some(PayloadMode::Auto),
+        1 => Some(PayloadMode::Dense),
+        2 => Some(PayloadMode::Sparse),
+        _ => None,
+    }
+}
+
+/// Rng stream a network worker derives from its id: `2 + id`. Worker 0
+/// shares the sequential delayed engine's stream
+/// ([`crate::solver::delayed`] draws from `Pcg64::new(seed, 2)`), which is
+/// what makes the one-worker loopback solve replay that engine
+/// draw-for-draw.
+pub fn worker_rng_stream(worker_id: u32) -> u64 {
+    2 + worker_id as u64
+}
+
+/// Sort and coalesce overlapping/adjacent index ranges — the dirty-range
+/// merge behind delta snapshots (overlapping block writes collapse to one
+/// wire run).
+pub(crate) fn merge_ranges(mut ranges: Vec<Range<usize>>) -> Vec<Range<usize>> {
+    ranges.sort_unstable_by_key(|r| r.start);
+    let mut merged: Vec<Range<usize>> = Vec::with_capacity(ranges.len());
+    for r in ranges {
+        if r.is_empty() {
+            continue;
+        }
+        match merged.last_mut() {
+            Some(last) if r.start <= last.end => {
+                last.end = last.end.max(r.end);
+            }
+            _ => merged.push(r),
+        }
+    }
+    merged
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn payload_mode_tags_roundtrip() {
+        for mode in [PayloadMode::Auto, PayloadMode::Dense, PayloadMode::Sparse]
+        {
+            assert_eq!(payload_mode_from_tag(payload_mode_tag(mode)), Some(mode));
+        }
+        assert_eq!(payload_mode_from_tag(9), None);
+    }
+
+    #[test]
+    fn worker_zero_shares_the_delayed_engine_stream() {
+        assert_eq!(worker_rng_stream(0), 2);
+        assert_eq!(worker_rng_stream(3), 5);
+    }
+
+    #[test]
+    fn merge_ranges_coalesces() {
+        assert_eq!(
+            merge_ranges(vec![4..6, 0..2, 5..8, 2..3, 10..10]),
+            vec![0..3, 4..8]
+        );
+        assert!(merge_ranges(vec![]).is_empty());
+    }
+}

@@ -1,0 +1,749 @@
+//! The `serve` role: the distributed delayed-update server loop over TCP.
+//!
+//! [`BoundServer`] hosts the same delayed-update semantics as the
+//! in-process async engine ([`crate::coordinator::apbcfw`]): workers solve
+//! block subproblems against (possibly stale) parameter snapshots, the
+//! server assembles tau disjoint blocks across their payloads — reusing
+//! the [`BatchAssembler`] collision-overwrite machinery — applies with the
+//! paper's step size, and drops anything staler than `k/2` (Theorem 4).
+//! What changes is the transport: updates arrive as wire frames from
+//! remote workers instead of in-process channel messages, snapshots leave
+//! as full vectors or dirty-range deltas, and every update is stamped with
+//! its observed delay at apply time (the `delay_sum`/`delay_max` counters
+//! backing the expected-delay analysis of the paper's §2.3/§3.4).
+//!
+//! The loop stays single-threaded over the master parameter; one reader
+//! thread per connection decodes frames into the server's event channel,
+//! and every write (handshake, snapshots, shutdown) is issued by the loop
+//! itself. Per connection the protocol strictly alternates — a worker has
+//! at most one request in flight — which is what rules out write-write
+//! deadlocks and, at one worker, makes the whole solve deterministic (the
+//! loopback equivalence tests pin it bit-identical to the in-process
+//! delayed engine).
+
+use super::wire::{self, Hello, Msg, SnapshotBody};
+use super::{merge_ranges, payload_mode_tag};
+use crate::coordinator::buffer::BatchAssembler;
+use crate::coordinator::{RunResult, UpdateMsg};
+use crate::problems::{ApplyOptions, Problem};
+use crate::run::{
+    Engine, Observer, ProblemInstance, Report, Runner, RunSpec, StragglerSpec,
+};
+use crate::solver::{schedule_gamma, WeightedAverage};
+use crate::util::config::Config;
+use crate::util::metrics::{Counters, Sample, Stopwatch, Trace};
+use anyhow::{anyhow, bail, ensure, Result};
+use std::collections::VecDeque;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+/// How long the server waits for the expected worker fleet to connect.
+const ACCEPT_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Dirty-range history depth: a worker more than this many versions
+/// behind is resynced with a full snapshot instead of a delta.
+const DELTA_LOG_CAP: usize = 256;
+
+/// Parameter ranges one apply dirtied; `None` marks a dense
+/// whole-parameter write (no delta possible across it).
+type DirtyRanges = Option<Vec<std::ops::Range<usize>>>;
+
+/// Events the per-connection reader threads feed the server loop.
+enum Event {
+    /// A decoded multi-block update payload from connection `conn`.
+    Update { conn: usize, msg: UpdateMsg },
+    /// A snapshot request from connection `conn` holding `have`.
+    SnapReq { conn: usize, have: u64 },
+    /// Connection `conn` closed or failed.
+    Gone { conn: usize },
+}
+
+/// A validated, bound (but not yet running) serve-role instance. Binding
+/// is split from running so callers can learn the listen address — port 0
+/// resolves to an ephemeral port — before starting workers against it
+/// (the loopback self-hosted mode does exactly that).
+pub struct BoundServer {
+    listener: TcpListener,
+    spec: RunSpec,
+    instance: ProblemInstance,
+    /// Flattened config shipped in the handshake so workers rebuild the
+    /// identical problem instance.
+    config_pairs: Vec<(String, String)>,
+}
+
+impl BoundServer {
+    /// Validate `spec` against the serve role and `problem`, and bind the
+    /// listen socket. The spec must name the `async` engine (its tau,
+    /// staleness-rule, collision and sampling knobs drive the server
+    /// loop); the in-process simulation knobs (stragglers, work
+    /// multipliers) are rejected — on a real transport the network itself
+    /// supplies the delays the paper models.
+    pub fn bind(
+        spec: RunSpec,
+        problem: &str,
+        cfg: &Config,
+        addr: &str,
+    ) -> Result<BoundServer> {
+        // Full spec validation (worker counts, cadences, batch scoping).
+        let runner = Runner::new(spec.clone())?;
+        match &spec.engine {
+            Engine::Async {
+                straggler,
+                work_multiplier,
+                ..
+            } => {
+                ensure!(
+                    *straggler == StragglerSpec::None,
+                    "run.straggler simulates slow workers in-process; the \
+                     network transport gets real stragglers — remove the knob"
+                );
+                ensure!(
+                    *work_multiplier == (1, 1),
+                    "run.work_multiplier is an in-process simulation knob; \
+                     it does not apply to network workers"
+                );
+            }
+            other => bail!(
+                "serve requires the async engine (run.mode=async); engine \
+                 `{}` has no delayed-update server loop to host",
+                other.name()
+            ),
+        }
+        let instance = ProblemInstance::from_config(problem, cfg)?;
+        instance.supports(&spec.engine)?;
+        // The same problem-dependent fan-out rule the Runner applies at
+        // dispatch (one rule, one implementation).
+        runner.check_batch(instance.num_blocks())?;
+        let listener = TcpListener::bind(addr)?;
+        let config_pairs = cfg
+            .iter()
+            .map(|(k, v)| (k.clone(), v.clone()))
+            .collect();
+        Ok(BoundServer {
+            listener,
+            spec,
+            instance,
+            config_pairs,
+        })
+    }
+
+    /// The bound listen address (resolves port 0 to the ephemeral port).
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    /// Accept the expected worker fleet, run the delayed-update server
+    /// loop to completion, and return the unified [`Report`] (engine name
+    /// `"net"`). Live events stream to `obs` exactly as for the
+    /// in-process engines.
+    pub fn run(self, obs: &mut dyn Observer) -> Result<Report> {
+        match &self.instance {
+            ProblemInstance::Gfl(p) => self.run_inner(p, obs),
+            ProblemInstance::Qp(p) => self.run_inner(p, obs),
+            ProblemInstance::Chain(p) => self.run_inner(p, obs),
+            ProblemInstance::Multiclass(p) => self.run_inner(p, obs),
+        }
+    }
+
+    /// Accept `workers` connections (with a deadline) and complete the
+    /// handshake on each in accept order — the accept index is the worker
+    /// id and rng stream selector.
+    fn accept_fleet<P: Problem>(
+        &self,
+        problem: &P,
+        counters: &Counters,
+    ) -> Result<Vec<TcpStream>> {
+        let workers = self.spec.engine.workers();
+        self.listener.set_nonblocking(true)?;
+        let deadline = Instant::now() + ACCEPT_TIMEOUT;
+        let mut conns: Vec<TcpStream> = Vec::with_capacity(workers);
+        while conns.len() < workers {
+            match self.listener.accept() {
+                Ok((stream, _peer)) => {
+                    stream.set_nodelay(true).ok();
+                    stream.set_nonblocking(false)?;
+                    conns.push(stream);
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    if Instant::now() >= deadline {
+                        bail!(
+                            "timed out waiting for {workers} worker \
+                             connections ({} connected)",
+                            conns.len()
+                        );
+                    }
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+                Err(e) => return Err(e.into()),
+            }
+        }
+        let mut ebuf = Vec::new();
+        for (id, stream) in conns.iter_mut().enumerate() {
+            let hello = Msg::Hello(Hello {
+                worker_id: id as u32,
+                seed: self.spec.seed,
+                tau: self.spec.tau as u32,
+                batch: self.spec.batch as u32,
+                payload_mode: payload_mode_tag(self.spec.payload),
+                n_blocks: problem.num_blocks() as u32,
+                problem: registry_name(&self.instance).to_string(),
+                config: self.config_pairs.clone(),
+            });
+            let n = wire::write_frame(stream, &hello, &mut ebuf)?;
+            Counters::add(&counters.wire_tx_bytes, n as u64);
+        }
+        Ok(conns)
+    }
+
+    fn run_inner<P: Problem>(
+        &self,
+        problem: &P,
+        obs: &mut dyn Observer,
+    ) -> Result<Report> {
+        let spec = &self.spec;
+        let (staleness_rule, collision_overwrite, queue_factor) =
+            match &spec.engine {
+                Engine::Async {
+                    staleness_rule,
+                    collision_overwrite,
+                    queue_factor,
+                    ..
+                } => (*staleness_rule, *collision_overwrite, *queue_factor),
+                _ => unreachable!("bind() accepts only the async engine"),
+            };
+        let workers = spec.engine.workers();
+        let n = problem.num_blocks();
+        let tau = spec.tau.clamp(1, n);
+        let counters = Counters::new();
+        let mut conns: Vec<Option<TcpStream>> = self
+            .accept_fleet(problem, &counters)?
+            .into_iter()
+            .map(Some)
+            .collect();
+
+        let mut master = problem.init_param();
+        let mut state = problem.init_server();
+        // Instance-level frame validation bound: payload dimensions are
+        // block-independent for every registered problem, so one probe
+        // oracle fixes the dimension every wire update must carry. The
+        // codec checks only a frame's self-consistency; this is what
+        // keeps a codec-valid but malformed frame (config drift, hostile
+        // peer) out of the apply path.
+        let payload_dim = problem.oracle(&master, 0).s.dim();
+        let mut trace = Trace::default();
+        let mut avg: Option<WeightedAverage> = if spec.weighted_averaging {
+            Some(WeightedAverage::new(problem.param_dim()))
+        } else {
+            None
+        };
+        let mut gap_estimate = f64::INFINITY;
+        let mut k: u64 = 0;
+        let mut asm = BatchAssembler::new();
+        // Dirty ranges per applied version, newest at the back (`None` =
+        // a full-parameter write, e.g. SSVM's dense w update).
+        let mut delta_log: VecDeque<(u64, DirtyRanges)> =
+            VecDeque::with_capacity(DELTA_LOG_CAP);
+        let watch = Stopwatch::start();
+
+        // Each worker has at most one request in flight (the protocol
+        // strictly alternates), so 2 slots per worker never blocks a
+        // reader; the queue_factor headroom mirrors the in-process
+        // engine's backpressure depth.
+        let queue_cap = (queue_factor.max(1) * tau).max(2 * workers);
+        let (tx, rx) = mpsc::sync_channel::<Event>(queue_cap);
+        let mut ebuf: Vec<u8> = Vec::new();
+
+        // Clone the read halves before spawning anything: once a reader
+        // thread exists, this function must reach the shutdown sequence
+        // (which unblocks readers) before returning, so no fallible work
+        // is allowed inside the scope.
+        let mut reader_streams: Vec<TcpStream> =
+            Vec::with_capacity(conns.len());
+        for stream in conns.iter() {
+            reader_streams.push(
+                stream
+                    .as_ref()
+                    .expect("all connections start alive")
+                    .try_clone()?,
+            );
+        }
+
+        std::thread::scope(|scope| {
+            // ---------------- connection readers ----------------
+            for (conn, reader) in reader_streams.into_iter().enumerate() {
+                let tx = tx.clone();
+                let counters = &counters;
+                scope.spawn(move || read_loop(conn, reader, tx, counters));
+            }
+            drop(tx);
+
+            // ---------------- server loop ----------------
+            let mut alive = conns.len();
+            'serve: loop {
+                match rx.recv_timeout(Duration::from_millis(2)) {
+                    Ok(Event::Update { conn, msg }) => {
+                        // Reject oracles the instance cannot apply (block
+                        // out of range, payload of the wrong dimension)
+                        // and drop the connection — a protocol violation,
+                        // not a recoverable update. Its reader announces
+                        // `Gone` once the socket shuts down.
+                        let valid = msg.oracles.iter().all(|o| {
+                            o.block < n && o.s.dim() == payload_dim
+                        });
+                        if !valid {
+                            if let Some(stream) = &conns[conn] {
+                                stream
+                                    .shutdown(std::net::Shutdown::Both)
+                                    .ok();
+                            }
+                            conns[conn] = None;
+                            continue;
+                        }
+                        let (mut nnz, mut bytes) = (0u64, 0u64);
+                        for o in &msg.oracles {
+                            nnz += o.s.nnz() as u64;
+                            bytes += o.s.wire_bytes() as u64;
+                        }
+                        Counters::add(&counters.payload_nnz, nnz);
+                        Counters::add(&counters.payload_bytes, bytes);
+                        Counters::add(
+                            &counters.oracle_calls,
+                            msg.oracles.len() as u64,
+                        );
+                        // Staleness rule (paper Thm 4): drop if the whole
+                        // payload's snapshot is older than k/2.
+                        let delay = k.saturating_sub(msg.k_read);
+                        if staleness_rule && 2 * delay > k && delay > 0 {
+                            Counters::add(
+                                &counters.dropped,
+                                msg.oracles.len() as u64,
+                            );
+                        } else if collision_overwrite {
+                            asm.insert(msg);
+                        } else {
+                            asm.insert_keep_old(msg);
+                        }
+                    }
+                    Ok(Event::SnapReq { conn, have }) => {
+                        let body =
+                            snapshot_body(&master, &delta_log, k, have);
+                        let msg = Msg::Snapshot { version: k, body };
+                        if let Some(stream) = &mut conns[conn] {
+                            match wire::write_frame(stream, &msg, &mut ebuf) {
+                                Ok(nb) => Counters::add(
+                                    &counters.wire_tx_bytes,
+                                    nb as u64,
+                                ),
+                                Err(_) => {
+                                    // Shut the socket down before dropping
+                                    // our clone: the reader thread holds
+                                    // its own dup and would otherwise
+                                    // block in read forever (scope would
+                                    // never join).
+                                    stream
+                                        .shutdown(std::net::Shutdown::Both)
+                                        .ok();
+                                    conns[conn] = None;
+                                }
+                            }
+                        }
+                    }
+                    Ok(Event::Gone { conn }) => {
+                        conns[conn] = None;
+                        alive = alive.saturating_sub(1);
+                        if alive == 0 {
+                            break 'serve;
+                        }
+                    }
+                    Err(mpsc::RecvTimeoutError::Timeout) => {}
+                    Err(mpsc::RecvTimeoutError::Disconnected) => break 'serve,
+                }
+
+                while let Some(batch_msgs) = asm.take_batch(tau) {
+                    // Observed delay of every applied update, stamped at
+                    // apply time — the expected-delay telemetry.
+                    for m in &batch_msgs {
+                        let d = m.delay(k);
+                        Counters::add(&counters.delay_sum, d);
+                        Counters::max_of(&counters.delay_max, d);
+                    }
+                    let batch: Vec<_> =
+                        batch_msgs.into_iter().map(|m| m.oracle).collect();
+                    let applied = batch.len();
+                    let gamma = schedule_gamma(n, applied, k);
+                    let info = problem.apply(
+                        &mut state,
+                        &mut master,
+                        &batch,
+                        ApplyOptions {
+                            gamma,
+                            line_search: spec.line_search,
+                        },
+                    );
+                    k += 1;
+                    if delta_log.len() == DELTA_LOG_CAP {
+                        delta_log.pop_front();
+                    }
+                    delta_log.push_back((k, problem.touched_ranges(&batch)));
+                    Counters::add(&counters.updates_applied, applied as u64);
+                    counters
+                        .iterations
+                        .store(k, std::sync::atomic::Ordering::Relaxed);
+                    obs.on_apply(k, info.gamma, info.batch_gap);
+                    if let Some(a) = &mut avg {
+                        a.update(&master, problem.aux(&state));
+                    }
+                    let inst = info.batch_gap * n as f64 / applied as f64;
+                    gap_estimate = if gap_estimate.is_finite() {
+                        0.8 * gap_estimate + 0.2 * inst
+                    } else {
+                        inst
+                    };
+
+                    if k % spec.sample_every as u64 == 0 {
+                        let objective = match &avg {
+                            Some(a) => problem.objective_from(&a.param, a.aux),
+                            None => problem.objective(&state, &master),
+                        };
+                        let gap = if spec.exact_gap {
+                            match &avg {
+                                Some(a) => problem.full_gap(&state, &a.param),
+                                None => problem.full_gap(&state, &master),
+                            }
+                        } else {
+                            gap_estimate
+                        };
+                        let snap = counters.snapshot();
+                        let sample = Sample {
+                            iter: k as usize,
+                            oracle_calls: snap.oracle_calls,
+                            elapsed_s: watch.elapsed_s(),
+                            objective,
+                            gap,
+                        };
+                        obs.on_sample(&sample);
+                        trace.push(sample);
+                        let epochs = snap.oracle_calls as f64 / n as f64;
+                        if spec.stop.target_met(objective, gap)
+                            || spec.stop.exhausted(epochs, watch.elapsed_s())
+                        {
+                            break 'serve;
+                        }
+                    }
+                }
+
+                // Budget check even while starved of updates.
+                let snap = counters.snapshot();
+                let epochs = snap.oracle_calls as f64 / n as f64;
+                if spec.stop.exhausted(epochs, watch.elapsed_s()) {
+                    break 'serve;
+                }
+            }
+
+            // Orderly shutdown: tell every live worker, then close both
+            // socket halves so blocked reader threads unblock and exit.
+            for stream in conns.iter_mut().flatten() {
+                if let Ok(nb) =
+                    wire::write_frame(stream, &Msg::Shutdown, &mut ebuf)
+                {
+                    Counters::add(&counters.wire_tx_bytes, nb as u64);
+                }
+                stream.shutdown(std::net::Shutdown::Both).ok();
+            }
+            drop(rx);
+        });
+
+        Counters::add(&counters.collisions, asm.collisions());
+        let mut snap = counters.snapshot();
+        snap.iterations = k;
+        let elapsed_s = watch.elapsed_s();
+        let passes = snap.updates_applied as f64 / n as f64;
+        let secs_per_pass = if passes > 0.0 {
+            elapsed_s / passes
+        } else {
+            f64::INFINITY
+        };
+        let objective = match &avg {
+            Some(a) => problem.objective_from(&a.param, a.aux),
+            None => problem.objective(&state, &master),
+        };
+        let gap = if spec.exact_gap {
+            match &avg {
+                Some(a) => problem.full_gap(&state, &a.param),
+                None => problem.full_gap(&state, &master),
+            }
+        } else {
+            gap_estimate
+        };
+        let sample = Sample {
+            iter: k as usize,
+            oracle_calls: snap.oracle_calls,
+            elapsed_s,
+            objective,
+            gap,
+        };
+        obs.on_sample(&sample);
+        trace.push(sample);
+        let (param, raw_param) = match avg {
+            Some(a) => (a.param, master),
+            None => {
+                let raw = master.clone();
+                (master, raw)
+            }
+        };
+        Ok(Report::from_run(
+            "net",
+            RunResult {
+                trace,
+                param,
+                raw_param,
+                counters: snap,
+                elapsed_s,
+                secs_per_pass,
+            },
+        ))
+    }
+}
+
+/// Decode frames off one connection into the server's event channel.
+/// Exits on any read error, a clean close, a protocol violation, or a
+/// hung-up server loop — always announcing `Gone` (best-effort) first.
+fn read_loop(
+    conn: usize,
+    mut stream: TcpStream,
+    tx: mpsc::SyncSender<Event>,
+    counters: &Counters,
+) {
+    loop {
+        match wire::read_frame(&mut stream) {
+            Ok(Some((msg, nbytes))) => {
+                Counters::add(&counters.wire_rx_bytes, nbytes as u64);
+                let event = match msg {
+                    Msg::Update {
+                        k_read,
+                        worker,
+                        oracles,
+                    } => Event::Update {
+                        conn,
+                        msg: UpdateMsg {
+                            oracles,
+                            k_read,
+                            worker: worker as usize,
+                        },
+                    },
+                    Msg::SnapshotRequest { have_version } => Event::SnapReq {
+                        conn,
+                        have: have_version,
+                    },
+                    // Anything else from a worker is a protocol violation;
+                    // drop the connection.
+                    _ => break,
+                };
+                if tx.send(event).is_err() {
+                    return; // server loop is gone
+                }
+            }
+            Ok(None) | Err(_) => break,
+        }
+    }
+    tx.send(Event::Gone { conn }).ok();
+}
+
+/// Build the snapshot body for a worker holding `have`: an empty delta if
+/// it is current, a dirty-range delta when the log covers the gap (and it
+/// is actually smaller than the full vector), a full snapshot otherwise.
+fn snapshot_body(
+    master: &[f32],
+    log: &VecDeque<(u64, DirtyRanges)>,
+    k: u64,
+    have: u64,
+) -> SnapshotBody {
+    if have == k {
+        return SnapshotBody::Delta(Vec::new());
+    }
+    if have > k {
+        // `u64::MAX` sentinel (nothing held) or a confused peer: resync.
+        return SnapshotBody::Full(master.to_vec());
+    }
+    let covered = log
+        .front()
+        .map(|(oldest, _)| *oldest <= have + 1)
+        .unwrap_or(false);
+    if covered {
+        let mut ranges: Vec<std::ops::Range<usize>> = Vec::new();
+        let mut full = false;
+        for (v, r) in log.iter() {
+            if *v <= have {
+                continue;
+            }
+            match r {
+                Some(rs) => ranges.extend(rs.iter().cloned()),
+                None => {
+                    full = true;
+                    break;
+                }
+            }
+        }
+        if !full {
+            let merged = merge_ranges(ranges);
+            let total: usize = merged.iter().map(|r| r.len()).sum();
+            if total < master.len() {
+                let runs = merged
+                    .iter()
+                    .map(|r| (r.start as u32, master[r.clone()].to_vec()))
+                    .collect();
+                return SnapshotBody::Delta(runs);
+            }
+        }
+    }
+    SnapshotBody::Full(master.to_vec())
+}
+
+/// The registry name a worker passes back to
+/// [`ProblemInstance::from_config`] (the CLI `solve` vocabulary, not the
+/// inner problem's display name).
+fn registry_name(instance: &ProblemInstance) -> &'static str {
+    match instance {
+        ProblemInstance::Gfl(_) => "gfl",
+        ProblemInstance::Qp(_) => "qp",
+        ProblemInstance::Chain(_) => "ssvm",
+        ProblemInstance::Multiclass(_) => "multiclass",
+    }
+}
+
+/// Bind on `addr`, accept the spec's worker fleet, and run the solve to
+/// completion — the CLI `apbcfw serve` entry point.
+pub fn serve(
+    spec: RunSpec,
+    problem: &str,
+    cfg: &Config,
+    addr: &str,
+    obs: &mut dyn Observer,
+) -> Result<Report> {
+    BoundServer::bind(spec, problem, cfg, addr)?.run(obs)
+}
+
+/// Self-hosted loopback mode: bind on `addr` (use port 0 for an ephemeral
+/// port), spawn the spec's worker fleet as in-process threads that connect
+/// back over real TCP (127.0.0.1), and run the solve — one process, but
+/// every oracle payload crosses the wire codec. This is the mode the
+/// distributed==in-process equivalence tests pin.
+pub fn solve_loopback(
+    spec: RunSpec,
+    problem: &str,
+    cfg: &Config,
+    addr: &str,
+) -> Result<Report> {
+    let workers = spec.engine.workers();
+    let server = BoundServer::bind(spec, problem, cfg, addr)?;
+    let bound = server.local_addr()?;
+    std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(workers);
+        for _ in 0..workers {
+            handles.push(
+                scope.spawn(move || super::worker::run(&bound.to_string())),
+            );
+        }
+        let report = server.run(&mut ())?;
+        for h in handles {
+            h.join()
+                .map_err(|_| anyhow!("loopback worker thread panicked"))??;
+        }
+        Ok(report)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> Config {
+        Config::parse("[gfl]\nd = 4\nn = 20\n").unwrap()
+    }
+
+    #[test]
+    fn bind_rejects_non_async_engines() {
+        let spec = RunSpec::new(Engine::sequential());
+        let err = BoundServer::bind(spec, "gfl", &cfg(), "127.0.0.1:0")
+            .map(|_| ())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("async"), "{err}");
+    }
+
+    #[test]
+    fn bind_rejects_simulation_knobs() {
+        let spec = RunSpec::new(
+            Engine::asynchronous(1)
+                .with_straggler(StragglerSpec::Single { p: 0.5 }),
+        );
+        let err = BoundServer::bind(spec, "gfl", &cfg(), "127.0.0.1:0")
+            .map(|_| ())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("straggler"), "{err}");
+        let spec =
+            RunSpec::new(Engine::asynchronous(1).with_work_multiplier(2, 5));
+        let err = BoundServer::bind(spec, "gfl", &cfg(), "127.0.0.1:0")
+            .map(|_| ())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("work_multiplier"), "{err}");
+    }
+
+    #[test]
+    fn bind_rejects_oversized_fanout() {
+        // gfl d=4 n=20 -> 19 blocks; 8 x 4 > 19.
+        let spec = RunSpec::new(Engine::asynchronous(4)).batch(8);
+        let err = BoundServer::bind(spec, "gfl", &cfg(), "127.0.0.1:0")
+            .map(|_| ())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("exceeds"), "{err}");
+    }
+
+    #[test]
+    fn bind_resolves_ephemeral_port() {
+        let spec = RunSpec::new(Engine::asynchronous(1));
+        let server =
+            BoundServer::bind(spec, "gfl", &cfg(), "127.0.0.1:0").unwrap();
+        assert_ne!(server.local_addr().unwrap().port(), 0);
+    }
+
+    #[test]
+    fn snapshot_body_selects_delta_vs_full() {
+        let master: Vec<f32> = (0..10).map(|i| i as f32).collect();
+        let mut log = VecDeque::new();
+        log.push_back((1u64, Some(vec![0..2usize])));
+        log.push_back((2u64, Some(vec![4..6usize])));
+        // Current worker: empty delta.
+        assert_eq!(
+            snapshot_body(&master, &log, 2, 2),
+            SnapshotBody::Delta(Vec::new())
+        );
+        // One behind: only version 2's ranges.
+        assert_eq!(
+            snapshot_body(&master, &log, 2, 1),
+            SnapshotBody::Delta(vec![(4, vec![4.0, 5.0])])
+        );
+        // Two behind: both versions' ranges.
+        assert_eq!(
+            snapshot_body(&master, &log, 2, 0),
+            SnapshotBody::Delta(vec![
+                (0, vec![0.0, 1.0]),
+                (4, vec![4.0, 5.0])
+            ])
+        );
+        // Sentinel / uncovered: full.
+        assert_eq!(
+            snapshot_body(&master, &log, 2, u64::MAX),
+            SnapshotBody::Full(master.clone())
+        );
+        log.push_back((3u64, None)); // dense write
+        assert_eq!(
+            snapshot_body(&master, &log, 3, 2),
+            SnapshotBody::Full(master.clone())
+        );
+    }
+}

@@ -1,0 +1,772 @@
+//! The versioned, length-prefixed binary wire codec.
+//!
+//! Hand-rolled little-endian encoding over any `Read`/`Write` pair (a
+//! `TcpStream` in production, a `Vec<u8>` cursor in the round-trip tests).
+//! The normative protocol specification — frame layout, message table,
+//! version and endianness rules, payload encodings, forward-compatibility
+//! notes — lives in `docs/WIRE.md`; this module is its reference
+//! implementation and must stay in sync with it.
+//!
+//! The design constraint that shapes everything here: a sparse
+//! [`OraclePayload`] is encoded as its `(idx, val, dim)` triple and decoded
+//! back into the same variant, so payload sparsity survives the wire
+//! end-to-end — the decoder never densifies (pinned by the codec tests in
+//! `rust/tests/net_transport.rs`).
+
+use crate::problems::{BlockOracle, OraclePayload};
+use anyhow::{anyhow, bail, ensure, Result};
+use std::io::{Read, Write};
+
+/// Frame magic: `b"apfw"` little-endian. A connection speaking anything
+/// else is rejected at the first frame.
+pub const MAGIC: u32 = u32::from_le_bytes(*b"apfw");
+
+/// Protocol version. Breaking changes bump this; a receiver rejects any
+/// frame whose version it does not implement.
+pub const VERSION: u16 = 1;
+
+/// Fixed frame header size in bytes: magic (4) + version (2) + type (1) +
+/// reserved (1) + payload length (4).
+pub const HEADER_BYTES: usize = 12;
+
+/// Upper bound on a frame's payload length (guards against reading a
+/// corrupt or hostile length prefix as an allocation size).
+pub const MAX_FRAME_BYTES: u32 = 1 << 28;
+
+/// Message type tags (the `docs/WIRE.md` message table).
+mod tag {
+    pub const HELLO: u8 = 1;
+    pub const SNAPSHOT_REQUEST: u8 = 2;
+    pub const SNAPSHOT: u8 = 3;
+    pub const UPDATE: u8 = 4;
+    pub const SHUTDOWN: u8 = 5;
+}
+
+/// Handshake sent by the server immediately after accepting a worker
+/// connection: everything the worker needs to rebuild the problem
+/// instance deterministically and run its oracle loop.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Hello {
+    /// Worker id assigned by the server (also the rng stream selector).
+    pub worker_id: u32,
+    /// Run seed (data generation and block sampling).
+    pub seed: u64,
+    /// Server minibatch size tau (informational; the server assembles).
+    pub tau: u32,
+    /// Worker fan-out batch tau_w: blocks solved per snapshot.
+    pub batch: u32,
+    /// The `run.payload` knob: 0 = auto, 1 = dense, 2 = sparse.
+    pub payload_mode: u8,
+    /// Expected block count n — the worker cross-checks its rebuilt
+    /// instance against this to catch configuration drift.
+    pub n_blocks: u32,
+    /// Registered problem name (`gfl`, `ssvm`, `multiclass`, `qp`).
+    pub problem: String,
+    /// Flattened config entries (`section.key`, `value`) the worker feeds
+    /// back into `ProblemInstance::from_config`.
+    pub config: Vec<(String, String)>,
+}
+
+/// A parameter snapshot body: the full vector, or only the ranges dirtied
+/// since the version the worker already holds.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SnapshotBody {
+    /// The whole parameter vector.
+    Full(Vec<f32>),
+    /// Dirty `(offset, values)` runs to splice into the worker's copy. An
+    /// empty delta is valid: the worker's copy is already current.
+    Delta(Vec<(u32, Vec<f32>)>),
+}
+
+/// One wire message. `Update` reuses the in-memory [`BlockOracle`] shape
+/// directly so the encode/decode path is the only representation change
+/// between a worker's slots and the server's assembler.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Msg {
+    /// Server -> worker handshake.
+    Hello(Hello),
+    /// Worker -> server: send me the parameter; I hold `have_version`
+    /// (`u64::MAX` = nothing yet, always answered with a full snapshot).
+    SnapshotRequest {
+        /// Version the worker already holds.
+        have_version: u64,
+    },
+    /// Server -> worker parameter snapshot at `version`.
+    Snapshot {
+        /// Server iteration the body reflects.
+        version: u64,
+        /// Full vector or dirty-range delta.
+        body: SnapshotBody,
+    },
+    /// Worker -> server multi-block oracle payload, all solved against the
+    /// snapshot of iteration `k_read`.
+    Update {
+        /// Snapshot version the oracles were computed from.
+        k_read: u64,
+        /// Sender worker id.
+        worker: u32,
+        /// Oracles for pairwise-distinct blocks (dense or sparse payloads,
+        /// shipped in their in-memory representation).
+        oracles: Vec<BlockOracle>,
+    },
+    /// Server -> worker: the solve is over; close the connection.
+    Shutdown,
+}
+
+impl Msg {
+    fn tag(&self) -> u8 {
+        match self {
+            Msg::Hello(_) => tag::HELLO,
+            Msg::SnapshotRequest { .. } => tag::SNAPSHOT_REQUEST,
+            Msg::Snapshot { .. } => tag::SNAPSHOT,
+            Msg::Update { .. } => tag::UPDATE,
+            Msg::Shutdown => tag::SHUTDOWN,
+        }
+    }
+}
+
+// --- primitive writers -------------------------------------------------
+
+fn put_u8(buf: &mut Vec<u8>, v: u8) {
+    buf.push(v);
+}
+
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(buf: &mut Vec<u8>, v: f64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f32s(buf: &mut Vec<u8>, vs: &[f32]) {
+    put_u32(buf, vs.len() as u32);
+    for v in vs {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+fn put_u32s(buf: &mut Vec<u8>, vs: &[u32]) {
+    put_u32(buf, vs.len() as u32);
+    for v in vs {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+fn put_str(buf: &mut Vec<u8>, s: &str) {
+    put_u32(buf, s.len() as u32);
+    buf.extend_from_slice(s.as_bytes());
+}
+
+// --- primitive readers (bounds-checked cursor) -------------------------
+
+/// Bounds-checked decode cursor over one frame payload. Every read is
+/// explicit about truncation so a short frame fails with a clean error
+/// instead of a panic.
+struct Dec<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Dec<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        ensure!(
+            self.pos + n <= self.buf.len(),
+            "truncated frame payload: wanted {} bytes at offset {}, have {}",
+            n,
+            self.pos,
+            self.buf.len()
+        );
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// A `u32` used as an element count: additionally bounded by the
+    /// remaining payload so a corrupt count cannot drive a huge
+    /// allocation before the truncation check fires.
+    fn count(&mut self, elem_bytes: usize) -> Result<usize> {
+        let n = self.u32()? as usize;
+        ensure!(
+            n.saturating_mul(elem_bytes) <= self.buf.len() - self.pos,
+            "frame count {} x {} bytes exceeds the remaining payload ({})",
+            n,
+            elem_bytes,
+            self.buf.len() - self.pos
+        );
+        Ok(n)
+    }
+
+    fn f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.count(4)?;
+        let raw = self.take(4 * n)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    fn u32s(&mut self) -> Result<Vec<u32>> {
+        let n = self.count(4)?;
+        let raw = self.take(4 * n)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    fn str(&mut self) -> Result<String> {
+        let n = self.count(1)?;
+        let raw = self.take(n)?;
+        Ok(std::str::from_utf8(raw)
+            .map_err(|_| anyhow!("frame string is not valid UTF-8"))?
+            .to_string())
+    }
+}
+
+// --- payload encoding ---------------------------------------------------
+
+/// Payload representation tags on the wire.
+const PAYLOAD_DENSE: u8 = 0;
+const PAYLOAD_SPARSE: u8 = 1;
+
+/// Encode an [`OraclePayload`] body. Dense: `0 | dim | f32[dim]`. Sparse:
+/// `1 | dim | nnz | u32 idx[nnz] | f32 val[nnz]` — the sparse triple ships
+/// as-is, never densified.
+fn put_payload(buf: &mut Vec<u8>, s: &OraclePayload) {
+    match s {
+        OraclePayload::Dense(v) => {
+            put_u8(buf, PAYLOAD_DENSE);
+            put_f32s(buf, v);
+        }
+        OraclePayload::Sparse { idx, val, dim } => {
+            put_u8(buf, PAYLOAD_SPARSE);
+            put_u32(buf, *dim);
+            put_u32s(buf, idx);
+            put_f32s(buf, val);
+        }
+    }
+}
+
+/// Decode an [`OraclePayload`], preserving the wire representation and
+/// validating the sparse invariants (parallel arrays; strictly ascending,
+/// in-bounds indices) so a corrupt frame cannot poison the apply path.
+fn get_payload(d: &mut Dec) -> Result<OraclePayload> {
+    match d.u8()? {
+        PAYLOAD_DENSE => Ok(OraclePayload::Dense(d.f32s()?)),
+        PAYLOAD_SPARSE => {
+            let dim = d.u32()?;
+            let idx = d.u32s()?;
+            let val = d.f32s()?;
+            ensure!(
+                idx.len() == val.len(),
+                "sparse payload idx/val length mismatch ({} vs {})",
+                idx.len(),
+                val.len()
+            );
+            ensure!(
+                idx.windows(2).all(|w| w[0] < w[1]),
+                "sparse payload indices are not strictly ascending"
+            );
+            ensure!(
+                idx.last().map_or(true, |&i| i < dim),
+                "sparse payload index out of bounds (dim {dim})"
+            );
+            Ok(OraclePayload::Sparse { idx, val, dim })
+        }
+        other => bail!("unknown payload representation tag {other}"),
+    }
+}
+
+// --- message encoding ---------------------------------------------------
+
+fn put_body(buf: &mut Vec<u8>, msg: &Msg) {
+    match msg {
+        Msg::Hello(h) => {
+            put_u32(buf, h.worker_id);
+            put_u64(buf, h.seed);
+            put_u32(buf, h.tau);
+            put_u32(buf, h.batch);
+            put_u8(buf, h.payload_mode);
+            put_u32(buf, h.n_blocks);
+            put_str(buf, &h.problem);
+            put_u32(buf, h.config.len() as u32);
+            for (k, v) in &h.config {
+                put_str(buf, k);
+                put_str(buf, v);
+            }
+        }
+        Msg::SnapshotRequest { have_version } => {
+            put_u64(buf, *have_version);
+        }
+        Msg::Snapshot { version, body } => {
+            put_u64(buf, *version);
+            match body {
+                SnapshotBody::Full(v) => {
+                    put_u8(buf, 0);
+                    put_f32s(buf, v);
+                }
+                SnapshotBody::Delta(runs) => {
+                    put_u8(buf, 1);
+                    put_u32(buf, runs.len() as u32);
+                    for (off, vals) in runs {
+                        put_u32(buf, *off);
+                        put_f32s(buf, vals);
+                    }
+                }
+            }
+        }
+        Msg::Update {
+            k_read,
+            worker,
+            oracles,
+        } => {
+            put_u64(buf, *k_read);
+            put_u32(buf, *worker);
+            put_u32(buf, oracles.len() as u32);
+            for o in oracles {
+                put_u32(buf, o.block as u32);
+                put_f64(buf, o.ls);
+                put_payload(buf, &o.s);
+            }
+        }
+        Msg::Shutdown => {}
+    }
+}
+
+fn get_body(tag_byte: u8, payload: &[u8]) -> Result<Msg> {
+    let mut d = Dec::new(payload);
+    let msg = match tag_byte {
+        tag::HELLO => {
+            let worker_id = d.u32()?;
+            let seed = d.u64()?;
+            let tau = d.u32()?;
+            let batch = d.u32()?;
+            let payload_mode = d.u8()?;
+            let n_blocks = d.u32()?;
+            let problem = d.str()?;
+            let npairs = d.count(8)?;
+            let mut config = Vec::with_capacity(npairs);
+            for _ in 0..npairs {
+                let k = d.str()?;
+                let v = d.str()?;
+                config.push((k, v));
+            }
+            Msg::Hello(Hello {
+                worker_id,
+                seed,
+                tau,
+                batch,
+                payload_mode,
+                n_blocks,
+                problem,
+                config,
+            })
+        }
+        tag::SNAPSHOT_REQUEST => Msg::SnapshotRequest {
+            have_version: d.u64()?,
+        },
+        tag::SNAPSHOT => {
+            let version = d.u64()?;
+            let body = match d.u8()? {
+                0 => SnapshotBody::Full(d.f32s()?),
+                1 => {
+                    let nruns = d.count(8)?;
+                    let mut runs = Vec::with_capacity(nruns);
+                    for _ in 0..nruns {
+                        let off = d.u32()?;
+                        runs.push((off, d.f32s()?));
+                    }
+                    SnapshotBody::Delta(runs)
+                }
+                other => bail!("unknown snapshot body tag {other}"),
+            };
+            Msg::Snapshot { version, body }
+        }
+        tag::UPDATE => {
+            let k_read = d.u64()?;
+            let worker = d.u32()?;
+            let count = d.count(13)?;
+            let mut oracles = Vec::with_capacity(count);
+            for _ in 0..count {
+                let block = d.u32()? as usize;
+                let ls = d.f64()?;
+                let s = get_payload(&mut d)?;
+                oracles.push(BlockOracle { block, s, ls });
+            }
+            Msg::Update {
+                k_read,
+                worker,
+                oracles,
+            }
+        }
+        tag::SHUTDOWN => Msg::Shutdown,
+        other => bail!("unknown message type {other} (protocol v{VERSION})"),
+    };
+    // Forward compatibility: trailing bytes beyond what this version
+    // consumes are permitted (additive extension); a SHORT payload is
+    // rejected by the cursor above.
+    Ok(msg)
+}
+
+// --- framing ------------------------------------------------------------
+
+/// Encode `msg` as one complete frame (header + payload) into `buf`
+/// (cleared first; capacity reused across calls). Returns the frame size
+/// in bytes — the unit of the `wire_*_bytes` telemetry counters.
+pub fn encode_frame(msg: &Msg, buf: &mut Vec<u8>) -> usize {
+    buf.clear();
+    put_u32(buf, MAGIC);
+    buf.extend_from_slice(&VERSION.to_le_bytes());
+    put_u8(buf, msg.tag());
+    put_u8(buf, 0); // reserved
+    put_u32(buf, 0); // payload length backpatched below
+    put_body(buf, msg);
+    let len = (buf.len() - HEADER_BYTES) as u32;
+    buf[8..12].copy_from_slice(&len.to_le_bytes());
+    buf.len()
+}
+
+/// Write `msg` as one frame. Returns the bytes put on the wire. `buf` is
+/// the caller's encode scratch (reused across calls). Errors — without
+/// emitting anything — on a payload above [`MAX_FRAME_BYTES`]: every
+/// compliant decoder would reject such a frame, and sending it anyway
+/// would surface as a confusing peer-side disconnect instead of this
+/// sender-side error.
+pub fn write_frame(
+    w: &mut impl Write,
+    msg: &Msg,
+    buf: &mut Vec<u8>,
+) -> Result<usize> {
+    let n = encode_frame(msg, buf);
+    ensure!(
+        n - HEADER_BYTES <= MAX_FRAME_BYTES as usize,
+        "refusing to send a {}-byte frame payload (cap: {MAX_FRAME_BYTES}; \
+         is the parameter dimension beyond the wire protocol's design \
+         range?)",
+        n - HEADER_BYTES
+    );
+    w.write_all(buf)?;
+    Ok(n)
+}
+
+/// Read one frame. Returns `Ok(None)` on a clean end-of-stream (the peer
+/// closed before any header byte); errors on bad magic, an unsupported
+/// version, an unknown message type, an oversized length prefix, or a
+/// frame truncated mid-way.
+pub fn read_frame(r: &mut impl Read) -> Result<Option<(Msg, usize)>> {
+    let mut header = [0u8; HEADER_BYTES];
+    // Distinguish clean EOF (no bytes at a frame boundary) from a header
+    // truncated part-way through.
+    let mut got = 0usize;
+    while got < HEADER_BYTES {
+        let n = r.read(&mut header[got..])?;
+        if n == 0 {
+            if got == 0 {
+                return Ok(None);
+            }
+            bail!("truncated frame header ({got} of {HEADER_BYTES} bytes)");
+        }
+        got += n;
+    }
+    let magic = u32::from_le_bytes(header[0..4].try_into().unwrap());
+    ensure!(
+        magic == MAGIC,
+        "bad frame magic {magic:#010x} (expected {MAGIC:#010x}) — not an \
+         apbcfw peer?"
+    );
+    let version = u16::from_le_bytes(header[4..6].try_into().unwrap());
+    ensure!(
+        version == VERSION,
+        "unsupported protocol version {version} (this build speaks v{VERSION})"
+    );
+    let tag_byte = header[6];
+    let len = u32::from_le_bytes(header[8..12].try_into().unwrap());
+    ensure!(
+        len <= MAX_FRAME_BYTES,
+        "frame payload length {len} exceeds the {MAX_FRAME_BYTES}-byte cap"
+    );
+    let mut payload = vec![0u8; len as usize];
+    r.read_exact(&mut payload)
+        .map_err(|e| anyhow!("truncated frame payload: {e}"))?;
+    let msg = get_body(tag_byte, &payload)?;
+    Ok(Some((msg, HEADER_BYTES + len as usize)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Encode-then-decode helper over an in-memory cursor.
+    fn roundtrip(msg: &Msg) -> Msg {
+        let mut buf = Vec::new();
+        let n = encode_frame(msg, &mut buf);
+        assert_eq!(n, buf.len());
+        let mut cursor: &[u8] = &buf;
+        let (decoded, consumed) =
+            read_frame(&mut cursor).unwrap().expect("not EOF");
+        assert_eq!(consumed, n);
+        assert!(cursor.is_empty(), "frame must consume itself exactly");
+        decoded
+    }
+
+    #[test]
+    fn roundtrips_every_message_type() {
+        let msgs = [
+            Msg::Hello(Hello {
+                worker_id: 3,
+                seed: 99,
+                tau: 4,
+                batch: 2,
+                payload_mode: 2,
+                n_blocks: 39,
+                problem: "gfl".into(),
+                config: vec![
+                    ("gfl.d".into(), "6".into()),
+                    ("run.seed".into(), "5".into()),
+                ],
+            }),
+            Msg::SnapshotRequest {
+                have_version: u64::MAX,
+            },
+            Msg::Snapshot {
+                version: 17,
+                body: SnapshotBody::Full(vec![1.0, -2.5, f32::MIN_POSITIVE]),
+            },
+            Msg::Snapshot {
+                version: 18,
+                body: SnapshotBody::Delta(vec![
+                    (0, vec![0.5]),
+                    (7, vec![1.0, 2.0]),
+                ]),
+            },
+            Msg::Snapshot {
+                version: 18,
+                body: SnapshotBody::Delta(vec![]),
+            },
+            Msg::Update {
+                k_read: 12,
+                worker: 1,
+                oracles: vec![
+                    BlockOracle::dense(4, vec![0.0, 1.0], 0.25),
+                    BlockOracle {
+                        block: 9,
+                        s: OraclePayload::Sparse {
+                            idx: vec![0, 5],
+                            val: vec![-1.0, 3.5],
+                            dim: 8,
+                        },
+                        ls: -0.5,
+                    },
+                    BlockOracle {
+                        block: 2,
+                        s: OraclePayload::Sparse {
+                            idx: vec![],
+                            val: vec![],
+                            dim: 8,
+                        },
+                        ls: 0.0,
+                    },
+                ],
+            },
+            Msg::Shutdown,
+        ];
+        for msg in &msgs {
+            assert_eq!(&roundtrip(msg), msg);
+        }
+    }
+
+    #[test]
+    fn sparse_payload_survives_the_wire_sparse() {
+        let msg = Msg::Update {
+            k_read: 0,
+            worker: 0,
+            oracles: vec![BlockOracle {
+                block: 0,
+                s: OraclePayload::Sparse {
+                    idx: vec![2],
+                    val: vec![1.0],
+                    dim: 100,
+                },
+                ls: 0.0,
+            }],
+        };
+        match roundtrip(&msg) {
+            Msg::Update { oracles, .. } => match &oracles[0].s {
+                OraclePayload::Sparse { idx, val, dim } => {
+                    assert_eq!((idx.as_slice(), val.as_slice(), *dim),
+                        ([2u32].as_slice(), [1.0f32].as_slice(), 100));
+                }
+                other => panic!("densified on the wire: {other:?}"),
+            },
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn truncation_anywhere_is_rejected_not_a_panic() {
+        let msg = Msg::Update {
+            k_read: 5,
+            worker: 0,
+            oracles: vec![BlockOracle {
+                block: 1,
+                s: OraclePayload::Sparse {
+                    idx: vec![1, 3],
+                    val: vec![0.5, -0.5],
+                    dim: 6,
+                },
+                ls: 1.5,
+            }],
+        };
+        let mut buf = Vec::new();
+        let n = encode_frame(&msg, &mut buf);
+        for cut in 1..n {
+            let mut cursor: &[u8] = &buf[..cut];
+            assert!(
+                read_frame(&mut cursor).is_err(),
+                "cut at {cut} of {n} must error"
+            );
+        }
+        // Zero bytes is the one clean case: EOF at a frame boundary.
+        let mut empty: &[u8] = &[];
+        assert!(read_frame(&mut empty).unwrap().is_none());
+    }
+
+    #[test]
+    fn bad_magic_version_and_type_are_rejected() {
+        let mut buf = Vec::new();
+        encode_frame(&Msg::Shutdown, &mut buf);
+
+        let mut bad = buf.clone();
+        bad[0] ^= 0xff;
+        let err = read_frame(&mut bad.as_slice()).unwrap_err().to_string();
+        assert!(err.contains("magic"), "{err}");
+
+        let mut bad = buf.clone();
+        bad[4] = 0xfe; // version
+        let err = read_frame(&mut bad.as_slice()).unwrap_err().to_string();
+        assert!(err.contains("version"), "{err}");
+
+        let mut bad = buf.clone();
+        bad[6] = 0xee; // message type
+        let err = read_frame(&mut bad.as_slice()).unwrap_err().to_string();
+        assert!(err.contains("message type"), "{err}");
+
+        let mut bad = buf;
+        bad[8..12].copy_from_slice(&u32::MAX.to_le_bytes());
+        let err = read_frame(&mut bad.as_slice()).unwrap_err().to_string();
+        assert!(err.contains("cap"), "{err}");
+    }
+
+    #[test]
+    fn corrupt_sparse_invariants_are_rejected() {
+        // Descending indices.
+        let msg = Msg::Update {
+            k_read: 0,
+            worker: 0,
+            oracles: vec![BlockOracle {
+                block: 0,
+                s: OraclePayload::Sparse {
+                    idx: vec![5, 2],
+                    val: vec![1.0, 2.0],
+                    dim: 8,
+                },
+                ls: 0.0,
+            }],
+        };
+        let mut buf = Vec::new();
+        encode_frame(&msg, &mut buf);
+        let err = read_frame(&mut buf.as_slice()).unwrap_err().to_string();
+        assert!(err.contains("ascending"), "{err}");
+
+        // Out-of-bounds index.
+        let msg = Msg::Update {
+            k_read: 0,
+            worker: 0,
+            oracles: vec![BlockOracle {
+                block: 0,
+                s: OraclePayload::Sparse {
+                    idx: vec![8],
+                    val: vec![1.0],
+                    dim: 8,
+                },
+                ls: 0.0,
+            }],
+        };
+        encode_frame(&msg, &mut buf);
+        let err = read_frame(&mut buf.as_slice()).unwrap_err().to_string();
+        assert!(err.contains("bounds"), "{err}");
+    }
+
+    #[test]
+    fn trailing_bytes_are_tolerated_for_forward_compat() {
+        // A v1 decoder must accept a payload longer than it consumes
+        // (additive extension by a newer minor revision).
+        let mut buf = Vec::new();
+        encode_frame(
+            &Msg::SnapshotRequest { have_version: 7 },
+            &mut buf,
+        );
+        buf.extend_from_slice(&[0xab, 0xcd]); // extension bytes
+        let len = (buf.len() - HEADER_BYTES) as u32;
+        buf[8..12].copy_from_slice(&len.to_le_bytes());
+        let (msg, n) = read_frame(&mut buf.as_slice()).unwrap().unwrap();
+        assert_eq!(msg, Msg::SnapshotRequest { have_version: 7 });
+        assert_eq!(n, buf.len());
+    }
+
+    #[test]
+    fn frame_sizes_reflect_payload_sparsity() {
+        // The whole point of the sparse pipeline: a 1-hot vertex over a
+        // large dim ships O(1) bytes where dense ships O(dim).
+        let sparse = Msg::Update {
+            k_read: 0,
+            worker: 0,
+            oracles: vec![BlockOracle {
+                block: 0,
+                s: OraclePayload::Sparse {
+                    idx: vec![500],
+                    val: vec![1.0],
+                    dim: 1000,
+                },
+                ls: 0.0,
+            }],
+        };
+        let mut dense_s = vec![0.0f32; 1000];
+        dense_s[500] = 1.0;
+        let dense = Msg::Update {
+            k_read: 0,
+            worker: 0,
+            oracles: vec![BlockOracle::dense(0, dense_s, 0.0)],
+        };
+        let mut buf = Vec::new();
+        let ns = encode_frame(&sparse, &mut buf);
+        let nd = encode_frame(&dense, &mut buf);
+        assert!(ns < 100, "sparse frame is {ns} bytes");
+        assert!(nd > 4000, "dense frame is {nd} bytes");
+    }
+}

@@ -1,0 +1,240 @@
+//! The `worker` role: connect to a serve-role host, pull parameter
+//! snapshots, and stream batched oracle payloads back over the wire.
+//!
+//! A worker is stateless beyond its parameter copy: the handshake
+//! ([`super::wire::Hello`]) carries the problem name, the flattened config
+//! (so the worker rebuilds the identical [`ProblemInstance`] — data
+//! generation is deterministic in the seed), the fan-out batch, and the
+//! payload-representation knob. The solve loop then strictly alternates:
+//! request a snapshot (full on first contact, dirty-range delta after),
+//! solve `batch` distinct blocks against it with the same
+//! [`pick_blocks`]/[`oracle_into`] machinery as the in-process engines,
+//! and ship one multi-block `Update` frame — sparse payloads stay sparse
+//! from the LMO to the server's assembler.
+//!
+//! Worker `id` samples blocks from rng stream `2 + id`: stream 2 is the
+//! sequential delayed engine's stream ([`crate::solver::delayed`] draws
+//! from `Pcg64::new(seed, 2)`), so a one-worker loopback solve replays the
+//! in-process delayed engine draw-for-draw — the bit-identity pinned in
+//! `rust/tests/net_transport.rs`.
+//!
+//! [`oracle_into`]: crate::problems::Problem::oracle_into
+//! [`pick_blocks`]: crate::coordinator::pick_blocks
+
+use super::wire::{self, Hello, Msg, SnapshotBody};
+use super::{payload_mode_from_tag, worker_rng_stream};
+use crate::coordinator::pick_blocks;
+use crate::problems::{BlockOracle, OracleScratch, Problem};
+use crate::run::ProblemInstance;
+use crate::util::config::Config;
+use crate::util::rng::Pcg64;
+use anyhow::{anyhow, bail, ensure, Result};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+/// What a worker did over one connection's lifetime.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct WorkerSummary {
+    /// Worker id assigned by the server.
+    pub worker_id: u32,
+    /// Snapshot-pull/solve/update rounds completed.
+    pub rounds: u64,
+    /// Oracle subproblems solved.
+    pub oracle_calls: u64,
+    /// Frame bytes sent (updates + snapshot requests).
+    pub tx_bytes: u64,
+    /// Frame bytes received (handshake + snapshots + shutdown).
+    pub rx_bytes: u64,
+    /// Whether the connection ended with an explicit `Shutdown` frame or
+    /// a clean EOF. `false` means a transport failure ended the loop —
+    /// possibly mid-solve, though a server teardown can also surface as a
+    /// reset when frames race the close, so this is a diagnostic signal,
+    /// not an error.
+    pub clean: bool,
+}
+
+/// Connect to `addr`, complete the handshake, and run the oracle loop
+/// until the server shuts the solve down. A connection that ends after the
+/// handshake (shutdown frame, EOF, or reset — the server closes sockets
+/// on stop) is a clean exit; failures *before* the handshake and protocol
+/// violations are errors.
+pub fn run(addr: &str) -> Result<WorkerSummary> {
+    let stream = TcpStream::connect(addr)?;
+    stream.set_nodelay(true).ok();
+    run_on(stream)
+}
+
+/// [`run`], but retry the initial connect until `timeout` elapses — the
+/// CLI uses this so `apbcfw worker` can be started before (or seconds
+/// after) its server.
+pub fn run_with_retry(addr: &str, timeout: Duration) -> Result<WorkerSummary> {
+    let deadline = Instant::now() + timeout;
+    let stream = loop {
+        match TcpStream::connect(addr) {
+            Ok(s) => break s,
+            Err(e) => {
+                if Instant::now() >= deadline {
+                    return Err(anyhow!(
+                        "could not connect to {addr} within {timeout:?}: {e}"
+                    ));
+                }
+                std::thread::sleep(Duration::from_millis(100));
+            }
+        }
+    };
+    stream.set_nodelay(true).ok();
+    run_on(stream)
+}
+
+/// Run the worker protocol over an established connection.
+fn run_on(mut stream: TcpStream) -> Result<WorkerSummary> {
+    let mut rx_bytes = 0u64;
+    let (hello, nbytes) = match wire::read_frame(&mut stream)? {
+        Some((Msg::Hello(h), n)) => (h, n),
+        Some((other, _)) => {
+            bail!("expected a Hello handshake, got {other:?}")
+        }
+        None => bail!("server closed the connection before the handshake"),
+    };
+    rx_bytes += nbytes as u64;
+
+    // Rebuild the problem instance from the shipped config; data
+    // generation is seeded, so this is the server's instance bit-for-bit.
+    let mut cfg = Config::new();
+    for (key, value) in &hello.config {
+        cfg.set(key, value);
+    }
+    let instance = ProblemInstance::from_config(&hello.problem, &cfg)?;
+    ensure!(
+        instance.num_blocks() == hello.n_blocks as usize,
+        "configuration drift: server expects {} blocks, this worker built \
+         {} — are the binaries/config in sync?",
+        hello.n_blocks,
+        instance.num_blocks()
+    );
+    match &instance {
+        ProblemInstance::Gfl(p) => solve_loop(p, &hello, stream, rx_bytes),
+        ProblemInstance::Qp(p) => solve_loop(p, &hello, stream, rx_bytes),
+        ProblemInstance::Chain(p) => solve_loop(p, &hello, stream, rx_bytes),
+        ProblemInstance::Multiclass(p) => {
+            solve_loop(p, &hello, stream, rx_bytes)
+        }
+    }
+}
+
+/// The generic oracle loop: pull, solve `batch` blocks, push, repeat.
+fn solve_loop<P: Problem>(
+    problem: &P,
+    hello: &Hello,
+    mut stream: TcpStream,
+    mut rx_bytes: u64,
+) -> Result<WorkerSummary> {
+    let n = problem.num_blocks();
+    let batch = (hello.batch as usize).clamp(1, n);
+    let mode = payload_mode_from_tag(hello.payload_mode).ok_or_else(|| {
+        anyhow!("unknown payload mode tag {}", hello.payload_mode)
+    })?;
+    let pkind = mode.resolve(problem.preferred_payload());
+    let mut rng =
+        Pcg64::new(hello.seed, worker_rng_stream(hello.worker_id));
+    let mut param: Vec<f32> = Vec::new();
+    let mut have: u64 = u64::MAX; // nothing yet -> full snapshot
+    let mut blocks: Vec<usize> = Vec::new();
+    let mut oscratch = OracleScratch::<P>::default();
+    let mut slots: Vec<BlockOracle> =
+        (0..batch).map(|_| BlockOracle::empty_with(pkind)).collect();
+    let mut ebuf: Vec<u8> = Vec::new();
+    let mut summary = WorkerSummary {
+        worker_id: hello.worker_id,
+        ..Default::default()
+    };
+
+    loop {
+        // ---- pull ----
+        match wire::write_frame(
+            &mut stream,
+            &Msg::SnapshotRequest { have_version: have },
+            &mut ebuf,
+        ) {
+            Ok(nb) => summary.tx_bytes += nb as u64,
+            // The server closes sockets on stop; a failed send after the
+            // handshake is the shutdown path, not an error.
+            Err(_) => break,
+        }
+        let (version, body) = match wire::read_frame(&mut stream) {
+            Ok(Some((Msg::Snapshot { version, body }, nb))) => {
+                rx_bytes += nb as u64;
+                (version, body)
+            }
+            Ok(Some((Msg::Shutdown, nb))) => {
+                rx_bytes += nb as u64;
+                summary.clean = true;
+                break;
+            }
+            Ok(Some((other, _))) => {
+                bail!("expected Snapshot or Shutdown, got {other:?}")
+            }
+            Ok(None) => {
+                summary.clean = true;
+                break;
+            }
+            Err(_) => break,
+        };
+        match body {
+            SnapshotBody::Full(values) => {
+                ensure!(
+                    values.len() == problem.param_dim(),
+                    "snapshot dimension {} != parameter dimension {}",
+                    values.len(),
+                    problem.param_dim()
+                );
+                param = values;
+            }
+            SnapshotBody::Delta(runs) => {
+                ensure!(
+                    !param.is_empty(),
+                    "delta snapshot before any full snapshot"
+                );
+                for (off, values) in &runs {
+                    let lo = *off as usize;
+                    let hi = lo + values.len();
+                    ensure!(
+                        hi <= param.len(),
+                        "delta run {lo}..{hi} out of bounds (dim {})",
+                        param.len()
+                    );
+                    param[lo..hi].copy_from_slice(values);
+                }
+            }
+        }
+        have = version;
+
+        // ---- solve ----
+        pick_blocks(&mut rng, n, batch, &mut blocks);
+        for (slot, &block) in slots.iter_mut().zip(blocks.iter()) {
+            problem.oracle_into(&param, block, &mut oscratch, slot);
+            summary.oracle_calls += 1;
+        }
+
+        // ---- push ----
+        // Encoding borrows the slots, so their buffers are reused across
+        // rounds — the wire path adds no per-oracle allocation on the
+        // worker side.
+        let msg = Msg::Update {
+            k_read: version,
+            worker: hello.worker_id,
+            oracles: std::mem::take(&mut slots),
+        };
+        let sent = wire::write_frame(&mut stream, &msg, &mut ebuf);
+        if let Msg::Update { oracles, .. } = msg {
+            slots = oracles;
+        }
+        match sent {
+            Ok(nb) => summary.tx_bytes += nb as u64,
+            Err(_) => break,
+        }
+        summary.rounds += 1;
+    }
+    summary.rx_bytes = rx_bytes;
+    Ok(summary)
+}

@@ -399,7 +399,7 @@ impl ExactSizeIterator for PayloadDenseIter<'_> {}
 /// QP: the vertex), or the derived primal direction for structural SVM
 /// (`w_s = psi_i(y*)/(lambda n)`) — dense or sparse per the module docs'
 /// representation contract.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct BlockOracle {
     /// Block index in [0, n).
     pub block: usize,

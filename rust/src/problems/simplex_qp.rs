@@ -298,29 +298,76 @@ impl Problem for SimplexQp {
         batch: &[BlockOracle],
         opts: ApplyOptions,
     ) -> ApplyInfo {
+        // One coupling pass z = A^T x shared by every block gap in the
+        // batch (each `block_gap` call would recompute it from scratch:
+        // O(tau * dim * p) -> O(dim * p + tau * m * p)). The z bits are a
+        // deterministic function of `param`, so sharing is bit-identical
+        // to the per-oracle recompute.
+        let mut z: Vec<f64> = Vec::new();
+        let mut g: Vec<f64> = Vec::new();
+        self.at_x_into(param, &mut z);
         let mut batch_gap = 0.0f64;
         for o in batch {
-            batch_gap += self.block_gap(&(), param, o);
+            self.block_gradient_given_z(param, o.block, &z, &mut g);
+            let lo = o.block * self.m;
+            debug_assert_eq!(o.s.dim(), self.m);
+            // Same dense/sparse split — and the same per-block grouping —
+            // as summing `block_gap`, so the reported gap is bit-identical
+            // to the per-oracle path it replaces.
+            let mut gap_o = 0.0f64;
+            match &o.s {
+                OraclePayload::Dense(s) => {
+                    for (j, gj) in g.iter().enumerate() {
+                        gap_o += (param[lo + j] as f64 - s[j] as f64) * gj;
+                    }
+                }
+                OraclePayload::Sparse { .. } => {
+                    for (j, sj) in o.s.dense_iter().enumerate() {
+                        gap_o += (param[lo + j] as f64 - sj as f64) * g[j];
+                    }
+                }
+            }
+            batch_gap += gap_o;
         }
         let gamma = if opts.line_search {
-            // Direction supported on the batch blocks.
-            let mut dir = vec![0.0f32; self.dim()];
+            // Curvature d^T Q d = b ||d||^2 + mu ||A^T d||^2 for the
+            // direction d = s - x, which is supported on the batch blocks
+            // only: accumulate zd = A^T d over those support rows instead
+            // of materializing a dim-length dense direction and scanning
+            // all of A (the ROADMAP "support rows only" item from the
+            // sparse-payload PR). Dense and sparse payloads walk the same
+            // rows in the same order, so the step stays bit-identical
+            // across representations.
+            let mut zd = vec![0.0f64; self.p];
+            let mut norm_sq = 0.0f64;
             for o in batch {
                 let lo = o.block * self.m;
+                let mut support_row = |j: usize, sj: f32| {
+                    let d = sj - param[lo + j];
+                    if d != 0.0 {
+                        norm_sq += d as f64 * d as f64;
+                        let r = lo + j;
+                        let row = &self.a[r * self.p..(r + 1) * self.p];
+                        for (zj, &arj) in zd.iter_mut().zip(row.iter()) {
+                            *zj += d as f64 * arj as f64;
+                        }
+                    }
+                };
                 match &o.s {
                     OraclePayload::Dense(s) => {
-                        for j in 0..self.m {
-                            dir[lo + j] = s[j] - param[lo + j];
+                        for (j, &sj) in s.iter().enumerate() {
+                            support_row(j, sj);
                         }
                     }
                     OraclePayload::Sparse { .. } => {
                         for (j, sj) in o.s.dense_iter().enumerate() {
-                            dir[lo + j] = sj - param[lo + j];
+                            support_row(j, sj);
                         }
                     }
                 }
             }
-            let quad = self.quad_form(&dir);
+            let zz: f64 = zd.iter().map(|v| v * v).sum();
+            let quad = self.b * norm_sq + self.mu * zz;
             if quad <= 0.0 {
                 1.0
             } else {
@@ -516,6 +563,69 @@ mod tests {
         let r1 = q1.incoherence(0, 1);
         let r2 = q2.incoherence(0, 1);
         assert!((r2 - 2.0 * r1).abs() < 1e-9, "{r1} {r2}");
+    }
+
+    #[test]
+    fn support_row_line_search_matches_dense_direction_reference() {
+        // The apply's curvature pass accumulates A^T d over the batch's
+        // support rows only; it must agree with the materialized-direction
+        // reference (`quad_form`) it replaced, and the fused batch gap
+        // must stay bit-identical to summing `block_gap`.
+        let qp = instance(0.9);
+        let mut x = qp.init_param();
+        let mut rng = Pcg64::seeded(7);
+        for _ in 0..10 {
+            let i = rng.below(qp.n);
+            let o = qp.oracle(&x, i);
+            qp.apply(
+                &mut (),
+                &mut x,
+                &[o],
+                ApplyOptions {
+                    gamma: 0.3,
+                    line_search: false,
+                },
+            );
+        }
+        // Mixed-representation 3-block batch.
+        let mut batch =
+            vec![qp.oracle(&x, 0), qp.oracle(&x, 3), qp.oracle(&x, 5)];
+        let mut sc = QpScratch::default();
+        let mut sparse = BlockOracle::empty_with(PayloadKind::Sparse);
+        qp.oracle_into(&x, 3, &mut sc, &mut sparse);
+        batch[1] = sparse;
+
+        let mut gap_ref = 0.0f64;
+        for o in &batch {
+            gap_ref += qp.block_gap(&(), &x, o);
+        }
+        let mut dir = vec![0.0f32; qp.dim()];
+        for o in &batch {
+            let lo = o.block * qp.m;
+            for (j, sj) in o.s.dense_iter().enumerate() {
+                dir[lo + j] = sj - x[lo + j];
+            }
+        }
+        let quad_ref = qp.quad_form(&dir);
+        let gamma_ref = (gap_ref / quad_ref).clamp(0.0, 1.0) as f32;
+
+        let mut x2 = x.clone();
+        let info = qp.apply(
+            &mut (),
+            &mut x2,
+            &batch,
+            ApplyOptions {
+                gamma: 0.0,
+                line_search: true,
+            },
+        );
+        assert_eq!(info.batch_gap, gap_ref, "fused gap must be bit-identical");
+        let tol = 1e-5f32 * gamma_ref.abs().max(1e-3);
+        assert!(
+            (info.gamma - gamma_ref).abs() <= tol,
+            "gamma {} vs reference {gamma_ref}",
+            info.gamma
+        );
     }
 
     #[test]

@@ -76,6 +76,9 @@
 //!
 //! Custom problems outside the registry can skip step 2 and call
 //! [`Runner::solve_problem`] / [`Runner::solve_projectable`] directly.
+// This module and `net/` are the crate's public API surface; undocumented
+// public items are a CI failure (`cargo doc` runs with warnings denied).
+#![deny(missing_docs)]
 
 pub mod observe;
 pub mod registry;
@@ -108,6 +111,7 @@ impl Runner {
         Ok(Runner { spec })
     }
 
+    /// The validated spec this runner executes.
     pub fn spec(&self) -> &RunSpec {
         &self.spec
     }
@@ -117,7 +121,8 @@ impl Runner {
     /// here, with the problem in hand, can `batch * workers <= n` be
     /// enforced (each worker needs `batch` distinct blocks per round, and
     /// the fleet must not cover more than one full pass per snapshot).
-    fn check_batch(&self, n: usize) -> Result<()> {
+    /// Crate-visible so the net serve role applies the identical rule.
+    pub(crate) fn check_batch(&self, n: usize) -> Result<()> {
         let batch = self.spec.batch;
         if batch > 1 {
             let workers = self.spec.engine.workers();

@@ -49,6 +49,7 @@ pub struct CollectObserver {
 }
 
 impl CollectObserver {
+    /// An empty collector.
     pub fn new() -> Self {
         Self::default()
     }
@@ -67,11 +68,16 @@ impl Observer for CollectObserver {
 /// A live solve event as shipped by [`ChannelObserver`].
 #[derive(Debug, Clone, Copy)]
 pub enum LiveEvent {
+    /// One server apply step (see [`Observer::on_apply`]).
     Apply {
+        /// Server iteration count after the step.
         iter: u64,
+        /// Step size actually used.
         gamma: f32,
+        /// Applied batch's surrogate-gap mass.
         batch_gap: f64,
     },
+    /// One recorded convergence sample.
     Sample(Sample),
 }
 

@@ -39,9 +39,13 @@ pub(crate) fn parameter_space_error(
 /// A built-in problem, constructed from config and solvable by any
 /// supported engine through [`Runner::solve`](crate::run::Runner::solve).
 pub enum ProblemInstance {
+    /// Group Fused Lasso dual (`gfl`).
     Gfl(Gfl),
+    /// Simplex-product QP (`qp`).
     Qp(SimplexQp),
+    /// Chain-structured SVM on OCR-like data (`ssvm`).
     Chain(ChainSsvm),
+    /// Multiclass SVM on mixture data (`multiclass`).
     Multiclass(MulticlassSsvm),
 }
 

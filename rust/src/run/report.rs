@@ -25,6 +25,7 @@ pub struct Report {
     /// server iterations). Sequential engines have zero collisions and
     /// count every non-dropped oracle call as applied.
     pub counters: CounterSnapshot,
+    /// Total solve wall-clock seconds.
     pub elapsed_s: f64,
     /// Wall-clock seconds per effective data pass (n applied updates);
     /// infinite when nothing was applied.
@@ -37,14 +38,17 @@ impl Report {
         self.trace.last()
     }
 
+    /// Total oracle subproblems solved.
     pub fn oracle_calls(&self) -> u64 {
         self.counters.oracle_calls
     }
 
+    /// Server iterations completed.
     pub fn iterations(&self) -> u64 {
         self.counters.iterations
     }
 
+    /// Oracle calls whose updates were dropped (staleness/straggler).
     pub fn dropped(&self) -> u64 {
         self.counters.dropped
     }
@@ -74,10 +78,14 @@ impl Report {
                 dropped: r.dropped,
                 iterations: r.iterations,
                 // Sequential solvers read the parameter in place and ship
-                // nothing over a channel.
+                // nothing over a channel or the wire.
                 snapshot_reads: 0,
                 payload_nnz: 0,
                 payload_bytes: 0,
+                wire_tx_bytes: 0,
+                wire_rx_bytes: 0,
+                delay_sum: 0,
+                delay_max: 0,
             },
             elapsed_s: r.elapsed_s,
             secs_per_pass: if passes > 0.0 {

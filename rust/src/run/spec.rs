@@ -35,9 +35,15 @@ pub enum StragglerSpec {
     /// All workers at full speed.
     None,
     /// One straggler (worker 0) with return probability `p` (Fig 3a).
-    Single { p: f64 },
+    Single {
+        /// Worker 0's per-round return probability.
+        p: f64,
+    },
     /// Heterogeneous fleet `p_i = theta + i/T` (Fig 3b).
-    Heterogeneous { theta: f64 },
+    Heterogeneous {
+        /// Base return probability theta.
+        theta: f64,
+    },
     /// Explicit per-worker probabilities; the arity is validated against
     /// the engine's worker count when the spec is lowered.
     Explicit(StragglerModel),
@@ -119,6 +125,7 @@ pub enum Engine {
     Batch,
     /// Sequential BCFW with iid oracle staleness (paper §2.3/§3.4, Fig 4).
     Delayed {
+        /// The iid staleness distribution.
         model: DelayModel,
         /// Snapshot-history capacity (delays beyond it are dropped).
         history: usize,
@@ -130,7 +137,9 @@ pub enum Engine {
     Pbcd,
     /// AP-BCFW: asynchronous workers + minibatch server (Algorithms 1-2).
     Async {
+        /// Worker-thread count T.
         workers: usize,
+        /// Simulated straggler behaviour.
         straggler: StragglerSpec,
         /// Drop updates staler than k/2 (paper Thm 4).
         staleness_rule: bool,
@@ -142,17 +151,24 @@ pub enum Engine {
         collision_overwrite: bool,
         /// Worker->server queue capacity as a multiple of tau.
         queue_factor: usize,
+        /// Shared-parameter snapshot consistency contract.
         snapshot_mode: SnapshotMode,
     },
     /// SP-BCFW: the synchronous minibatch comparator (§3.3).
     Sync {
+        /// Worker-thread count T.
         workers: usize,
+        /// Simulated straggler behaviour.
         straggler: StragglerSpec,
+        /// Shared-parameter snapshot consistency contract.
         snapshot_mode: SnapshotMode,
     },
     /// Serverless lock-free tau = 1 variant (Algorithm 3); requires a
     /// parameter-space problem and always uses torn snapshots.
-    Lockfree { workers: usize },
+    Lockfree {
+        /// Worker-thread count T.
+        workers: usize,
+    },
 }
 
 impl Engine {
@@ -347,6 +363,7 @@ impl Engine {
 /// The unified run specification: engine + every cross-engine knob.
 #[derive(Debug, Clone, PartialEq)]
 pub struct RunSpec {
+    /// The execution engine, carrying its engine-scoped knobs.
     pub engine: Engine,
     /// Minibatch size tau (clamped to [1, n] by the engines; ignored by
     /// `batch`, which always uses tau = n, and `lockfree`, always 1).
@@ -385,7 +402,9 @@ pub struct RunSpec {
     /// Compute the exact duality gap at sample points (expensive) instead
     /// of the n/tau-scaled batch-gap estimate.
     pub exact_gap: bool,
+    /// Stop conditions (any satisfied condition ends the solve).
     pub stop: StopCond,
+    /// Seed for block sampling (and, via `run.seed`, data generation).
     pub seed: u64,
 }
 
@@ -408,6 +427,7 @@ impl RunSpec {
         }
     }
 
+    /// Set the minibatch size tau.
     pub fn tau(mut self, tau: usize) -> Self {
         self.tau = tau;
         self
@@ -425,41 +445,49 @@ impl RunSpec {
         self
     }
 
+    /// Toggle exact coordinate line search.
     pub fn line_search(mut self, on: bool) -> Self {
         self.line_search = on;
         self
     }
 
+    /// Toggle weighted iterate averaging.
     pub fn weighted_averaging(mut self, on: bool) -> Self {
         self.weighted_averaging = on;
         self
     }
 
+    /// Set the trace sample cadence in server iterations.
     pub fn sample_every(mut self, every: usize) -> Self {
         self.sample_every = every;
         self
     }
 
+    /// Toggle exact duality-gap evaluation at sample points.
     pub fn exact_gap(mut self, on: bool) -> Self {
         self.exact_gap = on;
         self
     }
 
+    /// Replace the stop conditions wholesale.
     pub fn stop(mut self, stop: StopCond) -> Self {
         self.stop = stop;
         self
     }
 
+    /// Cap the effective data passes (oracle calls / n).
     pub fn max_epochs(mut self, epochs: f64) -> Self {
         self.stop.max_epochs = epochs;
         self
     }
 
+    /// Cap the wall-clock seconds.
     pub fn max_secs(mut self, secs: f64) -> Self {
         self.stop.max_secs = secs;
         self
     }
 
+    /// Stop at surrogate gap <= `eps`.
     pub fn eps_gap(mut self, eps: f64) -> Self {
         self.stop.eps_gap = Some(eps);
         self
@@ -472,6 +500,7 @@ impl RunSpec {
         self
     }
 
+    /// Set the solve seed.
     pub fn seed(mut self, seed: u64) -> Self {
         self.seed = seed;
         self

@@ -14,11 +14,16 @@
 //! [`LiveEvent`]s to the caller through the engine-driven
 //! [`crate::run::Observer`] hook, so a service endpoint or dashboard can
 //! watch convergence while the solve is in flight instead of scraping the
-//! trace afterwards.
+//! trace afterwards. [`spawn_serve`] does the same for the distributed
+//! serve role ([`crate::net`]): the socket is bound (and the spec
+//! validated) synchronously so the caller learns the listen address —
+//! ephemeral port included — before any worker connects.
 
+use crate::net::BoundServer;
 use crate::run::{
     ChannelObserver, LiveEvent, ProblemInstance, Report, Runner, RunSpec,
 };
+use crate::util::config::Config;
 use anyhow::{anyhow, Result};
 use std::sync::mpsc;
 use std::sync::Mutex;
@@ -155,6 +160,49 @@ pub fn spawn_solve(
         .name("solve-service".into())
         .spawn(move || Runner::new(spec)?.solve_observed(&problem, &mut obs))?;
     Ok(SolveSession { events, handle })
+}
+
+/// A distributed serve-role solve running on a background thread: the
+/// bound listen address (known before any worker connects), the live
+/// event stream, and the final report via [`ServeSession::join`].
+pub struct ServeSession {
+    /// The resolved listen address workers should connect to.
+    pub addr: std::net::SocketAddr,
+    /// Live apply/sample events from the server loop.
+    pub events: mpsc::Receiver<LiveEvent>,
+    handle: std::thread::JoinHandle<Result<Report>>,
+}
+
+impl ServeSession {
+    /// Block until the distributed solve finishes and return its report.
+    pub fn join(self) -> Result<Report> {
+        self.handle
+            .join()
+            .map_err(|_| anyhow!("serve service thread panicked"))?
+    }
+}
+
+/// Bind the serve role on `addr` (validating `spec` against `problem`
+/// synchronously — configuration errors surface here, not as a dead
+/// stream) and run the accept + server loop on a dedicated thread,
+/// streaming live events.
+pub fn spawn_serve(
+    spec: RunSpec,
+    problem: &str,
+    cfg: &Config,
+    addr: &str,
+) -> Result<ServeSession> {
+    let server = BoundServer::bind(spec, problem, cfg, addr)?;
+    let addr = server.local_addr()?;
+    let (mut obs, events) = ChannelObserver::pair();
+    let handle = std::thread::Builder::new()
+        .name("serve-service".into())
+        .spawn(move || server.run(&mut obs))?;
+    Ok(ServeSession {
+        addr,
+        events,
+        handle,
+    })
 }
 
 fn serve_one(store: &super::ArtifactStore, req: &Request) -> Result<Vec<Tensor>> {

@@ -99,6 +99,18 @@ pub struct Counters {
     /// communication-efficiency axis the sparse payload pipeline exists to
     /// shrink.
     pub payload_bytes: AtomicU64,
+    /// Frame bytes written to the network transport (headers included) —
+    /// counted only by the `net` serve role; zero for in-process engines.
+    pub wire_tx_bytes: AtomicU64,
+    /// Frame bytes read off the network transport (headers included).
+    pub wire_rx_bytes: AtomicU64,
+    /// Sum over applied updates of the observed delay (server iterations
+    /// between the snapshot an oracle was computed from and its apply).
+    /// `delay_sum / updates_applied` is the empirical expected delay kappa
+    /// — the quantity the paper's §2.3/§3.4 convergence bounds depend on.
+    pub delay_sum: AtomicU64,
+    /// Largest observed delay among applied updates.
+    pub delay_max: AtomicU64,
 }
 
 impl Counters {
@@ -116,6 +128,10 @@ impl Counters {
             snapshot_reads: self.snapshot_reads.load(Ordering::Relaxed),
             payload_nnz: self.payload_nnz.load(Ordering::Relaxed),
             payload_bytes: self.payload_bytes.load(Ordering::Relaxed),
+            wire_tx_bytes: self.wire_tx_bytes.load(Ordering::Relaxed),
+            wire_rx_bytes: self.wire_rx_bytes.load(Ordering::Relaxed),
+            delay_sum: self.delay_sum.load(Ordering::Relaxed),
+            delay_max: self.delay_max.load(Ordering::Relaxed),
         }
     }
 
@@ -127,6 +143,12 @@ impl Counters {
     #[inline]
     pub fn add(counter: &AtomicU64, v: u64) {
         counter.fetch_add(v, Ordering::Relaxed);
+    }
+
+    /// Raise a running-maximum counter (e.g. `delay_max`) to at least `v`.
+    #[inline]
+    pub fn max_of(counter: &AtomicU64, v: u64) {
+        counter.fetch_max(v, Ordering::Relaxed);
     }
 }
 
@@ -141,6 +163,23 @@ pub struct CounterSnapshot {
     pub snapshot_reads: u64,
     pub payload_nnz: u64,
     pub payload_bytes: u64,
+    pub wire_tx_bytes: u64,
+    pub wire_rx_bytes: u64,
+    pub delay_sum: u64,
+    pub delay_max: u64,
+}
+
+impl CounterSnapshot {
+    /// Mean observed delay of applied updates — the empirical expected
+    /// delay kappa of the paper's delayed-update analysis. Zero when
+    /// nothing was applied.
+    pub fn mean_delay(&self) -> f64 {
+        if self.updates_applied == 0 {
+            0.0
+        } else {
+            self.delay_sum as f64 / self.updates_applied as f64
+        }
+    }
 }
 
 /// Simple wall-clock stopwatch.

@@ -1,0 +1,424 @@
+//! Distributed transport equivalence and codec property tests.
+//!
+//! The load-bearing claim: a `serve`+`worker` solve over 127.0.0.1 is the
+//! same algorithm as the in-process delayed-update framework — at one
+//! worker (`tau = batch = 1`, lockstep pull/solve/push) it replays the
+//! sequential delayed engine (`solver::delayed`, `DelayModel::None`)
+//! draw-for-draw and must be **bit-identical**: the worker samples blocks
+//! from rng stream `2 + id` (worker 0 = the delayed engine's stream), the
+//! snapshot wire roundtrip preserves f32 bits exactly, and the server
+//! applies with the same `schedule_gamma`. Beyond one worker the schedule
+//! is interleaving-dependent, so the guarantee weakens to
+//! tolerance-bounded: both sides converge to the same gap target.
+//!
+//! The codec side pins that sparse payloads are never densified on the
+//! wire (randomized round-trips) — the bytes axis the whole subsystem
+//! exists to shrink.
+
+use apbcfw::net::wire::{self, Msg};
+use apbcfw::net::{solve_loopback, BoundServer};
+use apbcfw::problems::{BlockOracle, OraclePayload, PayloadMode};
+use apbcfw::run::{Engine, ProblemInstance, Runner, RunSpec};
+use apbcfw::sim::delay::DelayModel;
+use apbcfw::util::config::Config;
+use apbcfw::util::rng::Pcg64;
+
+/// GFL instance with 40 blocks (d=6, n=41): 8 epochs = 320 oracle calls,
+/// divisible by the sample cadence so the delayed engine and the net
+/// server stop on exactly the same iteration.
+fn gfl_cfg() -> Config {
+    Config::parse(
+        "[run]\nseed = 5\n\
+         [gfl]\nd = 6\nn = 41\nlambda = 0.2\nsegments = 4\nnoise = 0.5\n",
+    )
+    .unwrap()
+}
+
+/// QP with 24 blocks of dim 5: 6 epochs = 144 calls, divisible by 8.
+fn qp_cfg() -> Config {
+    Config::parse("[run]\nseed = 5\n[qp]\nn = 24\nm = 5\nmu = 0.2\n").unwrap()
+}
+
+fn shared_knobs(spec: RunSpec, epochs: f64) -> RunSpec {
+    spec.tau(1)
+        .sample_every(8)
+        .max_epochs(epochs)
+        .max_secs(60.0)
+        .seed(5)
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// One-worker loopback vs the sequential delayed engine, bit for bit.
+fn assert_loopback_matches_delayed(
+    problem: &str,
+    cfg: &Config,
+    epochs: f64,
+    payload: PayloadMode,
+) {
+    let net_spec =
+        shared_knobs(RunSpec::new(Engine::asynchronous(1)), epochs)
+            .payload(payload);
+    let net = solve_loopback(net_spec, problem, cfg, "127.0.0.1:0")
+        .unwrap_or_else(|e| panic!("{problem}: loopback solve failed: {e:#}"));
+
+    let instance = ProblemInstance::from_config(problem, cfg).unwrap();
+    let ref_spec =
+        shared_knobs(RunSpec::new(Engine::delayed(DelayModel::None)), epochs)
+            .payload(payload);
+    let reference = Runner::new(ref_spec).unwrap().solve(&instance).unwrap();
+
+    assert_eq!(
+        net.counters.oracle_calls, reference.counters.oracle_calls,
+        "{problem}: oracle budgets diverged"
+    );
+    assert_eq!(
+        net.counters.updates_applied, reference.counters.updates_applied,
+        "{problem}: applied counts diverged"
+    );
+    assert_eq!(net.counters.dropped, 0, "{problem}: lockstep never drops");
+    assert_eq!(net.counters.delay_sum, 0, "{problem}: lockstep delay is 0");
+    assert_eq!(
+        bits(&net.raw_param),
+        bits(&reference.raw_param),
+        "{problem}: final parameter bits diverged"
+    );
+    // The trace streams agree sample-for-sample (the net report appends
+    // one extra final sample, exactly like the in-process async engine).
+    assert_eq!(net.trace.samples.len(), reference.trace.samples.len() + 1);
+    for (a, b) in net
+        .trace
+        .samples
+        .iter()
+        .zip(reference.trace.samples.iter())
+    {
+        assert_eq!(a.iter, b.iter, "{problem}: sample iteration");
+        assert_eq!(a.oracle_calls, b.oracle_calls, "{problem}: sample calls");
+        assert_eq!(
+            a.objective.to_bits(),
+            b.objective.to_bits(),
+            "{problem}: objective bits at iter {}",
+            a.iter
+        );
+        assert_eq!(
+            a.gap.to_bits(),
+            b.gap.to_bits(),
+            "{problem}: gap-estimate bits at iter {}",
+            a.iter
+        );
+    }
+    // And the whole solve really crossed the wire.
+    assert!(net.counters.wire_rx_bytes > 0, "{problem}: nothing received");
+    assert!(net.counters.wire_tx_bytes > 0, "{problem}: nothing sent");
+}
+
+#[test]
+fn loopback_one_worker_bit_identical_to_delayed_engine_gfl() {
+    assert_loopback_matches_delayed("gfl", &gfl_cfg(), 8.0, PayloadMode::Auto);
+}
+
+#[test]
+fn loopback_one_worker_bit_identical_to_delayed_engine_qp_sparse() {
+    assert_loopback_matches_delayed(
+        "qp",
+        &qp_cfg(),
+        6.0,
+        PayloadMode::Sparse,
+    );
+}
+
+#[test]
+fn sparse_wire_payloads_match_dense_bits_and_ship_fewer_bytes() {
+    // The payload representation contract holds across the wire: forced
+    // sparse and forced dense loopback runs of the same spec produce
+    // bit-identical parameters, and the sparse one ships fewer payload
+    // bytes per oracle (QP's vertex is 1-hot).
+    let cfg = qp_cfg();
+    let mut runs = Vec::new();
+    for payload in [PayloadMode::Dense, PayloadMode::Sparse] {
+        let spec = shared_knobs(RunSpec::new(Engine::asynchronous(1)), 6.0)
+            .payload(payload);
+        runs.push(solve_loopback(spec, "qp", &cfg, "127.0.0.1:0").unwrap());
+    }
+    let (dense, sparse) = (&runs[0], &runs[1]);
+    assert_eq!(bits(&dense.raw_param), bits(&sparse.raw_param));
+    assert!(sparse.counters.payload_bytes < dense.counters.payload_bytes);
+    assert!(
+        sparse.counters.wire_rx_bytes < dense.counters.wire_rx_bytes,
+        "sparse {} !< dense {} frame bytes",
+        sparse.counters.wire_rx_bytes,
+        dense.counters.wire_rx_bytes
+    );
+    assert!(sparse.counters.payload_nnz < dense.counters.payload_nnz);
+}
+
+#[test]
+fn loopback_two_workers_converge_to_the_async_tolerance() {
+    // Beyond one worker the interleaving is scheduling-dependent, so the
+    // equivalence is tolerance-bounded: the distributed solve reaches the
+    // same gap target the in-process async engine does.
+    let cfg = gfl_cfg();
+    let spec = RunSpec::new(Engine::asynchronous(2))
+        .tau(2)
+        .sample_every(16)
+        .exact_gap(true)
+        .eps_gap(0.05)
+        .max_epochs(5000.0)
+        .max_secs(30.0)
+        .seed(5);
+    let net = solve_loopback(spec.clone(), "gfl", &cfg, "127.0.0.1:0").unwrap();
+    let last = net.trace.last().unwrap();
+    assert!(last.gap <= 0.05, "net gap {}", last.gap);
+
+    let instance = ProblemInstance::from_config("gfl", &cfg).unwrap();
+    let inproc = Runner::new(spec).unwrap().solve(&instance).unwrap();
+    assert!(inproc.trace.last().unwrap().gap <= 0.05);
+    // Both are eps-optimal, so the objectives agree to the tolerance.
+    assert!(
+        (last.objective - inproc.trace.last().unwrap().objective).abs()
+            <= 0.1,
+        "net {} vs in-process {}",
+        last.objective,
+        inproc.trace.last().unwrap().objective
+    );
+}
+
+#[test]
+fn loopback_batched_fanout_and_staleness_delay_counters() {
+    // batch = 4 blocks per snapshot pull, one worker: completes, applies
+    // everything, and the delay counters stay sane (lockstep: delay 0).
+    let cfg = qp_cfg();
+    let spec = RunSpec::new(Engine::asynchronous(1))
+        .tau(4)
+        .batch(4)
+        .sample_every(4)
+        .max_epochs(6.0)
+        .max_secs(30.0)
+        .seed(7)
+        .payload(PayloadMode::Sparse);
+    let r = solve_loopback(spec, "qp", &cfg, "127.0.0.1:0").unwrap();
+    assert!(r.counters.updates_applied > 0);
+    assert_eq!(r.counters.delay_sum, 0);
+    assert_eq!(r.counters.delay_max, 0);
+    // Sparse QP oracles are 1-hot: nnz per oracle must be exactly 1.
+    assert_eq!(r.counters.payload_nnz, r.counters.oracle_calls);
+}
+
+#[test]
+fn loopback_ssvm_uses_full_snapshots_and_completes() {
+    // Chain SSVM updates w densely (`touched_ranges` = None), so every
+    // refresh is a full snapshot — the delta fallback path.
+    let cfg = Config::parse(
+        "[run]\nseed = 3\n\
+         [ssvm]\nn = 12\nk = 3\nd = 6\nell = 4\nlambda = 1.0\n",
+    )
+    .unwrap();
+    let spec = RunSpec::new(Engine::asynchronous(2))
+        .tau(2)
+        .sample_every(8)
+        .max_epochs(3.0)
+        .max_secs(30.0)
+        .seed(3);
+    let r = solve_loopback(spec, "ssvm", &cfg, "127.0.0.1:0").unwrap();
+    assert!(r.counters.updates_applied > 0);
+    assert!(r.counters.wire_tx_bytes > 0);
+    assert!(r.last().unwrap().objective.is_finite());
+}
+
+#[test]
+fn spawn_serve_streams_events_and_reports() {
+    // The service surface: bind synchronously (address known first),
+    // connect a worker, and watch live events while the solve runs.
+    let cfg = qp_cfg();
+    let spec = RunSpec::new(Engine::asynchronous(1))
+        .tau(1)
+        .sample_every(8)
+        .max_epochs(2.0)
+        .max_secs(30.0)
+        .seed(5);
+    let session =
+        apbcfw::runtime::service::spawn_serve(spec, "qp", &cfg, "127.0.0.1:0")
+            .unwrap();
+    let addr = session.addr.to_string();
+    let worker = std::thread::spawn(move || apbcfw::net::worker::run(&addr));
+    let events: Vec<_> = session.events.iter().collect();
+    let report = session.join().unwrap();
+    let summary = worker.join().unwrap().unwrap();
+    assert!(!events.is_empty());
+    assert_eq!(summary.worker_id, 0);
+    assert_eq!(summary.oracle_calls, report.counters.oracle_calls);
+    assert!(summary.tx_bytes > 0 && summary.rx_bytes > 0);
+}
+
+#[test]
+fn server_drops_connections_sending_unappliable_oracles() {
+    // The codec only checks a frame's self-consistency; the server must
+    // additionally validate decoded oracles against the instance (block
+    // in range, payload of the problem's dimension) and drop violators
+    // instead of panicking in `apply`.
+    for bad in [
+        // Block index far out of range (payload dim correct: qp m = 5).
+        BlockOracle::dense(1_000_000, vec![0.0; 5], 0.0),
+        // Valid block, wrong payload dimension.
+        BlockOracle::dense(0, vec![0.0; 64], 0.0),
+        // Sparse payload whose self-declared dim disagrees with the
+        // instance (its idx is valid against its own dim).
+        BlockOracle {
+            block: 0,
+            s: OraclePayload::Sparse {
+                idx: vec![63],
+                val: vec![1.0],
+                dim: 64,
+            },
+            ls: 0.0,
+        },
+    ] {
+        let cfg = qp_cfg();
+        let spec = RunSpec::new(Engine::asynchronous(1))
+            .tau(1)
+            .max_epochs(50.0)
+            .max_secs(20.0)
+            .seed(5);
+        let session = apbcfw::runtime::service::spawn_serve(
+            spec,
+            "qp",
+            &cfg,
+            "127.0.0.1:0",
+        )
+        .unwrap();
+        let mut stream = std::net::TcpStream::connect(session.addr).unwrap();
+        let worker = match wire::read_frame(&mut stream).unwrap().unwrap() {
+            (Msg::Hello(h), _) => h.worker_id,
+            (other, _) => panic!("expected Hello, got {other:?}"),
+        };
+        let mut buf = Vec::new();
+        let msg = Msg::Update {
+            k_read: 0,
+            worker,
+            oracles: vec![bad],
+        };
+        wire::write_frame(&mut stream, &msg, &mut buf).unwrap();
+        // The server drops the connection (sole worker -> solve ends)
+        // without applying anything and without panicking.
+        let report = session.join().unwrap();
+        assert_eq!(report.counters.updates_applied, 0);
+    }
+}
+
+#[test]
+fn bind_rejects_bad_specs_synchronously() {
+    let cfg = qp_cfg();
+    // Non-async engine.
+    let err = BoundServer::bind(
+        RunSpec::new(Engine::synchronous(2)),
+        "qp",
+        &cfg,
+        "127.0.0.1:0",
+    )
+    .map(|_| ())
+    .unwrap_err()
+    .to_string();
+    assert!(err.contains("async"), "{err}");
+    // Unknown problem.
+    assert!(BoundServer::bind(
+        RunSpec::new(Engine::asynchronous(1)),
+        "nosuch",
+        &cfg,
+        "127.0.0.1:0",
+    )
+    .map(|_| ())
+    .is_err());
+}
+
+// ---------------------------------------------------------------------
+// Codec round-trip property tests
+// ---------------------------------------------------------------------
+
+fn random_payload(rng: &mut Pcg64, dim: usize) -> OraclePayload {
+    match rng.below(3) {
+        0 => OraclePayload::Dense(rng.gaussian_vec(dim)),
+        1 => {
+            // Random strictly-ascending support (possibly empty).
+            let mut idx: Vec<u32> = Vec::new();
+            for i in 0..dim {
+                if rng.below(3) == 0 {
+                    idx.push(i as u32);
+                }
+            }
+            let val = rng.gaussian_vec(idx.len());
+            OraclePayload::Sparse {
+                idx,
+                val,
+                dim: dim as u32,
+            }
+        }
+        _ => OraclePayload::Sparse {
+            idx: Vec::new(),
+            val: Vec::new(),
+            dim: dim as u32,
+        },
+    }
+}
+
+#[test]
+fn randomized_update_frames_roundtrip_bit_exactly() {
+    let mut rng = Pcg64::seeded(42);
+    let mut buf = Vec::new();
+    for trial in 0..200 {
+        let nor = 1 + rng.below(5);
+        let dim = 1 + rng.below(33);
+        let oracles: Vec<BlockOracle> = (0..nor)
+            .map(|_| BlockOracle {
+                block: rng.below(1000),
+                s: random_payload(&mut rng, dim),
+                ls: rng.gaussian(),
+            })
+            .collect();
+        let msg = Msg::Update {
+            k_read: rng.below(1 << 30) as u64,
+            worker: rng.below(64) as u32,
+            oracles,
+        };
+        let n = wire::encode_frame(&msg, &mut buf);
+        let mut cursor: &[u8] = &buf;
+        let (decoded, consumed) =
+            wire::read_frame(&mut cursor).unwrap().unwrap();
+        assert_eq!(consumed, n, "trial {trial}");
+        // PartialEq on Msg covers block/ls/payload, representation
+        // included: a sparse payload must come back Sparse.
+        assert_eq!(decoded, msg, "trial {trial}");
+    }
+}
+
+#[test]
+fn randomized_snapshot_frames_roundtrip_bit_exactly() {
+    let mut rng = Pcg64::seeded(7);
+    let mut buf = Vec::new();
+    for _ in 0..100 {
+        let dim = rng.below(64);
+        let body = if rng.below(2) == 0 {
+            wire::SnapshotBody::Full(rng.gaussian_vec(dim))
+        } else {
+            let nruns = rng.below(4);
+            wire::SnapshotBody::Delta(
+                (0..nruns)
+                    .map(|_| {
+                        (rng.below(1000) as u32,
+                         rng.gaussian_vec(1 + rng.below(8)))
+                    })
+                    .collect(),
+            )
+        };
+        let msg = Msg::Snapshot {
+            version: rng.below(1 << 20) as u64,
+            body,
+        };
+        let n = wire::encode_frame(&msg, &mut buf);
+        let (decoded, consumed) =
+            wire::read_frame(&mut buf.as_slice()).unwrap().unwrap();
+        assert_eq!(consumed, n);
+        assert_eq!(decoded, msg);
+    }
+}

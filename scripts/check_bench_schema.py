@@ -36,12 +36,16 @@ KNOWN_ROW_UNITS = {
 }
 
 # Row-name pairs a *measured* report must contain: the dense-vs-sparse
-# payload comparison emitted by benches/hot_paths.rs.
+# payload comparison emitted by benches/hot_paths.rs — both the
+# in-process channel estimate and the distributed transport's real wire
+# measurement (loopback serve+worker through the TCP codec).
 REQUIRED_MEASURED_PREFIXES = [
     "async bytes-per-update payload=dense",
     "async bytes-per-update payload=sparse",
     "ssvm apply fused batch=8 dense",
     "ssvm apply fused batch=8 sparse",
+    "net loopback wire bytes-per-update payload=dense",
+    "net loopback wire bytes-per-update payload=sparse",
 ]
 
 
