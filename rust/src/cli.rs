@@ -10,8 +10,9 @@
 //!        [--line-search] [--straggler none|single:P|hetero:T|p1,p2,..]
 //!        [--snapshot-mode torn|consistent] [--queue-factor N]
 //!        [--config FILE] [--set sect.key=val ...]
-//! apbcfw serve <problem> [--listen HOST:PORT] [--self-host] [solve flags]
-//! apbcfw worker [--connect HOST:PORT]
+//! apbcfw serve <problem> [--listen HOST:PORT] [--self-host]
+//!        [--accept-timeout SECS] [solve flags]
+//! apbcfw worker [--connect HOST:PORT] [--connect-timeout SECS]
 //! apbcfw artifacts-check [--dir DIR]
 //! apbcfw info
 //! ```
@@ -48,6 +49,10 @@ pub enum Command {
     Worker {
         /// Server address to connect to.
         addr: String,
+        /// Window (seconds) to keep retrying a connect before giving up
+        /// (`--connect-timeout`; also the reconnect window after a broken
+        /// session).
+        connect_timeout_secs: f64,
     },
     /// Load and compile every artifact in the manifest.
     ArtifactsCheck { dir: String },
@@ -77,6 +82,14 @@ const SOLVE_FLAG_KEYS: &[(&str, &str)] = &[
     ("queue-factor", "run.queue_factor"),
 ];
 
+/// Parse a timeout flag value: seconds, finite and strictly positive.
+fn parse_secs(flag: &str, v: &str) -> Result<f64> {
+    match v.parse::<f64>() {
+        Ok(s) if s.is_finite() && s > 0.0 => Ok(s),
+        _ => bail!("--{flag}: expected seconds > 0, got {v:?}"),
+    }
+}
+
 /// Parse argv (excluding the binary name).
 pub fn parse(args: &[String]) -> Result<Cli> {
     let mut config = Config::new();
@@ -101,6 +114,7 @@ pub fn parse(args: &[String]) -> Result<Cli> {
                 "config" | "set" | "dir" | "mode" | "tau" | "batch"
                     | "workers" | "epochs" | "seed" | "straggler"
                     | "snapshot-mode" | "queue-factor" | "listen" | "connect"
+                    | "connect-timeout" | "accept-timeout"
             );
             if takes_value {
                 let v = rest
@@ -210,6 +224,14 @@ pub fn parse(args: &[String]) -> Result<Cli> {
                 if config.get("run.mode").is_none() {
                     config.set("run.mode", "async");
                 }
+                // --accept-timeout is sugar for the fleet-accept /
+                // empty-fleet-grace knob; validate here for the CLI's
+                // clean error, then lower to the config key `net::serve`
+                // reads (`NetOptions::from_config`).
+                if let Some(v) = flag_val("accept-timeout") {
+                    parse_secs("accept-timeout", v)?;
+                    config.set("run.accept_timeout_secs", v);
+                }
                 let self_host = has_flag("self-host");
                 let addr = flag_val("listen")
                     .unwrap_or(if self_host {
@@ -231,6 +253,11 @@ pub fn parse(args: &[String]) -> Result<Cli> {
         }
         "worker" => Command::Worker {
             addr: flag_val("connect").unwrap_or("127.0.0.1:7878").to_string(),
+            connect_timeout_secs: match flag_val("connect-timeout") {
+                Some(v) => parse_secs("connect-timeout", v)?,
+                // Historical default: retry the connect for ~10 s.
+                None => 10.0,
+            },
         },
         "artifacts-check" => Command::ArtifactsCheck {
             dir: flag_val("dir").unwrap_or("artifacts").to_string(),
@@ -263,15 +290,23 @@ USAGE:
       run.work_multiplier, run.eps_gap, ...) are reachable through
       --set / --config only.
   apbcfw serve <gfl|ssvm|multiclass|qp> [--listen HOST:PORT] [--self-host]
+         [--accept-timeout SECS]
          [solve flags as above; --mode defaults to async]
       host the distributed delayed-update server: workers connect over
       TCP (wire protocol: docs/WIRE.md), pull parameter snapshots, and
       stream sparse oracle payloads back. --workers N is the fleet size
-      the server waits for. --self-host runs that fleet in-process over
+      the server waits for; late workers may still join mid-run, and
+      dead ones have their in-flight blocks requeued (liveness window:
+      --set run.liveness_ms=N). --accept-timeout bounds both the initial
+      fleet wait and how long an empty fleet is tolerated mid-run
+      (default 30). fault injection: --set run.chaos=<spec> (see
+      docs/WIRE.md). --self-host runs the fleet in-process over
       127.0.0.1 (single-machine demo of the full wire path).
-  apbcfw worker [--connect HOST:PORT]
-      join a serve host as a network worker (retries the connect for a
-      few seconds so start order does not matter).
+  apbcfw worker [--connect HOST:PORT] [--connect-timeout SECS]
+      join a serve host as a network worker. retries the connect with
+      jittered backoff for --connect-timeout seconds (default 10) so
+      start order does not matter, and reconnects the same way after a
+      transient disconnect mid-run.
   apbcfw artifacts-check [--dir DIR]
   apbcfw info
 ";
@@ -479,7 +514,8 @@ mod tests {
         assert_eq!(
             cli.command,
             Command::Worker {
-                addr: "127.0.0.1:7878".into()
+                addr: "127.0.0.1:7878".into(),
+                connect_timeout_secs: 10.0,
             }
         );
         let cli =
@@ -487,8 +523,44 @@ mod tests {
         assert_eq!(
             cli.command,
             Command::Worker {
-                addr: "10.0.0.5:7900".into()
+                addr: "10.0.0.5:7900".into(),
+                connect_timeout_secs: 10.0,
             }
         );
+    }
+
+    #[test]
+    fn worker_connect_timeout_parses_and_validates() {
+        let cli = parse(&sv(&["worker", "--connect-timeout", "2.5"])).unwrap();
+        assert_eq!(
+            cli.command,
+            Command::Worker {
+                addr: "127.0.0.1:7878".into(),
+                connect_timeout_secs: 2.5,
+            }
+        );
+        for bad in ["0", "-3", "inf", "NaN", "soon"] {
+            assert!(
+                parse(&sv(&["worker", "--connect-timeout", bad])).is_err(),
+                "{bad}"
+            );
+        }
+    }
+
+    #[test]
+    fn serve_accept_timeout_lowers_to_config_and_validates() {
+        let cli =
+            parse(&sv(&["serve", "gfl", "--accept-timeout", "1.5"])).unwrap();
+        assert_eq!(cli.config.get("run.accept_timeout_secs"), Some("1.5"));
+        // Unset flag leaves the key unset (serve's own default applies).
+        let cli = parse(&sv(&["serve", "gfl"])).unwrap();
+        assert_eq!(cli.config.get("run.accept_timeout_secs"), None);
+        for bad in ["0", "-1", "inf", "never"] {
+            assert!(
+                parse(&sv(&["serve", "gfl", "--accept-timeout", bad]))
+                    .is_err(),
+                "{bad}"
+            );
+        }
     }
 }

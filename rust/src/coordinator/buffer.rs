@@ -149,6 +149,17 @@ impl BatchAssembler {
         Some(batch)
     }
 
+    /// Drop every pending update contributed by `worker`, returning how
+    /// many were discarded. Used when a connection is declared dead: its
+    /// buffered oracles may reflect a state the worker never finished
+    /// shipping, and the freed blocks fall back into the sampling pool
+    /// (counted by the server's `blocks_requeued` telemetry).
+    pub fn remove_worker(&mut self, worker: usize) -> usize {
+        let before = self.pending.len();
+        self.pending.retain(|_, p| p.worker != worker);
+        before - self.pending.len()
+    }
+
     /// Drop every pending update (used on shutdown).
     pub fn clear(&mut self) {
         self.pending.clear();
@@ -314,6 +325,25 @@ mod tests {
         let empties = asm.insert(multi_msg(&[0, 1, 2], 0));
         assert!(empties.is_empty());
         assert!(empties.capacity() >= 3, "container kept for reuse");
+    }
+
+    #[test]
+    fn remove_worker_discards_only_its_pending_updates() {
+        let mut asm = BatchAssembler::new();
+        asm.insert(UpdateMsg {
+            oracles: vec![
+                BlockOracle::dense(1, vec![0.0], 0.0),
+                BlockOracle::dense(2, vec![0.0], 0.0),
+            ],
+            k_read: 0,
+            worker: 7,
+        });
+        asm.insert(msg(3, 0)); // worker 0
+        assert_eq!(asm.remove_worker(7), 2);
+        assert_eq!(asm.remove_worker(7), 0);
+        assert_eq!(asm.len(), 1);
+        let batch = asm.take_batch(1).unwrap();
+        assert_eq!(batch[0].oracle.block, 3);
     }
 
     #[test]

@@ -51,7 +51,10 @@ fn run(args: &[String]) -> Result<()> {
             addr,
             self_host,
         } => serve(&cli.config, &problem, &addr, self_host),
-        Command::Worker { addr } => worker(&addr),
+        Command::Worker {
+            addr,
+            connect_timeout_secs,
+        } => worker(&addr, connect_timeout_secs),
     }
 }
 
@@ -82,17 +85,19 @@ fn serve(
     Ok(())
 }
 
-fn worker(addr: &str) -> Result<()> {
+fn worker(addr: &str, connect_timeout_secs: f64) -> Result<()> {
     println!("[worker] connecting to {addr}");
-    let s = apbcfw::net::run_with_retry(
+    let s = apbcfw::net::run_resilient(
         addr,
-        std::time::Duration::from_secs(10),
+        std::time::Duration::from_secs_f64(connect_timeout_secs),
     )?;
     println!(
-        "[worker {}] done: {} rounds, {} oracle calls, tx={} B, rx={} B{}",
+        "[worker {}] done: {} rounds, {} oracle calls, \
+         reconnects={}, tx={} B, rx={} B{}",
         s.worker_id,
         s.rounds,
         s.oracle_calls,
+        s.reconnects,
         s.tx_bytes,
         s.rx_bytes,
         if s.clean { "" } else { " (connection lost, not shut down)" }
@@ -162,6 +167,19 @@ fn summarize(name: &str, r: &Report) {
             "  delay: mean {:.2}, max {} (empirical expected-delay kappa)",
             r.counters.mean_delay(),
             r.counters.delay_max
+        );
+    }
+    // Fleet-membership telemetry only the net serve role populates; CI's
+    // chaos smokes grep these fields, so keep the format stable.
+    if r.engine == "net" {
+        println!(
+            "  fleet: workers_joined={} workers_lost={} blocks_requeued={} \
+             reconnects={} event_stalls={}",
+            r.counters.workers_joined,
+            r.counters.workers_lost,
+            r.counters.blocks_requeued,
+            r.counters.reconnects,
+            r.counters.event_stalls
         );
     }
 }

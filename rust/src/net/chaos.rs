@@ -1,0 +1,379 @@
+//! Wire-level fault injection: the `run.chaos` knob.
+//!
+//! [`ChaosStream`] wraps a worker's transport stream and injects the
+//! failure modes the paper's robustness story (§2.3/§3.4) and the
+//! unbounded-delay analysis of Peng–Xu–Yan–Yin (arXiv:1612.04425) care
+//! about, so the Fig 3 straggler study can be replayed over real sockets
+//! instead of the in-process `run.straggler` simulation:
+//!
+//! - **delay** — before an outbound `Update` frame, sleep a sampled
+//!   duration (fixed, or heavy-tailed Pareto with shape 2 — infinite
+//!   variance, finite mean — parameterized by its mean as in the paper's
+//!   delay experiments). The server's `delay_sum`/`delay_max` counters
+//!   then measure the *induced iteration staleness*, the x-axis of the
+//!   replay.
+//! - **drop** — swallow an outbound `Update` frame whole (the oracle work
+//!   is lost in flight; the server simply never ingests it).
+//! - **disconnect** — abruptly fail an outbound `Update` write, ending
+//!   the session mid-run; a resilient worker then reconnects with backoff
+//!   and rejoins the fleet under a fresh server-issued id.
+//!
+//! Injection is frame-atomic and applies only to `Update` frames: control
+//! messages (handshake, snapshot requests, heartbeats) pass through
+//! untouched, so chaos perturbs the optimization traffic without
+//! corrupting the framing. Received-direction delay (`rx-delay`) sleeps
+//! on the read path instead (per read call, i.e. roughly twice per
+//! frame: header then payload).
+//!
+//! With `run.chaos` unset (or `none`) the worker never constructs this
+//! wrapper at all — the no-chaos path is bit-identical to the plain
+//! transport.
+
+use crate::util::rng::Pcg64;
+use anyhow::{anyhow, bail, ensure, Result};
+use std::io::{Read, Write};
+use std::time::Duration;
+
+/// Upper bound on one injected sleep, so a deep Pareto tail stalls a
+/// worker (and trips liveness) without freezing a test run forever.
+const MAX_SLEEP_MS: f64 = 30_000.0;
+
+/// Rng stream selector for a worker's chaos schedule. Offset far beyond
+/// the block-sampling streams ([`super::worker_rng_stream`] = 2 + id) so
+/// fault injection never perturbs the optimization's random choices, and
+/// keyed by the server-issued worker id so every session — including a
+/// joiner's — replays its own deterministic fault schedule.
+pub fn chaos_rng_stream(worker_id: u32) -> u64 {
+    1_000_003 + u64::from(worker_id)
+}
+
+/// An injected-delay distribution over milliseconds.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum DelayProfile {
+    /// Always exactly this many milliseconds.
+    FixedMs(f64),
+    /// Pareto with shape 2 and scale `mean/2`, so the expectation is
+    /// `mean` ms and the variance is infinite — the paper's heavy-tailed
+    /// straggler profile.
+    ParetoMeanMs(f64),
+}
+
+impl DelayProfile {
+    /// Sample one delay in milliseconds (capped at [`MAX_SLEEP_MS`]).
+    pub fn sample_ms(&self, rng: &mut Pcg64) -> f64 {
+        let ms = match *self {
+            DelayProfile::FixedMs(ms) => ms,
+            DelayProfile::ParetoMeanMs(mean) => rng.pareto(2.0, mean / 2.0),
+        };
+        ms.min(MAX_SLEEP_MS)
+    }
+}
+
+/// Parsed `run.chaos` knob: which faults to inject, with what
+/// probabilities. The default (no ops) injects nothing.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct ChaosSpec {
+    /// Delay outbound `Update` frames: `(profile, probability)`.
+    pub tx_delay: Option<(DelayProfile, f64)>,
+    /// Delay the read path: `(profile, probability)` per read call.
+    pub rx_delay: Option<(DelayProfile, f64)>,
+    /// Probability an outbound `Update` frame is swallowed whole.
+    pub drop_p: f64,
+    /// Probability an outbound `Update` write fails abruptly, ending the
+    /// session (a resilient worker reconnects and rejoins).
+    pub disconnect_p: f64,
+}
+
+impl ChaosSpec {
+    /// True when no fault is ever injected — the worker skips the
+    /// [`ChaosStream`] wrapper entirely in that case.
+    pub fn is_noop(&self) -> bool {
+        self.tx_delay.is_none()
+            && self.rx_delay.is_none()
+            && self.drop_p == 0.0
+            && self.disconnect_p == 0.0
+    }
+
+    /// Parse the `run.chaos` grammar:
+    ///
+    /// ```text
+    /// none | op[,op ...]
+    /// op := delay:fixed:MS:P | delay:pareto:MEAN_MS:P
+    ///     | rx-delay:fixed:MS:P | rx-delay:pareto:MEAN_MS:P
+    ///     | drop:P | disconnect:P
+    /// ```
+    ///
+    /// Probabilities must lie in `[0, 1]`, durations must be finite and
+    /// non-negative, and each op may appear at most once.
+    pub fn parse(text: &str) -> Result<ChaosSpec> {
+        let text = text.trim();
+        let mut spec = ChaosSpec::default();
+        if text.is_empty() || text == "none" {
+            return Ok(spec);
+        }
+        let (mut saw_drop, mut saw_disc) = (false, false);
+        for op in text.split(',') {
+            let op = op.trim();
+            if let Some(rest) = op.strip_prefix("delay:") {
+                ensure!(
+                    spec.tx_delay.is_none(),
+                    "run.chaos: duplicate delay op in {text:?}"
+                );
+                spec.tx_delay = Some(parse_delay_op(op, rest)?);
+            } else if let Some(rest) = op.strip_prefix("rx-delay:") {
+                ensure!(
+                    spec.rx_delay.is_none(),
+                    "run.chaos: duplicate rx-delay op in {text:?}"
+                );
+                spec.rx_delay = Some(parse_delay_op(op, rest)?);
+            } else if let Some(p) = op.strip_prefix("drop:") {
+                ensure!(!saw_drop, "run.chaos: duplicate drop op in {text:?}");
+                saw_drop = true;
+                spec.drop_p = parse_prob(op, p)?;
+            } else if let Some(p) = op.strip_prefix("disconnect:") {
+                ensure!(
+                    !saw_disc,
+                    "run.chaos: duplicate disconnect op in {text:?}"
+                );
+                saw_disc = true;
+                spec.disconnect_p = parse_prob(op, p)?;
+            } else {
+                bail!(
+                    "run.chaos: unknown op {op:?} (expected delay:fixed:MS:P \
+                     | delay:pareto:MEAN_MS:P | rx-delay:... | drop:P | \
+                     disconnect:P, comma-separated)"
+                );
+            }
+        }
+        Ok(spec)
+    }
+}
+
+/// Parse the `DIST:MS:P` tail of a delay op.
+fn parse_delay_op(op: &str, rest: &str) -> Result<(DelayProfile, f64)> {
+    let mut parts = rest.splitn(3, ':');
+    let dist = parts
+        .next()
+        .ok_or_else(|| anyhow!("run.chaos: {op:?}: missing distribution"))?;
+    let ms: f64 = parts
+        .next()
+        .ok_or_else(|| anyhow!("run.chaos: {op:?}: missing milliseconds"))?
+        .trim()
+        .parse()
+        .map_err(|_| anyhow!("run.chaos: {op:?}: bad milliseconds"))?;
+    ensure!(
+        ms.is_finite() && ms >= 0.0,
+        "run.chaos: {op:?}: milliseconds must be finite and >= 0"
+    );
+    let p = parse_prob(
+        op,
+        parts
+            .next()
+            .ok_or_else(|| anyhow!("run.chaos: {op:?}: missing probability"))?,
+    )?;
+    let profile = match dist {
+        "fixed" => DelayProfile::FixedMs(ms),
+        "pareto" => DelayProfile::ParetoMeanMs(ms),
+        other => bail!(
+            "run.chaos: {op:?}: unknown distribution {other:?} \
+             (fixed | pareto)"
+        ),
+    };
+    Ok((profile, p))
+}
+
+/// Parse and range-check one probability field.
+fn parse_prob(op: &str, text: &str) -> Result<f64> {
+    let p: f64 = text
+        .trim()
+        .parse()
+        .map_err(|_| anyhow!("run.chaos: {op:?}: bad probability"))?;
+    ensure!(
+        (0.0..=1.0).contains(&p),
+        "run.chaos: {op:?}: probability {p} outside [0, 1]"
+    );
+    Ok(p)
+}
+
+/// A `Read + Write` stream wrapper injecting the faults of a
+/// [`ChaosSpec`], deterministically driven by its own rng stream (so a
+/// seeded chaos run replays the same fault schedule).
+pub struct ChaosStream<S> {
+    inner: S,
+    spec: ChaosSpec,
+    rng: Pcg64,
+}
+
+impl<S> ChaosStream<S> {
+    /// Wrap `inner`. `rng` should come from a stream disjoint from the
+    /// block-sampling streams (see [`chaos_rng_stream`]).
+    pub fn new(inner: S, spec: ChaosSpec, rng: Pcg64) -> Self {
+        Self { inner, spec, rng }
+    }
+
+    fn roll(&mut self, p: f64) -> bool {
+        p > 0.0 && self.rng.uniform() < p
+    }
+
+    fn sleep_sampled(&mut self, profile: DelayProfile) {
+        let ms = profile.sample_ms(&mut self.rng);
+        if ms > 0.0 {
+            std::thread::sleep(Duration::from_secs_f64(ms / 1000.0));
+        }
+    }
+}
+
+impl<S: Read> Read for ChaosStream<S> {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        if let Some((profile, p)) = self.spec.rx_delay {
+            if self.roll(p) {
+                self.sleep_sampled(profile);
+            }
+        }
+        self.inner.read(buf)
+    }
+}
+
+impl<S: Write> Write for ChaosStream<S> {
+    /// Frame-atomic injection: `super::wire::write_frame` hands the whole
+    /// encoded frame to one `write` call, and this impl always consumes
+    /// the full buffer (inner writes go through `write_all`), so a fault
+    /// either affects a complete `Update` frame or nothing.
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        if super::wire::frame_is_update(buf) {
+            if self.roll(self.spec.disconnect_p) {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::ConnectionReset,
+                    "chaos: injected disconnect",
+                ));
+            }
+            if self.roll(self.spec.drop_p) {
+                return Ok(buf.len()); // swallowed in flight
+            }
+            if let Some((profile, p)) = self.spec.tx_delay {
+                if self.roll(p) {
+                    self.sleep_sampled(profile);
+                }
+            }
+        }
+        self.inner.write_all(buf)?;
+        Ok(buf.len())
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        self.inner.flush()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::wire::{self, Msg};
+
+    #[test]
+    fn parse_grammar_accepts_every_op() {
+        assert!(ChaosSpec::parse("none").unwrap().is_noop());
+        assert!(ChaosSpec::parse("").unwrap().is_noop());
+        let spec = ChaosSpec::parse(
+            "delay:pareto:30:0.5, rx-delay:fixed:2:1.0, drop:0.1, \
+             disconnect:0.05",
+        )
+        .unwrap();
+        assert_eq!(
+            spec.tx_delay,
+            Some((DelayProfile::ParetoMeanMs(30.0), 0.5))
+        );
+        assert_eq!(spec.rx_delay, Some((DelayProfile::FixedMs(2.0), 1.0)));
+        assert_eq!(spec.drop_p, 0.1);
+        assert_eq!(spec.disconnect_p, 0.05);
+        assert!(!spec.is_noop());
+    }
+
+    #[test]
+    fn parse_rejects_bad_specs() {
+        for bad in [
+            "bogus",
+            "drop:1.5",
+            "drop:-0.1",
+            "disconnect:x",
+            "delay:pareto:30",
+            "delay:uniform:3:0.5",
+            "delay:fixed:-1:0.5",
+            "delay:fixed:inf:0.5",
+            "drop:0.1,drop:0.2",
+            "delay:fixed:1:0.1,delay:fixed:2:0.2",
+        ] {
+            assert!(ChaosSpec::parse(bad).is_err(), "{bad:?} must be rejected");
+        }
+    }
+
+    #[test]
+    fn drop_swallows_update_frames_but_not_control_frames() {
+        let spec = ChaosSpec::parse("drop:1.0").unwrap();
+        let mut s =
+            ChaosStream::new(Vec::<u8>::new(), spec, Pcg64::seeded(7));
+        let mut buf = Vec::new();
+        let mut scratch = Vec::new();
+        // Update frame: swallowed whole — nothing reaches the inner stream.
+        let n = wire::write_frame(
+            &mut s,
+            &Msg::Update {
+                k_read: 0,
+                worker: 0,
+                oracles: vec![],
+            },
+            &mut scratch,
+        )
+        .unwrap();
+        assert!(n > 0);
+        assert!(s.inner.is_empty(), "update frame must be dropped");
+        // Control frame: passes through untouched.
+        wire::encode_frame(&Msg::Heartbeat, &mut buf);
+        let hb_len = buf.len();
+        wire::write_frame(&mut s, &Msg::Heartbeat, &mut scratch).unwrap();
+        assert_eq!(s.inner.len(), hb_len);
+    }
+
+    #[test]
+    fn disconnect_fails_the_update_write() {
+        let spec = ChaosSpec::parse("disconnect:1.0").unwrap();
+        let mut s =
+            ChaosStream::new(Vec::<u8>::new(), spec, Pcg64::seeded(7));
+        let mut scratch = Vec::new();
+        let err = wire::write_frame(
+            &mut s,
+            &Msg::Update {
+                k_read: 0,
+                worker: 0,
+                oracles: vec![],
+            },
+            &mut scratch,
+        );
+        assert!(err.is_err());
+        // Control frames still flow (the session code decides to hang up).
+        assert!(wire::write_frame(&mut s, &Msg::Heartbeat, &mut scratch)
+            .is_ok());
+    }
+
+    #[test]
+    fn read_passes_through_and_zero_prob_is_noop_schedule() {
+        let spec = ChaosSpec::parse("rx-delay:fixed:0:1.0").unwrap();
+        let data = vec![1u8, 2, 3];
+        let mut s =
+            ChaosStream::new(data.as_slice(), spec, Pcg64::seeded(7));
+        let mut out = [0u8; 3];
+        std::io::Read::read_exact(&mut s, &mut out).unwrap();
+        assert_eq!(out, [1, 2, 3]);
+    }
+
+    #[test]
+    fn pareto_profile_has_the_requested_mean() {
+        let mut rng = Pcg64::seeded(9);
+        let profile = DelayProfile::ParetoMeanMs(10.0);
+        let n = 200_000;
+        let mean = (0..n).map(|_| profile.sample_ms(&mut rng)).sum::<f64>()
+            / n as f64;
+        assert!((mean - 10.0).abs() < 0.5, "mean={mean}");
+        assert!((0..100).all(|_| profile.sample_ms(&mut rng) >= 5.0));
+    }
+}

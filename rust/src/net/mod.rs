@@ -16,7 +16,12 @@
 //!   observed delay (the expected-delay counters), and answering snapshot
 //!   pulls with deltas when its dirty-range log covers the gap.
 //! - [`worker`] — the `worker` role: connects, rebuilds the problem from
-//!   the handshake config, and streams batched oracles.
+//!   the handshake config, and streams batched oracles; on a mid-run
+//!   disconnect [`worker::run_resilient`] reconnects with jittered
+//!   exponential backoff and rejoins under a fresh server-issued id.
+//! - [`chaos`] — wire-level fault injection (`run.chaos`): heavy-tailed
+//!   delay, frame drop, and abrupt disconnect, so the paper's Fig 3
+//!   straggler robustness replays over real sockets.
 //!
 //! Both roles lower through the same [`crate::run::RunSpec`] as every
 //! other engine: `apbcfw serve` validates the spec exactly like
@@ -27,15 +32,96 @@
 //! delayed engine at one worker, tolerance-bounded beyond).
 #![deny(missing_docs)]
 
+pub mod chaos;
 pub mod server;
 pub mod wire;
 pub mod worker;
 
+pub use chaos::{ChaosSpec, ChaosStream};
 pub use server::{serve, solve_loopback, BoundServer};
-pub use worker::{run_with_retry, WorkerSummary};
+pub use worker::{run_resilient, run_with_retry, WorkerSummary};
 
 use crate::problems::PayloadMode;
+use crate::util::config::Config;
+use anyhow::{anyhow, ensure, Result};
 use std::ops::Range;
+use std::time::Duration;
+
+/// Fleet-management knobs shared by the serve role and — via the
+/// handshake's flattened config — every worker: parsed once, validated
+/// strictly at `apbcfw serve` bind time so a typo fails fast instead of
+/// silently running a different experiment.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NetOptions {
+    /// `run.accept_timeout_secs` (default 30): how long the server waits
+    /// for its initial fleet, and — the elastic generalization — how long
+    /// it tolerates a momentarily *empty* fleet mid-run (every worker
+    /// dead, none yet rejoined) before abandoning the run.
+    pub accept_timeout: Duration,
+    /// `run.liveness_ms` (default 0 = disabled): declare a connection
+    /// dead after this long without a frame, requeueing its in-flight
+    /// blocks. `None` also disables worker heartbeats — the pinned
+    /// bit-identical no-chaos path exchanges exactly the v1 frames.
+    pub liveness: Option<Duration>,
+    /// Parsed `run.chaos` fault-injection spec (default: no faults).
+    pub chaos: ChaosSpec,
+}
+
+impl Default for NetOptions {
+    fn default() -> Self {
+        Self {
+            accept_timeout: Duration::from_secs(30),
+            liveness: None,
+            chaos: ChaosSpec::default(),
+        }
+    }
+}
+
+impl NetOptions {
+    /// Parse and strictly validate the `run.{accept_timeout_secs,
+    /// liveness_ms, chaos}` knobs.
+    pub fn from_config(cfg: &Config) -> Result<Self> {
+        let accept_timeout = match cfg.get("run.accept_timeout_secs") {
+            None => Duration::from_secs(30),
+            Some(v) => {
+                let secs: f64 = v.parse().map_err(|_| {
+                    anyhow!("run.accept_timeout_secs: bad number {v:?}")
+                })?;
+                ensure!(
+                    secs.is_finite() && secs > 0.0,
+                    "run.accept_timeout_secs must be finite and > 0, \
+                     got {v}"
+                );
+                Duration::from_secs_f64(secs)
+            }
+        };
+        let liveness = match cfg.get("run.liveness_ms") {
+            None => None,
+            Some(v) => {
+                let ms: u64 = v.parse().map_err(|_| {
+                    anyhow!(
+                        "run.liveness_ms must be a nonnegative integer \
+                         millisecond count, got {v:?}"
+                    )
+                })?;
+                (ms > 0).then(|| Duration::from_millis(ms))
+            }
+        };
+        let chaos = ChaosSpec::parse(cfg.get("run.chaos").unwrap_or("none"))?;
+        Ok(Self {
+            accept_timeout,
+            liveness,
+            chaos,
+        })
+    }
+
+    /// Heartbeat period a worker derives from the liveness timeout: a
+    /// third of it, so two heartbeats can be lost before the server
+    /// declares the worker dead. `None` when liveness is disabled.
+    pub fn heartbeat_period(&self) -> Option<Duration> {
+        self.liveness.map(|d| d / 3)
+    }
+}
 
 /// Wire tag for a [`PayloadMode`] (`Hello.payload_mode`): 0 auto, 1
 /// dense, 2 sparse.
@@ -103,6 +189,51 @@ mod tests {
     fn worker_zero_shares_the_delayed_engine_stream() {
         assert_eq!(worker_rng_stream(0), 2);
         assert_eq!(worker_rng_stream(3), 5);
+    }
+
+    #[test]
+    fn net_options_default_and_parse() {
+        let opts = NetOptions::from_config(&Config::new()).unwrap();
+        assert_eq!(opts, NetOptions::default());
+        assert_eq!(opts.accept_timeout, Duration::from_secs(30));
+        assert_eq!(opts.liveness, None);
+        assert_eq!(opts.heartbeat_period(), None);
+        assert!(opts.chaos.is_noop());
+
+        let mut cfg = Config::new();
+        cfg.set("run.accept_timeout_secs", "1.5");
+        cfg.set("run.liveness_ms", "300");
+        cfg.set("run.chaos", "drop:0.25");
+        let opts = NetOptions::from_config(&cfg).unwrap();
+        assert_eq!(opts.accept_timeout, Duration::from_secs_f64(1.5));
+        assert_eq!(opts.liveness, Some(Duration::from_millis(300)));
+        assert_eq!(opts.heartbeat_period(), Some(Duration::from_millis(100)));
+        assert_eq!(opts.chaos.drop_p, 0.25);
+
+        // liveness_ms = 0 means disabled, not a zero timeout.
+        let mut cfg = Config::new();
+        cfg.set("run.liveness_ms", "0");
+        assert_eq!(NetOptions::from_config(&cfg).unwrap().liveness, None);
+    }
+
+    #[test]
+    fn net_options_reject_bad_knobs() {
+        for (key, bad) in [
+            ("run.accept_timeout_secs", "0"),
+            ("run.accept_timeout_secs", "-3"),
+            ("run.accept_timeout_secs", "inf"),
+            ("run.accept_timeout_secs", "soon"),
+            ("run.liveness_ms", "-5"),
+            ("run.liveness_ms", "1.5"),
+            ("run.chaos", "bogus"),
+        ] {
+            let mut cfg = Config::new();
+            cfg.set(key, bad);
+            assert!(
+                NetOptions::from_config(&cfg).is_err(),
+                "{key}={bad} must be rejected"
+            );
+        }
     }
 
     #[test]

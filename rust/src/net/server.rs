@@ -20,9 +20,25 @@
 //! deadlocks and, at one worker, makes the whole solve deterministic (the
 //! loopback equivalence tests pin it bit-identical to the in-process
 //! delayed engine).
+//!
+//! The fleet is **elastic** (protocol v2): the listener stays open for
+//! the whole run, so workers can join mid-run (each gets a fresh
+//! server-issued id and therefore a fresh block-sampling rng stream) and
+//! leave or crash without stalling the solve — a dead connection's
+//! in-flight blocks are requeued into the sampling pool (`workers_lost` /
+//! `blocks_requeued` telemetry). With `run.liveness_ms` set, a connection
+//! silent for that long is declared dead even if the socket never errors
+//! (the unplugged-cable case); workers send heartbeats at a third of that
+//! window. The loop waits on the earliest of its deadlines (event
+//! arrival, accept poll, liveness scan, empty-fleet grace, time budget)
+//! instead of busy-polling, and readers feed the bounded event channel
+//! with counted backpressure (`event_stalls`) rather than unbounded
+//! buffering. All of it is strictly no-op by default: with no joiners, no
+//! deaths, no liveness and no chaos, the frames exchanged and the event
+//! ordering are exactly those of the fixed-fleet v1 loop.
 
 use super::wire::{self, Hello, Msg, SnapshotBody};
-use super::{merge_ranges, payload_mode_tag};
+use super::{merge_ranges, payload_mode_tag, NetOptions};
 use crate::coordinator::buffer::BatchAssembler;
 use crate::coordinator::{RunResult, UpdateMsg};
 use crate::problems::{ApplyOptions, Problem};
@@ -35,11 +51,14 @@ use crate::util::metrics::{Counters, Sample, Stopwatch, Trace};
 use anyhow::{anyhow, bail, ensure, Result};
 use std::collections::VecDeque;
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::mpsc;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
-/// How long the server waits for the expected worker fleet to connect.
-const ACCEPT_TIMEOUT: Duration = Duration::from_secs(30);
+/// How often the server loop polls the (nonblocking) listener for mid-run
+/// joiners; also the ceiling on how long an idle loop sleeps between
+/// housekeeping passes.
+const ACCEPT_POLL: Duration = Duration::from_millis(25);
 
 /// Dirty-range history depth: a worker more than this many versions
 /// behind is resynced with a full snapshot instead of a delta.
@@ -59,6 +78,47 @@ enum Event {
     Gone { conn: usize },
 }
 
+/// Server-side state of one worker connection. Slots are never removed —
+/// a dead connection keeps its index (with `stream` taken) so the `conn`
+/// indices carried by reader events stay stable for the whole run.
+struct ConnState {
+    /// Write half owned by the server loop; `None` once dead.
+    stream: Option<TcpStream>,
+    /// Server-issued worker id: the rng stream selector and the key under
+    /// which the assembler tracks this worker's pending updates.
+    worker_id: u32,
+    /// Milliseconds since the loop epoch of the last frame this
+    /// connection's reader decoded (any frame — heartbeats included).
+    last_seen: Arc<AtomicU64>,
+    /// Blocks handed out with the last snapshot answer and not yet
+    /// returned as an update — requeued if the worker dies mid-round.
+    outstanding: usize,
+}
+
+/// Declare connection `idx` dead (idempotent): shut the socket down so
+/// its reader unblocks, return its in-flight blocks to the sampling pool
+/// (the outstanding fan-out round plus anything of its still buffered in
+/// the assembler — block sampling is with replacement, so freed blocks
+/// are immediately drawable again), and count the loss.
+fn kill_conn(
+    conns: &mut [ConnState],
+    idx: usize,
+    alive: &mut usize,
+    asm: &mut BatchAssembler,
+    counters: &Counters,
+) {
+    let c = &mut conns[idx];
+    if let Some(stream) = c.stream.take() {
+        stream.shutdown(std::net::Shutdown::Both).ok();
+        *alive -= 1;
+        Counters::bump(&counters.workers_lost);
+        let requeued =
+            c.outstanding + asm.remove_worker(c.worker_id as usize);
+        c.outstanding = 0;
+        Counters::add(&counters.blocks_requeued, requeued as u64);
+    }
+}
+
 /// A validated, bound (but not yet running) serve-role instance. Binding
 /// is split from running so callers can learn the listen address — port 0
 /// resolves to an ephemeral port — before starting workers against it
@@ -70,6 +130,9 @@ pub struct BoundServer {
     /// Flattened config shipped in the handshake so workers rebuild the
     /// identical problem instance.
     config_pairs: Vec<(String, String)>,
+    /// Fleet-management knobs (accept deadline, liveness, chaos) —
+    /// validated at bind time, shipped to workers via the handshake.
+    opts: NetOptions,
 }
 
 impl BoundServer {
@@ -115,6 +178,9 @@ impl BoundServer {
         // The same problem-dependent fan-out rule the Runner applies at
         // dispatch (one rule, one implementation).
         runner.check_batch(instance.num_blocks())?;
+        // Fail fast on a bad fleet knob — workers would otherwise reject
+        // the handshake config one by one.
+        let opts = NetOptions::from_config(cfg)?;
         let listener = TcpListener::bind(addr)?;
         let config_pairs = cfg
             .iter()
@@ -125,6 +191,7 @@ impl BoundServer {
             spec,
             instance,
             config_pairs,
+            opts,
         })
     }
 
@@ -146,9 +213,25 @@ impl BoundServer {
         }
     }
 
-    /// Accept `workers` connections (with a deadline) and complete the
-    /// handshake on each in accept order — the accept index is the worker
-    /// id and rng stream selector.
+    /// The handshake frame for worker `worker_id` — identical for the
+    /// initial fleet and mid-run joiners.
+    fn make_hello(&self, worker_id: u32, n_blocks: usize) -> Msg {
+        Msg::Hello(Hello {
+            worker_id,
+            seed: self.spec.seed,
+            tau: self.spec.tau as u32,
+            batch: self.spec.batch as u32,
+            payload_mode: payload_mode_tag(self.spec.payload),
+            n_blocks: n_blocks as u32,
+            problem: registry_name(&self.instance).to_string(),
+            config: self.config_pairs.clone(),
+        })
+    }
+
+    /// Accept `workers` connections (within the configurable
+    /// `run.accept_timeout_secs` deadline) and complete the handshake on
+    /// each in accept order — the accept index is the worker id and rng
+    /// stream selector.
     fn accept_fleet<P: Problem>(
         &self,
         problem: &P,
@@ -156,7 +239,7 @@ impl BoundServer {
     ) -> Result<Vec<TcpStream>> {
         let workers = self.spec.engine.workers();
         self.listener.set_nonblocking(true)?;
-        let deadline = Instant::now() + ACCEPT_TIMEOUT;
+        let deadline = Instant::now() + self.opts.accept_timeout;
         let mut conns: Vec<TcpStream> = Vec::with_capacity(workers);
         while conns.len() < workers {
             match self.listener.accept() {
@@ -180,16 +263,7 @@ impl BoundServer {
         }
         let mut ebuf = Vec::new();
         for (id, stream) in conns.iter_mut().enumerate() {
-            let hello = Msg::Hello(Hello {
-                worker_id: id as u32,
-                seed: self.spec.seed,
-                tau: self.spec.tau as u32,
-                batch: self.spec.batch as u32,
-                payload_mode: payload_mode_tag(self.spec.payload),
-                n_blocks: problem.num_blocks() as u32,
-                problem: registry_name(&self.instance).to_string(),
-                config: self.config_pairs.clone(),
-            });
+            let hello = self.make_hello(id as u32, problem.num_blocks());
             let n = wire::write_frame(stream, &hello, &mut ebuf)?;
             Counters::add(&counters.wire_tx_bytes, n as u64);
         }
@@ -215,12 +289,32 @@ impl BoundServer {
         let workers = spec.engine.workers();
         let n = problem.num_blocks();
         let tau = spec.tau.clamp(1, n);
+        // Blocks a worker owes per answered snapshot — the in-flight
+        // round requeued if it dies before the update lands.
+        let batch_eff = spec.batch.clamp(1, n);
         let counters = Counters::new();
-        let mut conns: Vec<Option<TcpStream>> = self
+        // Millisecond origin for the per-connection last-seen stamps.
+        let epoch = Instant::now();
+        let mut conns: Vec<ConnState> = self
             .accept_fleet(problem, &counters)?
             .into_iter()
-            .map(Some)
+            .enumerate()
+            .map(|(id, stream)| ConnState {
+                stream: Some(stream),
+                worker_id: id as u32,
+                // Stamped "now", not 0: accepting the fleet may itself
+                // take a while, and a worker must get a full liveness
+                // window from handshake, not from the epoch.
+                last_seen: Arc::new(AtomicU64::new(
+                    epoch.elapsed().as_millis() as u64,
+                )),
+                outstanding: 0,
+            })
             .collect();
+        // Mid-run joiners get ids above the initial fleet — an id is
+        // never recycled, so rng streams and assembler keys stay unique
+        // across the whole run.
+        let mut next_worker_id = conns.len() as u32;
 
         let mut master = problem.init_param();
         let mut state = problem.init_server();
@@ -260,9 +354,9 @@ impl BoundServer {
         // is allowed inside the scope.
         let mut reader_streams: Vec<TcpStream> =
             Vec::with_capacity(conns.len());
-        for stream in conns.iter() {
+        for c in conns.iter() {
             reader_streams.push(
-                stream
+                c.stream
                     .as_ref()
                     .expect("all connections start alive")
                     .try_clone()?,
@@ -274,32 +368,148 @@ impl BoundServer {
             for (conn, reader) in reader_streams.into_iter().enumerate() {
                 let tx = tx.clone();
                 let counters = &counters;
-                scope.spawn(move || read_loop(conn, reader, tx, counters));
+                let last_seen = Arc::clone(&conns[conn].last_seen);
+                scope.spawn(move || {
+                    read_loop(conn, reader, tx, counters, last_seen, epoch)
+                });
             }
-            drop(tx);
+            // `tx` stays alive here: mid-run joiners need fresh clones.
 
             // ---------------- server loop ----------------
+            // One deadline-aware wait per turn: the loop blocks on the
+            // event channel until the earliest of (accept poll, liveness
+            // scan) is due — no 2 ms busy-spin, yet update ingestion
+            // still wakes it immediately.
             let mut alive = conns.len();
+            let mut next_accept = Instant::now() + ACCEPT_POLL;
+            let liveness_period = self
+                .opts
+                .liveness
+                .map(|d| (d / 4).max(Duration::from_millis(1)));
+            let mut next_liveness =
+                liveness_period.map(|p| Instant::now() + p);
+            // When the whole fleet is gone, wait this grace window (the
+            // accept deadline again) for a rejoin before giving up —
+            // a crashed-and-restarting worker must not kill the run.
+            let mut empty_since: Option<Instant> = None;
             'serve: loop {
-                match rx.recv_timeout(Duration::from_millis(2)) {
+                let now = Instant::now();
+
+                // -- accept mid-run joiners (nonblocking poll) --
+                if now >= next_accept {
+                    next_accept = now + ACCEPT_POLL;
+                    while let Ok((stream, _peer)) = self.listener.accept() {
+                        stream.set_nodelay(true).ok();
+                        if stream.set_nonblocking(false).is_err() {
+                            continue;
+                        }
+                        let mut stream = stream;
+                        let worker_id = next_worker_id;
+                        let hello = self.make_hello(worker_id, n);
+                        // A joiner lost mid-handshake is simply dropped —
+                        // nothing fallible may escape this scope.
+                        let nb = match wire::write_frame(
+                            &mut stream,
+                            &hello,
+                            &mut ebuf,
+                        ) {
+                            Ok(nb) => nb,
+                            Err(_) => continue,
+                        };
+                        let reader = match stream.try_clone() {
+                            Ok(r) => r,
+                            Err(_) => continue,
+                        };
+                        Counters::add(&counters.wire_tx_bytes, nb as u64);
+                        next_worker_id += 1;
+                        let last_seen = Arc::new(AtomicU64::new(
+                            epoch.elapsed().as_millis() as u64,
+                        ));
+                        let conn = conns.len();
+                        conns.push(ConnState {
+                            stream: Some(stream),
+                            worker_id,
+                            last_seen: Arc::clone(&last_seen),
+                            outstanding: 0,
+                        });
+                        let tx = tx.clone();
+                        let counters = &counters;
+                        scope.spawn(move || {
+                            read_loop(
+                                conn, reader, tx, counters, last_seen, epoch,
+                            )
+                        });
+                        alive += 1;
+                        empty_since = None;
+                        Counters::bump(&counters.workers_joined);
+                    }
+                }
+
+                // -- liveness scan: reap silent connections --
+                if let (Some(window), Some(period)) =
+                    (self.opts.liveness, liveness_period)
+                {
+                    if next_liveness.is_some_and(|t| now >= t) {
+                        next_liveness = Some(now + period);
+                        let now_ms = epoch.elapsed().as_millis() as u64;
+                        let cutoff = window.as_millis() as u64;
+                        for i in 0..conns.len() {
+                            let silent_ms = now_ms.saturating_sub(
+                                conns[i].last_seen.load(Ordering::Relaxed),
+                            );
+                            if conns[i].stream.is_some() && silent_ms > cutoff
+                            {
+                                kill_conn(
+                                    &mut conns, i, &mut alive, &mut asm,
+                                    &counters,
+                                );
+                            }
+                        }
+                    }
+                }
+
+                // -- empty-fleet grace --
+                if alive == 0 {
+                    match empty_since {
+                        None => empty_since = Some(now),
+                        Some(t0)
+                            if now.duration_since(t0)
+                                >= self.opts.accept_timeout =>
+                        {
+                            break 'serve;
+                        }
+                        Some(_) => {}
+                    }
+                } else {
+                    empty_since = None;
+                }
+
+                // -- deadline-aware event wait --
+                let mut deadline = next_accept;
+                if let Some(t) = next_liveness {
+                    deadline = deadline.min(t);
+                }
+                let wait =
+                    deadline.saturating_duration_since(Instant::now());
+                match rx.recv_timeout(wait) {
                     Ok(Event::Update { conn, msg }) => {
                         // Reject oracles the instance cannot apply (block
                         // out of range, payload of the wrong dimension)
-                        // and drop the connection — a protocol violation,
-                        // not a recoverable update. Its reader announces
-                        // `Gone` once the socket shuts down.
+                        // and kill the connection — a protocol violation,
+                        // not a recoverable update. The later `Gone` from
+                        // its reader is then a no-op.
                         let valid = msg.oracles.iter().all(|o| {
                             o.block < n && o.s.dim() == payload_dim
                         });
                         if !valid {
-                            if let Some(stream) = &conns[conn] {
-                                stream
-                                    .shutdown(std::net::Shutdown::Both)
-                                    .ok();
-                            }
-                            conns[conn] = None;
+                            kill_conn(
+                                &mut conns, conn, &mut alive, &mut asm,
+                                &counters,
+                            );
                             continue;
                         }
+                        // The outstanding fan-out round came back.
+                        conns[conn].outstanding = 0;
                         let (mut nnz, mut bytes) = (0u64, 0u64);
                         for o in &msg.oracles {
                             nnz += o.s.nnz() as u64;
@@ -329,32 +539,36 @@ impl BoundServer {
                         let body =
                             snapshot_body(&master, &delta_log, k, have);
                         let msg = Msg::Snapshot { version: k, body };
-                        if let Some(stream) = &mut conns[conn] {
-                            match wire::write_frame(stream, &msg, &mut ebuf) {
-                                Ok(nb) => Counters::add(
+                        let sent = match &mut conns[conn].stream {
+                            Some(stream) => {
+                                wire::write_frame(stream, &msg, &mut ebuf)
+                            }
+                            None => continue, // already declared dead
+                        };
+                        match sent {
+                            Ok(nb) => {
+                                Counters::add(
                                     &counters.wire_tx_bytes,
                                     nb as u64,
-                                ),
-                                Err(_) => {
-                                    // Shut the socket down before dropping
-                                    // our clone: the reader thread holds
-                                    // its own dup and would otherwise
-                                    // block in read forever (scope would
-                                    // never join).
-                                    stream
-                                        .shutdown(std::net::Shutdown::Both)
-                                        .ok();
-                                    conns[conn] = None;
-                                }
+                                );
+                                // The worker now owes one fan-out round.
+                                conns[conn].outstanding = batch_eff;
                             }
+                            // kill_conn shuts the socket down before
+                            // dropping our clone: the reader thread holds
+                            // its own dup and would otherwise block in
+                            // read forever (scope would never join).
+                            Err(_) => kill_conn(
+                                &mut conns, conn, &mut alive, &mut asm,
+                                &counters,
+                            ),
                         }
                     }
                     Ok(Event::Gone { conn }) => {
-                        conns[conn] = None;
-                        alive = alive.saturating_sub(1);
-                        if alive == 0 {
-                            break 'serve;
-                        }
+                        kill_conn(
+                            &mut conns, conn, &mut alive, &mut asm,
+                            &counters,
+                        );
                     }
                     Err(mpsc::RecvTimeoutError::Timeout) => {}
                     Err(mpsc::RecvTimeoutError::Disconnected) => break 'serve,
@@ -443,7 +657,8 @@ impl BoundServer {
 
             // Orderly shutdown: tell every live worker, then close both
             // socket halves so blocked reader threads unblock and exit.
-            for stream in conns.iter_mut().flatten() {
+            for stream in conns.iter_mut().filter_map(|c| c.stream.as_mut())
+            {
                 if let Ok(nb) =
                     wire::write_frame(stream, &Msg::Shutdown, &mut ebuf)
                 {
@@ -451,6 +666,9 @@ impl BoundServer {
                 }
                 stream.shutdown(std::net::Shutdown::Both).ok();
             }
+            // Dropping the receiver errors out any reader still sending,
+            // so blocked backpressure sends cannot outlive the loop.
+            drop(tx);
             drop(rx);
         });
 
@@ -506,19 +724,35 @@ impl BoundServer {
     }
 }
 
-/// Decode frames off one connection into the server's event channel.
-/// Exits on any read error, a clean close, a protocol violation, or a
-/// hung-up server loop — always announcing `Gone` (best-effort) first.
+/// Decode frames off one connection into the server's event channel,
+/// stamping `last_seen` (ms since `epoch`) on every decoded frame.
+/// Heartbeats and join announcements are absorbed right here — they
+/// refresh liveness (and the `reconnects` counter) without ever entering
+/// the loop's event ordering, which is part of what keeps the fixed-fleet
+/// path bit-identical to v1. Exits on any read error, a clean close, a
+/// protocol violation, or a hung-up server loop — always announcing
+/// `Gone` (best-effort) first.
+///
+/// Backpressure: a full event channel is counted (`event_stalls`, logged
+/// on first occurrence) and then waited out with a blocking send — a slow
+/// consumer stalls readers instead of growing an unbounded buffer, and
+/// nothing panics.
 fn read_loop(
     conn: usize,
     mut stream: TcpStream,
     tx: mpsc::SyncSender<Event>,
     counters: &Counters,
+    last_seen: Arc<AtomicU64>,
+    epoch: Instant,
 ) {
     loop {
         match wire::read_frame(&mut stream) {
             Ok(Some((msg, nbytes))) => {
                 Counters::add(&counters.wire_rx_bytes, nbytes as u64);
+                last_seen.store(
+                    epoch.elapsed().as_millis() as u64,
+                    Ordering::Relaxed,
+                );
                 let event = match msg {
                     Msg::Update {
                         k_read,
@@ -536,12 +770,35 @@ fn read_loop(
                         conn,
                         have: have_version,
                     },
+                    Msg::Heartbeat => continue,
+                    Msg::Join { resumed } => {
+                        if resumed {
+                            Counters::bump(&counters.reconnects);
+                        }
+                        continue;
+                    }
                     // Anything else from a worker is a protocol violation;
                     // drop the connection.
                     _ => break,
                 };
-                if tx.send(event).is_err() {
-                    return; // server loop is gone
+                match tx.try_send(event) {
+                    Ok(()) => {}
+                    Err(mpsc::TrySendError::Full(event)) => {
+                        if counters
+                            .event_stalls
+                            .fetch_add(1, Ordering::Relaxed)
+                            == 0
+                        {
+                            eprintln!(
+                                "[serve] event channel full; reader {conn} \
+                                 applying backpressure"
+                            );
+                        }
+                        if tx.send(event).is_err() {
+                            return; // server loop is gone
+                        }
+                    }
+                    Err(mpsc::TrySendError::Disconnected(_)) => return,
                 }
             }
             Ok(None) | Err(_) => break,
@@ -641,9 +898,18 @@ pub fn solve_loopback(
     std::thread::scope(|scope| {
         let mut handles = Vec::with_capacity(workers);
         for _ in 0..workers {
-            handles.push(
-                scope.spawn(move || super::worker::run(&bound.to_string())),
-            );
+            // Resilient workers: under `run.chaos` an injected disconnect
+            // mid-run is survived by reconnecting (the server's listener
+            // stays open for joiners); once the run ends and the listener
+            // drops, a reconnect attempt is refused and the worker exits
+            // with its summed summary. Without chaos this is exactly the
+            // single-session worker.
+            handles.push(scope.spawn(move || {
+                super::worker::run_resilient(
+                    &bound.to_string(),
+                    Duration::from_secs(10),
+                )
+            }));
         }
         let report = server.run(&mut ())?;
         for h in handles {
@@ -701,6 +967,24 @@ mod tests {
             .unwrap_err()
             .to_string();
         assert!(err.contains("exceeds"), "{err}");
+    }
+
+    #[test]
+    fn bind_rejects_bad_fleet_knobs() {
+        for (key, bad, needle) in [
+            ("run.chaos", "bogus", "run.chaos"),
+            ("run.liveness_ms", "soon", "liveness"),
+            ("run.accept_timeout_secs", "0", "accept_timeout"),
+        ] {
+            let mut c = cfg();
+            c.set(key, bad);
+            let spec = RunSpec::new(Engine::asynchronous(1));
+            let err = BoundServer::bind(spec, "gfl", &c, "127.0.0.1:0")
+                .map(|_| ())
+                .unwrap_err()
+                .to_string();
+            assert!(err.contains(needle), "{key}={bad}: {err}");
+        }
     }
 
     #[test]

@@ -22,8 +22,10 @@ use std::io::{Read, Write};
 pub const MAGIC: u32 = u32::from_le_bytes(*b"apfw");
 
 /// Protocol version. Breaking changes bump this; a receiver rejects any
-/// frame whose version it does not implement.
-pub const VERSION: u16 = 1;
+/// frame whose version it does not implement. v2 added the elastic-fleet
+/// messages ([`Msg::Join`], [`Msg::Heartbeat`]); v1 peers are rejected at
+/// the first frame (see `docs/WIRE.md` §6 for the compatibility rules).
+pub const VERSION: u16 = 2;
 
 /// Fixed frame header size in bytes: magic (4) + version (2) + type (1) +
 /// reserved (1) + payload length (4).
@@ -40,6 +42,17 @@ mod tag {
     pub const SNAPSHOT: u8 = 3;
     pub const UPDATE: u8 = 4;
     pub const SHUTDOWN: u8 = 5;
+    pub const HEARTBEAT: u8 = 6;
+    pub const JOIN: u8 = 7;
+}
+
+/// Is `buf` (a complete encoded frame) an `Update` frame? Used by the
+/// chaos layer to fault-inject at oracle-payload granularity without
+/// corrupting the framing of control messages.
+pub(crate) fn frame_is_update(buf: &[u8]) -> bool {
+    buf.len() >= HEADER_BYTES
+        && u32::from_le_bytes(buf[0..4].try_into().unwrap()) == MAGIC
+        && buf[6] == tag::UPDATE
 }
 
 /// Handshake sent by the server immediately after accepting a worker
@@ -111,6 +124,20 @@ pub enum Msg {
     },
     /// Server -> worker: the solve is over; close the connection.
     Shutdown,
+    /// Worker -> server keepalive (v2). Carries no payload; receiving any
+    /// frame refreshes the connection's last-seen time, and a worker in a
+    /// long oracle computation sends these so a liveness timeout does not
+    /// mistake slow for dead. Never forwarded into the server's event
+    /// ordering.
+    Heartbeat,
+    /// Worker -> server (v2): the first frame after the handshake.
+    /// `resumed` distinguishes a reconnect-with-backoff session (the
+    /// worker lost a prior connection mid-run) from a fresh join — the
+    /// server's `reconnects` telemetry counts the former.
+    Join {
+        /// True when this session replaces one that broke mid-run.
+        resumed: bool,
+    },
 }
 
 impl Msg {
@@ -121,6 +148,8 @@ impl Msg {
             Msg::Snapshot { .. } => tag::SNAPSHOT,
             Msg::Update { .. } => tag::UPDATE,
             Msg::Shutdown => tag::SHUTDOWN,
+            Msg::Heartbeat => tag::HEARTBEAT,
+            Msg::Join { .. } => tag::JOIN,
         }
     }
 }
@@ -355,6 +384,10 @@ fn put_body(buf: &mut Vec<u8>, msg: &Msg) {
             }
         }
         Msg::Shutdown => {}
+        Msg::Heartbeat => {}
+        Msg::Join { resumed } => {
+            put_u8(buf, u8::from(*resumed));
+        }
     }
 }
 
@@ -425,6 +458,10 @@ fn get_body(tag_byte: u8, payload: &[u8]) -> Result<Msg> {
             }
         }
         tag::SHUTDOWN => Msg::Shutdown,
+        tag::HEARTBEAT => Msg::Heartbeat,
+        tag::JOIN => Msg::Join {
+            resumed: d.u8()? != 0,
+        },
         other => bail!("unknown message type {other} (protocol v{VERSION})"),
     };
     // Forward compatibility: trailing bytes beyond what this version
@@ -594,10 +631,50 @@ mod tests {
                 ],
             },
             Msg::Shutdown,
+            Msg::Heartbeat,
+            Msg::Join { resumed: false },
+            Msg::Join { resumed: true },
         ];
         for msg in &msgs {
             assert_eq!(&roundtrip(msg), msg);
         }
+    }
+
+    #[test]
+    fn v1_peer_frames_are_rejected_with_a_version_error() {
+        // A v1 build writes version=1 in the header; this v2 build must
+        // reject it cleanly (docs/WIRE.md §6: both roles ship in one
+        // binary, so a version skew means mismatched deployments).
+        let mut buf = Vec::new();
+        encode_frame(&Msg::Shutdown, &mut buf);
+        buf[4..6].copy_from_slice(&1u16.to_le_bytes());
+        let err = read_frame(&mut buf.as_slice()).unwrap_err().to_string();
+        assert!(err.contains("version 1"), "{err}");
+        assert!(err.contains("v2"), "{err}");
+    }
+
+    #[test]
+    fn update_frames_are_recognized_for_chaos_injection() {
+        let mut buf = Vec::new();
+        encode_frame(
+            &Msg::Update {
+                k_read: 0,
+                worker: 0,
+                oracles: vec![],
+            },
+            &mut buf,
+        );
+        assert!(frame_is_update(&buf));
+        for other in [
+            Msg::Shutdown,
+            Msg::Heartbeat,
+            Msg::Join { resumed: true },
+            Msg::SnapshotRequest { have_version: 0 },
+        ] {
+            encode_frame(&other, &mut buf);
+            assert!(!frame_is_update(&buf), "{other:?}");
+        }
+        assert!(!frame_is_update(&[0u8; 4]));
     }
 
     #[test]

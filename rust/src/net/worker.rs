@@ -16,78 +16,190 @@
 //! sequential delayed engine's stream ([`crate::solver::delayed`] draws
 //! from `Pcg64::new(seed, 2)`), so a one-worker loopback solve replays the
 //! in-process delayed engine draw-for-draw — the bit-identity pinned in
-//! `rust/tests/net_transport.rs`.
+//! `rust/tests/net_transport.rs`. Ids are server-issued, so a session that
+//! replaces a broken one gets a fresh id and therefore a fresh stream.
+//!
+//! Elastic-fleet behavior (protocol v2): every session announces itself
+//! with a `Join` frame right after the handshake, [`run_resilient`]
+//! reconnects with jittered exponential backoff when a session breaks
+//! mid-run, heartbeats keep a liveness-enabled server from mistaking a
+//! slow oracle for a dead worker, and the `run.chaos` knob (shipped to the
+//! worker inside the handshake config) wraps the transport in the
+//! fault-injecting [`ChaosStream`].
 //!
 //! [`oracle_into`]: crate::problems::Problem::oracle_into
 //! [`pick_blocks`]: crate::coordinator::pick_blocks
 
+use super::chaos::{chaos_rng_stream, ChaosStream};
 use super::wire::{self, Hello, Msg, SnapshotBody};
-use super::{payload_mode_from_tag, worker_rng_stream};
+use super::{payload_mode_from_tag, worker_rng_stream, NetOptions};
 use crate::coordinator::pick_blocks;
 use crate::problems::{BlockOracle, OracleScratch, Problem};
 use crate::run::ProblemInstance;
 use crate::util::config::Config;
 use crate::util::rng::Pcg64;
 use anyhow::{anyhow, bail, ensure, Result};
+use std::io::{Read, Write};
 use std::net::TcpStream;
 use std::time::{Duration, Instant};
 
-/// What a worker did over one connection's lifetime.
+/// What a worker did over its lifetime (summed across every session when
+/// [`run_resilient`] reconnects).
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct WorkerSummary {
-    /// Worker id assigned by the server.
+    /// Worker id assigned by the server (the latest session's, when the
+    /// worker reconnected under a fresh id).
     pub worker_id: u32,
     /// Snapshot-pull/solve/update rounds completed.
     pub rounds: u64,
     /// Oracle subproblems solved.
     pub oracle_calls: u64,
-    /// Frame bytes sent (updates + snapshot requests).
+    /// Frame bytes sent (join + updates + snapshot requests + heartbeats).
     pub tx_bytes: u64,
     /// Frame bytes received (handshake + snapshots + shutdown).
     pub rx_bytes: u64,
-    /// Whether the connection ended with an explicit `Shutdown` frame or
-    /// a clean EOF. `false` means a transport failure ended the loop —
+    /// Sessions that successfully resumed after a broken connection.
+    pub reconnects: u64,
+    /// Whether the last connection ended with an explicit `Shutdown` frame
+    /// or a clean EOF. `false` means a transport failure ended the loop —
     /// possibly mid-solve, though a server teardown can also surface as a
     /// reset when frames race the close, so this is a diagnostic signal,
     /// not an error.
     pub clean: bool,
 }
 
+impl WorkerSummary {
+    /// Fold one session's totals into the running lifetime summary.
+    fn absorb(&mut self, session: &WorkerSummary) {
+        self.worker_id = session.worker_id;
+        self.rounds += session.rounds;
+        self.oracle_calls += session.oracle_calls;
+        self.tx_bytes += session.tx_bytes;
+        self.rx_bytes += session.rx_bytes;
+        self.clean = session.clean;
+    }
+}
+
 /// Connect to `addr`, complete the handshake, and run the oracle loop
 /// until the server shuts the solve down. A connection that ends after the
 /// handshake (shutdown frame, EOF, or reset — the server closes sockets
 /// on stop) is a clean exit; failures *before* the handshake and protocol
-/// violations are errors.
+/// violations are errors. Single-session: a mid-run disconnect ends the
+/// worker (see [`run_resilient`] for the reconnecting variant).
 pub fn run(addr: &str) -> Result<WorkerSummary> {
     let stream = TcpStream::connect(addr)?;
     stream.set_nodelay(true).ok();
-    run_on(stream)
+    run_on(stream, false)
 }
 
-/// [`run`], but retry the initial connect until `timeout` elapses — the
-/// CLI uses this so `apbcfw worker` can be started before (or seconds
-/// after) its server.
+/// [`run`], but retry the initial connect until `timeout` elapses — so a
+/// worker can be started before (or seconds after) its server.
 pub fn run_with_retry(addr: &str, timeout: Duration) -> Result<WorkerSummary> {
-    let deadline = Instant::now() + timeout;
-    let stream = loop {
+    let mut jitter = backoff_rng();
+    let stream = connect_until(addr, timeout, false, &mut jitter)?;
+    run_on(stream, false)
+}
+
+/// The elastic-fleet worker: like [`run_with_retry`], but when an
+/// established session breaks mid-run (socket failure, injected chaos
+/// disconnect, server-side liveness kill), reconnect with jittered
+/// exponential backoff — announcing the new session as resumed — and keep
+/// solving under the fresh server-issued id. Returns the summed summary
+/// once a session ends cleanly, or, after at least one session, once the
+/// server stops answering (a vanished listener usually just means the run
+/// is over). `connect_timeout` bounds both the initial connect and each
+/// reconnect window.
+pub fn run_resilient(
+    addr: &str,
+    connect_timeout: Duration,
+) -> Result<WorkerSummary> {
+    let mut jitter = backoff_rng();
+    let mut total = WorkerSummary::default();
+    let mut resumed = false;
+    loop {
+        let stream =
+            match connect_until(addr, connect_timeout, resumed, &mut jitter) {
+                Ok(s) => s,
+                // Initial connects must fail loudly; reconnects report
+                // what the completed sessions achieved.
+                Err(e) if !resumed => return Err(e),
+                Err(_) => return Ok(total),
+            };
+        match run_on(stream, resumed) {
+            Ok(session) => {
+                total.absorb(&session);
+                if resumed {
+                    total.reconnects += 1;
+                }
+                if session.clean {
+                    return Ok(total);
+                }
+            }
+            // A handshake error on the very first session is a real
+            // misconfiguration; on a resume it is almost always the
+            // reconnect racing the server's teardown.
+            Err(e) if !resumed => return Err(e),
+            Err(_) => return Ok(total),
+        }
+        resumed = true;
+    }
+}
+
+/// Seed the backoff-jitter rng from wall-clock nanos: restarted workers
+/// must NOT share a schedule (a thundering herd of identically-timed
+/// reconnects is exactly what jitter exists to break up). Block sampling
+/// stays fully deterministic — this rng never touches it.
+fn backoff_rng() -> Pcg64 {
+    let seed = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_nanos() as u64)
+        .unwrap_or(0x5eed);
+    Pcg64::new(seed, 1)
+}
+
+/// Connect to `addr`, retrying with jittered exponential backoff (nominal
+/// 100 ms doubling to a 2 s ceiling, each step scaled by 0.5–1.5x) until
+/// `window` elapses. With `refused_is_final`, an explicit connection
+/// refusal returns immediately: nothing is listening, so for a resuming
+/// session the run is over.
+fn connect_until(
+    addr: &str,
+    window: Duration,
+    refused_is_final: bool,
+    jitter: &mut Pcg64,
+) -> Result<TcpStream> {
+    let deadline = Instant::now() + window;
+    let mut backoff = Duration::from_millis(100);
+    loop {
         match TcpStream::connect(addr) {
-            Ok(s) => break s,
+            Ok(s) => {
+                s.set_nodelay(true).ok();
+                return Ok(s);
+            }
             Err(e) => {
+                if refused_is_final
+                    && e.kind() == std::io::ErrorKind::ConnectionRefused
+                {
+                    return Err(anyhow!("{addr} refused the connection: {e}"));
+                }
                 if Instant::now() >= deadline {
                     return Err(anyhow!(
-                        "could not connect to {addr} within {timeout:?}: {e}"
+                        "could not connect to {addr} within {window:?}: {e}"
                     ));
                 }
-                std::thread::sleep(Duration::from_millis(100));
+                let step = backoff.mul_f64(0.5 + jitter.uniform());
+                let left = deadline.saturating_duration_since(Instant::now());
+                std::thread::sleep(step.min(left));
+                backoff = (backoff * 2).min(Duration::from_secs(2));
             }
         }
-    };
-    stream.set_nodelay(true).ok();
-    run_on(stream)
+    }
 }
 
-/// Run the worker protocol over an established connection.
-fn run_on(mut stream: TcpStream) -> Result<WorkerSummary> {
+/// Run the worker protocol over an established connection. `resumed` is
+/// forwarded in the session's `Join` announcement (the server's
+/// `reconnects` telemetry).
+fn run_on(mut stream: TcpStream, resumed: bool) -> Result<WorkerSummary> {
     let mut rx_bytes = 0u64;
     let (hello, nbytes) = match wire::read_frame(&mut stream)? {
         Some((Msg::Hello(h), n)) => (h, n),
@@ -97,6 +209,14 @@ fn run_on(mut stream: TcpStream) -> Result<WorkerSummary> {
         None => bail!("server closed the connection before the handshake"),
     };
     rx_bytes += nbytes as u64;
+
+    // Announce the session (v2): the first worker->server frame, before
+    // any snapshot traffic, so the server can count joins/resumes without
+    // touching its event ordering.
+    let mut ebuf = Vec::new();
+    let tx_bytes =
+        wire::write_frame(&mut stream, &Msg::Join { resumed }, &mut ebuf)?
+            as u64;
 
     // Rebuild the problem instance from the shipped config; data
     // generation is seeded, so this is the server's instance bit-for-bit.
@@ -112,22 +232,58 @@ fn run_on(mut stream: TcpStream) -> Result<WorkerSummary> {
         hello.n_blocks,
         instance.num_blocks()
     );
-    match &instance {
-        ProblemInstance::Gfl(p) => solve_loop(p, &hello, stream, rx_bytes),
-        ProblemInstance::Qp(p) => solve_loop(p, &hello, stream, rx_bytes),
-        ProblemInstance::Chain(p) => solve_loop(p, &hello, stream, rx_bytes),
+    // The fleet knobs ride in the same shipped config: heartbeat cadence
+    // from the server's liveness window, fault injection from `run.chaos`.
+    let opts = NetOptions::from_config(&cfg)?;
+    let heartbeat = opts.heartbeat_period();
+    if opts.chaos.is_noop() {
+        // No chaos: the raw stream, bit-identical to the plain transport.
+        dispatch(&instance, &hello, stream, rx_bytes, tx_bytes, heartbeat)
+    } else {
+        let rng = Pcg64::new(hello.seed, chaos_rng_stream(hello.worker_id));
+        let stream = ChaosStream::new(stream, opts.chaos, rng);
+        dispatch(&instance, &hello, stream, rx_bytes, tx_bytes, heartbeat)
+    }
+}
+
+/// Monomorphize [`solve_loop`] over the instance's problem type.
+fn dispatch<S: Read + Write>(
+    instance: &ProblemInstance,
+    hello: &Hello,
+    stream: S,
+    rx_bytes: u64,
+    tx_bytes: u64,
+    heartbeat: Option<Duration>,
+) -> Result<WorkerSummary> {
+    match instance {
+        ProblemInstance::Gfl(p) => {
+            solve_loop(p, hello, stream, rx_bytes, tx_bytes, heartbeat)
+        }
+        ProblemInstance::Qp(p) => {
+            solve_loop(p, hello, stream, rx_bytes, tx_bytes, heartbeat)
+        }
+        ProblemInstance::Chain(p) => {
+            solve_loop(p, hello, stream, rx_bytes, tx_bytes, heartbeat)
+        }
         ProblemInstance::Multiclass(p) => {
-            solve_loop(p, &hello, stream, rx_bytes)
+            solve_loop(p, hello, stream, rx_bytes, tx_bytes, heartbeat)
         }
     }
 }
 
 /// The generic oracle loop: pull, solve `batch` blocks, push, repeat.
-fn solve_loop<P: Problem>(
+/// Generic over the transport so the chaos wrapper slots in untouched.
+/// With `heartbeat` set (server liveness enabled), a `Heartbeat` frame is
+/// sent whenever that long passes without other outbound traffic — checked
+/// between oracle calls, so even a long multi-block solve stays visibly
+/// alive.
+fn solve_loop<P: Problem, S: Read + Write>(
     problem: &P,
     hello: &Hello,
-    mut stream: TcpStream,
+    mut stream: S,
     mut rx_bytes: u64,
+    tx_bytes: u64,
+    heartbeat: Option<Duration>,
 ) -> Result<WorkerSummary> {
     let n = problem.num_blocks();
     let batch = (hello.batch as usize).clamp(1, n);
@@ -146,17 +302,22 @@ fn solve_loop<P: Problem>(
     let mut ebuf: Vec<u8> = Vec::new();
     let mut summary = WorkerSummary {
         worker_id: hello.worker_id,
+        tx_bytes,
         ..Default::default()
     };
+    let mut last_tx = Instant::now();
 
-    loop {
+    'session: loop {
         // ---- pull ----
         match wire::write_frame(
             &mut stream,
             &Msg::SnapshotRequest { have_version: have },
             &mut ebuf,
         ) {
-            Ok(nb) => summary.tx_bytes += nb as u64,
+            Ok(nb) => {
+                summary.tx_bytes += nb as u64;
+                last_tx = Instant::now();
+            }
             // The server closes sockets on stop; a failed send after the
             // handshake is the shutdown path, not an error.
             Err(_) => break,
@@ -212,6 +373,21 @@ fn solve_loop<P: Problem>(
         // ---- solve ----
         pick_blocks(&mut rng, n, batch, &mut blocks);
         for (slot, &block) in slots.iter_mut().zip(blocks.iter()) {
+            if let Some(period) = heartbeat {
+                if last_tx.elapsed() >= period {
+                    match wire::write_frame(
+                        &mut stream,
+                        &Msg::Heartbeat,
+                        &mut ebuf,
+                    ) {
+                        Ok(nb) => {
+                            summary.tx_bytes += nb as u64;
+                            last_tx = Instant::now();
+                        }
+                        Err(_) => break 'session,
+                    }
+                }
+            }
             problem.oracle_into(&param, block, &mut oscratch, slot);
             summary.oracle_calls += 1;
         }
@@ -230,7 +406,10 @@ fn solve_loop<P: Problem>(
             slots = oracles;
         }
         match sent {
-            Ok(nb) => summary.tx_bytes += nb as u64,
+            Ok(nb) => {
+                summary.tx_bytes += nb as u64;
+                last_tx = Instant::now();
+            }
             Err(_) => break,
         }
         summary.rounds += 1;

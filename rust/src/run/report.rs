@@ -86,6 +86,12 @@ impl Report {
                 wire_rx_bytes: 0,
                 delay_sum: 0,
                 delay_max: 0,
+                // Fleet telemetry only the net serve role populates.
+                workers_joined: 0,
+                workers_lost: 0,
+                blocks_requeued: 0,
+                reconnects: 0,
+                event_stalls: 0,
             },
             elapsed_s: r.elapsed_s,
             secs_per_pass: if passes > 0.0 {

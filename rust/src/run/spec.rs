@@ -582,7 +582,11 @@ impl RunSpec {
     /// `eps_primal`, `f_star`, `line_search`, `weighted_averaging`,
     /// `sample_every`, `exact_gap`, `seed`, `straggler`, `snapshot_mode`,
     /// `queue_factor`, `staleness_rule`, `collision_overwrite`,
-    /// `work_multiplier`, `delay`, `delay_history`, `drop_rule`.
+    /// `work_multiplier`, `delay`, `delay_history`, `drop_rule`, and the
+    /// net-transport fleet knobs `accept_timeout_secs`, `liveness_ms`,
+    /// `chaos` (parsed and validated by the serve role —
+    /// `crate::net::NetOptions` — but scoped here so a typo'd mode fails
+    /// fast).
     pub fn from_config(cfg: &Config) -> Result<Self> {
         let mode = cfg.get_or("run.mode", "seq");
         let payload_text = cfg.get_or("run.payload", "auto");
@@ -670,6 +674,13 @@ impl RunSpec {
             ("run.delay", &["delayed"]),
             ("run.delay_history", &["delayed"]),
             ("run.drop_rule", &["delayed"]),
+            // Net-transport fleet knobs: the serve role hosts the async
+            // engine, so they ride on run.mode=async (ignored by the
+            // in-process async engine itself; `serve` validates and
+            // enforces them via `crate::net::NetOptions`).
+            ("run.accept_timeout_secs", &["async"]),
+            ("run.liveness_ms", &["async"]),
+            ("run.chaos", &["async"]),
         ];
         let mode_name = engine.name();
         for (key, modes) in SCOPED_KEYS {

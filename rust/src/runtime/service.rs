@@ -17,7 +17,11 @@
 //! trace afterwards. [`spawn_serve`] does the same for the distributed
 //! serve role ([`crate::net`]): the socket is bound (and the spec
 //! validated) synchronously so the caller learns the listen address —
-//! ephemeral port included — before any worker connects.
+//! ephemeral port included — before any worker connects. The fleet
+//! behind that address is elastic: workers may join mid-run and dead
+//! ones are reaped by the liveness scan with their in-flight blocks
+//! requeued ([`crate::net::NetOptions`]), so a serve session outlives
+//! any individual connection.
 
 use crate::net::BoundServer;
 use crate::run::{

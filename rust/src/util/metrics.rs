@@ -111,6 +111,24 @@ pub struct Counters {
     pub delay_sum: AtomicU64,
     /// Largest observed delay among applied updates.
     pub delay_max: AtomicU64,
+    /// Workers accepted into the fleet after the run started (elastic
+    /// membership): mid-run joiners and reconnectors alike.
+    pub workers_joined: AtomicU64,
+    /// Connections declared dead mid-run (socket error, invalid payload,
+    /// or liveness timeout) whose in-flight work was requeued.
+    pub workers_lost: AtomicU64,
+    /// Blocks returned to the sampling pool when their worker was
+    /// declared dead: the outstanding fan-out round plus any updates of
+    /// that worker still buffered in the assembler.
+    pub blocks_requeued: AtomicU64,
+    /// Sessions that announced themselves as resuming a broken one
+    /// (`Join { resumed: true }` — the worker-side reconnect-with-backoff
+    /// loop succeeding).
+    pub reconnects: AtomicU64,
+    /// Times a reader thread found the server's event channel full and had
+    /// to block (the bounded-backpressure stall metric — persistent growth
+    /// means the fleet outpaces the apply loop).
+    pub event_stalls: AtomicU64,
 }
 
 impl Counters {
@@ -132,6 +150,11 @@ impl Counters {
             wire_rx_bytes: self.wire_rx_bytes.load(Ordering::Relaxed),
             delay_sum: self.delay_sum.load(Ordering::Relaxed),
             delay_max: self.delay_max.load(Ordering::Relaxed),
+            workers_joined: self.workers_joined.load(Ordering::Relaxed),
+            workers_lost: self.workers_lost.load(Ordering::Relaxed),
+            blocks_requeued: self.blocks_requeued.load(Ordering::Relaxed),
+            reconnects: self.reconnects.load(Ordering::Relaxed),
+            event_stalls: self.event_stalls.load(Ordering::Relaxed),
         }
     }
 
@@ -167,6 +190,11 @@ pub struct CounterSnapshot {
     pub wire_rx_bytes: u64,
     pub delay_sum: u64,
     pub delay_max: u64,
+    pub workers_joined: u64,
+    pub workers_lost: u64,
+    pub blocks_requeued: u64,
+    pub reconnects: u64,
+    pub event_stalls: u64,
 }
 
 impl CounterSnapshot {

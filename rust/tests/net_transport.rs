@@ -18,7 +18,7 @@
 use apbcfw::net::wire::{self, Msg};
 use apbcfw::net::{solve_loopback, BoundServer};
 use apbcfw::problems::{BlockOracle, OraclePayload, PayloadMode};
-use apbcfw::run::{Engine, ProblemInstance, Runner, RunSpec};
+use apbcfw::run::{Engine, LiveEvent, ProblemInstance, Runner, RunSpec};
 use apbcfw::sim::delay::DelayModel;
 use apbcfw::util::config::Config;
 use apbcfw::util::rng::Pcg64;
@@ -275,7 +275,11 @@ fn server_drops_connections_sending_unappliable_oracles() {
             ls: 0.0,
         },
     ] {
-        let cfg = qp_cfg();
+        let mut cfg = qp_cfg();
+        // Dropping the violator empties the fleet; without a short grace
+        // window the server would wait out the 30 s default for a
+        // replacement worker before concluding the run.
+        cfg.set("run.accept_timeout_secs", "0.5");
         let spec = RunSpec::new(Engine::asynchronous(1))
             .tau(1)
             .max_epochs(50.0)
@@ -305,6 +309,196 @@ fn server_drops_connections_sending_unappliable_oracles() {
         let report = session.join().unwrap();
         assert_eq!(report.counters.updates_applied, 0);
     }
+}
+
+#[test]
+fn dead_worker_is_reaped_by_liveness_and_its_blocks_requeued() {
+    // A fleet of two where one member goes silent mid-run: the liveness
+    // scan must declare it dead (the socket stays open, so only the
+    // last-seen clock can), requeue its in-flight fan-out round, and let
+    // the survivor finish the solve.
+    let mut cfg = qp_cfg();
+    cfg.set("run.liveness_ms", "250");
+    let spec = RunSpec::new(Engine::asynchronous(2))
+        .tau(2)
+        .sample_every(16)
+        .max_epochs(1e6)
+        .max_secs(1.5)
+        .seed(5);
+    let session = apbcfw::runtime::service::spawn_serve(
+        spec,
+        "qp",
+        &cfg,
+        "127.0.0.1:0",
+    )
+    .unwrap();
+    let addr = session.addr.to_string();
+    let survivor = std::thread::spawn(move || apbcfw::net::worker::run(&addr));
+    // The victim: handshakes, pulls one snapshot, then goes silent while
+    // holding its connection open.
+    let mut victim = std::net::TcpStream::connect(session.addr).unwrap();
+    match wire::read_frame(&mut victim).unwrap().unwrap() {
+        (Msg::Hello(_), _) => {}
+        (other, _) => panic!("expected Hello, got {other:?}"),
+    }
+    let mut buf = Vec::new();
+    wire::write_frame(
+        &mut victim,
+        &Msg::SnapshotRequest { have_version: 0 },
+        &mut buf,
+    )
+    .unwrap();
+    match wire::read_frame(&mut victim).unwrap().unwrap() {
+        (Msg::Snapshot { .. }, _) => {}
+        (other, _) => panic!("expected Snapshot, got {other:?}"),
+    }
+    drop(session.events);
+    let report = session.join().unwrap();
+    let summary = survivor.join().unwrap().unwrap();
+    drop(victim);
+    assert!(summary.clean, "survivor should be shut down cleanly");
+    assert!(report.counters.updates_applied > 0);
+    assert_eq!(report.counters.workers_lost, 1, "{:?}", report.counters);
+    assert!(
+        report.counters.blocks_requeued >= 1,
+        "the victim's answered fan-out round must be requeued: {:?}",
+        report.counters
+    );
+}
+
+#[test]
+fn late_worker_joins_mid_run_and_contributes() {
+    // Elastic membership: a worker connecting after the run started gets
+    // a fresh snapshot and a fresh worker id (hence rng stream) and pulls
+    // its share of the remaining work.
+    let cfg = gfl_cfg();
+    let spec = RunSpec::new(Engine::asynchronous(1))
+        .tau(2)
+        .sample_every(16)
+        .max_epochs(1e6)
+        .max_secs(1.0)
+        .seed(5);
+    let session = apbcfw::runtime::service::spawn_serve(
+        spec,
+        "gfl",
+        &cfg,
+        "127.0.0.1:0",
+    )
+    .unwrap();
+    let addr = session.addr.to_string();
+    let first = std::thread::spawn(move || apbcfw::net::worker::run(&addr));
+    // Wait until the run is demonstrably in flight before joining.
+    let mut applies = 0usize;
+    for event in session.events.iter() {
+        if matches!(event, LiveEvent::Apply { .. }) {
+            applies += 1;
+            if applies >= 20 {
+                break;
+            }
+        }
+    }
+    let addr = session.addr.to_string();
+    let second = std::thread::spawn(move || apbcfw::net::worker::run(&addr));
+    drop(session.events);
+    let report = session.join().unwrap();
+    let s1 = first.join().unwrap().unwrap();
+    let s2 = second.join().unwrap().unwrap();
+    assert_eq!(report.counters.workers_joined, 1, "{:?}", report.counters);
+    assert_eq!(s1.worker_id, 0);
+    assert_eq!(s2.worker_id, 1, "joiner must get a fresh id");
+    assert!(s2.oracle_calls > 0, "joiner never contributed");
+    assert!(s1.clean && s2.clean, "both workers should see the shutdown");
+}
+
+#[test]
+fn chaos_dropped_updates_cost_extra_rounds_but_the_solve_completes() {
+    // `run.chaos = drop:P` swallows update frames on the worker's tx
+    // path. Drops are invisible to the server except as extra worker
+    // rounds, so the crisp observable is worker-side oracle calls
+    // exceeding what the server received.
+    let mut cfg = qp_cfg();
+    cfg.set("run.chaos", "drop:0.3");
+    let spec = RunSpec::new(Engine::asynchronous(1))
+        .tau(1)
+        .sample_every(8)
+        .max_epochs(2.0)
+        .max_secs(30.0)
+        .seed(5);
+    let session = apbcfw::runtime::service::spawn_serve(
+        spec,
+        "qp",
+        &cfg,
+        "127.0.0.1:0",
+    )
+    .unwrap();
+    let addr = session.addr.to_string();
+    let worker = std::thread::spawn(move || apbcfw::net::worker::run(&addr));
+    drop(session.events);
+    let report = session.join().unwrap();
+    let summary = worker.join().unwrap().unwrap();
+    assert!(summary.clean);
+    assert!(report.counters.updates_applied > 0);
+    assert!(
+        summary.oracle_calls > report.counters.oracle_calls,
+        "no update was dropped: worker {} vs server {}",
+        summary.oracle_calls,
+        report.counters.oracle_calls
+    );
+}
+
+#[test]
+fn chaos_delay_surfaces_in_the_staleness_telemetry() {
+    // A 5 ms stall injected on half of one worker's update frames lets
+    // the other worker run ahead, so the observed staleness — applied
+    // delay or staleness-rule drops — must be nonzero, exactly the
+    // quantity the Fig 3 straggler replay plots.
+    let mut cfg = gfl_cfg();
+    cfg.set("run.chaos", "delay:fixed:5:0.5");
+    let spec = RunSpec::new(Engine::asynchronous(2))
+        .tau(2)
+        .sample_every(16)
+        .max_epochs(6.0)
+        .max_secs(30.0)
+        .seed(5);
+    let net = solve_loopback(spec, "gfl", &cfg, "127.0.0.1:0").unwrap();
+    assert!(net.counters.updates_applied > 0);
+    assert!(net.last().unwrap().objective.is_finite());
+    assert!(
+        net.counters.delay_sum + net.counters.dropped > 0,
+        "injected stalls produced no observable staleness: {:?}",
+        net.counters
+    );
+}
+
+#[test]
+fn v2_control_frames_roundtrip_and_bad_frames_are_rejected() {
+    let mut buf = Vec::new();
+    for msg in [
+        Msg::Heartbeat,
+        Msg::Join { resumed: false },
+        Msg::Join { resumed: true },
+    ] {
+        let n = wire::encode_frame(&msg, &mut buf);
+        let (decoded, consumed) =
+            wire::read_frame(&mut buf.as_slice()).unwrap().unwrap();
+        assert_eq!(consumed, n);
+        assert_eq!(decoded, msg);
+    }
+    // Every strict non-empty prefix of a frame is a truncation error
+    // (empty input is the clean-EOF `None`).
+    let n = wire::encode_frame(&Msg::Join { resumed: true }, &mut buf);
+    for cut in 1..n {
+        assert!(wire::read_frame(&mut &buf[..cut]).is_err(), "cut {cut}");
+    }
+    // A v1 header is refused with a version error, not misparsed.
+    let n = wire::encode_frame(&Msg::Heartbeat, &mut buf);
+    let mut bad = buf[..n].to_vec();
+    bad[4] = 1; // LE u16 version at bytes 4..6
+    bad[5] = 0;
+    let err = wire::read_frame(&mut bad.as_slice())
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("version"), "{err}");
 }
 
 #[test]
