@@ -466,6 +466,46 @@ fn main() {
     }
     println!();
 
+    // ---- sharded parameter plane: throughput + snapshot fan-out ----
+    // Self-hosted loopback runs on a paper-shape GFL (64 blocks) with
+    // the plane split into S shards: one serve loop per shard, workers
+    // owner-route every update and fan each snapshot pull to all
+    // shards. updates-per-sec tracks apply throughput as the plane
+    // scales; bytes-per-pull is the server->worker snapshot cost of the
+    // fan-out (S span-scoped answers per pull vs one plane-wide one).
+    println!();
+    let shard_cfg = apbcfw::util::config::Config::parse(
+        "[run]\nseed = 6\n\
+         [gfl]\nd = 8\nn = 65\nlambda = 0.1\nsegments = 5\nnoise = 0.5\n",
+    )
+    .expect("sharded bench config");
+    for shards in [1usize, 2, 4] {
+        let mut cfg = shard_cfg.clone();
+        cfg.set("run.shards", &shards.to_string());
+        let spec = RunSpec::new(Engine::asynchronous(2))
+            .tau(4)
+            .sample_every(1 << 20)
+            .max_epochs(30.0)
+            .max_secs(10.0)
+            .seed(3);
+        let r = apbcfw::net::solve_loopback(spec, "gfl", &cfg, "127.0.0.1:0")
+            .expect("sharded loopback bench run");
+        report.add_metric(
+            &format!("net sharded updates-per-sec shards={shards}"),
+            "updates_per_sec",
+            r.counters.updates_applied as f64 / r.elapsed_s.max(1e-9),
+        );
+        if shards <= 2 {
+            report.add_metric(
+                &format!("snapshot fan-out bytes-per-pull shards={shards}"),
+                "bytes_per_pull",
+                r.counters.wire_tx_bytes as f64
+                    / r.counters.snapshot_reads.max(1) as f64,
+            );
+        }
+    }
+    println!();
+
     // ---- simplex projection (PBCD hot path) ----
     let mut blk = rng.gaussian_vec(10);
     report.add("project_simplex dim=10", 20000, || {

@@ -114,7 +114,8 @@ pub fn parse(args: &[String]) -> Result<Cli> {
                 "config" | "set" | "dir" | "mode" | "tau" | "batch"
                     | "workers" | "epochs" | "seed" | "straggler"
                     | "snapshot-mode" | "queue-factor" | "listen" | "connect"
-                    | "connect-timeout" | "accept-timeout"
+                    | "connect-timeout" | "accept-timeout" | "shards"
+                    | "shard-id"
             );
             if takes_value {
                 let v = rest
@@ -232,6 +233,30 @@ pub fn parse(args: &[String]) -> Result<Cli> {
                     parse_secs("accept-timeout", v)?;
                     config.set("run.accept_timeout_secs", v);
                 }
+                // --shards / --shard-id are sugar for the sharded
+                // parameter plane knobs; validate the integer shape here
+                // for the CLI's clean error, then lower to the config
+                // keys `net::serve` reads and cross-validates
+                // (`NetOptions::from_config` rejects shards < 1 and an
+                // out-of-range or shard-less shard id).
+                if let Some(v) = flag_val("shards") {
+                    let s: usize = v.parse().map_err(|_| {
+                        anyhow!("--shards must be a positive integer, got {v:?}")
+                    })?;
+                    if s < 1 {
+                        bail!("--shards must be >= 1, got {v}");
+                    }
+                    config.set("run.shards", v);
+                }
+                if let Some(v) = flag_val("shard-id") {
+                    let _: usize = v.parse().map_err(|_| {
+                        anyhow!(
+                            "--shard-id must be a nonnegative integer, \
+                             got {v:?}"
+                        )
+                    })?;
+                    config.set("run.shard_id", v);
+                }
                 let self_host = has_flag("self-host");
                 let addr = flag_val("listen")
                     .unwrap_or(if self_host {
@@ -290,7 +315,7 @@ USAGE:
       run.work_multiplier, run.eps_gap, ...) are reachable through
       --set / --config only.
   apbcfw serve <gfl|ssvm|multiclass|qp> [--listen HOST:PORT] [--self-host]
-         [--accept-timeout SECS]
+         [--accept-timeout SECS] [--shards S] [--shard-id I]
          [solve flags as above; --mode defaults to async]
       host the distributed delayed-update server: workers connect over
       TCP (wire protocol: docs/WIRE.md), pull parameter snapshots, and
@@ -302,6 +327,11 @@ USAGE:
       (default 30). fault injection: --set run.chaos=<spec> (see
       docs/WIRE.md). --self-host runs the fleet in-process over
       127.0.0.1 (single-machine demo of the full wire path).
+      --shards S splits the parameter plane into S block-contiguous
+      shards, shard s listening on PORT+s; workers learn the plan from
+      the handshake and route each update to its block's owner.
+      --shard-id I hosts only shard I in this process (one serve
+      process per shard; needs an explicit --listen base port).
   apbcfw worker [--connect HOST:PORT] [--connect-timeout SECS]
       join a serve host as a network worker. retries the connect with
       jittered backoff for --connect-timeout seconds (default 10) so
@@ -560,6 +590,32 @@ mod tests {
                 parse(&sv(&["serve", "gfl", "--accept-timeout", bad]))
                     .is_err(),
                 "{bad}"
+            );
+        }
+    }
+
+    #[test]
+    fn serve_shard_flags_lower_to_config_and_validate() {
+        let cli = parse(&sv(&[
+            "serve", "gfl", "--shards", "2", "--shard-id", "1",
+        ]))
+        .unwrap();
+        assert_eq!(cli.config.get("run.shards"), Some("2"));
+        assert_eq!(cli.config.get("run.shard_id"), Some("1"));
+        // Unset flags leave the keys unset (serve defaults to one shard).
+        let cli = parse(&sv(&["serve", "gfl"])).unwrap();
+        assert_eq!(cli.config.get("run.shards"), None);
+        assert_eq!(cli.config.get("run.shard_id"), None);
+        for bad in ["0", "-2", "two", "1.5"] {
+            assert!(
+                parse(&sv(&["serve", "gfl", "--shards", bad])).is_err(),
+                "--shards {bad}"
+            );
+        }
+        for bad in ["-1", "one", "0.5"] {
+            assert!(
+                parse(&sv(&["serve", "gfl", "--shard-id", bad])).is_err(),
+                "--shard-id {bad}"
             );
         }
     }

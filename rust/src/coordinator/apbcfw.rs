@@ -23,16 +23,14 @@
 //! Straggler-dropped and redone solves never allocate at all. Old-vs-new
 //! numbers in EXPERIMENTS.md §Perf (`benches/hot_paths.rs`).
 
-use super::buffer::BatchAssembler;
+use super::apply::{ApplyCore, ApplyKnobs};
 use super::shared::SharedParam;
 use super::{pick_blocks, RunConfig, RunResult, UpdateMsg};
-use crate::problems::{
-    ApplyOptions, BlockOracle, OraclePayload, OracleScratch, Problem,
-};
+use crate::problems::{BlockOracle, OraclePayload, OracleScratch, Problem};
 use crate::run::Observer;
-use crate::solver::{schedule_gamma, WeightedAverage};
-use crate::util::metrics::{Counters, Sample, Stopwatch, Trace};
+use crate::util::metrics::Counters;
 use crate::util::rng::Pcg64;
+use std::ops::Range;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Mutex};
 use std::time::Duration;
@@ -61,11 +59,28 @@ pub fn run_observed<P: Problem>(
     // `run.payload` knob resolved against the problem's natural
     // representation; bit-identical either way by the payload contract).
     let pkind = cfg.payload.resolve(problem.preferred_payload());
-    let mut master = problem.init_param();
-    let mut state = problem.init_server();
-    let shared = SharedParam::with_mode(&master, cfg.snapshot_mode);
-    let stop = AtomicBool::new(false);
     let counters = Counters::new();
+    // The transport-agnostic server core (see [`super::apply`]): master
+    // parameter, staleness verdict, delay stamping, step schedule, gap
+    // EMA, averaging, sampling, stop checks. This engine's transport is
+    // an in-process channel + a [`SharedParam`] the workers snapshot.
+    let mut core = ApplyCore::new(
+        problem,
+        ApplyKnobs {
+            tau: cfg.tau,
+            line_search: cfg.line_search,
+            staleness_rule: cfg.staleness_rule,
+            collision_overwrite: cfg.collision_overwrite,
+            sample_every: cfg.sample_every,
+            exact_gap: cfg.exact_gap,
+            weighted_averaging: cfg.weighted_averaging,
+            stop: cfg.stop,
+            iter_scale: 1,
+        },
+        &counters,
+    );
+    let shared = SharedParam::with_mode(core.master(), cfg.snapshot_mode);
+    let stop = AtomicBool::new(false);
     // Bounded queue: workers block when the server falls behind. This is
     // the system's backpressure — without it fast workers would race
     // arbitrarily far ahead of the server and every update would exceed
@@ -86,19 +101,6 @@ pub fn run_observed<P: Problem>(
     // multi-block send path reuses containers as well as buffers.
     let msg_pool: Mutex<Vec<Vec<BlockOracle>>> = Mutex::new(Vec::new());
     let msg_pool_cap = queue_cap + cfg.workers;
-    let watch = Stopwatch::start();
-
-    let mut trace = Trace::default();
-    // Weighted iterate averaging (matches the sequential solvers; the
-    // async trace/result then report the averaged iterate).
-    let mut avg: Option<WeightedAverage> = if cfg.weighted_averaging {
-        Some(WeightedAverage::new(problem.param_dim()))
-    } else {
-        None
-    };
-    let mut gap_estimate = f64::INFINITY;
-    let mut k: u64 = 0;
-    let mut asm = BatchAssembler::new();
 
     std::thread::scope(|scope| {
         // ---------------- workers ----------------
@@ -234,133 +236,36 @@ pub fn run_observed<P: Problem>(
                 }
             }
         };
+        // Publish hook: push each applied batch to the shared parameter —
+        // only the dirty ranges when the problem can name them (GFL/QP:
+        // tau block slices instead of the whole parameter); SSVM updates
+        // w densely -> full publish. The whole batch is one consistency
+        // section in Consistent mode — readers never see it half-applied.
+        // Then recycle the applied payload buffers AND the batch
+        // container back to the workers.
+        let mut publish = |kk: u64,
+                           master: &[f32],
+                           ranges: Option<Vec<Range<usize>>>,
+                           batch: Vec<BlockOracle>| {
+            match ranges {
+                Some(ranges) => shared.publish_ranges(&ranges, master),
+                None => shared.publish(master, kk),
+            }
+            recycle(batch);
+        };
         'serve: loop {
             match rx.recv_timeout(Duration::from_millis(2)) {
-                Ok(msg) => {
-                    // Payload telemetry: nnz + wire bytes of everything
-                    // shipped worker -> server, counted at receipt
-                    // (includes payloads later dropped or displaced —
-                    // they crossed the channel either way).
-                    let (mut nnz, mut bytes) = (0u64, 0u64);
-                    for o in &msg.oracles {
-                        nnz += o.s.nnz() as u64;
-                        bytes += o.s.wire_bytes() as u64;
-                    }
-                    Counters::add(&counters.payload_nnz, nnz);
-                    Counters::add(&counters.payload_bytes, bytes);
-                    // Staleness rule (paper Thm 4): drop if delay > k/2.
-                    // Every oracle in a payload was read at the same
-                    // k_read, so the whole payload shares one verdict.
-                    let delay = k.saturating_sub(msg.k_read);
-                    if cfg.staleness_rule && 2 * delay > k && delay > 0 {
-                        Counters::add(
-                            &counters.dropped,
-                            msg.oracles.len() as u64,
-                        );
-                        recycle(msg.oracles);
-                    } else if cfg.collision_overwrite {
-                        recycle(asm.insert(msg));
-                    } else {
-                        recycle(asm.insert_keep_old(msg));
-                    }
-                }
+                Ok(msg) => core.ingest(msg, &recycle),
                 Err(mpsc::RecvTimeoutError::Timeout) => {}
                 Err(mpsc::RecvTimeoutError::Disconnected) => break 'serve,
             }
 
-            while let Some(batch_msgs) = asm.take_batch(tau) {
-                // Stamp every applied update with its observed delay (the
-                // expected-delay counters shared with the net transport).
-                for m in &batch_msgs {
-                    let d = m.delay(k);
-                    Counters::add(&counters.delay_sum, d);
-                    Counters::max_of(&counters.delay_max, d);
-                }
-                let batch: Vec<_> =
-                    batch_msgs.into_iter().map(|m| m.oracle).collect();
-                // A multi-block payload can push the pending set past tau
-                // before the server drains it, so the applied batch may
-                // exceed tau; the step size, counters, and gap scaling all
-                // use the actual size. Single-block payloads grow pending
-                // by one, so at batch = 1 this is exactly tau (the
-                // historical value, bit-for-bit).
-                let applied = batch.len();
-                let gamma = schedule_gamma(n, applied, k);
-                let info = problem.apply(
-                    &mut state,
-                    &mut master,
-                    &batch,
-                    ApplyOptions {
-                        gamma,
-                        line_search: cfg.line_search,
-                    },
-                );
-                k += 1;
-                // Publish only the dirty ranges when the problem can name
-                // them (GFL/QP: tau block slices instead of the whole
-                // parameter); SSVM updates w densely -> full publish. The
-                // whole batch is one consistency section in Consistent
-                // mode — readers never see it half-applied.
-                match problem.touched_ranges(&batch) {
-                    Some(ranges) => {
-                        shared.publish_ranges(&ranges, &master);
-                    }
-                    None => shared.publish(&master, k),
-                }
-                // Recycle the applied payload buffers AND the batch
-                // container back to the workers.
-                recycle(batch);
-                Counters::add(&counters.updates_applied, applied as u64);
-                counters.iterations.store(k, Ordering::Relaxed);
-                obs.on_apply(k, info.gamma, info.batch_gap);
-                if let Some(a) = &mut avg {
-                    a.update(&master, problem.aux(&state));
-                }
-                let inst = info.batch_gap * n as f64 / applied as f64;
-                gap_estimate = if gap_estimate.is_finite() {
-                    0.8 * gap_estimate + 0.2 * inst
-                } else {
-                    inst
-                };
-
-                if k % cfg.sample_every as u64 == 0 {
-                    // Report the averaged iterate when averaging is on
-                    // (exactly like the sequential Monitor).
-                    let objective = match &avg {
-                        Some(a) => problem.objective_from(&a.param, a.aux),
-                        None => problem.objective(&state, &master),
-                    };
-                    let gap = if cfg.exact_gap {
-                        match &avg {
-                            Some(a) => problem.full_gap(&state, &a.param),
-                            None => problem.full_gap(&state, &master),
-                        }
-                    } else {
-                        gap_estimate
-                    };
-                    let snap = counters.snapshot();
-                    let sample = Sample {
-                        iter: k as usize,
-                        oracle_calls: snap.oracle_calls,
-                        elapsed_s: watch.elapsed_s(),
-                        objective,
-                        gap,
-                    };
-                    obs.on_sample(&sample);
-                    trace.push(sample);
-                    let epochs = snap.oracle_calls as f64 / n as f64;
-                    if cfg.stop.target_met(objective, gap)
-                        || cfg.stop.exhausted(epochs, watch.elapsed_s())
-                    {
-                        break 'serve;
-                    }
-                }
+            if core.drain(&mut *obs, &mut publish) {
+                break 'serve;
             }
 
             // Budget check even while starved of updates.
-            let snap = counters.snapshot();
-            let epochs = snap.oracle_calls as f64 / n as f64;
-            if cfg.stop.exhausted(epochs, watch.elapsed_s()) {
+            if core.budget_exhausted() {
                 break 'serve;
             }
         }
@@ -370,56 +275,9 @@ pub fn run_observed<P: Problem>(
         drop(rx);
     });
 
-    // Fold buffered collisions into the counter snapshot.
-    Counters::add(&counters.collisions, asm.collisions());
-    let mut snap = counters.snapshot();
-    snap.iterations = k;
-    let elapsed_s = watch.elapsed_s();
-    let passes = snap.updates_applied as f64 / n as f64;
-    let secs_per_pass = if passes > 0.0 {
-        elapsed_s / passes
-    } else {
-        f64::INFINITY
-    };
-
-    // Final sample for completeness (averaged iterate when enabled).
-    let objective = match &avg {
-        Some(a) => problem.objective_from(&a.param, a.aux),
-        None => problem.objective(&state, &master),
-    };
-    let gap = if cfg.exact_gap {
-        match &avg {
-            Some(a) => problem.full_gap(&state, &a.param),
-            None => problem.full_gap(&state, &master),
-        }
-    } else {
-        gap_estimate
-    };
-    let sample = Sample {
-        iter: k as usize,
-        oracle_calls: snap.oracle_calls,
-        elapsed_s,
-        objective,
-        gap,
-    };
-    obs.on_sample(&sample);
-    trace.push(sample);
-
-    let (param, raw_param) = match avg {
-        Some(a) => (a.param, master),
-        None => {
-            let raw = master.clone();
-            (master, raw)
-        }
-    };
-    RunResult {
-        trace,
-        param,
-        raw_param,
-        counters: snap,
-        elapsed_s,
-        secs_per_pass,
-    }
+    // Epilogue (collision fold, final sample, result assembly) is the
+    // core's — shared verbatim with the net serve role.
+    core.finish(obs)
 }
 
 #[cfg(test)]

@@ -1,0 +1,487 @@
+//! The transport-agnostic apply/accounting core shared by every
+//! delayed-update server loop.
+//!
+//! [`ApplyCore`] owns the state and the *exact* operation order of the
+//! server side of the paper's Algorithm 1: payload telemetry at receipt,
+//! the k/2 staleness verdict (Theorem 4 — delegated to
+//! [`crate::sim::delay::accept_delay`], the one definition site of the
+//! rule in the whole crate), collision-overwrite buffering, delay
+//! stamping, the step-size schedule, the gap EMA, iterate averaging,
+//! sample/stop checks, and the final-report epilogue.
+//!
+//! Three transports drive it:
+//!
+//! - the in-process async engine ([`super::apbcfw`]) feeds it channel
+//!   messages and publishes applied parameters to a [`super::shared::SharedParam`];
+//! - the TCP serve role ([`crate::net::server`]) feeds it decoded wire
+//!   frames and records dirty ranges into its snapshot delta log;
+//! - the sharded serve loops (`run.shards > 1`) run one core per shard
+//!   over that shard's block range.
+//!
+//! The transports differ only in their hooks: what happens to an applied
+//! batch ([`PublishHook`]) and where dropped/displaced payload containers
+//! go ([`RecycleHook`]). Everything float-ordered — the apply, the EMA,
+//! the averaging, the objective/gap evaluation — lives here, which is
+//! what makes the pinned net==in-process bit-identity structural rather
+//! than a line-by-line coincidence (see `rust/tests/net_transport.rs`).
+
+use super::buffer::BatchAssembler;
+use super::{RunResult, UpdateMsg};
+use crate::problems::{ApplyOptions, BlockOracle, Problem};
+use crate::run::Observer;
+use crate::sim::delay::accept_delay;
+use crate::solver::{schedule_gamma, StopCond, WeightedAverage};
+use crate::util::metrics::{Counters, Sample, Stopwatch, Trace};
+use std::ops::Range;
+use std::sync::atomic::Ordering;
+
+/// What a server loop does with an applied batch, called once per apply
+/// with the post-apply iteration `k`, the updated master parameter, the
+/// batch's dirty ranges (`None` = dense whole-parameter write), and the
+/// applied oracles (for container recycling). The in-process engine
+/// publishes to its shared parameter; the net server logs the ranges for
+/// snapshot deltas.
+pub type PublishHook<'h> =
+    dyn FnMut(u64, &[f32], Option<Vec<Range<usize>>>, Vec<BlockOracle>) + 'h;
+
+/// Where dropped or displaced payload containers go. The in-process
+/// engine returns them to its worker free-lists; transports without a
+/// recycle ring pass a no-op and let the containers drop.
+pub type RecycleHook<'h> = dyn Fn(Vec<BlockOracle>) + 'h;
+
+/// The knobs the core needs — the common subset of
+/// [`super::RunConfig`] and [`crate::run::RunSpec`], lowered by the
+/// transport that builds the core.
+#[derive(Debug, Clone)]
+pub struct ApplyKnobs {
+    /// Server minibatch size tau (clamped to `[1, n]` by the core).
+    pub tau: usize,
+    /// Exact coordinate line search instead of the schedule.
+    pub line_search: bool,
+    /// Enforce the paper's k/2 staleness rule (Theorem 4).
+    pub staleness_rule: bool,
+    /// Collision policy: overwrite pending updates with fresher ones.
+    pub collision_overwrite: bool,
+    /// Trace sample cadence in server iterations.
+    pub sample_every: usize,
+    /// Exact duality gap at sample points (otherwise the gap EMA).
+    pub exact_gap: bool,
+    /// Weighted iterate averaging x-bar_k on the server.
+    pub weighted_averaging: bool,
+    /// Stop conditions (epoch/wall-clock budgets, gap/primal targets).
+    pub stop: StopCond,
+    /// Iteration-clock multiplier for the step-size schedule. A shard
+    /// owning `1/S` of the blocks advances its local `k` at roughly
+    /// `1/S` of the global rate, so its schedule evaluates at
+    /// `k * iter_scale` to track the global clock in expectation
+    /// (the relaxed block-sampling regime of Braun–Pokutta–Woodstock,
+    /// arXiv:2409.06931). Everything unsharded passes 1, which leaves
+    /// the schedule bit-identical to the historical call.
+    pub iter_scale: u64,
+}
+
+/// The shared server core: master parameter, apply state, assembler,
+/// trace, and every accounting rule of the delayed-update loop. See the
+/// module docs for the transport split.
+pub struct ApplyCore<'a, P: Problem> {
+    problem: &'a P,
+    counters: &'a Counters,
+    knobs: ApplyKnobs,
+    /// Global block count n (gamma schedule, epoch accounting, gap
+    /// scaling) — *not* a shard's owned span.
+    n: usize,
+    tau: usize,
+    master: Vec<f32>,
+    state: P::ServerState,
+    avg: Option<WeightedAverage>,
+    trace: Trace,
+    gap_estimate: f64,
+    k: u64,
+    asm: BatchAssembler,
+    watch: Stopwatch,
+}
+
+impl<'a, P: Problem> ApplyCore<'a, P> {
+    /// Build a core over `problem`, starting the wall clock. `counters`
+    /// is shared with the transport's reader/worker threads.
+    pub fn new(
+        problem: &'a P,
+        knobs: ApplyKnobs,
+        counters: &'a Counters,
+    ) -> Self {
+        let n = problem.num_blocks();
+        let tau = knobs.tau.clamp(1, n);
+        let avg = if knobs.weighted_averaging {
+            Some(WeightedAverage::new(problem.param_dim()))
+        } else {
+            None
+        };
+        ApplyCore {
+            problem,
+            counters,
+            knobs,
+            n,
+            tau,
+            master: problem.init_param(),
+            state: problem.init_server(),
+            avg,
+            trace: Trace::default(),
+            gap_estimate: f64::INFINITY,
+            k: 0,
+            asm: BatchAssembler::new(),
+            watch: Stopwatch::start(),
+        }
+    }
+
+    /// The current master parameter (e.g. for snapshot answers).
+    pub fn master(&self) -> &[f32] {
+        &self.master
+    }
+
+    /// The current server iteration k (the snapshot version).
+    pub fn k(&self) -> u64 {
+        self.k
+    }
+
+    /// Drop a dead worker's buffered updates from the assembler,
+    /// returning how many blocks were freed (requeue telemetry).
+    pub fn requeue_worker(&mut self, worker: usize) -> usize {
+        self.asm.remove_worker(worker)
+    }
+
+    /// Ingest one update payload: payload telemetry, the k/2 staleness
+    /// verdict (the whole payload was read at one `k_read`, so it shares
+    /// one verdict), then buffer or drop. Displaced and dropped
+    /// containers go to `recycle`.
+    pub fn ingest(&mut self, msg: UpdateMsg, recycle: &RecycleHook<'_>) {
+        // Payload telemetry: nnz + wire bytes of everything shipped
+        // worker -> server, counted at receipt (includes payloads later
+        // dropped or displaced — they crossed the transport either way).
+        let (mut nnz, mut bytes) = (0u64, 0u64);
+        for o in &msg.oracles {
+            nnz += o.s.nnz() as u64;
+            bytes += o.s.wire_bytes() as u64;
+        }
+        Counters::add(&self.counters.payload_nnz, nnz);
+        Counters::add(&self.counters.payload_bytes, bytes);
+        // Staleness rule (paper Thm 4): drop if delay > k/2. The rule
+        // itself lives in `sim::delay::accept_delay` — the single
+        // definition site shared with the sequential delayed engine.
+        let delay = self.k.saturating_sub(msg.k_read);
+        if self.knobs.staleness_rule && !accept_delay(self.k, delay) {
+            Counters::add(&self.counters.dropped, msg.oracles.len() as u64);
+            recycle(msg.oracles);
+        } else if self.knobs.collision_overwrite {
+            recycle(self.asm.insert(msg));
+        } else {
+            recycle(self.asm.insert_keep_old(msg));
+        }
+    }
+
+    /// Drain every ready tau-batch: delay stamping, schedule/line-search
+    /// apply, publish hook, averaging, gap EMA, and the sample/stop
+    /// check. Returns `true` when a stop condition fired (the transport
+    /// breaks its serve loop).
+    pub fn drain(
+        &mut self,
+        obs: &mut dyn Observer,
+        publish: &mut PublishHook<'_>,
+    ) -> bool {
+        while let Some(batch_msgs) = self.asm.take_batch(self.tau) {
+            // Stamp every applied update with its observed delay (the
+            // expected-delay counters behind `mean_delay()` — the
+            // paper's empirical kappa).
+            for m in &batch_msgs {
+                let d = m.delay(self.k);
+                Counters::add(&self.counters.delay_sum, d);
+                Counters::max_of(&self.counters.delay_max, d);
+            }
+            let batch: Vec<_> =
+                batch_msgs.into_iter().map(|m| m.oracle).collect();
+            // A multi-block payload can push the pending set past tau
+            // before the drain, so the applied batch may exceed tau; the
+            // step size, counters, and gap scaling all use the actual
+            // size (at batch = 1 this is exactly tau, bit-for-bit).
+            let applied = batch.len();
+            let gamma = schedule_gamma(
+                self.n,
+                applied,
+                self.k * self.knobs.iter_scale,
+            );
+            let info = self.problem.apply(
+                &mut self.state,
+                &mut self.master,
+                &batch,
+                ApplyOptions {
+                    gamma,
+                    line_search: self.knobs.line_search,
+                },
+            );
+            self.k += 1;
+            let ranges = self.problem.touched_ranges(&batch);
+            publish(self.k, &self.master, ranges, batch);
+            Counters::add(&self.counters.updates_applied, applied as u64);
+            self.counters.iterations.store(self.k, Ordering::Relaxed);
+            obs.on_apply(self.k, info.gamma, info.batch_gap);
+            if let Some(a) = &mut self.avg {
+                a.update(&self.master, self.problem.aux(&self.state));
+            }
+            let inst = info.batch_gap * self.n as f64 / applied as f64;
+            self.gap_estimate = if self.gap_estimate.is_finite() {
+                0.8 * self.gap_estimate + 0.2 * inst
+            } else {
+                inst
+            };
+
+            if self.k % self.knobs.sample_every as u64 == 0 {
+                let (objective, gap) = self.eval();
+                let snap = self.counters.snapshot();
+                let sample = Sample {
+                    iter: self.k as usize,
+                    oracle_calls: snap.oracle_calls,
+                    elapsed_s: self.watch.elapsed_s(),
+                    objective,
+                    gap,
+                };
+                obs.on_sample(&sample);
+                self.trace.push(sample);
+                let epochs = snap.oracle_calls as f64 / self.n as f64;
+                if self.knobs.stop.target_met(objective, gap)
+                    || self
+                        .knobs
+                        .stop
+                        .exhausted(epochs, self.watch.elapsed_s())
+                {
+                    return true;
+                }
+            }
+        }
+        false
+    }
+
+    /// Budget check while starved of updates (no samples fire then, so
+    /// the epoch/wall-clock caps must be re-checked every loop turn).
+    pub fn budget_exhausted(&self) -> bool {
+        let snap = self.counters.snapshot();
+        let epochs = snap.oracle_calls as f64 / self.n as f64;
+        self.knobs.stop.exhausted(epochs, self.watch.elapsed_s())
+    }
+
+    /// Epilogue: fold buffered collisions into the counters, record the
+    /// final sample (averaged iterate when enabled), and produce the
+    /// unified [`RunResult`].
+    pub fn finish(mut self, obs: &mut dyn Observer) -> RunResult {
+        Counters::add(&self.counters.collisions, self.asm.collisions());
+        let mut snap = self.counters.snapshot();
+        snap.iterations = self.k;
+        let elapsed_s = self.watch.elapsed_s();
+        let passes = snap.updates_applied as f64 / self.n as f64;
+        let secs_per_pass = if passes > 0.0 {
+            elapsed_s / passes
+        } else {
+            f64::INFINITY
+        };
+        let (objective, gap) = self.eval();
+        let sample = Sample {
+            iter: self.k as usize,
+            oracle_calls: snap.oracle_calls,
+            elapsed_s,
+            objective,
+            gap,
+        };
+        obs.on_sample(&sample);
+        self.trace.push(sample);
+        let (param, raw_param) = match self.avg {
+            Some(a) => (a.param, self.master),
+            None => {
+                let raw = self.master.clone();
+                (self.master, raw)
+            }
+        };
+        RunResult {
+            trace: self.trace,
+            param,
+            raw_param,
+            counters: snap,
+            elapsed_s,
+            secs_per_pass,
+        }
+    }
+
+    /// The sample-point evaluation shared by `drain` and `finish`:
+    /// averaged iterate when averaging is on, exact gap when requested,
+    /// otherwise the EMA estimate.
+    fn eval(&self) -> (f64, f64) {
+        let objective = match &self.avg {
+            Some(a) => self.problem.objective_from(&a.param, a.aux),
+            None => self.problem.objective(&self.state, &self.master),
+        };
+        let gap = if self.knobs.exact_gap {
+            match &self.avg {
+                Some(a) => self.problem.full_gap(&self.state, &a.param),
+                None => self.problem.full_gap(&self.state, &self.master),
+            }
+        } else {
+            self.gap_estimate
+        };
+        (objective, gap)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::problems::gfl::Gfl;
+    use crate::util::rng::Pcg64;
+
+    fn knobs() -> ApplyKnobs {
+        ApplyKnobs {
+            tau: 1,
+            line_search: false,
+            staleness_rule: true,
+            collision_overwrite: true,
+            sample_every: 4,
+            exact_gap: true,
+            weighted_averaging: false,
+            stop: StopCond::default(),
+            iter_scale: 1,
+        }
+    }
+
+    fn gfl_instance() -> Gfl {
+        let mut rng = Pcg64::seeded(9);
+        let (d, n) = (4, 12);
+        let y = rng.gaussian_vec(d * n);
+        Gfl::new(d, n, 0.2, y)
+    }
+
+    #[test]
+    fn stale_payloads_are_dropped_at_the_shared_site() {
+        let p = gfl_instance();
+        let counters = Counters::new();
+        let mut core = ApplyCore::new(&p, knobs(), &counters);
+        let noop: &RecycleHook<'_> = &|_| {};
+        // Advance the clock past the tolerance of a k_read = 0 payload.
+        for _ in 0..8 {
+            let o = p.oracle(core.master(), 3);
+            core.ingest(
+                UpdateMsg {
+                    oracles: vec![o],
+                    k_read: core.k(),
+                    worker: 0,
+                },
+                noop,
+            );
+            assert!(!core.drain(&mut (), &mut |_, _, _, _| {}));
+        }
+        assert_eq!(core.k(), 8);
+        let fresh = p.oracle(core.master(), 3);
+        core.ingest(
+            UpdateMsg {
+                oracles: vec![fresh],
+                k_read: 0, // delay 8 > k/2 = 4
+                worker: 0,
+            },
+            noop,
+        );
+        let snap = counters.snapshot();
+        assert_eq!(snap.dropped, 1);
+        assert_eq!(snap.updates_applied, 8);
+    }
+
+    #[test]
+    fn finish_reports_final_sample_and_counters() {
+        let p = gfl_instance();
+        let counters = Counters::new();
+        let mut core = ApplyCore::new(&p, knobs(), &counters);
+        let o = p.oracle(core.master(), 0);
+        core.ingest(
+            UpdateMsg {
+                oracles: vec![o],
+                k_read: 0,
+                worker: 1,
+            },
+            &|_| {},
+        );
+        let mut published = 0usize;
+        assert!(!core.drain(&mut (), &mut |k, master, ranges, batch| {
+            assert_eq!(k, 1);
+            assert!(!master.is_empty());
+            assert!(ranges.is_some(), "gfl names its dirty ranges");
+            assert_eq!(batch.len(), 1);
+            published += 1;
+        }));
+        assert_eq!(published, 1);
+        let result = core.finish(&mut ());
+        assert_eq!(result.counters.updates_applied, 1);
+        assert_eq!(result.counters.iterations, 1);
+        assert_eq!(result.trace.samples.len(), 1);
+        assert!(result.trace.samples[0].objective.is_finite());
+    }
+
+    #[test]
+    fn requeue_worker_frees_buffered_blocks() {
+        let p = gfl_instance();
+        let counters = Counters::new();
+        // tau = 3 so single-block payloads stay buffered.
+        let mut k = knobs();
+        k.tau = 3;
+        let mut core = ApplyCore::new(&p, k, &counters);
+        for (worker, block) in [(7usize, 0usize), (7, 1)] {
+            let o = p.oracle(core.master(), block);
+            core.ingest(
+                UpdateMsg {
+                    oracles: vec![o],
+                    k_read: 0,
+                    worker,
+                },
+                &|_| {},
+            );
+        }
+        assert_eq!(core.requeue_worker(7), 2);
+        assert_eq!(core.requeue_worker(7), 0);
+    }
+
+    #[test]
+    fn requeue_sums_across_shard_cores() {
+        // A sharded plane (`run.shards > 1`) runs one ApplyCore per
+        // shard; a dead worker with in-flight updates buffered on two
+        // shards must be requeued on both, and the per-shard
+        // `blocks_requeued` telemetry sums to the global count the
+        // rendezvous reports.
+        let p = gfl_instance();
+        let mut knobs = knobs();
+        knobs.tau = 4; // single-block payloads stay buffered everywhere
+        let shard_counters = [Counters::new(), Counters::new()];
+        let mut cores: Vec<_> = shard_counters
+            .iter()
+            .map(|c| ApplyCore::new(&p, knobs.clone(), c))
+            .collect();
+        // Worker 7 holds one outstanding block on shard 0 and two on
+        // shard 1; worker 2's update on shard 1 must survive the reap.
+        for (shard, worker, block) in
+            [(0usize, 7usize, 0usize), (1, 7, 1), (1, 7, 2), (1, 2, 3)]
+        {
+            let o = p.oracle(cores[shard].master(), block);
+            cores[shard].ingest(
+                UpdateMsg {
+                    oracles: vec![o],
+                    k_read: 0,
+                    worker,
+                },
+                &|_| {},
+            );
+        }
+        let mut total = 0u64;
+        for (core, counters) in cores.iter_mut().zip(&shard_counters) {
+            let freed = core.requeue_worker(7) as u64;
+            Counters::add(&counters.blocks_requeued, freed);
+            total += freed;
+        }
+        assert_eq!(total, 3, "both shards requeue their share");
+        assert_eq!(shard_counters[0].snapshot().blocks_requeued, 1);
+        assert_eq!(shard_counters[1].snapshot().blocks_requeued, 2);
+        // Requeueing worker 7 never touched worker 2's buffered block.
+        assert_eq!(cores[1].requeue_worker(2), 1);
+    }
+}

@@ -4,6 +4,9 @@
 //! - [`shared`]: the lock-free shared parameter (f32-in-atomics + version).
 //! - [`buffer`]: the server's update buffer with collision-overwrite and
 //!   disjoint-tau batch assembly (Algorithm 1, step 1).
+//! - [`apply`]: the transport-agnostic server core — staleness verdict,
+//!   delay stamping, step schedule, gap EMA, averaging, stop checks —
+//!   shared by [`apbcfw`], the TCP serve role, and its shards.
 //! - [`apbcfw`]: the asynchronous server/worker runtime (Algorithms 1-2).
 //! - [`sync`]: SP-BCFW, the synchronous comparator of §3.3.
 //! - [`lockfree`]: the tau = 1 serverless variant (Algorithm 3).
@@ -16,6 +19,7 @@
 //! server/monitor thread.
 
 pub mod apbcfw;
+pub mod apply;
 pub mod buffer;
 pub mod lockfree;
 pub mod shared;

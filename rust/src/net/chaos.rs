@@ -14,6 +14,11 @@
 //!   replay.
 //! - **drop** — swallow an outbound `Update` frame whole (the oracle work
 //!   is lost in flight; the server simply never ingests it).
+//! - **reorder** — hold an outbound `Update` frame back (up to a bounded
+//!   buffer depth) and release it after a *later* update goes out, so
+//!   frames arrive out of send order — the delayed-update analogue of
+//!   network reordering. Frames still held when the session closes are
+//!   lost in flight, exactly like a drop.
 //! - **disconnect** — abruptly fail an outbound `Update` write, ending
 //!   the session mid-run; a resilient worker then reconnects with backoff
 //!   and rejoins the fleet under a fresh server-issued id.
@@ -39,7 +44,7 @@ use std::time::Duration;
 const MAX_SLEEP_MS: f64 = 30_000.0;
 
 /// Rng stream selector for a worker's chaos schedule. Offset far beyond
-/// the block-sampling streams ([`super::worker_rng_stream`] = 2 + id) so
+/// the block-sampling streams ([`super::rng_stream_for`] = 2 + id) so
 /// fault injection never perturbs the optimization's random choices, and
 /// keyed by the server-issued worker id so every session — including a
 /// joiner's — replays its own deterministic fault schedule.
@@ -79,6 +84,10 @@ pub struct ChaosSpec {
     pub rx_delay: Option<(DelayProfile, f64)>,
     /// Probability an outbound `Update` frame is swallowed whole.
     pub drop_p: f64,
+    /// Hold-and-release reordering of outbound `Update` frames:
+    /// `(probability, max held frames)`. A rolled frame is buffered (up
+    /// to the depth) and released only after a later update is written.
+    pub reorder: Option<(f64, usize)>,
     /// Probability an outbound `Update` write fails abruptly, ending the
     /// session (a resilient worker reconnects and rejoins).
     pub disconnect_p: f64,
@@ -91,6 +100,7 @@ impl ChaosSpec {
         self.tx_delay.is_none()
             && self.rx_delay.is_none()
             && self.drop_p == 0.0
+            && self.reorder.is_none()
             && self.disconnect_p == 0.0
     }
 
@@ -100,11 +110,12 @@ impl ChaosSpec {
     /// none | op[,op ...]
     /// op := delay:fixed:MS:P | delay:pareto:MEAN_MS:P
     ///     | rx-delay:fixed:MS:P | rx-delay:pareto:MEAN_MS:P
-    ///     | drop:P | disconnect:P
+    ///     | drop:P | reorder:P:DEPTH | disconnect:P
     /// ```
     ///
     /// Probabilities must lie in `[0, 1]`, durations must be finite and
-    /// non-negative, and each op may appear at most once.
+    /// non-negative, `DEPTH` (the reorder hold-buffer bound) must be a
+    /// positive integer, and each op may appear at most once.
     pub fn parse(text: &str) -> Result<ChaosSpec> {
         let text = text.trim();
         let mut spec = ChaosSpec::default();
@@ -130,6 +141,27 @@ impl ChaosSpec {
                 ensure!(!saw_drop, "run.chaos: duplicate drop op in {text:?}");
                 saw_drop = true;
                 spec.drop_p = parse_prob(op, p)?;
+            } else if let Some(rest) = op.strip_prefix("reorder:") {
+                ensure!(
+                    spec.reorder.is_none(),
+                    "run.chaos: duplicate reorder op in {text:?}"
+                );
+                let (p_text, depth_text) =
+                    rest.split_once(':').ok_or_else(|| {
+                        anyhow!(
+                            "run.chaos: {op:?}: expected reorder:P:DEPTH"
+                        )
+                    })?;
+                let p = parse_prob(op, p_text)?;
+                let depth: usize =
+                    depth_text.trim().parse().map_err(|_| {
+                        anyhow!("run.chaos: {op:?}: bad hold depth")
+                    })?;
+                ensure!(
+                    depth >= 1,
+                    "run.chaos: {op:?}: hold depth must be >= 1"
+                );
+                spec.reorder = Some((p, depth));
             } else if let Some(p) = op.strip_prefix("disconnect:") {
                 ensure!(
                     !saw_disc,
@@ -141,7 +173,7 @@ impl ChaosSpec {
                 bail!(
                     "run.chaos: unknown op {op:?} (expected delay:fixed:MS:P \
                      | delay:pareto:MEAN_MS:P | rx-delay:... | drop:P | \
-                     disconnect:P, comma-separated)"
+                     reorder:P:DEPTH | disconnect:P, comma-separated)"
                 );
             }
         }
@@ -202,13 +234,22 @@ pub struct ChaosStream<S> {
     inner: S,
     spec: ChaosSpec,
     rng: Pcg64,
+    /// Update frames held back by the reorder op, oldest first. Released
+    /// (in held order) right after a later update frame is written;
+    /// whatever is still here when the stream drops is lost in flight.
+    held: Vec<Vec<u8>>,
 }
 
 impl<S> ChaosStream<S> {
     /// Wrap `inner`. `rng` should come from a stream disjoint from the
     /// block-sampling streams (see [`chaos_rng_stream`]).
     pub fn new(inner: S, spec: ChaosSpec, rng: Pcg64) -> Self {
-        Self { inner, spec, rng }
+        Self {
+            inner,
+            spec,
+            rng,
+            held: Vec::new(),
+        }
     }
 
     fn roll(&mut self, p: f64) -> bool {
@@ -250,11 +291,27 @@ impl<S: Write> Write for ChaosStream<S> {
             if self.roll(self.spec.drop_p) {
                 return Ok(buf.len()); // swallowed in flight
             }
+            if let Some((p, depth)) = self.spec.reorder {
+                if self.held.len() < depth && self.roll(p) {
+                    // Hold this frame back; it goes out only after a
+                    // later update (and is lost if none follows — the
+                    // close-with-frames-in-flight case).
+                    self.held.push(buf.to_vec());
+                    return Ok(buf.len());
+                }
+            }
             if let Some((profile, p)) = self.spec.tx_delay {
                 if self.roll(p) {
                     self.sleep_sampled(profile);
                 }
             }
+            self.inner.write_all(buf)?;
+            // A later update went out: release everything held, in held
+            // order — the wire now carries the frames out of send order.
+            for frame in std::mem::take(&mut self.held) {
+                self.inner.write_all(&frame)?;
+            }
+            return Ok(buf.len());
         }
         self.inner.write_all(buf)?;
         Ok(buf.len())
@@ -276,7 +333,7 @@ mod tests {
         assert!(ChaosSpec::parse("").unwrap().is_noop());
         let spec = ChaosSpec::parse(
             "delay:pareto:30:0.5, rx-delay:fixed:2:1.0, drop:0.1, \
-             disconnect:0.05",
+             reorder:0.2:4, disconnect:0.05",
         )
         .unwrap();
         assert_eq!(
@@ -285,8 +342,10 @@ mod tests {
         );
         assert_eq!(spec.rx_delay, Some((DelayProfile::FixedMs(2.0), 1.0)));
         assert_eq!(spec.drop_p, 0.1);
+        assert_eq!(spec.reorder, Some((0.2, 4)));
         assert_eq!(spec.disconnect_p, 0.05);
         assert!(!spec.is_noop());
+        assert!(!ChaosSpec::parse("reorder:1.0:1").unwrap().is_noop());
     }
 
     #[test]
@@ -302,6 +361,11 @@ mod tests {
             "delay:fixed:inf:0.5",
             "drop:0.1,drop:0.2",
             "delay:fixed:1:0.1,delay:fixed:2:0.2",
+            "reorder:0.5",
+            "reorder:0.5:0",
+            "reorder:1.5:2",
+            "reorder:0.5:two",
+            "reorder:0.5:2,reorder:0.1:1",
         ] {
             assert!(ChaosSpec::parse(bad).is_err(), "{bad:?} must be rejected");
         }
@@ -332,6 +396,43 @@ mod tests {
         let hb_len = buf.len();
         wire::write_frame(&mut s, &Msg::Heartbeat, &mut scratch).unwrap();
         assert_eq!(s.inner.len(), hb_len);
+    }
+
+    #[test]
+    fn reorder_holds_updates_and_releases_them_out_of_order() {
+        // P=1, depth=2: U1 and U2 are held; U3 finds the buffer full, is
+        // written through, and flushes the held frames after it — wire
+        // order U3, U1, U2.
+        let spec = ChaosSpec::parse("reorder:1.0:2").unwrap();
+        let mut s =
+            ChaosStream::new(Vec::<u8>::new(), spec, Pcg64::seeded(7));
+        let mut scratch = Vec::new();
+        for k in 1..=3u64 {
+            wire::write_frame(
+                &mut s,
+                &Msg::Update {
+                    k_read: k,
+                    worker: 0,
+                    oracles: vec![],
+                },
+                &mut scratch,
+            )
+            .unwrap();
+        }
+        // Control frames pass straight through, never entering the hold
+        // buffer or releasing it.
+        wire::write_frame(&mut s, &Msg::Heartbeat, &mut scratch).unwrap();
+        let mut wire_order = Vec::new();
+        let mut cursor = s.inner.as_slice();
+        while let Some((msg, _)) = wire::read_frame(&mut cursor).unwrap() {
+            match msg {
+                Msg::Update { k_read, .. } => wire_order.push(k_read),
+                Msg::Heartbeat => wire_order.push(99),
+                other => panic!("unexpected frame {other:?}"),
+            }
+        }
+        assert_eq!(wire_order, vec![3, 1, 2, 99]);
+        assert!(s.held.is_empty(), "release must empty the hold buffer");
     }
 
     #[test]

@@ -20,8 +20,13 @@
 //!   disconnect [`worker::run_resilient`] reconnects with jittered
 //!   exponential backoff and rejoins under a fresh server-issued id.
 //! - [`chaos`] — wire-level fault injection (`run.chaos`): heavy-tailed
-//!   delay, frame drop, and abrupt disconnect, so the paper's Fig 3
-//!   straggler robustness replays over real sockets.
+//!   delay, frame reordering, frame drop, and abrupt disconnect, so the
+//!   paper's Fig 3 straggler robustness replays over real sockets.
+//! - [`shard`] — the sharded parameter plane (`run.shards`): a
+//!   [`ShardPlan`] carves the blocks and the parameter vector into
+//!   contiguous per-shard spans, each hosted by its own serve loop;
+//!   workers route Update frames by block owner and fan snapshot pulls
+//!   out to every shard under a per-shard version vector.
 //!
 //! Both roles lower through the same [`crate::run::RunSpec`] as every
 //! other engine: `apbcfw serve` validates the spec exactly like
@@ -34,11 +39,13 @@
 
 pub mod chaos;
 pub mod server;
+pub mod shard;
 pub mod wire;
 pub mod worker;
 
 pub use chaos::{ChaosSpec, ChaosStream};
 pub use server::{serve, solve_loopback, BoundServer};
+pub use shard::{ShardInfo, ShardPlan};
 pub use worker::{run_resilient, run_with_retry, WorkerSummary};
 
 use crate::problems::PayloadMode;
@@ -65,6 +72,15 @@ pub struct NetOptions {
     pub liveness: Option<Duration>,
     /// Parsed `run.chaos` fault-injection spec (default: no faults).
     pub chaos: ChaosSpec,
+    /// `run.shards` (default 1): number of serve shards the parameter
+    /// plane is split across. 1 is the unsharded server, pinned
+    /// bit-identical to protocol v2 behavior; `S > 1` spawns S shard
+    /// loops per [`ShardPlan`].
+    pub shards: usize,
+    /// `run.shard_id` (default unset): host only this shard of the plan
+    /// — the multi-process deployment, one `apbcfw serve --shard-id I`
+    /// per shard. Unset hosts every shard in-process.
+    pub shard_id: Option<usize>,
 }
 
 impl Default for NetOptions {
@@ -73,13 +89,15 @@ impl Default for NetOptions {
             accept_timeout: Duration::from_secs(30),
             liveness: None,
             chaos: ChaosSpec::default(),
+            shards: 1,
+            shard_id: None,
         }
     }
 }
 
 impl NetOptions {
     /// Parse and strictly validate the `run.{accept_timeout_secs,
-    /// liveness_ms, chaos}` knobs.
+    /// liveness_ms, chaos, shards, shard_id}` knobs.
     pub fn from_config(cfg: &Config) -> Result<Self> {
         let accept_timeout = match cfg.get("run.accept_timeout_secs") {
             None => Duration::from_secs(30),
@@ -108,10 +126,43 @@ impl NetOptions {
             }
         };
         let chaos = ChaosSpec::parse(cfg.get("run.chaos").unwrap_or("none"))?;
+        let shards = match cfg.get("run.shards") {
+            None => 1,
+            Some(v) => {
+                let s: usize = v.parse().map_err(|_| {
+                    anyhow!("run.shards must be a positive integer, got {v:?}")
+                })?;
+                ensure!(s >= 1, "run.shards must be >= 1, got {v}");
+                s
+            }
+        };
+        let shard_id = match cfg.get("run.shard_id") {
+            None => None,
+            Some(v) => {
+                let id: usize = v.parse().map_err(|_| {
+                    anyhow!(
+                        "run.shard_id must be a nonnegative integer, got {v:?}"
+                    )
+                })?;
+                ensure!(
+                    shards > 1,
+                    "run.shard_id only applies to sharded serves \
+                     (run.shards > 1)"
+                );
+                ensure!(
+                    id < shards,
+                    "run.shard_id = {id} out of range for run.shards = \
+                     {shards}"
+                );
+                Some(id)
+            }
+        };
         Ok(Self {
             accept_timeout,
             liveness,
             chaos,
+            shards,
+            shard_id,
         })
     }
 
@@ -143,12 +194,15 @@ pub fn payload_mode_from_tag(tag: u8) -> Option<PayloadMode> {
     }
 }
 
-/// Rng stream a network worker derives from its id: `2 + id`. Worker 0
-/// shares the sequential delayed engine's stream
-/// ([`crate::solver::delayed`] draws from `Pcg64::new(seed, 2)`), which is
-/// what makes the one-worker loopback solve replay that engine
-/// draw-for-draw.
-pub fn worker_rng_stream(worker_id: u32) -> u64 {
+/// The one definition site of the worker-id → rng-stream derivation:
+/// `2 + id`. Worker 0 shares the sequential delayed engine's stream
+/// ([`crate::solver::delayed`] draws from
+/// `Pcg64::new(seed, rng_stream_for(0))`), which is what makes the
+/// one-worker loopback solve replay that engine draw-for-draw. Every
+/// consumer — the worker solve loops (sharded or not), the serve role's
+/// handshake docs, and the sequential delayed engine — derives its
+/// stream here so shard code can't drift from it.
+pub fn rng_stream_for(worker_id: u32) -> u64 {
     2 + worker_id as u64
 }
 
@@ -187,8 +241,8 @@ mod tests {
 
     #[test]
     fn worker_zero_shares_the_delayed_engine_stream() {
-        assert_eq!(worker_rng_stream(0), 2);
-        assert_eq!(worker_rng_stream(3), 5);
+        assert_eq!(rng_stream_for(0), 2);
+        assert_eq!(rng_stream_for(3), 5);
     }
 
     #[test]
@@ -209,6 +263,15 @@ mod tests {
         assert_eq!(opts.liveness, Some(Duration::from_millis(300)));
         assert_eq!(opts.heartbeat_period(), Some(Duration::from_millis(100)));
         assert_eq!(opts.chaos.drop_p, 0.25);
+        assert_eq!(opts.shards, 1);
+        assert_eq!(opts.shard_id, None);
+
+        let mut cfg = Config::new();
+        cfg.set("run.shards", "3");
+        cfg.set("run.shard_id", "2");
+        let opts = NetOptions::from_config(&cfg).unwrap();
+        assert_eq!(opts.shards, 3);
+        assert_eq!(opts.shard_id, Some(2));
 
         // liveness_ms = 0 means disabled, not a zero timeout.
         let mut cfg = Config::new();
@@ -226,6 +289,10 @@ mod tests {
             ("run.liveness_ms", "-5"),
             ("run.liveness_ms", "1.5"),
             ("run.chaos", "bogus"),
+            ("run.shards", "0"),
+            ("run.shards", "-2"),
+            ("run.shards", "two"),
+            ("run.shard_id", "0"), // requires run.shards > 1
         ] {
             let mut cfg = Config::new();
             cfg.set(key, bad);

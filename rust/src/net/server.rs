@@ -3,23 +3,24 @@
 //! [`BoundServer`] hosts the same delayed-update semantics as the
 //! in-process async engine ([`crate::coordinator::apbcfw`]): workers solve
 //! block subproblems against (possibly stale) parameter snapshots, the
-//! server assembles tau disjoint blocks across their payloads — reusing
-//! the [`BatchAssembler`] collision-overwrite machinery — applies with the
-//! paper's step size, and drops anything staler than `k/2` (Theorem 4).
-//! What changes is the transport: updates arrive as wire frames from
-//! remote workers instead of in-process channel messages, snapshots leave
-//! as full vectors or dirty-range deltas, and every update is stamped with
-//! its observed delay at apply time (the `delay_sum`/`delay_max` counters
-//! backing the expected-delay analysis of the paper's §2.3/§3.4).
+//! server assembles tau disjoint blocks across their payloads, applies
+//! with the paper's step size, and drops anything staler than `k/2`
+//! (Theorem 4). The apply/accounting step itself — staleness verdict,
+//! delay stamping, step schedule, gap EMA, averaging, sample/stop checks
+//! — is NOT implemented here: it lives in the transport-agnostic
+//! [`ApplyCore`](crate::coordinator::apply::ApplyCore), shared verbatim
+//! with the in-process engine. This module supplies only the transport:
+//! updates arrive as wire frames, snapshots leave as full vectors or
+//! dirty-range deltas, and the fleet is managed over real sockets.
 //!
-//! The loop stays single-threaded over the master parameter; one reader
-//! thread per connection decodes frames into the server's event channel,
-//! and every write (handshake, snapshots, shutdown) is issued by the loop
-//! itself. Per connection the protocol strictly alternates — a worker has
-//! at most one request in flight — which is what rules out write-write
-//! deadlocks and, at one worker, makes the whole solve deterministic (the
-//! loopback equivalence tests pin it bit-identical to the in-process
-//! delayed engine).
+//! Each serve loop stays single-threaded over its master parameter; one
+//! reader thread per connection decodes frames into the loop's event
+//! channel, and every write (handshake, snapshots, shutdown) is issued by
+//! the loop itself. Per connection the protocol strictly alternates — a
+//! worker has at most one request in flight — which is what rules out
+//! write-write deadlocks and, at one worker, makes the whole solve
+//! deterministic (the loopback equivalence tests pin it bit-identical to
+//! the in-process delayed engine).
 //!
 //! The fleet is **elastic** (protocol v2): the listener stays open for
 //! the whole run, so workers can join mid-run (each gets a fresh
@@ -36,26 +37,40 @@
 //! buffering. All of it is strictly no-op by default: with no joiners, no
 //! deaths, no liveness and no chaos, the frames exchanged and the event
 //! ordering are exactly those of the fixed-fleet v1 loop.
+//!
+//! The parameter plane is **sharded** (protocol v3, `run.shards = S`):
+//! bind carves the blocks and the parameter vector into S contiguous
+//! spans ([`ShardPlan`]) and runs one serve loop per hosted shard, each
+//! owning its block range, its slice of the parameter, and its own
+//! [`ApplyCore`]. Workers learn the plan from the Hello handshake, route
+//! each Update frame to its block's owner, and fan snapshot pulls out to
+//! every shard under a per-shard version vector. A thin rendezvous
+//! ([`BoundServer::run`]) joins the shard loops and aggregates their
+//! per-shard counters into one [`Report`]; any shard finishing (budget,
+//! target, failure) stops the whole plane. `run.shards = 1` takes the
+//! exact historical single-loop path, pinned bit-identical by the
+//! loopback equivalence tests.
 
+use super::shard::{self, ShardPlan};
 use super::wire::{self, Hello, Msg, SnapshotBody};
 use super::{merge_ranges, payload_mode_tag, NetOptions};
-use crate::coordinator::buffer::BatchAssembler;
+use crate::coordinator::apply::{ApplyCore, ApplyKnobs};
 use crate::coordinator::{RunResult, UpdateMsg};
-use crate::problems::{ApplyOptions, Problem};
+use crate::problems::{BlockOracle, Problem};
 use crate::run::{
     Engine, Observer, ProblemInstance, Report, Runner, RunSpec, StragglerSpec,
 };
-use crate::solver::{schedule_gamma, WeightedAverage};
 use crate::util::config::Config;
-use crate::util::metrics::{Counters, Sample, Stopwatch, Trace};
+use crate::util::metrics::Counters;
 use anyhow::{anyhow, bail, ensure, Result};
 use std::collections::VecDeque;
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::ops::Range;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
-/// How often the server loop polls the (nonblocking) listener for mid-run
+/// How often a serve loop polls the (nonblocking) listener for mid-run
 /// joiners; also the ceiling on how long an idle loop sleeps between
 /// housekeeping passes.
 const ACCEPT_POLL: Duration = Duration::from_millis(25);
@@ -66,7 +81,7 @@ const DELTA_LOG_CAP: usize = 256;
 
 /// Parameter ranges one apply dirtied; `None` marks a dense
 /// whole-parameter write (no delta possible across it).
-type DirtyRanges = Option<Vec<std::ops::Range<usize>>>;
+type DirtyRanges = Option<Vec<Range<usize>>>;
 
 /// Events the per-connection reader threads feed the server loop.
 enum Event {
@@ -98,13 +113,13 @@ struct ConnState {
 /// Declare connection `idx` dead (idempotent): shut the socket down so
 /// its reader unblocks, return its in-flight blocks to the sampling pool
 /// (the outstanding fan-out round plus anything of its still buffered in
-/// the assembler — block sampling is with replacement, so freed blocks
-/// are immediately drawable again), and count the loss.
-fn kill_conn(
+/// the core's assembler — block sampling is with replacement, so freed
+/// blocks are immediately drawable again), and count the loss.
+fn kill_conn<P: Problem>(
     conns: &mut [ConnState],
     idx: usize,
     alive: &mut usize,
-    asm: &mut BatchAssembler,
+    core: &mut ApplyCore<'_, P>,
     counters: &Counters,
 ) {
     let c = &mut conns[idx];
@@ -113,7 +128,7 @@ fn kill_conn(
         *alive -= 1;
         Counters::bump(&counters.workers_lost);
         let requeued =
-            c.outstanding + asm.remove_worker(c.worker_id as usize);
+            c.outstanding + core.requeue_worker(c.worker_id as usize);
         c.outstanding = 0;
         Counters::add(&counters.blocks_requeued, requeued as u64);
     }
@@ -122,26 +137,53 @@ fn kill_conn(
 /// A validated, bound (but not yet running) serve-role instance. Binding
 /// is split from running so callers can learn the listen address — port 0
 /// resolves to an ephemeral port — before starting workers against it
-/// (the loopback self-hosted mode does exactly that).
+/// (the loopback self-hosted mode does exactly that). With
+/// `run.shards > 1` this binds one listener per hosted shard and carries
+/// the block→shard [`ShardPlan`] every handshake ships.
 pub struct BoundServer {
-    listener: TcpListener,
+    /// One listener per hosted shard (parallel to `hosted`).
+    listeners: Vec<TcpListener>,
+    /// Shard ids this process hosts — all of them by default, exactly
+    /// one under `run.shard_id` (the multi-process deployment).
+    hosted: Vec<usize>,
+    /// The session's block→shard partition (degenerate at one shard).
+    plan: ShardPlan,
     spec: RunSpec,
     instance: ProblemInstance,
     /// Flattened config shipped in the handshake so workers rebuild the
     /// identical problem instance.
     config_pairs: Vec<(String, String)>,
-    /// Fleet-management knobs (accept deadline, liveness, chaos) —
-    /// validated at bind time, shipped to workers via the handshake.
+    /// Fleet-management knobs (accept deadline, liveness, chaos, shard
+    /// count) — validated at bind time, shipped to workers via the
+    /// handshake.
     opts: NetOptions,
+}
+
+/// Dispatch [`ShardPlan::build`] over the registered problem enum.
+fn build_plan(
+    instance: &ProblemInstance,
+    addrs: Vec<String>,
+) -> Result<ShardPlan> {
+    match instance {
+        ProblemInstance::Gfl(p) => ShardPlan::build(p, addrs),
+        ProblemInstance::Qp(p) => ShardPlan::build(p, addrs),
+        ProblemInstance::Chain(p) => ShardPlan::build(p, addrs),
+        ProblemInstance::Multiclass(p) => ShardPlan::build(p, addrs),
+    }
 }
 
 impl BoundServer {
     /// Validate `spec` against the serve role and `problem`, and bind the
-    /// listen socket. The spec must name the `async` engine (its tau,
+    /// listen socket(s). The spec must name the `async` engine (its tau,
     /// staleness-rule, collision and sampling knobs drive the server
     /// loop); the in-process simulation knobs (stragglers, work
     /// multipliers) are rejected — on a real transport the network itself
     /// supplies the delays the paper models.
+    ///
+    /// Sharded binds (`run.shards = S > 1`) additionally reject knobs
+    /// that need the whole parameter on one host (weighted averaging,
+    /// exact gaps), carve the [`ShardPlan`], and bind shard `s` on
+    /// `port + s` (or S ephemeral ports when `addr` ends in `:0`).
     pub fn bind(
         spec: RunSpec,
         problem: &str,
@@ -181,13 +223,29 @@ impl BoundServer {
         // Fail fast on a bad fleet knob — workers would otherwise reject
         // the handshake config one by one.
         let opts = NetOptions::from_config(cfg)?;
-        let listener = TcpListener::bind(addr)?;
+        if opts.shards > 1 {
+            ensure!(
+                !spec.weighted_averaging,
+                "run.averaging: weighted iterate averaging needs the whole \
+                 parameter on one host and is incompatible with \
+                 run.shards > 1"
+            );
+            ensure!(
+                !spec.exact_gap,
+                "run.exact_gap evaluates the whole parameter and is \
+                 incompatible with run.shards > 1"
+            );
+        }
+        let (listeners, hosted, plan) =
+            Self::bind_plane(&instance, &opts, addr)?;
         let config_pairs = cfg
             .iter()
             .map(|(k, v)| (k.clone(), v.clone()))
             .collect();
         Ok(BoundServer {
-            listener,
+            listeners,
+            hosted,
+            plan,
             spec,
             instance,
             config_pairs,
@@ -195,54 +253,199 @@ impl BoundServer {
         })
     }
 
-    /// The bound listen address (resolves port 0 to the ephemeral port).
-    pub fn local_addr(&self) -> Result<SocketAddr> {
-        Ok(self.listener.local_addr()?)
+    /// Bind the listener(s) and derive the [`ShardPlan`]. Unsharded: one
+    /// listener on `addr`, the trivial plan. Sharded with an explicit
+    /// base port: shard `s` listens on `port + s` (every process derives
+    /// the same plan from the same config); `run.shard_id` then binds
+    /// only its own shard. Sharded with port 0: S ephemeral listeners,
+    /// single-process only (the self-hosted loopback mode).
+    fn bind_plane(
+        instance: &ProblemInstance,
+        opts: &NetOptions,
+        addr: &str,
+    ) -> Result<(Vec<TcpListener>, Vec<usize>, ShardPlan)> {
+        if opts.shards == 1 {
+            let listener = TcpListener::bind(addr)?;
+            let local = listener.local_addr()?.to_string();
+            let plan = build_plan(instance, vec![local])?;
+            return Ok((vec![listener], vec![0], plan));
+        }
+        let (host, port_str) = addr.rsplit_once(':').ok_or_else(|| {
+            anyhow!("listen address {addr:?} is not host:port")
+        })?;
+        let port: u16 = port_str
+            .parse()
+            .map_err(|_| anyhow!("listen address {addr:?} has a bad port"))?;
+        if port == 0 {
+            ensure!(
+                opts.shard_id.is_none(),
+                "run.shard_id needs an explicit base port: with port 0 \
+                 each process would resolve different ephemeral ports and \
+                 the shard plans would disagree"
+            );
+            let mut listeners = Vec::with_capacity(opts.shards);
+            let mut addrs = Vec::with_capacity(opts.shards);
+            for _ in 0..opts.shards {
+                let l = TcpListener::bind((host, 0))?;
+                addrs.push(l.local_addr()?.to_string());
+                listeners.push(l);
+            }
+            let plan = build_plan(instance, addrs)?;
+            return Ok((listeners, (0..opts.shards).collect(), plan));
+        }
+        ensure!(
+            port as usize + opts.shards - 1 <= u16::MAX as usize,
+            "base port {port} + run.shards = {} overflows the port range",
+            opts.shards
+        );
+        let addrs: Vec<String> = (0..opts.shards)
+            .map(|s| format!("{host}:{}", port + s as u16))
+            .collect();
+        let hosted: Vec<usize> = match opts.shard_id {
+            Some(i) => vec![i],
+            None => (0..opts.shards).collect(),
+        };
+        let mut listeners = Vec::with_capacity(hosted.len());
+        for &s in &hosted {
+            listeners.push(TcpListener::bind(addrs[s].as_str())?);
+        }
+        let plan = build_plan(instance, addrs)?;
+        Ok((listeners, hosted, plan))
     }
 
-    /// Accept the expected worker fleet, run the delayed-update server
-    /// loop to completion, and return the unified [`Report`] (engine name
-    /// `"net"`). Live events stream to `obs` exactly as for the
-    /// in-process engines.
+    /// The bound listen address of the first hosted shard (resolves port
+    /// 0 to the ephemeral port). Workers dial this; a sharded session's
+    /// remaining addresses travel in the handshake's [`ShardPlan`].
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        Ok(self.listeners[0].local_addr()?)
+    }
+
+    /// The session's block→shard plan (trivial at `run.shards = 1`).
+    pub fn shard_plan(&self) -> &ShardPlan {
+        &self.plan
+    }
+
+    /// Accept the expected worker fleet, run the delayed-update serve
+    /// loop(s) to completion, and return the unified [`Report`] (engine
+    /// name `"net"`). Live events stream to `obs` exactly as for the
+    /// in-process engines; a sharded run streams per-shard applies from
+    /// shard loops into their own cores and reports the aggregated final
+    /// sample.
     pub fn run(self, obs: &mut dyn Observer) -> Result<Report> {
         match &self.instance {
-            ProblemInstance::Gfl(p) => self.run_inner(p, obs),
-            ProblemInstance::Qp(p) => self.run_inner(p, obs),
-            ProblemInstance::Chain(p) => self.run_inner(p, obs),
-            ProblemInstance::Multiclass(p) => self.run_inner(p, obs),
+            ProblemInstance::Gfl(p) => self.run_plan(p, obs),
+            ProblemInstance::Qp(p) => self.run_plan(p, obs),
+            ProblemInstance::Chain(p) => self.run_plan(p, obs),
+            ProblemInstance::Multiclass(p) => self.run_plan(p, obs),
         }
     }
 
-    /// The handshake frame for worker `worker_id` — identical for the
-    /// initial fleet and mid-run joiners.
-    fn make_hello(&self, worker_id: u32, n_blocks: usize) -> Msg {
+    /// The thin rendezvous over the hosted shard loops: the single-shard
+    /// plan takes the historical one-loop path unchanged; a sharded plan
+    /// runs one loop per hosted shard under a shared global-stop flag
+    /// (any shard finishing — budget, target, failure — stops the
+    /// plane), then folds the per-shard results into one [`Report`] via
+    /// [`shard::aggregate`].
+    fn run_plan<P: Problem>(
+        &self,
+        problem: &P,
+        obs: &mut dyn Observer,
+    ) -> Result<Report> {
+        if self.plan.is_single() {
+            let rr =
+                self.run_shard(problem, 0, &self.listeners[0], None, obs)?;
+            return Ok(Report::from_run("net", rr));
+        }
+        let global_stop = AtomicBool::new(false);
+        let mut results: Vec<(usize, RunResult)> = Vec::new();
+        let mut first_err: Option<anyhow::Error> = None;
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = self
+                .hosted
+                .iter()
+                .zip(&self.listeners)
+                .map(|(&s, listener)| {
+                    let global_stop = &global_stop;
+                    scope.spawn(move || {
+                        let r = self.run_shard(
+                            problem,
+                            s,
+                            listener,
+                            Some(global_stop),
+                            &mut (),
+                        );
+                        // Whatever ended this shard — including an error
+                        // before its loop started — ends the plane.
+                        global_stop.store(true, Ordering::Release);
+                        (s, r)
+                    })
+                })
+                .collect();
+            for h in handles {
+                match h.join() {
+                    Ok((s, Ok(rr))) => results.push((s, rr)),
+                    Ok((_, Err(e))) => {
+                        if first_err.is_none() {
+                            first_err = Some(e);
+                        }
+                    }
+                    Err(_) => {
+                        if first_err.is_none() {
+                            first_err =
+                                Some(anyhow!("shard serve loop panicked"));
+                        }
+                    }
+                }
+            }
+        });
+        if let Some(e) = first_err {
+            return Err(e);
+        }
+        results.sort_by_key(|(s, _)| *s);
+        let hosted: Vec<usize> = results.iter().map(|(s, _)| *s).collect();
+        let per_shard: Vec<RunResult> =
+            results.into_iter().map(|(_, r)| r).collect();
+        let rr = shard::aggregate(problem, &self.plan, &hosted, per_shard);
+        if let Some(last) = rr.trace.last() {
+            obs.on_sample(last);
+        }
+        Ok(Report::from_run("net", rr))
+    }
+
+    /// The handshake frame shard `shard` issues to worker `worker_id` —
+    /// identical for the initial fleet and mid-run joiners, and carrying
+    /// the session's whole [`ShardPlan`] so the worker can route.
+    fn make_hello(&self, worker_id: u32, shard: usize) -> Msg {
         Msg::Hello(Hello {
             worker_id,
             seed: self.spec.seed,
             tau: self.spec.tau as u32,
             batch: self.spec.batch as u32,
             payload_mode: payload_mode_tag(self.spec.payload),
-            n_blocks: n_blocks as u32,
+            n_blocks: self.instance.num_blocks() as u32,
             problem: registry_name(&self.instance).to_string(),
             config: self.config_pairs.clone(),
+            shard: shard as u32,
+            plan: self.plan.clone(),
         })
     }
 
-    /// Accept `workers` connections (within the configurable
-    /// `run.accept_timeout_secs` deadline) and complete the handshake on
-    /// each in accept order — the accept index is the worker id and rng
-    /// stream selector.
-    fn accept_fleet<P: Problem>(
+    /// Accept `workers` connections on `listener` (within the
+    /// configurable `run.accept_timeout_secs` deadline) and complete the
+    /// handshake on each in accept order — the accept index is the
+    /// worker id this shard knows the connection by.
+    fn accept_fleet(
         &self,
-        problem: &P,
+        listener: &TcpListener,
+        shard: usize,
         counters: &Counters,
     ) -> Result<Vec<TcpStream>> {
         let workers = self.spec.engine.workers();
-        self.listener.set_nonblocking(true)?;
+        listener.set_nonblocking(true)?;
         let deadline = Instant::now() + self.opts.accept_timeout;
         let mut conns: Vec<TcpStream> = Vec::with_capacity(workers);
         while conns.len() < workers {
-            match self.listener.accept() {
+            match listener.accept() {
                 Ok((stream, _peer)) => {
                     stream.set_nodelay(true).ok();
                     stream.set_nonblocking(false)?;
@@ -251,8 +454,8 @@ impl BoundServer {
                 Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                     if Instant::now() >= deadline {
                         bail!(
-                            "timed out waiting for {workers} worker \
-                             connections ({} connected)",
+                            "shard {shard}: timed out waiting for {workers} \
+                             worker connections ({} connected)",
                             conns.len()
                         );
                     }
@@ -263,18 +466,26 @@ impl BoundServer {
         }
         let mut ebuf = Vec::new();
         for (id, stream) in conns.iter_mut().enumerate() {
-            let hello = self.make_hello(id as u32, problem.num_blocks());
+            let hello = self.make_hello(id as u32, shard);
             let n = wire::write_frame(stream, &hello, &mut ebuf)?;
             Counters::add(&counters.wire_tx_bytes, n as u64);
         }
         Ok(conns)
     }
 
-    fn run_inner<P: Problem>(
+    /// One shard's serve loop: own the plan's block range and parameter
+    /// span, feed decoded wire updates into a dedicated [`ApplyCore`],
+    /// answer span-scoped snapshot pulls, and manage this shard's slice
+    /// of the fleet. The single-shard call (`shard = 0`, no global stop)
+    /// is the whole historical server, bit for bit.
+    fn run_shard<P: Problem>(
         &self,
         problem: &P,
+        shard: usize,
+        listener: &TcpListener,
+        global_stop: Option<&AtomicBool>,
         obs: &mut dyn Observer,
-    ) -> Result<Report> {
+    ) -> Result<RunResult> {
         let spec = &self.spec;
         let (staleness_rule, collision_overwrite, queue_factor) =
             match &spec.engine {
@@ -288,15 +499,48 @@ impl BoundServer {
             };
         let workers = spec.engine.workers();
         let n = problem.num_blocks();
-        let tau = spec.tau.clamp(1, n);
-        // Blocks a worker owes per answered snapshot — the in-flight
-        // round requeued if it dies before the update lands.
+        let s_count = self.plan.len();
+        let owned = self.plan.block_range(shard);
+        let owned_n = owned.len();
+        let span = self.plan.param_span(shard);
+        // Per-shard minibatch: the global tau split evenly across the
+        // plane (each shard sees ~1/S of the update stream), floored at
+        // 1. The unsharded call keeps spec.tau exactly.
+        let tau = if s_count == 1 {
+            spec.tau
+        } else {
+            (spec.tau / s_count).max(1)
+        }
+        .clamp(1, owned_n);
         let batch_eff = spec.batch.clamp(1, n);
+        // Blocks of one fan-out round this shard expects back: a worker
+        // samples `batch_eff` blocks globally, of which this shard owns
+        // `owned_n / n` in expectation (ceiling, so a dead worker's
+        // requeue telemetry never undercounts). `batch_eff` exactly at
+        // one shard.
+        let quota = if s_count == 1 {
+            batch_eff
+        } else {
+            (batch_eff * owned_n).div_ceil(n).max(1)
+        };
+        let mut stop = spec.stop;
+        if s_count > 1 {
+            // A shard sees only its share of the oracle stream: scale
+            // the epoch budget by the owned-block fraction so S shards
+            // together spend the spec's global budget. Objective/gap
+            // targets are global quantities a single shard cannot
+            // evaluate — the rendezvous evaluates them on the assembled
+            // iterate instead.
+            stop.max_epochs = stop.max_epochs * owned_n as f64 / n as f64;
+            stop.f_star = None;
+            stop.eps_primal = None;
+            stop.eps_gap = None;
+        }
         let counters = Counters::new();
         // Millisecond origin for the per-connection last-seen stamps.
         let epoch = Instant::now();
         let mut conns: Vec<ConnState> = self
-            .accept_fleet(problem, &counters)?
+            .accept_fleet(listener, shard, &counters)?
             .into_iter()
             .enumerate()
             .map(|(id, stream)| ConnState {
@@ -312,33 +556,36 @@ impl BoundServer {
             })
             .collect();
         // Mid-run joiners get ids above the initial fleet — an id is
-        // never recycled, so rng streams and assembler keys stay unique
-        // across the whole run.
+        // never recycled, so assembler keys stay unique per shard across
+        // the whole run.
         let mut next_worker_id = conns.len() as u32;
 
-        let mut master = problem.init_param();
-        let mut state = problem.init_server();
+        let mut core = ApplyCore::new(
+            problem,
+            ApplyKnobs {
+                tau,
+                line_search: spec.line_search,
+                staleness_rule,
+                collision_overwrite,
+                sample_every: spec.sample_every,
+                exact_gap: spec.exact_gap,
+                weighted_averaging: spec.weighted_averaging,
+                stop,
+                iter_scale: s_count as u64,
+            },
+            &counters,
+        );
         // Instance-level frame validation bound: payload dimensions are
         // block-independent for every registered problem, so one probe
         // oracle fixes the dimension every wire update must carry. The
         // codec checks only a frame's self-consistency; this is what
         // keeps a codec-valid but malformed frame (config drift, hostile
         // peer) out of the apply path.
-        let payload_dim = problem.oracle(&master, 0).s.dim();
-        let mut trace = Trace::default();
-        let mut avg: Option<WeightedAverage> = if spec.weighted_averaging {
-            Some(WeightedAverage::new(problem.param_dim()))
-        } else {
-            None
-        };
-        let mut gap_estimate = f64::INFINITY;
-        let mut k: u64 = 0;
-        let mut asm = BatchAssembler::new();
+        let payload_dim = problem.oracle(core.master(), owned.start).s.dim();
         // Dirty ranges per applied version, newest at the back (`None` =
         // a full-parameter write, e.g. SSVM's dense w update).
         let mut delta_log: VecDeque<(u64, DirtyRanges)> =
             VecDeque::with_capacity(DELTA_LOG_CAP);
-        let watch = Stopwatch::start();
 
         // Each worker has at most one request in flight (the protocol
         // strictly alternates), so 2 slots per worker never blocks a
@@ -375,7 +622,7 @@ impl BoundServer {
             }
             // `tx` stays alive here: mid-run joiners need fresh clones.
 
-            // ---------------- server loop ----------------
+            // ---------------- serve loop ----------------
             // One deadline-aware wait per turn: the loop blocks on the
             // event channel until the earliest of (accept poll, liveness
             // scan) is due — no 2 ms busy-spin, yet update ingestion
@@ -393,19 +640,26 @@ impl BoundServer {
             // a crashed-and-restarting worker must not kill the run.
             let mut empty_since: Option<Instant> = None;
             'serve: loop {
+                // A sibling shard ended the run (its budget, a target on
+                // the assembled iterate, or a failure): stop before
+                // touching the event queue so fleet telemetry stays
+                // deterministic across shards.
+                if global_stop.is_some_and(|s| s.load(Ordering::Acquire)) {
+                    break 'serve;
+                }
                 let now = Instant::now();
 
                 // -- accept mid-run joiners (nonblocking poll) --
                 if now >= next_accept {
                     next_accept = now + ACCEPT_POLL;
-                    while let Ok((stream, _peer)) = self.listener.accept() {
+                    while let Ok((stream, _peer)) = listener.accept() {
                         stream.set_nodelay(true).ok();
                         if stream.set_nonblocking(false).is_err() {
                             continue;
                         }
                         let mut stream = stream;
                         let worker_id = next_worker_id;
-                        let hello = self.make_hello(worker_id, n);
+                        let hello = self.make_hello(worker_id, shard);
                         // A joiner lost mid-handshake is simply dropped —
                         // nothing fallible may escape this scope.
                         let nb = match wire::write_frame(
@@ -460,7 +714,7 @@ impl BoundServer {
                             if conns[i].stream.is_some() && silent_ms > cutoff
                             {
                                 kill_conn(
-                                    &mut conns, i, &mut alive, &mut asm,
+                                    &mut conns, i, &mut alive, &mut core,
                                     &counters,
                                 );
                             }
@@ -493,52 +747,50 @@ impl BoundServer {
                     deadline.saturating_duration_since(Instant::now());
                 match rx.recv_timeout(wait) {
                     Ok(Event::Update { conn, msg }) => {
-                        // Reject oracles the instance cannot apply (block
-                        // out of range, payload of the wrong dimension)
-                        // and kill the connection — a protocol violation,
-                        // not a recoverable update. The later `Gone` from
-                        // its reader is then a no-op.
+                        // Reject oracles this shard cannot apply (block
+                        // outside the owned range, payload of the wrong
+                        // dimension) and kill the connection — a protocol
+                        // violation, not a recoverable update. The later
+                        // `Gone` from its reader is then a no-op. An
+                        // EMPTY payload is valid: a sharded worker whose
+                        // round sampled no blocks of this shard still
+                        // completes its request/response alternation.
                         let valid = msg.oracles.iter().all(|o| {
-                            o.block < n && o.s.dim() == payload_dim
+                            owned.contains(&o.block)
+                                && o.s.dim() == payload_dim
                         });
                         if !valid {
                             kill_conn(
-                                &mut conns, conn, &mut alive, &mut asm,
+                                &mut conns, conn, &mut alive, &mut core,
                                 &counters,
                             );
                             continue;
                         }
                         // The outstanding fan-out round came back.
                         conns[conn].outstanding = 0;
-                        let (mut nnz, mut bytes) = (0u64, 0u64);
-                        for o in &msg.oracles {
-                            nnz += o.s.nnz() as u64;
-                            bytes += o.s.wire_bytes() as u64;
-                        }
-                        Counters::add(&counters.payload_nnz, nnz);
-                        Counters::add(&counters.payload_bytes, bytes);
+                        // In-process engines count oracle calls at the
+                        // worker's solve site; on the wire the receipt
+                        // is the first place the server sees them.
                         Counters::add(
                             &counters.oracle_calls,
                             msg.oracles.len() as u64,
                         );
-                        // Staleness rule (paper Thm 4): drop if the whole
-                        // payload's snapshot is older than k/2.
-                        let delay = k.saturating_sub(msg.k_read);
-                        if staleness_rule && 2 * delay > k && delay > 0 {
-                            Counters::add(
-                                &counters.dropped,
-                                msg.oracles.len() as u64,
-                            );
-                        } else if collision_overwrite {
-                            asm.insert(msg);
-                        } else {
-                            asm.insert_keep_old(msg);
-                        }
+                        // Payload telemetry, the k/2 staleness verdict
+                        // and buffering all live in the shared core.
+                        core.ingest(msg, &|_| {});
                     }
                     Ok(Event::SnapReq { conn, have }) => {
-                        let body =
-                            snapshot_body(&master, &delta_log, k, have);
-                        let msg = Msg::Snapshot { version: k, body };
+                        let body = snapshot_body(
+                            core.master(),
+                            &span,
+                            &delta_log,
+                            core.k(),
+                            have,
+                        );
+                        let msg = Msg::Snapshot {
+                            version: core.k(),
+                            body,
+                        };
                         let sent = match &mut conns[conn].stream {
                             Some(stream) => {
                                 wire::write_frame(stream, &msg, &mut ebuf)
@@ -551,22 +803,24 @@ impl BoundServer {
                                     &counters.wire_tx_bytes,
                                     nb as u64,
                                 );
-                                // The worker now owes one fan-out round.
-                                conns[conn].outstanding = batch_eff;
+                                Counters::bump(&counters.snapshot_reads);
+                                // The worker now owes this shard its
+                                // share of one fan-out round.
+                                conns[conn].outstanding = quota;
                             }
                             // kill_conn shuts the socket down before
                             // dropping our clone: the reader thread holds
                             // its own dup and would otherwise block in
                             // read forever (scope would never join).
                             Err(_) => kill_conn(
-                                &mut conns, conn, &mut alive, &mut asm,
+                                &mut conns, conn, &mut alive, &mut core,
                                 &counters,
                             ),
                         }
                     }
                     Ok(Event::Gone { conn }) => {
                         kill_conn(
-                            &mut conns, conn, &mut alive, &mut asm,
+                            &mut conns, conn, &mut alive, &mut core,
                             &counters,
                         );
                     }
@@ -574,87 +828,38 @@ impl BoundServer {
                     Err(mpsc::RecvTimeoutError::Disconnected) => break 'serve,
                 }
 
-                while let Some(batch_msgs) = asm.take_batch(tau) {
-                    // Observed delay of every applied update, stamped at
-                    // apply time — the expected-delay telemetry.
-                    for m in &batch_msgs {
-                        let d = m.delay(k);
-                        Counters::add(&counters.delay_sum, d);
-                        Counters::max_of(&counters.delay_max, d);
-                    }
-                    let batch: Vec<_> =
-                        batch_msgs.into_iter().map(|m| m.oracle).collect();
-                    let applied = batch.len();
-                    let gamma = schedule_gamma(n, applied, k);
-                    let info = problem.apply(
-                        &mut state,
-                        &mut master,
-                        &batch,
-                        ApplyOptions {
-                            gamma,
-                            line_search: spec.line_search,
-                        },
-                    );
-                    k += 1;
-                    if delta_log.len() == DELTA_LOG_CAP {
-                        delta_log.pop_front();
-                    }
-                    delta_log.push_back((k, problem.touched_ranges(&batch)));
-                    Counters::add(&counters.updates_applied, applied as u64);
-                    counters
-                        .iterations
-                        .store(k, std::sync::atomic::Ordering::Relaxed);
-                    obs.on_apply(k, info.gamma, info.batch_gap);
-                    if let Some(a) = &mut avg {
-                        a.update(&master, problem.aux(&state));
-                    }
-                    let inst = info.batch_gap * n as f64 / applied as f64;
-                    gap_estimate = if gap_estimate.is_finite() {
-                        0.8 * gap_estimate + 0.2 * inst
-                    } else {
-                        inst
-                    };
-
-                    if k % spec.sample_every as u64 == 0 {
-                        let objective = match &avg {
-                            Some(a) => problem.objective_from(&a.param, a.aux),
-                            None => problem.objective(&state, &master),
-                        };
-                        let gap = if spec.exact_gap {
-                            match &avg {
-                                Some(a) => problem.full_gap(&state, &a.param),
-                                None => problem.full_gap(&state, &master),
-                            }
-                        } else {
-                            gap_estimate
-                        };
-                        let snap = counters.snapshot();
-                        let sample = Sample {
-                            iter: k as usize,
-                            oracle_calls: snap.oracle_calls,
-                            elapsed_s: watch.elapsed_s(),
-                            objective,
-                            gap,
-                        };
-                        obs.on_sample(&sample);
-                        trace.push(sample);
-                        let epochs = snap.oracle_calls as f64 / n as f64;
-                        if spec.stop.target_met(objective, gap)
-                            || spec.stop.exhausted(epochs, watch.elapsed_s())
-                        {
-                            break 'serve;
+                // Drain every ready tau-batch through the shared apply
+                // core; the publish hook records the dirty ranges this
+                // transport needs for its snapshot deltas. The hook is
+                // built inline so its borrow of the delta log ends with
+                // the call (the SnapReq arm reads the log too).
+                if core.drain(
+                    &mut *obs,
+                    &mut |kk: u64,
+                          _master: &[f32],
+                          ranges: DirtyRanges,
+                          _batch: Vec<BlockOracle>| {
+                        if delta_log.len() == DELTA_LOG_CAP {
+                            delta_log.pop_front();
                         }
-                    }
+                        delta_log.push_back((kk, ranges));
+                    },
+                ) {
+                    break 'serve;
                 }
 
                 // Budget check even while starved of updates.
-                let snap = counters.snapshot();
-                let epochs = snap.oracle_calls as f64 / n as f64;
-                if spec.stop.exhausted(epochs, watch.elapsed_s()) {
+                if core.budget_exhausted() {
                     break 'serve;
                 }
             }
 
+            // Raise the plane-wide stop BEFORE telling workers: a worker
+            // reacting to this shard's Shutdown must find its sibling
+            // shards already stopping, not still mid-loop.
+            if let Some(s) = global_stop {
+                s.store(true, Ordering::Release);
+            }
             // Orderly shutdown: tell every live worker, then close both
             // socket halves so blocked reader threads unblock and exit.
             for stream in conns.iter_mut().filter_map(|c| c.stream.as_mut())
@@ -672,55 +877,7 @@ impl BoundServer {
             drop(rx);
         });
 
-        Counters::add(&counters.collisions, asm.collisions());
-        let mut snap = counters.snapshot();
-        snap.iterations = k;
-        let elapsed_s = watch.elapsed_s();
-        let passes = snap.updates_applied as f64 / n as f64;
-        let secs_per_pass = if passes > 0.0 {
-            elapsed_s / passes
-        } else {
-            f64::INFINITY
-        };
-        let objective = match &avg {
-            Some(a) => problem.objective_from(&a.param, a.aux),
-            None => problem.objective(&state, &master),
-        };
-        let gap = if spec.exact_gap {
-            match &avg {
-                Some(a) => problem.full_gap(&state, &a.param),
-                None => problem.full_gap(&state, &master),
-            }
-        } else {
-            gap_estimate
-        };
-        let sample = Sample {
-            iter: k as usize,
-            oracle_calls: snap.oracle_calls,
-            elapsed_s,
-            objective,
-            gap,
-        };
-        obs.on_sample(&sample);
-        trace.push(sample);
-        let (param, raw_param) = match avg {
-            Some(a) => (a.param, master),
-            None => {
-                let raw = master.clone();
-                (master, raw)
-            }
-        };
-        Ok(Report::from_run(
-            "net",
-            RunResult {
-                trace,
-                param,
-                raw_param,
-                counters: snap,
-                elapsed_s,
-                secs_per_pass,
-            },
-        ))
+        Ok(core.finish(obs))
     }
 }
 
@@ -809,26 +966,42 @@ fn read_loop(
 
 /// Build the snapshot body for a worker holding `have`: an empty delta if
 /// it is current, a dirty-range delta when the log covers the gap (and it
-/// is actually smaller than the full vector), a full snapshot otherwise.
+/// is actually smaller than this shard's owned `span`), a span resync
+/// otherwise. A resync from the span-owning-everything server is a
+/// [`SnapshotBody::Full`] — bit-identical to the unsharded v2 answer —
+/// while a shard resync is a single-run delta covering the span (a
+/// sharded worker initializes its parameter locally and splices every
+/// shard's answer into it).
 fn snapshot_body(
     master: &[f32],
+    span: &Range<usize>,
     log: &VecDeque<(u64, DirtyRanges)>,
     k: u64,
     have: u64,
 ) -> SnapshotBody {
+    let full_span = || {
+        if span.start == 0 && span.end == master.len() {
+            SnapshotBody::Full(master.to_vec())
+        } else {
+            SnapshotBody::Delta(vec![(
+                span.start as u32,
+                master[span.clone()].to_vec(),
+            )])
+        }
+    };
     if have == k {
         return SnapshotBody::Delta(Vec::new());
     }
     if have > k {
         // `u64::MAX` sentinel (nothing held) or a confused peer: resync.
-        return SnapshotBody::Full(master.to_vec());
+        return full_span();
     }
     let covered = log
         .front()
         .map(|(oldest, _)| *oldest <= have + 1)
         .unwrap_or(false);
     if covered {
-        let mut ranges: Vec<std::ops::Range<usize>> = Vec::new();
+        let mut ranges: Vec<Range<usize>> = Vec::new();
         let mut full = false;
         for (v, r) in log.iter() {
             if *v <= have {
@@ -845,7 +1018,7 @@ fn snapshot_body(
         if !full {
             let merged = merge_ranges(ranges);
             let total: usize = merged.iter().map(|r| r.len()).sum();
-            if total < master.len() {
+            if total < span.len() {
                 let runs = merged
                     .iter()
                     .map(|r| (r.start as u32, master[r.clone()].to_vec()))
@@ -854,7 +1027,7 @@ fn snapshot_body(
             }
         }
     }
-    SnapshotBody::Full(master.to_vec())
+    full_span()
 }
 
 /// The registry name a worker passes back to
@@ -882,9 +1055,10 @@ pub fn serve(
 }
 
 /// Self-hosted loopback mode: bind on `addr` (use port 0 for an ephemeral
-/// port), spawn the spec's worker fleet as in-process threads that connect
-/// back over real TCP (127.0.0.1), and run the solve — one process, but
-/// every oracle payload crosses the wire codec. This is the mode the
+/// port — with `run.shards > 1` every shard resolves its own), spawn the
+/// spec's worker fleet as in-process threads that connect back over real
+/// TCP (127.0.0.1), and run the solve — one process, but every oracle
+/// payload crosses the wire codec. This is the mode the
 /// distributed==in-process equivalence tests pin.
 pub fn solve_loopback(
     spec: RunSpec,
@@ -903,7 +1077,8 @@ pub fn solve_loopback(
             // stays open for joiners); once the run ends and the listener
             // drops, a reconnect attempt is refused and the worker exits
             // with its summed summary. Without chaos this is exactly the
-            // single-session worker.
+            // single-session worker. A sharded worker dials shard 0 here
+            // and learns its siblings from the handshake plan.
             handles.push(scope.spawn(move || {
                 super::worker::run_resilient(
                     &bound.to_string(),
@@ -975,6 +1150,8 @@ mod tests {
             ("run.chaos", "bogus", "run.chaos"),
             ("run.liveness_ms", "soon", "liveness"),
             ("run.accept_timeout_secs", "0", "accept_timeout"),
+            ("run.shards", "0", "run.shards"),
+            ("run.shard_id", "0", "run.shard_id"),
         ] {
             let mut c = cfg();
             c.set(key, bad);
@@ -996,24 +1173,79 @@ mod tests {
     }
 
     #[test]
+    fn bind_sharded_carves_a_plan_over_ephemeral_ports() {
+        // gfl d=4 n=20 -> 19 blocks, param_dim 76.
+        let mut c = cfg();
+        c.set("run.shards", "2");
+        let spec = RunSpec::new(Engine::asynchronous(1));
+        let server =
+            BoundServer::bind(spec, "gfl", &c, "127.0.0.1:0").unwrap();
+        let plan = server.shard_plan();
+        assert_eq!(plan.len(), 2);
+        assert_eq!(server.listeners.len(), 2);
+        assert_eq!(server.hosted, vec![0, 1]);
+        plan.validate(19, 76).expect("plan tiles the problem");
+        // Every listener really is bound where the plan says.
+        for (i, l) in server.listeners.iter().enumerate() {
+            assert_eq!(
+                l.local_addr().unwrap().to_string(),
+                plan.get(i).addr
+            );
+        }
+    }
+
+    #[test]
+    fn bind_sharded_rejects_whole_parameter_knobs() {
+        let mut c = cfg();
+        c.set("run.shards", "2");
+        let spec =
+            RunSpec::new(Engine::asynchronous(1)).weighted_averaging(true);
+        let err = BoundServer::bind(spec, "gfl", &c, "127.0.0.1:0")
+            .map(|_| ())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("averaging"), "{err}");
+        let spec = RunSpec::new(Engine::asynchronous(1)).exact_gap(true);
+        let err = BoundServer::bind(spec, "gfl", &c, "127.0.0.1:0")
+            .map(|_| ())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("exact_gap"), "{err}");
+    }
+
+    #[test]
+    fn bind_shard_id_needs_an_explicit_port() {
+        let mut c = cfg();
+        c.set("run.shards", "2");
+        c.set("run.shard_id", "1");
+        let spec = RunSpec::new(Engine::asynchronous(1));
+        let err = BoundServer::bind(spec, "gfl", &c, "127.0.0.1:0")
+            .map(|_| ())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("base port"), "{err}");
+    }
+
+    #[test]
     fn snapshot_body_selects_delta_vs_full() {
         let master: Vec<f32> = (0..10).map(|i| i as f32).collect();
+        let whole = 0..10usize;
         let mut log = VecDeque::new();
         log.push_back((1u64, Some(vec![0..2usize])));
         log.push_back((2u64, Some(vec![4..6usize])));
         // Current worker: empty delta.
         assert_eq!(
-            snapshot_body(&master, &log, 2, 2),
+            snapshot_body(&master, &whole, &log, 2, 2),
             SnapshotBody::Delta(Vec::new())
         );
         // One behind: only version 2's ranges.
         assert_eq!(
-            snapshot_body(&master, &log, 2, 1),
+            snapshot_body(&master, &whole, &log, 2, 1),
             SnapshotBody::Delta(vec![(4, vec![4.0, 5.0])])
         );
         // Two behind: both versions' ranges.
         assert_eq!(
-            snapshot_body(&master, &log, 2, 0),
+            snapshot_body(&master, &whole, &log, 2, 0),
             SnapshotBody::Delta(vec![
                 (0, vec![0.0, 1.0]),
                 (4, vec![4.0, 5.0])
@@ -1021,13 +1253,36 @@ mod tests {
         );
         // Sentinel / uncovered: full.
         assert_eq!(
-            snapshot_body(&master, &log, 2, u64::MAX),
+            snapshot_body(&master, &whole, &log, 2, u64::MAX),
             SnapshotBody::Full(master.clone())
         );
         log.push_back((3u64, None)); // dense write
         assert_eq!(
-            snapshot_body(&master, &log, 3, 2),
+            snapshot_body(&master, &whole, &log, 3, 2),
             SnapshotBody::Full(master.clone())
+        );
+    }
+
+    #[test]
+    fn snapshot_body_resyncs_a_shard_as_a_span_delta() {
+        // A shard owning 4..10 of a 10-wide master never ships Full: its
+        // resync is a single-run delta covering exactly the span.
+        let master: Vec<f32> = (0..10).map(|i| i as f32).collect();
+        let span = 4..10usize;
+        let log: VecDeque<(u64, DirtyRanges)> = VecDeque::new();
+        assert_eq!(
+            snapshot_body(&master, &span, &log, 3, u64::MAX),
+            SnapshotBody::Delta(vec![(
+                4,
+                vec![4.0, 5.0, 6.0, 7.0, 8.0, 9.0]
+            )])
+        );
+        // Covered gap: still the ordinary dirty-range delta.
+        let mut log = VecDeque::new();
+        log.push_back((1u64, Some(vec![5..7usize])));
+        assert_eq!(
+            snapshot_body(&master, &span, &log, 1, 0),
+            SnapshotBody::Delta(vec![(5, vec![5.0, 6.0])])
         );
     }
 }

@@ -1,0 +1,434 @@
+//! Block→shard partitioning for the sharded parameter plane
+//! (`run.shards > 1`).
+//!
+//! The paper's block-separable structure (Eq. 2) gives every coordinate
+//! block — and, for problems that declare block-local writes via
+//! [`Problem::touched_ranges`] — a disjoint slice of the parameter
+//! vector. A [`ShardPlan`] carves both into `S` contiguous spans so that
+//! each block (and each parameter index) has exactly one owning shard:
+//! workers route every Update frame to its block's owner and fan
+//! snapshot pulls out to all shards, merging the per-span answers into
+//! one local view under a per-shard version vector. No cross-shard
+//! coordination is needed on the apply path; the relaxed per-shard block
+//! sampling order is covered by the flexible block-iterative analysis of
+//! Braun–Pokutta–Woodstock (arXiv:2409.06931), and tolerance of the
+//! partial/stale fan-out views by Zhuo et al. (arXiv:1910.07703).
+//!
+//! The plan is computed once by the serve rendezvous
+//! ([`ShardPlan::build`]) and shipped to every worker inside the Hello
+//! handshake (WIRE.md §4.1, protocol v3), so workers never guess the
+//! partition: the routing table is part of the session contract.
+
+use crate::coordinator::RunResult;
+use crate::problems::Problem;
+use crate::util::metrics::Sample;
+use anyhow::{bail, ensure, Result};
+use std::ops::Range;
+
+/// One shard's slice of the plane: where to reach it and which
+/// half-open block/parameter spans it owns. Spans are `u32` on the wire
+/// (WIRE.md §4.1); the accessors below widen to `usize`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardInfo {
+    /// `host:port` the shard's listener is reachable at.
+    pub addr: String,
+    /// First owned block id.
+    pub block_start: u32,
+    /// One past the last owned block id.
+    pub block_end: u32,
+    /// First owned parameter index.
+    pub param_start: u32,
+    /// One past the last owned parameter index.
+    pub param_end: u32,
+}
+
+/// The contiguous block→shard partition carried in the Hello handshake.
+///
+/// Invariants (checked by [`ShardPlan::validate`]): shard block spans
+/// are nonempty, ascending, and tile `0..n_blocks` exactly; parameter
+/// spans are ascending and tile `0..param_dim` exactly. Together they
+/// make [`ShardPlan::owner_of`] total and unambiguous.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardPlan {
+    /// Shards in ascending block order (index = shard id).
+    pub shards: Vec<ShardInfo>,
+}
+
+impl ShardPlan {
+    /// The trivial one-shard plan: everything owned by `addr`. This is
+    /// what `run.shards = 1` serves in its Hello — v2 peers never see a
+    /// plan, v3 single-shard peers see this degenerate one.
+    pub fn single(addr: String, n_blocks: usize, param_dim: usize) -> Self {
+        ShardPlan {
+            shards: vec![ShardInfo {
+                addr,
+                block_start: 0,
+                block_end: n_blocks as u32,
+                param_start: 0,
+                param_end: param_dim as u32,
+            }],
+        }
+    }
+
+    /// Number of shards S.
+    pub fn len(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// True for a plan with no shards (only a decoded-from-hostile-bytes
+    /// state; every constructor produces at least one shard).
+    pub fn is_empty(&self) -> bool {
+        self.shards.is_empty()
+    }
+
+    /// True for the degenerate one-shard plan (the unsharded wire
+    /// session).
+    pub fn is_single(&self) -> bool {
+        self.shards.len() <= 1
+    }
+
+    /// Shard `s`'s entry.
+    pub fn get(&self, s: usize) -> &ShardInfo {
+        &self.shards[s]
+    }
+
+    /// Shard `s`'s owned block span.
+    pub fn block_range(&self, s: usize) -> Range<usize> {
+        let sh = &self.shards[s];
+        sh.block_start as usize..sh.block_end as usize
+    }
+
+    /// Shard `s`'s owned parameter span.
+    pub fn param_span(&self, s: usize) -> Range<usize> {
+        let sh = &self.shards[s];
+        sh.param_start as usize..sh.param_end as usize
+    }
+
+    /// The shard owning `block`. Block spans tile `0..n` ascending, so
+    /// the owner is the first shard whose span ends past `block`.
+    pub fn owner_of(&self, block: usize) -> usize {
+        self.shards
+            .partition_point(|sh| (sh.block_end as usize) <= block)
+    }
+
+    /// Check the tiling invariants against the session's problem shape.
+    /// Workers run this on the decoded Hello plan before trusting it as
+    /// a routing table.
+    pub fn validate(&self, n_blocks: usize, param_dim: usize) -> Result<()> {
+        ensure!(!self.shards.is_empty(), "shard plan has no shards");
+        let (mut b, mut p) = (0u32, 0u32);
+        for (s, sh) in self.shards.iter().enumerate() {
+            ensure!(
+                sh.block_start == b && sh.block_end > sh.block_start,
+                "shard {s} block span {}..{} breaks the contiguous \
+                 tiling at block {b}",
+                sh.block_start,
+                sh.block_end,
+            );
+            ensure!(
+                sh.param_start == p && sh.param_end >= sh.param_start,
+                "shard {s} param span {}..{} breaks the contiguous \
+                 tiling at index {p}",
+                sh.param_start,
+                sh.param_end,
+            );
+            b = sh.block_end;
+            p = sh.param_end;
+        }
+        ensure!(
+            b as usize == n_blocks,
+            "shard plan covers {b} blocks, problem has {n_blocks}"
+        );
+        ensure!(
+            p as usize == param_dim,
+            "shard plan covers {p} parameter indices, problem has \
+             {param_dim}"
+        );
+        Ok(())
+    }
+
+    /// Build the plan for `problem` across `addrs.len()` shards: blocks
+    /// are split evenly (`s*n/S`), and each shard's parameter span is
+    /// grown from the union of its blocks' declared
+    /// [`Problem::touched_ranges`], then padded outward so the spans
+    /// tile `0..param_dim` exactly (snapshot fan-out needs every index
+    /// owned). Fails for problems with dense (`None`) touched ranges —
+    /// a whole-parameter write has no single owner — and for plans
+    /// whose block spans would interleave writes across shards.
+    pub fn build<P: Problem>(problem: &P, addrs: Vec<String>) -> Result<Self> {
+        let s_count = addrs.len();
+        let n = problem.num_blocks();
+        let dim = problem.param_dim();
+        ensure!(s_count >= 1, "a shard plan needs at least one shard");
+        ensure!(
+            s_count <= n,
+            "run.shards = {s_count} exceeds the problem's {n} blocks"
+        );
+        if s_count == 1 {
+            let addr = addrs.into_iter().next().expect("checked nonempty");
+            return Ok(ShardPlan::single(addr, n, dim));
+        }
+        // Per-block write spans, probed once from the initial iterate.
+        // `touched_ranges` is a static structural declaration for every
+        // registered problem, so the probe point does not matter.
+        let init = problem.init_param();
+        let mut spans = Vec::with_capacity(n);
+        for b in 0..n {
+            let o = problem.oracle(&init, b);
+            let batch = [o];
+            let Some(ranges) = problem.touched_ranges(&batch) else {
+                bail!(
+                    "problem '{}' applies dense whole-parameter writes \
+                     (touched_ranges = None); only problems with \
+                     block-local writes can be sharded",
+                    problem.name()
+                );
+            };
+            let lo = ranges.iter().map(|r| r.start).min().unwrap_or(0);
+            let hi = ranges.iter().map(|r| r.end).max().unwrap_or(0);
+            spans.push(lo..hi);
+        }
+        // Even block partition, then the union of owned block spans.
+        let mut shards = Vec::with_capacity(s_count);
+        for s in 0..s_count {
+            let (bs, be) = (s * n / s_count, (s + 1) * n / s_count);
+            let lo = spans[bs..be].iter().map(|r| r.start).min().unwrap();
+            let hi = spans[bs..be].iter().map(|r| r.end).max().unwrap();
+            shards.push((bs, be, lo, hi));
+        }
+        for w in shards.windows(2) {
+            let ((_, be, _, hi), (bs, _, lo, _)) = (&w[0], &w[1]);
+            ensure!(
+                hi <= lo,
+                "blocks {}.. and ..{} write overlapping parameter \
+                 ranges ({hi} > {lo}); this problem's blocks interleave \
+                 and cannot be sharded contiguously",
+                bs,
+                be,
+            );
+        }
+        // Pad spans outward into a tiling of 0..dim: shard 0 absorbs
+        // the head, each boundary snaps to the next shard's first
+        // write, shard S-1 absorbs the tail.
+        let infos = addrs
+            .into_iter()
+            .enumerate()
+            .map(|(s, addr)| ShardInfo {
+                addr,
+                block_start: shards[s].0 as u32,
+                block_end: shards[s].1 as u32,
+                param_start: if s == 0 { 0 } else { shards[s].2 as u32 },
+                param_end: if s + 1 == s_count {
+                    dim as u32
+                } else {
+                    shards[s + 1].2 as u32
+                },
+            })
+            .collect();
+        let plan = ShardPlan { shards: infos };
+        plan.validate(n, dim)?;
+        Ok(plan)
+    }
+}
+
+/// Fold the per-shard [`RunResult`]s of one sharded serve into the
+/// single result the Report is built from: counters summed
+/// (`delay_max` maxed, wall-clock maxed), the final parameter spliced
+/// from each hosted shard's owned span, and one exact final sample
+/// evaluated on the assembled iterate.
+///
+/// Fleet counters (`workers_joined`, `reconnects`, …) count per-shard
+/// *sessions*: a worker that joins S shards contributes S joins. That
+/// is the honest wire-level number — each shard really did run a
+/// handshake — and keeps the fold order-free.
+///
+/// Only hosted shards contribute parameter spans; a `--shard-id`
+/// process hosting a strict subset reports the foreign spans at their
+/// initial value (its Report is a shard-local view; the cross-process
+/// fold lives with whoever collects the per-process Reports).
+pub fn aggregate<P: Problem>(
+    problem: &P,
+    plan: &ShardPlan,
+    hosted: &[usize],
+    results: Vec<RunResult>,
+) -> RunResult {
+    assert_eq!(hosted.len(), results.len(), "one result per hosted shard");
+    assert!(!results.is_empty(), "aggregate needs at least one shard");
+    let mut counters = results[0].counters;
+    let mut elapsed_s = results[0].elapsed_s;
+    for r in &results[1..] {
+        let s = &r.counters;
+        counters.oracle_calls += s.oracle_calls;
+        counters.updates_applied += s.updates_applied;
+        counters.collisions += s.collisions;
+        counters.dropped += s.dropped;
+        counters.iterations += s.iterations;
+        counters.snapshot_reads += s.snapshot_reads;
+        counters.payload_nnz += s.payload_nnz;
+        counters.payload_bytes += s.payload_bytes;
+        counters.wire_tx_bytes += s.wire_tx_bytes;
+        counters.wire_rx_bytes += s.wire_rx_bytes;
+        counters.delay_sum += s.delay_sum;
+        counters.delay_max = counters.delay_max.max(s.delay_max);
+        counters.workers_joined += s.workers_joined;
+        counters.workers_lost += s.workers_lost;
+        counters.blocks_requeued += s.blocks_requeued;
+        counters.reconnects += s.reconnects;
+        counters.event_stalls += s.event_stalls;
+        elapsed_s = elapsed_s.max(r.elapsed_s);
+    }
+    let mut param = problem.init_param();
+    for (&s, r) in hosted.iter().zip(&results) {
+        let span = plan.param_span(s);
+        param[span.clone()].copy_from_slice(&r.raw_param[span]);
+    }
+    // Sharded serves reject weighted averaging and run ServerState-free
+    // problems (build() demands block-local writes), so a fresh state
+    // evaluates the assembled iterate exactly.
+    let state = problem.init_server();
+    let objective = problem.objective(&state, &param);
+    let gap = problem.full_gap(&state, &param);
+    let mut trace = results
+        .first()
+        .map(|r| r.trace.clone())
+        .unwrap_or_default();
+    trace.push(Sample {
+        iter: counters.iterations as usize,
+        oracle_calls: counters.oracle_calls,
+        elapsed_s,
+        objective,
+        gap,
+    });
+    let n = problem.num_blocks();
+    let passes = counters.updates_applied as f64 / n as f64;
+    let secs_per_pass = if passes > 0.0 {
+        elapsed_s / passes
+    } else {
+        f64::INFINITY
+    };
+    RunResult {
+        trace,
+        param: param.clone(),
+        raw_param: param,
+        counters,
+        elapsed_s,
+        secs_per_pass,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::problems::gfl::Gfl;
+    use crate::util::rng::Pcg64;
+
+    fn gfl_instance(d: usize, n: usize) -> Gfl {
+        let mut rng = Pcg64::seeded(11);
+        let y = rng.gaussian_vec(d * n);
+        Gfl::new(d, n, 0.2, y)
+    }
+
+    #[test]
+    fn single_plan_owns_everything() {
+        let plan = ShardPlan::single("127.0.0.1:7878".into(), 9, 36);
+        assert!(plan.is_single());
+        assert_eq!(plan.block_range(0), 0..9);
+        assert_eq!(plan.param_span(0), 0..36);
+        assert_eq!(plan.owner_of(0), 0);
+        assert_eq!(plan.owner_of(8), 0);
+        plan.validate(9, 36).expect("trivial plan validates");
+    }
+
+    #[test]
+    fn build_tiles_gfl_blocks_and_params() {
+        // gfl d=4 n=10 -> m = 9 blocks, param_dim = 36, block b writes
+        // 4b..4b+4.
+        let p = gfl_instance(4, 10);
+        let addrs = vec!["a:1".into(), "b:2".into(), "c:3".into()];
+        let plan = ShardPlan::build(&p, addrs).expect("gfl shards");
+        assert_eq!(plan.len(), 3);
+        assert_eq!(plan.block_range(0), 0..3);
+        assert_eq!(plan.block_range(1), 3..6);
+        assert_eq!(plan.block_range(2), 6..9);
+        assert_eq!(plan.param_span(0), 0..12);
+        assert_eq!(plan.param_span(1), 12..24);
+        assert_eq!(plan.param_span(2), 24..36);
+        plan.validate(9, 36).expect("built plan validates");
+        // Ownership is total and matches the block tiling.
+        for b in 0..9 {
+            assert_eq!(plan.owner_of(b), b / 3, "block {b}");
+        }
+    }
+
+    #[test]
+    fn build_rejects_more_shards_than_blocks() {
+        let p = gfl_instance(3, 3); // 2 blocks
+        let addrs = vec!["a:1".into(), "b:2".into(), "c:3".into()];
+        let err = ShardPlan::build(&p, addrs).unwrap_err().to_string();
+        assert!(err.contains("run.shards"), "got: {err}");
+    }
+
+    #[test]
+    fn validate_rejects_gaps_overlaps_and_short_covers() {
+        let mk = |spans: &[(u32, u32, u32, u32)]| ShardPlan {
+            shards: spans
+                .iter()
+                .map(|&(bs, be, ps, pe)| ShardInfo {
+                    addr: "x:0".into(),
+                    block_start: bs,
+                    block_end: be,
+                    param_start: ps,
+                    param_end: pe,
+                })
+                .collect(),
+        };
+        // Gap in the block tiling.
+        assert!(mk(&[(0, 2, 0, 8), (3, 4, 8, 16)]).validate(4, 16).is_err());
+        // Overlapping param spans.
+        assert!(mk(&[(0, 2, 0, 9), (2, 4, 8, 16)]).validate(4, 16).is_err());
+        // Covers fewer blocks than the problem has.
+        assert!(mk(&[(0, 2, 0, 16)]).validate(4, 16).is_err());
+        // Empty plan.
+        assert!(mk(&[]).validate(4, 16).is_err());
+        // A correct tiling passes.
+        mk(&[(0, 2, 0, 8), (2, 4, 8, 16)])
+            .validate(4, 16)
+            .expect("correct tiling");
+    }
+
+    #[test]
+    fn aggregate_sums_counters_and_splices_spans() {
+        let p = gfl_instance(4, 5); // 4 blocks, dim 16
+        let plan = ShardPlan::build(&p, vec!["a:1".into(), "b:2".into()])
+            .expect("plan");
+        let mut make = |mark: f32, span: std::ops::Range<usize>| {
+            let mut raw = p.init_param();
+            for v in &mut raw[span] {
+                *v = mark;
+            }
+            let c = crate::util::metrics::CounterSnapshot {
+                updates_applied: 3,
+                delay_max: if mark > 1.5 { 7 } else { 2 },
+                ..Default::default()
+            };
+            RunResult {
+                trace: Default::default(),
+                param: raw.clone(),
+                raw_param: raw,
+                counters: c,
+                elapsed_s: mark as f64,
+                secs_per_pass: 1.0,
+            }
+        };
+        let r0 = make(1.0, plan.param_span(0));
+        let r1 = make(2.0, plan.param_span(1));
+        let out = aggregate(&p, &plan, &[0, 1], vec![r0, r1]);
+        assert_eq!(out.counters.updates_applied, 6);
+        assert_eq!(out.counters.delay_max, 7);
+        assert!((out.elapsed_s - 2.0).abs() < 1e-12);
+        assert!(out.raw_param[..8].iter().all(|&v| v == 1.0));
+        assert!(out.raw_param[8..].iter().all(|&v| v == 2.0));
+        let last = out.trace.last().expect("final sample");
+        assert!(last.objective.is_finite());
+    }
+}

@@ -13,6 +13,7 @@
 //! end-to-end — the decoder never densifies (pinned by the codec tests in
 //! `rust/tests/net_transport.rs`).
 
+use super::shard::{ShardInfo, ShardPlan};
 use crate::problems::{BlockOracle, OraclePayload};
 use anyhow::{anyhow, bail, ensure, Result};
 use std::io::{Read, Write};
@@ -23,9 +24,11 @@ pub const MAGIC: u32 = u32::from_le_bytes(*b"apfw");
 
 /// Protocol version. Breaking changes bump this; a receiver rejects any
 /// frame whose version it does not implement. v2 added the elastic-fleet
-/// messages ([`Msg::Join`], [`Msg::Heartbeat`]); v1 peers are rejected at
-/// the first frame (see `docs/WIRE.md` §6 for the compatibility rules).
-pub const VERSION: u16 = 2;
+/// messages ([`Msg::Join`], [`Msg::Heartbeat`]); v3 added the sharded
+/// parameter plane ([`Hello::shard`] + [`Hello::plan`] in the
+/// handshake). Older peers are rejected at the first frame (see
+/// `docs/WIRE.md` §8 for the compatibility rules).
+pub const VERSION: u16 = 3;
 
 /// Fixed frame header size in bytes: magic (4) + version (2) + type (1) +
 /// reserved (1) + payload length (4).
@@ -78,6 +81,13 @@ pub struct Hello {
     /// Flattened config entries (`section.key`, `value`) the worker feeds
     /// back into `ProblemInstance::from_config`.
     pub config: Vec<(String, String)>,
+    /// Which shard of `plan` issued this Hello (v3). 0 for the
+    /// unsharded server.
+    pub shard: u32,
+    /// The session's block→shard routing table (v3). The degenerate
+    /// one-shard plan for `run.shards = 1`; workers validate it against
+    /// the rebuilt problem before trusting it.
+    pub plan: ShardPlan,
 }
 
 /// A parameter snapshot body: the full vector, or only the ranges dirtied
@@ -348,6 +358,16 @@ fn put_body(buf: &mut Vec<u8>, msg: &Msg) {
                 put_str(buf, k);
                 put_str(buf, v);
             }
+            // v3: issuing shard + the block->shard routing table.
+            put_u32(buf, h.shard);
+            put_u32(buf, h.plan.shards.len() as u32);
+            for sh in &h.plan.shards {
+                put_str(buf, &sh.addr);
+                put_u32(buf, sh.block_start);
+                put_u32(buf, sh.block_end);
+                put_u32(buf, sh.param_start);
+                put_u32(buf, sh.param_end);
+            }
         }
         Msg::SnapshotRequest { have_version } => {
             put_u64(buf, *have_version);
@@ -409,6 +429,26 @@ fn get_body(tag_byte: u8, payload: &[u8]) -> Result<Msg> {
                 let v = d.str()?;
                 config.push((k, v));
             }
+            let shard = d.u32()?;
+            // Each plan entry is at least 20 bytes (addr length prefix
+            // + four u32 spans), bounding a hostile count.
+            let nshards = d.count(20)?;
+            let mut shards = Vec::with_capacity(nshards);
+            for _ in 0..nshards {
+                let addr = d.str()?;
+                shards.push(ShardInfo {
+                    addr,
+                    block_start: d.u32()?,
+                    block_end: d.u32()?,
+                    param_start: d.u32()?,
+                    param_end: d.u32()?,
+                });
+            }
+            ensure!(
+                (shard as usize) < shards.len(),
+                "Hello names shard {shard} of a {}-shard plan",
+                shards.len()
+            );
             Msg::Hello(Hello {
                 worker_id,
                 seed,
@@ -418,6 +458,8 @@ fn get_body(tag_byte: u8, payload: &[u8]) -> Result<Msg> {
                 n_blocks,
                 problem,
                 config,
+                shard,
+                plan: ShardPlan { shards },
             })
         }
         tag::SNAPSHOT_REQUEST => Msg::SnapshotRequest {
@@ -586,6 +628,25 @@ mod tests {
                     ("gfl.d".into(), "6".into()),
                     ("run.seed".into(), "5".into()),
                 ],
+                shard: 1,
+                plan: ShardPlan {
+                    shards: vec![
+                        ShardInfo {
+                            addr: "127.0.0.1:7920".into(),
+                            block_start: 0,
+                            block_end: 20,
+                            param_start: 0,
+                            param_end: 120,
+                        },
+                        ShardInfo {
+                            addr: "127.0.0.1:7921".into(),
+                            block_start: 20,
+                            block_end: 39,
+                            param_start: 120,
+                            param_end: 234,
+                        },
+                    ],
+                },
             }),
             Msg::SnapshotRequest {
                 have_version: u64::MAX,
@@ -642,15 +703,40 @@ mod tests {
 
     #[test]
     fn v1_peer_frames_are_rejected_with_a_version_error() {
-        // A v1 build writes version=1 in the header; this v2 build must
-        // reject it cleanly (docs/WIRE.md §6: both roles ship in one
+        // A v1 build writes version=1 in the header; this v3 build must
+        // reject it cleanly (docs/WIRE.md §8: both roles ship in one
         // binary, so a version skew means mismatched deployments).
         let mut buf = Vec::new();
         encode_frame(&Msg::Shutdown, &mut buf);
         buf[4..6].copy_from_slice(&1u16.to_le_bytes());
         let err = read_frame(&mut buf.as_slice()).unwrap_err().to_string();
         assert!(err.contains("version 1"), "{err}");
-        assert!(err.contains("v2"), "{err}");
+        assert!(err.contains("v3"), "{err}");
+    }
+
+    #[test]
+    fn hello_rejects_an_out_of_plan_shard_index() {
+        let hello = Msg::Hello(Hello {
+            worker_id: 0,
+            seed: 1,
+            tau: 1,
+            batch: 1,
+            payload_mode: 0,
+            n_blocks: 4,
+            problem: "gfl".into(),
+            config: vec![],
+            shard: 0,
+            plan: ShardPlan::single("h:1".into(), 4, 16),
+        });
+        let mut buf = Vec::new();
+        encode_frame(&hello, &mut buf);
+        // Corrupt the shard index (the u32 right after the config
+        // pairs) to point past the one-shard plan.
+        let shard_off = buf.len() - (4 + 4 + (4 + 3) + 16);
+        buf[shard_off..shard_off + 4]
+            .copy_from_slice(&9u32.to_le_bytes());
+        let err = read_frame(&mut buf.as_slice()).unwrap_err().to_string();
+        assert!(err.contains("shard 9"), "{err}");
     }
 
     #[test]

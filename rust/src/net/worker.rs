@@ -12,12 +12,26 @@
 //! and ship one multi-block `Update` frame — sparse payloads stay sparse
 //! from the LMO to the server's assembler.
 //!
-//! Worker `id` samples blocks from rng stream `2 + id`: stream 2 is the
-//! sequential delayed engine's stream ([`crate::solver::delayed`] draws
-//! from `Pcg64::new(seed, 2)`), so a one-worker loopback solve replays the
-//! in-process delayed engine draw-for-draw — the bit-identity pinned in
+//! Worker `id` samples blocks from rng stream [`rng_stream_for`]`(id)`
+//! (`2 + id`): stream 2 is the sequential delayed engine's stream
+//! ([`crate::solver::delayed`] draws from the same helper), so a
+//! one-worker loopback solve replays the in-process delayed engine
+//! draw-for-draw — the bit-identity pinned in
 //! `rust/tests/net_transport.rs`. Ids are server-issued, so a session that
 //! replaces a broken one gets a fresh id and therefore a fresh stream.
+//!
+//! Sharded sessions (protocol v3): when the handshake's
+//! [`ShardPlan`](super::ShardPlan) names more than one shard, the worker
+//! dials every other shard from the plan, handshakes each, and runs one
+//! solve loop over the whole fleet of connections — snapshot pulls fan
+//! out to every shard under a per-shard version vector (each shard
+//! answers deltas over its own parameter span, spliced into the worker's
+//! locally initialized copy), blocks are still sampled globally from the
+//! one worker rng stream, and each solved payload is routed to the shard
+//! owning its block. A round sends an Update to *every* shard — empty
+//! for shards that own none of the round's blocks — so the strict
+//! request/response alternation each serve loop relies on is preserved
+//! per connection.
 //!
 //! Elastic-fleet behavior (protocol v2): every session announces itself
 //! with a `Join` frame right after the handshake, [`run_resilient`]
@@ -32,7 +46,7 @@
 
 use super::chaos::{chaos_rng_stream, ChaosStream};
 use super::wire::{self, Hello, Msg, SnapshotBody};
-use super::{payload_mode_from_tag, worker_rng_stream, NetOptions};
+use super::{payload_mode_from_tag, rng_stream_for, NetOptions};
 use crate::coordinator::pick_blocks;
 use crate::problems::{BlockOracle, OracleScratch, Problem};
 use crate::run::ProblemInstance;
@@ -235,6 +249,13 @@ fn run_on(mut stream: TcpStream, resumed: bool) -> Result<WorkerSummary> {
     // The fleet knobs ride in the same shipped config: heartbeat cadence
     // from the server's liveness window, fault injection from `run.chaos`.
     let opts = NetOptions::from_config(&cfg)?;
+    if hello.plan.len() > 1 {
+        // Sharded parameter plane: dial the sibling shards named in the
+        // plan and run the fan-out solve loop over all of them.
+        return run_sharded(
+            &instance, hello, stream, &opts, resumed, rx_bytes, tx_bytes,
+        );
+    }
     let heartbeat = opts.heartbeat_period();
     if opts.chaos.is_noop() {
         // No chaos: the raw stream, bit-identical to the plain transport.
@@ -244,6 +265,368 @@ fn run_on(mut stream: TcpStream, resumed: bool) -> Result<WorkerSummary> {
         let stream = ChaosStream::new(stream, opts.chaos, rng);
         dispatch(&instance, &hello, stream, rx_bytes, tx_bytes, heartbeat)
     }
+}
+
+/// Establish the full sharded session: keep the already-handshaken
+/// `primary` connection, dial every other shard named in the plan,
+/// handshake and announce each, then hand the whole fleet of connections
+/// to the sharded solve loop (chaos-wrapped per stream when enabled).
+fn run_sharded(
+    instance: &ProblemInstance,
+    hello: Hello,
+    primary: TcpStream,
+    opts: &NetOptions,
+    resumed: bool,
+    rx_bytes: u64,
+    tx_bytes: u64,
+) -> Result<WorkerSummary> {
+    let plan = hello.plan.clone();
+    let s_count = plan.len();
+    let primary_shard = hello.shard as usize;
+    let mut hellos: Vec<Option<Hello>> = (0..s_count).map(|_| None).collect();
+    let mut raw: Vec<Option<TcpStream>> =
+        (0..s_count).map(|_| None).collect();
+    let mut rx = rx_bytes;
+    let mut tx = tx_bytes;
+    let mut jitter = backoff_rng();
+    let mut ebuf = Vec::new();
+    for s in 0..s_count {
+        if s == primary_shard {
+            continue;
+        }
+        // The sibling shards bind before any shard accepts, so they are
+        // reachable by the time the primary handshake completed; the
+        // retry window only absorbs scheduling skew between processes.
+        let mut stream = connect_until(
+            &plan.get(s).addr,
+            opts.accept_timeout,
+            false,
+            &mut jitter,
+        )?;
+        let (h, nb) = match wire::read_frame(&mut stream)? {
+            Some((Msg::Hello(h), nb)) => (h, nb),
+            Some((other, _)) => {
+                bail!("shard {s}: expected a Hello handshake, got {other:?}")
+            }
+            None => {
+                bail!("shard {s} closed the connection before the handshake")
+            }
+        };
+        rx += nb as u64;
+        ensure!(
+            h.shard as usize == s && h.plan == plan,
+            "shard plan mismatch: the peer at {} answered as shard {} of a \
+             different plan — are the serve processes in sync?",
+            plan.get(s).addr,
+            h.shard
+        );
+        tx += wire::write_frame(&mut stream, &Msg::Join { resumed }, &mut ebuf)?
+            as u64;
+        hellos[s] = Some(h);
+        raw[s] = Some(stream);
+    }
+    hellos[primary_shard] = Some(hello);
+    raw[primary_shard] = Some(primary);
+    let hellos: Vec<Hello> = hellos
+        .into_iter()
+        .map(|h| h.expect("every shard handshaken"))
+        .collect();
+    let streams: Vec<TcpStream> = raw
+        .into_iter()
+        .map(|s| s.expect("every shard connected"))
+        .collect();
+    let heartbeat = opts.heartbeat_period();
+    if opts.chaos.is_noop() {
+        dispatch_sharded(
+            instance,
+            &hellos,
+            primary_shard,
+            streams,
+            rx,
+            tx,
+            heartbeat,
+        )
+    } else {
+        // One chaos rng per connection: the per-shard worker ids may
+        // collide across shards, so fold the shard index into the stream
+        // selector to keep the fault schedules independent.
+        let wrapped: Vec<ChaosStream<TcpStream>> = streams
+            .into_iter()
+            .enumerate()
+            .map(|(s, st)| {
+                let rng = Pcg64::new(
+                    hellos[s].seed,
+                    chaos_rng_stream(hellos[s].worker_id)
+                        + ((s as u64) << 32),
+                );
+                ChaosStream::new(st, opts.chaos.clone(), rng)
+            })
+            .collect();
+        dispatch_sharded(
+            instance,
+            &hellos,
+            primary_shard,
+            wrapped,
+            rx,
+            tx,
+            heartbeat,
+        )
+    }
+}
+
+/// Monomorphize [`sharded_solve_loop`] over the instance's problem type.
+fn dispatch_sharded<S: Read + Write>(
+    instance: &ProblemInstance,
+    hellos: &[Hello],
+    primary: usize,
+    streams: Vec<S>,
+    rx_bytes: u64,
+    tx_bytes: u64,
+    heartbeat: Option<Duration>,
+) -> Result<WorkerSummary> {
+    match instance {
+        ProblemInstance::Gfl(p) => sharded_solve_loop(
+            p, hellos, primary, streams, rx_bytes, tx_bytes, heartbeat,
+        ),
+        ProblemInstance::Qp(p) => sharded_solve_loop(
+            p, hellos, primary, streams, rx_bytes, tx_bytes, heartbeat,
+        ),
+        ProblemInstance::Chain(p) => sharded_solve_loop(
+            p, hellos, primary, streams, rx_bytes, tx_bytes, heartbeat,
+        ),
+        ProblemInstance::Multiclass(p) => sharded_solve_loop(
+            p, hellos, primary, streams, rx_bytes, tx_bytes, heartbeat,
+        ),
+    }
+}
+
+/// The sharded oracle loop: fan snapshot pulls to every shard, splice
+/// their span deltas into one locally held parameter, solve a globally
+/// sampled batch, and route each payload to the shard owning its block.
+/// Every round ends with one Update per shard — empty for shards owning
+/// none of the round's blocks — preserving the per-connection strict
+/// alternation. `k_read` is per shard: the version of *that shard's*
+/// span the oracles were computed against, so each shard's staleness rule
+/// judges exactly the state it owns.
+fn sharded_solve_loop<P: Problem, S: Read + Write>(
+    problem: &P,
+    hellos: &[Hello],
+    primary: usize,
+    mut streams: Vec<S>,
+    mut rx_bytes: u64,
+    tx_bytes: u64,
+    heartbeat: Option<Duration>,
+) -> Result<WorkerSummary> {
+    let n = problem.num_blocks();
+    let plan = &hellos[primary].plan;
+    let s_count = plan.len();
+    // Defense in depth: the serve side built this plan, but the worker
+    // splices snapshot runs straight into its parameter, so re-check the
+    // tiling against the locally rebuilt instance before trusting it.
+    plan.validate(n, problem.param_dim())?;
+    let batch = (hellos[primary].batch as usize).clamp(1, n);
+    let mode =
+        payload_mode_from_tag(hellos[primary].payload_mode).ok_or_else(
+            || anyhow!("unknown payload mode tag {}", hellos[primary].payload_mode),
+        )?;
+    let pkind = mode.resolve(problem.preferred_payload());
+    // ONE sampling stream for the whole sharded session, derived from the
+    // primary shard's issued id — block sampling is global; the plan only
+    // decides where each solved payload is shipped.
+    let mut rng =
+        Pcg64::new(hellos[primary].seed, rng_stream_for(hellos[primary].worker_id));
+    // Local deterministic init instead of a Full pull: each shard only
+    // ever answers delta runs over its own span, and splicing those into
+    // the initial iterate reconstructs the assembled parameter.
+    let mut param: Vec<f32> = problem.init_param();
+    // Per-shard version vector: shard s's spans are at version have[s].
+    let mut have: Vec<u64> = vec![u64::MAX; s_count];
+    let mut blocks: Vec<usize> = Vec::new();
+    let mut oscratch = OracleScratch::<P>::default();
+    let mut slots: Vec<BlockOracle> =
+        (0..batch).map(|_| BlockOracle::empty_with(pkind)).collect();
+    let mut groups: Vec<Vec<BlockOracle>> =
+        (0..s_count).map(|_| Vec::with_capacity(batch)).collect();
+    let mut ebuf: Vec<u8> = Vec::new();
+    let mut summary = WorkerSummary {
+        worker_id: hellos[primary].worker_id,
+        tx_bytes,
+        ..Default::default()
+    };
+    let mut last_tx: Vec<Instant> =
+        (0..s_count).map(|_| Instant::now()).collect();
+    let mut clean = false;
+    let mut done = false;
+
+    'session: while !done {
+        // ---- pull: fan the snapshot request to every shard ----
+        let mut asked = vec![false; s_count];
+        for s in 0..s_count {
+            match wire::write_frame(
+                &mut streams[s],
+                &Msg::SnapshotRequest {
+                    have_version: have[s],
+                },
+                &mut ebuf,
+            ) {
+                Ok(nb) => {
+                    summary.tx_bytes += nb as u64;
+                    last_tx[s] = Instant::now();
+                    asked[s] = true;
+                }
+                // A serve loop closes sockets on stop; a failed send
+                // after the handshake is the shutdown path, not an
+                // error. Shards already asked still get their answers
+                // read below so the conversation ends in protocol.
+                Err(_) => {
+                    done = true;
+                    break;
+                }
+            }
+        }
+        // ---- collect one answer per asked shard ----
+        for s in 0..s_count {
+            if !asked[s] {
+                continue;
+            }
+            let (version, body) = match wire::read_frame(&mut streams[s]) {
+                Ok(Some((Msg::Snapshot { version, body }, nb))) => {
+                    rx_bytes += nb as u64;
+                    (version, body)
+                }
+                Ok(Some((Msg::Shutdown, nb))) => {
+                    rx_bytes += nb as u64;
+                    clean = true;
+                    done = true;
+                    continue;
+                }
+                Ok(Some((other, _))) => {
+                    bail!("shard {s}: expected Snapshot or Shutdown, got {other:?}")
+                }
+                Ok(None) => {
+                    clean = true;
+                    done = true;
+                    continue;
+                }
+                Err(_) => {
+                    done = true;
+                    continue;
+                }
+            };
+            match body {
+                SnapshotBody::Full(values) => {
+                    ensure!(
+                        values.len() == problem.param_dim(),
+                        "shard {s}: snapshot dimension {} != parameter \
+                         dimension {}",
+                        values.len(),
+                        problem.param_dim()
+                    );
+                    param = values;
+                }
+                SnapshotBody::Delta(runs) => {
+                    for (off, values) in &runs {
+                        let lo = *off as usize;
+                        let hi = lo + values.len();
+                        ensure!(
+                            hi <= param.len(),
+                            "shard {s}: delta run {lo}..{hi} out of bounds \
+                             (dim {})",
+                            param.len()
+                        );
+                        param[lo..hi].copy_from_slice(values);
+                    }
+                }
+            }
+            have[s] = version;
+        }
+        if done {
+            break 'session;
+        }
+
+        // ---- solve ----
+        pick_blocks(&mut rng, n, batch, &mut blocks);
+        'solve: for (slot, &block) in slots.iter_mut().zip(blocks.iter()) {
+            if let Some(period) = heartbeat {
+                for s in 0..s_count {
+                    if last_tx[s].elapsed() >= period {
+                        match wire::write_frame(
+                            &mut streams[s],
+                            &Msg::Heartbeat,
+                            &mut ebuf,
+                        ) {
+                            Ok(nb) => {
+                                summary.tx_bytes += nb as u64;
+                                last_tx[s] = Instant::now();
+                            }
+                            Err(_) => {
+                                done = true;
+                                break 'solve;
+                            }
+                        }
+                    }
+                }
+            }
+            problem.oracle_into(&param, block, &mut oscratch, slot);
+            summary.oracle_calls += 1;
+        }
+        if done {
+            // The round was abandoned mid-solve: skip the push (the
+            // serve side requeues anything outstanding) and wind down.
+            break 'session;
+        }
+
+        // ---- push: route each payload to its block's owner ----
+        for (slot, &block) in slots.drain(..).zip(blocks.iter()) {
+            groups[plan.owner_of(block)].push(slot);
+        }
+        for s in 0..s_count {
+            let msg = Msg::Update {
+                k_read: have[s],
+                worker: hellos[s].worker_id,
+                oracles: std::mem::take(&mut groups[s]),
+            };
+            let sent = wire::write_frame(&mut streams[s], &msg, &mut ebuf);
+            // Recover the payload containers whether or not the send
+            // landed — their buffers are reused every round.
+            if let Msg::Update { oracles, .. } = msg {
+                slots.extend(oracles);
+            }
+            match sent {
+                Ok(nb) => {
+                    summary.tx_bytes += nb as u64;
+                    last_tx[s] = Instant::now();
+                }
+                Err(_) => done = true,
+            }
+        }
+        summary.rounds += 1;
+    }
+
+    // Wind-down. On a clean end (some shard said Shutdown or closed at a
+    // frame boundary) the plane is stopping: finish the conversation with
+    // every other shard — each owes at most one snapshot answer and sends
+    // its own Shutdown within its next loop turn — so no serve loop sees
+    // a mid-protocol EOF and books a phantom worker death. On a transport
+    // failure the session really is lost: drop everything at once and let
+    // the resilient wrapper decide whether to rejoin.
+    if clean {
+        for stream in streams.iter_mut() {
+            loop {
+                match wire::read_frame(stream) {
+                    Ok(Some((Msg::Shutdown, nb))) => {
+                        rx_bytes += nb as u64;
+                        break;
+                    }
+                    Ok(Some((_, nb))) => rx_bytes += nb as u64,
+                    Ok(None) | Err(_) => break,
+                }
+            }
+        }
+    }
+    summary.clean = clean;
+    summary.rx_bytes = rx_bytes;
+    Ok(summary)
 }
 
 /// Monomorphize [`solve_loop`] over the instance's problem type.
@@ -291,8 +674,7 @@ fn solve_loop<P: Problem, S: Read + Write>(
         anyhow!("unknown payload mode tag {}", hello.payload_mode)
     })?;
     let pkind = mode.resolve(problem.preferred_payload());
-    let mut rng =
-        Pcg64::new(hello.seed, worker_rng_stream(hello.worker_id));
+    let mut rng = Pcg64::new(hello.seed, rng_stream_for(hello.worker_id));
     let mut param: Vec<f32> = Vec::new();
     let mut have: u64 = u64::MAX; // nothing yet -> full snapshot
     let mut blocks: Vec<usize> = Vec::new();

@@ -584,9 +584,9 @@ impl RunSpec {
     /// `queue_factor`, `staleness_rule`, `collision_overwrite`,
     /// `work_multiplier`, `delay`, `delay_history`, `drop_rule`, and the
     /// net-transport fleet knobs `accept_timeout_secs`, `liveness_ms`,
-    /// `chaos` (parsed and validated by the serve role —
-    /// `crate::net::NetOptions` — but scoped here so a typo'd mode fails
-    /// fast).
+    /// `chaos`, `shards`, `shard_id` (parsed and validated by the serve
+    /// role — `crate::net::NetOptions` — but scoped here so a typo'd mode
+    /// fails fast).
     pub fn from_config(cfg: &Config) -> Result<Self> {
         let mode = cfg.get_or("run.mode", "seq");
         let payload_text = cfg.get_or("run.payload", "auto");
@@ -681,6 +681,8 @@ impl RunSpec {
             ("run.accept_timeout_secs", &["async"]),
             ("run.liveness_ms", &["async"]),
             ("run.chaos", &["async"]),
+            ("run.shards", &["async"]),
+            ("run.shard_id", &["async"]),
         ];
         let mode_name = engine.name();
         for (key, modes) in SCOPED_KEYS {

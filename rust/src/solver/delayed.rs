@@ -52,7 +52,7 @@ pub fn solve_observed<P: Problem>(
 ) -> SolveResult {
     let n = problem.num_blocks();
     let tau = opts.tau.clamp(1, n);
-    let mut rng = Pcg64::new(opts.seed, 2);
+    let mut rng = Pcg64::new(opts.seed, crate::net::rng_stream_for(0));
     let mut param = problem.init_param();
     let mut state = problem.init_server();
     let mut mon = Monitor::new(problem, opts, obs);

@@ -526,6 +526,99 @@ fn bind_rejects_bad_specs_synchronously() {
     .is_err());
 }
 
+#[test]
+fn loopback_one_shard_knob_stays_bit_identical() {
+    // `run.shards = 1` must be the historical v2 server, bit for bit:
+    // the degenerate plan takes the single-loop path, so the exact pins
+    // the unsharded loopback satisfies must hold with the knob set.
+    let mut cfg = gfl_cfg();
+    cfg.set("run.shards", "1");
+    assert_loopback_matches_delayed("gfl", &cfg, 8.0, PayloadMode::Auto);
+}
+
+#[test]
+fn loopback_two_shards_one_worker_matches_delayed_within_tolerance() {
+    // The sharded plane at one worker: each round the worker fans its
+    // snapshot pull to both shards, solves globally sampled blocks, and
+    // routes every update to its block's owner. Per shard that is
+    // lockstep — nothing is ever stale — but the block stream splits
+    // across two independent apply clocks, so the equivalence to the
+    // sequential delayed engine is tolerance-bounded, not bit-exact.
+    let epochs = 120.0;
+    let mut cfg = gfl_cfg();
+    cfg.set("run.shards", "2");
+    let spec = shared_knobs(RunSpec::new(Engine::asynchronous(1)), epochs);
+    let net = solve_loopback(spec, "gfl", &cfg, "127.0.0.1:0")
+        .unwrap_or_else(|e| panic!("2-shard loopback failed: {e:#}"));
+
+    let instance = ProblemInstance::from_config("gfl", &gfl_cfg()).unwrap();
+    let ref_spec =
+        shared_knobs(RunSpec::new(Engine::delayed(DelayModel::None)), epochs);
+    let reference = Runner::new(ref_spec).unwrap().solve(&instance).unwrap();
+
+    // Deterministic aggregated telemetry: the lockstep worker is never
+    // stale on either shard, every oracle the plane counted was
+    // applied, and the global-stop rendezvous ends the run without
+    // booking phantom worker deaths.
+    assert_eq!(net.counters.workers_lost, 0, "{:?}", net.counters);
+    assert_eq!(net.counters.dropped, 0, "{:?}", net.counters);
+    assert_eq!(net.counters.delay_sum, 0, "{:?}", net.counters);
+    assert_eq!(
+        net.counters.updates_applied, net.counters.oracle_calls,
+        "{:?}",
+        net.counters
+    );
+    // The per-shard epoch budgets split the spec's global budget; the
+    // first shard to spend its half stops the plane, so the aggregate
+    // lands between half of the sequential budget and all of it (plus
+    // a turn of in-flight slack).
+    let budget = reference.counters.oracle_calls;
+    assert!(
+        net.counters.oracle_calls > budget / 2
+            && net.counters.oracle_calls <= budget + 8,
+        "aggregated oracle calls {} vs sequential budget {budget}",
+        net.counters.oracle_calls
+    );
+    assert!(net.counters.snapshot_reads > 0, "{:?}", net.counters);
+    assert!(net.counters.wire_rx_bytes > 0 && net.counters.wire_tx_bytes > 0);
+    // The rendezvous evaluates the assembled iterate exactly (final
+    // appended sample); both solves are deep into convergence by now,
+    // so the objectives agree to a loose tolerance.
+    let last = net.last().unwrap();
+    let ref_obj = reference.trace.last().unwrap().objective;
+    assert!(last.gap.is_finite() && last.gap >= -1e-6, "gap {}", last.gap);
+    assert!(
+        (last.objective - ref_obj).abs() <= 0.1 * ref_obj.abs().max(1.0),
+        "2-shard objective {} vs sequential {}",
+        last.objective,
+        ref_obj
+    );
+}
+
+#[test]
+fn loopback_two_shards_two_workers_solve_sparse_qp() {
+    // Two shards x two workers over the sparse wire path: updates are
+    // owner-routed, snapshot pulls fan out under the per-shard version
+    // vector, and the run still ends in an orderly global shutdown.
+    let mut cfg = qp_cfg();
+    cfg.set("run.shards", "2");
+    let spec = RunSpec::new(Engine::asynchronous(2))
+        .tau(2)
+        .sample_every(8)
+        .max_epochs(6.0)
+        .max_secs(30.0)
+        .seed(5)
+        .payload(PayloadMode::Sparse);
+    let net = solve_loopback(spec, "qp", &cfg, "127.0.0.1:0")
+        .unwrap_or_else(|e| panic!("sharded qp loopback failed: {e:#}"));
+    assert!(net.counters.updates_applied > 0);
+    assert_eq!(net.counters.workers_lost, 0, "{:?}", net.counters);
+    // Sparse QP oracles stay 1-hot when routed across shards.
+    assert_eq!(net.counters.payload_nnz, net.counters.oracle_calls);
+    assert!(net.counters.wire_rx_bytes > 0 && net.counters.wire_tx_bytes > 0);
+    assert!(net.last().unwrap().objective.is_finite());
+}
+
 // ---------------------------------------------------------------------
 // Codec round-trip property tests
 // ---------------------------------------------------------------------

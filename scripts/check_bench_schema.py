@@ -33,6 +33,8 @@ KNOWN_ROW_UNITS = {
     "bytes_per_update",
     "bytes_per_oracle",
     "nnz_per_oracle",
+    "updates_per_sec",
+    "bytes_per_pull",
 }
 
 # Row-name pairs a *measured* report must contain: the dense-vs-sparse
@@ -46,6 +48,13 @@ REQUIRED_MEASURED_PREFIXES = [
     "ssvm apply fused batch=8 sparse",
     "net loopback wire bytes-per-update payload=dense",
     "net loopback wire bytes-per-update payload=sparse",
+    # The sharded parameter plane's scaling rows: update throughput at
+    # S = 1/2/4 and the snapshot fan-out cost at S = 1/2.
+    "net sharded updates-per-sec shards=1",
+    "net sharded updates-per-sec shards=2",
+    "net sharded updates-per-sec shards=4",
+    "snapshot fan-out bytes-per-pull shards=1",
+    "snapshot fan-out bytes-per-pull shards=2",
 ]
 
 
