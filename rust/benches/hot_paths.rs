@@ -466,6 +466,40 @@ fn main() {
     }
     println!();
 
+    // ---- wire v4: shipped update bytes across encoding modes ----
+    // The same loopback run with the sparse payload pinned and the
+    // `run.wire` knob swept: update-frame bytes as actually shipped
+    // (post-quantization, `shipped_payload_bytes`) per applied update.
+    // exact is the v3 byte-identical baseline; f16 halves the value
+    // words, q8 quarters them plus one scale word per payload
+    // (docs/WIRE.md §4.4).
+    println!();
+    for mode in ["exact", "f16", "q8"] {
+        let mut cfg = net_cfg.clone();
+        cfg.set("run.wire", mode);
+        let spec = RunSpec::new(Engine::asynchronous(2))
+            .tau(4)
+            .payload(PayloadMode::Sparse)
+            .sample_every(1 << 20)
+            .max_epochs(30.0)
+            .max_secs(10.0)
+            .seed(3);
+        let r = apbcfw::net::solve_loopback(
+            spec,
+            "multiclass",
+            &cfg,
+            "127.0.0.1:0",
+        )
+        .expect("wire-mode loopback bench run");
+        report.add_metric(
+            &format!("net loopback wire bytes-per-update wire={mode}"),
+            "bytes_per_update",
+            r.counters.shipped_payload_bytes as f64
+                / r.counters.updates_applied.max(1) as f64,
+        );
+    }
+    println!();
+
     // ---- sharded parameter plane: throughput + snapshot fan-out ----
     // Self-hosted loopback runs on a paper-shape GFL (64 blocks) with
     // the plane split into S shards: one serve loop per shard, workers

@@ -80,6 +80,7 @@ const SOLVE_FLAG_KEYS: &[(&str, &str)] = &[
     ("straggler", "run.straggler"),
     ("snapshot-mode", "run.snapshot_mode"),
     ("queue-factor", "run.queue_factor"),
+    ("wire", "run.wire"),
 ];
 
 /// Parse a timeout flag value: seconds, finite and strictly positive.
@@ -115,7 +116,7 @@ pub fn parse(args: &[String]) -> Result<Cli> {
                     | "workers" | "epochs" | "seed" | "straggler"
                     | "snapshot-mode" | "queue-factor" | "listen" | "connect"
                     | "connect-timeout" | "accept-timeout" | "shards"
-                    | "shard-id"
+                    | "shard-id" | "wire"
             );
             if takes_value {
                 let v = rest
@@ -332,6 +333,10 @@ USAGE:
       the handshake and route each update to its block's owner.
       --shard-id I hosts only shard I in this process (one serve
       process per shard; needs an explicit --listen base port).
+      --wire exact|f16|q8 picks the v4 wire encoding (sugar for
+      --set run.wire=...): exact (default) ships f32 bits unchanged;
+      f16/q8 quantize sparse update values and compress snapshot
+      bodies losslessly (docs/WIRE.md §4).
   apbcfw worker [--connect HOST:PORT] [--connect-timeout SECS]
       join a serve host as a network worker. retries the connect with
       jittered backoff for --connect-timeout seconds (default 10) so
@@ -416,6 +421,27 @@ mod tests {
         // CLI default budget applied.
         assert_eq!(spec.stop.max_epochs, 50.0);
         assert_eq!(spec.stop.max_secs, 300.0);
+    }
+
+    #[test]
+    fn wire_flag_lowers_to_run_wire_and_validates_in_spec() {
+        let cli = parse(&sv(&[
+            "serve", "qp", "--self-host", "--wire", "q8",
+        ]))
+        .unwrap();
+        assert_eq!(cli.config.get("run.wire"), Some("q8"));
+        // serve defaults run.mode=async, so the full lowering validates.
+        assert!(crate::run::RunSpec::from_config(&cli.config).is_ok());
+        // A typo'd value parses at the CLI (the flag is plain sugar) but
+        // fails the spec's strict validation.
+        let cli = parse(&sv(&[
+            "serve", "qp", "--self-host", "--wire", "bogus",
+        ]))
+        .unwrap();
+        let err = crate::run::RunSpec::from_config(&cli.config)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("run.wire"), "{err}");
     }
 
     #[test]

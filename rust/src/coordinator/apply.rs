@@ -154,9 +154,13 @@ impl<'a, P: Problem> ApplyCore<'a, P> {
     /// one verdict), then buffer or drop. Displaced and dropped
     /// containers go to `recycle`.
     pub fn ingest(&mut self, msg: UpdateMsg, recycle: &RecycleHook<'_>) {
-        // Payload telemetry: nnz + wire bytes of everything shipped
-        // worker -> server, counted at receipt (includes payloads later
-        // dropped or displaced — they crossed the transport either way).
+        // Payload telemetry: nnz + *logical* wire bytes of everything
+        // shipped worker -> server, counted at receipt (includes payloads
+        // later dropped or displaced — they crossed the transport either
+        // way). "Logical" means the exact-mode encoding cost regardless
+        // of `run.wire`; the serve role's readers count the actually
+        // shipped (possibly quantized) frame bytes separately in
+        // `shipped_payload_bytes`.
         let (mut nnz, mut bytes) = (0u64, 0u64);
         for o in &msg.oracles {
             nnz += o.s.nnz() as u64;

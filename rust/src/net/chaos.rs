@@ -15,20 +15,25 @@
 //! - **drop** — swallow an outbound `Update` frame whole (the oracle work
 //!   is lost in flight; the server simply never ingests it).
 //! - **reorder** — hold an outbound `Update` frame back (up to a bounded
-//!   buffer depth) and release it after a *later* update goes out, so
+//!   buffer depth) and release it after a *later* frame goes out, so
 //!   frames arrive out of send order — the delayed-update analogue of
-//!   network reordering. Frames still held when the session closes are
+//!   network reordering. Any subsequent write releases the buffer: a
+//!   later update flushes held frames *after* itself (true reordering),
+//!   while a control frame drains them *ahead* of itself, so a clean
+//!   shutdown never silently discards completed oracle work. Only frames
+//!   held at an abrupt close (socket error, injected disconnect) are
 //!   lost in flight, exactly like a drop.
 //! - **disconnect** — abruptly fail an outbound `Update` write, ending
 //!   the session mid-run; a resilient worker then reconnects with backoff
 //!   and rejoins the fleet under a fresh server-issued id.
 //!
 //! Injection is frame-atomic and applies only to `Update` frames: control
-//! messages (handshake, snapshot requests, heartbeats) pass through
-//! untouched, so chaos perturbs the optimization traffic without
-//! corrupting the framing. Received-direction delay (`rx-delay`) sleeps
-//! on the read path instead (per read call, i.e. roughly twice per
-//! frame: header then payload).
+//! messages (handshake, snapshot requests, heartbeats) are never delayed,
+//! dropped, or held themselves — though writing one first drains any
+//! reorder-held updates, preserving the invariant that a frame the worker
+//! believes it sent before a graceful close actually reached the wire.
+//! Received-direction delay (`rx-delay`) sleeps on the read path instead
+//! (per read call, i.e. roughly twice per frame: header then payload).
 //!
 //! With `run.chaos` unset (or `none`) the worker never constructs this
 //! wrapper at all — the no-chaos path is bit-identical to the plain
@@ -235,8 +240,9 @@ pub struct ChaosStream<S> {
     spec: ChaosSpec,
     rng: Pcg64,
     /// Update frames held back by the reorder op, oldest first. Released
-    /// (in held order) right after a later update frame is written;
-    /// whatever is still here when the stream drops is lost in flight.
+    /// (in held order) right *after* a later update frame is written, or
+    /// right *before* any control frame goes out; only frames still here
+    /// at an abrupt close are lost in flight.
     held: Vec<Vec<u8>>,
 }
 
@@ -293,9 +299,9 @@ impl<S: Write> Write for ChaosStream<S> {
             }
             if let Some((p, depth)) = self.spec.reorder {
                 if self.held.len() < depth && self.roll(p) {
-                    // Hold this frame back; it goes out only after a
-                    // later update (and is lost if none follows — the
-                    // close-with-frames-in-flight case).
+                    // Hold this frame back; the next write of any kind
+                    // releases it (lost only at an abrupt close — the
+                    // crash-with-frames-in-flight case).
                     self.held.push(buf.to_vec());
                     return Ok(buf.len());
                 }
@@ -312,6 +318,15 @@ impl<S: Write> Write for ChaosStream<S> {
                 self.inner.write_all(&frame)?;
             }
             return Ok(buf.len());
+        }
+        // Control frame: drain any reorder-held updates *ahead* of it.
+        // A worker's last writes before a graceful close are control
+        // frames (heartbeat, snapshot request); without this drain the
+        // hold buffer would silently discard completed oracle work that
+        // the worker believes it already sent — a loss the reorder op
+        // never advertised (drops are `drop:P`'s job).
+        for frame in std::mem::take(&mut self.held) {
+            self.inner.write_all(&frame)?;
         }
         self.inner.write_all(buf)?;
         Ok(buf.len())
@@ -419,8 +434,9 @@ mod tests {
             )
             .unwrap();
         }
-        // Control frames pass straight through, never entering the hold
-        // buffer or releasing it.
+        // Control frames pass straight through (the hold buffer is
+        // already empty here; the drain-on-control case has its own
+        // test below).
         wire::write_frame(&mut s, &Msg::Heartbeat, &mut scratch).unwrap();
         let mut wire_order = Vec::new();
         let mut cursor = s.inner.as_slice();
@@ -433,6 +449,48 @@ mod tests {
         }
         assert_eq!(wire_order, vec![3, 1, 2, 99]);
         assert!(s.held.is_empty(), "release must empty the hold buffer");
+    }
+
+    #[test]
+    fn control_frames_drain_held_updates_ahead_of_themselves() {
+        // P=1, depth=4: U1 and U2 are both held. A heartbeat (any
+        // non-update frame) must push them onto the wire *before*
+        // itself — a graceful close never strands completed work in the
+        // hold buffer.
+        let spec = ChaosSpec::parse("reorder:1.0:4").unwrap();
+        let mut s =
+            ChaosStream::new(Vec::<u8>::new(), spec, Pcg64::seeded(7));
+        let mut scratch = Vec::new();
+        for k in 1..=2u64 {
+            wire::write_frame(
+                &mut s,
+                &Msg::Update {
+                    k_read: k,
+                    worker: 0,
+                    oracles: vec![],
+                },
+                &mut scratch,
+            )
+            .unwrap();
+        }
+        assert!(s.inner.is_empty(), "both updates must be held");
+        assert_eq!(s.held.len(), 2);
+        wire::write_frame(&mut s, &Msg::Heartbeat, &mut scratch).unwrap();
+        assert!(s.held.is_empty(), "control write must drain the buffer");
+        let mut wire_order = Vec::new();
+        let mut cursor = s.inner.as_slice();
+        while let Some((msg, _)) = wire::read_frame(&mut cursor).unwrap() {
+            match msg {
+                Msg::Update { k_read, .. } => wire_order.push(k_read),
+                Msg::Heartbeat => wire_order.push(99),
+                other => panic!("unexpected frame {other:?}"),
+            }
+        }
+        assert_eq!(
+            wire_order,
+            vec![1, 2, 99],
+            "held updates must precede the control frame"
+        );
     }
 
     #[test]

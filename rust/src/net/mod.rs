@@ -46,6 +46,7 @@ pub mod worker;
 pub use chaos::{ChaosSpec, ChaosStream};
 pub use server::{serve, solve_loopback, BoundServer};
 pub use shard::{ShardInfo, ShardPlan};
+pub use wire::WireMode;
 pub use worker::{run_resilient, run_with_retry, WorkerSummary};
 
 use crate::problems::PayloadMode;
@@ -81,6 +82,12 @@ pub struct NetOptions {
     /// — the multi-process deployment, one `apbcfw serve --shard-id I`
     /// per shard. Unset hosts every shard in-process.
     pub shard_id: Option<usize>,
+    /// `run.wire` (default `exact`): the v4 wire-encoding mode for
+    /// update payload values and snapshot bodies. The knob rides to
+    /// workers in the Hello config entries, so both ends resolve the
+    /// same mode from the same source; `exact` keeps every body
+    /// byte-identical to protocol v3.
+    pub wire: WireMode,
 }
 
 impl Default for NetOptions {
@@ -91,13 +98,14 @@ impl Default for NetOptions {
             chaos: ChaosSpec::default(),
             shards: 1,
             shard_id: None,
+            wire: WireMode::Exact,
         }
     }
 }
 
 impl NetOptions {
     /// Parse and strictly validate the `run.{accept_timeout_secs,
-    /// liveness_ms, chaos, shards, shard_id}` knobs.
+    /// liveness_ms, chaos, shards, shard_id, wire}` knobs.
     pub fn from_config(cfg: &Config) -> Result<Self> {
         let accept_timeout = match cfg.get("run.accept_timeout_secs") {
             None => Duration::from_secs(30),
@@ -157,12 +165,14 @@ impl NetOptions {
                 Some(id)
             }
         };
+        let wire = WireMode::parse(&cfg.get_or("run.wire", "exact"))?;
         Ok(Self {
             accept_timeout,
             liveness,
             chaos,
             shards,
             shard_id,
+            wire,
         })
     }
 
@@ -273,6 +283,18 @@ mod tests {
         assert_eq!(opts.shards, 3);
         assert_eq!(opts.shard_id, Some(2));
 
+        // run.wire defaults to exact and parses the v4 vocabulary.
+        assert_eq!(opts.wire, WireMode::Exact);
+        for (text, mode) in [
+            ("exact", WireMode::Exact),
+            ("f16", WireMode::F16),
+            ("q8", WireMode::Q8),
+        ] {
+            let mut cfg = Config::new();
+            cfg.set("run.wire", text);
+            assert_eq!(NetOptions::from_config(&cfg).unwrap().wire, mode);
+        }
+
         // liveness_ms = 0 means disabled, not a zero timeout.
         let mut cfg = Config::new();
         cfg.set("run.liveness_ms", "0");
@@ -293,6 +315,8 @@ mod tests {
             ("run.shards", "-2"),
             ("run.shards", "two"),
             ("run.shard_id", "0"), // requires run.shards > 1
+            ("run.wire", "bogus"),
+            ("run.wire", "F16"),
         ] {
             let mut cfg = Config::new();
             cfg.set(key, bad);

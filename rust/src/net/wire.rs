@@ -12,6 +12,14 @@
 //! back into the same variant, so payload sparsity survives the wire
 //! end-to-end — the decoder never densifies (pinned by the codec tests in
 //! `rust/tests/net_transport.rs`).
+//!
+//! v4 adds the communication-efficient encodings behind the `run.wire`
+//! knob ([`WireMode`]): sparse payload *values* may ship quantized (f16
+//! half precision or int8 with a per-payload max-abs scale) and snapshot
+//! bodies may ship with compressed-but-lossless layouts (varint delta
+//! headers, zero-run-length full bodies). The mode is an encoder-side
+//! choice only — every decoder accepts every encoding, and
+//! [`WireMode::Exact`] (the default) emits bodies byte-identical to v3.
 
 use super::shard::{ShardInfo, ShardPlan};
 use crate::problems::{BlockOracle, OraclePayload};
@@ -26,9 +34,11 @@ pub const MAGIC: u32 = u32::from_le_bytes(*b"apfw");
 /// frame whose version it does not implement. v2 added the elastic-fleet
 /// messages ([`Msg::Join`], [`Msg::Heartbeat`]); v3 added the sharded
 /// parameter plane ([`Hello::shard`] + [`Hello::plan`] in the
-/// handshake). Older peers are rejected at the first frame (see
-/// `docs/WIRE.md` §8 for the compatibility rules).
-pub const VERSION: u16 = 3;
+/// handshake); v4 added the communication-efficient encodings (quantized
+/// sparse payload values, compressed snapshot bodies — the `run.wire`
+/// knob). Older peers are rejected at the first frame (see `docs/WIRE.md`
+/// §8 for the compatibility rules).
+pub const VERSION: u16 = 4;
 
 /// Fixed frame header size in bytes: magic (4) + version (2) + type (1) +
 /// reserved (1) + payload length (4).
@@ -37,6 +47,54 @@ pub const HEADER_BYTES: usize = 12;
 /// Upper bound on a frame's payload length (guards against reading a
 /// corrupt or hostile length prefix as an allocation size).
 pub const MAX_FRAME_BYTES: u32 = 1 << 28;
+
+/// The `run.wire` knob (v4): how update-payload values and snapshot
+/// bodies are encoded on the wire.
+///
+/// `Exact` (the pinned default) ships every f32 bit-for-bit, with frame
+/// bodies byte-identical to protocol v3. `F16` and `Q8` quantize
+/// [`OraclePayload::Sparse`] *values* (half precision / int8 with a
+/// per-payload max-abs scale) and switch snapshot bodies to the
+/// compressed-but-lossless layouts (varint delta headers, zero-RLE full
+/// bodies) — snapshots are what workers compute oracles on, so only the
+/// update values are lossy. Dense payloads and control frames are
+/// identical in every mode. The mode is an encoder-side choice: every v4
+/// decoder accepts every encoding, so serve and worker only need to
+/// *agree* for telemetry to be comparable (the knob ships to workers in
+/// the Hello config entries).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum WireMode {
+    /// Exact f32 values; bodies byte-identical to protocol v3.
+    #[default]
+    Exact,
+    /// Sparse payload values as IEEE 754 half precision (2 bytes each).
+    F16,
+    /// Sparse payload values as int8 under a per-payload max-abs scale.
+    Q8,
+}
+
+impl WireMode {
+    /// Parse the `run.wire` knob text.
+    pub fn parse(text: &str) -> Result<Self> {
+        match text {
+            "exact" => Ok(WireMode::Exact),
+            "f16" => Ok(WireMode::F16),
+            "q8" => Ok(WireMode::Q8),
+            other => {
+                bail!("run.wire: expected exact | f16 | q8, got {other:?}")
+            }
+        }
+    }
+
+    /// The knob text (the inverse of [`WireMode::parse`]).
+    pub fn name(self) -> &'static str {
+        match self {
+            WireMode::Exact => "exact",
+            WireMode::F16 => "f16",
+            WireMode::Q8 => "q8",
+        }
+    }
+}
 
 /// Message type tags (the `docs/WIRE.md` message table).
 mod tag {
@@ -201,6 +259,89 @@ fn put_str(buf: &mut Vec<u8>, s: &str) {
     buf.extend_from_slice(s.as_bytes());
 }
 
+/// LEB128 varint (u32: 1–5 bytes). The compressed snapshot layouts (v4)
+/// use these for counts, run starts, and run lengths, which are small in
+/// practice — a dirty run rarely starts megabytes after the previous one.
+fn put_varint(buf: &mut Vec<u8>, mut v: u32) {
+    loop {
+        let b = (v & 0x7f) as u8;
+        v >>= 7;
+        if v == 0 {
+            buf.push(b);
+            return;
+        }
+        buf.push(b | 0x80);
+    }
+}
+
+// --- f16 conversion (v4 quantized payloads) -----------------------------
+//
+// Hand-rolled IEEE 754 binary16 <-> binary32 bit conversion (the vendor
+// set has no `half` crate). Round-to-nearest on narrowing, overflow to
+// infinity, subnormals handled on both sides; every finite f16 converts
+// back exactly.
+
+/// Narrow an f32 to f16 bits (round-to-nearest, overflow to infinity).
+fn f32_to_f16(v: f32) -> u16 {
+    let bits = v.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let mant = bits & 0x007f_ffff;
+    if exp == 0xff {
+        // Inf / NaN: keep the class (force a non-zero NaN mantissa so a
+        // payload NaN cannot narrow into an infinity).
+        return sign | 0x7c00 | if mant != 0 { 0x0200 } else { 0 };
+    }
+    let e = exp - 127 + 15; // re-bias 127 -> 15
+    if e >= 0x1f {
+        return sign | 0x7c00; // overflow -> signed infinity
+    }
+    if e <= 0 {
+        if e < -10 {
+            return sign; // underflow -> signed zero
+        }
+        // Subnormal: shift the implicit-1 mantissa into place, rounding
+        // on the last dropped bit. A carry out of the mantissa promotes
+        // to the smallest normal, which is exactly what rounding wants.
+        let m = mant | 0x0080_0000;
+        let shift = (14 - e) as u32;
+        let half = m >> shift;
+        let round = (m >> (shift - 1)) & 1;
+        return sign | (half + round) as u16;
+    }
+    // Normal: drop 13 mantissa bits, rounding on the highest dropped
+    // one. A carry ripples into the exponent (up to infinity) correctly.
+    let half = ((e as u32) << 10) | (mant >> 13);
+    let round = (mant >> 12) & 1;
+    sign | (half + round) as u16
+}
+
+/// Widen f16 bits back to f32 (exact for every finite f16).
+fn f16_to_f32(bits: u16) -> f32 {
+    let sign = ((bits & 0x8000) as u32) << 16;
+    let exp = ((bits >> 10) & 0x1f) as u32;
+    let mant = (bits & 0x03ff) as u32;
+    let out = if exp == 0x1f {
+        sign | 0x7f80_0000 | (mant << 13) // Inf / NaN
+    } else if exp == 0 {
+        if mant == 0 {
+            sign // signed zero
+        } else {
+            // Subnormal: renormalize into f32's wider exponent range.
+            let mut e = -1i32;
+            let mut m = mant;
+            while m & 0x0400 == 0 {
+                m <<= 1;
+                e += 1;
+            }
+            sign | (((127 - 15 - e) as u32) << 23) | ((m & 0x03ff) << 13)
+        }
+    } else {
+        sign | ((exp + 127 - 15) << 23) | (mant << 13)
+    };
+    f32::from_bits(out)
+}
+
 // --- primitive readers (bounds-checked cursor) -------------------------
 
 /// Bounds-checked decode cursor over one frame payload. Every read is
@@ -216,9 +357,20 @@ impl<'a> Dec<'a> {
         Self { buf, pos: 0 }
     }
 
+    /// Bytes left between the cursor and the end of the payload.
+    /// Saturating so every bounds comparison in this impl is safe even
+    /// if an internal bug ever ran the cursor past the end — the decoder
+    /// must degrade to a clean `Err`, never to arithmetic overflow.
+    fn remaining(&self) -> usize {
+        self.buf.len().saturating_sub(self.pos)
+    }
+
     fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        // Checked as `n <= remaining` rather than `pos + n <= len`: the
+        // latter can overflow `usize` on a hostile `n` and panic in a
+        // debug build before the bound is ever tested.
         ensure!(
-            self.pos + n <= self.buf.len(),
+            n <= self.remaining(),
             "truncated frame payload: wanted {} bytes at offset {}, have {}",
             n,
             self.pos,
@@ -241,21 +393,47 @@ impl<'a> Dec<'a> {
         Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
     }
 
+    fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
     fn f64(&mut self) -> Result<f64> {
         Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
     }
 
+    /// LEB128 varint (u32). Rejects encodings longer than 5 bytes and
+    /// high bits that overflow 32, so a corrupt stream cannot loop or
+    /// silently wrap.
+    fn varint(&mut self) -> Result<u32> {
+        let mut v: u32 = 0;
+        for shift in [0u32, 7, 14, 21, 28] {
+            let b = self.u8()?;
+            let low = u32::from(b & 0x7f);
+            ensure!(
+                shift < 28 || low <= 0x0f,
+                "varint overflows u32 at offset {}",
+                self.pos
+            );
+            v |= low << shift;
+            if b & 0x80 == 0 {
+                return Ok(v);
+            }
+        }
+        bail!("varint longer than 5 bytes at offset {}", self.pos)
+    }
+
     /// A `u32` used as an element count: additionally bounded by the
     /// remaining payload so a corrupt count cannot drive a huge
-    /// allocation before the truncation check fires.
+    /// allocation before the truncation check fires. All arithmetic is
+    /// saturating — a hostile count must fail the bound, not overflow it.
     fn count(&mut self, elem_bytes: usize) -> Result<usize> {
         let n = self.u32()? as usize;
         ensure!(
-            n.saturating_mul(elem_bytes) <= self.buf.len() - self.pos,
+            n.saturating_mul(elem_bytes) <= self.remaining(),
             "frame count {} x {} bytes exceeds the remaining payload ({})",
             n,
             elem_bytes,
-            self.buf.len() - self.pos
+            self.remaining()
         );
         Ok(n)
     }
@@ -292,28 +470,91 @@ impl<'a> Dec<'a> {
 /// Payload representation tags on the wire.
 const PAYLOAD_DENSE: u8 = 0;
 const PAYLOAD_SPARSE: u8 = 1;
+/// v4: sparse values as IEEE 754 half precision.
+const PAYLOAD_SPARSE_F16: u8 = 2;
+/// v4: sparse values as int8 under a per-payload max-abs scale.
+const PAYLOAD_SPARSE_Q8: u8 = 3;
 
-/// Encode an [`OraclePayload`] body. Dense: `0 | dim | f32[dim]`. Sparse:
-/// `1 | dim | nnz | u32 idx[nnz] | f32 val[nnz]` — the sparse triple ships
-/// as-is, never densified.
-fn put_payload(buf: &mut Vec<u8>, s: &OraclePayload) {
+/// Encode an [`OraclePayload`] body under `mode`. Dense:
+/// `0 | dim | f32[dim]` — always exact, in every mode (the quantization
+/// targets are the sparse LMO-vertex values; GFL's dense fallback stays
+/// lossless). Sparse exact: `1 | dim | nnz | u32 idx[nnz] | f32 val[nnz]`.
+/// Sparse f16 (v4): `2 | dim | nnz | u32 idx[nnz] | nval | u16 f16[nval]`.
+/// Sparse q8 (v4): `3 | dim | nnz | u32 idx[nnz] | f32 scale | nval |
+/// i8 q[nval]` with `val = q * scale / 127` and `scale` the payload's
+/// max-abs value (an all-zero payload ships scale 0). The sparse triple
+/// ships as-is in every mode, never densified.
+fn put_payload(buf: &mut Vec<u8>, s: &OraclePayload, mode: WireMode) {
     match s {
         OraclePayload::Dense(v) => {
             put_u8(buf, PAYLOAD_DENSE);
             put_f32s(buf, v);
         }
-        OraclePayload::Sparse { idx, val, dim } => {
-            put_u8(buf, PAYLOAD_SPARSE);
-            put_u32(buf, *dim);
-            put_u32s(buf, idx);
-            put_f32s(buf, val);
-        }
+        OraclePayload::Sparse { idx, val, dim } => match mode {
+            WireMode::Exact => {
+                put_u8(buf, PAYLOAD_SPARSE);
+                put_u32(buf, *dim);
+                put_u32s(buf, idx);
+                put_f32s(buf, val);
+            }
+            WireMode::F16 => {
+                put_u8(buf, PAYLOAD_SPARSE_F16);
+                put_u32(buf, *dim);
+                put_u32s(buf, idx);
+                put_u32(buf, val.len() as u32);
+                for v in val {
+                    buf.extend_from_slice(&f32_to_f16(*v).to_le_bytes());
+                }
+            }
+            WireMode::Q8 => {
+                put_u8(buf, PAYLOAD_SPARSE_Q8);
+                put_u32(buf, *dim);
+                put_u32s(buf, idx);
+                let scale =
+                    val.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+                buf.extend_from_slice(&scale.to_le_bytes());
+                put_u32(buf, val.len() as u32);
+                for v in val {
+                    // Saturating float->int cast: NaN (including the
+                    // scale-0 all-zero payload's 0/0) lands on 0, out of
+                    // range clamps to the i8 bounds.
+                    let q = (v / scale * 127.0).round() as i8;
+                    buf.push(q as u8);
+                }
+            }
+        },
     }
 }
 
-/// Decode an [`OraclePayload`], preserving the wire representation and
-/// validating the sparse invariants (parallel arrays; strictly ascending,
+/// Validate the sparse invariants (parallel arrays; strictly ascending,
 /// in-bounds indices) so a corrupt frame cannot poison the apply path.
+fn sparse_checked(
+    idx: Vec<u32>,
+    val: Vec<f32>,
+    dim: u32,
+) -> Result<OraclePayload> {
+    ensure!(
+        idx.len() == val.len(),
+        "sparse payload idx/val length mismatch ({} vs {})",
+        idx.len(),
+        val.len()
+    );
+    ensure!(
+        idx.windows(2).all(|w| w[0] < w[1]),
+        "sparse payload indices are not strictly ascending"
+    );
+    ensure!(
+        idx.last().map_or(true, |&i| i < dim),
+        "sparse payload index out of bounds (dim {dim})"
+    );
+    Ok(OraclePayload::Sparse { idx, val, dim })
+}
+
+/// Decode an [`OraclePayload`], preserving the wire representation and
+/// dequantizing f16/q8 values back to f32 in place — downstream of this
+/// function ([`crate::coordinator::apply::ApplyCore`] included) only ever
+/// sees the two in-memory variants, whatever the sender's [`WireMode`].
+/// Every representation tag is accepted regardless of the local mode.
 fn get_payload(d: &mut Dec) -> Result<OraclePayload> {
     match d.u8()? {
         PAYLOAD_DENSE => Ok(OraclePayload::Dense(d.f32s()?)),
@@ -321,29 +562,97 @@ fn get_payload(d: &mut Dec) -> Result<OraclePayload> {
             let dim = d.u32()?;
             let idx = d.u32s()?;
             let val = d.f32s()?;
-            ensure!(
-                idx.len() == val.len(),
-                "sparse payload idx/val length mismatch ({} vs {})",
-                idx.len(),
-                val.len()
-            );
-            ensure!(
-                idx.windows(2).all(|w| w[0] < w[1]),
-                "sparse payload indices are not strictly ascending"
-            );
-            ensure!(
-                idx.last().map_or(true, |&i| i < dim),
-                "sparse payload index out of bounds (dim {dim})"
-            );
-            Ok(OraclePayload::Sparse { idx, val, dim })
+            sparse_checked(idx, val, dim)
+        }
+        PAYLOAD_SPARSE_F16 => {
+            let dim = d.u32()?;
+            let idx = d.u32s()?;
+            let n = d.count(2)?;
+            let raw = d.take(2 * n)?;
+            let val = raw
+                .chunks_exact(2)
+                .map(|c| {
+                    f16_to_f32(u16::from_le_bytes(c.try_into().unwrap()))
+                })
+                .collect();
+            sparse_checked(idx, val, dim)
+        }
+        PAYLOAD_SPARSE_Q8 => {
+            let dim = d.u32()?;
+            let idx = d.u32s()?;
+            let scale = d.f32()?;
+            let n = d.count(1)?;
+            let raw = d.take(n)?;
+            let val = raw
+                .iter()
+                .map(|&b| (b as i8) as f32 * scale / 127.0)
+                .collect();
+            sparse_checked(idx, val, dim)
         }
         other => bail!("unknown payload representation tag {other}"),
     }
 }
 
+// --- snapshot body encoding (v4 compressed layouts) ---------------------
+
+/// Snapshot body kind tags (`docs/WIRE.md` §4.3).
+const SNAP_FULL: u8 = 0;
+const SNAP_DELTA: u8 = 1;
+/// v4: delta with varint headers (delta-of-start + run length).
+const SNAP_DELTA_V: u8 = 2;
+/// v4: full body under zero-run-length compression.
+const SNAP_FULL_RLE: u8 = 3;
+
+/// Kind 2: the delta body with a compressed header — run count, then per
+/// run the start as a (wrapping) delta from the previous run's start and
+/// the run length, all varints; then every run's raw f32 values back to
+/// back. The dirty-range log emits runs ascending with small gaps, so
+/// the 8-byte-per-run exact header shrinks to ~2 bytes — while the
+/// values themselves stay exact: snapshots are what workers compute
+/// oracles on, so only the header is squeezed, never the parameter.
+fn put_delta_varint(buf: &mut Vec<u8>, runs: &[(u32, Vec<f32>)]) {
+    put_u8(buf, SNAP_DELTA_V);
+    put_varint(buf, runs.len() as u32);
+    let mut prev = 0u32;
+    for (off, vals) in runs {
+        put_varint(buf, off.wrapping_sub(prev));
+        put_varint(buf, vals.len() as u32);
+        prev = *off;
+    }
+    for (_, vals) in runs {
+        for v in vals {
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+}
+
+/// Kind 3: the full-snapshot fallback under zero-run-length compression
+/// — the vector length, then alternating (zero run, literal run) varint
+/// pairs, each literal run followed by its raw f32 values. Only the bit
+/// pattern of +0.0 joins a zero run (−0.0 ships as a literal), so the
+/// decode is bit-exact. FW iterates are convex combinations of a few
+/// vertices early in a run, so resync full bodies are mostly zeros and
+/// stop dominating `wire_tx_bytes`.
+fn put_full_rle(buf: &mut Vec<u8>, v: &[f32]) {
+    put_u8(buf, SNAP_FULL_RLE);
+    put_varint(buf, v.len() as u32);
+    let mut i = 0usize;
+    while i < v.len() {
+        let z = v[i..].iter().take_while(|x| x.to_bits() == 0).count();
+        i += z;
+        let l = v[i..].iter().take_while(|x| x.to_bits() != 0).count();
+        put_varint(buf, z as u32);
+        put_varint(buf, l as u32);
+        for x in &v[i..i + l] {
+            buf.extend_from_slice(&x.to_le_bytes());
+        }
+        i += l;
+    }
+}
+
 // --- message encoding ---------------------------------------------------
 
-fn put_body(buf: &mut Vec<u8>, msg: &Msg) {
+fn put_body(buf: &mut Vec<u8>, msg: &Msg, mode: WireMode) {
     match msg {
         Msg::Hello(h) => {
             put_u32(buf, h.worker_id);
@@ -374,18 +683,22 @@ fn put_body(buf: &mut Vec<u8>, msg: &Msg) {
         }
         Msg::Snapshot { version, body } => {
             put_u64(buf, *version);
-            match body {
-                SnapshotBody::Full(v) => {
-                    put_u8(buf, 0);
+            match (body, mode) {
+                (SnapshotBody::Full(v), WireMode::Exact) => {
+                    put_u8(buf, SNAP_FULL);
                     put_f32s(buf, v);
                 }
-                SnapshotBody::Delta(runs) => {
-                    put_u8(buf, 1);
+                (SnapshotBody::Full(v), _) => put_full_rle(buf, v),
+                (SnapshotBody::Delta(runs), WireMode::Exact) => {
+                    put_u8(buf, SNAP_DELTA);
                     put_u32(buf, runs.len() as u32);
                     for (off, vals) in runs {
                         put_u32(buf, *off);
                         put_f32s(buf, vals);
                     }
+                }
+                (SnapshotBody::Delta(runs), _) => {
+                    put_delta_varint(buf, runs)
                 }
             }
         }
@@ -400,7 +713,7 @@ fn put_body(buf: &mut Vec<u8>, msg: &Msg) {
             for o in oracles {
                 put_u32(buf, o.block as u32);
                 put_f64(buf, o.ls);
-                put_payload(buf, &o.s);
+                put_payload(buf, &o.s, mode);
             }
         }
         Msg::Shutdown => {}
@@ -467,9 +780,12 @@ fn get_body(tag_byte: u8, payload: &[u8]) -> Result<Msg> {
         },
         tag::SNAPSHOT => {
             let version = d.u64()?;
+            // Kinds 2 and 3 (v4 compressed layouts) normalize back into
+            // the two in-memory bodies here, so the worker's splice code
+            // never sees the wire layout.
             let body = match d.u8()? {
-                0 => SnapshotBody::Full(d.f32s()?),
-                1 => {
+                SNAP_FULL => SnapshotBody::Full(d.f32s()?),
+                SNAP_DELTA => {
                     let nruns = d.count(8)?;
                     let mut runs = Vec::with_capacity(nruns);
                     for _ in 0..nruns {
@@ -477,6 +793,73 @@ fn get_body(tag_byte: u8, payload: &[u8]) -> Result<Msg> {
                         runs.push((off, d.f32s()?));
                     }
                     SnapshotBody::Delta(runs)
+                }
+                SNAP_DELTA_V => {
+                    let nruns = d.varint()? as usize;
+                    // Each run costs >= 2 header bytes: bound a hostile
+                    // count before allocating.
+                    ensure!(
+                        nruns.saturating_mul(2) <= d.remaining(),
+                        "snapshot delta run count {nruns} exceeds the \
+                         remaining payload"
+                    );
+                    let mut heads = Vec::with_capacity(nruns);
+                    let mut prev = 0u32;
+                    let mut total = 0usize;
+                    for _ in 0..nruns {
+                        let off = prev.wrapping_add(d.varint()?);
+                        let len = d.varint()? as usize;
+                        total = total.saturating_add(len);
+                        prev = off;
+                        heads.push((off, len));
+                    }
+                    ensure!(
+                        total.saturating_mul(4) <= d.remaining(),
+                        "snapshot delta runs ({total} values) exceed the \
+                         remaining payload"
+                    );
+                    let mut runs = Vec::with_capacity(nruns);
+                    for (off, len) in heads {
+                        let raw = d.take(4 * len)?;
+                        let vals: Vec<f32> = raw
+                            .chunks_exact(4)
+                            .map(|c| {
+                                f32::from_le_bytes(c.try_into().unwrap())
+                            })
+                            .collect();
+                        runs.push((off, vals));
+                    }
+                    SnapshotBody::Delta(runs)
+                }
+                SNAP_FULL_RLE => {
+                    let dim = d.varint()? as usize;
+                    ensure!(
+                        dim <= MAX_FRAME_BYTES as usize / 4,
+                        "snapshot RLE dim {dim} exceeds the frame cap"
+                    );
+                    // Don't trust the declared dim for the allocation:
+                    // grow into it as runs actually deliver.
+                    let mut v =
+                        Vec::with_capacity(dim.min(d.remaining()));
+                    while v.len() < dim {
+                        let z = d.varint()? as usize;
+                        let l = d.varint()? as usize;
+                        ensure!(
+                            z + l > 0,
+                            "snapshot RLE makes no progress (0,0 run pair)"
+                        );
+                        ensure!(
+                            z.saturating_add(l) <= dim - v.len(),
+                            "snapshot RLE runs overflow the declared \
+                             dim {dim}"
+                        );
+                        v.extend(std::iter::repeat(0.0f32).take(z));
+                        let raw = d.take(4 * l)?;
+                        v.extend(raw.chunks_exact(4).map(|c| {
+                            f32::from_le_bytes(c.try_into().unwrap())
+                        }));
+                    }
+                    SnapshotBody::Full(v)
                 }
                 other => bail!("unknown snapshot body tag {other}"),
             };
@@ -515,33 +898,56 @@ fn get_body(tag_byte: u8, payload: &[u8]) -> Result<Msg> {
 // --- framing ------------------------------------------------------------
 
 /// Encode `msg` as one complete frame (header + payload) into `buf`
-/// (cleared first; capacity reused across calls). Returns the frame size
-/// in bytes — the unit of the `wire_*_bytes` telemetry counters.
+/// (cleared first; capacity reused across calls) in [`WireMode::Exact`].
+/// Returns the frame size in bytes — the unit of the `wire_*_bytes`
+/// telemetry counters.
 pub fn encode_frame(msg: &Msg, buf: &mut Vec<u8>) -> usize {
+    encode_frame_mode(msg, buf, WireMode::Exact)
+}
+
+/// [`encode_frame`] under an explicit [`WireMode`]. Only `Update` payload
+/// bodies and `Snapshot` bodies vary by mode; every control frame is
+/// byte-identical across modes.
+pub fn encode_frame_mode(
+    msg: &Msg,
+    buf: &mut Vec<u8>,
+    mode: WireMode,
+) -> usize {
     buf.clear();
     put_u32(buf, MAGIC);
     buf.extend_from_slice(&VERSION.to_le_bytes());
     put_u8(buf, msg.tag());
     put_u8(buf, 0); // reserved
     put_u32(buf, 0); // payload length backpatched below
-    put_body(buf, msg);
+    put_body(buf, msg, mode);
     let len = (buf.len() - HEADER_BYTES) as u32;
     buf[8..12].copy_from_slice(&len.to_le_bytes());
     buf.len()
 }
 
-/// Write `msg` as one frame. Returns the bytes put on the wire. `buf` is
-/// the caller's encode scratch (reused across calls). Errors — without
-/// emitting anything — on a payload above [`MAX_FRAME_BYTES`]: every
-/// compliant decoder would reject such a frame, and sending it anyway
-/// would surface as a confusing peer-side disconnect instead of this
-/// sender-side error.
+/// Write `msg` as one frame in [`WireMode::Exact`]. Returns the bytes put
+/// on the wire. `buf` is the caller's encode scratch (reused across
+/// calls). Errors — without emitting anything — on a payload above
+/// [`MAX_FRAME_BYTES`]: every compliant decoder would reject such a
+/// frame, and sending it anyway would surface as a confusing peer-side
+/// disconnect instead of this sender-side error.
 pub fn write_frame(
     w: &mut impl Write,
     msg: &Msg,
     buf: &mut Vec<u8>,
 ) -> Result<usize> {
-    let n = encode_frame(msg, buf);
+    write_frame_mode(w, msg, buf, WireMode::Exact)
+}
+
+/// [`write_frame`] under an explicit [`WireMode`] (the `run.wire` knob's
+/// write path: worker update pushes and server snapshot answers).
+pub fn write_frame_mode(
+    w: &mut impl Write,
+    msg: &Msg,
+    buf: &mut Vec<u8>,
+    mode: WireMode,
+) -> Result<usize> {
+    let n = encode_frame_mode(msg, buf, mode);
     ensure!(
         n - HEADER_BYTES <= MAX_FRAME_BYTES as usize,
         "refusing to send a {}-byte frame payload (cap: {MAX_FRAME_BYTES}; \
@@ -703,7 +1109,7 @@ mod tests {
 
     #[test]
     fn v1_peer_frames_are_rejected_with_a_version_error() {
-        // A v1 build writes version=1 in the header; this v3 build must
+        // A v1 build writes version=1 in the header; this v4 build must
         // reject it cleanly (docs/WIRE.md §8: both roles ship in one
         // binary, so a version skew means mismatched deployments).
         let mut buf = Vec::new();
@@ -711,7 +1117,7 @@ mod tests {
         buf[4..6].copy_from_slice(&1u16.to_le_bytes());
         let err = read_frame(&mut buf.as_slice()).unwrap_err().to_string();
         assert!(err.contains("version 1"), "{err}");
-        assert!(err.contains("v3"), "{err}");
+        assert!(err.contains("v4"), "{err}");
     }
 
     #[test]
@@ -900,6 +1306,370 @@ mod tests {
         let (msg, n) = read_frame(&mut buf.as_slice()).unwrap().unwrap();
         assert_eq!(msg, Msg::SnapshotRequest { have_version: 7 });
         assert_eq!(n, buf.len());
+    }
+
+    /// Roundtrip helper under an explicit wire mode.
+    fn roundtrip_mode(msg: &Msg, mode: WireMode) -> Msg {
+        let mut buf = Vec::new();
+        let n = encode_frame_mode(msg, &mut buf, mode);
+        assert_eq!(n, buf.len());
+        let mut cursor: &[u8] = &buf;
+        let (decoded, consumed) =
+            read_frame(&mut cursor).unwrap().expect("not EOF");
+        assert_eq!(consumed, n);
+        decoded
+    }
+
+    #[test]
+    fn wire_mode_parses_the_knob_vocabulary() {
+        assert_eq!(WireMode::parse("exact").unwrap(), WireMode::Exact);
+        assert_eq!(WireMode::parse("f16").unwrap(), WireMode::F16);
+        assert_eq!(WireMode::parse("q8").unwrap(), WireMode::Q8);
+        assert_eq!(WireMode::default(), WireMode::Exact);
+        for mode in [WireMode::Exact, WireMode::F16, WireMode::Q8] {
+            assert_eq!(WireMode::parse(mode.name()).unwrap(), mode);
+        }
+        let err = WireMode::parse("bogus").unwrap_err().to_string();
+        assert!(err.contains("run.wire"), "{err}");
+        assert!(err.contains("exact | f16 | q8"), "{err}");
+    }
+
+    #[test]
+    fn f16_conversion_is_exact_on_representable_values_and_bounded() {
+        // Every value with <= 10 mantissa bits and in-range exponent
+        // survives the narrow-widen roundtrip exactly.
+        for v in [
+            0.0f32, -0.0, 1.0, -1.0, 0.5, -0.25, 2.0, 1024.0, -65504.0,
+            65504.0, 0.125, 1.5, 3.140625,
+        ] {
+            assert_eq!(f16_to_f32(f32_to_f16(v)).to_bits(), v.to_bits(),
+                "{v}");
+        }
+        // Non-representable values round within half-precision epsilon.
+        for v in [0.1f32, -0.3, 2.7182817, 123.456, 1e-3, -7.77] {
+            let back = f16_to_f32(f32_to_f16(v));
+            let rel = ((back - v) / v).abs();
+            assert!(rel <= 1.0 / 1024.0, "{v} -> {back} (rel {rel})");
+        }
+        // Overflow saturates to infinity, tiny values flush toward zero,
+        // and specials keep their class.
+        assert_eq!(f16_to_f32(f32_to_f16(1e9)), f32::INFINITY);
+        assert_eq!(f16_to_f32(f32_to_f16(-1e9)), f32::NEG_INFINITY);
+        assert_eq!(f16_to_f32(f32_to_f16(1e-10)), 0.0);
+        assert_eq!(f16_to_f32(f32_to_f16(f32::INFINITY)), f32::INFINITY);
+        assert!(f16_to_f32(f32_to_f16(f32::NAN)).is_nan());
+        // Subnormal half range roundtrips too (2^-24 is the smallest).
+        let sub = f16_to_f32(f32_to_f16(6e-8));
+        assert!(sub > 0.0 && sub < 1e-7, "{sub}");
+    }
+
+    #[test]
+    fn quantized_sparse_payloads_roundtrip_within_tolerance() {
+        let msg = |val: Vec<f32>| Msg::Update {
+            k_read: 3,
+            worker: 1,
+            oracles: vec![BlockOracle {
+                block: 5,
+                s: OraclePayload::Sparse {
+                    idx: (0..val.len() as u32).collect(),
+                    val,
+                    dim: 64,
+                },
+                ls: 0.75,
+            }],
+        };
+        let vals = vec![1.0f32, -0.5, 0.3333, 0.0, -0.0625, 0.9999];
+        for mode in [WireMode::F16, WireMode::Q8] {
+            match roundtrip_mode(&msg(vals.clone()), mode) {
+                Msg::Update { k_read, worker, oracles } => {
+                    assert_eq!((k_read, worker), (3, 1));
+                    match &oracles[0].s {
+                        OraclePayload::Sparse { idx, val, dim } => {
+                            assert_eq!(idx.len(), vals.len());
+                            assert_eq!(*dim, 64);
+                            let max_abs = 1.0f32;
+                            // f16: 2^-11 relative; q8: half a bucket of
+                            // scale/127 absolute.
+                            let tol = match mode {
+                                WireMode::F16 => max_abs / 1024.0,
+                                _ => max_abs / 127.0,
+                            };
+                            for (a, b) in vals.iter().zip(val) {
+                                assert!(
+                                    (a - b).abs() <= tol,
+                                    "{mode:?}: {a} -> {b}"
+                                );
+                            }
+                        }
+                        other => panic!("densified: {other:?}"),
+                    }
+                    assert_eq!(oracles[0].ls, 0.75); // ls stays exact
+                }
+                other => panic!("{other:?}"),
+            }
+        }
+        // The all-zero payload ships scale 0 and decodes to exact zeros.
+        match roundtrip_mode(&msg(vec![0.0, 0.0]), WireMode::Q8) {
+            Msg::Update { oracles, .. } => match &oracles[0].s {
+                OraclePayload::Sparse { val, .. } => {
+                    assert_eq!(val, &vec![0.0, 0.0]);
+                }
+                other => panic!("{other:?}"),
+            },
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn quantized_payloads_ship_fewer_bytes_than_exact() {
+        let msg = Msg::Update {
+            k_read: 0,
+            worker: 0,
+            oracles: vec![BlockOracle {
+                block: 0,
+                s: OraclePayload::Sparse {
+                    idx: (0..100).collect(),
+                    val: vec![0.25; 100],
+                    dim: 1000,
+                },
+                ls: 0.0,
+            }],
+        };
+        let mut buf = Vec::new();
+        let exact = encode_frame_mode(&msg, &mut buf, WireMode::Exact);
+        let f16 = encode_frame_mode(&msg, &mut buf, WireMode::F16);
+        let q8 = encode_frame_mode(&msg, &mut buf, WireMode::Q8);
+        assert!(f16 < exact, "f16 {f16} vs exact {exact}");
+        assert!(q8 < f16, "q8 {q8} vs f16 {f16}");
+    }
+
+    #[test]
+    fn exact_mode_is_byte_identical_to_the_v3_body_layout() {
+        // `run.wire = exact` is the pinned default: the mode-aware
+        // encoder must emit exactly what the plain encoder emits, and
+        // the sparse body must keep the documented v3 layout
+        // (`1 | dim | nnz | idx | nval | val`, all little-endian).
+        let msg = Msg::Update {
+            k_read: 7,
+            worker: 2,
+            oracles: vec![BlockOracle {
+                block: 3,
+                s: OraclePayload::Sparse {
+                    idx: vec![1, 4],
+                    val: vec![0.5, -2.0],
+                    dim: 6,
+                },
+                ls: 1.25,
+            }],
+        };
+        let mut plain = Vec::new();
+        let mut moded = Vec::new();
+        encode_frame(&msg, &mut plain);
+        encode_frame_mode(&msg, &mut moded, WireMode::Exact);
+        assert_eq!(plain, moded);
+        // Hand-assembled v3 Update body.
+        let mut body = Vec::new();
+        body.extend_from_slice(&7u64.to_le_bytes()); // k_read
+        body.extend_from_slice(&2u32.to_le_bytes()); // worker
+        body.extend_from_slice(&1u32.to_le_bytes()); // oracle count
+        body.extend_from_slice(&3u32.to_le_bytes()); // block
+        body.extend_from_slice(&1.25f64.to_le_bytes()); // ls
+        body.push(1); // PAYLOAD_SPARSE
+        body.extend_from_slice(&6u32.to_le_bytes()); // dim
+        body.extend_from_slice(&2u32.to_le_bytes()); // nnz
+        body.extend_from_slice(&1u32.to_le_bytes());
+        body.extend_from_slice(&4u32.to_le_bytes());
+        body.extend_from_slice(&2u32.to_le_bytes()); // nval
+        body.extend_from_slice(&0.5f32.to_le_bytes());
+        body.extend_from_slice(&(-2.0f32).to_le_bytes());
+        assert_eq!(&plain[HEADER_BYTES..], body.as_slice());
+        // Exact snapshot bodies keep their v3 kinds too.
+        let snaps = [
+            Msg::Snapshot {
+                version: 1,
+                body: SnapshotBody::Full(vec![1.0, 0.0]),
+            },
+            Msg::Snapshot {
+                version: 2,
+                body: SnapshotBody::Delta(vec![(3, vec![0.5])]),
+            },
+        ];
+        for (snap, kind) in snaps.iter().zip([SNAP_FULL, SNAP_DELTA]) {
+            encode_frame_mode(snap, &mut moded, WireMode::Exact);
+            assert_eq!(moded[HEADER_BYTES + 8], kind, "{snap:?}");
+        }
+    }
+
+    #[test]
+    fn compressed_snapshot_bodies_roundtrip_losslessly() {
+        // Snapshots must stay lossless in every mode — workers compute
+        // oracles on them. Kind 2 (varint delta) and kind 3 (zero-RLE
+        // full) are exercised through the non-exact modes.
+        let mut full = vec![0.0f32; 300];
+        full[7] = 1.5;
+        full[8] = -0.25;
+        full[299] = f32::MIN_POSITIVE;
+        full[100] = -0.0; // negative zero must survive bit-exactly
+        let bodies = [
+            SnapshotBody::Full(full.clone()),
+            SnapshotBody::Full(vec![]),
+            SnapshotBody::Full(vec![0.0; 64]),
+            SnapshotBody::Delta(vec![
+                (0, vec![0.5]),
+                (7, vec![1.0, 2.0]),
+                (300, vec![-1.0]),
+            ]),
+            SnapshotBody::Delta(vec![]),
+            SnapshotBody::Delta(vec![(9, vec![])]),
+        ];
+        for body in &bodies {
+            for mode in [WireMode::F16, WireMode::Q8] {
+                let msg = Msg::Snapshot {
+                    version: 21,
+                    body: body.clone(),
+                };
+                let decoded = roundtrip_mode(&msg, mode);
+                match (&decoded, &msg) {
+                    (
+                        Msg::Snapshot { body: got, .. },
+                        Msg::Snapshot { body: want, .. },
+                    ) => match (got, want) {
+                        (
+                            SnapshotBody::Full(g),
+                            SnapshotBody::Full(w),
+                        ) => {
+                            let gb: Vec<u32> =
+                                g.iter().map(|x| x.to_bits()).collect();
+                            let wb: Vec<u32> =
+                                w.iter().map(|x| x.to_bits()).collect();
+                            assert_eq!(gb, wb);
+                        }
+                        (got, want) => assert_eq!(got, want),
+                    },
+                    other => panic!("{other:?}"),
+                }
+            }
+        }
+        // And the mostly-zero full body really is smaller compressed.
+        let msg = Msg::Snapshot {
+            version: 1,
+            body: SnapshotBody::Full(full),
+        };
+        let mut buf = Vec::new();
+        let exact = encode_frame_mode(&msg, &mut buf, WireMode::Exact);
+        let rle = encode_frame_mode(&msg, &mut buf, WireMode::Q8);
+        assert!(rle < exact / 4, "rle {rle} vs exact {exact}");
+    }
+
+    #[test]
+    fn corrupt_compressed_snapshots_are_rejected_not_looped() {
+        // A (0,0) RLE run pair makes no progress; the decoder must
+        // reject it instead of spinning.
+        let mut buf = Vec::new();
+        encode_frame(&Msg::Heartbeat, &mut buf);
+        buf.truncate(HEADER_BYTES);
+        buf[6] = 3; // SNAPSHOT
+        buf.extend_from_slice(&0u64.to_le_bytes()); // version
+        buf.push(3); // SNAP_FULL_RLE
+        buf.push(10); // dim = 10 (varint)
+        buf.push(0); // zero run 0
+        buf.push(0); // literal run 0
+        let len = (buf.len() - HEADER_BYTES) as u32;
+        buf[8..12].copy_from_slice(&len.to_le_bytes());
+        let err = read_frame(&mut buf.as_slice()).unwrap_err().to_string();
+        assert!(err.contains("no progress"), "{err}");
+        // Runs that overflow the declared dim are rejected too.
+        buf.truncate(buf.len() - 2);
+        buf.push(11); // zero run 11 > dim 10
+        buf.push(0);
+        let len = (buf.len() - HEADER_BYTES) as u32;
+        buf[8..12].copy_from_slice(&len.to_le_bytes());
+        let err = read_frame(&mut buf.as_slice()).unwrap_err().to_string();
+        assert!(err.contains("overflow"), "{err}");
+    }
+
+    #[test]
+    fn fuzz_every_truncation_and_byte_flip_is_panic_free() {
+        // The decoder-hardening pin: for a corpus of frames covering
+        // every message type in every wire mode, (a) every truncation
+        // yields a clean Err (cut 0 is the one clean EOF), and (b) every
+        // single-byte flip either decodes or errors — never panics. The
+        // sweep is deterministic: every byte position, three flip
+        // patterns, no RNG.
+        let corpus_msgs = [
+            Msg::Hello(Hello {
+                worker_id: 1,
+                seed: 9,
+                tau: 2,
+                batch: 1,
+                payload_mode: 2,
+                n_blocks: 8,
+                problem: "qp".into(),
+                config: vec![("run.wire".into(), "q8".into())],
+                shard: 0,
+                plan: ShardPlan::single("h:1".into(), 8, 32),
+            }),
+            Msg::SnapshotRequest { have_version: 3 },
+            Msg::Snapshot {
+                version: 5,
+                body: SnapshotBody::Full(vec![0.0, 1.0, 0.0, -2.5]),
+            },
+            Msg::Snapshot {
+                version: 6,
+                body: SnapshotBody::Delta(vec![
+                    (2, vec![0.5, 1.5]),
+                    (9, vec![-1.0]),
+                ]),
+            },
+            Msg::Update {
+                k_read: 11,
+                worker: 0,
+                oracles: vec![
+                    BlockOracle::dense(0, vec![1.0, -1.0], 0.5),
+                    BlockOracle {
+                        block: 1,
+                        s: OraclePayload::Sparse {
+                            idx: vec![0, 3],
+                            val: vec![0.25, -0.75],
+                            dim: 5,
+                        },
+                        ls: -0.5,
+                    },
+                ],
+            },
+            Msg::Shutdown,
+            Msg::Heartbeat,
+            Msg::Join { resumed: true },
+        ];
+        let mut corpus: Vec<Vec<u8>> = Vec::new();
+        for msg in &corpus_msgs {
+            for mode in [WireMode::Exact, WireMode::F16, WireMode::Q8] {
+                let mut buf = Vec::new();
+                encode_frame_mode(msg, &mut buf, mode);
+                corpus.push(buf);
+            }
+        }
+        for frame in &corpus {
+            let n = frame.len();
+            for cut in 0..n {
+                let mut cursor: &[u8] = &frame[..cut];
+                let got = read_frame(&mut cursor);
+                if cut == 0 {
+                    assert!(got.unwrap().is_none());
+                } else {
+                    assert!(got.is_err(), "cut {cut} of {n}");
+                }
+            }
+            for i in 0..n {
+                for pattern in [0xffu8, 0x01, 0x80] {
+                    let mut bad = frame.clone();
+                    bad[i] ^= pattern;
+                    // Must return (a flip can still be a valid frame);
+                    // a panic fails the test.
+                    let _ = read_frame(&mut bad.as_slice());
+                }
+            }
+        }
     }
 
     #[test]

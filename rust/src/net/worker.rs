@@ -257,13 +257,20 @@ fn run_on(mut stream: TcpStream, resumed: bool) -> Result<WorkerSummary> {
         );
     }
     let heartbeat = opts.heartbeat_period();
+    // `run.wire` rides in the same shipped config, so the worker's
+    // update pushes use exactly the encoding the serve side configured.
+    let wmode = opts.wire;
     if opts.chaos.is_noop() {
         // No chaos: the raw stream, bit-identical to the plain transport.
-        dispatch(&instance, &hello, stream, rx_bytes, tx_bytes, heartbeat)
+        dispatch(
+            &instance, &hello, stream, rx_bytes, tx_bytes, heartbeat, wmode,
+        )
     } else {
         let rng = Pcg64::new(hello.seed, chaos_rng_stream(hello.worker_id));
         let stream = ChaosStream::new(stream, opts.chaos, rng);
-        dispatch(&instance, &hello, stream, rx_bytes, tx_bytes, heartbeat)
+        dispatch(
+            &instance, &hello, stream, rx_bytes, tx_bytes, heartbeat, wmode,
+        )
     }
 }
 
@@ -345,6 +352,7 @@ fn run_sharded(
             rx,
             tx,
             heartbeat,
+            opts.wire,
         )
     } else {
         // One chaos rng per connection: the per-shard worker ids may
@@ -370,11 +378,13 @@ fn run_sharded(
             rx,
             tx,
             heartbeat,
+            opts.wire,
         )
     }
 }
 
 /// Monomorphize [`sharded_solve_loop`] over the instance's problem type.
+#[allow(clippy::too_many_arguments)]
 fn dispatch_sharded<S: Read + Write>(
     instance: &ProblemInstance,
     hellos: &[Hello],
@@ -383,19 +393,24 @@ fn dispatch_sharded<S: Read + Write>(
     rx_bytes: u64,
     tx_bytes: u64,
     heartbeat: Option<Duration>,
+    wmode: wire::WireMode,
 ) -> Result<WorkerSummary> {
     match instance {
         ProblemInstance::Gfl(p) => sharded_solve_loop(
             p, hellos, primary, streams, rx_bytes, tx_bytes, heartbeat,
+            wmode,
         ),
         ProblemInstance::Qp(p) => sharded_solve_loop(
             p, hellos, primary, streams, rx_bytes, tx_bytes, heartbeat,
+            wmode,
         ),
         ProblemInstance::Chain(p) => sharded_solve_loop(
             p, hellos, primary, streams, rx_bytes, tx_bytes, heartbeat,
+            wmode,
         ),
         ProblemInstance::Multiclass(p) => sharded_solve_loop(
             p, hellos, primary, streams, rx_bytes, tx_bytes, heartbeat,
+            wmode,
         ),
     }
 }
@@ -408,6 +423,7 @@ fn dispatch_sharded<S: Read + Write>(
 /// alternation. `k_read` is per shard: the version of *that shard's*
 /// span the oracles were computed against, so each shard's staleness rule
 /// judges exactly the state it owns.
+#[allow(clippy::too_many_arguments)]
 fn sharded_solve_loop<P: Problem, S: Read + Write>(
     problem: &P,
     hellos: &[Hello],
@@ -416,6 +432,7 @@ fn sharded_solve_loop<P: Problem, S: Read + Write>(
     mut rx_bytes: u64,
     tx_bytes: u64,
     heartbeat: Option<Duration>,
+    wmode: wire::WireMode,
 ) -> Result<WorkerSummary> {
     let n = problem.num_blocks();
     let plan = &hellos[primary].plan;
@@ -586,7 +603,14 @@ fn sharded_solve_loop<P: Problem, S: Read + Write>(
                 worker: hellos[s].worker_id,
                 oracles: std::mem::take(&mut groups[s]),
             };
-            let sent = wire::write_frame(&mut streams[s], &msg, &mut ebuf);
+            // The update push is the worker's one mode-aware write:
+            // under f16/q8 the sparse payload values ship quantized.
+            let sent = wire::write_frame_mode(
+                &mut streams[s],
+                &msg,
+                &mut ebuf,
+                wmode,
+            );
             // Recover the payload containers whether or not the send
             // landed — their buffers are reused every round.
             if let Msg::Update { oracles, .. } = msg {
@@ -637,20 +661,21 @@ fn dispatch<S: Read + Write>(
     rx_bytes: u64,
     tx_bytes: u64,
     heartbeat: Option<Duration>,
+    wmode: wire::WireMode,
 ) -> Result<WorkerSummary> {
     match instance {
-        ProblemInstance::Gfl(p) => {
-            solve_loop(p, hello, stream, rx_bytes, tx_bytes, heartbeat)
-        }
-        ProblemInstance::Qp(p) => {
-            solve_loop(p, hello, stream, rx_bytes, tx_bytes, heartbeat)
-        }
-        ProblemInstance::Chain(p) => {
-            solve_loop(p, hello, stream, rx_bytes, tx_bytes, heartbeat)
-        }
-        ProblemInstance::Multiclass(p) => {
-            solve_loop(p, hello, stream, rx_bytes, tx_bytes, heartbeat)
-        }
+        ProblemInstance::Gfl(p) => solve_loop(
+            p, hello, stream, rx_bytes, tx_bytes, heartbeat, wmode,
+        ),
+        ProblemInstance::Qp(p) => solve_loop(
+            p, hello, stream, rx_bytes, tx_bytes, heartbeat, wmode,
+        ),
+        ProblemInstance::Chain(p) => solve_loop(
+            p, hello, stream, rx_bytes, tx_bytes, heartbeat, wmode,
+        ),
+        ProblemInstance::Multiclass(p) => solve_loop(
+            p, hello, stream, rx_bytes, tx_bytes, heartbeat, wmode,
+        ),
     }
 }
 
@@ -660,6 +685,7 @@ fn dispatch<S: Read + Write>(
 /// sent whenever that long passes without other outbound traffic — checked
 /// between oracle calls, so even a long multi-block solve stays visibly
 /// alive.
+#[allow(clippy::too_many_arguments)]
 fn solve_loop<P: Problem, S: Read + Write>(
     problem: &P,
     hello: &Hello,
@@ -667,6 +693,7 @@ fn solve_loop<P: Problem, S: Read + Write>(
     mut rx_bytes: u64,
     tx_bytes: u64,
     heartbeat: Option<Duration>,
+    wmode: wire::WireMode,
 ) -> Result<WorkerSummary> {
     let n = problem.num_blocks();
     let batch = (hello.batch as usize).clamp(1, n);
@@ -783,7 +810,10 @@ fn solve_loop<P: Problem, S: Read + Write>(
             worker: hello.worker_id,
             oracles: std::mem::take(&mut slots),
         };
-        let sent = wire::write_frame(&mut stream, &msg, &mut ebuf);
+        // The update push is the worker's one mode-aware write: under
+        // f16/q8 the sparse payload values ship quantized.
+        let sent =
+            wire::write_frame_mode(&mut stream, &msg, &mut ebuf, wmode);
         if let Msg::Update { oracles, .. } = msg {
             slots = oracles;
         }

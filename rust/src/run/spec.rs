@@ -584,9 +584,9 @@ impl RunSpec {
     /// `queue_factor`, `staleness_rule`, `collision_overwrite`,
     /// `work_multiplier`, `delay`, `delay_history`, `drop_rule`, and the
     /// net-transport fleet knobs `accept_timeout_secs`, `liveness_ms`,
-    /// `chaos`, `shards`, `shard_id` (parsed and validated by the serve
-    /// role — `crate::net::NetOptions` — but scoped here so a typo'd mode
-    /// fails fast).
+    /// `chaos`, `shards`, `shard_id`, `wire` (parsed and validated by the
+    /// serve role — `crate::net::NetOptions` — but scoped here so a
+    /// typo'd mode fails fast).
     pub fn from_config(cfg: &Config) -> Result<Self> {
         let mode = cfg.get_or("run.mode", "seq");
         let payload_text = cfg.get_or("run.payload", "auto");
@@ -596,6 +596,11 @@ impl RunSpec {
                  (expected auto | dense | sparse)"
             )
         })?;
+        // `run.wire` (the v4 wire-encoding knob) lives on NetOptions, not
+        // the spec, but a typo'd value must fail here — the one strict
+        // validation path every launcher goes through — not deep in the
+        // serve role.
+        crate::net::WireMode::parse(&cfg.get_or("run.wire", "exact"))?;
         let workers = cfg.get_usize("run.workers", 2);
         let straggler =
             StragglerSpec::parse(&cfg.get_or("run.straggler", "none"))?;
@@ -683,6 +688,7 @@ impl RunSpec {
             ("run.chaos", &["async"]),
             ("run.shards", &["async"]),
             ("run.shard_id", &["async"]),
+            ("run.wire", &["async"]),
         ];
         let mode_name = engine.name();
         for (key, modes) in SCOPED_KEYS {
@@ -1071,6 +1077,34 @@ mod tests {
             assert!(err.contains("run.payload"), "{bad}: {err}");
             assert!(err.contains("auto | dense | sparse"), "{bad}: {err}");
         }
+    }
+
+    #[test]
+    fn from_config_rejects_invalid_wire_mode() {
+        for bad in ["bogus", "F16", "int8", "exact,q8"] {
+            let cfg = Config::parse(&format!(
+                "[run]\nmode = async\nwire = {bad}\n"
+            ))
+            .unwrap();
+            let err = RunSpec::from_config(&cfg).unwrap_err().to_string();
+            assert!(err.contains("run.wire"), "{bad}: {err}");
+            assert!(err.contains("exact | f16 | q8"), "{bad}: {err}");
+        }
+        // The valid vocabulary parses (the knob itself lives on
+        // NetOptions; the spec only validates it).
+        for good in ["exact", "f16", "q8"] {
+            let cfg = Config::parse(&format!(
+                "[run]\nmode = async\nwire = {good}\n"
+            ))
+            .unwrap();
+            assert!(RunSpec::from_config(&cfg).is_ok(), "{good}");
+        }
+        // And like every net-transport knob it is scoped to async mode.
+        let cfg =
+            Config::parse("[run]\nmode = seq\nwire = f16\n").unwrap();
+        let err = RunSpec::from_config(&cfg).unwrap_err().to_string();
+        assert!(err.contains("run.wire"), "{err}");
+        assert!(err.contains("no effect"), "{err}");
     }
 
     #[test]

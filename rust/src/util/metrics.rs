@@ -93,12 +93,21 @@ pub struct Counters {
     /// full dimension, sparse ones their support. `payload_nnz /
     /// oracle payload count` is the average shipped density.
     pub payload_nnz: AtomicU64,
-    /// Sum of payload wire bytes across every oracle shipped
-    /// (`OraclePayload::wire_bytes`). `payload_bytes / updates_applied` is
+    /// Sum of *logical* payload wire bytes across every oracle shipped
+    /// (`OraclePayload::wire_bytes` — the exact-mode encoding cost,
+    /// independent of `run.wire`). `payload_bytes / updates_applied` is
     /// the `hot_paths` bench's bytes-per-update row — the
     /// communication-efficiency axis the sparse payload pipeline exists to
-    /// shrink.
+    /// shrink. Compare against `shipped_payload_bytes` to see what v4
+    /// quantization saved on top.
     pub payload_bytes: AtomicU64,
+    /// Update-frame bytes as actually shipped over the transport (after
+    /// any `run.wire` quantization), counted by the serve role's readers
+    /// at frame receipt. Under `run.wire = exact` this tracks
+    /// `payload_bytes` plus per-frame framing overhead; under f16/q8 it
+    /// is the smaller, post-quantization figure — the number the v4 wire
+    /// exists to shrink. Zero for in-process engines.
+    pub shipped_payload_bytes: AtomicU64,
     /// Frame bytes written to the network transport (headers included) —
     /// counted only by the `net` serve role; zero for in-process engines.
     pub wire_tx_bytes: AtomicU64,
@@ -146,6 +155,9 @@ impl Counters {
             snapshot_reads: self.snapshot_reads.load(Ordering::Relaxed),
             payload_nnz: self.payload_nnz.load(Ordering::Relaxed),
             payload_bytes: self.payload_bytes.load(Ordering::Relaxed),
+            shipped_payload_bytes: self
+                .shipped_payload_bytes
+                .load(Ordering::Relaxed),
             wire_tx_bytes: self.wire_tx_bytes.load(Ordering::Relaxed),
             wire_rx_bytes: self.wire_rx_bytes.load(Ordering::Relaxed),
             delay_sum: self.delay_sum.load(Ordering::Relaxed),
@@ -186,6 +198,7 @@ pub struct CounterSnapshot {
     pub snapshot_reads: u64,
     pub payload_nnz: u64,
     pub payload_bytes: u64,
+    pub shipped_payload_bytes: u64,
     pub wire_tx_bytes: u64,
     pub wire_rx_bytes: u64,
     pub delay_sum: u64,

@@ -155,6 +155,75 @@ fn sparse_wire_payloads_match_dense_bits_and_ship_fewer_bytes() {
 }
 
 #[test]
+fn wire_exact_knob_stays_bit_identical_to_the_delayed_engine() {
+    // `run.wire = exact` (the pinned default, spelled out) must keep the
+    // one-worker loopback on the bit-identical path — the v4 knob only
+    // changes bytes when asked to.
+    let mut cfg = gfl_cfg();
+    cfg.set("run.wire", "exact");
+    assert_loopback_matches_delayed("gfl", &cfg, 8.0, PayloadMode::Auto);
+}
+
+#[test]
+fn quantized_wire_modes_converge_within_tolerance_and_ship_fewer_bytes() {
+    // `run.wire = f16 | q8` quantizes sparse update values on the wire,
+    // trading bit-identity for bytes. Multiclass sparse payloads carry a
+    // full feature vector per oracle (nnz = d), so the quantized
+    // encodings must measurably shrink the shipped update-frame bytes
+    // while the solve still lands on the exact run's objective to the
+    // documented tolerance (EXPERIMENTS.md §Wire-efficiency: 1e-2
+    // relative for f16, 5e-2 for q8).
+    let cfg_text = "[run]\nseed = 5\n\
+                    [multiclass]\nn = 24\nk = 4\nd = 16\nnoise = 0.15\n\
+                    lambda = 0.05\n";
+    let mut runs = Vec::new();
+    for mode in ["exact", "f16", "q8"] {
+        let mut cfg = Config::parse(cfg_text).unwrap();
+        cfg.set("run.wire", mode);
+        let spec = shared_knobs(RunSpec::new(Engine::asynchronous(1)), 6.0)
+            .payload(PayloadMode::Sparse);
+        let r = solve_loopback(spec, "multiclass", &cfg, "127.0.0.1:0")
+            .unwrap_or_else(|e| panic!("wire={mode} loopback failed: {e:#}"));
+        assert!(r.counters.updates_applied > 0, "wire={mode}: nothing ran");
+        assert!(
+            r.counters.shipped_payload_bytes > 0,
+            "wire={mode}: shipped-bytes telemetry missing"
+        );
+        assert!(
+            r.last().unwrap().objective.is_finite(),
+            "wire={mode}: diverged"
+        );
+        runs.push(r);
+    }
+    let (exact, f16, q8) = (&runs[0], &runs[1], &runs[2]);
+    let ref_obj = exact.last().unwrap().objective;
+    let scale = ref_obj.abs().max(1.0);
+    assert!(
+        (f16.last().unwrap().objective - ref_obj).abs() <= 1e-2 * scale,
+        "f16 objective {} vs exact {ref_obj}",
+        f16.last().unwrap().objective
+    );
+    assert!(
+        (q8.last().unwrap().objective - ref_obj).abs() <= 5e-2 * scale,
+        "q8 objective {} vs exact {ref_obj}",
+        q8.last().unwrap().objective
+    );
+    // The logical payload cost is mode-independent (same oracles), so
+    // the saving must show up in the shipped bytes: q8 < f16 < exact.
+    assert_eq!(exact.counters.payload_bytes, f16.counters.payload_bytes);
+    assert!(
+        q8.counters.shipped_payload_bytes
+            < f16.counters.shipped_payload_bytes
+            && f16.counters.shipped_payload_bytes
+                < exact.counters.shipped_payload_bytes,
+        "shipped bytes not ordered: exact {} f16 {} q8 {}",
+        exact.counters.shipped_payload_bytes,
+        f16.counters.shipped_payload_bytes,
+        q8.counters.shipped_payload_bytes
+    );
+}
+
+#[test]
 fn loopback_two_workers_converge_to_the_async_tolerance() {
     // Beyond one worker the interleaving is scheduling-dependent, so the
     // equivalence is tolerance-bounded: the distributed solve reaches the

@@ -48,6 +48,12 @@ REQUIRED_MEASURED_PREFIXES = [
     "ssvm apply fused batch=8 sparse",
     "net loopback wire bytes-per-update payload=dense",
     "net loopback wire bytes-per-update payload=sparse",
+    # The wire-v4 encoding sweep: shipped (post-quantization) update
+    # bytes under each `run.wire` mode — exact is the v3 baseline the
+    # f16/q8 savings are measured against.
+    "net loopback wire bytes-per-update wire=exact",
+    "net loopback wire bytes-per-update wire=f16",
+    "net loopback wire bytes-per-update wire=q8",
     # The sharded parameter plane's scaling rows: update throughput at
     # S = 1/2/4 and the snapshot fan-out cost at S = 1/2.
     "net sharded updates-per-sec shards=1",
