@@ -200,6 +200,7 @@ fn main() {
                 )],
                 k_read: 0,
                 worker: 0,
+                generation: 0,
             });
         }
         std::hint::black_box(asm.take_batch(16));
@@ -217,6 +218,7 @@ fn main() {
                     .collect(),
                 k_read: 0,
                 worker: 0,
+                generation: 0,
             });
         }
         std::hint::black_box(asm.take_batch(16));

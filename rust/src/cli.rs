@@ -11,7 +11,8 @@
 //!        [--snapshot-mode torn|consistent] [--queue-factor N]
 //!        [--config FILE] [--set sect.key=val ...]
 //! apbcfw serve <problem> [--listen HOST:PORT] [--self-host]
-//!        [--accept-timeout SECS] [solve flags]
+//!        [--accept-timeout SECS] [--checkpoint-dir DIR]
+//!        [--checkpoint-every N] [--restore] [solve flags]
 //! apbcfw worker [--connect HOST:PORT] [--connect-timeout SECS]
 //! apbcfw artifacts-check [--dir DIR]
 //! apbcfw info
@@ -116,7 +117,8 @@ pub fn parse(args: &[String]) -> Result<Cli> {
                     | "workers" | "epochs" | "seed" | "straggler"
                     | "snapshot-mode" | "queue-factor" | "listen" | "connect"
                     | "connect-timeout" | "accept-timeout" | "shards"
-                    | "shard-id" | "wire"
+                    | "shard-id" | "wire" | "checkpoint-dir"
+                    | "checkpoint-every"
             );
             if takes_value {
                 let v = rest
@@ -258,6 +260,31 @@ pub fn parse(args: &[String]) -> Result<Cli> {
                     })?;
                     config.set("run.shard_id", v);
                 }
+                // Crash-recovery sugar: --checkpoint-dir arms durable
+                // per-shard checkpoints (and auto-restore on restart),
+                // --checkpoint-every sets the write cadence in applied
+                // updates (0 = off), --restore states explicit restore
+                // intent. Lowered to the run.* keys `net::serve` reads
+                // and cross-validates (`NetOptions::from_config` rejects
+                // a cadence without a dir and a restore without a dir).
+                if let Some(v) = flag_val("checkpoint-dir") {
+                    if v.trim().is_empty() {
+                        bail!("--checkpoint-dir needs a non-empty path");
+                    }
+                    config.set("run.checkpoint_dir", v);
+                }
+                if let Some(v) = flag_val("checkpoint-every") {
+                    let _: u64 = v.parse().map_err(|_| {
+                        anyhow!(
+                            "--checkpoint-every must be a nonnegative \
+                             integer count of applied updates, got {v:?}"
+                        )
+                    })?;
+                    config.set("run.checkpoint_every", v);
+                }
+                if has_flag("restore") {
+                    config.set("run.restore", "true");
+                }
                 let self_host = has_flag("self-host");
                 let addr = flag_val("listen")
                     .unwrap_or(if self_host {
@@ -317,6 +344,7 @@ USAGE:
       --set / --config only.
   apbcfw serve <gfl|ssvm|multiclass|qp> [--listen HOST:PORT] [--self-host]
          [--accept-timeout SECS] [--shards S] [--shard-id I]
+         [--checkpoint-dir DIR] [--checkpoint-every N] [--restore]
          [solve flags as above; --mode defaults to async]
       host the distributed delayed-update server: workers connect over
       TCP (wire protocol: docs/WIRE.md), pull parameter snapshots, and
@@ -333,10 +361,20 @@ USAGE:
       the handshake and route each update to its block's owner.
       --shard-id I hosts only shard I in this process (one serve
       process per shard; needs an explicit --listen base port).
-      --wire exact|f16|q8 picks the v4 wire encoding (sugar for
+      --wire exact|f16|q8 picks the wire encoding (sugar for
       --set run.wire=...): exact (default) ships f32 bits unchanged;
       f16/q8 quantize sparse update values and compress snapshot
       bodies losslessly (docs/WIRE.md §4).
+      crash recovery: --checkpoint-dir DIR writes a durable, CRC-checked
+      checkpoint per shard every --checkpoint-every N applied updates
+      (default 0 = off) and auto-restores from it on restart — the
+      restarted shard resumes at the checkpointed iteration under a
+      bumped generation, and updates computed against pre-crash state
+      are fenced (docs/WIRE.md §5). --restore states the intent
+      explicitly (same behavior, plus a log line when no usable
+      checkpoint is found). deterministic crash injection for drills:
+      --set run.chaos=crash:K aborts each shard's first generation
+      after K applied updates.
   apbcfw worker [--connect HOST:PORT] [--connect-timeout SECS]
       join a serve host as a network worker. retries the connect with
       jittered backoff for --connect-timeout seconds (default 10) so
@@ -644,5 +682,41 @@ mod tests {
                 "--shard-id {bad}"
             );
         }
+    }
+
+    #[test]
+    fn serve_checkpoint_flags_lower_to_config_and_validate() {
+        let cli = parse(&sv(&[
+            "serve",
+            "gfl",
+            "--checkpoint-dir",
+            "/tmp/ck",
+            "--checkpoint-every",
+            "50",
+            "--restore",
+        ]))
+        .unwrap();
+        assert_eq!(cli.config.get("run.checkpoint_dir"), Some("/tmp/ck"));
+        assert_eq!(cli.config.get("run.checkpoint_every"), Some("50"));
+        assert_eq!(cli.config.get("run.restore"), Some("true"));
+        // Unset flags leave the keys unset: the serve default (no
+        // checkpointing) stays byte-identical to a pre-v5 fleet.
+        let cli = parse(&sv(&["serve", "gfl"])).unwrap();
+        assert_eq!(cli.config.get("run.checkpoint_dir"), None);
+        assert_eq!(cli.config.get("run.checkpoint_every"), None);
+        assert_eq!(cli.config.get("run.restore"), None);
+        // Bad shapes get the CLI's clean error, not a deep serve failure.
+        for bad in ["-1", "often", "1.5"] {
+            assert!(
+                parse(&sv(&[
+                    "serve", "gfl", "--checkpoint-every", bad
+                ]))
+                .is_err(),
+                "--checkpoint-every {bad}"
+            );
+        }
+        assert!(
+            parse(&sv(&["serve", "gfl", "--checkpoint-dir", "  "])).is_err()
+        );
     }
 }

@@ -199,6 +199,7 @@ pub fn run_observed<P: Problem>(
                             oracles,
                             k_read,
                             worker: w,
+                            generation: 0,
                         })
                         .is_err()
                     {

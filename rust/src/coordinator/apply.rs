@@ -97,6 +97,11 @@ pub struct ApplyCore<'a, P: Problem> {
     trace: Trace,
     gap_estimate: f64,
     k: u64,
+    /// Session generation (crash recovery). 0 for every in-process
+    /// engine and every fresh serve loop; a restore from a durable
+    /// checkpoint resumes at `checkpoint generation + 1`, and `ingest`
+    /// fences messages stamped with any other generation.
+    generation: u64,
     asm: BatchAssembler,
     watch: Stopwatch,
 }
@@ -128,9 +133,62 @@ impl<'a, P: Problem> ApplyCore<'a, P> {
             trace: Trace::default(),
             gap_estimate: f64::INFINITY,
             k: 0,
+            generation: 0,
             asm: BatchAssembler::new(),
             watch: Stopwatch::start(),
         }
+    }
+
+    /// Resume this core from a durable checkpoint (crash recovery): jump
+    /// the iteration clock to `k`, adopt the checkpointed master
+    /// parameter bits, gap EMA, and trace prefix, and fence every future
+    /// message that is not stamped with `generation`. The caller
+    /// pre-loads the counters (`Counters::absorb`) and restores the
+    /// problem's server state separately — this method only owns what
+    /// the core itself owns.
+    pub fn resume(
+        &mut self,
+        k: u64,
+        master: Vec<f32>,
+        gap_estimate: f64,
+        trace: Trace,
+        generation: u64,
+    ) {
+        assert_eq!(
+            master.len(),
+            self.master.len(),
+            "checkpointed master dimension mismatch"
+        );
+        self.k = k;
+        self.master = master;
+        self.gap_estimate = gap_estimate;
+        self.trace = trace;
+        self.generation = generation;
+    }
+
+    /// The session generation this core accepts updates for.
+    pub fn generation(&self) -> u64 {
+        self.generation
+    }
+
+    /// Borrow the problem's server apply state (checkpoint encoding).
+    pub fn server_state(&self) -> &P::ServerState {
+        &self.state
+    }
+
+    /// Mutably borrow the server apply state (checkpoint restore).
+    pub fn server_state_mut(&mut self) -> &mut P::ServerState {
+        &mut self.state
+    }
+
+    /// The current gap EMA (checkpoint encoding; `drain` keeps it live).
+    pub fn gap_estimate(&self) -> f64 {
+        self.gap_estimate
+    }
+
+    /// Borrow the trace accumulated so far (checkpoint encoding).
+    pub fn trace(&self) -> &Trace {
+        &self.trace
     }
 
     /// The current master parameter (e.g. for snapshot answers).
@@ -168,6 +226,17 @@ impl<'a, P: Problem> ApplyCore<'a, P> {
         }
         Counters::add(&self.counters.payload_nnz, nnz);
         Counters::add(&self.counters.payload_bytes, bytes);
+        // Generation fence (crash recovery): a message computed under a
+        // different session generation was in flight across a crash +
+        // restore — its snapshot lineage is unverifiable, so it must
+        // never reach the assembler, no matter how fresh its k_read
+        // looks. Fenced before the staleness verdict; the telemetry
+        // above still counts it (the bytes crossed the transport).
+        if msg.generation != self.generation {
+            Counters::bump(&self.counters.stale_fenced);
+            recycle(msg.oracles);
+            return;
+        }
         // Staleness rule (paper Thm 4): drop if delay > k/2. The rule
         // itself lives in `sim::delay::accept_delay` — the single
         // definition site shared with the sequential delayed engine.
@@ -373,6 +442,7 @@ mod tests {
                     oracles: vec![o],
                     k_read: core.k(),
                     worker: 0,
+                    generation: 0,
                 },
                 noop,
             );
@@ -385,12 +455,56 @@ mod tests {
                 oracles: vec![fresh],
                 k_read: 0, // delay 8 > k/2 = 4
                 worker: 0,
+                generation: 0,
             },
             noop,
         );
         let snap = counters.snapshot();
         assert_eq!(snap.dropped, 1);
         assert_eq!(snap.updates_applied, 8);
+    }
+
+    #[test]
+    fn stale_generation_updates_are_fenced_before_the_assembler() {
+        let p = gfl_instance();
+        let counters = Counters::new();
+        let mut core = ApplyCore::new(&p, knobs(), &counters);
+        let noop: &RecycleHook<'_> = &|_| {};
+        // Simulate a restore: the core now runs generation 1.
+        let master = core.master().to_vec();
+        core.resume(0, master, f64::INFINITY, Trace::default(), 1);
+        assert_eq!(core.generation(), 1);
+        let before = core.master().to_vec();
+        // A pre-crash in-flight payload still stamped generation 0 — a
+        // perfectly fresh k_read must not save it from the fence.
+        let o = p.oracle(core.master(), 2);
+        core.ingest(
+            UpdateMsg {
+                oracles: vec![o],
+                k_read: core.k(),
+                worker: 0,
+                generation: 0,
+            },
+            noop,
+        );
+        assert!(!core.drain(&mut (), &mut |_, _, _, _| {}));
+        assert_eq!(counters.snapshot().stale_fenced, 1);
+        assert_eq!(counters.snapshot().updates_applied, 0);
+        assert_eq!(core.master(), before.as_slice(), "param untouched");
+        // The same payload at the adopted generation applies fine.
+        let o = p.oracle(core.master(), 2);
+        core.ingest(
+            UpdateMsg {
+                oracles: vec![o],
+                k_read: core.k(),
+                worker: 0,
+                generation: 1,
+            },
+            noop,
+        );
+        assert!(!core.drain(&mut (), &mut |_, _, _, _| {}));
+        assert_eq!(counters.snapshot().updates_applied, 1);
+        assert_eq!(counters.snapshot().stale_fenced, 1);
     }
 
     #[test]
@@ -404,6 +518,7 @@ mod tests {
                 oracles: vec![o],
                 k_read: 0,
                 worker: 1,
+                generation: 0,
             },
             &|_| {},
         );
@@ -438,6 +553,7 @@ mod tests {
                     oracles: vec![o],
                     k_read: 0,
                     worker,
+                    generation: 0,
                 },
                 &|_| {},
             );
@@ -472,6 +588,7 @@ mod tests {
                     oracles: vec![o],
                     k_read: 0,
                     worker,
+                    generation: 0,
                 },
                 &|_| {},
             );

@@ -61,10 +61,14 @@ impl BatchAssembler {
     /// displaced oracles (empty when nothing collided) so the caller can
     /// recycle the buffers.
     pub fn insert(&mut self, msg: UpdateMsg) -> Vec<BlockOracle> {
+        // The generation fence runs upstream in `ApplyCore::ingest`; by
+        // the time a message reaches the assembler its generation has
+        // already been validated, so it is dropped here.
         let UpdateMsg {
             mut oracles,
             k_read,
             worker,
+            generation: _,
         } = msg;
         // Compact displaced oracles into the front of the container while
         // draining it: position `idx` has already been taken by the time
@@ -98,6 +102,7 @@ impl BatchAssembler {
             mut oracles,
             k_read,
             worker,
+            generation: _,
         } = msg;
         let mut kept = 0usize;
         for idx in 0..oracles.len() {
@@ -175,6 +180,7 @@ mod tests {
             oracles: vec![BlockOracle::dense(block, vec![k_read as f32], 0.0)],
             k_read,
             worker: 0,
+            generation: 0,
         }
     }
 
@@ -188,6 +194,7 @@ mod tests {
                 .collect(),
             k_read,
             worker: 0,
+            generation: 0,
         }
     }
 
@@ -204,6 +211,7 @@ mod tests {
             }],
             k_read,
             worker: 0,
+            generation: 0,
         }
     }
 
@@ -337,6 +345,7 @@ mod tests {
             ],
             k_read: 0,
             worker: 7,
+            generation: 0,
         });
         asm.insert(msg(3, 0)); // worker 0
         assert_eq!(asm.remove_worker(7), 2);

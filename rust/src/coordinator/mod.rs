@@ -40,6 +40,13 @@ pub struct UpdateMsg {
     pub k_read: u64,
     /// Sender worker id.
     pub worker: usize,
+    /// Session generation the sender computed under. In-process engines
+    /// always run generation 0; the net serve role bumps its generation
+    /// on every restore from a durable checkpoint, and
+    /// [`apply::ApplyCore::ingest`] fences messages whose generation is
+    /// not the core's own (`stale_fenced`) so pre-crash in-flight
+    /// oracles can never corrupt a restored parameter.
+    pub generation: u64,
 }
 
 /// Sample the `batch` pairwise-distinct blocks a worker solves against one

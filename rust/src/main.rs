@@ -181,5 +181,14 @@ fn summarize(name: &str, r: &Report) {
             r.counters.reconnects,
             r.counters.event_stalls
         );
+        // Crash-recovery telemetry (v5): a separate line so the fleet
+        // line above stays byte-stable for the existing CI greps; the
+        // crash-recovery smokes grep these fields the same way.
+        println!(
+            "  recovery: checkpoints_written={} restores={} stale_fenced={}",
+            r.counters.checkpoints_written,
+            r.counters.restores,
+            r.counters.stale_fenced
+        );
     }
 }

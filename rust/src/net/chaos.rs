@@ -96,11 +96,20 @@ pub struct ChaosSpec {
     /// Probability an outbound `Update` write fails abruptly, ending the
     /// session (a resilient worker reconnects and rejoins).
     pub disconnect_p: f64,
+    /// `crash:K` — a **server-side** fault: the serve loop aborts its
+    /// shard after exactly K applied updates (generation 0 only, so a
+    /// restored loop cannot re-crash), making the checkpoint/restore
+    /// path deterministically CI-testable without timing races. Workers
+    /// ignore this op entirely (see [`ChaosSpec::is_noop`]).
+    pub crash: Option<u64>,
 }
 
 impl ChaosSpec {
-    /// True when no fault is ever injected — the worker skips the
-    /// [`ChaosStream`] wrapper entirely in that case.
+    /// True when no fault is ever injected **on the stream** — the
+    /// worker skips the [`ChaosStream`] wrapper entirely in that case.
+    /// Deliberately ignores `crash`: it is a server-loop fault, not a
+    /// stream fault, so `run.chaos = crash:K` alone keeps the worker
+    /// transport bit-identical to the no-chaos path.
     pub fn is_noop(&self) -> bool {
         self.tx_delay.is_none()
             && self.rx_delay.is_none()
@@ -115,12 +124,13 @@ impl ChaosSpec {
     /// none | op[,op ...]
     /// op := delay:fixed:MS:P | delay:pareto:MEAN_MS:P
     ///     | rx-delay:fixed:MS:P | rx-delay:pareto:MEAN_MS:P
-    ///     | drop:P | reorder:P:DEPTH | disconnect:P
+    ///     | drop:P | reorder:P:DEPTH | disconnect:P | crash:K
     /// ```
     ///
     /// Probabilities must lie in `[0, 1]`, durations must be finite and
-    /// non-negative, `DEPTH` (the reorder hold-buffer bound) must be a
-    /// positive integer, and each op may appear at most once.
+    /// non-negative, `DEPTH` (the reorder hold-buffer bound) and `K`
+    /// (the server-side crash point, in applied updates) must be
+    /// positive integers, and each op may appear at most once.
     pub fn parse(text: &str) -> Result<ChaosSpec> {
         let text = text.trim();
         let mut spec = ChaosSpec::default();
@@ -174,11 +184,26 @@ impl ChaosSpec {
                 );
                 saw_disc = true;
                 spec.disconnect_p = parse_prob(op, p)?;
+            } else if let Some(k_text) = op.strip_prefix("crash:") {
+                ensure!(
+                    spec.crash.is_none(),
+                    "run.chaos: duplicate crash op in {text:?}"
+                );
+                let k: u64 = k_text.trim().parse().map_err(|_| {
+                    anyhow!("run.chaos: {op:?}: bad crash point (crash:K \
+                             with K a positive integer of applied updates)")
+                })?;
+                ensure!(
+                    k >= 1,
+                    "run.chaos: {op:?}: crash point must be >= 1"
+                );
+                spec.crash = Some(k);
             } else {
                 bail!(
                     "run.chaos: unknown op {op:?} (expected delay:fixed:MS:P \
                      | delay:pareto:MEAN_MS:P | rx-delay:... | drop:P | \
-                     reorder:P:DEPTH | disconnect:P, comma-separated)"
+                     reorder:P:DEPTH | disconnect:P | crash:K, \
+                     comma-separated)"
                 );
             }
         }
@@ -256,6 +281,13 @@ impl<S> ChaosStream<S> {
             rng,
             held: Vec::new(),
         }
+    }
+
+    /// The wrapped transport. Chaos never hides the stream's own knobs —
+    /// the worker reaches through here to arm read timeouts for
+    /// heartbeat-while-pulling.
+    pub fn get_ref(&self) -> &S {
+        &self.inner
     }
 
     fn roll(&mut self, p: f64) -> bool {
@@ -348,7 +380,7 @@ mod tests {
         assert!(ChaosSpec::parse("").unwrap().is_noop());
         let spec = ChaosSpec::parse(
             "delay:pareto:30:0.5, rx-delay:fixed:2:1.0, drop:0.1, \
-             reorder:0.2:4, disconnect:0.05",
+             reorder:0.2:4, disconnect:0.05, crash:40",
         )
         .unwrap();
         assert_eq!(
@@ -359,8 +391,12 @@ mod tests {
         assert_eq!(spec.drop_p, 0.1);
         assert_eq!(spec.reorder, Some((0.2, 4)));
         assert_eq!(spec.disconnect_p, 0.05);
+        assert_eq!(spec.crash, Some(40));
         assert!(!spec.is_noop());
         assert!(!ChaosSpec::parse("reorder:1.0:1").unwrap().is_noop());
+        // crash is a server-loop fault, not a stream fault: on its own it
+        // must keep the worker transport unwrapped (bit-identical path).
+        assert!(ChaosSpec::parse("crash:7").unwrap().is_noop());
     }
 
     #[test]
@@ -381,6 +417,11 @@ mod tests {
             "reorder:1.5:2",
             "reorder:0.5:two",
             "reorder:0.5:2,reorder:0.1:1",
+            "crash:0",
+            "crash:-3",
+            "crash:soon",
+            "crash:",
+            "crash:2,crash:5",
         ] {
             assert!(ChaosSpec::parse(bad).is_err(), "{bad:?} must be rejected");
         }
@@ -399,6 +440,7 @@ mod tests {
             &Msg::Update {
                 k_read: 0,
                 worker: 0,
+                generation: 0,
                 oracles: vec![],
             },
             &mut scratch,
@@ -428,6 +470,7 @@ mod tests {
                 &Msg::Update {
                     k_read: k,
                     worker: 0,
+                    generation: 0,
                     oracles: vec![],
                 },
                 &mut scratch,
@@ -467,6 +510,7 @@ mod tests {
                 &Msg::Update {
                     k_read: k,
                     worker: 0,
+                    generation: 0,
                     oracles: vec![],
                 },
                 &mut scratch,
@@ -504,6 +548,7 @@ mod tests {
             &Msg::Update {
                 k_read: 0,
                 worker: 0,
+                generation: 0,
                 oracles: vec![],
             },
             &mut scratch,

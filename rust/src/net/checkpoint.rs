@@ -1,0 +1,671 @@
+//! Durable per-shard serve-loop checkpoints — the crash-recovery
+//! substrate of the serve role.
+//!
+//! A [`Checkpoint`] freezes everything a shard's serve loop needs to
+//! resume mid-run as if the crash never happened: the run fingerprint
+//! (so a checkpoint can never be restored into a *different* run), the
+//! session generation, the applied-update count `k`, the master
+//! parameter (persisted with the wire-v4 lossless zero-RLE snapshot
+//! encoder, so the restored param is bit-exact by construction), the
+//! gap-EMA estimate, the convergence trace so far, a full
+//! [`CounterSnapshot`], and the problem's opaque durable server state
+//! (e.g. the SSVM dual bookkeeping).
+//!
+//! The on-disk format is versioned, CRC-checked, and written atomically
+//! — encode into a sibling temp file, `fsync` it, `rename` over the
+//! final path, `fsync` the directory — so a crash *during* a checkpoint
+//! write leaves the previous checkpoint intact, and a torn write can
+//! never be mistaken for a valid one. Decoding reuses the wire codec's
+//! hardened [`Dec`] cursor: truncation, bit flips, hostile counts and
+//! CRC damage all degrade to clean errors, never panics, and the
+//! restore entry point ([`load_for_restore`]) collapses every failure
+//! to a logged fresh start — a corrupt checkpoint must not be able to
+//! brick a serve.
+
+use super::shard::ShardPlan;
+use super::wire::{self, Dec};
+use crate::util::metrics::{CounterSnapshot, Sample, Trace};
+use anyhow::{ensure, Context, Result};
+use std::fs::{self, File};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+/// On-disk magic of a checkpoint file ("apfw checkpoint").
+const MAGIC: &[u8; 4] = b"apck";
+
+/// Checkpoint format version. Bumped on any layout change; a restored
+/// server only ever accepts its own version (no cross-version decode).
+const VERSION: u16 = 1;
+
+/// Hard cap on a checkpoint file a decoder will even look at, sized to
+/// the wire frame cap (the master param must fit in a Snapshot frame
+/// anyway, and nothing else in the file comes close).
+const MAX_CHECKPOINT_BYTES: u64 = super::wire::MAX_FRAME_BYTES as u64;
+
+/// Everything a shard serve loop persists per checkpoint and needs back
+/// on restore. Field order mirrors the on-disk layout (§ format below).
+///
+/// On-disk layout (little-endian throughout):
+///
+/// ```text
+/// magic "apck" | version u16 | fingerprint u64 | shard u32
+/// generation u64 | k u64 | gap_estimate f64
+/// master: wire-v4 full-snapshot body (kind byte + zero-RLE runs)
+/// samples: count u32, then per sample
+///     iter u64 | oracle_calls u64 | elapsed_s f64 | objective f64 | gap f64
+/// counters: 21 x u64 (CounterSnapshot fields in declaration order)
+/// server_state: len u32 | bytes
+/// crc32 u32 over every preceding byte (IEEE, reflected)
+/// ```
+#[derive(Debug, Clone)]
+pub struct Checkpoint {
+    /// Run identity: [`fingerprint`] over the Hello config pairs and the
+    /// session [`ShardPlan`]. A checkpoint whose fingerprint does not
+    /// match the restoring run is rejected (fresh start) — restoring
+    /// across different problems, knobs, or shard layouts would corrupt
+    /// the solve silently.
+    pub fingerprint: u64,
+    /// The shard this checkpoint belongs to.
+    pub shard: u32,
+    /// Session generation the checkpoint was taken in. A restore resumes
+    /// at `generation + 1`, which is what lets the apply core fence
+    /// pre-crash in-flight updates.
+    pub generation: u64,
+    /// Applied-update count (server iteration) at the checkpoint.
+    pub k: u64,
+    /// The serve loop's duality-gap EMA at the checkpoint.
+    pub gap_estimate: f64,
+    /// The shard's master parameter (its param span), bit-exact.
+    pub master: Vec<f32>,
+    /// Convergence samples recorded up to the checkpoint.
+    pub samples: Vec<Sample>,
+    /// Counter snapshot at the checkpoint, pre-loaded into the restored
+    /// loop's counters so fleet/TX telemetry spans the whole run.
+    pub counters: CounterSnapshot,
+    /// The problem's opaque durable server state
+    /// ([`crate::problems::Problem::checkpoint_server_state`]); empty
+    /// for stateless problems.
+    pub server_state: Vec<u8>,
+}
+
+/// Config keys the fingerprint deliberately ignores: the operational
+/// knobs a restarted coordinator legitimately changes without changing
+/// *which run* it is resuming. `--restore` itself lowers to
+/// `run.restore` (a restart would self-defeat if hashed), the checkpoint
+/// knobs only say *how* to persist, and the wall-clock budget / liveness
+/// windows / fault injection shape the schedule, not the identity of the
+/// applied-update sequence being resumed. Everything else — problem
+/// shape, seed, tau, batch, payload/wire modes, epoch budget — stays in
+/// the hash, so a checkpoint from a *mathematically* different run is
+/// still refused.
+const FINGERPRINT_EXCLUDED_KEYS: &[&str] = &[
+    "run.restore",
+    "run.checkpoint_dir",
+    "run.checkpoint_every",
+    "run.max_secs",
+    "run.liveness_ms",
+    "run.accept_timeout_secs",
+    "run.chaos",
+];
+
+/// FNV-1a 64 run fingerprint over the handshake config pairs and the
+/// session [`ShardPlan`] — exactly the inputs that determine whether two
+/// serve sessions are "the same run" for restore purposes. Deliberately
+/// excludes anything per-session (generation, counters) and the
+/// operational knobs in [`FINGERPRINT_EXCLUDED_KEYS`]: a restarted
+/// server with equivalent config and plan must produce the identical
+/// fingerprint.
+pub fn fingerprint(
+    config_pairs: &[(String, String)],
+    plan: &ShardPlan,
+) -> u64 {
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h = OFFSET;
+    let mut eat = |bytes: &[u8]| {
+        for &b in bytes {
+            h ^= u64::from(b);
+            h = h.wrapping_mul(PRIME);
+        }
+        // Field separator outside the byte alphabet boundary, so
+        // ("ab","c") and ("a","bc") cannot collide by concatenation.
+        h ^= 0xff;
+        h = h.wrapping_mul(PRIME);
+    };
+    for (k, v) in config_pairs {
+        if FINGERPRINT_EXCLUDED_KEYS.contains(&k.as_str()) {
+            continue;
+        }
+        eat(k.as_bytes());
+        eat(v.as_bytes());
+    }
+    for s in &plan.shards {
+        eat(s.addr.as_bytes());
+        eat(&s.block_start.to_le_bytes());
+        eat(&s.block_end.to_le_bytes());
+        eat(&s.param_start.to_le_bytes());
+        eat(&s.param_end.to_le_bytes());
+    }
+    h
+}
+
+/// CRC-32 (IEEE 802.3, reflected, init/final-xor `0xFFFF_FFFF`) — the
+/// same checksum gzip and PNG use, bitwise so no table needs baking.
+fn crc32(data: &[u8]) -> u32 {
+    let mut crc = 0xffff_ffffu32;
+    for &b in data {
+        crc ^= u32::from(b);
+        for _ in 0..8 {
+            let mask = (crc & 1).wrapping_neg();
+            crc = (crc >> 1) ^ (0xedb8_8320 & mask);
+        }
+    }
+    !crc
+}
+
+/// The checkpoint file path for `shard` under `dir`.
+pub fn shard_path(dir: &Path, shard: usize) -> PathBuf {
+    dir.join(format!("shard-{shard}.ckpt"))
+}
+
+impl Checkpoint {
+    /// Serialize to the documented on-disk layout, CRC trailer included.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut buf = Vec::with_capacity(
+            128 + 4 * self.master.len() + self.server_state.len(),
+        );
+        buf.extend_from_slice(MAGIC);
+        buf.extend_from_slice(&VERSION.to_le_bytes());
+        buf.extend_from_slice(&self.fingerprint.to_le_bytes());
+        buf.extend_from_slice(&self.shard.to_le_bytes());
+        buf.extend_from_slice(&self.generation.to_le_bytes());
+        buf.extend_from_slice(&self.k.to_le_bytes());
+        buf.extend_from_slice(&self.gap_estimate.to_le_bytes());
+        wire::put_master(&mut buf, &self.master);
+        buf.extend_from_slice(&(self.samples.len() as u32).to_le_bytes());
+        for s in &self.samples {
+            buf.extend_from_slice(&(s.iter as u64).to_le_bytes());
+            buf.extend_from_slice(&s.oracle_calls.to_le_bytes());
+            buf.extend_from_slice(&s.elapsed_s.to_le_bytes());
+            buf.extend_from_slice(&s.objective.to_le_bytes());
+            buf.extend_from_slice(&s.gap.to_le_bytes());
+        }
+        for c in counter_fields(&self.counters) {
+            buf.extend_from_slice(&c.to_le_bytes());
+        }
+        buf.extend_from_slice(
+            &(self.server_state.len() as u32).to_le_bytes(),
+        );
+        buf.extend_from_slice(&self.server_state);
+        let crc = crc32(&buf);
+        buf.extend_from_slice(&crc.to_le_bytes());
+        buf
+    }
+
+    /// Decode and validate one checkpoint file image. Every failure mode
+    /// — wrong magic/version, truncation anywhere, hostile counts, CRC
+    /// mismatch, trailing garbage — is a clean `Err`, never a panic
+    /// (pinned by the corpus sweep in this module's tests).
+    pub fn decode(raw: &[u8]) -> Result<Checkpoint> {
+        ensure!(
+            raw.len() >= MAGIC.len() + 2 + 4,
+            "checkpoint file is too short ({} bytes)",
+            raw.len()
+        );
+        // CRC first: any bit flip anywhere fails here with one message,
+        // so the structural decode below only ever sees self-consistent
+        // damage (truncation of the CRC-covered image itself).
+        let (body, trailer) = raw.split_at(raw.len() - 4);
+        let stored = u32::from_le_bytes(trailer.try_into().unwrap());
+        let computed = crc32(body);
+        ensure!(
+            stored == computed,
+            "checkpoint CRC mismatch (stored {stored:#010x}, computed \
+             {computed:#010x}) — file is corrupt or torn"
+        );
+        let mut d = Dec::new(body);
+        let magic = d.take(4)?;
+        ensure!(
+            magic == MAGIC,
+            "not a checkpoint file (magic {magic:02x?})"
+        );
+        let version = u16::from_le_bytes(d.take(2)?.try_into().unwrap());
+        ensure!(
+            version == VERSION,
+            "checkpoint format v{version} (this build reads only \
+             v{VERSION})"
+        );
+        let fingerprint = d.u64()?;
+        let shard = d.u32()?;
+        let generation = d.u64()?;
+        let k = d.u64()?;
+        let gap_estimate = d.f64()?;
+        let master = wire::get_master(&mut d)?;
+        let n_samples = d.count(40)?;
+        let mut samples = Vec::with_capacity(n_samples);
+        for _ in 0..n_samples {
+            samples.push(Sample {
+                iter: d.u64()? as usize,
+                oracle_calls: d.u64()?,
+                elapsed_s: d.f64()?,
+                objective: d.f64()?,
+                gap: d.f64()?,
+            });
+        }
+        let mut counters = CounterSnapshot::default();
+        {
+            let fields = counter_fields_mut(&mut counters);
+            for f in fields {
+                *f = d.u64()?;
+            }
+        }
+        let state_len = d.count(1)?;
+        let server_state = d.take(state_len)?.to_vec();
+        ensure!(
+            d.remaining() == 0,
+            "checkpoint has {} trailing bytes after the server state",
+            d.remaining()
+        );
+        Ok(Checkpoint {
+            fingerprint,
+            shard,
+            generation,
+            k,
+            gap_estimate,
+            master,
+            samples,
+            counters,
+            server_state,
+        })
+    }
+
+    /// Rebuild a [`Trace`] from the persisted samples.
+    pub fn trace(&self) -> Trace {
+        Trace {
+            samples: self.samples.clone(),
+        }
+    }
+
+    /// Write this checkpoint durably and atomically under `dir` (created
+    /// if missing): encode into `shard-<s>.ckpt.tmp`, `fsync`, `rename`
+    /// over `shard-<s>.ckpt`, then `fsync` the directory so the rename
+    /// itself survives a crash. Readers therefore only ever observe the
+    /// previous complete checkpoint or the new complete one.
+    pub fn write_atomic(&self, dir: &Path) -> Result<()> {
+        fs::create_dir_all(dir).with_context(|| {
+            format!("creating checkpoint dir {}", dir.display())
+        })?;
+        let finale = shard_path(dir, self.shard as usize);
+        let tmp = finale.with_extension("ckpt.tmp");
+        let image = self.encode();
+        {
+            let mut f = File::create(&tmp).with_context(|| {
+                format!("creating {}", tmp.display())
+            })?;
+            f.write_all(&image)?;
+            f.sync_all()?;
+        }
+        fs::rename(&tmp, &finale).with_context(|| {
+            format!("renaming {} -> {}", tmp.display(), finale.display())
+        })?;
+        // Persist the rename: fsync the containing directory.
+        if let Ok(d) = File::open(dir) {
+            d.sync_all().ok();
+        }
+        Ok(())
+    }
+
+    /// Load and fully validate shard `shard`'s checkpoint from `dir`.
+    /// `Ok(None)` when no file exists (a fresh run); `Err` on any decode
+    /// or validation failure.
+    pub fn load(dir: &Path, shard: usize) -> Result<Option<Checkpoint>> {
+        let path = shard_path(dir, shard);
+        let meta = match fs::metadata(&path) {
+            Ok(m) => m,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                return Ok(None)
+            }
+            Err(e) => {
+                return Err(e).with_context(|| {
+                    format!("statting {}", path.display())
+                })
+            }
+        };
+        ensure!(
+            meta.len() <= MAX_CHECKPOINT_BYTES,
+            "checkpoint {} is {} bytes (cap {MAX_CHECKPOINT_BYTES})",
+            path.display(),
+            meta.len()
+        );
+        let raw = fs::read(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let ck = Checkpoint::decode(&raw)
+            .with_context(|| format!("decoding {}", path.display()))?;
+        ensure!(
+            ck.shard as usize == shard,
+            "checkpoint {} is for shard {} (expected {shard})",
+            path.display(),
+            ck.shard
+        );
+        Ok(Some(ck))
+    }
+}
+
+/// Restore entry point for the serve loop: load shard `shard`'s
+/// checkpoint and accept it only if it carries `fingerprint`. EVERY
+/// failure — no file, truncation, corruption, CRC damage, a checkpoint
+/// from a different run — collapses to `None` with one log line: the
+/// fresh-start fallback. Restore can improve a run; it must never be
+/// able to abort one.
+pub fn load_for_restore(
+    dir: &Path,
+    shard: usize,
+    fingerprint: u64,
+) -> Option<Checkpoint> {
+    match Checkpoint::load(dir, shard) {
+        Ok(Some(ck)) if ck.fingerprint == fingerprint => Some(ck),
+        Ok(Some(ck)) => {
+            eprintln!(
+                "[serve] shard {shard}: checkpoint fingerprint \
+                 {:#018x} does not match this run ({fingerprint:#018x}); \
+                 starting fresh",
+                ck.fingerprint
+            );
+            None
+        }
+        Ok(None) => None,
+        Err(e) => {
+            eprintln!(
+                "[serve] shard {shard}: unusable checkpoint ({e:#}); \
+                 starting fresh"
+            );
+            None
+        }
+    }
+}
+
+/// The [`CounterSnapshot`] fields in their on-disk order. Kept as ONE
+/// list (with [`counter_fields_mut`] mirroring it) so adding a counter
+/// without extending the checkpoint layout is a compile error here, not
+/// silent data loss.
+fn counter_fields(c: &CounterSnapshot) -> [u64; 21] {
+    [
+        c.oracle_calls,
+        c.updates_applied,
+        c.collisions,
+        c.dropped,
+        c.iterations,
+        c.snapshot_reads,
+        c.payload_nnz,
+        c.payload_bytes,
+        c.shipped_payload_bytes,
+        c.wire_tx_bytes,
+        c.wire_rx_bytes,
+        c.delay_sum,
+        c.delay_max,
+        c.workers_joined,
+        c.workers_lost,
+        c.blocks_requeued,
+        c.reconnects,
+        c.event_stalls,
+        c.checkpoints_written,
+        c.restores,
+        c.stale_fenced,
+    ]
+}
+
+/// Mutable twin of [`counter_fields`] — the decode-side field order.
+fn counter_fields_mut(c: &mut CounterSnapshot) -> [&mut u64; 21] {
+    [
+        &mut c.oracle_calls,
+        &mut c.updates_applied,
+        &mut c.collisions,
+        &mut c.dropped,
+        &mut c.iterations,
+        &mut c.snapshot_reads,
+        &mut c.payload_nnz,
+        &mut c.payload_bytes,
+        &mut c.shipped_payload_bytes,
+        &mut c.wire_tx_bytes,
+        &mut c.wire_rx_bytes,
+        &mut c.delay_sum,
+        &mut c.delay_max,
+        &mut c.workers_joined,
+        &mut c.workers_lost,
+        &mut c.blocks_requeued,
+        &mut c.reconnects,
+        &mut c.event_stalls,
+        &mut c.checkpoints_written,
+        &mut c.restores,
+        &mut c.stale_fenced,
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn plan() -> ShardPlan {
+        ShardPlan::single("127.0.0.1:7000".to_string(), 8, 16)
+    }
+
+    fn pairs() -> Vec<(String, String)> {
+        vec![
+            ("gfl.d".into(), "4".into()),
+            ("run.tau".into(), "2".into()),
+        ]
+    }
+
+    fn sample_checkpoint() -> Checkpoint {
+        let counters = CounterSnapshot {
+            updates_applied: 37,
+            wire_rx_bytes: 4096,
+            delay_max: 5,
+            stale_fenced: 2,
+            ..Default::default()
+        };
+        Checkpoint {
+            fingerprint: fingerprint(&pairs(), &plan()),
+            shard: 0,
+            generation: 3,
+            k: 37,
+            gap_estimate: 0.125,
+            master: vec![0.0, 1.5, 0.0, 0.0, -2.25, 0.5, 0.0, 3.0],
+            samples: vec![
+                Sample {
+                    iter: 16,
+                    oracle_calls: 16,
+                    elapsed_s: 0.5,
+                    objective: 1.25,
+                    gap: 0.5,
+                },
+                Sample {
+                    iter: 32,
+                    oracle_calls: 32,
+                    elapsed_s: 1.0,
+                    objective: 0.75,
+                    gap: 0.25,
+                },
+            ],
+            counters,
+            server_state: vec![1, 2, 3, 4, 5],
+        }
+    }
+
+    #[test]
+    fn roundtrips_bit_exactly() {
+        let ck = sample_checkpoint();
+        let back = Checkpoint::decode(&ck.encode()).unwrap();
+        assert_eq!(back.fingerprint, ck.fingerprint);
+        assert_eq!(back.shard, ck.shard);
+        assert_eq!(back.generation, ck.generation);
+        assert_eq!(back.k, ck.k);
+        assert_eq!(back.gap_estimate.to_bits(), ck.gap_estimate.to_bits());
+        assert_eq!(
+            back.master.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            ck.master.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+        assert_eq!(back.samples.len(), ck.samples.len());
+        for (b, s) in back.samples.iter().zip(&ck.samples) {
+            assert_eq!(b.iter, s.iter);
+            assert_eq!(b.oracle_calls, s.oracle_calls);
+            assert_eq!(b.elapsed_s.to_bits(), s.elapsed_s.to_bits());
+            assert_eq!(b.objective.to_bits(), s.objective.to_bits());
+            assert_eq!(b.gap.to_bits(), s.gap.to_bits());
+        }
+        assert_eq!(back.counters, ck.counters);
+        assert_eq!(back.server_state, ck.server_state);
+    }
+
+    #[test]
+    fn fingerprint_separates_runs_and_is_stable() {
+        let f = fingerprint(&pairs(), &plan());
+        assert_eq!(f, fingerprint(&pairs(), &plan()), "deterministic");
+        let mut other = pairs();
+        other[0].1 = "5".into();
+        assert_ne!(f, fingerprint(&other, &plan()), "config change");
+        let moved =
+            ShardPlan::single("127.0.0.1:7001".to_string(), 8, 16);
+        assert_ne!(f, fingerprint(&pairs(), &moved), "plan change");
+        // Concatenation ambiguity across the key/value boundary must not
+        // collide (the separator's job).
+        let a = vec![("ab".to_string(), "c".to_string())];
+        let b = vec![("a".to_string(), "bc".to_string())];
+        assert_ne!(fingerprint(&a, &plan()), fingerprint(&b, &plan()));
+        // Operational knobs must NOT perturb the fingerprint: a restart
+        // that adds --restore, extends the wall-clock budget, or drops
+        // the chaos op is still "the same run" and must accept its own
+        // checkpoints.
+        let mut restarted = pairs();
+        restarted.push(("run.restore".into(), "true".into()));
+        restarted.push(("run.max_secs".into(), "8".into()));
+        restarted.push(("run.chaos".into(), "crash:50".into()));
+        restarted.push(("run.checkpoint_every".into(), "20".into()));
+        assert_eq!(
+            f,
+            fingerprint(&restarted, &plan()),
+            "operational knobs excluded"
+        );
+    }
+
+    /// PR 8-style hostility sweep: every truncation prefix and every
+    /// single-byte flip of a valid image must decode to a clean error —
+    /// zero panics, zero false accepts.
+    #[test]
+    fn corrupt_images_fail_cleanly_never_panic() {
+        let image = sample_checkpoint().encode();
+        for len in 0..image.len() {
+            assert!(
+                Checkpoint::decode(&image[..len]).is_err(),
+                "truncation to {len} bytes must not decode"
+            );
+        }
+        for pos in 0..image.len() {
+            let mut bad = image.clone();
+            bad[pos] ^= 0x40;
+            // A flip can never be silently accepted: the CRC covers the
+            // body, and a flip inside the CRC trailer mismatches the
+            // intact body.
+            assert!(
+                Checkpoint::decode(&bad).is_err(),
+                "byte flip at {pos} must not decode"
+            );
+        }
+    }
+
+    #[test]
+    fn crc_trailer_rejects_recomputed_garbage() {
+        // Flip a body byte AND fix the CRC up: structural validation
+        // still owns the failure (bad magic here), proving the decode
+        // does not rely on the CRC alone.
+        let mut bad = sample_checkpoint().encode();
+        bad[0] ^= 0xff; // magic
+        let n = bad.len();
+        let crc = crc32(&bad[..n - 4]).to_le_bytes();
+        bad[n - 4..].copy_from_slice(&crc);
+        let err = Checkpoint::decode(&bad).unwrap_err().to_string();
+        assert!(err.contains("magic"), "{err}");
+    }
+
+    #[test]
+    fn trailing_bytes_are_rejected() {
+        // Extra bytes between the server state and where the CRC is
+        // expected: recompute a valid CRC over the padded body so only
+        // the trailing-bytes check can reject it.
+        let mut padded = sample_checkpoint().encode();
+        let n = padded.len();
+        padded.truncate(n - 4);
+        padded.extend_from_slice(&[0u8; 3]);
+        let crc = crc32(&padded).to_le_bytes();
+        padded.extend_from_slice(&crc);
+        let err = Checkpoint::decode(&padded).unwrap_err().to_string();
+        assert!(err.contains("trailing"), "{err}");
+    }
+
+    #[test]
+    fn atomic_write_then_load_roundtrips() {
+        let dir = std::env::temp_dir().join(format!(
+            "apfw-ckpt-test-{}",
+            std::process::id()
+        ));
+        let _ = fs::remove_dir_all(&dir);
+        let ck = sample_checkpoint();
+        ck.write_atomic(&dir).unwrap();
+        // No temp file left behind.
+        assert!(!shard_path(&dir, 0).with_extension("ckpt.tmp").exists());
+        let back = Checkpoint::load(&dir, 0).unwrap().unwrap();
+        assert_eq!(back.k, ck.k);
+        assert_eq!(back.generation, ck.generation);
+        // A second write overwrites in place (same path, still atomic).
+        let mut ck2 = ck.clone();
+        ck2.k = 99;
+        ck2.generation = 4;
+        ck2.write_atomic(&dir).unwrap();
+        let back = Checkpoint::load(&dir, 0).unwrap().unwrap();
+        assert_eq!((back.k, back.generation), (99, 4));
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn load_for_restore_falls_back_fresh_on_every_failure() {
+        let dir = std::env::temp_dir().join(format!(
+            "apfw-ckpt-restore-test-{}",
+            std::process::id()
+        ));
+        let _ = fs::remove_dir_all(&dir);
+        let ck = sample_checkpoint();
+        let fp = ck.fingerprint;
+
+        // Missing dir / missing file: fresh start.
+        assert!(load_for_restore(&dir, 0, fp).is_none());
+
+        // Valid file, matching fingerprint: restored.
+        ck.write_atomic(&dir).unwrap();
+        let got = load_for_restore(&dir, 0, fp).expect("restores");
+        assert_eq!(got.k, ck.k);
+
+        // Fingerprint mismatch (a different run): fresh start.
+        assert!(load_for_restore(&dir, 0, fp ^ 1).is_none());
+
+        // Wrong shard id in the file: fresh start for shard 1 (no file)
+        // and, with the file renamed into shard 1's slot, the embedded
+        // shard check rejects it.
+        assert!(load_for_restore(&dir, 1, fp).is_none());
+        fs::rename(shard_path(&dir, 0), shard_path(&dir, 1)).unwrap();
+        assert!(load_for_restore(&dir, 1, fp).is_none());
+        fs::rename(shard_path(&dir, 1), shard_path(&dir, 0)).unwrap();
+
+        // Corrupt file on disk: fresh start.
+        let path = shard_path(&dir, 0);
+        let mut raw = fs::read(&path).unwrap();
+        let mid = raw.len() / 2;
+        raw[mid] ^= 0x10;
+        fs::write(&path, &raw).unwrap();
+        assert!(load_for_restore(&dir, 0, fp).is_none());
+
+        // Truncated file on disk: fresh start.
+        fs::write(&path, &raw[..raw.len() / 3]).unwrap();
+        assert!(load_for_restore(&dir, 0, fp).is_none());
+        fs::remove_dir_all(&dir).unwrap();
+    }
+}

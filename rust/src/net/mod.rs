@@ -38,6 +38,7 @@
 #![deny(missing_docs)]
 
 pub mod chaos;
+pub mod checkpoint;
 pub mod server;
 pub mod shard;
 pub mod wire;
@@ -51,7 +52,7 @@ pub use worker::{run_resilient, run_with_retry, WorkerSummary};
 
 use crate::problems::PayloadMode;
 use crate::util::config::Config;
-use anyhow::{anyhow, ensure, Result};
+use anyhow::{anyhow, bail, ensure, Result};
 use std::ops::Range;
 use std::time::Duration;
 
@@ -88,6 +89,21 @@ pub struct NetOptions {
     /// same mode from the same source; `exact` keeps every body
     /// byte-identical to protocol v3.
     pub wire: WireMode,
+    /// `run.checkpoint_every` (default 0 = off): write a durable
+    /// per-shard [`checkpoint::Checkpoint`] every this many applied
+    /// updates. 0 keeps the serve loop byte- and behavior-identical to
+    /// the checkpoint-less v4 fleet; any positive cadence requires
+    /// `run.checkpoint_dir`.
+    pub checkpoint_every: u64,
+    /// `run.checkpoint_dir` (default unset): directory holding the
+    /// per-shard `shard-<s>.ckpt` files. Setting it (without `restore`)
+    /// also arms fingerprint-validated auto-restore: a valid checkpoint
+    /// of the same run found at bind is resumed from.
+    pub checkpoint_dir: Option<String>,
+    /// `run.restore` (default false): explicitly request a resume from
+    /// `run.checkpoint_dir`. Restore never aborts a run — a missing,
+    /// corrupt, or foreign checkpoint logs a fresh-start fallback.
+    pub restore: bool,
 }
 
 impl Default for NetOptions {
@@ -99,13 +115,17 @@ impl Default for NetOptions {
             shards: 1,
             shard_id: None,
             wire: WireMode::Exact,
+            checkpoint_every: 0,
+            checkpoint_dir: None,
+            restore: false,
         }
     }
 }
 
 impl NetOptions {
     /// Parse and strictly validate the `run.{accept_timeout_secs,
-    /// liveness_ms, chaos, shards, shard_id, wire}` knobs.
+    /// liveness_ms, chaos, shards, shard_id, wire, checkpoint_every,
+    /// checkpoint_dir, restore}` knobs.
     pub fn from_config(cfg: &Config) -> Result<Self> {
         let accept_timeout = match cfg.get("run.accept_timeout_secs") {
             None => Duration::from_secs(30),
@@ -166,6 +186,42 @@ impl NetOptions {
             }
         };
         let wire = WireMode::parse(&cfg.get_or("run.wire", "exact"))?;
+        let checkpoint_every = match cfg.get("run.checkpoint_every") {
+            None => 0,
+            Some(v) => v.parse::<u64>().map_err(|_| {
+                anyhow!(
+                    "run.checkpoint_every must be a nonnegative integer \
+                     count of applied updates (0 = off), got {v:?}"
+                )
+            })?,
+        };
+        let checkpoint_dir =
+            cfg.get("run.checkpoint_dir").map(|v| v.to_string());
+        if let Some(d) = checkpoint_dir.as_deref() {
+            ensure!(
+                !d.trim().is_empty(),
+                "run.checkpoint_dir must not be empty when set"
+            );
+        }
+        ensure!(
+            checkpoint_every == 0 || checkpoint_dir.is_some(),
+            "run.checkpoint_every = {checkpoint_every} needs \
+             run.checkpoint_dir to say where checkpoints go"
+        );
+        let restore = match cfg.get("run.restore") {
+            None => false,
+            Some(v) => match v {
+                "true" | "1" => true,
+                "false" | "0" => false,
+                other => bail!(
+                    "run.restore must be true or false, got {other:?}"
+                ),
+            },
+        };
+        ensure!(
+            !restore || checkpoint_dir.is_some(),
+            "run.restore needs run.checkpoint_dir to restore from"
+        );
         Ok(Self {
             accept_timeout,
             liveness,
@@ -173,6 +229,9 @@ impl NetOptions {
             shards,
             shard_id,
             wire,
+            checkpoint_every,
+            checkpoint_dir,
+            restore,
         })
     }
 
@@ -299,6 +358,26 @@ mod tests {
         let mut cfg = Config::new();
         cfg.set("run.liveness_ms", "0");
         assert_eq!(NetOptions::from_config(&cfg).unwrap().liveness, None);
+
+        // Checkpointing defaults off; a cadence + dir parses; restore
+        // accepts the boolean vocabulary.
+        assert_eq!(NetOptions::default().checkpoint_every, 0);
+        assert_eq!(NetOptions::default().checkpoint_dir, None);
+        assert!(!NetOptions::default().restore);
+        let mut cfg = Config::new();
+        cfg.set("run.checkpoint_every", "50");
+        cfg.set("run.checkpoint_dir", "/tmp/ck");
+        cfg.set("run.restore", "true");
+        let opts = NetOptions::from_config(&cfg).unwrap();
+        assert_eq!(opts.checkpoint_every, 50);
+        assert_eq!(opts.checkpoint_dir.as_deref(), Some("/tmp/ck"));
+        assert!(opts.restore);
+        // A dir alone (auto-restore armed, no cadence) is valid.
+        let mut cfg = Config::new();
+        cfg.set("run.checkpoint_dir", "/tmp/ck");
+        let opts = NetOptions::from_config(&cfg).unwrap();
+        assert_eq!(opts.checkpoint_every, 0);
+        assert!(!opts.restore);
     }
 
     #[test]
@@ -317,6 +396,13 @@ mod tests {
             ("run.shard_id", "0"), // requires run.shards > 1
             ("run.wire", "bogus"),
             ("run.wire", "F16"),
+            ("run.checkpoint_every", "-1"),
+            ("run.checkpoint_every", "1.5"),
+            ("run.checkpoint_every", "often"),
+            ("run.checkpoint_every", "50"), // requires checkpoint_dir
+            ("run.checkpoint_dir", "  "),
+            ("run.restore", "true"), // requires checkpoint_dir
+            ("run.restore", "yes"),
         ] {
             let mut cfg = Config::new();
             cfg.set(key, bad);

@@ -51,6 +51,7 @@
 //! exact historical single-loop path, pinned bit-identical by the
 //! loopback equivalence tests.
 
+use super::checkpoint::{self, Checkpoint};
 use super::shard::{self, ShardPlan};
 use super::wire::{self, Hello, Msg, SnapshotBody};
 use super::{merge_ranges, payload_mode_tag, NetOptions};
@@ -66,6 +67,7 @@ use anyhow::{anyhow, bail, ensure, Result};
 use std::collections::VecDeque;
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::ops::Range;
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
@@ -82,6 +84,18 @@ const DELTA_LOG_CAP: usize = 256;
 /// Parameter ranges one apply dirtied; `None` marks a dense
 /// whole-parameter write (no delta possible across it).
 type DirtyRanges = Option<Vec<Range<usize>>>;
+
+/// How one shard serve *session* ended: normally (budget, target,
+/// sibling stop), or through an injected `run.chaos = crash:K` abort.
+/// A crash makes [`BoundServer::run_shard`] re-enter the session with
+/// the just-written checkpoint and the next generation — the in-process
+/// analogue of killing and restarting the serve process.
+enum SessionEnd {
+    /// The run is over: the finished per-shard result.
+    Finished(Box<RunResult>),
+    /// The injected crash fired: restart the session with restore.
+    Crashed,
+}
 
 /// Events the per-connection reader threads feed the server loop.
 enum Event {
@@ -223,6 +237,17 @@ impl BoundServer {
         // Fail fast on a bad fleet knob — workers would otherwise reject
         // the handshake config one by one.
         let opts = NetOptions::from_config(cfg)?;
+        if opts.checkpoint_dir.is_some() {
+            // The weighted average x-bar_k is deliberately not part of
+            // the checkpoint (it would double the durable state for an
+            // option the serve role rarely uses); rather than silently
+            // restoring a wrong average, refuse the combination.
+            ensure!(
+                !spec.weighted_averaging,
+                "run.averaging: the weighted iterate average is not \
+                 checkpointed — disable it or drop run.checkpoint_dir"
+            );
+        }
         if opts.shards > 1 {
             ensure!(
                 !spec.weighted_averaging,
@@ -415,7 +440,20 @@ impl BoundServer {
     /// The handshake frame shard `shard` issues to worker `worker_id` —
     /// identical for the initial fleet and mid-run joiners, and carrying
     /// the session's whole [`ShardPlan`] so the worker can route.
-    fn make_hello(&self, worker_id: u32, shard: usize) -> Msg {
+    /// `generation` is the shard's current session generation (v5): the
+    /// worker stamps every Update frame for this shard with it, and the
+    /// apply core fences anything else. `resume_draws` is nonzero only
+    /// in a restored session's initial-fleet handshake: the number of
+    /// block-sampling draws the worker discards to realign its rng with
+    /// the pre-crash run (exact for the deterministic one-worker
+    /// lockstep, best-effort beyond).
+    fn make_hello(
+        &self,
+        worker_id: u32,
+        shard: usize,
+        generation: u64,
+        resume_draws: u64,
+    ) -> Msg {
         Msg::Hello(Hello {
             worker_id,
             seed: self.spec.seed,
@@ -427,6 +465,8 @@ impl BoundServer {
             config: self.config_pairs.clone(),
             shard: shard as u32,
             plan: self.plan.clone(),
+            generation,
+            resume_draws,
         })
     }
 
@@ -439,6 +479,8 @@ impl BoundServer {
         listener: &TcpListener,
         shard: usize,
         counters: &Counters,
+        generation: u64,
+        resume_draws: u64,
     ) -> Result<Vec<TcpStream>> {
         let workers = self.spec.engine.workers();
         listener.set_nonblocking(true)?;
@@ -466,18 +508,23 @@ impl BoundServer {
         }
         let mut ebuf = Vec::new();
         for (id, stream) in conns.iter_mut().enumerate() {
-            let hello = self.make_hello(id as u32, shard);
+            let hello =
+                self.make_hello(id as u32, shard, generation, resume_draws);
             let n = wire::write_frame(stream, &hello, &mut ebuf)?;
             Counters::add(&counters.wire_tx_bytes, n as u64);
         }
         Ok(conns)
     }
 
-    /// One shard's serve loop: own the plan's block range and parameter
-    /// span, feed decoded wire updates into a dedicated [`ApplyCore`],
-    /// answer span-scoped snapshot pulls, and manage this shard's slice
-    /// of the fleet. The single-shard call (`shard = 0`, no global stop)
-    /// is the whole historical server, bit for bit.
+    /// One shard's crash-recoverable serve loop: run serve *sessions*
+    /// until one finishes the solve. A fresh shard starts at generation
+    /// 0 (restoring a valid same-run checkpoint when
+    /// `run.checkpoint_dir` holds one — auto-restore; `run.restore`
+    /// makes the intent explicit); an injected `run.chaos = crash:K`
+    /// abort re-enters with the latest durable checkpoint and the next
+    /// generation, exactly like killing and restarting the process.
+    /// Restore is never load-bearing for liveness: any unusable
+    /// checkpoint logs a fresh start.
     fn run_shard<P: Problem>(
         &self,
         problem: &P,
@@ -486,6 +533,79 @@ impl BoundServer {
         global_stop: Option<&AtomicBool>,
         obs: &mut dyn Observer,
     ) -> Result<RunResult> {
+        let ckpt_dir = self.opts.checkpoint_dir.as_deref().map(PathBuf::from);
+        let fp = checkpoint::fingerprint(&self.config_pairs, &self.plan);
+        let mut restored = ckpt_dir
+            .as_deref()
+            .and_then(|d| checkpoint::load_for_restore(d, shard, fp));
+        if self.opts.restore && restored.is_none() {
+            eprintln!(
+                "[serve] shard {shard}: --restore requested but no usable \
+                 checkpoint found; starting fresh"
+            );
+        }
+        let mut generation = match &restored {
+            Some(ck) => ck.generation + 1,
+            None => 0,
+        };
+        loop {
+            let end = self.run_shard_session(
+                problem,
+                shard,
+                listener,
+                global_stop,
+                obs,
+                restored.take(),
+                generation,
+                fp,
+                ckpt_dir.as_deref(),
+            )?;
+            match end {
+                SessionEnd::Finished(rr) => return Ok(*rr),
+                SessionEnd::Crashed => {
+                    eprintln!(
+                        "[serve] shard {shard}: injected crash \
+                         (run.chaos crash) at generation {generation}; \
+                         restarting with restore"
+                    );
+                    restored = ckpt_dir
+                        .as_deref()
+                        .and_then(|d| checkpoint::load_for_restore(d, shard, fp));
+                    // Even without a durable checkpoint the restarted
+                    // session must advance the generation: the crash op
+                    // fires only at generation 0, and any pre-crash
+                    // in-flight update must stay fenced.
+                    generation = match &restored {
+                        Some(ck) => ck.generation + 1,
+                        None => generation + 1,
+                    };
+                }
+            }
+        }
+    }
+
+    /// One serve *session* of shard `shard`: own the plan's block range
+    /// and parameter span, feed decoded wire updates into a dedicated
+    /// [`ApplyCore`] (fencing generations other than `generation`),
+    /// answer span-scoped snapshot pulls, manage this shard's slice of
+    /// the fleet, and write durable checkpoints every
+    /// `run.checkpoint_every` applied updates into `ckpt_dir`. With
+    /// checkpointing off and no `resume`, the generation-0 call (`shard
+    /// = 0`, no global stop) is the whole historical server, bit for
+    /// bit.
+    #[allow(clippy::too_many_arguments)]
+    fn run_shard_session<P: Problem>(
+        &self,
+        problem: &P,
+        shard: usize,
+        listener: &TcpListener,
+        global_stop: Option<&AtomicBool>,
+        obs: &mut dyn Observer,
+        resume: Option<Checkpoint>,
+        generation: u64,
+        fingerprint: u64,
+        ckpt_dir: Option<&Path>,
+    ) -> Result<SessionEnd> {
         let spec = &self.spec;
         let (staleness_rule, collision_overwrite, queue_factor) =
             match &spec.engine {
@@ -537,10 +657,21 @@ impl BoundServer {
             stop.eps_gap = None;
         }
         let counters = Counters::new();
+        // Rng realignment for a restored session's initial fleet: how
+        // many block-sampling rounds the pre-crash run consumed. One
+        // `pick_blocks` call per ingested frame, and every ingested
+        // frame's `batch_eff` oracles were either applied or dropped —
+        // so the checkpointed counters give the round count exactly in
+        // the deterministic one-worker lockstep (and a best-effort
+        // realignment beyond, where bit-reproducibility never held).
+        let resume_draws = resume.as_ref().map_or(0, |ck| {
+            (ck.counters.updates_applied + ck.counters.dropped)
+                / batch_eff as u64
+        });
         // Millisecond origin for the per-connection last-seen stamps.
         let epoch = Instant::now();
         let mut conns: Vec<ConnState> = self
-            .accept_fleet(listener, shard, &counters)?
+            .accept_fleet(listener, shard, &counters, generation, resume_draws)?
             .into_iter()
             .enumerate()
             .map(|(id, stream)| ConnState {
@@ -575,6 +706,53 @@ impl BoundServer {
             },
             &counters,
         );
+        if let Some(ck) = resume {
+            if ck.master.len() != core.master().len() {
+                eprintln!(
+                    "[serve] shard {shard}: checkpoint master has {} \
+                     entries (expected {}); starting fresh",
+                    ck.master.len(),
+                    core.master().len()
+                );
+            } else if let Err(e) = problem
+                .restore_server_state(core.server_state_mut(), &ck.server_state)
+            {
+                eprintln!(
+                    "[serve] shard {shard}: checkpoint server state is \
+                     unusable ({e:#}); starting fresh"
+                );
+            } else {
+                // Pre-load the whole-run telemetry, then resume the core
+                // at the checkpointed iteration under the new
+                // generation; every pre-crash in-flight update is now
+                // fence-dead on arrival.
+                counters.absorb(&ck.counters);
+                let trace = ck.trace();
+                core.resume(
+                    ck.k,
+                    ck.master,
+                    ck.gap_estimate,
+                    trace,
+                    generation,
+                );
+                Counters::bump(&counters.restores);
+                eprintln!(
+                    "[serve] shard {shard}: restored checkpoint \
+                     (k = {}, generation {generation})",
+                    core.k()
+                );
+            }
+        }
+        // Durable-checkpoint cadence: the next applied-update count at
+        // which a checkpoint is due. `u64::MAX` with the knob off keeps
+        // the default serve loop checkpoint-free (and byte-identical to
+        // the v4 fleet).
+        let ckpt_every = self.opts.checkpoint_every;
+        let mut next_ckpt = if ckpt_every > 0 {
+            (core.k() / ckpt_every + 1) * ckpt_every
+        } else {
+            u64::MAX
+        };
         // Instance-level frame validation bound: payload dimensions are
         // block-independent for every registered problem, so one probe
         // oracle fixes the dimension every wire update must carry. The
@@ -610,6 +788,10 @@ impl BoundServer {
             );
         }
 
+        // Set when the injected `crash:K` fires: the session then skips
+        // the orderly shutdown (no Shutdown frames, no global stop) and
+        // the caller restarts it from the durable checkpoint.
+        let mut crashed = false;
         std::thread::scope(|scope| {
             // ---------------- connection readers ----------------
             for (conn, reader) in reader_streams.into_iter().enumerate() {
@@ -659,7 +841,11 @@ impl BoundServer {
                         }
                         let mut stream = stream;
                         let worker_id = next_worker_id;
-                        let hello = self.make_hello(worker_id, shard);
+                        // Joiners never fast-forward: their fresh worker
+                        // id selects an rng stream no pre-crash session
+                        // ever drew from.
+                        let hello =
+                            self.make_hello(worker_id, shard, generation, 0);
                         // A joiner lost mid-handshake is simply dropped —
                         // nothing fallible may escape this scope.
                         let nb = match wire::write_frame(
@@ -854,28 +1040,88 @@ impl BoundServer {
                     break 'serve;
                 }
 
+                // -- durable checkpoint cadence --
+                if core.k() >= next_ckpt {
+                    next_ckpt = (core.k() / ckpt_every + 1) * ckpt_every;
+                    let ck = Checkpoint {
+                        fingerprint,
+                        shard: shard as u32,
+                        generation,
+                        k: core.k(),
+                        gap_estimate: core.gap_estimate(),
+                        master: core.master().to_vec(),
+                        samples: core.trace().samples.clone(),
+                        counters: counters.snapshot(),
+                        server_state: problem
+                            .checkpoint_server_state(core.server_state()),
+                    };
+                    // The dir is guaranteed here: NetOptions validation
+                    // ties checkpoint_every > 0 to checkpoint_dir.
+                    let dir = ckpt_dir
+                        .expect("checkpoint_every > 0 implies a dir");
+                    match ck.write_atomic(dir) {
+                        Ok(()) => {
+                            Counters::bump(&counters.checkpoints_written)
+                        }
+                        // A full or failing disk must degrade the
+                        // durability guarantee, not the solve.
+                        Err(e) => eprintln!(
+                            "[serve] shard {shard}: checkpoint write \
+                             failed ({e:#}); continuing without it"
+                        ),
+                    }
+                }
+
+                // -- injected deterministic crash (generation 0 only,
+                // so a restored session can never re-crash) --
+                if generation == 0 {
+                    if let Some(crash_k) = self.opts.chaos.crash {
+                        if core.k() >= crash_k {
+                            crashed = true;
+                            break 'serve;
+                        }
+                    }
+                }
+
                 // Budget check even while starved of updates.
                 if core.budget_exhausted() {
                     break 'serve;
                 }
             }
 
-            // Raise the plane-wide stop BEFORE telling workers: a worker
-            // reacting to this shard's Shutdown must find its sibling
-            // shards already stopping, not still mid-loop.
-            if let Some(s) = global_stop {
-                s.store(true, Ordering::Release);
-            }
-            // Orderly shutdown: tell every live worker, then close both
-            // socket halves so blocked reader threads unblock and exit.
-            for stream in conns.iter_mut().filter_map(|c| c.stream.as_mut())
-            {
-                if let Ok(nb) =
-                    wire::write_frame(stream, &Msg::Shutdown, &mut ebuf)
+            if crashed {
+                // Abrupt crash: NO Shutdown frames and NO global stop —
+                // workers see a dead socket mid-protocol (exactly what a
+                // killed serve process looks like) and reconnect with
+                // backoff into the restarted session; sibling shards
+                // keep running. In-flight updates die with the socket,
+                // and any that were already decoded are fence-dead under
+                // the restarted generation.
+                for stream in
+                    conns.iter_mut().filter_map(|c| c.stream.as_mut())
                 {
-                    Counters::add(&counters.wire_tx_bytes, nb as u64);
+                    stream.shutdown(std::net::Shutdown::Both).ok();
                 }
-                stream.shutdown(std::net::Shutdown::Both).ok();
+            } else {
+                // Raise the plane-wide stop BEFORE telling workers: a
+                // worker reacting to this shard's Shutdown must find its
+                // sibling shards already stopping, not still mid-loop.
+                if let Some(s) = global_stop {
+                    s.store(true, Ordering::Release);
+                }
+                // Orderly shutdown: tell every live worker, then close
+                // both socket halves so blocked reader threads unblock
+                // and exit.
+                for stream in
+                    conns.iter_mut().filter_map(|c| c.stream.as_mut())
+                {
+                    if let Ok(nb) =
+                        wire::write_frame(stream, &Msg::Shutdown, &mut ebuf)
+                    {
+                        Counters::add(&counters.wire_tx_bytes, nb as u64);
+                    }
+                    stream.shutdown(std::net::Shutdown::Both).ok();
+                }
             }
             // Dropping the receiver errors out any reader still sending,
             // so blocked backpressure sends cannot outlive the loop.
@@ -883,7 +1129,10 @@ impl BoundServer {
             drop(rx);
         });
 
-        Ok(core.finish(obs))
+        if crashed {
+            return Ok(SessionEnd::Crashed);
+        }
+        Ok(SessionEnd::Finished(Box::new(core.finish(obs))))
     }
 }
 
@@ -920,6 +1169,7 @@ fn read_loop(
                     Msg::Update {
                         k_read,
                         worker,
+                        generation,
                         oracles,
                     } => {
                         // Update-frame bytes as actually shipped (after
@@ -936,6 +1186,9 @@ fn read_loop(
                                 oracles,
                                 k_read,
                                 worker: worker as usize,
+                                // The v5 generation stamp rides through
+                                // to ApplyCore::ingest's fence.
+                                generation,
                             },
                         }
                     }
@@ -1170,10 +1423,15 @@ mod tests {
     fn bind_rejects_bad_fleet_knobs() {
         for (key, bad, needle) in [
             ("run.chaos", "bogus", "run.chaos"),
+            ("run.chaos", "crash:0", "crash"),
             ("run.liveness_ms", "soon", "liveness"),
             ("run.accept_timeout_secs", "0", "accept_timeout"),
             ("run.shards", "0", "run.shards"),
             ("run.shard_id", "0", "run.shard_id"),
+            ("run.checkpoint_every", "sometimes", "checkpoint_every"),
+            ("run.checkpoint_every", "50", "checkpoint_dir"),
+            ("run.restore", "maybe", "run.restore"),
+            ("run.restore", "true", "checkpoint_dir"),
         ] {
             let mut c = cfg();
             c.set(key, bad);
@@ -1184,6 +1442,24 @@ mod tests {
                 .to_string();
             assert!(err.contains(needle), "{key}={bad}: {err}");
         }
+    }
+
+    #[test]
+    fn bind_rejects_weighted_averaging_with_checkpointing() {
+        let mut c = cfg();
+        c.set("run.checkpoint_dir", "/tmp/apfw-ckpt-unused");
+        let spec =
+            RunSpec::new(Engine::asynchronous(1)).weighted_averaging(true);
+        let err = BoundServer::bind(spec, "gfl", &c, "127.0.0.1:0")
+            .map(|_| ())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("averag"), "{err}");
+        // Without averaging the same knobs bind fine (and binding alone
+        // must not create the directory).
+        let spec = RunSpec::new(Engine::asynchronous(1));
+        BoundServer::bind(spec, "gfl", &c, "127.0.0.1:0").unwrap();
+        assert!(!std::path::Path::new("/tmp/apfw-ckpt-unused").exists());
     }
 
     #[test]

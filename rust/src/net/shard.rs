@@ -266,6 +266,7 @@ pub fn aggregate<P: Problem>(
         counters.snapshot_reads += s.snapshot_reads;
         counters.payload_nnz += s.payload_nnz;
         counters.payload_bytes += s.payload_bytes;
+        counters.shipped_payload_bytes += s.shipped_payload_bytes;
         counters.wire_tx_bytes += s.wire_tx_bytes;
         counters.wire_rx_bytes += s.wire_rx_bytes;
         counters.delay_sum += s.delay_sum;
@@ -275,6 +276,9 @@ pub fn aggregate<P: Problem>(
         counters.blocks_requeued += s.blocks_requeued;
         counters.reconnects += s.reconnects;
         counters.event_stalls += s.event_stalls;
+        counters.checkpoints_written += s.checkpoints_written;
+        counters.restores += s.restores;
+        counters.stale_fenced += s.stale_fenced;
         elapsed_s = elapsed_s.max(r.elapsed_s);
     }
     let mut param = problem.init_param();

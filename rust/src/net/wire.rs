@@ -20,6 +20,13 @@
 //! headers, zero-run-length full bodies). The mode is an encoder-side
 //! choice only — every decoder accepts every encoding, and
 //! [`WireMode::Exact`] (the default) emits bodies byte-identical to v3.
+//!
+//! v5 adds crash recovery's generation fencing: [`Hello`] carries the
+//! session generation (bumped on every restore from a durable
+//! checkpoint) plus the sampler fast-forward count, and every `Update`
+//! frame is stamped with the generation its sender adopted — the server
+//! fences frames from a stale generation so pre-crash in-flight oracles
+//! can never corrupt a restored parameter (`docs/WIRE.md` §8).
 
 use super::shard::{ShardInfo, ShardPlan};
 use crate::problems::{BlockOracle, OraclePayload};
@@ -36,9 +43,11 @@ pub const MAGIC: u32 = u32::from_le_bytes(*b"apfw");
 /// parameter plane ([`Hello::shard`] + [`Hello::plan`] in the
 /// handshake); v4 added the communication-efficient encodings (quantized
 /// sparse payload values, compressed snapshot bodies — the `run.wire`
-/// knob). Older peers are rejected at the first frame (see `docs/WIRE.md`
-/// §8 for the compatibility rules).
-pub const VERSION: u16 = 4;
+/// knob); v5 added crash recovery's generation fencing
+/// ([`Hello::generation`] + [`Hello::resume_draws`] in the handshake, a
+/// generation stamp on every `Update` frame). Older peers are rejected at
+/// the first frame (see `docs/WIRE.md` §8 for the compatibility rules).
+pub const VERSION: u16 = 5;
 
 /// Fixed frame header size in bytes: magic (4) + version (2) + type (1) +
 /// reserved (1) + payload length (4).
@@ -146,6 +155,16 @@ pub struct Hello {
     /// one-shard plan for `run.shards = 1`; workers validate it against
     /// the rebuilt problem before trusting it.
     pub plan: ShardPlan,
+    /// Session generation (v5). 0 for a fresh run; each restore from a
+    /// durable checkpoint bumps it. Workers stamp every `Update` frame
+    /// they send with the generation they adopted here, and the server
+    /// fences frames from any other generation (`stale_fenced`).
+    pub generation: u64,
+    /// Sampler fast-forward count (v5): how many `pick_blocks` draws this
+    /// worker's rng stream must discard before its first round, so a
+    /// worker resuming after a server restore replays the block sequence
+    /// the restored iterate already reflects. 0 for a fresh run.
+    pub resume_draws: u64,
 }
 
 /// A parameter snapshot body: the full vector, or only the ranges dirtied
@@ -186,6 +205,10 @@ pub enum Msg {
         k_read: u64,
         /// Sender worker id.
         worker: u32,
+        /// Session generation the sender adopted from its Hello (v5).
+        /// The server drops frames whose generation is not its own —
+        /// the crash-recovery fence against pre-crash in-flight oracles.
+        generation: u64,
         /// Oracles for pairwise-distinct blocks (dense or sparse payloads,
         /// shipped in their in-memory representation).
         oracles: Vec<BlockOracle>,
@@ -346,14 +369,16 @@ fn f16_to_f32(bits: u16) -> f32 {
 
 /// Bounds-checked decode cursor over one frame payload. Every read is
 /// explicit about truncation so a short frame fails with a clean error
-/// instead of a panic.
-struct Dec<'a> {
+/// instead of a panic. `pub(crate)` so the checkpoint codec
+/// (`super::checkpoint`) can reuse the same hardened cursor for its
+/// on-disk format instead of growing a second, subtly different one.
+pub(crate) struct Dec<'a> {
     buf: &'a [u8],
     pos: usize,
 }
 
 impl<'a> Dec<'a> {
-    fn new(buf: &'a [u8]) -> Self {
+    pub(crate) fn new(buf: &'a [u8]) -> Self {
         Self { buf, pos: 0 }
     }
 
@@ -361,11 +386,11 @@ impl<'a> Dec<'a> {
     /// Saturating so every bounds comparison in this impl is safe even
     /// if an internal bug ever ran the cursor past the end — the decoder
     /// must degrade to a clean `Err`, never to arithmetic overflow.
-    fn remaining(&self) -> usize {
+    pub(crate) fn remaining(&self) -> usize {
         self.buf.len().saturating_sub(self.pos)
     }
 
-    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+    pub(crate) fn take(&mut self, n: usize) -> Result<&'a [u8]> {
         // Checked as `n <= remaining` rather than `pos + n <= len`: the
         // latter can overflow `usize` on a hostile `n` and panic in a
         // debug build before the bound is ever tested.
@@ -381,15 +406,15 @@ impl<'a> Dec<'a> {
         Ok(s)
     }
 
-    fn u8(&mut self) -> Result<u8> {
+    pub(crate) fn u8(&mut self) -> Result<u8> {
         Ok(self.take(1)?[0])
     }
 
-    fn u32(&mut self) -> Result<u32> {
+    pub(crate) fn u32(&mut self) -> Result<u32> {
         Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
     }
 
-    fn u64(&mut self) -> Result<u64> {
+    pub(crate) fn u64(&mut self) -> Result<u64> {
         Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
     }
 
@@ -397,14 +422,14 @@ impl<'a> Dec<'a> {
         Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
     }
 
-    fn f64(&mut self) -> Result<f64> {
+    pub(crate) fn f64(&mut self) -> Result<f64> {
         Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
     }
 
     /// LEB128 varint (u32). Rejects encodings longer than 5 bytes and
     /// high bits that overflow 32, so a corrupt stream cannot loop or
     /// silently wrap.
-    fn varint(&mut self) -> Result<u32> {
+    pub(crate) fn varint(&mut self) -> Result<u32> {
         let mut v: u32 = 0;
         for shift in [0u32, 7, 14, 21, 28] {
             let b = self.u8()?;
@@ -426,7 +451,7 @@ impl<'a> Dec<'a> {
     /// remaining payload so a corrupt count cannot drive a huge
     /// allocation before the truncation check fires. All arithmetic is
     /// saturating — a hostile count must fail the bound, not overflow it.
-    fn count(&mut self, elem_bytes: usize) -> Result<usize> {
+    pub(crate) fn count(&mut self, elem_bytes: usize) -> Result<usize> {
         let n = self.u32()? as usize;
         ensure!(
             n.saturating_mul(elem_bytes) <= self.remaining(),
@@ -456,7 +481,7 @@ impl<'a> Dec<'a> {
             .collect())
     }
 
-    fn str(&mut self) -> Result<String> {
+    pub(crate) fn str(&mut self) -> Result<String> {
         let n = self.count(1)?;
         let raw = self.take(n)?;
         Ok(std::str::from_utf8(raw)
@@ -633,7 +658,11 @@ fn put_delta_varint(buf: &mut Vec<u8>, runs: &[(u32, Vec<f32>)]) {
 /// decode is bit-exact. FW iterates are convex combinations of a few
 /// vertices early in a run, so resync full bodies are mostly zeros and
 /// stop dominating `wire_tx_bytes`.
-fn put_full_rle(buf: &mut Vec<u8>, v: &[f32]) {
+/// `pub(crate)`: the checkpoint codec (`super::checkpoint`) persists the
+/// master parameter with exactly this lossless layout — the ISSUE's
+/// "reuse the wire-v4 snapshot encoders" requirement, and the reason a
+/// checkpointed param is bit-exact by construction.
+pub(crate) fn put_full_rle(buf: &mut Vec<u8>, v: &[f32]) {
     put_u8(buf, SNAP_FULL_RLE);
     put_varint(buf, v.len() as u32);
     let mut i = 0usize;
@@ -648,6 +677,56 @@ fn put_full_rle(buf: &mut Vec<u8>, v: &[f32]) {
         }
         i += l;
     }
+}
+
+/// Decode a kind-3 (zero-RLE) full body, cursor positioned just past the
+/// kind byte. Shared verbatim by the Snapshot frame decoder and the
+/// checkpoint codec, so both inherit the same hostile-input hardening.
+pub(crate) fn get_full_rle(d: &mut Dec) -> Result<Vec<f32>> {
+    let dim = d.varint()? as usize;
+    ensure!(
+        dim <= MAX_FRAME_BYTES as usize / 4,
+        "snapshot RLE dim {dim} exceeds the frame cap"
+    );
+    // Don't trust the declared dim for the allocation: grow into it as
+    // runs actually deliver.
+    let mut v = Vec::with_capacity(dim.min(d.remaining()));
+    while v.len() < dim {
+        let z = d.varint()? as usize;
+        let l = d.varint()? as usize;
+        ensure!(
+            z + l > 0,
+            "snapshot RLE makes no progress (0,0 run pair)"
+        );
+        ensure!(
+            z.saturating_add(l) <= dim - v.len(),
+            "snapshot RLE runs overflow the declared dim {dim}"
+        );
+        v.extend(std::iter::repeat(0.0f32).take(z));
+        let raw = d.take(4 * l)?;
+        v.extend(
+            raw.chunks_exact(4)
+                .map(|c| f32::from_le_bytes(c.try_into().unwrap())),
+        );
+    }
+    Ok(v)
+}
+
+/// The checkpoint codec's master-parameter encoder: the wire-v4 lossless
+/// zero-RLE full-snapshot layout, kind byte included.
+pub(crate) fn put_master(buf: &mut Vec<u8>, v: &[f32]) {
+    put_full_rle(buf, v);
+}
+
+/// Inverse of [`put_master`]: expects the kind byte, then the RLE body.
+pub(crate) fn get_master(d: &mut Dec) -> Result<Vec<f32>> {
+    let kind = d.u8()?;
+    ensure!(
+        kind == SNAP_FULL_RLE,
+        "checkpoint master param has body kind {kind} \
+         (expected {SNAP_FULL_RLE})"
+    );
+    get_full_rle(d)
 }
 
 // --- message encoding ---------------------------------------------------
@@ -677,6 +756,9 @@ fn put_body(buf: &mut Vec<u8>, msg: &Msg, mode: WireMode) {
                 put_u32(buf, sh.param_start);
                 put_u32(buf, sh.param_end);
             }
+            // v5: session generation + sampler fast-forward count.
+            put_u64(buf, h.generation);
+            put_u64(buf, h.resume_draws);
         }
         Msg::SnapshotRequest { have_version } => {
             put_u64(buf, *have_version);
@@ -705,10 +787,13 @@ fn put_body(buf: &mut Vec<u8>, msg: &Msg, mode: WireMode) {
         Msg::Update {
             k_read,
             worker,
+            generation,
             oracles,
         } => {
             put_u64(buf, *k_read);
             put_u32(buf, *worker);
+            // v5: the sender's adopted session generation.
+            put_u64(buf, *generation);
             put_u32(buf, oracles.len() as u32);
             for o in oracles {
                 put_u32(buf, o.block as u32);
@@ -762,6 +847,8 @@ fn get_body(tag_byte: u8, payload: &[u8]) -> Result<Msg> {
                 "Hello names shard {shard} of a {}-shard plan",
                 shards.len()
             );
+            let generation = d.u64()?;
+            let resume_draws = d.u64()?;
             Msg::Hello(Hello {
                 worker_id,
                 seed,
@@ -773,6 +860,8 @@ fn get_body(tag_byte: u8, payload: &[u8]) -> Result<Msg> {
                 config,
                 shard,
                 plan: ShardPlan { shards },
+                generation,
+                resume_draws,
             })
         }
         tag::SNAPSHOT_REQUEST => Msg::SnapshotRequest {
@@ -831,36 +920,7 @@ fn get_body(tag_byte: u8, payload: &[u8]) -> Result<Msg> {
                     }
                     SnapshotBody::Delta(runs)
                 }
-                SNAP_FULL_RLE => {
-                    let dim = d.varint()? as usize;
-                    ensure!(
-                        dim <= MAX_FRAME_BYTES as usize / 4,
-                        "snapshot RLE dim {dim} exceeds the frame cap"
-                    );
-                    // Don't trust the declared dim for the allocation:
-                    // grow into it as runs actually deliver.
-                    let mut v =
-                        Vec::with_capacity(dim.min(d.remaining()));
-                    while v.len() < dim {
-                        let z = d.varint()? as usize;
-                        let l = d.varint()? as usize;
-                        ensure!(
-                            z + l > 0,
-                            "snapshot RLE makes no progress (0,0 run pair)"
-                        );
-                        ensure!(
-                            z.saturating_add(l) <= dim - v.len(),
-                            "snapshot RLE runs overflow the declared \
-                             dim {dim}"
-                        );
-                        v.extend(std::iter::repeat(0.0f32).take(z));
-                        let raw = d.take(4 * l)?;
-                        v.extend(raw.chunks_exact(4).map(|c| {
-                            f32::from_le_bytes(c.try_into().unwrap())
-                        }));
-                    }
-                    SnapshotBody::Full(v)
-                }
+                SNAP_FULL_RLE => SnapshotBody::Full(get_full_rle(&mut d)?),
                 other => bail!("unknown snapshot body tag {other}"),
             };
             Msg::Snapshot { version, body }
@@ -868,6 +928,7 @@ fn get_body(tag_byte: u8, payload: &[u8]) -> Result<Msg> {
         tag::UPDATE => {
             let k_read = d.u64()?;
             let worker = d.u32()?;
+            let generation = d.u64()?;
             let count = d.count(13)?;
             let mut oracles = Vec::with_capacity(count);
             for _ in 0..count {
@@ -879,6 +940,7 @@ fn get_body(tag_byte: u8, payload: &[u8]) -> Result<Msg> {
             Msg::Update {
                 k_read,
                 worker,
+                generation,
                 oracles,
             }
         }
@@ -1053,6 +1115,8 @@ mod tests {
                         },
                     ],
                 },
+                generation: 2,
+                resume_draws: 415,
             }),
             Msg::SnapshotRequest {
                 have_version: u64::MAX,
@@ -1075,6 +1139,7 @@ mod tests {
             Msg::Update {
                 k_read: 12,
                 worker: 1,
+                generation: 3,
                 oracles: vec![
                     BlockOracle::dense(4, vec![0.0, 1.0], 0.25),
                     BlockOracle {
@@ -1109,7 +1174,7 @@ mod tests {
 
     #[test]
     fn v1_peer_frames_are_rejected_with_a_version_error() {
-        // A v1 build writes version=1 in the header; this v4 build must
+        // A v1 build writes version=1 in the header; this v5 build must
         // reject it cleanly (docs/WIRE.md §8: both roles ship in one
         // binary, so a version skew means mismatched deployments).
         let mut buf = Vec::new();
@@ -1117,7 +1182,7 @@ mod tests {
         buf[4..6].copy_from_slice(&1u16.to_le_bytes());
         let err = read_frame(&mut buf.as_slice()).unwrap_err().to_string();
         assert!(err.contains("version 1"), "{err}");
-        assert!(err.contains("v4"), "{err}");
+        assert!(err.contains("v5"), "{err}");
     }
 
     #[test]
@@ -1133,12 +1198,16 @@ mod tests {
             config: vec![],
             shard: 0,
             plan: ShardPlan::single("h:1".into(), 4, 16),
+            generation: 0,
+            resume_draws: 0,
         });
         let mut buf = Vec::new();
         encode_frame(&hello, &mut buf);
         // Corrupt the shard index (the u32 right after the config
-        // pairs) to point past the one-shard plan.
-        let shard_off = buf.len() - (4 + 4 + (4 + 3) + 16);
+        // pairs) to point past the one-shard plan. Counting back from
+        // the end: resume_draws (8) + generation (8) + the one plan
+        // entry (addr 4+3 + four u32 spans 16) + nshards (4) + shard (4).
+        let shard_off = buf.len() - (8 + 8 + (4 + 3) + 16 + 4 + 4);
         buf[shard_off..shard_off + 4]
             .copy_from_slice(&9u32.to_le_bytes());
         let err = read_frame(&mut buf.as_slice()).unwrap_err().to_string();
@@ -1152,6 +1221,7 @@ mod tests {
             &Msg::Update {
                 k_read: 0,
                 worker: 0,
+                generation: 0,
                 oracles: vec![],
             },
             &mut buf,
@@ -1174,6 +1244,7 @@ mod tests {
         let msg = Msg::Update {
             k_read: 0,
             worker: 0,
+            generation: 0,
             oracles: vec![BlockOracle {
                 block: 0,
                 s: OraclePayload::Sparse {
@@ -1201,6 +1272,7 @@ mod tests {
         let msg = Msg::Update {
             k_read: 5,
             worker: 0,
+            generation: 1,
             oracles: vec![BlockOracle {
                 block: 1,
                 s: OraclePayload::Sparse {
@@ -1257,6 +1329,7 @@ mod tests {
         let msg = Msg::Update {
             k_read: 0,
             worker: 0,
+            generation: 0,
             oracles: vec![BlockOracle {
                 block: 0,
                 s: OraclePayload::Sparse {
@@ -1276,6 +1349,7 @@ mod tests {
         let msg = Msg::Update {
             k_read: 0,
             worker: 0,
+            generation: 0,
             oracles: vec![BlockOracle {
                 block: 0,
                 s: OraclePayload::Sparse {
@@ -1368,6 +1442,7 @@ mod tests {
         let msg = |val: Vec<f32>| Msg::Update {
             k_read: 3,
             worker: 1,
+            generation: 0,
             oracles: vec![BlockOracle {
                 block: 5,
                 s: OraclePayload::Sparse {
@@ -1381,7 +1456,7 @@ mod tests {
         let vals = vec![1.0f32, -0.5, 0.3333, 0.0, -0.0625, 0.9999];
         for mode in [WireMode::F16, WireMode::Q8] {
             match roundtrip_mode(&msg(vals.clone()), mode) {
-                Msg::Update { k_read, worker, oracles } => {
+                Msg::Update { k_read, worker, oracles, .. } => {
                     assert_eq!((k_read, worker), (3, 1));
                     match &oracles[0].s {
                         OraclePayload::Sparse { idx, val, dim } => {
@@ -1425,6 +1500,7 @@ mod tests {
         let msg = Msg::Update {
             k_read: 0,
             worker: 0,
+            generation: 0,
             oracles: vec![BlockOracle {
                 block: 0,
                 s: OraclePayload::Sparse {
@@ -1444,14 +1520,17 @@ mod tests {
     }
 
     #[test]
-    fn exact_mode_is_byte_identical_to_the_v3_body_layout() {
+    fn exact_mode_is_byte_identical_to_the_documented_v5_body_layout() {
         // `run.wire = exact` is the pinned default: the mode-aware
         // encoder must emit exactly what the plain encoder emits, and
-        // the sparse body must keep the documented v3 layout
-        // (`1 | dim | nnz | idx | nval | val`, all little-endian).
+        // the sparse body must keep the documented v5 layout
+        // (`k_read | worker | generation | count |
+        // 1 | dim | nnz | idx | nval | val`, all little-endian — the v3
+        // payload encoding with the v5 generation stamp after `worker`).
         let msg = Msg::Update {
             k_read: 7,
             worker: 2,
+            generation: 4,
             oracles: vec![BlockOracle {
                 block: 3,
                 s: OraclePayload::Sparse {
@@ -1467,10 +1546,11 @@ mod tests {
         encode_frame(&msg, &mut plain);
         encode_frame_mode(&msg, &mut moded, WireMode::Exact);
         assert_eq!(plain, moded);
-        // Hand-assembled v3 Update body.
+        // Hand-assembled v5 Update body.
         let mut body = Vec::new();
         body.extend_from_slice(&7u64.to_le_bytes()); // k_read
         body.extend_from_slice(&2u32.to_le_bytes()); // worker
+        body.extend_from_slice(&4u64.to_le_bytes()); // generation (v5)
         body.extend_from_slice(&1u32.to_le_bytes()); // oracle count
         body.extend_from_slice(&3u32.to_le_bytes()); // block
         body.extend_from_slice(&1.25f64.to_le_bytes()); // ls
@@ -1608,6 +1688,8 @@ mod tests {
                 config: vec![("run.wire".into(), "q8".into())],
                 shard: 0,
                 plan: ShardPlan::single("h:1".into(), 8, 32),
+                generation: 1,
+                resume_draws: 12,
             }),
             Msg::SnapshotRequest { have_version: 3 },
             Msg::Snapshot {
@@ -1624,6 +1706,7 @@ mod tests {
             Msg::Update {
                 k_read: 11,
                 worker: 0,
+                generation: 2,
                 oracles: vec![
                     BlockOracle::dense(0, vec![1.0, -1.0], 0.5),
                     BlockOracle {
@@ -1679,6 +1762,7 @@ mod tests {
         let sparse = Msg::Update {
             k_read: 0,
             worker: 0,
+            generation: 0,
             oracles: vec![BlockOracle {
                 block: 0,
                 s: OraclePayload::Sparse {
@@ -1694,6 +1778,7 @@ mod tests {
         let dense = Msg::Update {
             k_read: 0,
             worker: 0,
+            generation: 0,
             oracles: vec![BlockOracle::dense(0, dense_s, 0.0)],
         };
         let mut buf = Vec::new();

@@ -41,6 +41,20 @@
 //! worker inside the handshake config) wraps the transport in the
 //! fault-injecting [`ChaosStream`].
 //!
+//! Crash recovery (protocol v5): the handshake carries the serve shard's
+//! `generation` — bumped on every restart — and every `Update` this
+//! worker ships is stamped with the owning shard's generation, so a
+//! restored apply core can fence frames computed against pre-crash state.
+//! A restored server also announces `resume_draws`, the number of block
+//! draws the pre-crash session consumed; the worker fast-forwards its
+//! sampling stream by discarding that many [`pick_blocks`] calls, which
+//! is what makes a crash+restore loopback solve bit-identical to an
+//! uninterrupted one. Reconnects retry through refused connections until
+//! the window elapses (a restarting server needs time to rebind), and
+//! with liveness enabled the worker heartbeats *while blocked* on a
+//! snapshot answer, so the slow full-snapshot fallback right after a
+//! restore cannot get it liveness-reaped.
+//!
 //! [`oracle_into`]: crate::problems::Problem::oracle_into
 //! [`pick_blocks`]: crate::coordinator::pick_blocks
 
@@ -110,7 +124,7 @@ pub fn run(addr: &str) -> Result<WorkerSummary> {
 /// worker can be started before (or seconds after) its server.
 pub fn run_with_retry(addr: &str, timeout: Duration) -> Result<WorkerSummary> {
     let mut jitter = backoff_rng();
-    let stream = connect_until(addr, timeout, false, &mut jitter)?;
+    let stream = connect_until(addr, timeout, &mut jitter)?;
     run_on(stream, false)
 }
 
@@ -120,9 +134,12 @@ pub fn run_with_retry(addr: &str, timeout: Duration) -> Result<WorkerSummary> {
 /// exponential backoff — announcing the new session as resumed — and keep
 /// solving under the fresh server-issued id. Returns the summed summary
 /// once a session ends cleanly, or, after at least one session, once the
-/// server stops answering (a vanished listener usually just means the run
-/// is over). `connect_timeout` bounds both the initial connect and each
-/// reconnect window.
+/// server stops answering for the whole reconnect window. Refused
+/// connections are retried until that window elapses — a crashed serve
+/// process needs time to restart and rebind before it can answer, and
+/// concluding "run over" on the first refusal would strand exactly the
+/// recovery the checkpoint/restore path exists for. `connect_timeout`
+/// bounds both the initial connect and each reconnect window.
 pub fn run_resilient(
     addr: &str,
     connect_timeout: Duration,
@@ -132,7 +149,7 @@ pub fn run_resilient(
     let mut resumed = false;
     loop {
         let stream =
-            match connect_until(addr, connect_timeout, resumed, &mut jitter) {
+            match connect_until(addr, connect_timeout, &mut jitter) {
                 Ok(s) => s,
                 // Initial connects must fail loudly; reconnects report
                 // what the completed sessions achieved.
@@ -173,13 +190,14 @@ fn backoff_rng() -> Pcg64 {
 
 /// Connect to `addr`, retrying with jittered exponential backoff (nominal
 /// 100 ms doubling to a 2 s ceiling, each step scaled by 0.5–1.5x) until
-/// `window` elapses. With `refused_is_final`, an explicit connection
-/// refusal returns immediately: nothing is listening, so for a resuming
-/// session the run is over.
+/// `window` elapses. Every failure kind retries, *including* an explicit
+/// connection refusal: "nothing is listening" is indistinguishable from
+/// "the serve process crashed and is restarting with `--restore`", and
+/// treating it as final used to end resumed runs that were seconds away
+/// from recovering. The window is the only arbiter of giving up.
 fn connect_until(
     addr: &str,
     window: Duration,
-    refused_is_final: bool,
     jitter: &mut Pcg64,
 ) -> Result<TcpStream> {
     let deadline = Instant::now() + window;
@@ -191,11 +209,6 @@ fn connect_until(
                 return Ok(s);
             }
             Err(e) => {
-                if refused_is_final
-                    && e.kind() == std::io::ErrorKind::ConnectionRefused
-                {
-                    return Err(anyhow!("{addr} refused the connection: {e}"));
-                }
                 if Instant::now() >= deadline {
                     return Err(anyhow!(
                         "could not connect to {addr} within {window:?}: {e}"
@@ -208,6 +221,130 @@ fn connect_until(
             }
         }
     }
+}
+
+/// Transports whose blocking reads can be bounded by a deadline, so a
+/// worker blocked on a slow snapshot answer can surface periodically and
+/// send heartbeats instead of sitting invisible until the server's
+/// liveness reaper books it dead. `None` restores fully blocking reads.
+trait PullTimeout {
+    fn set_read_timeout(&self, timeout: Option<Duration>)
+        -> std::io::Result<()>;
+}
+
+impl PullTimeout for TcpStream {
+    fn set_read_timeout(
+        &self,
+        timeout: Option<Duration>,
+    ) -> std::io::Result<()> {
+        TcpStream::set_read_timeout(self, timeout)
+    }
+}
+
+impl<S: PullTimeout> PullTimeout for ChaosStream<S> {
+    fn set_read_timeout(
+        &self,
+        timeout: Option<Duration>,
+    ) -> std::io::Result<()> {
+        self.get_ref().set_read_timeout(timeout)
+    }
+}
+
+/// A [`Read`] adapter that turns read timeouts into heartbeat ticks.
+/// Each time `streams[target]` reports `WouldBlock`/`TimedOut` (the read
+/// timeout armed by [`read_frame_patient`]), every stream in the fleet
+/// whose outbound side has been quiet for a full heartbeat period gets a
+/// `Heartbeat` frame, then the read retries. Timeouts never surface to
+/// the frame decoder, so a header or body fill resumes exactly where it
+/// left off — a half-read frame survives any number of ticks (a timed-out
+/// socket read consumes nothing; partial data arrives as a short read,
+/// which the decoder already handles).
+struct HeartbeatOnStall<'a, S> {
+    streams: &'a mut [S],
+    target: usize,
+    period: Duration,
+    last_tx: &'a mut [Instant],
+    tx_bytes: &'a mut u64,
+    ebuf: &'a mut Vec<u8>,
+}
+
+impl<S: Read + Write> Read for HeartbeatOnStall<'_, S> {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        loop {
+            match self.streams[self.target].read(buf) {
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock
+                        || e.kind() == std::io::ErrorKind::TimedOut =>
+                {
+                    for (s, stream) in self.streams.iter_mut().enumerate() {
+                        if self.last_tx[s].elapsed() < self.period {
+                            continue;
+                        }
+                        match wire::write_frame(
+                            stream,
+                            &Msg::Heartbeat,
+                            self.ebuf,
+                        ) {
+                            Ok(nb) => {
+                                *self.tx_bytes += nb as u64;
+                                self.last_tx[s] = Instant::now();
+                            }
+                            // Only a failure on the stream being read
+                            // kills the pull; a sibling's broken pipe
+                            // surfaces on its own next send.
+                            Err(err) if s == self.target => {
+                                return Err(std::io::Error::new(
+                                    std::io::ErrorKind::BrokenPipe,
+                                    err.to_string(),
+                                ));
+                            }
+                            Err(_) => {}
+                        }
+                    }
+                }
+                other => return other,
+            }
+        }
+    }
+}
+
+/// Read one frame from `streams[target]`, heartbeating while blocked:
+/// with liveness enabled, the target's read timeout is armed at the
+/// heartbeat period for the duration of the read, so a server that takes
+/// long to answer a pull — e.g. assembling the full-snapshot fallback
+/// right after a crash restore — cannot get this worker liveness-reaped
+/// while it patiently waits. Streams other than the target tick too: a
+/// sharded pull collects answers in shard order, and a slow early shard
+/// must not starve the later shards of heartbeats. Without a heartbeat
+/// period this is exactly [`wire::read_frame`].
+fn read_frame_patient<S: Read + Write + PullTimeout>(
+    streams: &mut [S],
+    target: usize,
+    heartbeat: Option<Duration>,
+    last_tx: &mut [Instant],
+    tx_bytes: &mut u64,
+    ebuf: &mut Vec<u8>,
+) -> Result<Option<(Msg, usize)>> {
+    let Some(period) = heartbeat else {
+        return wire::read_frame(&mut streams[target]);
+    };
+    // A transport that cannot arm a timeout falls back to the plain
+    // blocking read: the deadline is a liveness optimization, never a
+    // correctness requirement.
+    let tick = period.max(Duration::from_millis(1));
+    if streams[target].set_read_timeout(Some(tick)).is_err() {
+        return wire::read_frame(&mut streams[target]);
+    }
+    let got = wire::read_frame(&mut HeartbeatOnStall {
+        streams,
+        target,
+        period,
+        last_tx,
+        tx_bytes,
+        ebuf,
+    });
+    streams[target].set_read_timeout(None).ok();
+    got
 }
 
 /// Run the worker protocol over an established connection. `resumed` is
@@ -307,7 +444,6 @@ fn run_sharded(
         let mut stream = connect_until(
             &plan.get(s).addr,
             opts.accept_timeout,
-            false,
             &mut jitter,
         )?;
         let (h, nb) = match wire::read_frame(&mut stream)? {
@@ -385,7 +521,7 @@ fn run_sharded(
 
 /// Monomorphize [`sharded_solve_loop`] over the instance's problem type.
 #[allow(clippy::too_many_arguments)]
-fn dispatch_sharded<S: Read + Write>(
+fn dispatch_sharded<S: Read + Write + PullTimeout>(
     instance: &ProblemInstance,
     hellos: &[Hello],
     primary: usize,
@@ -424,7 +560,7 @@ fn dispatch_sharded<S: Read + Write>(
 /// span the oracles were computed against, so each shard's staleness rule
 /// judges exactly the state it owns.
 #[allow(clippy::too_many_arguments)]
-fn sharded_solve_loop<P: Problem, S: Read + Write>(
+fn sharded_solve_loop<P: Problem, S: Read + Write + PullTimeout>(
     problem: &P,
     hellos: &[Hello],
     primary: usize,
@@ -457,8 +593,17 @@ fn sharded_solve_loop<P: Problem, S: Read + Write>(
     // the initial iterate reconstructs the assembled parameter.
     let mut param: Vec<f32> = problem.init_param();
     // Per-shard version vector: shard s's spans are at version have[s].
+    // Reset per session (see the single-shard loop): after a restore no
+    // pre-crash version may be trusted, so every shard's first answer is
+    // judged against the never-matching `u64::MAX`.
     let mut have: Vec<u64> = vec![u64::MAX; s_count];
     let mut blocks: Vec<usize> = Vec::new();
+    // Crash recovery (v5): fast-forward the one global sampling stream by
+    // the primary shard's announced draw count (see the single-shard loop
+    // for why whole `pick_blocks` calls are discarded, never rng words).
+    for _ in 0..hellos[primary].resume_draws {
+        pick_blocks(&mut rng, n, batch, &mut blocks);
+    }
     let mut oscratch = OracleScratch::<P>::default();
     let mut slots: Vec<BlockOracle> =
         (0..batch).map(|_| BlockOracle::empty_with(pkind)).collect();
@@ -506,7 +651,14 @@ fn sharded_solve_loop<P: Problem, S: Read + Write>(
             if !asked[s] {
                 continue;
             }
-            let (version, body) = match wire::read_frame(&mut streams[s]) {
+            let (version, body) = match read_frame_patient(
+                &mut streams,
+                s,
+                heartbeat,
+                &mut last_tx,
+                &mut summary.tx_bytes,
+                &mut ebuf,
+            ) {
                 Ok(Some((Msg::Snapshot { version, body }, nb))) => {
                     rx_bytes += nb as u64;
                     (version, body)
@@ -601,6 +753,9 @@ fn sharded_solve_loop<P: Problem, S: Read + Write>(
             let msg = Msg::Update {
                 k_read: have[s],
                 worker: hellos[s].worker_id,
+                // Each shard restores (and fences) independently, so the
+                // stamp is the *owning* shard's handshake generation.
+                generation: hellos[s].generation,
                 oracles: std::mem::take(&mut groups[s]),
             };
             // The update push is the worker's one mode-aware write:
@@ -654,7 +809,7 @@ fn sharded_solve_loop<P: Problem, S: Read + Write>(
 }
 
 /// Monomorphize [`solve_loop`] over the instance's problem type.
-fn dispatch<S: Read + Write>(
+fn dispatch<S: Read + Write + PullTimeout>(
     instance: &ProblemInstance,
     hello: &Hello,
     stream: S,
@@ -686,7 +841,7 @@ fn dispatch<S: Read + Write>(
 /// between oracle calls, so even a long multi-block solve stays visibly
 /// alive.
 #[allow(clippy::too_many_arguments)]
-fn solve_loop<P: Problem, S: Read + Write>(
+fn solve_loop<P: Problem, S: Read + Write + PullTimeout>(
     problem: &P,
     hello: &Hello,
     mut stream: S,
@@ -703,8 +858,23 @@ fn solve_loop<P: Problem, S: Read + Write>(
     let pkind = mode.resolve(problem.preferred_payload());
     let mut rng = Pcg64::new(hello.seed, rng_stream_for(hello.worker_id));
     let mut param: Vec<f32> = Vec::new();
-    let mut have: u64 = u64::MAX; // nothing yet -> full snapshot
+    // Nothing pulled yet -> the first request takes the full-snapshot
+    // fallback. The reset is deliberately per session: a worker that
+    // reconnects after a server crash+restore must not trust any version
+    // it pulled from the pre-crash generation, and `u64::MAX` never
+    // matches a real version, so the first pull always re-bootstraps.
+    let mut have: u64 = u64::MAX;
     let mut blocks: Vec<usize> = Vec::new();
+    // Crash recovery (v5): a restored server tells the session how many
+    // block draws the pre-crash run consumed, and the worker fast-forwards
+    // by discarding exactly that many `pick_blocks` calls — never raw rng
+    // words, because rejection sampling consumes a variable number per
+    // draw. In the lockstep loopback regime this resumes the draw sequence
+    // precisely where the checkpoint left it, which is what makes a
+    // crash+restore solve bit-identical to an uninterrupted one.
+    for _ in 0..hello.resume_draws {
+        pick_blocks(&mut rng, n, batch, &mut blocks);
+    }
     let mut oscratch = OracleScratch::<P>::default();
     let mut slots: Vec<BlockOracle> =
         (0..batch).map(|_| BlockOracle::empty_with(pkind)).collect();
@@ -731,7 +901,14 @@ fn solve_loop<P: Problem, S: Read + Write>(
             // handshake is the shutdown path, not an error.
             Err(_) => break,
         }
-        let (version, body) = match wire::read_frame(&mut stream) {
+        let (version, body) = match read_frame_patient(
+            std::slice::from_mut(&mut stream),
+            0,
+            heartbeat,
+            std::slice::from_mut(&mut last_tx),
+            &mut summary.tx_bytes,
+            &mut ebuf,
+        ) {
             Ok(Some((Msg::Snapshot { version, body }, nb))) => {
                 rx_bytes += nb as u64;
                 (version, body)
@@ -808,6 +985,10 @@ fn solve_loop<P: Problem, S: Read + Write>(
         let msg = Msg::Update {
             k_read: version,
             worker: hello.worker_id,
+            // Stamped from the handshake: a frame from a session that
+            // predates a crash restore carries the old generation and is
+            // fenced (counted, dropped) by the restored apply core.
+            generation: hello.generation,
             oracles: std::mem::take(&mut slots),
         };
         // The update push is the worker's one mode-aware write: under

@@ -576,6 +576,36 @@ pub trait Problem: Send + Sync {
         }
         total
     }
+
+    /// Serialize the server apply state into a durable checkpoint body
+    /// (crash recovery). Problems whose state is pure scratch — `()` for
+    /// GFL and the simplex QP — write nothing (the default); problems
+    /// with durable bookkeeping (SSVM's per-block `w_i`/`l_i`) override
+    /// both this and [`Problem::restore_server_state`] so a restored
+    /// serve loop applies future updates against exactly the pre-crash
+    /// state bits.
+    fn checkpoint_server_state(&self, _state: &Self::ServerState) -> Vec<u8> {
+        Vec::new()
+    }
+
+    /// Inverse of [`Problem::checkpoint_server_state`]: rebuild the
+    /// server apply state from a checkpoint body. The default (stateless
+    /// problems) accepts only an empty body, so a checkpoint written by
+    /// a different problem configuration fails cleanly instead of being
+    /// silently ignored.
+    fn restore_server_state(
+        &self,
+        _state: &mut Self::ServerState,
+        raw: &[u8],
+    ) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            raw.is_empty(),
+            "checkpoint carries {} bytes of server state for a stateless \
+             problem",
+            raw.len()
+        );
+        Ok(())
+    }
 }
 
 /// Problems additionally supporting block projections + block gradients,

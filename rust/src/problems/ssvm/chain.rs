@@ -368,6 +368,18 @@ impl Problem for ChainSsvm {
         SsvmState::new(self.data.n, self.dim())
     }
 
+    fn checkpoint_server_state(&self, state: &SsvmState) -> Vec<u8> {
+        state.encode()
+    }
+
+    fn restore_server_state(
+        &self,
+        state: &mut SsvmState,
+        raw: &[u8],
+    ) -> anyhow::Result<()> {
+        state.decode(raw)
+    }
+
     fn preferred_payload(&self) -> PayloadKind {
         // The feature-map difference touches only the emission features of
         // mistaken positions plus a few transition counts — tiny next to

@@ -19,6 +19,7 @@ pub mod multiclass;
 
 use super::{BlockOracle, OraclePayload};
 use crate::util::la;
+use anyhow::{ensure, Result};
 
 /// Server-side per-block bookkeeping shared by both SSVM variants.
 pub struct SsvmState {
@@ -56,6 +57,60 @@ impl SsvmState {
     #[inline]
     pub fn wi_mut(&mut self, i: usize) -> &mut [f32] {
         &mut self.wi[i * self.dim..(i + 1) * self.dim]
+    }
+
+    /// Serialize the durable bookkeeping — `wi`, `li`, `l` — for a crash
+    /// checkpoint, bit-exactly (raw little-endian f32/f64 bits). The `dw`
+    /// apply scratch is transient and deliberately excluded. Both SSVM
+    /// variants delegate their `Problem::checkpoint_server_state` here.
+    pub fn encode(&self) -> Vec<u8> {
+        let n = self.li.len();
+        let mut out =
+            Vec::with_capacity(16 + 4 * self.wi.len() + 8 * n + 8);
+        out.extend_from_slice(&(n as u64).to_le_bytes());
+        out.extend_from_slice(&(self.dim as u64).to_le_bytes());
+        for v in &self.wi {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        for v in &self.li {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        out.extend_from_slice(&self.l.to_le_bytes());
+        out
+    }
+
+    /// Inverse of [`SsvmState::encode`], validating every length against
+    /// this instance's shape so a checkpoint from a different problem
+    /// configuration fails cleanly instead of poisoning the apply path.
+    pub fn decode(&mut self, raw: &[u8]) -> Result<()> {
+        let n = self.li.len();
+        let want = 16 + 4 * self.wi.len() + 8 * n + 8;
+        ensure!(
+            raw.len() == want,
+            "ssvm server-state checkpoint is {} bytes (expected {want})",
+            raw.len()
+        );
+        let header_n =
+            u64::from_le_bytes(raw[0..8].try_into().unwrap()) as usize;
+        let header_dim =
+            u64::from_le_bytes(raw[8..16].try_into().unwrap()) as usize;
+        ensure!(
+            header_n == n && header_dim == self.dim,
+            "ssvm server-state checkpoint shape ({header_n} x \
+             {header_dim}) does not match this instance ({n} x {})",
+            self.dim
+        );
+        let mut pos = 16;
+        for v in &mut self.wi {
+            *v = f32::from_le_bytes(raw[pos..pos + 4].try_into().unwrap());
+            pos += 4;
+        }
+        for v in &mut self.li {
+            *v = f64::from_le_bytes(raw[pos..pos + 8].try_into().unwrap());
+            pos += 8;
+        }
+        self.l = f64::from_le_bytes(raw[pos..pos + 8].try_into().unwrap());
+        Ok(())
     }
 }
 
@@ -183,6 +238,55 @@ pub fn ssvm_objective(lam: f64, state: &SsvmState, w: &[f32]) -> f64 {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn server_state_checkpoint_roundtrips_bit_exactly() {
+        let (n, dim) = (3, 5);
+        let mut st = SsvmState::new(n, dim);
+        for (j, v) in st.wi.iter_mut().enumerate() {
+            *v = (j as f32 + 0.25) * if j % 2 == 0 { 1.0 } else { -1.0 };
+        }
+        for (i, v) in st.li.iter_mut().enumerate() {
+            *v = i as f64 * 0.125 - 0.5;
+        }
+        st.l = 3.75;
+        let raw = st.encode();
+
+        let mut back = SsvmState::new(n, dim);
+        back.decode(&raw).unwrap();
+        assert_eq!(
+            back.wi.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            st.wi.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+        assert_eq!(
+            back.li.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            st.li.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+        assert_eq!(back.l.to_bits(), st.l.to_bits());
+    }
+
+    #[test]
+    fn server_state_decode_rejects_wrong_shapes_cleanly() {
+        let raw = SsvmState::new(2, 7).encode();
+
+        // Truncated / extended payloads: clean errors, no panic.
+        let mut st = SsvmState::new(2, 7);
+        assert!(st.decode(&raw[..raw.len() - 1]).is_err());
+        let mut longer = raw.clone();
+        longer.push(0);
+        assert!(st.decode(&longer).is_err());
+        assert!(st.decode(&[]).is_err());
+
+        // Same byte length, different declared shape: a 6 x 1 state
+        // encodes to exactly as many bytes as 2 x 7 (4*n*dim + 8*n agree),
+        // so only the header shape check can catch the mismatch.
+        let swapped = SsvmState::new(6, 1).encode();
+        assert_eq!(swapped.len(), raw.len());
+        assert!(st.decode(&swapped).is_err());
+
+        // A clean decode still works after the failed attempts.
+        st.decode(&raw).unwrap();
+    }
 
     fn mk_oracle(block: usize, s: Vec<f32>, ls: f64) -> BlockOracle {
         BlockOracle::dense(block, s, ls)

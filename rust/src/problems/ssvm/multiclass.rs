@@ -192,6 +192,18 @@ impl Problem for MulticlassSsvm {
         SsvmState::new(self.data.n, self.dim())
     }
 
+    fn checkpoint_server_state(&self, state: &SsvmState) -> Vec<u8> {
+        state.encode()
+    }
+
+    fn restore_server_state(
+        &self,
+        state: &mut SsvmState,
+        raw: &[u8],
+    ) -> anyhow::Result<()> {
+        state.decode(raw)
+    }
+
     fn preferred_payload(&self) -> PayloadKind {
         // One class row of ±psi_i(y*)/(lambda n): 2d entries (or none)
         // versus the K*d dense vector.

@@ -584,7 +584,8 @@ impl RunSpec {
     /// `queue_factor`, `staleness_rule`, `collision_overwrite`,
     /// `work_multiplier`, `delay`, `delay_history`, `drop_rule`, and the
     /// net-transport fleet knobs `accept_timeout_secs`, `liveness_ms`,
-    /// `chaos`, `shards`, `shard_id`, `wire` (parsed and validated by the
+    /// `chaos`, `shards`, `shard_id`, `wire`, `checkpoint_every`,
+    /// `checkpoint_dir`, `restore` (parsed and validated by the
     /// serve role — `crate::net::NetOptions` — but scoped here so a
     /// typo'd mode fails fast).
     pub fn from_config(cfg: &Config) -> Result<Self> {
@@ -689,6 +690,9 @@ impl RunSpec {
             ("run.shards", &["async"]),
             ("run.shard_id", &["async"]),
             ("run.wire", &["async"]),
+            ("run.checkpoint_every", &["async"]),
+            ("run.checkpoint_dir", &["async"]),
+            ("run.restore", &["async"]),
         ];
         let mode_name = engine.name();
         for (key, modes) in SCOPED_KEYS {
@@ -1234,6 +1238,10 @@ mod tests {
             ("[run]\nmode = sync\nqueue_factor = 64\n", "queue_factor"),
             ("[run]\nmode = async\ndelay = poisson:5\n", "delay"),
             ("[run]\nmode = delayed\nwork_multiplier = 5, 15\n", "work"),
+            // Crash-recovery knobs ride the serve role (async engine).
+            ("[run]\nmode = seq\ncheckpoint_every = 50\n", "checkpoint"),
+            ("[run]\nmode = sync\ncheckpoint_dir = /tmp/ck\n", "checkpoint"),
+            ("[run]\nmode = delayed\nrestore = true\n", "restore"),
         ] {
             let cfg = Config::parse(text).unwrap();
             let err = RunSpec::from_config(&cfg).unwrap_err().to_string();

@@ -138,6 +138,17 @@ pub struct Counters {
     /// to block (the bounded-backpressure stall metric — persistent growth
     /// means the fleet outpaces the apply loop).
     pub event_stalls: AtomicU64,
+    /// Durable per-shard checkpoints written (`run.checkpoint_every > 0`).
+    pub checkpoints_written: AtomicU64,
+    /// Serve loops that resumed from a durable checkpoint instead of a
+    /// fresh parameter (crash recovery; each restore bumps the session
+    /// generation).
+    pub restores: AtomicU64,
+    /// Update frames fenced because they carried a stale generation — a
+    /// pre-crash in-flight oracle arriving after a restore. Fenced frames
+    /// never reach the assembler, so they can never corrupt the restored
+    /// master parameter.
+    pub stale_fenced: AtomicU64,
 }
 
 impl Counters {
@@ -167,7 +178,40 @@ impl Counters {
             blocks_requeued: self.blocks_requeued.load(Ordering::Relaxed),
             reconnects: self.reconnects.load(Ordering::Relaxed),
             event_stalls: self.event_stalls.load(Ordering::Relaxed),
+            checkpoints_written: self
+                .checkpoints_written
+                .load(Ordering::Relaxed),
+            restores: self.restores.load(Ordering::Relaxed),
+            stale_fenced: self.stale_fenced.load(Ordering::Relaxed),
         }
+    }
+
+    /// Pre-load these counters from a checkpointed snapshot (crash
+    /// recovery: the restored serve loop continues the dead loop's
+    /// telemetry instead of restarting it from zero, so post-restore
+    /// reports stay comparable to an uninterrupted run's).
+    pub fn absorb(&self, s: &CounterSnapshot) {
+        Self::add(&self.oracle_calls, s.oracle_calls);
+        Self::add(&self.updates_applied, s.updates_applied);
+        Self::add(&self.collisions, s.collisions);
+        Self::add(&self.dropped, s.dropped);
+        Self::add(&self.iterations, s.iterations);
+        Self::add(&self.snapshot_reads, s.snapshot_reads);
+        Self::add(&self.payload_nnz, s.payload_nnz);
+        Self::add(&self.payload_bytes, s.payload_bytes);
+        Self::add(&self.shipped_payload_bytes, s.shipped_payload_bytes);
+        Self::add(&self.wire_tx_bytes, s.wire_tx_bytes);
+        Self::add(&self.wire_rx_bytes, s.wire_rx_bytes);
+        Self::add(&self.delay_sum, s.delay_sum);
+        Self::max_of(&self.delay_max, s.delay_max);
+        Self::add(&self.workers_joined, s.workers_joined);
+        Self::add(&self.workers_lost, s.workers_lost);
+        Self::add(&self.blocks_requeued, s.blocks_requeued);
+        Self::add(&self.reconnects, s.reconnects);
+        Self::add(&self.event_stalls, s.event_stalls);
+        Self::add(&self.checkpoints_written, s.checkpoints_written);
+        Self::add(&self.restores, s.restores);
+        Self::add(&self.stale_fenced, s.stale_fenced);
     }
 
     #[inline]
@@ -208,6 +252,9 @@ pub struct CounterSnapshot {
     pub blocks_requeued: u64,
     pub reconnects: u64,
     pub event_stalls: u64,
+    pub checkpoints_written: u64,
+    pub restores: u64,
+    pub stale_fenced: u64,
 }
 
 impl CounterSnapshot {

@@ -150,6 +150,7 @@ fn run_pipeline<P: Problem>(
                 oracles: chunk.to_vec(),
                 k_read: k,
                 worker: 0,
+                generation: 0,
             });
             for o in displaced {
                 let mut s = o.s;

@@ -370,6 +370,7 @@ fn server_drops_connections_sending_unappliable_oracles() {
         let msg = Msg::Update {
             k_read: 0,
             worker,
+            generation: 0,
             oracles: vec![bad],
         };
         wire::write_frame(&mut stream, &msg, &mut buf).unwrap();
@@ -689,6 +690,152 @@ fn loopback_two_shards_two_workers_solve_sparse_qp() {
 }
 
 // ---------------------------------------------------------------------
+// Crash recovery (wire v5): generation fencing, checkpoint/restore
+// ---------------------------------------------------------------------
+
+#[test]
+fn stale_generation_update_is_fenced_and_leaves_the_param_untouched() {
+    // Wire v5's generation fence: an Update stamped with a generation
+    // other than the apply core's current one must be counted and
+    // dropped — never applied. The probe run receives one valid-looking
+    // oracle under a bogus generation; the control run receives nothing
+    // at all. Both must end with the same (initial) parameter bits.
+    let mut params: Vec<Vec<u32>> = Vec::new();
+    for send_stale in [true, false] {
+        let mut cfg = qp_cfg();
+        // The lone client drops its connection, emptying the fleet; a
+        // short grace window ends the run promptly.
+        cfg.set("run.accept_timeout_secs", "0.5");
+        let spec = RunSpec::new(Engine::asynchronous(1))
+            .tau(1)
+            .max_epochs(50.0)
+            .max_secs(20.0)
+            .seed(5);
+        let session = apbcfw::runtime::service::spawn_serve(
+            spec,
+            "qp",
+            &cfg,
+            "127.0.0.1:0",
+        )
+        .unwrap();
+        let mut stream = std::net::TcpStream::connect(session.addr).unwrap();
+        let hello = match wire::read_frame(&mut stream).unwrap().unwrap() {
+            (Msg::Hello(h), _) => h,
+            (other, _) => panic!("expected Hello, got {other:?}"),
+        };
+        assert_eq!(hello.generation, 0, "fresh serve must start at gen 0");
+        assert_eq!(hello.resume_draws, 0, "fresh serve never fast-forwards");
+        if send_stale {
+            // Valid in every other respect (block in range, payload of
+            // the instance's dimension, k_read current), so the fence is
+            // the only thing that can drop it.
+            let mut buf = Vec::new();
+            let msg = Msg::Update {
+                k_read: 0,
+                worker: hello.worker_id,
+                generation: hello.generation + 7,
+                oracles: vec![BlockOracle::dense(0, vec![0.5; 5], 1.0)],
+            };
+            wire::write_frame(&mut stream, &msg, &mut buf).unwrap();
+        }
+        drop(stream);
+        let report = session.join().unwrap();
+        assert_eq!(
+            report.counters.updates_applied, 0,
+            "a fenced update must never be applied"
+        );
+        assert_eq!(
+            report.counters.stale_fenced,
+            u64::from(send_stale),
+            "{:?}",
+            report.counters
+        );
+        params.push(bits(&report.raw_param));
+    }
+    assert_eq!(
+        params[0], params[1],
+        "the fenced update must leave the parameter untouched"
+    );
+}
+
+#[test]
+fn crash_restore_loopback_bit_identical_to_uninterrupted_run() {
+    // The tentpole end-to-end pin: a one-worker loopback solve killed by
+    // deterministic crash injection after 50 applied updates and
+    // auto-restored from its durable checkpoint must finish with exactly
+    // the bits of the same solve run without the crash — final parameter
+    // and every trace sample. The checkpoint carries the master iterate,
+    // gamma/sampler clock (k), counters, and problem server state; the
+    // reconnecting worker fast-forwards its draw stream by the announced
+    // `resume_draws` and re-enters at generation 1, so the replayed tail
+    // is draw-for-draw the uninterrupted schedule.
+    let dir = std::env::temp_dir()
+        .join(format!("apbcfw-crash-restore-{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    let mut cfg = gfl_cfg();
+    cfg.set("run.checkpoint_dir", dir.to_str().unwrap());
+    cfg.set("run.checkpoint_every", "20");
+    cfg.set("run.chaos", "crash:50");
+    let spec = shared_knobs(RunSpec::new(Engine::asynchronous(1)), 8.0);
+    let crashed = solve_loopback(spec, "gfl", &cfg, "127.0.0.1:0")
+        .unwrap_or_else(|e| panic!("crash+restore loopback failed: {e:#}"));
+    std::fs::remove_dir_all(&dir).ok();
+
+    let ref_spec = shared_knobs(RunSpec::new(Engine::asynchronous(1)), 8.0);
+    let clean =
+        solve_loopback(ref_spec, "gfl", &gfl_cfg(), "127.0.0.1:0").unwrap();
+
+    assert!(
+        crashed.counters.checkpoints_written >= 1,
+        "{:?}",
+        crashed.counters
+    );
+    assert!(crashed.counters.restores >= 1, "{:?}", crashed.counters);
+    // The restored counters keep the epoch budget global across the
+    // crash: re-executed post-checkpoint work replaces (not adds to) the
+    // lost session's tail, so the budgets land identically.
+    assert_eq!(
+        crashed.counters.oracle_calls, clean.counters.oracle_calls,
+        "oracle budgets diverged across the crash"
+    );
+    assert_eq!(
+        bits(&crashed.raw_param),
+        bits(&clean.raw_param),
+        "crash+restore diverged from the uninterrupted solve"
+    );
+    assert_eq!(crashed.trace.samples.len(), clean.trace.samples.len());
+    for (a, b) in
+        crashed.trace.samples.iter().zip(clean.trace.samples.iter())
+    {
+        assert_eq!(a.iter, b.iter, "sample iteration");
+        assert_eq!(a.oracle_calls, b.oracle_calls, "sample oracle calls");
+        assert_eq!(
+            a.objective.to_bits(),
+            b.objective.to_bits(),
+            "objective bits at iter {}",
+            a.iter
+        );
+        assert_eq!(
+            a.gap.to_bits(),
+            b.gap.to_bits(),
+            "gap-estimate bits at iter {}",
+            a.iter
+        );
+    }
+}
+
+#[test]
+fn checkpoint_every_zero_default_stays_bit_identical() {
+    // `run.checkpoint_every = 0` (the documented default, spelled out)
+    // must keep the serve plane behavior-identical to the pre-v5 fleet:
+    // no checkpoint writes, no restore probing, and the one-worker
+    // bit-identity pin still holds.
+    let mut cfg = gfl_cfg();
+    cfg.set("run.checkpoint_every", "0");
+    assert_loopback_matches_delayed("gfl", &cfg, 8.0, PayloadMode::Auto);
+}
+
+// ---------------------------------------------------------------------
 // Codec round-trip property tests
 // ---------------------------------------------------------------------
 
@@ -735,6 +882,7 @@ fn randomized_update_frames_roundtrip_bit_exactly() {
         let msg = Msg::Update {
             k_read: rng.below(1 << 30) as u64,
             worker: rng.below(64) as u32,
+            generation: rng.below(1 << 16) as u64,
             oracles,
         };
         let n = wire::encode_frame(&msg, &mut buf);

@@ -53,6 +53,7 @@ fn prop_buffer_batches_are_disjoint_and_sized() {
                     .collect(),
                 k_read: 0,
                 worker: 0,
+                generation: 0,
             });
         }
         assert_eq!(asm.len(), inserted.len(), "pending = distinct inserted");

@@ -1,8 +1,11 @@
 #!/usr/bin/env python3
-"""Schema gate for BENCH_hotpaths.json.
+"""Schema gate for the committed bench reports.
 
-The file is committed PR-over-PR (pending or measured) and consumed by the
-perf regression gate, so it must stay machine-readable in both states:
+Both reports are committed PR-over-PR (pending or measured) and consumed
+by regression gates, so they must stay machine-readable in both states.
+The ``bench`` field dispatches the per-kind rules:
+
+``hot_paths`` (BENCH_hotpaths.json):
 
     {"bench": "hot_paths", "unit": "ns_per_call",
      "status": "measured" | "pending-first-run",
@@ -19,6 +22,25 @@ slip past the perf regression gate unnoticed.
 A measured report must carry the sparse-payload dense-vs-sparse row pairs
 (bytes-per-update and fused-apply throughput), which back the payload
 pipeline's acceptance criterion.
+
+``robustness`` (BENCH_robustness.json, written by
+scripts/replay_fig3.sh — EXPERIMENTS.md §Crash-recovery):
+
+    {"bench": "robustness", "unit": "fig3_replay",
+     "status": "measured" | "pending-first-run", "seed": int,
+     "rows": [{"name": "fig3 gfl pareto_mean=M", "pareto_mean": num,
+               "mean_delay": num, "delay_max": int,
+               "final_gap": num, "secs_per_pass": num},
+              ...,
+              {"name": "crash-recovery gfl crash:K checkpoint_every=N",
+               "crash_k": int, "checkpoint_every": int,
+               "checkpoints_written": int, "restores": int,
+               "stale_fenced": int, "final_gap": num,
+               "secs_per_pass": num}]}
+
+A measured robustness report must carry the full Pareto sweep (means
+0/1/2/5/10/20) plus the crash-recovery point, and the crash point must
+have actually exercised the restore path (``restores >= 1``).
 
 Exit code 0 iff the file conforms. Usage:
     python3 scripts/check_bench_schema.py [path]
@@ -37,10 +59,10 @@ KNOWN_ROW_UNITS = {
     "bytes_per_pull",
 }
 
-# Row-name pairs a *measured* report must contain: the dense-vs-sparse
-# payload comparison emitted by benches/hot_paths.rs — both the
-# in-process channel estimate and the distributed transport's real wire
-# measurement (loopback serve+worker through the TCP codec).
+# Row-name pairs a *measured* hot_paths report must contain: the
+# dense-vs-sparse payload comparison emitted by benches/hot_paths.rs —
+# both the in-process channel estimate and the distributed transport's
+# real wire measurement (loopback serve+worker through the TCP codec).
 REQUIRED_MEASURED_PREFIXES = [
     "async bytes-per-update payload=dense",
     "async bytes-per-update payload=sparse",
@@ -63,16 +85,13 @@ REQUIRED_MEASURED_PREFIXES = [
     "snapshot fan-out bytes-per-pull shards=2",
 ]
 
+# The injected Pareto means a *measured* robustness report must sweep
+# (the Fig 3 replay x-axis), plus one crash-recovery point.
+ROBUSTNESS_SWEEP_MEANS = (0, 1, 2, 5, 10, 20)
 
-def check(path: str) -> str:
-    with open(path) as f:
-        doc = json.load(f)
-    for key in ("bench", "unit", "status", "rows"):
-        assert key in doc, f"missing key: {key}"
-    assert doc["bench"] == "hot_paths", f"bench: {doc['bench']!r}"
+
+def check_hot_paths(doc: dict) -> None:
     assert doc["unit"] == "ns_per_call", f"unit: {doc['unit']!r}"
-    assert doc["status"] in ("measured", "pending-first-run"), doc["status"]
-    assert isinstance(doc["rows"], list), "rows must be a list"
     for row in doc["rows"]:
         for key in ("name", "mean", "median", "p95", "reps"):
             assert key in row, f"row missing {key}: {row}"
@@ -92,7 +111,74 @@ def check(path: str) -> str:
             assert any(n.startswith(prefix) for n in names), (
                 f"measured report missing dense-vs-sparse row {prefix!r}"
             )
-    return f"{path} OK ({doc['status']}, {len(doc['rows'])} rows)"
+
+
+def check_robustness(doc: dict) -> None:
+    assert doc["unit"] == "fig3_replay", f"unit: {doc['unit']!r}"
+    assert isinstance(doc.get("seed"), int), "missing/bad seed"
+    for row in doc["rows"]:
+        assert isinstance(row.get("name"), str), f"row missing name: {row}"
+        for key in ("final_gap", "secs_per_pass"):
+            assert isinstance(row.get(key), (int, float)), (
+                f"row missing numeric {key}: {row}"
+            )
+        if row["name"].startswith("fig3 "):
+            for key in ("pareto_mean", "mean_delay", "delay_max"):
+                assert isinstance(row.get(key), (int, float)), (
+                    f"sweep row missing numeric {key}: {row}"
+                )
+        elif row["name"].startswith("crash-recovery "):
+            for key in (
+                "crash_k",
+                "checkpoint_every",
+                "checkpoints_written",
+                "restores",
+                "stale_fenced",
+            ):
+                assert isinstance(row.get(key), int), (
+                    f"crash row missing integer {key}: {row}"
+                )
+        else:
+            raise AssertionError(
+                f"unknown robustness row kind: {row['name']!r}"
+            )
+    if doc["status"] == "measured":
+        assert doc["rows"], "measured report must carry rows"
+        names = [row["name"] for row in doc["rows"]]
+        for mean in ROBUSTNESS_SWEEP_MEANS:
+            needle = f"fig3 gfl pareto_mean={mean}"
+            assert needle in names, (
+                f"measured report missing sweep row {needle!r}"
+            )
+        crash = [
+            row
+            for row in doc["rows"]
+            if row["name"].startswith("crash-recovery ")
+        ]
+        assert crash, "measured report missing the crash-recovery point"
+        for row in crash:
+            assert row["restores"] >= 1, (
+                f"crash-recovery point never restored: {row}"
+            )
+
+
+def check(path: str) -> str:
+    with open(path) as f:
+        doc = json.load(f)
+    for key in ("bench", "unit", "status", "rows"):
+        assert key in doc, f"missing key: {key}"
+    assert doc["status"] in ("measured", "pending-first-run"), doc["status"]
+    assert isinstance(doc["rows"], list), "rows must be a list"
+    if doc["bench"] == "hot_paths":
+        check_hot_paths(doc)
+    elif doc["bench"] == "robustness":
+        check_robustness(doc)
+    else:
+        raise AssertionError(f"bench: {doc['bench']!r}")
+    return (
+        f"{path} OK ({doc['bench']}, {doc['status']}, "
+        f"{len(doc['rows'])} rows)"
+    )
 
 
 if __name__ == "__main__":

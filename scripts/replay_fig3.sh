@@ -1,0 +1,107 @@
+#!/usr/bin/env bash
+# Measured Fig 3 replay sweep (EXPERIMENTS.md §Crash-recovery).
+#
+# Sweeps the injected Pareto mean stall over self-hosted 4-worker GFL
+# fleets (run.chaos=delay:pareto:M:0.5), records the measured delay
+# telemetry (the empirical expected-delay kappa) against convergence,
+# adds one crash-recovery point (run.chaos=crash:K with durable
+# checkpoints — the drill must report restores >= 1), and writes
+# BENCH_robustness.json at the repo root. The committed copy is gated by
+# scripts/check_bench_schema.py in both its pending and measured states.
+#
+# Usage (from the repo root, after `cargo build --release`):
+#     scripts/replay_fig3.sh
+# Env overrides: BIN, OUT, SEED, MEANS, CRASH_K, CKPT_EVERY.
+set -eu
+
+BIN="${BIN:-./target/release/apbcfw}"
+OUT="${OUT:-BENCH_robustness.json}"
+SEED="${SEED:-3}"
+MEANS="${MEANS:-0 1 2 5 10 20}"
+CRASH_K="${CRASH_K:-45}"
+CKPT_EVERY="${CKPT_EVERY:-10}"
+
+# Paper-shaped but CI-sized: the sweep's signal is the *relative*
+# degradation across injected means, not absolute wall clock.
+SMALL="--set gfl.d=4 --set gfl.n=20 --set run.max_secs=60"
+COMMON="--self-host --workers 4 --tau 4 --epochs 20 --seed $SEED"
+
+log=$(mktemp)
+ckdir=$(mktemp -d)
+trap 'rm -f "$log"; rm -rf "$ckdir"' EXIT
+
+# Field extractors over a captured solve summary (`summarize` in
+# rust/src/main.rs). tail -n1: the summary prints once, after any
+# restart-loop log lines.
+gap_of()   { sed -n 's/.*gap=\([0-9.eE+-]*\) t=.*/\1/p' "$1" | tail -n1; }
+spp_of()   { sed -n 's|.*secs/pass=\([0-9.eE+-]*\).*|\1|p' "$1" | tail -n1; }
+dmean_of() { sed -n 's/.*delay: mean \([0-9.eE+-]*\),.*/\1/p' "$1" | tail -n1; }
+dmax_of()  { sed -n 's/.*delay: mean .* max \([0-9]*\).*/\1/p' "$1" | tail -n1; }
+rec_of()   { sed -n "s/.*recovery: .*$2=\([0-9]*\).*/\1/p" "$1" | tail -n1; }
+
+require() { # require VALUE LABEL — a missing field means the parse broke
+  [ -n "$1" ] || { echo "replay_fig3: missing $2 in solve summary" >&2
+                   cat "$log" >&2; exit 1; }
+}
+
+nl='
+'
+rows=""
+sep=""
+
+for mean in $MEANS; do
+  echo "[replay_fig3] pareto mean ${mean} ms (p=0.5)" >&2
+  # shellcheck disable=SC2086
+  "$BIN" serve gfl $COMMON $SMALL \
+         --set "run.chaos=delay:pareto:${mean}:0.5" >"$log" 2>&1 \
+    || { cat "$log" >&2; exit 1; }
+  cat "$log" >&2
+  gap=$(gap_of "$log"); spp=$(spp_of "$log")
+  dmean=$(dmean_of "$log"); dmax=$(dmax_of "$log")
+  require "$gap" final_gap; require "$spp" secs_per_pass
+  require "$dmean" mean_delay; require "$dmax" delay_max
+  rows="${rows}${sep}    {\"name\": \"fig3 gfl pareto_mean=${mean}\", \
+\"pareto_mean\": ${mean}, \"mean_delay\": ${dmean}, \"delay_max\": ${dmax}, \
+\"final_gap\": ${gap}, \"secs_per_pass\": ${spp}}"
+  sep=",$nl"
+done
+
+echo "[replay_fig3] crash drill: crash:${CRASH_K}, checkpoint_every=${CKPT_EVERY}" >&2
+# shellcheck disable=SC2086
+"$BIN" serve gfl $COMMON $SMALL \
+       --checkpoint-dir "$ckdir" --checkpoint-every "$CKPT_EVERY" \
+       --set "run.chaos=crash:${CRASH_K}" >"$log" 2>&1 \
+  || { cat "$log" >&2; exit 1; }
+cat "$log" >&2
+gap=$(gap_of "$log"); spp=$(spp_of "$log")
+written=$(rec_of "$log" checkpoints_written)
+restores=$(rec_of "$log" restores)
+fenced=$(rec_of "$log" stale_fenced)
+require "$gap" final_gap; require "$spp" secs_per_pass
+require "$written" checkpoints_written
+require "$restores" restores
+require "$fenced" stale_fenced
+if [ "$restores" -lt 1 ]; then
+  echo "replay_fig3: crash drill reported restores=${restores} (< 1)" >&2
+  exit 1
+fi
+rows="${rows}${sep}    {\"name\": \
+\"crash-recovery gfl crash:${CRASH_K} checkpoint_every=${CKPT_EVERY}\", \
+\"crash_k\": ${CRASH_K}, \"checkpoint_every\": ${CKPT_EVERY}, \
+\"checkpoints_written\": ${written}, \"restores\": ${restores}, \
+\"stale_fenced\": ${fenced}, \"final_gap\": ${gap}, \
+\"secs_per_pass\": ${spp}}"
+
+cat > "$OUT" <<EOF
+{
+  "bench": "robustness",
+  "unit": "fig3_replay",
+  "status": "measured",
+  "seed": ${SEED},
+  "rows": [
+${rows}
+  ]
+}
+EOF
+
+echo "[replay_fig3] wrote ${OUT}" >&2
