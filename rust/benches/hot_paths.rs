@@ -428,6 +428,41 @@ fn main() {
     }
     println!();
 
+    // ---- delay-adaptive stepping: apply throughput off vs kappa ----
+    // Real async engine runs on the paper-shape GFL: the kappa policy
+    // adds one EMA observation per accepted update and one damping
+    // multiply per apply, so its throughput row must track the pinned
+    // off row closely — these two rows make any control-plane overhead
+    // visible across PRs.
+    println!();
+    for (label, adapt) in [
+        ("off", apbcfw::sim::adapt::AdaptSpec::default()),
+        (
+            "kappa",
+            apbcfw::sim::adapt::AdaptSpec {
+                step: apbcfw::sim::adapt::StepPolicy::Kappa,
+                ..Default::default()
+            },
+        ),
+    ] {
+        let cfg = RunSpec::new(Engine::asynchronous(2))
+            .tau(4)
+            .adapt(adapt)
+            .sample_every(1 << 20)
+            .max_epochs(30.0)
+            .max_secs(10.0)
+            .seed(3)
+            .run_config()
+            .expect("async spec lowers");
+        let r = coord::run(&gfl, &cfg);
+        report.add_metric(
+            &format!("async updates-per-sec adapt={label}"),
+            "updates_per_sec",
+            r.counters.updates_applied as f64 / r.elapsed_s.max(1e-9),
+        );
+    }
+    println!();
+
     // ---- distributed transport: wire bytes per applied update ----
     // Self-hosted loopback serve+worker runs (multiclass SSVM, 2 workers
     // over 127.0.0.1) with the payload knob forced both ways: total frame

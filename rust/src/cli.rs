@@ -342,6 +342,14 @@ USAGE:
       (run.payload=auto|dense|sparse, run.delay, run.weighted_averaging,
       run.work_multiplier, run.eps_gap, ...) are reachable through
       --set / --config only.
+      delay-adaptive control (defaults bit-identical to the fixed
+      schedules): --set run.adapt.step=off|kappa damps the step
+      schedule by the observed/expected delay ratio,
+      --set run.adapt.drop=k2|quantile:Q tracks the drop threshold to
+      a running delay quantile, --set run.adapt.batch=off|auto:MIN:MAX
+      lets net workers retune their fan-out tau_w from snapshot-pull
+      latency (serve role only; incompatible with shards > 1 and
+      checkpoint/restore).
   apbcfw serve <gfl|ssvm|multiclass|qp> [--listen HOST:PORT] [--self-host]
          [--accept-timeout SECS] [--shards S] [--shard-id I]
          [--checkpoint-dir DIR] [--checkpoint-every N] [--restore]

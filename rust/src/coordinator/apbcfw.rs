@@ -76,6 +76,8 @@ pub fn run_observed<P: Problem>(
             weighted_averaging: cfg.weighted_averaging,
             stop: cfg.stop,
             iter_scale: 1,
+            adapt_step: cfg.adapt.step,
+            adapt_drop: cfg.adapt.drop,
         },
         &counters,
     );
@@ -429,6 +431,20 @@ mod tests {
             bytes_per_oracle[1],
             bytes_per_oracle[0]
         );
+    }
+
+    #[test]
+    fn adaptive_policies_still_converge() {
+        // Damped steps (damp >= MIN_DAMP) and a permissive quantile drop
+        // must not break convergence — adaptivity degrades the rate at
+        // worst, never correctness.
+        let p = gfl_instance();
+        let mut c = cfg(3, 4);
+        c.adapt.step = crate::sim::adapt::StepPolicy::Kappa;
+        c.adapt.drop = crate::sim::adapt::DropPolicy::Quantile(0.9);
+        let r = run(&p, &c);
+        assert!(r.trace.last().unwrap().gap <= 0.05);
+        assert!(r.counters.updates_applied > 0);
     }
 
     #[test]

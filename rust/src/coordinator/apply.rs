@@ -29,6 +29,10 @@ use super::buffer::BatchAssembler;
 use super::{RunResult, UpdateMsg};
 use crate::problems::{ApplyOptions, BlockOracle, Problem};
 use crate::run::Observer;
+use crate::sim::adapt::{
+    accept_delay_adjusted, damping_factor, DelayWindowRing, DropPolicy,
+    KappaEma, StepPolicy, DELAY_WINDOW,
+};
 use crate::sim::delay::accept_delay;
 use crate::solver::{schedule_gamma, StopCond, WeightedAverage};
 use crate::util::metrics::{Counters, Sample, Stopwatch, Trace};
@@ -78,6 +82,13 @@ pub struct ApplyKnobs {
     /// arXiv:2409.06931). Everything unsharded passes 1, which leaves
     /// the schedule bit-identical to the historical call.
     pub iter_scale: u64,
+    /// `run.adapt.step`: damp the gamma schedule by the smoothed
+    /// observed kappa ([`StepPolicy::Off`] keeps the historical
+    /// expression bit-for-bit).
+    pub adapt_step: StepPolicy,
+    /// `run.adapt.drop`: the staleness verdict ([`DropPolicy::K2`] is
+    /// the paper's k/2 rule on the historical code path).
+    pub adapt_drop: DropPolicy,
 }
 
 /// The shared server core: master parameter, apply state, assembler,
@@ -104,6 +115,11 @@ pub struct ApplyCore<'a, P: Problem> {
     generation: u64,
     asm: BatchAssembler,
     watch: Stopwatch,
+    /// Smoothed observed kappa behind `run.adapt.step = kappa` (reports
+    /// 0 before the first applied update — never NaN).
+    kappa: KappaEma,
+    /// Recent ingested delays backing the `quantile:Q` drop threshold.
+    delay_window: DelayWindowRing,
 }
 
 impl<'a, P: Problem> ApplyCore<'a, P> {
@@ -136,6 +152,8 @@ impl<'a, P: Problem> ApplyCore<'a, P> {
             generation: 0,
             asm: BatchAssembler::new(),
             watch: Stopwatch::start(),
+            kappa: KappaEma::new(),
+            delay_window: DelayWindowRing::new(DELAY_WINDOW),
         }
     }
 
@@ -240,8 +258,34 @@ impl<'a, P: Problem> ApplyCore<'a, P> {
         // Staleness rule (paper Thm 4): drop if delay > k/2. The rule
         // itself lives in `sim::delay::accept_delay` — the single
         // definition site shared with the sequential delayed engine.
+        // Under `run.adapt.drop = quantile:Q` the threshold is
+        // re-centered by the running-quantile adjustment (the k2 arm is
+        // the historical call, untouched).
         let delay = self.k.saturating_sub(msg.k_read);
-        if self.knobs.staleness_rule && !accept_delay(self.k, delay) {
+        let accepted = match self.knobs.adapt_drop {
+            DropPolicy::K2 => accept_delay(self.k, delay),
+            DropPolicy::Quantile(q) => {
+                let adj = self.delay_window.adjustment(q);
+                let v = accept_delay_adjusted(self.k, delay, adj);
+                // Marginal drops: rejections the plain k/2 rule would
+                // have admitted (only meaningful when enforced).
+                if self.knobs.staleness_rule
+                    && !v
+                    && accept_delay(self.k, delay)
+                {
+                    Counters::add(
+                        &self.counters.drops_adaptive,
+                        msg.oracles.len() as u64,
+                    );
+                }
+                // The window sees every ingested delay, accepted or
+                // not, *after* this verdict (the verdict only depends
+                // on strictly older traffic).
+                self.delay_window.push(delay);
+                v
+            }
+        };
+        if self.knobs.staleness_rule && !accepted {
             Counters::add(&self.counters.dropped, msg.oracles.len() as u64);
             recycle(msg.oracles);
         } else if self.knobs.collision_overwrite {
@@ -263,11 +307,17 @@ impl<'a, P: Problem> ApplyCore<'a, P> {
         while let Some(batch_msgs) = self.asm.take_batch(self.tau) {
             // Stamp every applied update with its observed delay (the
             // expected-delay counters behind `mean_delay()` — the
-            // paper's empirical kappa).
+            // paper's empirical kappa). Under `run.adapt.step = kappa`
+            // the EMA folds these in *before* this apply's gamma, so a
+            // constant injected delay yields a constant damping factor
+            // from the very first applied update (the fixed-delay pin).
             for m in &batch_msgs {
                 let d = m.delay(self.k);
                 Counters::add(&self.counters.delay_sum, d);
                 Counters::max_of(&self.counters.delay_max, d);
+                if self.knobs.adapt_step == StepPolicy::Kappa {
+                    self.kappa.observe(d);
+                }
             }
             let batch: Vec<_> =
                 batch_msgs.into_iter().map(|m| m.oracle).collect();
@@ -276,11 +326,36 @@ impl<'a, P: Problem> ApplyCore<'a, P> {
             // step size, counters, and gap scaling all use the actual
             // size (at batch = 1 this is exactly tau, bit-for-bit).
             let applied = batch.len();
-            let gamma = schedule_gamma(
-                self.n,
-                applied,
-                self.k * self.knobs.iter_scale,
-            );
+            let gamma = match self.knobs.adapt_step {
+                // The pinned default: the historical expression,
+                // bit-for-bit.
+                StepPolicy::Off => schedule_gamma(
+                    self.n,
+                    applied,
+                    self.k * self.knobs.iter_scale,
+                ),
+                // Damped regime (arXiv:1612.04425): scale the schedule
+                // by kappa_exp / (kappa_exp + kappa_obs), expected
+                // kappa := tau, observed kappa := the delay EMA. The
+                // deficit telemetry is integer parts-per-thousand so
+                // the counter stays exact under absorb().
+                StepPolicy::Kappa => {
+                    let damp = damping_factor(
+                        self.tau as f64,
+                        self.kappa.value(),
+                    );
+                    Counters::add(
+                        &self.counters.gamma_damped_sum,
+                        ((1.0 - damp) * 1000.0).round() as u64,
+                    );
+                    (schedule_gamma(
+                        self.n,
+                        applied,
+                        self.k * self.knobs.iter_scale,
+                    ) as f64
+                        * damp) as f32
+                }
+            };
             let info = self.problem.apply(
                 &mut self.state,
                 &mut self.master,
@@ -418,6 +493,8 @@ mod tests {
             weighted_averaging: false,
             stop: StopCond::default(),
             iter_scale: 1,
+            adapt_step: StepPolicy::Off,
+            adapt_drop: DropPolicy::K2,
         }
     }
 
@@ -560,6 +637,133 @@ mod tests {
         }
         assert_eq!(core.requeue_worker(7), 2);
         assert_eq!(core.requeue_worker(7), 0);
+    }
+
+    #[test]
+    fn kappa_damping_stamps_deficit_on_delayed_updates() {
+        let p = gfl_instance();
+        let counters = Counters::new();
+        let mut k = knobs();
+        k.adapt_step = StepPolicy::Kappa;
+        let mut core = ApplyCore::new(&p, k, &counters);
+        let noop: &RecycleHook<'_> = &|_| {};
+        // Advance the clock with fresh updates, then land one stale
+        // (but admissible) update so the EMA sees a real delay.
+        for _ in 0..4 {
+            let o = p.oracle(core.master(), 1);
+            core.ingest(
+                UpdateMsg {
+                    oracles: vec![o],
+                    k_read: core.k(),
+                    worker: 0,
+                    generation: 0,
+                },
+                noop,
+            );
+            assert!(!core.drain(&mut (), &mut |_, _, _, _| {}));
+        }
+        let o = p.oracle(core.master(), 2);
+        core.ingest(
+            UpdateMsg {
+                oracles: vec![o],
+                k_read: 2, // delay 2 <= k/2 = 2: accepted, damped
+                worker: 0,
+                generation: 0,
+            },
+            noop,
+        );
+        assert!(!core.drain(&mut (), &mut |_, _, _, _| {}));
+        let snap = counters.snapshot();
+        assert_eq!(snap.updates_applied, 5);
+        // damp = tau / (tau + ema) = 1 / (1 + 2) -> deficit ~667.
+        assert!(
+            snap.gamma_damped_sum > 0,
+            "observed delay must register a damping deficit"
+        );
+        assert_eq!(snap.drops_adaptive, 0, "k2 drop arm untouched");
+    }
+
+    #[test]
+    fn quantile_drop_counts_marginal_rejections() {
+        let p = gfl_instance();
+        let counters = Counters::new();
+        let mut k = knobs();
+        // The strictest quantile: threshold re-centered by
+        // T_0 - T_median (nonpositive), so some k/2-admissible updates
+        // get rejected and counted as adaptive drops.
+        k.adapt_drop = DropPolicy::Quantile(0.0);
+        let mut core = ApplyCore::new(&p, k, &counters);
+        let noop: &RecycleHook<'_> = &|_| {};
+        // Warm the clock and the delay window with mixed (admissible)
+        // delays: k_read stamps chosen so the ingested delays are
+        // 0, 0, 1, 1, 2, 1 against the growing clock.
+        for kr in [0u64, 1, 1, 2, 2, 4] {
+            let o = p.oracle(core.master(), 1);
+            core.ingest(
+                UpdateMsg {
+                    oracles: vec![o],
+                    k_read: kr,
+                    worker: 0,
+                    generation: 0,
+                },
+                noop,
+            );
+            assert!(!core.drain(&mut (), &mut |_, _, _, _| {}));
+        }
+        // Window sorted: {0, 0, 1, 1, 1, 2} -> T_0 - T_med = 0 - 1 =
+        // -1, so a delay-3 update at k = 6 (k/2 admits exactly 3) is
+        // adaptively rejected.
+        assert_eq!(core.k(), 6);
+        let o = p.oracle(core.master(), 2);
+        core.ingest(
+            UpdateMsg {
+                oracles: vec![o],
+                k_read: 3,
+                worker: 0,
+                generation: 0,
+            },
+            noop,
+        );
+        let snap = counters.snapshot();
+        assert_eq!(snap.dropped, 1);
+        assert_eq!(
+            snap.drops_adaptive, 1,
+            "the k/2 rule would have accepted delay 3 at k = 6"
+        );
+    }
+
+    #[test]
+    fn quantile_median_matches_k2_verdicts() {
+        // Q = 0.5 re-centers by T_med - T_med = 0 for *any* window —
+        // verdict-identical to the k2 arm on the same traffic.
+        let p = gfl_instance();
+        let run = |drop: DropPolicy| -> (u64, u64) {
+            let counters = Counters::new();
+            let mut k = knobs();
+            k.adapt_drop = drop;
+            let mut core = ApplyCore::new(&p, k, &counters);
+            let noop: &RecycleHook<'_> = &|_| {};
+            for i in 0..12u64 {
+                let o = p.oracle(core.master(), (i % 4) as usize);
+                // Alternate fresh and very stale reads.
+                let k_read = if i % 3 == 0 { 0 } else { core.k() };
+                core.ingest(
+                    UpdateMsg {
+                        oracles: vec![o],
+                        k_read,
+                        worker: 0,
+                        generation: 0,
+                    },
+                    noop,
+                );
+                assert!(!core.drain(&mut (), &mut |_, _, _, _| {}));
+            }
+            let s = counters.snapshot();
+            (s.updates_applied, s.dropped)
+        };
+        let k2 = run(DropPolicy::K2);
+        let med = run(DropPolicy::Quantile(0.5));
+        assert_eq!(k2, med);
     }
 
     #[test]

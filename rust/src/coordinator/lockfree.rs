@@ -13,6 +13,7 @@ use super::shared::SharedParam;
 use super::{pick_blocks, RunConfig, RunResult};
 use crate::problems::{BlockOracle, OracleScratch, ProjectableProblem};
 use crate::run::Observer;
+use crate::sim::adapt::{damping_factor, KappaEma, StepPolicy};
 use crate::util::metrics::{Counters, Sample, Stopwatch, Trace};
 use crate::util::rng::Pcg64;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -61,10 +62,16 @@ where
             let stop = &stop;
             let counters = &counters;
             let seed = cfg.seed;
+            let adapt_step = cfg.adapt.step;
             scope.spawn(move || {
                 let mut rng = Pcg64::new(seed, 3000 + w as u64);
                 let mut snapshot: Vec<f32> = Vec::new();
                 let mut blocks: Vec<usize> = Vec::new();
+                // Smoothed observed kappa for `run.adapt.step = kappa`:
+                // serverless, so each thread damps against its own view
+                // of the global counter (delay = counter at apply minus
+                // counter at snapshot read).
+                let mut kappa = KappaEma::new();
                 // The oracles never leave this thread, so one slot per
                 // batch position plus one caller-owned oracle scratch
                 // serve the whole run — the loop is allocation-free in
@@ -79,6 +86,9 @@ where
                     // historical per-block loop).
                     pick_blocks(&mut rng, n, wbatch, &mut blocks);
                     shared.read(&mut snapshot);
+                    // The counter value this round's snapshot was read
+                    // at — the k_read of the delay stamp below.
+                    let round_k = counter.load(Ordering::Relaxed);
                     Counters::bump(&counters.snapshot_reads);
                     let (mut nnz, mut bytes) = (0u64, 0u64);
                     for (slot, &i) in slots.iter_mut().zip(blocks.iter()) {
@@ -102,6 +112,27 @@ where
                         let k = counter.load(Ordering::Relaxed);
                         let gamma = 2.0 * n as f32
                             / (k as f32 + 2.0 * n as f32);
+                        // `run.adapt.step`: the Off arm is the
+                        // historical gamma verbatim; Kappa damps by the
+                        // smoothed observed delay (counter drift since
+                        // this round's snapshot), expected kappa := the
+                        // per-round fan-out width.
+                        let gamma = match adapt_step {
+                            StepPolicy::Off => gamma,
+                            StepPolicy::Kappa => {
+                                kappa.observe(k.saturating_sub(round_k));
+                                let damp = damping_factor(
+                                    wbatch as f64,
+                                    kappa.value(),
+                                );
+                                Counters::add(
+                                    &counters.gamma_damped_sum,
+                                    ((1.0 - damp) * 1000.0).round()
+                                        as u64,
+                                );
+                                (gamma as f64 * damp) as f32
+                            }
+                        };
                         let range = problem.block_range(i);
                         debug_assert_eq!(slot.s.dim(), range.len());
                         match slot.s.as_dense() {

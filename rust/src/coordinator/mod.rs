@@ -145,6 +145,12 @@ pub struct RunConfig {
     /// inconsistent-read regime (default); `Consistent` serves seqlock
     /// snapshots for the consistent-read comparison scenario.
     pub snapshot_mode: shared::SnapshotMode,
+    /// Delay-adaptive control policies (`run.adapt.*`). The all-off
+    /// default leaves every engine on its historical code path
+    /// bit-for-bit; in-process engines honor `step` and `drop` (the
+    /// `batch` policy only acts in the net worker loop, mirroring how
+    /// `run.chaos` parses everywhere but injects only on the wire).
+    pub adapt: crate::sim::adapt::AdaptSpec,
     pub stop: crate::solver::StopCond,
     pub seed: u64,
 }
@@ -182,6 +188,7 @@ impl Default for RunConfig {
             queue_factor: 4,
             weighted_averaging: false,
             snapshot_mode: shared::SnapshotMode::Torn,
+            adapt: crate::sim::adapt::AdaptSpec::default(),
             stop: crate::solver::StopCond::default(),
             seed: 0,
         }

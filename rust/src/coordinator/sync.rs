@@ -19,6 +19,7 @@ use crate::problems::{
     ApplyOptions, BlockOracle, OraclePayload, OracleScratch, Problem,
 };
 use crate::run::Observer;
+use crate::sim::adapt::{damping_factor, StepPolicy};
 use crate::solver::schedule_gamma;
 use crate::util::metrics::{Counters, Sample, Stopwatch, Trace};
 use crate::util::rng::Pcg64;
@@ -181,7 +182,22 @@ pub fn run_observed<P: Problem>(
             }
             Counters::add(&counters.payload_nnz, nnz);
             Counters::add(&counters.payload_bytes, bytes);
-            let gamma = schedule_gamma(n, tau, k);
+            let gamma = match cfg.adapt.step {
+                // Pinned default: the historical expression verbatim.
+                StepPolicy::Off => schedule_gamma(n, tau, k),
+                // Structural threading: the barrier makes every round's
+                // observed delay exactly 0, so the damping factor is
+                // identically 1 and the deficit identically 0 — only
+                // delay-observing engines ever damp.
+                StepPolicy::Kappa => {
+                    let damp = damping_factor(tau as f64, 0.0);
+                    Counters::add(
+                        &counters.gamma_damped_sum,
+                        ((1.0 - damp) * 1000.0).round() as u64,
+                    );
+                    (schedule_gamma(n, tau, k) as f64 * damp) as f32
+                }
+            };
             let info = problem.apply(
                 &mut state,
                 &mut master,

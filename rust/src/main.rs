@@ -168,6 +168,10 @@ fn summarize(name: &str, r: &Report) {
             r.counters.mean_delay(),
             r.counters.delay_max
         );
+        // Adaptive-control telemetry (run.adapt.*). Always printed for
+        // these engines — all-zero under the off/k2 defaults — so CI's
+        // adaptive smokes can grep one stable line.
+        println!("  {}", r.counters.adapt_summary());
     }
     // Fleet-membership telemetry only the net serve role populates; CI's
     // chaos smokes grep these fields, so keep the format stable.

@@ -35,7 +35,9 @@ const MAGIC: &[u8; 4] = b"apck";
 
 /// Checkpoint format version. Bumped on any layout change; a restored
 /// server only ever accepts its own version (no cross-version decode).
-const VERSION: u16 = 1;
+/// v2 extended the counter block from 21 to 24 fields (the adaptive
+/// telemetry counters).
+const VERSION: u16 = 2;
 
 /// Hard cap on a checkpoint file a decoder will even look at, sized to
 /// the wire frame cap (the master param must fit in a Snapshot frame
@@ -53,7 +55,7 @@ const MAX_CHECKPOINT_BYTES: u64 = super::wire::MAX_FRAME_BYTES as u64;
 /// master: wire-v4 full-snapshot body (kind byte + zero-RLE runs)
 /// samples: count u32, then per sample
 ///     iter u64 | oracle_calls u64 | elapsed_s f64 | objective f64 | gap f64
-/// counters: 21 x u64 (CounterSnapshot fields in declaration order)
+/// counters: 24 x u64 (CounterSnapshot fields in declaration order)
 /// server_state: len u32 | bytes
 /// crc32 u32 over every preceding byte (IEEE, reflected)
 /// ```
@@ -388,7 +390,7 @@ pub fn load_for_restore(
 /// list (with [`counter_fields_mut`] mirroring it) so adding a counter
 /// without extending the checkpoint layout is a compile error here, not
 /// silent data loss.
-fn counter_fields(c: &CounterSnapshot) -> [u64; 21] {
+fn counter_fields(c: &CounterSnapshot) -> [u64; 24] {
     [
         c.oracle_calls,
         c.updates_applied,
@@ -411,11 +413,14 @@ fn counter_fields(c: &CounterSnapshot) -> [u64; 21] {
         c.checkpoints_written,
         c.restores,
         c.stale_fenced,
+        c.gamma_damped_sum,
+        c.drops_adaptive,
+        c.batch_resizes,
     ]
 }
 
 /// Mutable twin of [`counter_fields`] — the decode-side field order.
-fn counter_fields_mut(c: &mut CounterSnapshot) -> [&mut u64; 21] {
+fn counter_fields_mut(c: &mut CounterSnapshot) -> [&mut u64; 24] {
     [
         &mut c.oracle_calls,
         &mut c.updates_applied,
@@ -438,6 +443,9 @@ fn counter_fields_mut(c: &mut CounterSnapshot) -> [&mut u64; 21] {
         &mut c.checkpoints_written,
         &mut c.restores,
         &mut c.stale_fenced,
+        &mut c.gamma_damped_sum,
+        &mut c.drops_adaptive,
+        &mut c.batch_resizes,
     ]
 }
 

@@ -222,6 +222,31 @@ impl NetOptions {
             !restore || checkpoint_dir.is_some(),
             "run.restore needs run.checkpoint_dir to restore from"
         );
+        // The adaptive batch controller retunes tau_w from live pull
+        // latencies, so the fan-out is no longer a session constant.
+        // Both crash recovery (`resume_draws` divides the checkpointed
+        // oracle count by a FIXED batch to realign worker rngs) and the
+        // sharded plane (per-shard requeue quotas derive from the
+        // announced fan-out) bake that constant in — reject the
+        // combinations instead of silently mis-resuming or mis-counting.
+        // Parsed here (not just in RunSpec) because both serve bind and
+        // the worker handshake validate through this path.
+        if let crate::sim::adapt::BatchPolicy::Auto { .. } =
+            crate::sim::adapt::AdaptSpec::from_config(cfg)?.batch
+        {
+            ensure!(
+                shards == 1,
+                "run.adapt.batch = auto is incompatible with \
+                 run.shards > 1 (shard requeue quotas assume the \
+                 announced fixed fan-out)"
+            );
+            ensure!(
+                checkpoint_dir.is_none() && !restore,
+                "run.adapt.batch = auto is incompatible with \
+                 checkpoint/restore (rng realignment after a restore \
+                 assumes a fixed fan-out batch)"
+            );
+        }
         Ok(Self {
             accept_timeout,
             liveness,
@@ -411,6 +436,27 @@ mod tests {
                 "{key}={bad} must be rejected"
             );
         }
+    }
+
+    #[test]
+    fn adaptive_batch_rejects_incompatible_combinations() {
+        let mut cfg = Config::new();
+        cfg.set("run.adapt.batch", "auto:1:8");
+        assert!(NetOptions::from_config(&cfg).is_ok());
+        cfg.set("run.shards", "2");
+        let err = NetOptions::from_config(&cfg).unwrap_err().to_string();
+        assert!(err.contains("run.adapt.batch"), "{err}");
+        assert!(err.contains("shards"), "{err}");
+        let mut cfg = Config::new();
+        cfg.set("run.adapt.batch", "auto:1:8");
+        cfg.set("run.checkpoint_dir", "/tmp/ck");
+        let err = NetOptions::from_config(&cfg).unwrap_err().to_string();
+        assert!(err.contains("run.adapt.batch"), "{err}");
+        assert!(err.contains("checkpoint"), "{err}");
+        // A malformed value fails parse before any combination check.
+        let mut cfg = Config::new();
+        cfg.set("run.adapt.batch", "auto:8:2");
+        assert!(NetOptions::from_config(&cfg).is_err());
     }
 
     #[test]

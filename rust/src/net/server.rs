@@ -122,6 +122,12 @@ struct ConnState {
     /// Blocks handed out with the last snapshot answer and not yet
     /// returned as an update — requeued if the worker dies mid-round.
     outstanding: usize,
+    /// Oracle count of this worker's last nonempty Update frame — the
+    /// serve side's view of its fan-out batch. Tracked only under
+    /// `run.adapt.batch = auto`, where a length transition is a resize
+    /// decided by the worker's controller (`batch_resizes` telemetry —
+    /// no wire change needed to observe it).
+    last_batch: Option<usize>,
 }
 
 /// Declare connection `idx` dead (idempotent): shut the socket down so
@@ -618,6 +624,10 @@ impl BoundServer {
                 _ => unreachable!("bind() accepts only the async engine"),
             };
         let workers = spec.engine.workers();
+        // Whether workers run the self-tuning fan-out controller — the
+        // gate on the `batch_resizes` payload-length tracking below.
+        let adapt_batch = self.spec.adapt.batch
+            != crate::sim::adapt::BatchPolicy::Off;
         let n = problem.num_blocks();
         let s_count = self.plan.len();
         let owned = self.plan.block_range(shard);
@@ -684,6 +694,7 @@ impl BoundServer {
                     epoch.elapsed().as_millis() as u64,
                 )),
                 outstanding: 0,
+                last_batch: None,
             })
             .collect();
         // Mid-run joiners get ids above the initial fleet — an id is
@@ -701,6 +712,8 @@ impl BoundServer {
                 sample_every: spec.sample_every,
                 exact_gap: spec.exact_gap,
                 weighted_averaging: spec.weighted_averaging,
+                adapt_step: spec.adapt.step,
+                adapt_drop: spec.adapt.drop,
                 stop,
                 iter_scale: s_count as u64,
             },
@@ -871,6 +884,7 @@ impl BoundServer {
                             worker_id,
                             last_seen: Arc::clone(&last_seen),
                             outstanding: 0,
+                            last_batch: None,
                         });
                         let tx = tx.clone();
                         let counters = &counters;
@@ -954,6 +968,18 @@ impl BoundServer {
                         }
                         // The outstanding fan-out round came back.
                         conns[conn].outstanding = 0;
+                        // Under the adaptive batch controller, a payload
+                        // length transition is a worker-side resize.
+                        if adapt_batch && !msg.oracles.is_empty() {
+                            let len = msg.oracles.len();
+                            if conns[conn]
+                                .last_batch
+                                .is_some_and(|prev| prev != len)
+                            {
+                                Counters::bump(&counters.batch_resizes);
+                            }
+                            conns[conn].last_batch = Some(len);
+                        }
                         // In-process engines count oracle calls at the
                         // worker's solve site; on the wire the receipt
                         // is the first place the server sees them.

@@ -62,6 +62,7 @@ use super::chaos::{chaos_rng_stream, ChaosStream};
 use super::wire::{self, Hello, Msg, SnapshotBody};
 use super::{payload_mode_from_tag, rng_stream_for, NetOptions};
 use crate::coordinator::pick_blocks;
+use crate::sim::adapt::{next_batch, AdaptSpec, BatchPolicy};
 use crate::problems::{BlockOracle, OracleScratch, Problem};
 use crate::run::ProblemInstance;
 use crate::util::config::Config;
@@ -386,6 +387,20 @@ fn run_on(mut stream: TcpStream, resumed: bool) -> Result<WorkerSummary> {
     // The fleet knobs ride in the same shipped config: heartbeat cadence
     // from the server's liveness window, fault injection from `run.chaos`.
     let opts = NetOptions::from_config(&cfg)?;
+    // Adaptive fan-out bounds (`run.adapt.batch = auto:MIN:MAX`): the
+    // session cap also respects the fleet-wide `batch * workers <= n`
+    // invariant the fixed-batch Runner enforces statically. `None` keeps
+    // the historical fixed-batch solve loop exactly. NetOptions already
+    // rejected the sharded and checkpointed combinations, so the sharded
+    // loop below never sees an adaptive batch.
+    let batch_bounds = match AdaptSpec::from_config(&cfg)?.batch {
+        BatchPolicy::Off => None,
+        BatchPolicy::Auto { min, max } => {
+            let workers = cfg.get_usize("run.workers", 2).max(1);
+            let cap = max.min((instance.num_blocks() / workers).max(1));
+            Some((min.min(cap).max(1), cap))
+        }
+    };
     if hello.plan.len() > 1 {
         // Sharded parameter plane: dial the sibling shards named in the
         // plan and run the fan-out solve loop over all of them.
@@ -400,13 +415,27 @@ fn run_on(mut stream: TcpStream, resumed: bool) -> Result<WorkerSummary> {
     if opts.chaos.is_noop() {
         // No chaos: the raw stream, bit-identical to the plain transport.
         dispatch(
-            &instance, &hello, stream, rx_bytes, tx_bytes, heartbeat, wmode,
+            &instance,
+            &hello,
+            stream,
+            rx_bytes,
+            tx_bytes,
+            heartbeat,
+            wmode,
+            batch_bounds,
         )
     } else {
         let rng = Pcg64::new(hello.seed, chaos_rng_stream(hello.worker_id));
         let stream = ChaosStream::new(stream, opts.chaos, rng);
         dispatch(
-            &instance, &hello, stream, rx_bytes, tx_bytes, heartbeat, wmode,
+            &instance,
+            &hello,
+            stream,
+            rx_bytes,
+            tx_bytes,
+            heartbeat,
+            wmode,
+            batch_bounds,
         )
     }
 }
@@ -809,6 +838,7 @@ fn sharded_solve_loop<P: Problem, S: Read + Write + PullTimeout>(
 }
 
 /// Monomorphize [`solve_loop`] over the instance's problem type.
+#[allow(clippy::too_many_arguments)]
 fn dispatch<S: Read + Write + PullTimeout>(
     instance: &ProblemInstance,
     hello: &Hello,
@@ -817,19 +847,20 @@ fn dispatch<S: Read + Write + PullTimeout>(
     tx_bytes: u64,
     heartbeat: Option<Duration>,
     wmode: wire::WireMode,
+    bounds: Option<(usize, usize)>,
 ) -> Result<WorkerSummary> {
     match instance {
         ProblemInstance::Gfl(p) => solve_loop(
-            p, hello, stream, rx_bytes, tx_bytes, heartbeat, wmode,
+            p, hello, stream, rx_bytes, tx_bytes, heartbeat, wmode, bounds,
         ),
         ProblemInstance::Qp(p) => solve_loop(
-            p, hello, stream, rx_bytes, tx_bytes, heartbeat, wmode,
+            p, hello, stream, rx_bytes, tx_bytes, heartbeat, wmode, bounds,
         ),
         ProblemInstance::Chain(p) => solve_loop(
-            p, hello, stream, rx_bytes, tx_bytes, heartbeat, wmode,
+            p, hello, stream, rx_bytes, tx_bytes, heartbeat, wmode, bounds,
         ),
         ProblemInstance::Multiclass(p) => solve_loop(
-            p, hello, stream, rx_bytes, tx_bytes, heartbeat, wmode,
+            p, hello, stream, rx_bytes, tx_bytes, heartbeat, wmode, bounds,
         ),
     }
 }
@@ -840,6 +871,15 @@ fn dispatch<S: Read + Write + PullTimeout>(
 /// sent whenever that long passes without other outbound traffic — checked
 /// between oracle calls, so even a long multi-block solve stays visibly
 /// alive.
+///
+/// With `bounds` set (`run.adapt.batch = auto`), the fan-out batch
+/// self-tunes between rounds from observed snapshot-pull latency: cheap
+/// pulls grow tau_w toward the cap (amortizing the pull over more
+/// oracles), contended pulls shrink it toward the floor ([`next_batch`]).
+/// The resize happens before the round's `pick_blocks`, so the Update
+/// payload length reflects it — which is how the serve side counts
+/// `batch_resizes` without any wire change. `None` keeps the historical
+/// fixed-batch loop untouched.
 #[allow(clippy::too_many_arguments)]
 fn solve_loop<P: Problem, S: Read + Write + PullTimeout>(
     problem: &P,
@@ -849,9 +889,16 @@ fn solve_loop<P: Problem, S: Read + Write + PullTimeout>(
     tx_bytes: u64,
     heartbeat: Option<Duration>,
     wmode: wire::WireMode,
+    bounds: Option<(usize, usize)>,
 ) -> Result<WorkerSummary> {
     let n = problem.num_blocks();
-    let batch = (hello.batch as usize).clamp(1, n);
+    let mut batch = (hello.batch as usize).clamp(1, n);
+    if let Some((floor, cap)) = bounds {
+        batch = batch.clamp(floor, cap);
+    }
+    // Adaptive-batch controller state: smoothed and best-seen pull cost.
+    let mut pull_ema = 0.0f64;
+    let mut best_pull = 0.0f64;
     let mode = payload_mode_from_tag(hello.payload_mode).ok_or_else(|| {
         anyhow!("unknown payload mode tag {}", hello.payload_mode)
     })?;
@@ -888,6 +935,7 @@ fn solve_loop<P: Problem, S: Read + Write + PullTimeout>(
 
     'session: loop {
         // ---- pull ----
+        let pull_started = Instant::now();
         match wire::write_frame(
             &mut stream,
             &Msg::SnapshotRequest { have_version: have },
@@ -955,6 +1003,24 @@ fn solve_loop<P: Problem, S: Read + Write + PullTimeout>(
             }
         }
         have = version;
+
+        // ---- retune the fan-out from the observed pull cost ----
+        if let Some((floor, cap)) = bounds {
+            let secs = pull_started.elapsed().as_secs_f64();
+            pull_ema = if pull_ema > 0.0 {
+                0.8 * pull_ema + 0.2 * secs
+            } else {
+                secs
+            };
+            if best_pull <= 0.0 || secs < best_pull {
+                best_pull = secs;
+            }
+            let next = next_batch(batch, floor, cap, pull_ema, best_pull);
+            if next != batch {
+                batch = next;
+                slots.resize_with(batch, || BlockOracle::empty_with(pkind));
+            }
+        }
 
         // ---- solve ----
         pick_blocks(&mut rng, n, batch, &mut blocks);

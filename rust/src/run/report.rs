@@ -74,24 +74,15 @@ impl Report {
             counters: CounterSnapshot {
                 oracle_calls: r.oracle_calls,
                 updates_applied: applied,
-                collisions: 0,
                 dropped: r.dropped,
                 iterations: r.iterations,
-                // Sequential solvers read the parameter in place and ship
-                // nothing over a channel or the wire.
-                snapshot_reads: 0,
-                payload_nnz: 0,
-                payload_bytes: 0,
-                wire_tx_bytes: 0,
-                wire_rx_bytes: 0,
-                delay_sum: 0,
-                delay_max: 0,
-                // Fleet telemetry only the net serve role populates.
-                workers_joined: 0,
-                workers_lost: 0,
-                blocks_requeued: 0,
-                reconnects: 0,
-                event_stalls: 0,
+                gamma_damped_sum: r.gamma_damped_sum,
+                drops_adaptive: r.drops_adaptive,
+                // Everything else — collisions, channel/wire telemetry,
+                // fleet membership, checkpoint counters — is populated
+                // only by the threaded/serve engines; sequential solvers
+                // read the parameter in place and ship nothing.
+                ..CounterSnapshot::default()
             },
             elapsed_s: r.elapsed_s,
             secs_per_pass: if passes > 0.0 {

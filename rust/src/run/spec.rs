@@ -16,6 +16,7 @@
 use crate::coordinator::shared::SnapshotMode;
 use crate::coordinator::RunConfig;
 use crate::problems::PayloadMode;
+use crate::sim::adapt::{AdaptSpec, BatchPolicy, DropPolicy, StepPolicy};
 use crate::sim::delay::DelayModel;
 use crate::sim::straggler::StragglerModel;
 use crate::solver::delayed::DelayOptions;
@@ -402,6 +403,14 @@ pub struct RunSpec {
     /// Compute the exact duality gap at sample points (expensive) instead
     /// of the n/tau-scaled batch-gap estimate.
     pub exact_gap: bool,
+    /// Delay-adaptive control (`run.adapt.step` / `run.adapt.drop` /
+    /// `run.adapt.batch`): reactive step damping, quantile-tracking drop
+    /// thresholds, and self-tuning worker fan-out. The all-off default is
+    /// pinned bit-identical to the non-adaptive engines; `validate`
+    /// rejects a policy on an engine that could not honor it (step needs
+    /// a delay-aware engine, drop needs a staleness verdict, batch acts
+    /// only in the net worker loop hosted by the async engine).
+    pub adapt: AdaptSpec,
     /// Stop conditions (any satisfied condition ends the solve).
     pub stop: StopCond,
     /// Seed for block sampling (and, via `run.seed`, data generation).
@@ -422,9 +431,16 @@ impl RunSpec {
             weighted_averaging: false,
             sample_every: 64,
             exact_gap: false,
+            adapt: AdaptSpec::default(),
             stop: StopCond::default(),
             seed: 0,
         }
+    }
+
+    /// Set the delay-adaptive control policies (see the field docs).
+    pub fn adapt(mut self, adapt: AdaptSpec) -> Self {
+        self.adapt = adapt;
+        self
     }
 
     /// Set the minibatch size tau.
@@ -547,6 +563,55 @@ impl RunSpec {
                 self.engine.name()
             );
         }
+        // Builder-constructed adapt policies get the same strict checks
+        // `AdaptSpec::from_config` applies to config text, plus the
+        // engine scoping the SCOPED_KEYS table enforces for config runs.
+        if let DropPolicy::Quantile(q) = self.adapt.drop {
+            ensure!(
+                (0.0..=1.0).contains(&q),
+                "run.adapt.drop: quantile Q must lie in [0, 1], got {q}"
+            );
+        }
+        if let BatchPolicy::Auto { min, max } = self.adapt.batch {
+            ensure!(
+                min >= 1 && min <= max,
+                "run.adapt.batch: auto bounds need 1 <= MIN <= MAX, \
+                 got {min}:{max}"
+            );
+        }
+        if self.adapt.step != StepPolicy::Off {
+            ensure!(
+                matches!(
+                    self.engine,
+                    Engine::Delayed { .. }
+                        | Engine::Async { .. }
+                        | Engine::Sync { .. }
+                        | Engine::Lockfree { .. }
+                ),
+                "run.adapt.step has no delay signal on engine `{}` \
+                 (applies to delayed, async, sync, lockfree)",
+                self.engine.name()
+            );
+        }
+        if self.adapt.drop != DropPolicy::K2 {
+            ensure!(
+                matches!(
+                    self.engine,
+                    Engine::Delayed { .. } | Engine::Async { .. }
+                ),
+                "run.adapt.drop needs a staleness verdict to adapt; \
+                 engine `{}` has none (applies to delayed, async)",
+                self.engine.name()
+            );
+        }
+        if self.adapt.batch != BatchPolicy::Off {
+            ensure!(
+                matches!(self.engine, Engine::Async { .. }),
+                "run.adapt.batch acts in the net worker loop hosted by \
+                 the async engine; engine `{}` has no such loop",
+                self.engine.name()
+            );
+        }
         match &self.engine {
             Engine::Async {
                 workers,
@@ -582,7 +647,9 @@ impl RunSpec {
     /// `eps_primal`, `f_star`, `line_search`, `weighted_averaging`,
     /// `sample_every`, `exact_gap`, `seed`, `straggler`, `snapshot_mode`,
     /// `queue_factor`, `staleness_rule`, `collision_overwrite`,
-    /// `work_multiplier`, `delay`, `delay_history`, `drop_rule`, and the
+    /// `work_multiplier`, `delay`, `delay_history`, `drop_rule`, the
+    /// delay-adaptive knobs `adapt.step`, `adapt.drop`, `adapt.batch`,
+    /// and the
     /// net-transport fleet knobs `accept_timeout_secs`, `liveness_ms`,
     /// `chaos`, `shards`, `shard_id`, `wire`, `checkpoint_every`,
     /// `checkpoint_dir`, `restore` (parsed and validated by the
@@ -602,6 +669,11 @@ impl RunSpec {
         // validation path every launcher goes through — not deep in the
         // serve role.
         crate::net::WireMode::parse(&cfg.get_or("run.wire", "exact"))?;
+        // The `run.adapt.*` trio parses strictly here for the same
+        // reason: a malformed quantile or batch range must fail at launch
+        // on every mode, before the SCOPED_KEYS table decides whether the
+        // mode can honor it at all.
+        let adapt = AdaptSpec::from_config(cfg)?;
         let workers = cfg.get_usize("run.workers", 2);
         let straggler =
             StragglerSpec::parse(&cfg.get_or("run.straggler", "none"))?;
@@ -680,6 +752,13 @@ impl RunSpec {
             ("run.delay", &["delayed"]),
             ("run.delay_history", &["delayed"]),
             ("run.drop_rule", &["delayed"]),
+            // Delay-adaptive control: step damping needs an engine with a
+            // delay signal, the drop policy needs a staleness verdict to
+            // re-center, and the batch controller lives in the net worker
+            // loop (hosted by the async engine, like the fleet knobs).
+            ("run.adapt.step", &["delayed", "async", "sync", "lockfree"]),
+            ("run.adapt.drop", &["delayed", "async"]),
+            ("run.adapt.batch", &["async"]),
             // Net-transport fleet knobs: the serve role hosts the async
             // engine, so they ride on run.mode=async (ignored by the
             // in-process async engine itself; `serve` validates and
@@ -729,6 +808,7 @@ impl RunSpec {
             weighted_averaging: cfg.get_bool("run.weighted_averaging", false),
             sample_every: cfg.get_usize("run.sample_every", 64),
             exact_gap: cfg.get_bool("run.exact_gap", false),
+            adapt,
             stop,
             // The historical launcher default; ProblemInstance::from_config
             // seeds data generation from the same key and default, so one
@@ -763,6 +843,7 @@ impl RunSpec {
                 model: *model,
                 history: *history,
                 enforce_drop_rule: *enforce_drop_rule,
+                adapt: self.adapt,
             }),
             _ => None,
         }
@@ -797,6 +878,7 @@ impl RunSpec {
                 queue_factor: *queue_factor,
                 weighted_averaging: self.weighted_averaging,
                 snapshot_mode: *snapshot_mode,
+                adapt: self.adapt,
                 stop: self.stop,
                 seed: self.seed,
             },
@@ -814,6 +896,7 @@ impl RunSpec {
                 sample_every: self.sample_every,
                 exact_gap: self.exact_gap,
                 snapshot_mode: *snapshot_mode,
+                adapt: self.adapt,
                 stop: self.stop,
                 seed: self.seed,
                 ..RunConfig::default()
@@ -828,6 +911,7 @@ impl RunSpec {
                 exact_gap: self.exact_gap,
                 // The lock-free engine asserts torn snapshots (hogwild).
                 snapshot_mode: SnapshotMode::Torn,
+                adapt: self.adapt,
                 stop: self.stop,
                 seed: self.seed,
                 ..RunConfig::default()
@@ -1251,6 +1335,122 @@ mod tests {
         let cfg =
             Config::parse("[run]\nmode = seq\nworkers = 4\ntau = 2\n").unwrap();
         assert!(RunSpec::from_config(&cfg).is_ok());
+    }
+
+    #[test]
+    fn from_config_parses_and_lowers_adapt_knobs() {
+        let cfg = Config::parse(
+            "[run]\nmode = async\nadapt.step = kappa\n\
+             adapt.drop = quantile:0.75\nadapt.batch = auto:2:8\n",
+        )
+        .unwrap();
+        let spec = RunSpec::from_config(&cfg).unwrap();
+        assert_eq!(spec.adapt.step, StepPolicy::Kappa);
+        assert_eq!(spec.adapt.drop, DropPolicy::Quantile(0.75));
+        assert_eq!(spec.adapt.batch, BatchPolicy::Auto { min: 2, max: 8 });
+        assert!(spec.validate().is_ok());
+        assert_eq!(spec.run_config().unwrap().adapt, spec.adapt);
+        // The delayed engine lowers step+drop into DelayOptions.
+        let cfg = Config::parse(
+            "[run]\nmode = delayed\ndelay = fixed:3\nadapt.step = kappa\n\
+             adapt.drop = quantile:0.5\n",
+        )
+        .unwrap();
+        let spec = RunSpec::from_config(&cfg).unwrap();
+        assert_eq!(spec.delay_options().unwrap().adapt, spec.adapt);
+        // The unset default stays all-off — the bit-identity pin.
+        let spec = RunSpec::from_config(&Config::parse("").unwrap()).unwrap();
+        assert!(spec.adapt.is_off());
+        assert_eq!(spec.adapt, AdaptSpec::default());
+    }
+
+    #[test]
+    fn from_config_rejects_malformed_adapt_on_any_mode() {
+        // Strict parse runs before mode scoping (the run.wire precedent):
+        // a malformed value fails even on engines that ignore the knob.
+        for (key, bad) in [
+            ("adapt.step", "loud"),
+            ("adapt.drop", "quantile:1.5"),
+            ("adapt.batch", "auto:8:2"),
+        ] {
+            let cfg =
+                Config::parse(&format!("[run]\nmode = seq\n{key} = {bad}\n"))
+                    .unwrap();
+            let err = RunSpec::from_config(&cfg).unwrap_err().to_string();
+            assert!(err.contains(&format!("run.{key}")), "{key}: {err}");
+        }
+    }
+
+    #[test]
+    fn adapt_keys_scoped_to_capable_engines() {
+        for (text, needle) in [
+            ("[run]\nmode = seq\nadapt.step = kappa\n", "run.adapt.step"),
+            (
+                "[run]\nmode = sync\nadapt.drop = quantile:0.9\n",
+                "run.adapt.drop",
+            ),
+            (
+                "[run]\nmode = lockfree\nadapt.batch = auto:1:8\n",
+                "run.adapt.batch",
+            ),
+        ] {
+            let cfg = Config::parse(text).unwrap();
+            let err = RunSpec::from_config(&cfg).unwrap_err().to_string();
+            assert!(err.contains(needle), "{text}: {err}");
+            assert!(err.contains("no effect"), "{text}: {err}");
+        }
+        // Accepted on every engine with a delay signal.
+        for mode in ["delayed", "async", "sync", "lockfree"] {
+            let cfg = Config::parse(&format!(
+                "[run]\nmode = {mode}\nadapt.step = kappa\n{}",
+                if mode == "delayed" { "delay = fixed:2\n" } else { "" }
+            ))
+            .unwrap();
+            assert!(RunSpec::from_config(&cfg).is_ok(), "{mode}");
+        }
+    }
+
+    #[test]
+    fn builder_adapt_policies_validated_per_engine() {
+        let kappa = AdaptSpec {
+            step: StepPolicy::Kappa,
+            ..AdaptSpec::default()
+        };
+        assert!(RunSpec::new(Engine::Seq).adapt(kappa).validate().is_err());
+        assert!(RunSpec::new(Engine::asynchronous(2))
+            .adapt(kappa)
+            .validate()
+            .is_ok());
+        let q = AdaptSpec {
+            drop: DropPolicy::Quantile(0.9),
+            ..AdaptSpec::default()
+        };
+        assert!(RunSpec::new(Engine::synchronous(2))
+            .adapt(q)
+            .validate()
+            .is_err());
+        assert!(RunSpec::new(Engine::delayed(DelayModel::None))
+            .adapt(q)
+            .validate()
+            .is_ok());
+        let b = AdaptSpec {
+            batch: BatchPolicy::Auto { min: 1, max: 8 },
+            ..AdaptSpec::default()
+        };
+        assert!(RunSpec::new(Engine::lockfree(2)).adapt(b).validate().is_err());
+        assert!(RunSpec::new(Engine::asynchronous(2))
+            .adapt(b)
+            .validate()
+            .is_ok());
+        // Out-of-range builder values are caught like config text is.
+        let badq = AdaptSpec {
+            drop: DropPolicy::Quantile(1.5),
+            ..AdaptSpec::default()
+        };
+        assert!(RunSpec::new(Engine::asynchronous(2))
+            .adapt(badq)
+            .validate()
+            .is_err());
     }
 
     #[test]

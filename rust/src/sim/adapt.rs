@@ -1,0 +1,500 @@
+//! Delay-adaptive control policies: step damping, drop thresholds, and
+//! worker batch sizing driven by the observed-delay telemetry PR 5
+//! introduced (`delay_sum` / `mean_delay()` — the empirical kappa).
+//!
+//! The paper's convergence constants (§2.3, §3.4) assume an *expected*
+//! delay kappa; when the observed delay runs past that assumption the
+//! unbounded-delay analysis of arXiv:1612.04425 still converges under a
+//! *damped* step size. This module holds the pure policy math — every
+//! decision function here is deterministic and side-effect free so the
+//! property suite (`rust/tests/properties.rs`) can pin its invariants
+//! directly:
+//!
+//! - [`StepPolicy`] / [`KappaEma`] / [`damping_factor`]: `run.adapt.step`
+//!   scales `schedule_gamma` by `kappa_exp / (kappa_exp + kappa_obs)`,
+//!   clamped to `[MIN_DAMP, 1]` — monotone nonincreasing in the observed
+//!   kappa, exactly 1 when no delay has been observed.
+//! - [`DropPolicy`] / [`DelayWindow`] / [`accept_delay_adjusted`]:
+//!   `run.adapt.drop` re-centers the paper's k/2 verdict by the gap
+//!   between a running delay quantile and the running median, so
+//!   `quantile:Q` with Q > 0.5 accepts a superset of the k/2 verdicts
+//!   and Q < 0.5 a subset (Q = 0.5 is *identical* for any history).
+//! - [`BatchPolicy`] / [`next_batch`]: `run.adapt.batch` grows the
+//!   worker fan-out tau_w when snapshot pulls are cheap and shrinks it
+//!   under contention, never leaving `[MIN, min(MAX, n/workers)]`.
+//!
+//! The `off` / `k2` / `off` defaults are pure pass-throughs: the engines
+//! keep their historical expressions on those arms, which is what the
+//! bit-identity pins in `rust/tests/runner_equivalence.rs` verify.
+
+use crate::sim::delay::accept_delay;
+use crate::util::config::Config;
+use anyhow::{anyhow, bail, ensure, Result};
+
+/// Lower clamp of the damping factor: even under pathological observed
+/// delays the step never collapses below a tenth of the schedule (the
+/// damped regime of arXiv:1612.04425 needs gamma bounded away from 0 to
+/// keep making progress).
+pub const MIN_DAMP: f64 = 0.1;
+
+/// Smoothing weight of the kappa EMA — the same 0.8/0.2 blend the apply
+/// core's gap estimator uses, so both telemetry smoothers age at the
+/// same rate.
+pub const EMA_KEEP: f64 = 0.8;
+
+/// Delays remembered by the running-quantile window (`run.adapt.drop`).
+pub const DELAY_WINDOW: usize = 64;
+
+/// `run.adapt.step`: how the step-size schedule reacts to observed delay.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum StepPolicy {
+    /// Historical behavior: `schedule_gamma` verbatim (pinned default).
+    #[default]
+    Off,
+    /// Scale gamma by the clamped `kappa_exp / (kappa_exp + kappa_obs)`
+    /// damping factor, with kappa_obs the EMA of observed delays.
+    Kappa,
+}
+
+/// `run.adapt.drop`: which staleness verdict gates an incoming update.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub enum DropPolicy {
+    /// The paper's Theorem 4 rule, `delay <= k/2`, verbatim (pinned
+    /// default — delegates to [`crate::sim::delay::accept_delay`]).
+    #[default]
+    K2,
+    /// Re-center the k/2 threshold by `T_q - T_median` over the recent
+    /// delay window: permissive quantiles (q > 0.5) widen the accept
+    /// set, strict ones (q < 0.5) narrow it; q = 0.5 is exactly K2.
+    Quantile(f64),
+}
+
+/// `run.adapt.batch`: whether the worker fan-out tau_w self-tunes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum BatchPolicy {
+    /// Fixed `run.batch` for the whole session (pinned default).
+    #[default]
+    Off,
+    /// Grow toward `max` while snapshot pulls stay near the best
+    /// observed latency, shrink toward `min` under contention.
+    Auto {
+        /// Smallest batch the controller may choose (>= 1).
+        min: usize,
+        /// Largest batch the controller may choose (>= min).
+        max: usize,
+    },
+}
+
+/// The three `run.adapt.*` knobs, lowered together by
+/// [`crate::run::RunSpec::from_config`] and threaded to the engines.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct AdaptSpec {
+    /// `run.adapt.step = off | kappa`.
+    pub step: StepPolicy,
+    /// `run.adapt.drop = k2 | quantile:Q` with Q in [0, 1].
+    pub drop: DropPolicy,
+    /// `run.adapt.batch = off | auto:MIN:MAX` with 1 <= MIN <= MAX.
+    pub batch: BatchPolicy,
+}
+
+impl AdaptSpec {
+    /// True iff every policy is its pinned default — the engines take
+    /// their historical code paths exactly.
+    pub fn is_off(&self) -> bool {
+        *self == AdaptSpec::default()
+    }
+
+    /// Parse and strictly validate the `run.adapt.*` keys. Absent keys
+    /// mean the pinned defaults; malformed values are hard errors that
+    /// name the offending knob (the CI rejection probes grep for it).
+    pub fn from_config(cfg: &Config) -> Result<Self> {
+        let step = match cfg.get_or("run.adapt.step", "off").as_str() {
+            "off" => StepPolicy::Off,
+            "kappa" => StepPolicy::Kappa,
+            other => bail!(
+                "run.adapt.step must be off|kappa, got {other:?}"
+            ),
+        };
+        let drop = match cfg.get_or("run.adapt.drop", "k2").as_str() {
+            "k2" => DropPolicy::K2,
+            other => match other.strip_prefix("quantile:") {
+                Some(qs) => {
+                    let q: f64 = qs.parse().map_err(|_| {
+                        anyhow!(
+                            "run.adapt.drop: bad quantile {qs:?} \
+                             (expected quantile:Q with Q in [0, 1])"
+                        )
+                    })?;
+                    ensure!(
+                        (0.0..=1.0).contains(&q),
+                        "run.adapt.drop: quantile Q must lie in \
+                         [0, 1], got {q}"
+                    );
+                    DropPolicy::Quantile(q)
+                }
+                None => bail!(
+                    "run.adapt.drop must be k2|quantile:Q, got {other:?}"
+                ),
+            },
+        };
+        let batch = match cfg.get_or("run.adapt.batch", "off").as_str() {
+            "off" => BatchPolicy::Off,
+            other => match other.strip_prefix("auto:") {
+                Some(rest) => {
+                    let (lo, hi) = rest.split_once(':').ok_or_else(|| {
+                        anyhow!(
+                            "run.adapt.batch: expected auto:MIN:MAX, \
+                             got {other:?}"
+                        )
+                    })?;
+                    let parse = |s: &str| -> Result<usize> {
+                        s.parse().map_err(|_| {
+                            anyhow!(
+                                "run.adapt.batch: bad bound {s:?} in \
+                                 {other:?}"
+                            )
+                        })
+                    };
+                    let (min, max) = (parse(lo)?, parse(hi)?);
+                    ensure!(
+                        min >= 1,
+                        "run.adapt.batch: MIN must be >= 1, got {min}"
+                    );
+                    ensure!(
+                        min <= max,
+                        "run.adapt.batch: MIN must be <= MAX, \
+                         got auto:{min}:{max}"
+                    );
+                    BatchPolicy::Auto { min, max }
+                }
+                None => bail!(
+                    "run.adapt.batch must be off|auto:MIN:MAX, \
+                     got {other:?}"
+                ),
+            },
+        };
+        Ok(AdaptSpec { step, drop, batch })
+    }
+}
+
+/// The clamped damping factor `kappa_exp / (kappa_exp + kappa_obs)`.
+///
+/// `kappa_exp` is the expected per-apply delay the schedule already
+/// prices in — the server minibatch width tau (at the paper's stationary
+/// regime a worker's snapshot is ~tau applies old by the time its update
+/// lands). `kappa_obs` is the EMA of observed delays. Properties the
+/// suite pins: monotone nonincreasing in `kappa_obs`, always within
+/// `[MIN_DAMP, 1]`, and exactly 1 at `kappa_obs <= 0` (no observed delay
+/// means no damping — including the before-first-update state where the
+/// EMA reports 0).
+pub fn damping_factor(kappa_exp: f64, kappa_obs: f64) -> f64 {
+    if kappa_obs <= 0.0 {
+        return 1.0;
+    }
+    (kappa_exp / (kappa_exp + kappa_obs)).clamp(MIN_DAMP, 1.0)
+}
+
+/// EMA of observed per-update delays — the smoothed empirical kappa
+/// behind `run.adapt.step = kappa`. Reports 0 before the first
+/// observation (never NaN: the zero-updates path is unit-tested, the
+/// small-fix satellite of ISSUE 10).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct KappaEma {
+    ema: Option<f64>,
+}
+
+impl KappaEma {
+    /// Fresh estimator with no observations.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Fold one observed delay in: the first observation seeds the EMA,
+    /// later ones blend at the gap estimator's 0.8/0.2 rate.
+    pub fn observe(&mut self, delay: u64) {
+        let d = delay as f64;
+        self.ema = Some(match self.ema {
+            Some(e) => EMA_KEEP * e + (1.0 - EMA_KEEP) * d,
+            None => d,
+        });
+    }
+
+    /// The smoothed observed kappa; 0.0 before the first observation.
+    pub fn value(&self) -> f64 {
+        self.ema.unwrap_or(0.0)
+    }
+}
+
+/// Bounded ring of recently observed delays backing the running
+/// quantiles of `run.adapt.drop = quantile:Q`. Distinct from
+/// [`crate::sim::delay::History`], which rings *parameter snapshots*
+/// for the sequential delayed-oracle simulation.
+#[derive(Debug, Clone)]
+pub struct DelayWindowRing {
+    buf: Vec<u64>,
+    next: usize,
+    cap: usize,
+}
+
+impl DelayWindowRing {
+    /// Ring remembering the last `cap` delays (cap >= 1).
+    pub fn new(cap: usize) -> Self {
+        Self {
+            buf: Vec::with_capacity(cap.max(1)),
+            next: 0,
+            cap: cap.max(1),
+        }
+    }
+
+    /// Record one observed delay, evicting the oldest once full.
+    pub fn push(&mut self, delay: u64) {
+        if self.buf.len() < self.cap {
+            self.buf.push(delay);
+        } else {
+            self.buf[self.next] = delay;
+        }
+        self.next = (self.next + 1) % self.cap;
+    }
+
+    /// Delays currently remembered.
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// True when nothing has been recorded yet.
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Nearest-rank quantile of the window (`sorted[ceil(q*m) - 1]`,
+    /// clamped into range) — monotone nondecreasing in `q`. `None` on an
+    /// empty window.
+    pub fn quantile(&self, q: f64) -> Option<u64> {
+        if self.buf.is_empty() {
+            return None;
+        }
+        let mut sorted = self.buf.clone();
+        sorted.sort_unstable();
+        let m = sorted.len();
+        let rank = (q * m as f64).ceil() as usize;
+        Some(sorted[rank.clamp(1, m) - 1])
+    }
+
+    /// The k/2 re-centering term of `quantile:Q`: `T_q - T_median` over
+    /// the window. Zero on an empty window (the rule degrades to exact
+    /// k/2), zero for any window at q = 0.5, nonnegative for q > 0.5,
+    /// nonpositive for q < 0.5 — quantile monotonicity makes the
+    /// superset/subset property structural.
+    pub fn adjustment(&self, q: f64) -> i64 {
+        match (self.quantile(q), self.quantile(0.5)) {
+            (Some(tq), Some(tm)) => tq as i64 - tm as i64,
+            _ => 0,
+        }
+    }
+}
+
+/// The generalized staleness verdict: accept iff
+/// `delay - adjustment <= k/2` (exact integer arithmetic, no rounding
+/// drift from the historical rule). `adjustment = 0` reproduces
+/// [`accept_delay`] verbatim; positive adjustments accept a superset,
+/// negative ones a subset.
+pub fn accept_delay_adjusted(k: u64, delay: u64, adjustment: i64) -> bool {
+    if adjustment == 0 {
+        return accept_delay(k, delay);
+    }
+    2 * (delay as i128 - adjustment as i128) <= k as i128
+}
+
+/// One step of the worker-side adaptive batch controller
+/// (`run.adapt.batch = auto:MIN:MAX`): pure so the property suite can
+/// drive it with arbitrary latencies.
+///
+/// `cap` is the session ceiling `min(MAX, n / workers)` (so the fleet's
+/// combined fan-out can never exceed n); `pull_ema` is the smoothed
+/// snapshot-pull latency and `best_pull` the cheapest pull seen.
+/// Contention (pulls > 2x the best) halves toward MIN; cheap pulls
+/// (< 1.25x the best) grow by one toward the cap; in between holds.
+/// The result always lies in `[min(MIN, cap), cap]`.
+pub fn next_batch(
+    current: usize,
+    min: usize,
+    cap: usize,
+    pull_ema: f64,
+    best_pull: f64,
+) -> usize {
+    let floor = min.min(cap).max(1);
+    let cur = current.clamp(floor, cap.max(1));
+    let proposed = if best_pull > 0.0 && pull_ema > 2.0 * best_pull {
+        cur / 2
+    } else if best_pull <= 0.0 || pull_ema < 1.25 * best_pull {
+        cur + 1
+    } else {
+        cur
+    };
+    proposed.clamp(floor, cap.max(1))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(pairs: &[(&str, &str)]) -> Config {
+        let mut c = Config::new();
+        for (k, v) in pairs {
+            c.set(k, v);
+        }
+        c
+    }
+
+    #[test]
+    fn defaults_are_all_off() {
+        let a = AdaptSpec::from_config(&Config::new()).unwrap();
+        assert!(a.is_off());
+        assert_eq!(a.step, StepPolicy::Off);
+        assert_eq!(a.drop, DropPolicy::K2);
+        assert_eq!(a.batch, BatchPolicy::Off);
+    }
+
+    #[test]
+    fn parses_every_policy() {
+        let a = AdaptSpec::from_config(&cfg(&[
+            ("run.adapt.step", "kappa"),
+            ("run.adapt.drop", "quantile:0.9"),
+            ("run.adapt.batch", "auto:2:16"),
+        ]))
+        .unwrap();
+        assert_eq!(a.step, StepPolicy::Kappa);
+        assert_eq!(a.drop, DropPolicy::Quantile(0.9));
+        assert_eq!(a.batch, BatchPolicy::Auto { min: 2, max: 16 });
+        assert!(!a.is_off());
+    }
+
+    #[test]
+    fn rejects_malformed_knobs() {
+        for (key, bad) in [
+            ("run.adapt.step", "loud"),
+            ("run.adapt.drop", "quantile:1.5"),
+            ("run.adapt.drop", "quantile:-0.1"),
+            ("run.adapt.drop", "median"),
+            ("run.adapt.batch", "auto:8:2"),
+            ("run.adapt.batch", "auto:0:4"),
+            ("run.adapt.batch", "auto:3"),
+            ("run.adapt.batch", "always"),
+        ] {
+            let err = AdaptSpec::from_config(&cfg(&[(key, bad)]))
+                .unwrap_err()
+                .to_string();
+            assert!(err.contains(key), "{key}={bad}: {err}");
+        }
+    }
+
+    #[test]
+    fn kappa_ema_zero_before_first_observation() {
+        let e = KappaEma::new();
+        assert_eq!(e.value(), 0.0);
+        assert!(!e.value().is_nan());
+        // And the damping factor at that state is exactly 1 — the
+        // zero-updates path never perturbs gamma.
+        assert_eq!(damping_factor(4.0, e.value()), 1.0);
+    }
+
+    #[test]
+    fn kappa_ema_seeds_then_blends() {
+        let mut e = KappaEma::new();
+        e.observe(10);
+        assert_eq!(e.value(), 10.0);
+        e.observe(0);
+        assert!((e.value() - 8.0).abs() < 1e-12);
+        e.observe(8);
+        assert!((e.value() - 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn damping_monotone_and_clamped() {
+        let tau = 4.0;
+        let mut prev = damping_factor(tau, 0.0);
+        assert_eq!(prev, 1.0);
+        for obs in 1..200 {
+            let d = damping_factor(tau, obs as f64);
+            assert!(d <= prev + 1e-15, "not nonincreasing at {obs}");
+            assert!((MIN_DAMP..=1.0).contains(&d));
+            prev = d;
+        }
+        assert_eq!(damping_factor(tau, 1e12), MIN_DAMP);
+    }
+
+    #[test]
+    fn ring_evicts_and_quantiles_are_monotone() {
+        let mut r = DelayWindowRing::new(4);
+        assert!(r.is_empty());
+        assert_eq!(r.quantile(0.5), None);
+        assert_eq!(r.adjustment(0.9), 0);
+        for d in [5u64, 1, 9, 3] {
+            r.push(d);
+        }
+        assert_eq!(r.len(), 4);
+        assert_eq!(r.quantile(0.0), Some(1));
+        assert_eq!(r.quantile(0.5), Some(3));
+        assert_eq!(r.quantile(1.0), Some(9));
+        // Eviction: 5 (oldest) replaced by 7 -> window {1, 9, 3, 7}.
+        r.push(7);
+        assert_eq!(r.len(), 4);
+        assert_eq!(r.quantile(1.0), Some(9));
+        assert_eq!(r.quantile(0.0), Some(1));
+        // Monotone in q.
+        let mut prev = 0u64;
+        for i in 0..=10 {
+            let q = i as f64 / 10.0;
+            let v = r.quantile(q).unwrap();
+            assert!(v >= prev, "quantile not monotone at q={q}");
+            prev = v;
+        }
+    }
+
+    #[test]
+    fn adjusted_verdict_recenters_k2() {
+        // adjustment = 0 is the historical rule bit-for-bit.
+        for k in 0..32u64 {
+            for d in 0..32u64 {
+                assert_eq!(
+                    accept_delay_adjusted(k, d, 0),
+                    accept_delay(k, d)
+                );
+            }
+        }
+        // Positive adjustment accepts strictly more at the boundary…
+        assert!(!accept_delay(8, 5));
+        assert!(accept_delay_adjusted(8, 5, 1));
+        // …negative strictly less.
+        assert!(accept_delay(8, 4));
+        assert!(!accept_delay_adjusted(8, 4, -1));
+    }
+
+    #[test]
+    fn median_adjustment_is_identically_zero() {
+        let mut r = DelayWindowRing::new(16);
+        for d in [3u64, 1, 4, 1, 5, 9, 2, 6] {
+            r.push(d);
+            assert_eq!(r.adjustment(0.5), 0);
+            assert!(r.adjustment(0.9) >= 0);
+            assert!(r.adjustment(0.1) <= 0);
+        }
+    }
+
+    #[test]
+    fn batch_controller_bounds_and_directions() {
+        // Contention halves toward the floor.
+        assert_eq!(next_batch(8, 1, 16, 10.0, 1.0), 4);
+        // Cheap pulls grow by one toward the cap.
+        assert_eq!(next_batch(8, 1, 16, 1.0, 1.0), 9);
+        // Hysteresis band holds.
+        assert_eq!(next_batch(8, 1, 16, 1.5, 1.0), 8);
+        // Never below MIN, never above cap.
+        assert_eq!(next_batch(2, 2, 16, 100.0, 1.0), 2);
+        assert_eq!(next_batch(16, 1, 16, 1.0, 1.0), 16);
+        // A cap below MIN still yields a legal (>= 1) batch.
+        assert_eq!(next_batch(8, 4, 2, 1.0, 1.0), 2);
+        // No best-pull yet (cold start) grows optimistically.
+        assert_eq!(next_batch(1, 1, 8, 0.0, 0.0), 2);
+    }
+}

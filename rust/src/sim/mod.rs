@@ -1,5 +1,8 @@
-//! Simulation substrates: update-delay models (paper §2.3, §3.4) and
-//! straggler/heterogeneous-worker models (paper §3.3).
+//! Simulation substrates: update-delay models (paper §2.3, §3.4),
+//! straggler/heterogeneous-worker models (paper §3.3), and the
+//! delay-adaptive control policies (`run.adapt.*`) that feed the
+//! observed-delay telemetry back into the solve loops.
 
+pub mod adapt;
 pub mod delay;
 pub mod straggler;

@@ -9,6 +9,10 @@
 
 use super::{schedule_gamma, Monitor, SolveOptions, SolveResult};
 use crate::problems::{ApplyOptions, BlockOracle, OracleScratch, Problem};
+use crate::sim::adapt::{
+    accept_delay_adjusted, damping_factor, AdaptSpec, DelayWindowRing,
+    DropPolicy, KappaEma, StepPolicy, DELAY_WINDOW,
+};
 use crate::sim::delay::{accept_delay, DelayModel, History};
 use crate::util::rng::Pcg64;
 
@@ -22,6 +26,10 @@ pub struct DelayOptions {
     /// Enforce the paper's k/2 staleness rule (ablation: set false to
     /// accept arbitrarily stale updates that are still in history).
     pub enforce_drop_rule: bool,
+    /// Delay-adaptive policies (`run.adapt.step` / `run.adapt.drop`;
+    /// the batch policy is net-only and ignored here). The all-off
+    /// default keeps this engine on its historical path bit-for-bit.
+    pub adapt: AdaptSpec,
 }
 
 impl Default for DelayOptions {
@@ -30,6 +38,7 @@ impl Default for DelayOptions {
             model: DelayModel::None,
             history: 512,
             enforce_drop_rule: true,
+            adapt: AdaptSpec::default(),
         }
     }
 }
@@ -70,6 +79,13 @@ pub fn solve_observed<P: Problem>(
 
     let mut oracle_calls: u64 = 0;
     let mut dropped: u64 = 0;
+    let mut gamma_damped_sum: u64 = 0;
+    let mut drops_adaptive: u64 = 0;
+    // Adaptive-policy state: the smoothed observed kappa (step damping)
+    // and the recent-delay window (quantile drop threshold). Both stay
+    // untouched under the all-off defaults.
+    let mut kappa = KappaEma::new();
+    let mut window = DelayWindowRing::new(DELAY_WINDOW);
     let mut k: u64 = 0;
     loop {
         rng.subset_into(n, tau, &mut blocks);
@@ -77,13 +93,38 @@ pub fn solve_observed<P: Problem>(
         for &i in &blocks {
             let delay = dopts.model.sample(&mut rng);
             oracle_calls += 1;
-            if dopts.enforce_drop_rule && !accept_delay(k, delay) {
+            // The staleness verdict: the k2 arm is the historical call;
+            // `quantile:Q` re-centers it by the running-quantile
+            // adjustment and charges marginal drops to the policy.
+            let accepted = match dopts.adapt.drop {
+                DropPolicy::K2 => accept_delay(k, delay),
+                DropPolicy::Quantile(q) => {
+                    let adj = window.adjustment(q);
+                    let v = accept_delay_adjusted(k, delay, adj);
+                    if dopts.enforce_drop_rule
+                        && !v
+                        && accept_delay(k, delay)
+                    {
+                        drops_adaptive += 1;
+                    }
+                    window.push(delay);
+                    v
+                }
+            };
+            if dopts.enforce_drop_rule && !accepted {
                 dropped += 1;
                 continue;
             }
             match hist.get(delay) {
                 Some(stale) => {
                     problem.oracle_into(stale, i, &mut oscratch, &mut slots[used]);
+                    if dopts.adapt.step == StepPolicy::Kappa {
+                        // Applied updates feed the EMA *before* this
+                        // iteration's gamma — a constant injected delay
+                        // yields a constant damping factor from the
+                        // very first applied update.
+                        kappa.observe(delay);
+                    }
                     used += 1;
                 }
                 None => {
@@ -95,7 +136,17 @@ pub fn solve_observed<P: Problem>(
         }
         if used > 0 {
             let batch = &slots[..used];
-            let gamma = schedule_gamma(n, tau, k);
+            let gamma = match dopts.adapt.step {
+                // Pinned default: the historical expression verbatim.
+                StepPolicy::Off => schedule_gamma(n, tau, k),
+                StepPolicy::Kappa => {
+                    let damp =
+                        damping_factor(tau as f64, kappa.value());
+                    gamma_damped_sum +=
+                        ((1.0 - damp) * 1000.0).round() as u64;
+                    (schedule_gamma(n, tau, k) as f64 * damp) as f32
+                }
+            };
             let info = problem.apply(
                 &mut state,
                 &mut param,
@@ -132,6 +183,8 @@ pub fn solve_observed<P: Problem>(
         oracle_calls,
         iterations: k,
         dropped,
+        gamma_damped_sum,
+        drops_adaptive,
         elapsed_s: mon.watch.elapsed_s(),
     }
 }
@@ -226,6 +279,80 @@ mod tests {
             );
             assert!(nrm <= p.lam + 1e-5);
         }
+    }
+
+    #[test]
+    fn fixed_delay_kappa_registers_constant_damping() {
+        let p = gfl_instance();
+        let mk = |step| DelayOptions {
+            model: DelayModel::Fixed(3),
+            history: 64,
+            adapt: crate::sim::adapt::AdaptSpec {
+                step,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let off = solve(&p, &opts(), &mk(crate::sim::adapt::StepPolicy::Off));
+        assert_eq!(off.gamma_damped_sum, 0, "off run never damps");
+        let mut o = opts();
+        o.stop.eps_gap = Some(0.2);
+        let on =
+            solve(&p, &o, &mk(crate::sim::adapt::StepPolicy::Kappa));
+        // Fixed(3) at tau = 1: the EMA is 3 from the first applied
+        // update, damp = 1/(1+3) = 0.25, deficit = 750 per apply —
+        // constant, so the sum is an exact multiple.
+        assert!(on.gamma_damped_sum > 0);
+        let applied = on.oracle_calls - on.dropped;
+        assert_eq!(on.gamma_damped_sum, 750 * applied);
+        assert!(on.trace.last().unwrap().gap <= 0.2);
+    }
+
+    #[test]
+    fn permissive_quantile_never_charges_adaptive_drops() {
+        // q > 0.5 makes the adjustment nonnegative, so the accept set is
+        // a superset of k/2's — the marginal-drop counter must stay 0.
+        let p = gfl_instance();
+        let r = solve(
+            &p,
+            &opts(),
+            &DelayOptions {
+                model: DelayModel::pareto_with_mean(10.0),
+                history: 4096,
+                adapt: crate::sim::adapt::AdaptSpec {
+                    drop: crate::sim::adapt::DropPolicy::Quantile(0.9),
+                    ..Default::default()
+                },
+                ..Default::default()
+            },
+        );
+        assert_eq!(r.drops_adaptive, 0);
+        assert!(r.trace.last().unwrap().gap <= 0.1);
+    }
+
+    #[test]
+    fn strict_quantile_charges_marginal_drops() {
+        let p = gfl_instance();
+        let mut o = opts();
+        o.stop.eps_gap = None;
+        o.stop.max_epochs = 50.0;
+        let r = solve(
+            &p,
+            &o,
+            &DelayOptions {
+                model: DelayModel::pareto_with_mean(10.0),
+                history: 4096,
+                adapt: crate::sim::adapt::AdaptSpec {
+                    drop: crate::sim::adapt::DropPolicy::Quantile(0.0),
+                    ..Default::default()
+                },
+                ..Default::default()
+            },
+        );
+        // The heavy tail spreads the window, the min-quantile pulls the
+        // threshold below k/2, and the marginal band gets charged.
+        assert!(r.drops_adaptive > 0, "no marginal drops charged");
+        assert!(r.dropped >= r.drops_adaptive);
     }
 
     #[test]

@@ -84,6 +84,8 @@ pub fn solve_observed<P: Problem>(
         oracle_calls,
         iterations: k,
         dropped: 0,
+        gamma_damped_sum: 0,
+        drops_adaptive: 0,
         elapsed_s: mon.watch.elapsed_s(),
     }
 }

@@ -144,6 +144,12 @@ pub struct SolveResult {
     pub iterations: u64,
     /// Oracle calls whose updates were dropped (delay rule; delayed solver).
     pub dropped: u64,
+    /// Accumulated step-damping deficit (parts-per-thousand per apply)
+    /// under `run.adapt.step = kappa`; 0 for non-adaptive solves.
+    pub gamma_damped_sum: u64,
+    /// Drops charged to the `quantile:Q` policy that the plain k/2 rule
+    /// would have accepted (delayed solver; 0 under `k2`).
+    pub drops_adaptive: u64,
     pub elapsed_s: f64,
 }
 

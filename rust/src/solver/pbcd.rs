@@ -92,6 +92,8 @@ pub fn solve_observed<P: ProjectableProblem>(
         oracle_calls,
         iterations: k,
         dropped: 0,
+        gamma_damped_sum: 0,
+        drops_adaptive: 0,
         elapsed_s: mon.watch.elapsed_s(),
     }
 }

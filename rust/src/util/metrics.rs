@@ -149,6 +149,20 @@ pub struct Counters {
     /// never reach the assembler, so they can never corrupt the restored
     /// master parameter.
     pub stale_fenced: AtomicU64,
+    /// Accumulated step-damping deficit under `run.adapt.step = kappa`,
+    /// in parts-per-thousand per apply: each apply adds
+    /// `round((1 - damp) * 1000)`. Zero when adaptivity is off or no
+    /// delay has been observed; strictly positive once damping bites
+    /// (the adaptive chaos smoke greps for that).
+    pub gamma_damped_sum: AtomicU64,
+    /// Updates rejected by the `quantile:Q` drop policy that the plain
+    /// k/2 rule would have accepted — the *marginal* drops adaptivity is
+    /// responsible for. Identically zero under `run.adapt.drop = k2`.
+    pub drops_adaptive: AtomicU64,
+    /// Worker batch (tau_w) changes decided by the
+    /// `run.adapt.batch = auto` controller, counted by the serve role as
+    /// payload-length transitions per worker. Zero with a fixed batch.
+    pub batch_resizes: AtomicU64,
 }
 
 impl Counters {
@@ -183,6 +197,11 @@ impl Counters {
                 .load(Ordering::Relaxed),
             restores: self.restores.load(Ordering::Relaxed),
             stale_fenced: self.stale_fenced.load(Ordering::Relaxed),
+            gamma_damped_sum: self
+                .gamma_damped_sum
+                .load(Ordering::Relaxed),
+            drops_adaptive: self.drops_adaptive.load(Ordering::Relaxed),
+            batch_resizes: self.batch_resizes.load(Ordering::Relaxed),
         }
     }
 
@@ -212,6 +231,9 @@ impl Counters {
         Self::add(&self.checkpoints_written, s.checkpoints_written);
         Self::add(&self.restores, s.restores);
         Self::add(&self.stale_fenced, s.stale_fenced);
+        Self::add(&self.gamma_damped_sum, s.gamma_damped_sum);
+        Self::add(&self.drops_adaptive, s.drops_adaptive);
+        Self::add(&self.batch_resizes, s.batch_resizes);
     }
 
     #[inline]
@@ -255,6 +277,9 @@ pub struct CounterSnapshot {
     pub checkpoints_written: u64,
     pub restores: u64,
     pub stale_fenced: u64,
+    pub gamma_damped_sum: u64,
+    pub drops_adaptive: u64,
+    pub batch_resizes: u64,
 }
 
 impl CounterSnapshot {
@@ -267,6 +292,17 @@ impl CounterSnapshot {
         } else {
             self.delay_sum as f64 / self.updates_applied as f64
         }
+    }
+
+    /// The `adapt:` summary line — the delay-adaptive control layer's
+    /// one-line report. Renders all-zero (no NaN, no panic) before the
+    /// first applied update and under all-off policies.
+    pub fn adapt_summary(&self) -> String {
+        format!(
+            "adapt: gamma_damped_sum={} drops_adaptive={} \
+             batch_resizes={}",
+            self.gamma_damped_sum, self.drops_adaptive, self.batch_resizes
+        )
     }
 }
 
@@ -359,5 +395,44 @@ mod tests {
     fn best_objective() {
         let t = mk_trace();
         assert!((t.best_objective() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mean_delay_is_zero_before_first_applied_update() {
+        // The zero-updates path: no NaN, no panic, exactly 0.0 — the
+        // kappa EMA seeded from this must start undamped.
+        let snap = Counters::new().snapshot();
+        assert_eq!(snap.updates_applied, 0);
+        let kappa = snap.mean_delay();
+        assert_eq!(kappa, 0.0);
+        assert!(!kappa.is_nan());
+    }
+
+    #[test]
+    fn adapt_summary_renders_zeroes_before_first_update() {
+        let snap = Counters::new().snapshot();
+        assert_eq!(
+            snap.adapt_summary(),
+            "adapt: gamma_damped_sum=0 drops_adaptive=0 batch_resizes=0"
+        );
+    }
+
+    #[test]
+    fn adapt_counters_survive_snapshot_and_absorb() {
+        let c = Counters::new();
+        Counters::add(&c.gamma_damped_sum, 123);
+        Counters::bump(&c.drops_adaptive);
+        Counters::add(&c.batch_resizes, 7);
+        let snap = c.snapshot();
+        assert_eq!(snap.gamma_damped_sum, 123);
+        assert_eq!(snap.drops_adaptive, 1);
+        assert_eq!(snap.batch_resizes, 7);
+        let other = Counters::new();
+        other.absorb(&snap);
+        assert_eq!(other.snapshot().gamma_damped_sum, 123);
+        assert_eq!(other.snapshot().batch_resizes, 7);
+        assert!(snap
+            .adapt_summary()
+            .contains("gamma_damped_sum=123"));
     }
 }

@@ -689,6 +689,51 @@ fn loopback_two_shards_two_workers_solve_sparse_qp() {
     assert!(net.last().unwrap().objective.is_finite());
 }
 
+#[test]
+fn adaptive_step_and_batch_survive_the_wire_and_stamp_telemetry() {
+    // run.adapt over the net path: the server damps its schedule from
+    // the observed-delay EMA (adapt.step = kappa threads through the
+    // serve-side ApplyKnobs) and the workers retune their fan-out from
+    // snapshot-pull latency (adapt.batch = auto). Loopback pulls are
+    // cheap and uniform, so the controller must grow the batch off its
+    // floor — every growth step is a server-visible payload-width change
+    // counted in batch_resizes.
+    let mut cfg = gfl_cfg();
+    cfg.set("run.adapt.step", "kappa");
+    cfg.set("run.adapt.batch", "auto:1:4");
+    cfg.set("run.chaos", "delay:fixed:5:0.5");
+    let spec = RunSpec::new(Engine::asynchronous(2))
+        .tau(2)
+        .sample_every(16)
+        .max_epochs(6.0)
+        .max_secs(30.0)
+        .seed(5)
+        .adapt(apbcfw::sim::adapt::AdaptSpec {
+            step: apbcfw::sim::adapt::StepPolicy::Kappa,
+            batch: apbcfw::sim::adapt::BatchPolicy::Auto { min: 1, max: 4 },
+            ..Default::default()
+        });
+    let net = solve_loopback(spec, "gfl", &cfg, "127.0.0.1:0")
+        .unwrap_or_else(|e| panic!("adaptive loopback failed: {e:#}"));
+    assert!(net.counters.updates_applied > 0);
+    assert!(net.last().unwrap().objective.is_finite());
+    assert!(
+        net.counters.batch_resizes > 0,
+        "cheap uniform loopback pulls must grow the adaptive batch: {:?}",
+        net.counters
+    );
+    // Injected stalls make some applied update demonstrably stale; the
+    // kappa EMA sees it before that apply's gamma, so any nonzero
+    // applied delay forces a nonzero damping deficit.
+    if net.counters.delay_sum > 0 {
+        assert!(
+            net.counters.gamma_damped_sum > 0,
+            "observed delay left the step schedule undamped: {:?}",
+            net.counters
+        );
+    }
+}
+
 // ---------------------------------------------------------------------
 // Crash recovery (wire v5): generation fencing, checkpoint/restore
 // ---------------------------------------------------------------------
@@ -822,6 +867,75 @@ fn crash_restore_loopback_bit_identical_to_uninterrupted_run() {
             a.iter
         );
     }
+}
+
+#[test]
+fn two_shard_crash_restore_resumes_both_shards_and_matches_clean_twin() {
+    // Coordinated recovery across the sharded plane: with crash:30 every
+    // shard aborts its first generation after 30 applied updates, so BOTH
+    // shards crash, restore from their own durable checkpoints, and
+    // resume under the bumped generation. `--restore` (run.restore) is
+    // stated explicitly, matching the operator drill. The pins: each
+    // shard wrote checkpoints and restored (counters aggregate across
+    // the plane, so restores >= 2 means neither shard fell back to a
+    // fresh start), the per-shard epoch budgets stay global across the
+    // crash, and the finished solve lands on the uninterrupted twin's
+    // objective to the sharded tolerance (the apply interleaving across
+    // two clocks is not bit-reproducible, the telemetry is).
+    let dir = std::env::temp_dir()
+        .join(format!("apbcfw-2shard-restore-{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    let epochs = 120.0;
+    let mut cfg = gfl_cfg();
+    cfg.set("run.shards", "2");
+    cfg.set("run.checkpoint_dir", dir.to_str().unwrap());
+    cfg.set("run.checkpoint_every", "10");
+    cfg.set("run.restore", "true");
+    cfg.set("run.chaos", "crash:30");
+    let spec = shared_knobs(RunSpec::new(Engine::asynchronous(1)), epochs);
+    let crashed = solve_loopback(spec, "gfl", &cfg, "127.0.0.1:0")
+        .unwrap_or_else(|e| panic!("2-shard crash+restore failed: {e:#}"));
+    std::fs::remove_dir_all(&dir).ok();
+
+    let mut clean_cfg = gfl_cfg();
+    clean_cfg.set("run.shards", "2");
+    let clean = solve_loopback(
+        shared_knobs(RunSpec::new(Engine::asynchronous(1)), epochs),
+        "gfl",
+        &clean_cfg,
+        "127.0.0.1:0",
+    )
+    .unwrap();
+
+    assert!(
+        crashed.counters.checkpoints_written >= 2,
+        "both shards must persist checkpoints: {:?}",
+        crashed.counters
+    );
+    assert!(
+        crashed.counters.restores >= 2,
+        "both shards must resume from their checkpoints (a fresh start \
+         would under-count): {:?}",
+        crashed.counters
+    );
+    // The lockstep worker is never stale on either shard, crash or not.
+    assert_eq!(crashed.counters.dropped, 0, "{:?}", crashed.counters);
+    assert_eq!(crashed.counters.delay_sum, 0, "{:?}", crashed.counters);
+    assert!(crashed.counters.updates_applied > 60, "{:?}", crashed.counters);
+    // Budget telemetry matches the twin's shape: the restored shards
+    // replace (not replay-on-top-of) the lost tails, so the aggregate
+    // lands in the same band the clean sharded run does.
+    let (a, b) = (crashed.counters.oracle_calls, clean.counters.oracle_calls);
+    assert!(
+        a > b / 2 && a <= b + b / 2,
+        "post-restore oracle budget {a} out of band vs clean twin {b}"
+    );
+    let obj = crashed.last().unwrap().objective;
+    let ref_obj = clean.last().unwrap().objective;
+    assert!(
+        (obj - ref_obj).abs() <= 0.1 * ref_obj.abs().max(1.0),
+        "2-shard crash+restore objective {obj} vs clean twin {ref_obj}"
+    );
 }
 
 #[test]

@@ -8,6 +8,9 @@ use apbcfw::problems::gfl::Gfl;
 use apbcfw::problems::simplex_qp::SimplexQp;
 use apbcfw::problems::ssvm::{ssvm_apply, SsvmState};
 use apbcfw::problems::{ApplyOptions, BlockOracle, Problem};
+use apbcfw::sim::adapt::{
+    accept_delay_adjusted, damping_factor, next_batch, DelayWindowRing,
+};
 use apbcfw::sim::delay::{accept_delay, DelayModel};
 use apbcfw::solver::schedule_gamma;
 use apbcfw::util::la;
@@ -320,5 +323,101 @@ fn prop_line_search_never_worse_than_schedule() {
             qp.objective_of(&x_ls) <= qp.objective_of(&x_fixed) + 1e-6,
             "line search must dominate any fixed step"
         );
+    });
+}
+
+#[test]
+fn prop_kappa_damping_monotone_and_clamped() {
+    check(300, 110, |g| {
+        let exp = g.f64_in(0.5, 64.0);
+        let lo = g.f64_in(0.0, 200.0);
+        let hi = lo + g.f64_in(0.0, 200.0);
+        let d_lo = damping_factor(exp, lo);
+        let d_hi = damping_factor(exp, hi);
+        // Worse observed delay can never damp *less*.
+        assert!(
+            d_hi <= d_lo + 1e-15,
+            "damping not nonincreasing: obs {lo} -> {d_lo}, \
+             obs {hi} -> {d_hi}"
+        );
+        // Always inside the clamp band, whatever the inputs.
+        for d in [d_lo, d_hi] {
+            assert!((0.1..=1.0).contains(&d), "damping {d} escaped clamp");
+        }
+        // No observed delay (including the pre-first-update EMA state,
+        // which reports 0) means the schedule is untouched.
+        assert_eq!(damping_factor(exp, 0.0), 1.0);
+        assert_eq!(damping_factor(exp, -1.0), 1.0);
+    });
+}
+
+#[test]
+fn prop_quantile_drop_generalizes_k_over_2() {
+    check(200, 111, |g| {
+        let mut ring = DelayWindowRing::new(g.usize_in(1, 64));
+        for _ in 0..g.usize_in(0, 100) {
+            ring.push(g.usize_in(0, 40) as u64);
+        }
+        let k = g.usize_in(0, 2_000) as u64;
+        let delay = g.usize_in(0, 60) as u64;
+        let plain = accept_delay(k, delay);
+
+        // Q = 0.5 re-centers by T_med - T_med = 0: exactly the k/2 rule,
+        // for ANY delay history.
+        assert_eq!(ring.adjustment(0.5), 0);
+        assert_eq!(accept_delay_adjusted(k, delay, ring.adjustment(0.5)), plain);
+
+        // Permissive quantiles (Q > 0.5) accept a superset of k/2;
+        // strict ones (Q < 0.5) a subset. Quantile monotonicity makes
+        // the adjustment sign structural, and the sign makes the
+        // verdict one-directional.
+        let permissive = ring.adjustment(g.f64_in(0.5, 1.0));
+        assert!(permissive >= 0);
+        if plain {
+            assert!(
+                accept_delay_adjusted(k, delay, permissive),
+                "permissive quantile dropped a k/2-accepted update \
+                 (k={k} delay={delay} adj={permissive})"
+            );
+        }
+        let strict = ring.adjustment(g.f64_in(0.0, 0.5));
+        assert!(strict <= 0);
+        if accept_delay_adjusted(k, delay, strict) {
+            assert!(
+                plain,
+                "strict quantile accepted a k/2-dropped update \
+                 (k={k} delay={delay} adj={strict})"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_adaptive_batch_stays_in_bounds() {
+    check(300, 112, |g| {
+        let n = g.usize_in(1, 200);
+        let workers = g.usize_in(1, 8);
+        let min = g.usize_in(1, 16);
+        let max = min + g.usize_in(0, 16);
+        // The session ceiling the net worker computes: MAX capped so the
+        // fleet's combined fan-out cannot exceed the block count.
+        let cap = max.min((n / workers).max(1));
+        let floor = min.min(cap).max(1);
+        let mut batch = g.usize_in(1, 2 * max);
+        for _ in 0..g.usize_in(1, 40) {
+            let best = g.f64_in(0.0, 0.01);
+            let ema = g.f64_in(0.0, 0.03);
+            batch = next_batch(batch, min, cap, ema, best);
+            assert!(
+                (floor..=cap).contains(&batch),
+                "batch {batch} escaped [{floor}, {cap}]"
+            );
+            if n >= workers {
+                assert!(
+                    batch * workers <= n.max(workers),
+                    "fleet fan-out {batch}x{workers} exceeds n={n}"
+                );
+            }
+        }
     });
 }

@@ -32,6 +32,7 @@ use apbcfw::run::{
     CollectObserver, Engine, ProblemInstance, Report, Runner, RunSpec,
     StragglerSpec,
 };
+use apbcfw::sim::adapt::{AdaptSpec, StepPolicy};
 use apbcfw::sim::delay::DelayModel;
 use apbcfw::sim::straggler::StragglerModel;
 use apbcfw::solver::delayed::DelayOptions;
@@ -209,6 +210,7 @@ fn delayed_engine_matches_delayed_solver() {
         model,
         history: 256,
         enforce_drop_rule: true,
+        adapt: AdaptSpec::default(),
     };
     let engine = Engine::delayed(model).with_delay_history(256);
     let runner = Runner::new(spec(engine.clone(), 2)).unwrap();
@@ -638,6 +640,146 @@ fn seq_engines_payload_sparse_bit_identical_to_dense() {
             }
         }
     }
+}
+
+// ---------- run.adapt.*: fixed-delay pins + default bit-identity ----------
+
+#[test]
+fn kappa_damping_is_constant_and_exact_under_fixed_delay() {
+    // Under a constant injected delay the EMA is seeded at exactly that
+    // delay by the first applied update and never moves, so every apply
+    // uses the same damping factor. With tau = 1 and Fixed(3) the factor
+    // is exactly tau/(tau+3) = 0.25 — a power of two, so the damped
+    // gamma is the undamped one scaled bit-exactly.
+    let p = gfl();
+    let engine = Engine::delayed(DelayModel::Fixed(3));
+    let run = |adapt: AdaptSpec| {
+        let mut obs = CollectObserver::new();
+        let r = Runner::new(
+            spec(engine.clone(), 1).line_search(false).adapt(adapt),
+        )
+        .unwrap()
+        .solve_problem_observed(&p, &mut obs)
+        .unwrap();
+        (r, obs)
+    };
+    let (off, obs_off) = run(AdaptSpec::default());
+    let (kap, obs_kap) = run(AdaptSpec {
+        step: StepPolicy::Kappa,
+        ..Default::default()
+    });
+
+    // Same seed, same delay draws, same k/2 verdicts: the apply streams
+    // align one-to-one (only the step size differs).
+    assert_eq!(obs_off.applies.len(), obs_kap.applies.len());
+    assert!(!obs_kap.applies.is_empty());
+    for ((iter_o, g_o, _), (iter_k, g_k, _)) in
+        obs_off.applies.iter().zip(obs_kap.applies.iter())
+    {
+        assert_eq!(iter_o, iter_k, "apply streams must align");
+        let expected = (f64::from(*g_o) * 0.25) as f32;
+        assert_eq!(
+            g_k.to_bits(),
+            expected.to_bits(),
+            "damping must be exactly 0.25 at every apply \
+             (off gamma {g_o}, kappa gamma {g_k})"
+        );
+    }
+    // Telemetry accounting: 750 damping-deficit permille per applied
+    // update, no adaptive drops (the drop policy stayed k2), and an
+    // untouched off run.
+    assert_eq!(
+        kap.counters.gamma_damped_sum,
+        750 * kap.counters.updates_applied
+    );
+    assert_eq!(kap.counters.drops_adaptive, 0);
+    assert_eq!(off.counters.gamma_damped_sum, 0);
+    assert_eq!(off.counters.drops_adaptive, 0);
+}
+
+#[test]
+fn default_adapt_runs_bit_identical_to_adapt_free_legacy_paths() {
+    // The non-negotiable pin of the adaptive layer: with run.adapt.* at
+    // its defaults (off/k2/off) every deterministic engine reproduces
+    // the legacy entry points bit-for-bit, on both problem families. An
+    // explicit all-off AdaptSpec must be indistinguishable from never
+    // mentioning adapt at all.
+    let opts = legacy_opts(2);
+    let dopts = DelayOptions {
+        model: DelayModel::Poisson { kappa: 3.0 },
+        history: 256,
+        enforce_drop_rule: true,
+        adapt: AdaptSpec::default(),
+    };
+    pin_engines(&gfl(), &opts, &dopts, "gfl");
+    pin_engines(&qp(), &opts, &dopts, "qp");
+
+    fn pin_engines<P: apbcfw::problems::Problem>(
+        p: &P,
+        opts: &SolveOptions,
+        dopts: &DelayOptions,
+        name: &str,
+    ) {
+        let explicit_off = AdaptSpec::default();
+        let seq = Runner::new(
+            spec(Engine::Seq, 2).adapt(explicit_off),
+        )
+        .unwrap()
+        .solve_problem(p)
+        .unwrap();
+        assert_bit_identical(
+            &format!("adapt-off seq/{name}"),
+            &seq,
+            &minibatch::solve(p, opts),
+        );
+        assert_eq!(seq.counters.gamma_damped_sum, 0);
+
+        let batch = Runner::new(
+            spec(Engine::Batch, 1).adapt(explicit_off),
+        )
+        .unwrap()
+        .solve_problem(p)
+        .unwrap();
+        let mut bopts = opts.clone();
+        bopts.tau = 1;
+        assert_bit_identical(
+            &format!("adapt-off batch/{name}"),
+            &batch,
+            &batch_fw::solve(p, &bopts),
+        );
+
+        let engine = Engine::delayed(dopts.model).with_delay_history(256);
+        let del = Runner::new(spec(engine, 2).adapt(explicit_off))
+            .unwrap()
+            .solve_problem(p)
+            .unwrap();
+        assert_bit_identical(
+            &format!("adapt-off delayed/{name}"),
+            &del,
+            &delayed::solve(p, opts, dopts),
+        );
+        assert_eq!(del.counters.gamma_damped_sum, 0);
+        assert_eq!(del.counters.drops_adaptive, 0);
+    }
+
+    // The async engine is scheduling-nondeterministic, so its pin is the
+    // strongest available: an adapt-less spec lowers field-for-field to
+    // the legacy RunConfig (whose PartialEq covers the new adapt field
+    // at its default).
+    let legacy = RunConfig {
+        workers: 2,
+        tau: 4,
+        stop: threaded_stop(),
+        straggler: StragglerModel::none(2),
+        seed: 51,
+        ..Default::default()
+    };
+    assert_eq!(legacy.adapt, AdaptSpec::default());
+    let spec = RunSpec::new(Engine::asynchronous(2))
+        .tau(4)
+        .stop(threaded_stop())
+        .seed(51);
+    assert_eq!(spec.run_config().unwrap(), legacy);
 }
 
 #[test]

@@ -83,6 +83,11 @@ REQUIRED_MEASURED_PREFIXES = [
     "net sharded updates-per-sec shards=4",
     "snapshot fan-out bytes-per-pull shards=1",
     "snapshot fan-out bytes-per-pull shards=2",
+    # The delay-adaptive stepping rows: apply throughput with the kappa
+    # damping on vs the pinned off default — the visibility gate for any
+    # control-plane overhead.
+    "async updates-per-sec adapt=off",
+    "async updates-per-sec adapt=kappa",
 ]
 
 # The injected Pareto means a *measured* robustness report must sweep
